@@ -1,0 +1,52 @@
+//! Tournament audit: a client delegates one job to FOUR providers with a
+//! mix of honest and dishonest behaviours (k > 2, paper §2 footnote 1).
+//! The single honest trainer's output must survive the knockout.
+//!
+//! Run: `cargo run --release --example audit_tournament`
+
+use verde::graph::kernels::Backend;
+use verde::model::Preset;
+use verde::tensor::profile::HardwareProfile;
+use verde::train::session::Session;
+use verde::train::JobSpec;
+use verde::verde::faults::Fault;
+use verde::verde::tournament::run_tournament;
+use verde::verde::trainer::TrainerNode;
+
+fn main() {
+    let spec = JobSpec::quick(Preset::LlamaTiny, 8);
+    let session = Session::new(spec);
+    let upd = *session.program.param_updates.values().map(|s| &s.node).min().unwrap();
+
+    let roster: Vec<(&str, Backend, Fault)> = vec![
+        ("cheat-tamper", Backend::Rep, Fault::TamperOutput { step: 3, node: upd, delta: 0.05 }),
+        ("honest", Backend::Rep, Fault::None),
+        ("cheat-lazy", Backend::Rep, Fault::SkipSteps { after: 4 }),
+        ("sloppy-hw", Backend::Free(HardwareProfile::RTX3090_24G), Fault::NonRepHardware),
+    ];
+    let mut trainers: Vec<TrainerNode> = roster
+        .iter()
+        .map(|(name, backend, fault)| {
+            print!("training {name:<14} ({fault:?})... ");
+            let mut t = TrainerNode::new(name, spec, *backend, *fault);
+            let c = t.train();
+            println!("commitment {}", c.short());
+            t
+        })
+        .collect();
+
+    let honest_commit = {
+        let mut h = TrainerNode::honest("ref-honest", spec);
+        h.train()
+    };
+
+    let r = run_tournament(spec, &mut trainers);
+    println!("\n--- tournament ---");
+    println!("winner: trainer #{} ({})", r.winner, roster[r.winner].0);
+    println!("disputes run: {}", r.disputes);
+    for (i, v) in &r.eliminated {
+        println!("eliminated {} — {:?}", roster[*i].0, v);
+    }
+    assert_eq!(r.accepted, honest_commit, "the honest output must be accepted");
+    println!("\nOK: honest output accepted; {} cheaters exposed.", r.eliminated.len());
+}

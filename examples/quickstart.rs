@@ -1,0 +1,49 @@
+//! Quickstart: delegate a training job to two untrusted trainers, detect
+//! the disagreement, and let the referee identify the cheater — the whole
+//! Verde pipeline in ~40 lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use verde::graph::kernels::Backend;
+use verde::model::Preset;
+use verde::train::JobSpec;
+use verde::verde::faults::Fault;
+use verde::verde::run_dispute;
+use verde::verde::trainer::TrainerNode;
+
+fn main() {
+    // 1. the client fixes the program: model, steps, seeds, optimizer
+    let spec = JobSpec::quick(Preset::Mlp, 16);
+    println!("job: {} for {} steps", spec.preset.name(), spec.steps);
+
+    // 2. two compute providers run it; one of them tampers with an operator
+    //    output at step 9 (a lazy/backdoored trainer looks the same on the
+    //    wire: a wrong tensor behind a valid-looking commitment)
+    let mut honest = TrainerNode::honest("honest", spec);
+    let mut cheat = TrainerNode::new(
+        "cheat",
+        spec,
+        Backend::Rep,
+        Fault::TamperOutput { step: 9, node: 8, delta: 4.0 },
+    );
+    let c1 = honest.train();
+    let c2 = cheat.train();
+    println!("trainer A commitment: {}", c1.short());
+    println!("trainer B commitment: {}", c2.short());
+    assert_ne!(c1, c2, "the tamper must surface in the commitment");
+
+    // 3. the referee (computationally limited — it recomputes ONE operator)
+    //    resolves the dispute
+    let report = run_dispute(spec, honest, cheat);
+    println!("verdict:        {:?}", report.verdict);
+    println!("diverging step: {:?}", report.diverging_step);
+    println!("diverging node: {:?}", report.diverging_node);
+    println!(
+        "referee work:   {} (bytes moved: {} + {})",
+        report.referee.to_json(),
+        report.bytes[0],
+        report.bytes[1]
+    );
+    assert_eq!(report.verdict.convicted(), Some(1));
+    println!("\nOK: the dishonest trainer was identified.");
+}

@@ -1,0 +1,70 @@
+//! Inference serving through the AOT artifact: Python never runs here —
+//! the Rust binary loads `forward.hlo.txt`, compiles it once on the PJRT
+//! CPU client, and serves batched requests, reporting latency/throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_inference`
+
+use verde::runtime::{artifacts_present, default_dir, from_literal, to_literal, to_literal_i32, Runtime};
+use verde::tensor::Tensor;
+use verde::util::prng::SplitMix64;
+
+fn main() {
+    if !artifacts_present() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let rt = Runtime::cpu(default_dir()).unwrap();
+    println!("PJRT platform: {}", rt.platform());
+    let manifest = rt.manifest().unwrap();
+    let t0 = std::time::Instant::now();
+    let art = rt.load("forward.hlo.txt").unwrap();
+    println!("compiled forward.hlo.txt in {:?}", t0.elapsed());
+
+    let (b, s, v) = (
+        manifest.cfg("batch") as usize,
+        manifest.cfg("seq") as usize,
+        manifest.cfg("vocab") as usize,
+    );
+    // deterministic "model weights"
+    let params: Vec<xla::Literal> = manifest
+        .params
+        .iter()
+        .enumerate()
+        .map(|(i, (_n, shape))| {
+            to_literal(&Tensor::rand(shape.clone(), 3000 + i as u64, 0.05)).unwrap()
+        })
+        .collect();
+
+    // serve a stream of batched requests
+    let requests = 64;
+    let mut rng = SplitMix64::new(9);
+    let mut lat = Vec::with_capacity(requests);
+    let mut checksum = 0.0f64;
+    let serve_start = std::time::Instant::now();
+    for _ in 0..requests {
+        let mut tokens = Tensor::zeros([b, s]);
+        for t in tokens.data_mut().iter_mut() {
+            *t = rng.next_bounded(v as u64) as f32;
+        }
+        let mut lits = params.clone();
+        lits.push(to_literal_i32(&tokens).unwrap());
+        let t = std::time::Instant::now();
+        let outs = art.run(&lits).unwrap();
+        lat.push(t.elapsed());
+        let logits = from_literal(&outs[0]).unwrap();
+        checksum += logits.data()[0] as f64;
+    }
+    let total = serve_start.elapsed();
+    lat.sort();
+    let p50 = lat[lat.len() / 2];
+    let p99 = lat[lat.len() * 99 / 100];
+    println!("served {requests} requests (batch {b} x seq {s}):");
+    println!("  p50 latency  {p50:?}");
+    println!("  p99 latency  {p99:?}");
+    println!(
+        "  throughput   {:.1} seq/s ({:.0} tok/s)",
+        (requests * b) as f64 / total.as_secs_f64(),
+        (requests * b * s) as f64 / total.as_secs_f64()
+    );
+    println!("  checksum {checksum:.4} (anti-DCE)");
+}

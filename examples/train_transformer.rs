@@ -1,0 +1,147 @@
+//! END-TO-END driver: the full system on a real (small) workload.
+//!
+//! 1. A client defines a causal-LM training job (llama-small, synthetic
+//!    Markov corpus) and delegates it to two trainers.
+//! 2. Both train for a few hundred steps with multi-level checkpoint
+//!    logging; the loss curve is printed and the final commitments compared
+//!    (bitwise agreement ⇒ no dispute — RepOps at work).
+//! 3. A third, dishonest trainer runs the same job with a mid-run tamper;
+//!    the referee localizes and convicts it.
+//! 4. The AOT/PJRT path (Layer 1+2 artifacts) executes the compiled
+//!    train-step artifact as the high-throughput honest engine and reports
+//!    its step latency next to the Rust engine's.
+//!
+//! Run: `cargo run --release --example train_transformer -- [--steps N]`
+//! Results recorded in EXPERIMENTS.md §E2E.
+
+use verde::graph::kernels::Backend;
+use verde::model::Preset;
+use verde::runtime::{artifacts_present, default_dir, from_literal, to_literal, to_literal_i32, Runtime};
+use verde::tensor::Tensor;
+use verde::train::session::Session;
+use verde::train::JobSpec;
+use verde::util::cli::Args;
+use verde::util::metrics::human_bytes;
+use verde::verde::faults::Fault;
+use verde::verde::run_dispute;
+use verde::verde::trainer::TrainerNode;
+
+fn main() {
+    let args = Args::parse();
+    let steps = args.get_u64("steps", 200);
+    let mut spec = JobSpec::quick(Preset::LlamaSmall, steps);
+    spec.batch = args.get_usize("batch", 4);
+    spec.seq = args.get_usize("seq", 32);
+    spec.checkpoint_n = args.get_u64("checkpoint-n", 20);
+
+    // --- 1+2: honest delegation ------------------------------------------
+    let session = Session::new(spec);
+    println!(
+        "job: {} ({} params, {} graph nodes) x {} steps, batch {} seq {}",
+        spec.preset.name(),
+        spec.preset.build(spec.batch, spec.seq).n_params(),
+        session.program.graph.len(),
+        steps,
+        spec.batch,
+        spec.seq
+    );
+    let t0 = std::time::Instant::now();
+    let mut a = TrainerNode::honest("trainer-a", spec);
+    let ca = a.train();
+    let ta = t0.elapsed();
+    println!(
+        "trainer A done in {ta:.1?} ({:.2} steps/s), commitment {}",
+        steps as f64 / ta.as_secs_f64(),
+        ca.short()
+    );
+    println!("loss curve (every 20 steps):");
+    for (i, l) in a.losses.iter().enumerate() {
+        if i % 20 == 0 || i + 1 == a.losses.len() {
+            println!("  step {:>4}  loss {:.4}", i + 1, l);
+        }
+    }
+    let first = a.losses[0];
+    let last = *a.losses.last().unwrap();
+    assert!(last < first, "training must reduce loss: {first} -> {last}");
+
+    let mut b = TrainerNode::honest("trainer-b", spec);
+    let cb = b.train();
+    assert_eq!(ca, cb, "honest RepOps trainers agree bitwise");
+    println!("trainer B agrees bitwise — no dispute. storage/trainer: {}",
+        human_bytes(a.counters.get("checkpoint_bytes_stored")));
+
+    // --- 3: audit with a cheater ------------------------------------------
+    let tamper_step = steps / 2 + 3;
+    let upd = *session.program.param_updates.values().map(|s| &s.node).min().unwrap();
+    println!("\nauditing a third trainer with a hidden tamper at step {tamper_step}...");
+    let mut cheat = TrainerNode::new(
+        "trainer-c",
+        spec,
+        Backend::Rep,
+        Fault::TamperOutput { step: tamper_step, node: upd, delta: 1e-3 },
+    );
+    cheat.train();
+    let r = run_dispute(spec, a, cheat);
+    println!("verdict: {:?}", r.verdict);
+    println!(
+        "localized to step {:?}, node {:?}; phase-1 rounds {}; bytes {} + {}; referee {}",
+        r.diverging_step,
+        r.diverging_node,
+        r.phase1_rounds,
+        human_bytes(r.bytes[0]),
+        human_bytes(r.bytes[1]),
+        r.referee.to_json()
+    );
+    assert_eq!(r.verdict.convicted(), Some(1));
+    assert_eq!(r.diverging_step, Some(tamper_step));
+
+    // --- 4: AOT/PJRT high-throughput path ---------------------------------
+    if artifacts_present() {
+        println!("\nAOT/PJRT path (compiled train_step artifact):");
+        let rt = Runtime::cpu(default_dir()).unwrap();
+        let manifest = rt.manifest().unwrap();
+        let art = rt.load("train_step.hlo.txt").unwrap();
+        let (bb, ss, vv) = (
+            manifest.cfg("batch") as usize,
+            manifest.cfg("seq") as usize,
+            manifest.cfg("vocab") as usize,
+        );
+        // state: params + zero moments, manifest order
+        let params: Vec<Tensor> = manifest
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, (_n, s))| Tensor::rand(s.clone(), 2000 + i as u64, 0.05))
+            .collect();
+        let zeros: Vec<Tensor> =
+            manifest.params.iter().map(|(_n, s)| Tensor::zeros(s.clone())).collect();
+        let mut lits = Vec::new();
+        for t in params.iter().chain(zeros.iter()).chain(zeros.iter()) {
+            lits.push(to_literal(t).unwrap());
+        }
+        let mut tokens = Tensor::zeros([bb, ss]);
+        for (i, t) in tokens.data_mut().iter_mut().enumerate() {
+            *t = ((i * 7) % vv) as f32;
+        }
+        let mut targets = Tensor::zeros([bb * ss]);
+        for (i, t) in targets.data_mut().iter_mut().enumerate() {
+            *t = ((i * 11 + 1) % vv) as f32;
+        }
+        lits.push(to_literal_i32(&tokens).unwrap());
+        lits.push(to_literal_i32(&targets).unwrap());
+        lits.push(to_literal(&Tensor::scalar(1.0)).unwrap());
+        let tp = std::time::Instant::now();
+        let outs = art.run(&lits).unwrap();
+        let dt = tp.elapsed();
+        let loss = from_literal(outs.last().unwrap()).unwrap();
+        println!(
+            "  compiled step: {dt:?}/step, loss {:.4} (model d={} L={})",
+            loss.data()[0],
+            manifest.cfg("d_model"),
+            manifest.cfg("n_layers")
+        );
+    } else {
+        println!("\n(artifacts/ missing — run `make artifacts` for the PJRT section)");
+    }
+    println!("\nE2E OK");
+}

@@ -1,0 +1,135 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the Rust/PJRT runtime.
+
+HLO text (not a serialized ``HloModuleProto``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Artifacts:
+    train_step.hlo.txt       fused fwd/bwd/Adam step     (flat interface)
+    forward.hlo.txt          inference logits            (flat interface)
+    repmatmul_strict.hlo.txt the Layer-1 strict kernel on a fixed shape,
+                             for the Rust↔XLA cross-backend bitwise test
+    repmatmul_mxu.hlo.txt    the MXU-tiled kernel, same shape
+    manifest.json            config + flat-parameter name/shape table
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.repmatmul import repmatmul_mxu, repmatmul_strict, vmem_footprint_bytes
+from .model import Config, flat_names, forward_flat, param_shapes, train_step_flat
+
+# the canonical cross-backend test shape (divisible by the default tiles)
+XSHAPE = (32, 48, 16)  # (M, K, N)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg: Config):
+    """Lower the flat train step and forward functions."""
+    names = flat_names(cfg)
+    shapes = param_shapes(cfg)
+    p_specs = [jax.ShapeDtypeStruct(shapes[k], jnp.float32) for k in names]
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    tgt = jax.ShapeDtypeStruct((cfg.batch * cfg.seq,), jnp.int32)
+    step = jax.ShapeDtypeStruct((), jnp.float32)
+
+    fwd = jax.jit(lambda *a: forward_flat(cfg, *a)).lower(*p_specs, tok)
+    ts = jax.jit(lambda *a: train_step_flat(cfg, *a)).lower(
+        *p_specs, *p_specs, *p_specs, tok, tgt, step
+    )
+    return to_hlo_text(fwd), to_hlo_text(ts)
+
+
+def lower_kernels():
+    m, k, n = XSHAPE
+    x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    y = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    strict = jax.jit(lambda a, b: (repmatmul_strict(a, b, bm=8, bn=16),)).lower(x, y)
+    mxu = jax.jit(lambda a, b: (repmatmul_mxu(a, b, bm=8, bk=16, bn=16),)).lower(x, y)
+    return to_hlo_text(strict), to_hlo_text(mxu)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--d-ff", type=int, default=128)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = Config(
+        vocab=args.vocab,
+        d_model=args.d_model,
+        n_layers=args.n_layers,
+        n_heads=args.n_heads,
+        d_ff=args.d_ff,
+        seq=args.seq,
+        batch=args.batch,
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    fwd_txt, ts_txt = lower_model(cfg)
+    strict_txt, mxu_txt = lower_kernels()
+    outputs = {
+        "forward.hlo.txt": fwd_txt,
+        "train_step.hlo.txt": ts_txt,
+        "repmatmul_strict.hlo.txt": strict_txt,
+        "repmatmul_mxu.hlo.txt": mxu_txt,
+    }
+    for fname, text in outputs.items():
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    m, k, n = XSHAPE
+    manifest = {
+        "config": cfg.to_dict(),
+        "params": [[name, list(shape)] for name, shape in param_shapes(cfg).items()],
+        "xmatmul_shape": [m, k, n],
+        "vmem_strict_tile_bytes": vmem_footprint_bytes(m, k, n, 8, 16),
+        "artifacts": list(outputs.keys()),
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+    # line-based twin of the manifest for the (JSON-parser-free) Rust side:
+    #   param <name> <d0> <d1> ...
+    #   config <key> <value>
+    tpath = os.path.join(args.out_dir, "manifest.txt")
+    with open(tpath, "w") as f:
+        for key in ("vocab", "d_model", "n_layers", "n_heads", "d_ff", "seq", "batch"):
+            f.write(f"config {key} {getattr(cfg, key)}\n")
+        f.write(f"config xm {m}\nconfig xk {k}\nconfig xn {n}\n")
+        for name, shape in param_shapes(cfg).items():
+            dims = " ".join(str(d) for d in shape)
+            f.write(f"param {name} {dims}\n")
+    print(f"wrote {tpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels.
+
+Two levels of "correct":
+
+* :func:`matmul_ref` — XLA's own matmul; kernels must match to float32
+  tolerance (the *numerics* oracle).
+* :func:`matmul_fixed_order` — a numpy loop executing the exact RepOps
+  operation sequence (ascending-k, separately-rounded mul+add); the strict
+  kernel must match it **bitwise** (the *reproducibility* oracle, and the
+  same sequence the Rust engine implements).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(x, y):
+    """XLA matmul (numerics oracle)."""
+    return jnp.matmul(x, y)
+
+
+def matmul_fixed_order(x, y):
+    """The paper's §3.2 pseudo-code executed literally in float32 numpy:
+    for each (i, j), sum_k rounds after every mul and every add, ascending k.
+
+    Vectorized over (i, j) — scalar FP ops on the same index are identical
+    to the scalar loop — so it stays usable as a test oracle.
+    """
+    x = np.asarray(x, dtype=np.float32)
+    y = np.asarray(y, dtype=np.float32)
+    m, k = x.shape
+    _, n = y.shape
+    acc = np.zeros((m, n), dtype=np.float32)
+    for kk in range(k):
+        # one separately-rounded mul, one separately-rounded add, per element
+        acc = (acc + x[:, kk][:, None] * y[kk, :][None, :]).astype(np.float32)
+    return acc
+
+
+def matmul_fixed_order_fma(x, y):
+    """Ascending-k accumulation under the FMA contract: each term folds in
+    with a SINGLE rounding, emulated exactly in float64 (a float32 product
+    is exact in float64; the fused round-to-f32 is the final astype).
+
+    This is what XLA CPU/GPU (and CUDA FFMA) actually emit for the strict
+    kernel — the cross-backend contract implemented by the Rust engine's
+    ``repops::matmul_fma``.
+    """
+    x64 = np.asarray(x, dtype=np.float64)
+    y64 = np.asarray(y, dtype=np.float64)
+    m, k = x64.shape
+    _, n = y64.shape
+    acc = np.zeros((m, n), dtype=np.float32)
+    for kk in range(k):
+        prod = x64[:, kk][:, None] * y64[kk, :][None, :]  # exact in f64
+        acc = (acc.astype(np.float64) + prod).astype(np.float32)
+    return acc
+
+
+def softmax_ref(x):
+    """Stable softmax oracle."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

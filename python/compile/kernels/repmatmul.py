@@ -1,0 +1,157 @@
+"""Layer 1 — RepOps matmul as Pallas kernels (paper §3.2, adapted to TPU).
+
+The paper's CUDA RepOps parallelizes the M/N loops across threadblocks and
+serializes the K loop per output element. The TPU mapping (DESIGN.md
+§Hardware-Adaptation):
+
+* threadblock grid        → ``grid=(M/bm, N/bn)`` Pallas grid over output tiles
+* shared-memory staging   → ``BlockSpec`` HBM→VMEM schedules
+* serialized K loop       → ``jax.lax.fori_loop`` inside the kernel body —
+  a reduction order fixed by the *program*, not the hardware
+
+Two variants:
+
+* :func:`repmatmul_strict` — scalar-K accumulation via rank-1 updates; its
+  per-element FP operation sequence (separately-rounded mul then add,
+  ascending k) is **identical to the Rust engine's** ``repops::matmul``, so
+  cross-backend bitwise agreement is testable.
+* :func:`repmatmul_mxu` — K-tile accumulation with a per-tile ``jnp.dot``
+  (the MXU-shaped variant for real TPEs): the reduction tree is fixed by the
+  tile shapes (bm, bk, bn), reproducible across devices that implement the
+  same dot contraction, and much faster.
+
+Kernels are lowered with ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute; interpret mode lowers to
+plain HLO, preserving the operation order.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _strict_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile: ascending-k rank-1 accumulation."""
+    x = x_ref[...]  # (bm, K)
+    y = y_ref[...]  # (K, bn)
+    k = x.shape[1]
+    acc0 = jnp.zeros((x.shape[0], y.shape[1]), dtype=jnp.float32)
+
+    def body(i, acc):
+        # separately-rounded multiply and add, k ascending — the same
+        # scalar sequence as rust repops::matmul_into
+        return acc + x[:, i][:, None] * y[i, :][None, :]
+
+    o_ref[...] = jax.lax.fori_loop(0, k, body, acc0)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def repmatmul_strict(x, y, bm: int = 8, bn: int = 128):
+    """Bitwise-reproducible matmul with the Rust engine's FP order.
+
+    ``x: (M, K), y: (K, N) -> (M, N)`` float32. M must divide by ``bm`` and
+    N by ``bn`` (pad first if not).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {x.shape} @ {y.shape}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0, f"tile ({bm},{bn}) must divide ({m},{n})"
+    return pl.pallas_call(
+        _strict_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _mxu_kernel(x_ref, y_ref, o_ref, *, bk: int):
+    """One (bm, bn) output tile: ascending K-tile dot accumulation."""
+    x = x_ref[...]  # (bm, K)
+    y = y_ref[...]  # (K, bn)
+    k = x.shape[1]
+    nk = k // bk
+    acc0 = jnp.zeros((x.shape[0], y.shape[1]), dtype=jnp.float32)
+
+    def body(t, acc):
+        xt = jax.lax.dynamic_slice(x, (0, t * bk), (x.shape[0], bk))
+        yt = jax.lax.dynamic_slice(y, (t * bk, 0), (bk, y.shape[1]))
+        # per-tile contraction on the MXU; tile-level accumulation order is
+        # fixed by this loop
+        return acc + jnp.dot(xt, yt, preferred_element_type=jnp.float32)
+
+    return o_ref.__setitem__(..., jax.lax.fori_loop(0, nk, body, acc0))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def repmatmul_mxu(x, y, bm: int = 128, bk: int = 128, bn: int = 128):
+    """MXU-tiled reproducible matmul (TPU-shaped; fixed K-tile order)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2
+    bm = min(bm, m)
+    bk = min(bk, k)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"tiles ({bm},{bk},{bn}) must divide ({m},{k},{n})"
+    )
+    return pl.pallas_call(
+        functools.partial(_mxu_kernel, bk=bk),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _softmax_kernel(x_ref, o_ref):
+    """Row-block softmax with fixed-order (ascending-j) sum via fori_loop."""
+    x = x_ref[...]  # (bm, N)
+    m = jnp.max(x, axis=1, keepdims=True)
+    e = jnp.exp(x - m)
+    n = x.shape[1]
+
+    def body(j, acc):
+        return acc + e[:, j]
+
+    s = jax.lax.fori_loop(0, n, body, jnp.zeros((x.shape[0],), jnp.float32))
+    o_ref[...] = e / s[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def repsoftmax(x, bm: int = 8):
+    """Reproducible row softmax (fixed-order row sums)."""
+    m, n = x.shape
+    bm = min(bm, m)
+    assert m % bm == 0
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def vmem_footprint_bytes(m: int, k: int, n: int, bm: int, bn: int) -> int:
+    """Estimated VMEM bytes per grid cell for the strict kernel: the x-tile
+    (bm, K), y-tile (K, bn), and accumulator (bm, bn), FP32.
+
+    Used by DESIGN.md §Perf to check tiles fit the ~16 MiB VMEM budget —
+    interpret mode gives no hardware occupancy numbers.
+    """
+    del m, n
+    return 4 * (bm * k + k * bn + bm * bn)

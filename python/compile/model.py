@@ -1,0 +1,241 @@
+"""Layer 2 — the JAX training-step / inference graphs, lowered AOT to HLO.
+
+A Llama-style causal LM (RMSNorm, RoPE, SiLU-gated MLP) whose dense
+projections run through the Layer-1 RepOps Pallas kernels
+(:mod:`compile.kernels.repmatmul`), so the reproducible-matmul operation
+order lowers into the same HLO artifact the Rust runtime executes.
+
+Everything here is build-time only: ``compile.aot`` lowers
+:func:`train_step` and :func:`forward` once; the Rust coordinator loads the
+HLO text via PJRT and Python never appears on the request path.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.repmatmul import repmatmul_mxu
+
+
+@dataclass(frozen=True)
+class Config:
+    vocab: int = 256
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 128
+    seq: int = 16
+    batch: int = 2
+    rope_base: float = 10_000.0
+    # Adam
+    lr: float = 1e-2
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    # kernel tiles (MXU-shaped on real TPU; clipped to shapes here)
+    bm: int = 8
+    bk: int = 64
+    bn: int = 128
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def param_shapes(cfg: Config) -> dict:
+    """Name → shape for every learnable parameter (sorted name order is the
+    canonical flattening used by the AOT artifact manifest)."""
+    shapes = {
+        "embed.w": (cfg.vocab, cfg.d_model),
+        "final_norm.gamma": (cfg.d_model,),
+        "lm_head.w": (cfg.d_model, cfg.vocab),
+    }
+    for l in range(cfg.n_layers):
+        p = f"blk{l}"
+        shapes[f"{p}.attn_norm.gamma"] = (cfg.d_model,)
+        for proj in ("q", "k", "v", "o"):
+            shapes[f"{p}.attn.{proj}.w"] = (cfg.d_model, cfg.d_model)
+        shapes[f"{p}.mlp_norm.gamma"] = (cfg.d_model,)
+        shapes[f"{p}.mlp.gate.w"] = (cfg.d_model, cfg.d_ff)
+        shapes[f"{p}.mlp.up.w"] = (cfg.d_model, cfg.d_ff)
+        shapes[f"{p}.mlp.down.w"] = (cfg.d_ff, cfg.d_model)
+    return dict(sorted(shapes.items()))
+
+
+def init_params(cfg: Config, seed: int = 0) -> dict:
+    """Deterministic 1/√fan_in init (gammas to 1)."""
+    params = {}
+    key = jax.random.PRNGKey(seed)
+    for name, shape in param_shapes(cfg).items():
+        if name.endswith(".gamma"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            key, sub = jax.random.split(key)
+            scale = 1.0 / (shape[0] ** 0.5)
+            params[name] = jax.random.uniform(
+                sub, shape, jnp.float32, -scale, scale
+            )
+    return params
+
+
+def _mm_impl(cfg: Config, x, w):
+    """2-D projection through the Layer-1 reproducible kernel."""
+    bm = cfg.bm if x.shape[0] % cfg.bm == 0 else x.shape[0]
+    bk = cfg.bk if x.shape[1] % cfg.bk == 0 else x.shape[1]
+    bn = cfg.bn if w.shape[1] % cfg.bn == 0 else w.shape[1]
+    return repmatmul_mxu(x, w, bm=bm, bk=bk, bn=bn)
+
+
+# pallas_call has no autodiff rule; give the projection the standard matmul
+# VJP with BOTH backward contractions routed through the reproducible kernel
+# (transposes are pure movement) — the same backward graph the Rust engine's
+# autodiff emits (dA = dY·Bᵀ, dB = Aᵀ·dY).
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mm(cfg: Config, x, w):
+    return _mm_impl(cfg, x, w)
+
+
+def _mm_fwd(cfg: Config, x, w):
+    return _mm_impl(cfg, x, w), (x, w)
+
+
+def _mm_bwd(cfg: Config, res, g):
+    x, w = res
+    dx = _mm_impl(cfg, g, w.T)
+    dw = _mm_impl(cfg, x.T, g)
+    return dx, dw
+
+
+_mm.defvjp(_mm_fwd, _mm_bwd)
+
+
+def _rmsnorm(x, gamma, eps=1e-6):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gamma
+
+
+def _rope_tables(cfg: Config):
+    dh = cfg.d_model // cfg.n_heads
+    half = dh // 2
+    pos = jnp.arange(cfg.seq, dtype=jnp.float32)[:, None]
+    freq = cfg.rope_base ** (-2.0 * jnp.arange(half, dtype=jnp.float32) / dh)
+    theta = pos * freq[None, :]
+    return jnp.sin(theta), jnp.cos(theta)  # each (seq, dh/2)
+
+
+def _rope(x, sin, cos):
+    """Interleaved-pair rotation; x: (..., seq, dh)."""
+    x0 = x[..., 0::2]
+    x1 = x[..., 1::2]
+    r0 = x0 * cos - x1 * sin
+    r1 = x0 * sin + x1 * cos
+    out = jnp.stack([r0, r1], axis=-1)
+    return out.reshape(x.shape)
+
+
+def forward(cfg: Config, params: dict, tokens):
+    """Causal-LM logits: tokens (batch, seq) int32 → (batch*seq, vocab)."""
+    b, s = tokens.shape
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    x = params["embed.w"][tokens]  # (b, s, d)
+    x = x.reshape(b * s, d)
+    sin, cos = _rope_tables(cfg)
+    mask = jnp.where(
+        jnp.arange(s)[None, :] > jnp.arange(s)[:, None], -1e9, 0.0
+    ).astype(jnp.float32)
+
+    for l in range(cfg.n_layers):
+        p = f"blk{l}"
+        xn = _rmsnorm(x, params[f"{p}.attn_norm.gamma"])
+        q = _mm(cfg, xn, params[f"{p}.attn.q.w"])
+        k = _mm(cfg, xn, params[f"{p}.attn.k.w"])
+        v = _mm(cfg, xn, params[f"{p}.attn.v.w"])
+
+        def heads(t):
+            return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)  # (b,h,s,dh)
+
+        q, k, v = heads(q), heads(k), heads(v)
+        q = _rope(q, sin, cos)
+        k = _rope(k, sin, cos)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (dh**0.5)
+        probs = jax.nn.softmax(scores + mask[None, None], axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b * s, d)
+        x = x + _mm(cfg, ctx, params[f"{p}.attn.o.w"])
+
+        xn = _rmsnorm(x, params[f"{p}.mlp_norm.gamma"])
+        gate = jax.nn.silu(_mm(cfg, xn, params[f"{p}.mlp.gate.w"]))
+        up = _mm(cfg, xn, params[f"{p}.mlp.up.w"])
+        x = x + _mm(cfg, gate * up, params[f"{p}.mlp.down.w"])
+
+    x = _rmsnorm(x, params["final_norm.gamma"])
+    return _mm(cfg, x, params["lm_head.w"])  # (b*s, vocab)
+
+
+def loss_fn(cfg: Config, params: dict, tokens, targets):
+    """Mean next-token cross-entropy; targets (batch*seq,) int32."""
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def train_step(cfg: Config, params, m, v, tokens, targets, step):
+    """One fused fwd/bwd/Adam step.
+
+    ``step`` is the 1-based step index (float32 scalar; bias correction).
+    Returns (new_params, new_m, new_v, loss).
+    """
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens, targets))(params)
+    bc1 = 1.0 - cfg.beta1**step
+    bc2 = 1.0 - cfg.beta2**step
+
+    def upd(w, g, mi, vi):
+        mi = cfg.beta1 * mi + (1.0 - cfg.beta1) * g
+        vi = cfg.beta2 * vi + (1.0 - cfg.beta2) * g * g
+        mhat = mi / bc1
+        vhat = vi / bc2
+        return w - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.eps), mi, vi
+
+    out = jax.tree_util.tree_map(upd, params, grads, m, v)
+    new_p = {k: t[0] for k, t in out.items()}
+    new_m = {k: t[1] for k, t in out.items()}
+    new_v = {k: t[2] for k, t in out.items()}
+    return new_p, new_m, new_v, loss
+
+
+# ---------------------------------------------------------------------------
+# flat (positional) wrappers — the AOT artifact interface for the Rust side
+# ---------------------------------------------------------------------------
+
+def flat_names(cfg: Config):
+    return list(param_shapes(cfg).keys())
+
+
+def forward_flat(cfg: Config, *args):
+    """`(p_0..p_{n-1}, tokens) -> (logits,)` with params in sorted order."""
+    names = flat_names(cfg)
+    params = dict(zip(names, args[: len(names)]))
+    tokens = args[len(names)]
+    return (forward(cfg, params, tokens),)
+
+
+def train_step_flat(cfg: Config, *args):
+    """`(p.., m.., v.., tokens, targets, step) -> (p'.., m'.., v'.., loss)`."""
+    names = flat_names(cfg)
+    n = len(names)
+    params = dict(zip(names, args[0:n]))
+    m = dict(zip(names, args[n : 2 * n]))
+    v = dict(zip(names, args[2 * n : 3 * n]))
+    tokens, targets, step = args[3 * n : 3 * n + 3]
+    new_p, new_m, new_v, loss = train_step(cfg, params, m, v, tokens, targets, step)
+    return (
+        *[new_p[k] for k in names],
+        *[new_m[k] for k in names],
+        *[new_v[k] for k in names],
+        loss,
+    )

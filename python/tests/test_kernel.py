@@ -1,0 +1,151 @@
+"""Layer-1 kernel correctness: Pallas RepOps kernels vs the oracles.
+
+* numerics — allclose against XLA matmul for swept shapes (hypothesis);
+* reproducibility — the strict kernel matches the fixed-order numpy oracle
+  BITWISE (the same FP sequence the Rust engine implements).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    matmul_fixed_order,
+    matmul_fixed_order_fma,
+    matmul_ref,
+    softmax_ref,
+)
+from compile.kernels.repmatmul import (
+    repmatmul_mxu,
+    repmatmul_strict,
+    repsoftmax,
+    vmem_footprint_bytes,
+)
+
+
+def rand(shape, seed, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale)
+
+
+# a wide-exponent distribution that exposes reduction-order differences
+def adversarial(shape, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    mant = jax.random.uniform(k1, shape, jnp.float32, -1.0, 1.0)
+    mag = jax.random.randint(k2, shape, -12, 12).astype(jnp.float32)
+    return mant * (2.0**mag)
+
+
+class TestStrictKernel:
+    def test_matches_ref_allclose(self):
+        x, y = rand((32, 48), 0), rand((48, 16), 1)
+        got = repmatmul_strict(x, y, bm=8, bn=16)
+        np.testing.assert_allclose(got, matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+    def test_bitwise_matches_fixed_order_fma_oracle(self):
+        # THE reproducibility contract: ascending-k accumulation with one
+        # rounding per term. XLA contracts `acc + a*b` to FMA, so the
+        # kernel's pinned FP sequence is fma(a, b, acc) in ascending k —
+        # matched bitwise by the float64-emulated oracle and by the Rust
+        # engine's repops::matmul_fma (see rust/tests/cross_backend.rs).
+        x, y = adversarial((16, 32), 2), adversarial((32, 8), 3)
+        got = np.asarray(repmatmul_strict(x, y, bm=8, bn=8))
+        want = matmul_fixed_order_fma(x, y)
+        assert got.dtype == np.float32
+        np.testing.assert_array_equal(
+            got.view(np.uint32), want.view(np.uint32),
+            err_msg="strict kernel must be bitwise fixed-order (FMA contract)",
+        )
+        # and the separate-rounding oracle agrees to a couple of ULPs
+        sep = matmul_fixed_order(x, y)
+        np.testing.assert_allclose(got, sep, rtol=1e-6)
+
+    def test_tile_invariance_bitwise(self):
+        # block shapes parallelize M/N only; bits must not depend on them
+        x, y = adversarial((16, 64), 4), adversarial((64, 32), 5)
+        a = np.asarray(repmatmul_strict(x, y, bm=16, bn=32))
+        b = np.asarray(repmatmul_strict(x, y, bm=2, bn=8))
+        np.testing.assert_array_equal(a.view(np.uint32), b.view(np.uint32))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([4, 8, 16]),
+        k=st.sampled_from([3, 16, 33, 64]),
+        n=st.sampled_from([4, 8, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_shape_sweep_allclose(self, m, k, n, seed):
+        x, y = rand((m, k), seed), rand((k, n), seed + 1)
+        got = repmatmul_strict(x, y, bm=min(4, m), bn=min(4, n))
+        np.testing.assert_allclose(got, matmul_ref(x, y), rtol=2e-5, atol=2e-5)
+
+
+class TestMxuKernel:
+    def test_matches_ref_allclose(self):
+        x, y = rand((32, 48), 6), rand((48, 16), 7)
+        got = repmatmul_mxu(x, y, bm=8, bk=16, bn=16)
+        np.testing.assert_allclose(got, matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+    def test_same_tiles_same_bits(self):
+        # For the MXU variant the ENTIRE tile tuple (bm, bk, bn) is part of
+        # the reproducibility contract: XLA chooses the in-tile `dot`
+        # reduction tree per shape, so changing any tile legally changes
+        # bits — the §3.3 "hard-coded kernel parameters" trade-off. The
+        # contract is: same program (same tiles) → same bits.
+        x, y = adversarial((16, 64), 8), adversarial((64, 32), 9)
+        a = np.asarray(repmatmul_mxu(x, y, bm=16, bk=16, bn=32))
+        b = np.asarray(repmatmul_mxu(x, y, bm=16, bk=16, bn=32))
+        np.testing.assert_array_equal(a.view(np.uint32), b.view(np.uint32))
+
+    def test_k_tile_changes_reduction_tree(self):
+        # sanity that the adversarial distribution detects order changes:
+        # a different K tiling is a different reduction tree
+        x, y = adversarial((16, 64), 8), adversarial((64, 32), 9)
+        a = np.asarray(repmatmul_mxu(x, y, bm=16, bk=16, bn=32))
+        c = np.asarray(repmatmul_mxu(x, y, bm=16, bk=64, bn=32))
+        assert not np.array_equal(a.view(np.uint32), c.view(np.uint32))
+        np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        mt=st.sampled_from([(8, 8), (16, 4)]),
+        k=st.sampled_from([16, 32, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_shape_sweep_allclose(self, mt, k, seed):
+        m, n = mt
+        x, y = rand((m, k), seed), rand((k, n), seed + 1)
+        got = repmatmul_mxu(x, y, bm=m, bk=min(16, k), bn=n)
+        np.testing.assert_allclose(got, matmul_ref(x, y), rtol=2e-5, atol=2e-5)
+
+
+class TestSoftmaxKernel:
+    def test_matches_ref(self):
+        x = rand((16, 33), 10, scale=6.0)
+        got = repsoftmax(x, bm=8)
+        np.testing.assert_allclose(got, softmax_ref(x), rtol=1e-5, atol=1e-6)
+
+    def test_rows_sum_to_one(self):
+        x = adversarial((8, 64), 11)
+        # clamp the adversarial magnitudes: softmax saturates past exp range
+        x = jnp.clip(x, -50.0, 50.0)
+        got = np.asarray(repsoftmax(x, bm=4))
+        np.testing.assert_allclose(got.sum(axis=1), np.ones(8), rtol=1e-5)
+
+
+def test_vmem_footprint_model():
+    # (bm, K) + (K, bn) + (bm, bn) fp32
+    assert vmem_footprint_bytes(128, 512, 128, 8, 16) == 4 * (8 * 512 + 512 * 16 + 8 * 16)
+    # MXU-shaped tiles on a big contraction stay inside a 16 MiB VMEM budget
+    assert vmem_footprint_bytes(4096, 4096, 4096, 128, 128) < 16 << 20
+
+
+@pytest.mark.parametrize("bad", [(7, 16), (8, 9)])
+def test_tile_divisibility_asserted(bad):
+    bm, bn = bad
+    x, y = rand((16, 16), 12), rand((16, 32), 13)
+    with pytest.raises(AssertionError):
+        repmatmul_strict(x, y, bm=bm, bn=bn)

@@ -1,0 +1,116 @@
+"""Layer-2 model tests: shapes, learning signal, determinism, and the flat
+AOT interface round-trip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import (
+    Config,
+    flat_names,
+    forward,
+    forward_flat,
+    init_params,
+    loss_fn,
+    param_shapes,
+    train_step,
+    train_step_flat,
+)
+
+CFG = Config(vocab=64, d_model=32, n_layers=1, n_heads=2, d_ff=64, seq=8, batch=2)
+
+
+def batch_for(cfg, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (cfg.batch, cfg.seq), 0, cfg.vocab)
+    targets = jax.random.randint(k2, (cfg.batch * cfg.seq,), 0, cfg.vocab)
+    return tokens, targets
+
+
+def zeros_like_params(cfg):
+    return {k: jnp.zeros(s, jnp.float32) for k, s in param_shapes(cfg).items()}
+
+
+def test_forward_shape_and_loss_near_uniform():
+    params = init_params(CFG, 0)
+    tokens, targets = batch_for(CFG, 1)
+    logits = forward(CFG, params, tokens)
+    assert logits.shape == (CFG.batch * CFG.seq, CFG.vocab)
+    loss = loss_fn(CFG, params, tokens, targets)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_train_step_decreases_loss_on_fixed_batch():
+    params = init_params(CFG, 0)
+    m = zeros_like_params(CFG)
+    v = zeros_like_params(CFG)
+    tokens, _ = batch_for(CFG, 2)
+    # learnable rule: target = (token + 1) % vocab
+    targets = ((tokens.reshape(-1) + 1) % CFG.vocab).astype(jnp.int32)
+    first = None
+    step_fn = jax.jit(lambda p, m, v, t: train_step(CFG, p, m, v, tokens, targets, t))
+    last = None
+    for t in range(1, 21):
+        params, m, v, loss = step_fn(params, m, v, jnp.float32(t))
+        first = first or float(loss)
+        last = float(loss)
+    assert last < first * 0.7, f"{first} -> {last}"
+
+
+def test_training_is_deterministic():
+    tokens, targets = batch_for(CFG, 3)
+
+    def run():
+        params = init_params(CFG, 7)
+        m = zeros_like_params(CFG)
+        v = zeros_like_params(CFG)
+        for t in range(1, 4):
+            params, m, v, loss = train_step(CFG, params, m, v, tokens, targets, jnp.float32(t))
+        return params, loss
+
+    p1, l1 = run()
+    p2, l2 = run()
+    assert float(l1) == float(l2)
+    for k in p1:
+        np.testing.assert_array_equal(
+            np.asarray(p1[k]).view(np.uint32), np.asarray(p2[k]).view(np.uint32)
+        )
+
+
+def test_flat_wrappers_roundtrip():
+    params = init_params(CFG, 0)
+    names = flat_names(CFG)
+    m = zeros_like_params(CFG)
+    v = zeros_like_params(CFG)
+    tokens, targets = batch_for(CFG, 4)
+
+    flat_logits = forward_flat(CFG, *[params[k] for k in names], tokens)[0]
+    np.testing.assert_array_equal(flat_logits, forward(CFG, params, tokens))
+
+    flat_out = train_step_flat(
+        CFG,
+        *[params[k] for k in names],
+        *[m[k] for k in names],
+        *[v[k] for k in names],
+        tokens,
+        targets,
+        jnp.float32(1.0),
+    )
+    n = len(names)
+    assert len(flat_out) == 3 * n + 1
+    ref_p, ref_m, ref_v, ref_loss = train_step(CFG, params, m, v, tokens, targets, jnp.float32(1.0))
+    np.testing.assert_array_equal(flat_out[-1], ref_loss)
+    for i, k in enumerate(names):
+        np.testing.assert_array_equal(flat_out[i], ref_p[k])
+        np.testing.assert_array_equal(flat_out[n + i], ref_m[k])
+        np.testing.assert_array_equal(flat_out[2 * n + i], ref_v[k])
+
+
+def test_param_shapes_sorted_and_complete():
+    shapes = param_shapes(CFG)
+    names = list(shapes.keys())
+    assert names == sorted(names)
+    assert "embed.w" in shapes and "lm_head.w" in shapes
+    n_params = sum(int(np.prod(s)) for s in shapes.values())
+    assert n_params > 2 * CFG.vocab * CFG.d_model  # embed + head + blocks

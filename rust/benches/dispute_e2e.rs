@@ -1,0 +1,65 @@
+//! DISP — end-to-end dispute cost scaling: wall time, bytes, and rounds vs
+//! training length n and checkpoint count N (the paper's "practical
+//! overheads for compute providers" claim, §1/§2.1).
+//!
+//! Run: `cargo bench --bench dispute_e2e`
+
+use std::time::Instant;
+
+use verde::graph::kernels::Backend;
+use verde::model::Preset;
+use verde::train::JobSpec;
+use verde::util::metrics::human_bytes;
+use verde::verde::faults::Fault;
+use verde::verde::run_dispute;
+use verde::verde::trainer::TrainerNode;
+
+fn main() {
+    println!("DISP: dispute cost vs training length and checkpoint count");
+    println!(
+        "{:>7} {:>5} {:>12} {:>10} {:>12} {:>12} {:>8}",
+        "steps", "N", "train wall", "disp wall", "bytes", "reexec", "rounds"
+    );
+    for steps in [64u64, 256] {
+        for n in [4u64, 20] {
+            let mut spec = JobSpec::quick(Preset::LlamaTiny, steps);
+            spec.checkpoint_n = n;
+            let mut honest = TrainerNode::honest("honest", spec);
+            let mut cheat = TrainerNode::new(
+                "cheat",
+                spec,
+                Backend::Rep,
+                Fault::WrongData { step: steps * 3 / 4 },
+            );
+            let t0 = Instant::now();
+            honest.train();
+            let train_wall = t0.elapsed();
+            cheat.train();
+            let t1 = Instant::now();
+            let r = run_dispute(spec, &mut honest, &mut cheat);
+            let disp_wall = t1.elapsed();
+            assert_eq!(r.verdict.convicted(), Some(1));
+            let moved = r.bytes[0] + r.bytes[1];
+            let reexec = honest.counters.get("steps_reexecuted")
+                + cheat.counters.get("steps_reexecuted");
+            println!(
+                "{:>7} {:>5} {:>12?} {:>10?} {:>12} {:>12} {:>8}",
+                steps,
+                n,
+                train_wall,
+                disp_wall,
+                human_bytes(moved),
+                format!("{reexec} steps"),
+                r.phase1_rounds
+            );
+            println!(
+                "JSON {{\"bench\":\"disp\",\"steps\":{steps},\"n\":{n},\"train_s\":{:.4},\"dispute_s\":{:.4},\"bytes\":{moved},\"reexec_steps\":{reexec},\"rounds\":{}}}",
+                train_wall.as_secs_f64(),
+                disp_wall.as_secs_f64(),
+                r.phase1_rounds
+            );
+        }
+    }
+    println!("\ndispute cost should stay a small fraction of training cost and");
+    println!("scale ~logarithmically (levels) in n — paper §2.1.");
+}

@@ -1,0 +1,65 @@
+//! P1COST(a) — checkpoint hashing cost (paper §2.1's premise that hashing
+//! is cheap relative to training, with the worked numbers: DistilBERT <1s,
+//! Llama-1B ≈2.5s, Llama-8B ≈15s for weights+Adam state in FP32).
+//!
+//! We measure SHA-256 throughput on state-sized buffers, hash our actual
+//! model states, and extrapolate to the paper's model sizes.
+//!
+//! Run: `cargo bench --bench hashing`
+
+use std::time::Duration;
+
+use verde::graph::autodiff::Optimizer;
+use verde::hash::hash_tensor;
+use verde::model::Preset;
+use verde::tensor::Tensor;
+use verde::train::checkpoint::{adam_state_bytes, PAPER_MODELS};
+use verde::util::bench::time_adaptive;
+use verde::util::metrics::human_bytes;
+
+fn main() {
+    println!("P1COST(a): checkpoint hashing");
+    // raw throughput
+    let buf = Tensor::rand([1 << 22], 1, 1.0); // 16 MiB
+    let m = time_adaptive("sha256 16MiB", Duration::from_millis(1500), 50, || {
+        hash_tensor(&buf)
+    });
+    let gbps = buf.byte_len() as f64 / m.median_secs() / 1e9;
+    println!("  sha256 throughput: {:.3} GB/s", gbps);
+    println!("JSON {{\"bench\":\"hashing\",\"throughput_gbps\":{gbps:.4}}}");
+
+    // our model states
+    for preset in [Preset::LlamaTiny, Preset::BertSmall, Preset::LlamaSmall, Preset::LlamaBase] {
+        let model = preset.build(2, 16);
+        let st = model.init_state(1, &Optimizer::adam(1e-3));
+        let mm = time_adaptive(preset.name(), Duration::from_millis(500), 50, || {
+            st.leaf_hashes()
+        });
+        println!(
+            "  {:<14} state {:>10}  hash {:>12?}",
+            preset.name(),
+            human_bytes(st.byte_len() as u64),
+            mm.median
+        );
+    }
+
+    // extrapolation to the paper's models (weights + Adam m,v in FP32)
+    println!("\n  extrapolated to the paper's models at {:.2} GB/s:", gbps);
+    println!("  {:<16} {:>12} {:>12} {:>10}", "model", "state", "hash time", "paper");
+    let paper_ref = ["<1 s", "~2.5 s", "~15 s"];
+    for ((name, params), pref) in PAPER_MODELS.iter().zip(paper_ref) {
+        let bytes = adam_state_bytes(*params);
+        let secs = bytes as f64 / (gbps * 1e9);
+        println!(
+            "  {:<16} {:>12} {:>11.2}s {:>10}",
+            name,
+            human_bytes(bytes),
+            secs,
+            pref
+        );
+        println!(
+            "JSON {{\"bench\":\"hashing\",\"model\":\"{name}\",\"state_bytes\":{bytes},\"hash_s\":{secs:.3}}}"
+        );
+    }
+    println!("\npaper reference (§2.1, M3 CPU): DistilBERT <1s, Llama-1B ~2.5s, Llama-8B ~15s");
+}

@@ -1,0 +1,79 @@
+//! TAB1 — paper Table 1: RepOps inference and training overheads for the
+//! DistilBERT and Llama-1B stand-ins on the T4 / A100-40G profiles.
+//!
+//! Paper numbers (FP32, worst batch size 2–8):
+//!              DistilBERT          Llama-1B
+//!   T4-16G     74% inf / 258% trn  218% inf / 374% trn
+//!   A100-40G   84% inf / 312% trn   58% inf /  67% trn
+//!
+//! Ours: the same program executed by the graph engine under Backend::Rep
+//! vs Backend::Free(profile); overhead % per (model, task, profile).
+//!
+//! Run: `cargo bench --bench tab1_models`
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use verde::graph::autodiff::Optimizer;
+use verde::graph::executor::{execute, ExecOpts, State};
+use verde::graph::kernels::Backend;
+use verde::model::Preset;
+use verde::tensor::profile::HardwareProfile;
+use verde::tensor::Tensor;
+use verde::train::data::DataGen;
+use verde::util::bench::{overhead_pct, time_adaptive};
+
+fn bench_model(preset: Preset, batch: usize, seq: usize) {
+    let model = preset.build(batch, seq);
+    let opt = Optimizer::adam(1e-3);
+    let train = model.train_step(&opt);
+    let state: State = model.init_state(7, &opt);
+    let data = DataGen::new(preset, batch, seq, 11);
+    let b: BTreeMap<String, Tensor> = data.batch(1);
+    let fwd_graph = &model.builder.graph;
+    let trn_graph = &train.graph;
+    let budget = Duration::from_millis(900);
+
+    let inf_rep = time_adaptive("inf rep", budget, 40, || {
+        execute(fwd_graph, &state, &b, Backend::Rep, 1, &ExecOpts::default())
+    });
+    let trn_rep = time_adaptive("trn rep", budget, 40, || {
+        execute(trn_graph, &state, &b, Backend::Rep, 1, &ExecOpts::default())
+    });
+    for hw in [HardwareProfile::T4_16G, HardwareProfile::A100_40G] {
+        let inf_free = time_adaptive("inf free", budget, 40, || {
+            execute(fwd_graph, &state, &b, Backend::Free(hw), 1, &ExecOpts::default())
+        });
+        let trn_free = time_adaptive("trn free", budget, 40, || {
+            execute(trn_graph, &state, &b, Backend::Free(hw), 1, &ExecOpts::default())
+        });
+        let oi = overhead_pct(&inf_rep, &inf_free);
+        let ot = overhead_pct(&trn_rep, &trn_free);
+        println!(
+            "  {:<12} {:<12} infer {:>8.1}%  train {:>8.1}%   (rep {:.1}/{:.1} ms, free {:.1}/{:.1} ms)",
+            preset.name(),
+            hw.name,
+            oi,
+            ot,
+            inf_rep.median_secs() * 1e3,
+            trn_rep.median_secs() * 1e3,
+            inf_free.median_secs() * 1e3,
+            trn_free.median_secs() * 1e3,
+        );
+        println!(
+            "JSON {{\"bench\":\"tab1\",\"model\":\"{}\",\"profile\":\"{}\",\"infer_overhead_pct\":{oi:.2},\"train_overhead_pct\":{ot:.2}}}",
+            preset.name(),
+            hw.name
+        );
+    }
+}
+
+fn main() {
+    println!("TAB1: RepOps model overheads (worst batch per paper = small batch)");
+    // DistilBERT stand-in and Llama-1B stand-in, batch 2 (paper's worst)
+    bench_model(Preset::BertSmall, 2, 32);
+    bench_model(Preset::LlamaSmall, 2, 32);
+    println!("\npaper reference:");
+    println!("  DistilBERT: T4 74%/258%, A100-40G 84%/312%");
+    println!("  Llama-1B:   T4 218%/374%, A100-40G 58%/67%");
+}

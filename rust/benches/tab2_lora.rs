@@ -1,0 +1,60 @@
+//! TAB2 — paper Table 2: Llama-8B inference and LoRA fine-tuning overheads
+//! on the A100-80G profile (paper: 98% inference, 126% LoRA fine-tune).
+//!
+//! Ours: llama-base (the 8B stand-in) + rank-8 LoRA adapters; the
+//! fine-tuning step trains adapters only (frozen base), as in the paper.
+//!
+//! Run: `cargo bench --bench tab2_lora`
+
+use std::time::Duration;
+
+use verde::graph::autodiff::Optimizer;
+use verde::graph::executor::{execute, ExecOpts};
+use verde::graph::kernels::Backend;
+use verde::model::lora::llama_base_lora;
+use verde::model::Preset;
+use verde::tensor::profile::HardwareProfile;
+use verde::train::data::DataGen;
+use verde::util::bench::{overhead_pct, time_adaptive};
+
+fn main() {
+    println!("TAB2: Llama-8B stand-in (llama-base) + LoRA(r=8), profile A100-80G");
+    let (batch, seq) = (2usize, 32usize);
+    let model = llama_base_lora(8, batch, seq);
+    let opt = Optimizer::adam(1e-3);
+    let train = model.train_step(&opt);
+    let state = model.init_state(3, &opt);
+    let data = DataGen::new(Preset::LlamaBase, batch, seq, 5);
+    let b = data.batch(1);
+    let hw = HardwareProfile::A100_80G;
+    let budget = Duration::from_millis(1200);
+
+    let inf_rep = time_adaptive("inf rep", budget, 30, || {
+        execute(&model.builder.graph, &state, &b, Backend::Rep, 1, &ExecOpts::default())
+    });
+    let inf_free = time_adaptive("inf free", budget, 30, || {
+        execute(&model.builder.graph, &state, &b, Backend::Free(hw), 1, &ExecOpts::default())
+    });
+    let ft_rep = time_adaptive("ft rep", budget, 30, || {
+        execute(&train.graph, &state, &b, Backend::Rep, 1, &ExecOpts::default())
+    });
+    let ft_free = time_adaptive("ft free", budget, 30, || {
+        execute(&train.graph, &state, &b, Backend::Free(hw), 1, &ExecOpts::default())
+    });
+    let oi = overhead_pct(&inf_rep, &inf_free);
+    let of = overhead_pct(&ft_rep, &ft_free);
+    println!(
+        "  inference overhead: {oi:.1}%   (rep {:.1} ms vs free {:.1} ms)",
+        inf_rep.median_secs() * 1e3,
+        inf_free.median_secs() * 1e3
+    );
+    println!(
+        "  LoRA ft overhead:   {of:.1}%   (rep {:.1} ms vs free {:.1} ms)",
+        ft_rep.median_secs() * 1e3,
+        ft_free.median_secs() * 1e3
+    );
+    println!(
+        "JSON {{\"bench\":\"tab2\",\"infer_overhead_pct\":{oi:.2},\"lora_overhead_pct\":{of:.2}}}"
+    );
+    println!("\npaper reference (A100-80G): inference 98%, LoRA fine-tuning 126%");
+}

@@ -1,0 +1,534 @@
+//! Extended-graph construction (paper Figure 1): forward graph → forward +
+//! backward + optimizer-update nodes.
+//!
+//! "This extended graph can be implicitly derived from the computational
+//! graph representing the forward pass of the model … and an automatic
+//! differentiation library like autograd" (§2.2). This module is that
+//! autograd: reverse-mode VJP emission over the forward [`Graph`], followed
+//! by one optimizer-update node per learnable parameter. The "saved tensor"
+//! context edges of Figure 1 appear naturally: backward nodes consume the
+//! forward nodes' output slots directly.
+//!
+//! Gradient accumulation for fan-out is emitted as a fixed ascending-id
+//! chain of `Add` nodes, so the extended graph itself — not just its
+//! execution — is canonical across parties.
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::builder::GraphBuilder;
+use super::{Graph, InitKind, Op, Slot};
+use crate::tensor::Tensor;
+
+/// Optimizer choice for the update nodes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Optimizer {
+    Adam { lr: f32, beta1: f32, beta2: f32, eps: f32 },
+    Sgd { lr: f32 },
+}
+
+impl Optimizer {
+    pub fn adam(lr: f32) -> Optimizer {
+        Optimizer::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+
+    /// Names of the per-parameter optimizer-state tensors.
+    pub fn state_suffixes(&self) -> &'static [&'static str] {
+        match self {
+            Optimizer::Adam { .. } => &[".m", ".v"],
+            Optimizer::Sgd { .. } => &[],
+        }
+    }
+}
+
+/// A complete training-step program: the extended computational graph plus
+/// the slots where the next state is read from after execution.
+#[derive(Debug, Clone)]
+pub struct TrainStep {
+    pub graph: Graph,
+    /// Loss slot (scalar), for logging.
+    pub loss: Slot,
+    /// Parameter name → slot holding its updated value. Parameters absent
+    /// here are frozen (e.g. base weights under LoRA) and carry over.
+    pub param_updates: BTreeMap<String, Slot>,
+    /// Optimizer-state name (`"<param>.m"` / `"<param>.v"`) → updated slot.
+    pub opt_updates: BTreeMap<String, Slot>,
+    /// Gradient slot per trainable parameter (exposed for tests/inspection).
+    pub grads: BTreeMap<String, Slot>,
+    /// Number of nodes in the original forward prefix.
+    pub forward_len: usize,
+}
+
+/// Derive the extended training-step graph from a built forward pass.
+///
+/// * `builder` — the forward graph with static shapes.
+/// * `loss` — scalar forward slot to differentiate.
+/// * `opt` — optimizer applied to every parameter reached by gradients.
+/// * `freeze` — parameter names to exclude from updates (LoRA base weights).
+pub fn build_train_step(
+    builder: &GraphBuilder,
+    loss: Slot,
+    opt: &Optimizer,
+    freeze: &[&str],
+) -> TrainStep {
+    let mut g = builder.graph.clone();
+    let forward_len = g.len();
+    assert!(
+        builder.shape(loss).is_empty(),
+        "loss must be scalar, got {:?}",
+        builder.shape(loss)
+    );
+
+    // ---- which slots need gradients ------------------------------------
+    let mut requires = vec![false; forward_len];
+    for n in &builder.graph.nodes {
+        requires[n.id] = match &n.op {
+            Op::Init { kind: InitKind::Param, .. } => true,
+            Op::Init { .. } | Op::Const { .. } => false,
+            _ => n.inputs.iter().any(|s| requires[s.node]),
+        };
+    }
+
+    // ---- seed: d(loss)/d(loss) = 1 --------------------------------------
+    let one = g.push("grad.seed", Op::Const { value: Tensor::scalar(1.0) }, vec![]);
+
+    // pending[slot] = list of gradient contributions, ascending producer id
+    let mut pending: HashMap<Slot, Vec<Slot>> = HashMap::new();
+    pending.insert(loss, vec![Slot::new(one, 0)]);
+
+    // Combine contributions with a fixed-order Add chain.
+    fn combined(g: &mut Graph, pending: &mut HashMap<Slot, Vec<Slot>>, s: Slot) -> Option<Slot> {
+        let mut list = pending.remove(&s)?;
+        list.sort_by_key(|c| (c.node, c.out_idx));
+        let mut acc = list[0];
+        for c in &list[1..] {
+            let id = g.push("grad.acc", Op::Add, vec![acc, *c]);
+            acc = Slot::new(id, 0);
+        }
+        Some(acc)
+    }
+
+    let mut add = |pending: &mut HashMap<Slot, Vec<Slot>>, s: Slot, grad: Slot| {
+        pending.entry(s).or_default().push(grad);
+    };
+
+    // grads of parameter init nodes, discovered as we sweep
+    let mut param_grads: BTreeMap<String, Slot> = BTreeMap::new();
+
+    // ---- reverse sweep ----------------------------------------------------
+    for id in (0..forward_len).rev() {
+        let node = builder.graph.nodes[id].clone();
+        if !requires[id] {
+            continue;
+        }
+        // Only single-output forward ops are differentiable (grad/update ops
+        // never appear in a forward graph).
+        let dy = match combined(&mut g, &mut pending, Slot::new(id, 0)) {
+            Some(s) => s,
+            None => continue, // no path to the loss
+        };
+        let lbl = |suffix: &str| format!("d.{}.{}", node.label, suffix);
+        let ins = &node.inputs;
+        match &node.op {
+            Op::Init { kind: InitKind::Param, name } => {
+                param_grads.insert(name.clone(), dy);
+            }
+            Op::Init { .. } | Op::Const { .. } => {}
+
+            Op::Reshape { .. } => {
+                let orig = builder.shape(ins[0]).to_vec();
+                let r = g.push(lbl("reshape"), Op::Reshape { shape: orig }, vec![dy]);
+                add(&mut pending, ins[0], Slot::new(r, 0));
+            }
+            Op::Transpose2D => {
+                let r = g.push(lbl("t"), Op::Transpose2D, vec![dy]);
+                add(&mut pending, ins[0], Slot::new(r, 0));
+            }
+            Op::TransposeLast2 => {
+                let r = g.push(lbl("t"), Op::TransposeLast2, vec![dy]);
+                add(&mut pending, ins[0], Slot::new(r, 0));
+            }
+            Op::Perm0213 => {
+                let r = g.push(lbl("perm"), Op::Perm0213, vec![dy]);
+                add(&mut pending, ins[0], Slot::new(r, 0));
+            }
+            Op::Embedding => {
+                // inputs: (table, ids); ids get no grad
+                if requires[ins[0].node] {
+                    let vocab = builder.shape(ins[0])[0];
+                    let r = g.push(lbl("table"), Op::EmbeddingGrad { vocab }, vec![ins[1], dy]);
+                    add(&mut pending, ins[0], Slot::new(r, 0));
+                }
+            }
+            Op::Add => {
+                if requires[ins[0].node] {
+                    add(&mut pending, ins[0], dy);
+                }
+                if requires[ins[1].node] {
+                    add(&mut pending, ins[1], dy);
+                }
+            }
+            Op::Sub => {
+                if requires[ins[0].node] {
+                    add(&mut pending, ins[0], dy);
+                }
+                if requires[ins[1].node] {
+                    let r = g.push(lbl("neg"), Op::Scale { c: -1.0 }, vec![dy]);
+                    add(&mut pending, ins[1], Slot::new(r, 0));
+                }
+            }
+            Op::Mul => {
+                if requires[ins[0].node] {
+                    let r = g.push(lbl("a"), Op::Mul, vec![dy, ins[1]]);
+                    add(&mut pending, ins[0], Slot::new(r, 0));
+                }
+                if requires[ins[1].node] {
+                    let r = g.push(lbl("b"), Op::Mul, vec![dy, ins[0]]);
+                    add(&mut pending, ins[1], Slot::new(r, 0));
+                }
+            }
+            Op::AddBcast => {
+                if requires[ins[0].node] {
+                    add(&mut pending, ins[0], dy);
+                }
+                if requires[ins[1].node] {
+                    let suffix_rank = builder.shape(ins[1]).len();
+                    let r = g.push(lbl("b"), Op::SumLeading { suffix_rank }, vec![dy]);
+                    add(&mut pending, ins[1], Slot::new(r, 0));
+                }
+            }
+            Op::Scale { c } => {
+                let r = g.push(lbl("s"), Op::Scale { c: *c }, vec![dy]);
+                add(&mut pending, ins[0], Slot::new(r, 0));
+            }
+            Op::Gelu => {
+                let r = g.push(lbl("gelu"), Op::GeluGrad, vec![ins[0], dy]);
+                add(&mut pending, ins[0], Slot::new(r, 0));
+            }
+            Op::Silu => {
+                let r = g.push(lbl("silu"), Op::SiluGrad, vec![ins[0], dy]);
+                add(&mut pending, ins[0], Slot::new(r, 0));
+            }
+            Op::Relu => {
+                let r = g.push(lbl("relu"), Op::ReluGrad, vec![ins[0], dy]);
+                add(&mut pending, ins[0], Slot::new(r, 0));
+            }
+            Op::Tanh => {
+                // saved tensor: the forward output y
+                let r = g.push(lbl("tanh"), Op::TanhGrad, vec![Slot::new(id, 0), dy]);
+                add(&mut pending, ins[0], Slot::new(r, 0));
+            }
+            Op::MatMul => {
+                // da = dy @ bᵀ ; db = aᵀ @ dy
+                if requires[ins[0].node] {
+                    let bt = g.push(lbl("bt"), Op::Transpose2D, vec![ins[1]]);
+                    let r = g.push(lbl("a"), Op::MatMul, vec![dy, Slot::new(bt, 0)]);
+                    add(&mut pending, ins[0], Slot::new(r, 0));
+                }
+                if requires[ins[1].node] {
+                    let at = g.push(lbl("at"), Op::Transpose2D, vec![ins[0]]);
+                    let r = g.push(lbl("b"), Op::MatMul, vec![Slot::new(at, 0), dy]);
+                    add(&mut pending, ins[1], Slot::new(r, 0));
+                }
+            }
+            Op::BatchMatMul => {
+                if requires[ins[0].node] {
+                    let bt = g.push(lbl("bt"), Op::TransposeLast2, vec![ins[1]]);
+                    let r = g.push(lbl("a"), Op::BatchMatMul, vec![dy, Slot::new(bt, 0)]);
+                    add(&mut pending, ins[0], Slot::new(r, 0));
+                }
+                if requires[ins[1].node] {
+                    let at = g.push(lbl("at"), Op::TransposeLast2, vec![ins[0]]);
+                    let r = g.push(lbl("b"), Op::BatchMatMul, vec![Slot::new(at, 0), dy]);
+                    add(&mut pending, ins[1], Slot::new(r, 0));
+                }
+            }
+            Op::Softmax => {
+                let r = g.push(lbl("softmax"), Op::SoftmaxGrad, vec![Slot::new(id, 0), dy]);
+                add(&mut pending, ins[0], Slot::new(r, 0));
+            }
+            Op::LayerNorm { eps } => {
+                let r = g.push(
+                    lbl("ln"),
+                    Op::LayerNormGrad { eps: *eps },
+                    vec![ins[0], ins[1], dy],
+                );
+                if requires[ins[0].node] {
+                    add(&mut pending, ins[0], Slot::new(r, 0));
+                }
+                if requires[ins[1].node] {
+                    add(&mut pending, ins[1], Slot::new(r, 1));
+                }
+                if requires[ins[2].node] {
+                    add(&mut pending, ins[2], Slot::new(r, 2));
+                }
+            }
+            Op::RmsNorm { eps } => {
+                let r = g.push(
+                    lbl("rms"),
+                    Op::RmsNormGrad { eps: *eps },
+                    vec![ins[0], ins[1], dy],
+                );
+                if requires[ins[0].node] {
+                    add(&mut pending, ins[0], Slot::new(r, 0));
+                }
+                if requires[ins[1].node] {
+                    add(&mut pending, ins[1], Slot::new(r, 1));
+                }
+            }
+            Op::Rope => {
+                let r = g.push(lbl("rope"), Op::RopeGrad, vec![dy, ins[1], ins[2]]);
+                add(&mut pending, ins[0], Slot::new(r, 0));
+            }
+            Op::CeLoss => {
+                let r = g.push(lbl("ce"), Op::CeGrad, vec![ins[0], ins[1], dy]);
+                add(&mut pending, ins[0], Slot::new(r, 0));
+            }
+            other => panic!(
+                "op {} cannot appear in a forward graph",
+                other.mnemonic()
+            ),
+        }
+    }
+
+    // ---- optimizer update nodes -----------------------------------------
+    // One update node per trainable parameter, in forward declaration order
+    // (canonical across parties).
+    let mut param_updates = BTreeMap::new();
+    let mut opt_updates = BTreeMap::new();
+    for (pid, pname) in builder.graph.init_nodes(&InitKind::Param) {
+        if freeze.contains(&pname.as_str()) {
+            continue;
+        }
+        let grad = match param_grads.get(&pname) {
+            Some(s) => *s,
+            None => continue, // unreachable from loss → frozen implicitly
+        };
+        let w = Slot::new(pid, 0);
+        match opt {
+            Optimizer::Adam { lr, beta1, beta2, eps } => {
+                let m = g.push(
+                    format!("{pname}.m"),
+                    Op::Init { kind: InitKind::OptState, name: format!("{pname}.m") },
+                    vec![],
+                );
+                let v = g.push(
+                    format!("{pname}.v"),
+                    Op::Init { kind: InitKind::OptState, name: format!("{pname}.v") },
+                    vec![],
+                );
+                let u = g.push(
+                    format!("update.{pname}"),
+                    Op::AdamUpdate { lr: *lr, beta1: *beta1, beta2: *beta2, eps: *eps },
+                    vec![w, grad, Slot::new(m, 0), Slot::new(v, 0)],
+                );
+                param_updates.insert(pname.clone(), Slot::new(u, 0));
+                opt_updates.insert(format!("{pname}.m"), Slot::new(u, 1));
+                opt_updates.insert(format!("{pname}.v"), Slot::new(u, 2));
+            }
+            Optimizer::Sgd { lr } => {
+                let u = g.push(
+                    format!("update.{pname}"),
+                    Op::SgdUpdate { lr: *lr },
+                    vec![w, grad],
+                );
+                param_updates.insert(pname.clone(), Slot::new(u, 0));
+            }
+        }
+    }
+
+    g.validate().expect("extended graph invalid");
+    TrainStep { graph: g, loss, param_updates, opt_updates, grads: param_grads, forward_len }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::executor::{execute, ExecOpts, State};
+    use crate::graph::kernels::Backend;
+    use crate::tensor::repops;
+    use std::collections::BTreeMap;
+
+    /// loss = CE(gelu(x@w1 + b) @ w2, targets)
+    fn mlp_builder() -> (GraphBuilder, Slot) {
+        let mut b = GraphBuilder::new();
+        let x = b.data("x", [4, 8]);
+        let t = b.data("t", [4]);
+        let w1 = b.param("w1", [8, 16]);
+        let b1 = b.param("b1", [16]);
+        let w2 = b.param("w2", [16, 10]);
+        let h = b.matmul("fc1", x, w1);
+        let hb = b.add_bcast("bias1", h, b1);
+        let a = b.gelu("act", hb);
+        let logits = b.matmul("fc2", a, w2);
+        let loss = b.ce_loss("loss", logits, t);
+        (b, loss)
+    }
+
+    fn mlp_state(seed: u64) -> (State, BTreeMap<String, Tensor>) {
+        let mut st = State::default();
+        st.params.insert("w1".into(), Tensor::rand([8, 16], seed, 0.5));
+        st.params.insert("b1".into(), Tensor::rand([16], seed + 1, 0.1));
+        st.params.insert("w2".into(), Tensor::rand([16, 10], seed + 2, 0.5));
+        let mut batch = BTreeMap::new();
+        batch.insert(
+            "x".into(),
+            Tensor::rand([4, 8], seed + 3, 1.0),
+        );
+        batch.insert("t".into(), Tensor::new([4], vec![1.0, 3.0, 5.0, 9.0]));
+        (st, batch)
+    }
+
+    fn init_opt_state(st: &mut State, ts: &TrainStep) {
+        for name in ts.opt_updates.keys() {
+            let pname = name.rsplit_once('.').unwrap().0;
+            let shape = st.params[pname].shape().to_vec();
+            st.opt.insert(name.clone(), Tensor::zeros(shape));
+        }
+    }
+
+    #[test]
+    fn extended_graph_structure() {
+        let (b, loss) = mlp_builder();
+        let ts = build_train_step(&b, loss, &Optimizer::adam(1e-3), &[]);
+        assert_eq!(ts.param_updates.len(), 3);
+        assert_eq!(ts.opt_updates.len(), 6);
+        assert_eq!(ts.grads.len(), 3);
+        assert!(ts.graph.len() > b.graph.len());
+        ts.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn param_grads_match_finite_difference() {
+        let (b, loss) = mlp_builder();
+        let ts = build_train_step(&b, loss, &Optimizer::Sgd { lr: 0.1 }, &[]);
+        let (mut st, batch) = mlp_state(7);
+        init_opt_state(&mut st, &ts);
+        let e = execute(&ts.graph, &st, &batch, Backend::Rep, 1, &ExecOpts::default());
+        let loss_at = |st: &State| {
+            let e = execute(&ts.graph, st, &batch, Backend::Rep, 1, &ExecOpts::default());
+            e.values[ts.loss.node][0].data()[0]
+        };
+        for (pname, gslot) in &ts.grads {
+            let g = &e.values[gslot.node][gslot.out_idx];
+            // probe a few indices with central differences
+            for idx in [0, g.numel() / 2, g.numel() - 1] {
+                let h = 1e-2f32;
+                let mut stp = st.clone();
+                stp.params.get_mut(pname).unwrap().data_mut()[idx] += h;
+                let mut stm = st.clone();
+                stm.params.get_mut(pname).unwrap().data_mut()[idx] -= h;
+                let fd = (loss_at(&stp) - loss_at(&stm)) / (2.0 * h);
+                let got = g.data()[idx];
+                assert!(
+                    (got - fd).abs() < 2e-2_f32.max(fd.abs() * 0.1),
+                    "{pname}[{idx}]: analytic {got} vs fd {fd}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sgd_step_decreases_loss() {
+        let (b, loss) = mlp_builder();
+        let ts = build_train_step(&b, loss, &Optimizer::Sgd { lr: 0.05 }, &[]);
+        let (mut st, batch) = mlp_state(11);
+        init_opt_state(&mut st, &ts);
+        let mut losses = Vec::new();
+        for step in 1..=20u64 {
+            let e = execute(&ts.graph, &st, &batch, Backend::Rep, step, &ExecOpts::default());
+            losses.push(e.values[ts.loss.node][0].data()[0]);
+            let mut next = st.clone();
+            for (name, slot) in &ts.param_updates {
+                next.params.insert(name.clone(), e.values[slot.node][slot.out_idx].clone());
+            }
+            next.step += 1;
+            st = next;
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.8),
+            "loss should drop: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn adam_step_decreases_loss_and_updates_moments() {
+        let (b, loss) = mlp_builder();
+        let ts = build_train_step(&b, loss, &Optimizer::adam(0.01), &[]);
+        let (mut st, batch) = mlp_state(13);
+        init_opt_state(&mut st, &ts);
+        let mut first = None;
+        let mut last = 0.0;
+        for step in 1..=25u64 {
+            let e = execute(&ts.graph, &st, &batch, Backend::Rep, step, &ExecOpts::default());
+            last = e.values[ts.loss.node][0].data()[0];
+            first.get_or_insert(last);
+            let mut next = st.clone();
+            for (name, slot) in &ts.param_updates {
+                next.params.insert(name.clone(), e.values[slot.node][slot.out_idx].clone());
+            }
+            for (name, slot) in &ts.opt_updates {
+                next.opt.insert(name.clone(), e.values[slot.node][slot.out_idx].clone());
+            }
+            next.step += 1;
+            st = next;
+        }
+        assert!(last < first.unwrap() * 0.7, "adam: {first:?} -> {last}");
+        assert!(st.opt["w1.m"].data().iter().any(|&x| x != 0.0));
+        assert!(st.opt["w1.v"].data().iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn freeze_excludes_params() {
+        let (b, loss) = mlp_builder();
+        let ts = build_train_step(&b, loss, &Optimizer::adam(0.01), &["w1", "b1"]);
+        assert!(!ts.param_updates.contains_key("w1"));
+        assert!(!ts.param_updates.contains_key("b1"));
+        assert!(ts.param_updates.contains_key("w2"));
+        // frozen params need no optimizer state
+        assert!(!ts.opt_updates.contains_key("w1.m"));
+        assert_eq!(ts.opt_updates.len(), 2);
+    }
+
+    #[test]
+    fn fanout_grads_accumulate() {
+        // y = sum-ish over (w used twice): loss = CE((x@w) + (x@w), t)
+        let mut b = GraphBuilder::new();
+        let x = b.data("x", [2, 4]);
+        let t = b.data("t", [2]);
+        let w = b.param("w", [4, 6]);
+        let h1 = b.matmul("h1", x, w);
+        let h2 = b.matmul("h2", x, w);
+        let s = b.add("s", h1, h2);
+        let loss = b.ce_loss("loss", s, t);
+        let ts = build_train_step(&b, loss, &Optimizer::Sgd { lr: 0.1 }, &[]);
+        let mut st = State::default();
+        st.params.insert("w".into(), Tensor::rand([4, 6], 1, 0.5));
+        let mut batch = BTreeMap::new();
+        batch.insert("x".into(), Tensor::rand([2, 4], 2, 1.0));
+        batch.insert("t".into(), Tensor::new([2], vec![0.0, 3.0]));
+        let e = execute(&ts.graph, &st, &batch, Backend::Rep, 1, &ExecOpts::default());
+        let g = &e.values[ts.grads["w"].node][ts.grads["w"].out_idx];
+        // finite difference on one index
+        let loss_at = |st: &State| {
+            execute(&ts.graph, st, &batch, Backend::Rep, 1, &ExecOpts::default()).values
+                [ts.loss.node][0]
+                .data()[0]
+        };
+        let h = 1e-2f32;
+        let mut stp = st.clone();
+        stp.params.get_mut("w").unwrap().data_mut()[5] += h;
+        let mut stm = st.clone();
+        stm.params.get_mut("w").unwrap().data_mut()[5] -= h;
+        let fd = (loss_at(&stp) - loss_at(&stm)) / (2.0 * h);
+        assert!((g.data()[5] - fd).abs() < 2e-2, "{} vs {fd}", g.data()[5]);
+    }
+
+    #[test]
+    fn extended_graph_is_canonical() {
+        let (b1, l1) = mlp_builder();
+        let (b2, l2) = mlp_builder();
+        let t1 = build_train_step(&b1, l1, &Optimizer::adam(1e-3), &[]);
+        let t2 = build_train_step(&b2, l2, &Optimizer::adam(1e-3), &[]);
+        assert_eq!(t1.graph.structure_hash(), t2.graph.structure_hash());
+    }
+}

@@ -1,0 +1,291 @@
+//! Ergonomic forward-graph construction with static shape tracking.
+//!
+//! Model definitions ([`crate::model`]) build their forward pass through a
+//! [`GraphBuilder`], which checks shapes at build time (our stand-in for
+//! ONNX shape inference) and records the metadata [`super::autodiff`] needs
+//! to derive the extended training-step graph.
+
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+
+use super::{Graph, InitKind, NodeId, Op, Slot};
+
+/// Forward-graph builder with per-slot static shapes.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    pub graph: Graph,
+    /// `shapes[node][out_idx]` — static shape of every produced tensor.
+    pub shapes: Vec<Vec<Vec<usize>>>,
+    /// Declared parameter shapes, in declaration order.
+    pub param_shapes: Vec<(String, Vec<usize>)>,
+    /// Declared data-input shapes.
+    pub data_shapes: BTreeMap<String, Vec<usize>>,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn shape(&self, s: Slot) -> &[usize] {
+        &self.shapes[s.node][s.out_idx]
+    }
+
+    fn push(&mut self, label: impl Into<String>, op: Op, inputs: Vec<Slot>, out_shapes: Vec<Vec<usize>>) -> NodeId {
+        let id = self.graph.push(label, op, inputs);
+        debug_assert_eq!(id, self.shapes.len());
+        self.shapes.push(out_shapes);
+        id
+    }
+
+    // ---- leaves -----------------------------------------------------------
+
+    /// Declare a training-data input.
+    pub fn data(&mut self, name: &str, shape: impl Into<Vec<usize>>) -> Slot {
+        let shape = shape.into();
+        self.data_shapes.insert(name.to_string(), shape.clone());
+        let id = self.push(
+            name,
+            Op::Init { kind: InitKind::Data, name: name.to_string() },
+            vec![],
+            vec![shape],
+        );
+        Slot::new(id, 0)
+    }
+
+    /// Declare a learnable parameter.
+    pub fn param(&mut self, name: &str, shape: impl Into<Vec<usize>>) -> Slot {
+        let shape = shape.into();
+        assert!(
+            !self.param_shapes.iter().any(|(n, _)| n == name),
+            "duplicate param '{name}'"
+        );
+        self.param_shapes.push((name.to_string(), shape.clone()));
+        let id = self.push(
+            name,
+            Op::Init { kind: InitKind::Param, name: name.to_string() },
+            vec![],
+            vec![shape],
+        );
+        Slot::new(id, 0)
+    }
+
+    /// Bake a constant tensor into the program.
+    pub fn constant(&mut self, label: &str, value: Tensor) -> Slot {
+        let shape = value.shape().to_vec();
+        let id = self.push(label, Op::Const { value }, vec![], vec![shape]);
+        Slot::new(id, 0)
+    }
+
+    // ---- ops ---------------------------------------------------------------
+
+    pub fn matmul(&mut self, label: &str, a: Slot, b: Slot) -> Slot {
+        let (sa, sb) = (self.shape(a).to_vec(), self.shape(b).to_vec());
+        assert_eq!(sa.len(), 2, "{label}: matmul lhs {sa:?}");
+        assert_eq!(sb.len(), 2, "{label}: matmul rhs {sb:?}");
+        assert_eq!(sa[1], sb[0], "{label}: matmul {sa:?} x {sb:?}");
+        let id = self.push(label, Op::MatMul, vec![a, b], vec![vec![sa[0], sb[1]]]);
+        Slot::new(id, 0)
+    }
+
+    pub fn bmm(&mut self, label: &str, a: Slot, b: Slot) -> Slot {
+        let (sa, sb) = (self.shape(a).to_vec(), self.shape(b).to_vec());
+        assert_eq!(sa.len(), 3, "{label}: bmm lhs {sa:?}");
+        assert_eq!(sb.len(), 3, "{label}: bmm rhs {sb:?}");
+        assert_eq!(sa[0], sb[0], "{label}: bmm batch {sa:?} x {sb:?}");
+        assert_eq!(sa[2], sb[1], "{label}: bmm inner {sa:?} x {sb:?}");
+        let id = self.push(label, Op::BatchMatMul, vec![a, b], vec![vec![sa[0], sa[1], sb[2]]]);
+        Slot::new(id, 0)
+    }
+
+    pub fn transpose2d(&mut self, label: &str, x: Slot) -> Slot {
+        let s = self.shape(x).to_vec();
+        assert_eq!(s.len(), 2);
+        let id = self.push(label, Op::Transpose2D, vec![x], vec![vec![s[1], s[0]]]);
+        Slot::new(id, 0)
+    }
+
+    pub fn transpose_last2(&mut self, label: &str, x: Slot) -> Slot {
+        let s = self.shape(x).to_vec();
+        assert_eq!(s.len(), 3);
+        let id = self.push(label, Op::TransposeLast2, vec![x], vec![vec![s[0], s[2], s[1]]]);
+        Slot::new(id, 0)
+    }
+
+    pub fn perm0213(&mut self, label: &str, x: Slot) -> Slot {
+        let s = self.shape(x).to_vec();
+        assert_eq!(s.len(), 4);
+        let id = self.push(label, Op::Perm0213, vec![x], vec![vec![s[0], s[2], s[1], s[3]]]);
+        Slot::new(id, 0)
+    }
+
+    pub fn reshape(&mut self, label: &str, x: Slot, shape: impl Into<Vec<usize>>) -> Slot {
+        let shape = shape.into();
+        let from: usize = self.shape(x).iter().product();
+        let to: usize = shape.iter().product();
+        assert_eq!(from, to, "{label}: reshape {:?} -> {shape:?}", self.shape(x));
+        let id = self.push(label, Op::Reshape { shape: shape.clone() }, vec![x], vec![shape]);
+        Slot::new(id, 0)
+    }
+
+    fn binary_same(&mut self, label: &str, op: Op, a: Slot, b: Slot) -> Slot {
+        assert_eq!(self.shape(a), self.shape(b), "{label}: {op:?} shape mismatch");
+        let s = self.shape(a).to_vec();
+        let id = self.push(label, op, vec![a, b], vec![s]);
+        Slot::new(id, 0)
+    }
+
+    pub fn add(&mut self, label: &str, a: Slot, b: Slot) -> Slot {
+        self.binary_same(label, Op::Add, a, b)
+    }
+
+    pub fn sub(&mut self, label: &str, a: Slot, b: Slot) -> Slot {
+        self.binary_same(label, Op::Sub, a, b)
+    }
+
+    pub fn mul(&mut self, label: &str, a: Slot, b: Slot) -> Slot {
+        self.binary_same(label, Op::Mul, a, b)
+    }
+
+    /// `a + b`, `b`'s shape a suffix of `a`'s (bias / mask add).
+    pub fn add_bcast(&mut self, label: &str, a: Slot, b: Slot) -> Slot {
+        let (sa, sb) = (self.shape(a).to_vec(), self.shape(b).to_vec());
+        assert!(sb.len() <= sa.len() && sa[sa.len() - sb.len()..] == sb[..],
+            "{label}: add_bcast {sa:?} + {sb:?}");
+        let id = self.push(label, Op::AddBcast, vec![a, b], vec![sa]);
+        Slot::new(id, 0)
+    }
+
+    pub fn scale(&mut self, label: &str, x: Slot, c: f32) -> Slot {
+        let s = self.shape(x).to_vec();
+        let id = self.push(label, Op::Scale { c }, vec![x], vec![s]);
+        Slot::new(id, 0)
+    }
+
+    fn unary(&mut self, label: &str, op: Op, x: Slot) -> Slot {
+        let s = self.shape(x).to_vec();
+        let id = self.push(label, op, vec![x], vec![s]);
+        Slot::new(id, 0)
+    }
+
+    pub fn gelu(&mut self, label: &str, x: Slot) -> Slot {
+        self.unary(label, Op::Gelu, x)
+    }
+
+    pub fn silu(&mut self, label: &str, x: Slot) -> Slot {
+        self.unary(label, Op::Silu, x)
+    }
+
+    pub fn relu(&mut self, label: &str, x: Slot) -> Slot {
+        self.unary(label, Op::Relu, x)
+    }
+
+    pub fn tanh(&mut self, label: &str, x: Slot) -> Slot {
+        self.unary(label, Op::Tanh, x)
+    }
+
+    pub fn softmax(&mut self, label: &str, x: Slot) -> Slot {
+        self.unary(label, Op::Softmax, x)
+    }
+
+    pub fn layernorm(&mut self, label: &str, x: Slot, gamma: Slot, beta: Slot, eps: f32) -> Slot {
+        let n = *self.shape(x).last().unwrap();
+        assert_eq!(self.shape(gamma), [n], "{label}: gamma");
+        assert_eq!(self.shape(beta), [n], "{label}: beta");
+        let s = self.shape(x).to_vec();
+        let id = self.push(label, Op::LayerNorm { eps }, vec![x, gamma, beta], vec![s]);
+        Slot::new(id, 0)
+    }
+
+    pub fn rmsnorm(&mut self, label: &str, x: Slot, gamma: Slot, eps: f32) -> Slot {
+        let n = *self.shape(x).last().unwrap();
+        assert_eq!(self.shape(gamma), [n], "{label}: gamma");
+        let s = self.shape(x).to_vec();
+        let id = self.push(label, Op::RmsNorm { eps }, vec![x, gamma], vec![s]);
+        Slot::new(id, 0)
+    }
+
+    pub fn rope(&mut self, label: &str, x: Slot, sin: Slot, cos: Slot) -> Slot {
+        let s = self.shape(x).to_vec();
+        assert_eq!(s.len(), 3, "{label}: rope wants [n,s,d]");
+        assert_eq!(self.shape(sin), [s[1], s[2] / 2], "{label}: sin table");
+        assert_eq!(self.shape(cos), [s[1], s[2] / 2], "{label}: cos table");
+        let id = self.push(label, Op::Rope, vec![x, sin, cos], vec![s]);
+        Slot::new(id, 0)
+    }
+
+    pub fn embedding(&mut self, label: &str, table: Slot, ids: Slot) -> Slot {
+        let ts = self.shape(table).to_vec();
+        assert_eq!(ts.len(), 2, "{label}: embedding table {ts:?}");
+        let mut out = self.shape(ids).to_vec();
+        out.push(ts[1]);
+        let id = self.push(label, Op::Embedding, vec![table, ids], vec![out]);
+        Slot::new(id, 0)
+    }
+
+    /// Mean cross-entropy: logits `[r, v]`, integer targets `[r]` → scalar.
+    pub fn ce_loss(&mut self, label: &str, logits: Slot, targets: Slot) -> Slot {
+        let ls = self.shape(logits).to_vec();
+        assert_eq!(ls.len(), 2, "{label}: logits {ls:?}");
+        assert_eq!(self.shape(targets), [ls[0]], "{label}: targets");
+        let id = self.push(label, Op::CeLoss, vec![logits, targets], vec![vec![]]);
+        Slot::new(id, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_tracks_shapes() {
+        let mut b = GraphBuilder::new();
+        let x = b.data("x", [2, 8]);
+        let w = b.param("w", [8, 4]);
+        let h = b.matmul("mm", x, w);
+        assert_eq!(b.shape(h), &[2, 4]);
+        let g = b.gelu("act", h);
+        assert_eq!(b.shape(g), &[2, 4]);
+        let r = b.reshape("r", g, [8]);
+        assert_eq!(b.shape(r), &[8]);
+        b.graph.validate().unwrap();
+        assert_eq!(b.param_shapes.len(), 1);
+        assert_eq!(b.data_shapes["x"], vec![2, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul")]
+    fn rejects_shape_mismatch() {
+        let mut b = GraphBuilder::new();
+        let x = b.data("x", [2, 8]);
+        let w = b.param("w", [4, 4]);
+        b.matmul("mm", x, w);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate param")]
+    fn rejects_duplicate_param() {
+        let mut b = GraphBuilder::new();
+        b.param("w", [2, 2]);
+        b.param("w", [2, 2]);
+    }
+
+    #[test]
+    fn attention_shape_pipeline() {
+        // the shape gymnastics attention needs, end to end
+        let (bs, s, h, dh) = (2usize, 4usize, 2usize, 6usize);
+        let d = h * dh;
+        let mut b = GraphBuilder::new();
+        let x = b.data("x", [bs * s, d]);
+        let wq = b.param("wq", [d, d]);
+        let q = b.matmul("q", x, wq);
+        let q4 = b.reshape("q4", q, [bs, s, h, dh]);
+        let qh = b.perm0213("qh", q4);
+        assert_eq!(b.shape(qh), &[bs, h, s, dh]);
+        let q3 = b.reshape("q3", qh, [bs * h, s, dh]);
+        let kt = b.transpose_last2("kt", q3);
+        assert_eq!(b.shape(kt), &[bs * h, dh, s]);
+        let scores = b.bmm("scores", q3, kt);
+        assert_eq!(b.shape(scores), &[bs * h, s, s]);
+    }
+}

@@ -1,0 +1,461 @@
+//! Node-by-node graph execution with AugmentedCGNode recording.
+//!
+//! This is the trainer's engine: it materializes `Init` nodes from the
+//! checkpoint state / data batch, runs every operator through
+//! [`kernels::run_op`], and (when asked) records the per-node commitment
+//! objects — the `AugmentedCGNode`s of paper §2.2 — whose hash sequence
+//! forms the step checkpoint (Figure 2).
+
+use std::collections::BTreeMap;
+
+use crate::hash::{hash_tensor, merkle::MerkleTree, Hash, Hasher};
+use crate::tensor::Tensor;
+
+use super::kernels::{run_op, Backend};
+use super::{Graph, InitKind, NodeId, Op};
+
+// ---------------------------------------------------------------------------
+// state
+// ---------------------------------------------------------------------------
+
+/// The training-program state machine's state (paper §2.1): learnable
+/// parameters plus optimizer state, after `step` completed steps.
+/// `BTreeMap` gives every party the same canonical ordering.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct State {
+    pub step: u64,
+    pub params: BTreeMap<String, Tensor>,
+    pub opt: BTreeMap<String, Tensor>,
+}
+
+impl State {
+    /// Canonical leaf list: `(domain-separated name, tensor hash)` for every
+    /// state tensor, params first then optimizer state, name-ascending.
+    pub fn leaf_hashes(&self) -> Vec<Hash> {
+        let mut out = Vec::with_capacity(self.params.len() + self.opt.len());
+        for (name, t) in &self.params {
+            let mut h = Hasher::new("verde.state-leaf.param.v1");
+            h.str(name);
+            let th = hash_tensor(t);
+            h.hash(&th);
+            out.push(h.finish());
+        }
+        for (name, t) in &self.opt {
+            let mut h = Hasher::new("verde.state-leaf.opt.v1");
+            h.str(name);
+            let th = hash_tensor(t);
+            h.hash(&th);
+            out.push(h.finish());
+        }
+        out
+    }
+
+    /// Index of a state tensor's leaf within [`State::leaf_hashes`].
+    pub fn leaf_index(&self, kind: &InitKind, name: &str) -> Option<usize> {
+        match kind {
+            InitKind::Param => self.params.keys().position(|k| k == name),
+            InitKind::OptState => {
+                self.opt.keys().position(|k| k == name).map(|i| i + self.params.len())
+            }
+            InitKind::Data => None,
+        }
+    }
+
+    /// The initial checkpoint commitment `C_0`: a Merkle tree over the state
+    /// leaves (there is no producing step yet). Per-step checkpoints are
+    /// instead committed via their node-hash trees ([`StepTrace::commit`]).
+    pub fn genesis_commitment(&self) -> MerkleTree {
+        MerkleTree::build(&self.leaf_hashes())
+    }
+
+    /// Total FP32 payload size (storage accounting for §2.1 cost analysis).
+    pub fn byte_len(&self) -> usize {
+        self.params.values().map(Tensor::byte_len).sum::<usize>()
+            + self.opt.values().map(Tensor::byte_len).sum::<usize>()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AugmentedCGNode
+// ---------------------------------------------------------------------------
+
+/// The paper's per-node commitment object (§2.2): graph structure (wiring +
+/// operator + attributes, folded into `structure`) plus the hashes of every
+/// tensor flowing in and out.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AugmentedCGNode {
+    pub id: NodeId,
+    /// `Graph::node_structure_hash(id)` — commits inputs wiring, operator,
+    /// attributes.
+    pub structure: Hash,
+    pub input_hashes: Vec<Hash>,
+    pub output_hashes: Vec<Hash>,
+}
+
+impl AugmentedCGNode {
+    /// The node hash exchanged in Phase 2 (Algorithm 2 lines 4–5).
+    pub fn commit(&self) -> Hash {
+        let mut h = Hasher::new("verde.augnode.v1");
+        h.u64(self.id as u64);
+        h.hash(&self.structure);
+        h.u64(self.input_hashes.len() as u64);
+        for ih in &self.input_hashes {
+            h.hash(ih);
+        }
+        h.u64(self.output_hashes.len() as u64);
+        for oh in &self.output_hashes {
+            h.hash(oh);
+        }
+        h.finish()
+    }
+
+    /// Wire size (communication accounting).
+    pub fn byte_len(&self) -> usize {
+        8 + 32 + 32 * (self.input_hashes.len() + self.output_hashes.len()) + 16
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trace
+// ---------------------------------------------------------------------------
+
+/// Everything a trainer records about one executed training step.
+#[derive(Debug, Clone)]
+pub struct StepTrace {
+    /// 1-based index of the step this trace executed.
+    pub step: u64,
+    pub nodes: Vec<AugmentedCGNode>,
+    /// `nodes[i].commit()`, cached.
+    pub node_hashes: Vec<Hash>,
+    /// Full output tensors per node — kept only during dispute re-execution
+    /// (`ExecOpts::keep_values`), not during normal training.
+    pub values: Option<Vec<Vec<Tensor>>>,
+}
+
+impl StepTrace {
+    /// The checkpoint commitment after this step: Merkle tree whose leaves
+    /// are the step's node hashes (paper Figure 2). Verified against the
+    /// Phase 2 hash sequence in Algorithm 2 line 7.
+    pub fn commit(&self) -> MerkleTree {
+        MerkleTree::build(&self.node_hashes)
+    }
+
+    pub fn root(&self) -> Hash {
+        self.commit().root()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// execution
+// ---------------------------------------------------------------------------
+
+/// A mutation applied to a node's freshly-computed outputs — the fault
+/// injection hook dishonest trainers use ([`crate::verde::faults`]).
+/// Receives `(node id, node inputs, outputs-to-mutate)`.
+pub type TamperFn<'a> = &'a dyn Fn(NodeId, &[&Tensor], &mut Vec<Tensor>);
+
+/// A substitution applied to a node's *input* tensor before compute and
+/// hashing — models a trainer that feeds an operator a value its upstream
+/// never produced (the forged-lineage fault, referee Case 2b).
+/// Receives `(consumer node id, input index, true tensor)`.
+pub type InputSwapFn<'a> = &'a dyn Fn(NodeId, usize, &Tensor) -> Option<Tensor>;
+
+/// Execution options.
+#[derive(Default)]
+pub struct ExecOpts<'a> {
+    /// Record AugmentedCGNodes (hashing every edge tensor). Off on the fast
+    /// honest path except at checkpoint steps; on during dispute.
+    pub record_trace: bool,
+    /// Retain all node output tensors in the trace (dispute re-execution).
+    pub keep_values: bool,
+    /// Fault injection (dishonest trainers only).
+    pub tamper: Option<TamperFn<'a>>,
+    /// Input substitution (dishonest trainers only).
+    pub input_swap: Option<InputSwapFn<'a>>,
+}
+
+/// Result of executing a graph.
+pub struct Execution {
+    /// Output tensors per node (always present during execution; pruned to
+    /// requested outputs unless `keep_values`).
+    pub values: Vec<Vec<Tensor>>,
+    pub trace: Option<Vec<AugmentedCGNode>>,
+}
+
+/// Per-op-mnemonic wall-time accumulator (enabled by `VERDE_PROFILE=1`) —
+/// the whole-stack profiling hook of the §Perf pass.
+#[derive(Debug, Default)]
+pub struct OpProfile {
+    pub by_op: std::collections::BTreeMap<&'static str, (u64, std::time::Duration)>,
+}
+
+impl OpProfile {
+    pub fn report(&self) -> String {
+        let mut rows: Vec<_> = self.by_op.iter().collect();
+        rows.sort_by_key(|(_, (_, d))| std::cmp::Reverse(*d));
+        let total: std::time::Duration = self.by_op.values().map(|(_, d)| *d).sum();
+        let mut s = format!("total {total:?}\n");
+        for (op, (n, d)) in rows.into_iter().take(12) {
+            s.push_str(&format!(
+                "  {:<16} {:>8} calls {:>12?} ({:>4.1}%)\n",
+                op,
+                n,
+                d,
+                100.0 * d.as_secs_f64() / total.as_secs_f64()
+            ));
+        }
+        s
+    }
+}
+
+static PROFILE_ENABLED: once_cell::sync::Lazy<bool> =
+    once_cell::sync::Lazy::new(|| std::env::var_os("VERDE_PROFILE").is_some());
+static PROFILE: std::sync::Mutex<Option<OpProfile>> = std::sync::Mutex::new(None);
+
+/// Take and reset the global op profile (used with `VERDE_PROFILE=1`).
+pub fn take_profile() -> Option<OpProfile> {
+    PROFILE.lock().unwrap().take()
+}
+
+/// Execute `graph` with `Init` nodes fed from `state` (params/opt) and
+/// `batch` (data tensors by name). `step_t` is the 1-based step index.
+pub fn execute(
+    graph: &Graph,
+    state: &State,
+    batch: &BTreeMap<String, Tensor>,
+    backend: Backend,
+    step_t: u64,
+    opts: &ExecOpts,
+) -> Execution {
+    let mut values: Vec<Vec<Tensor>> = Vec::with_capacity(graph.len());
+    let mut trace = if opts.record_trace { Some(Vec::with_capacity(graph.len())) } else { None };
+
+    for node in &graph.nodes {
+        // 1. materialize inputs (possibly substituted by a dishonest swap)
+        let swapped: Vec<Option<Tensor>> = node
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(j, s)| {
+                opts.input_swap
+                    .and_then(|f| f(node.id, j, &values[s.node][s.out_idx]))
+            })
+            .collect();
+        let inputs: Vec<&Tensor> = node
+            .inputs
+            .iter()
+            .zip(&swapped)
+            .map(|(s, sw)| sw.as_ref().unwrap_or(&values[s.node][s.out_idx]))
+            .collect();
+
+        // 2. compute
+        let op_t0 = if *PROFILE_ENABLED { Some(std::time::Instant::now()) } else { None };
+        let mut outs: Vec<Tensor> = match &node.op {
+            Op::Init { kind, name } => {
+                let t = match kind {
+                    InitKind::Param => state.params.get(name).unwrap_or_else(|| {
+                        panic!("param '{name}' missing from state")
+                    }),
+                    InitKind::OptState => state.opt.get(name).unwrap_or_else(|| {
+                        panic!("optimizer state '{name}' missing from state")
+                    }),
+                    InitKind::Data => batch.get(name).unwrap_or_else(|| {
+                        panic!("data tensor '{name}' missing from batch")
+                    }),
+                };
+                vec![t.clone()]
+            }
+            op => run_op(op, &inputs, backend, step_t),
+        };
+        debug_assert_eq!(outs.len(), node.op.n_outputs());
+        if let Some(t0) = op_t0 {
+            let mut guard = PROFILE.lock().unwrap();
+            let prof = guard.get_or_insert_with(OpProfile::default);
+            let e = prof.by_op.entry(node.op.mnemonic()).or_insert((0, std::time::Duration::ZERO));
+            e.0 += 1;
+            e.1 += t0.elapsed();
+        }
+
+        // 3. fault injection
+        if let Some(tamper) = opts.tamper {
+            tamper(node.id, &inputs, &mut outs);
+        }
+
+        // 4. record the AugmentedCGNode — the cheater hashes the inputs it
+        //    actually used, so its lie is internally consistent
+        if let Some(tr) = trace.as_mut() {
+            let input_hashes = inputs.iter().map(|t| hash_tensor(t)).collect();
+            let output_hashes = outs.iter().map(hash_tensor).collect();
+            tr.push(AugmentedCGNode {
+                id: node.id,
+                structure: graph.node_structure_hash(node.id),
+                input_hashes,
+                output_hashes,
+            });
+        }
+
+        values.push(outs);
+    }
+
+    Execution { values, trace }
+}
+
+/// Convenience: execute and build the [`StepTrace`] (dispute path).
+pub fn execute_traced(
+    graph: &Graph,
+    state: &State,
+    batch: &BTreeMap<String, Tensor>,
+    backend: Backend,
+    step_t: u64,
+    keep_values: bool,
+    tamper: Option<TamperFn>,
+) -> (Execution, StepTrace) {
+    execute_traced_swap(graph, state, batch, backend, step_t, keep_values, tamper, None)
+}
+
+/// [`execute_traced`] with an optional dishonest input substitution.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_traced_swap(
+    graph: &Graph,
+    state: &State,
+    batch: &BTreeMap<String, Tensor>,
+    backend: Backend,
+    step_t: u64,
+    keep_values: bool,
+    tamper: Option<TamperFn>,
+    input_swap: Option<InputSwapFn>,
+) -> (Execution, StepTrace) {
+    let opts = ExecOpts { record_trace: true, keep_values, tamper, input_swap };
+    let exec = execute(graph, state, batch, backend, step_t, &opts);
+    let nodes = exec.trace.clone().expect("trace requested");
+    let node_hashes = nodes.iter().map(AugmentedCGNode::commit).collect();
+    let values = if keep_values { Some(exec.values.clone()) } else { None };
+    let trace = StepTrace { step: step_t, nodes, node_hashes, values };
+    (exec, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Op, Slot};
+    use crate::tensor::profile::HardwareProfile;
+
+    /// y = gelu(x @ w); loss-free toy graph.
+    fn toy() -> (Graph, State, BTreeMap<String, Tensor>) {
+        let mut g = Graph::new();
+        let x = g.push("x", Op::Init { kind: InitKind::Data, name: "x".into() }, vec![]);
+        let w = g.push("w", Op::Init { kind: InitKind::Param, name: "w".into() }, vec![]);
+        let mm = g.push("mm", Op::MatMul, vec![Slot::new(x, 0), Slot::new(w, 0)]);
+        g.push("act", Op::Gelu, vec![Slot::new(mm, 0)]);
+        let mut state = State::default();
+        state.params.insert("w".into(), Tensor::rand([4, 3], 1, 1.0));
+        let mut batch = BTreeMap::new();
+        batch.insert("x".into(), Tensor::rand([2, 4], 2, 1.0));
+        (g, state, batch)
+    }
+
+    #[test]
+    fn execute_produces_expected_values() {
+        let (g, state, batch) = toy();
+        let e = execute(&g, &state, &batch, Backend::Rep, 1, &ExecOpts::default());
+        assert_eq!(e.values.len(), 4);
+        let want = crate::tensor::repops::gelu(&crate::tensor::repops::matmul(
+            &batch["x"],
+            &state.params["w"],
+        ));
+        assert!(e.values[3][0].bit_eq(&want));
+        assert!(e.trace.is_none());
+    }
+
+    #[test]
+    fn trace_hashes_match_recomputation() {
+        let (g, state, batch) = toy();
+        let (_, t1) = execute_traced(&g, &state, &batch, Backend::Rep, 1, false, None);
+        let (_, t2) = execute_traced(&g, &state, &batch, Backend::Rep, 1, false, None);
+        assert_eq!(t1.node_hashes, t2.node_hashes, "deterministic trace");
+        assert_eq!(t1.root(), t2.root());
+        assert_eq!(t1.nodes.len(), 4);
+        // input hashes of mm node reference x and w payloads
+        assert_eq!(t1.nodes[2].input_hashes[0], hash_tensor(&batch["x"]));
+        assert_eq!(t1.nodes[2].input_hashes[1], hash_tensor(&state.params["w"]));
+    }
+
+    #[test]
+    fn tamper_changes_exactly_downstream_hashes() {
+        let (g, state, batch) = toy();
+        let (_, honest) = execute_traced(&g, &state, &batch, Backend::Rep, 1, false, None);
+        let tamper = |id: NodeId, _ins: &[&Tensor], outs: &mut Vec<Tensor>| {
+            if id == 2 {
+                outs[0].data_mut()[0] += 1.0;
+            }
+        };
+        let (_, bad) = execute_traced(&g, &state, &batch, Backend::Rep, 1, false, Some(&tamper));
+        assert_eq!(honest.node_hashes[0], bad.node_hashes[0]);
+        assert_eq!(honest.node_hashes[1], bad.node_hashes[1]);
+        assert_ne!(honest.node_hashes[2], bad.node_hashes[2], "tampered node");
+        assert_ne!(honest.node_hashes[3], bad.node_hashes[3], "downstream");
+        assert_ne!(honest.root(), bad.root());
+        // and the first divergence is exactly node 2
+        let d = honest
+            .node_hashes
+            .iter()
+            .zip(&bad.node_hashes)
+            .position(|(a, b)| a != b);
+        assert_eq!(d, Some(2));
+    }
+
+    #[test]
+    fn backends_diverge_on_trace_but_are_self_consistent() {
+        let (g, state, batch) = toy();
+        let (_, rep) = execute_traced(&g, &state, &batch, Backend::Rep, 1, false, None);
+        let (_, t4) = execute_traced(
+            &g,
+            &state,
+            &batch,
+            Backend::Free(HardwareProfile::T4_16G),
+            1,
+            false,
+            None,
+        );
+        let (_, t4b) = execute_traced(
+            &g,
+            &state,
+            &batch,
+            Backend::Free(HardwareProfile::T4_16G),
+            1,
+            false,
+            None,
+        );
+        assert_eq!(t4.node_hashes, t4b.node_hashes);
+        // Init nodes agree between backends; compute nodes may differ.
+        assert_eq!(rep.node_hashes[0], t4.node_hashes[0]);
+        assert_eq!(rep.node_hashes[1], t4.node_hashes[1]);
+    }
+
+    #[test]
+    fn state_leaf_index_and_genesis() {
+        let mut state = State::default();
+        state.params.insert("b".into(), Tensor::zeros([2]));
+        state.params.insert("a".into(), Tensor::zeros([2]));
+        state.opt.insert("a.m".into(), Tensor::zeros([2]));
+        let leaves = state.leaf_hashes();
+        assert_eq!(leaves.len(), 3);
+        assert_eq!(state.leaf_index(&InitKind::Param, "a"), Some(0));
+        assert_eq!(state.leaf_index(&InitKind::Param, "b"), Some(1));
+        assert_eq!(state.leaf_index(&InitKind::OptState, "a.m"), Some(2));
+        assert_eq!(state.leaf_index(&InitKind::Param, "zz"), None);
+        let tree = state.genesis_commitment();
+        assert_eq!(tree.leaf_count(), 3);
+        // membership proof of param "a" verifies
+        let p = tree.prove(0);
+        assert!(MerkleTree::verify(&tree.root(), &leaves[0], &p));
+    }
+
+    #[test]
+    #[should_panic(expected = "missing from state")]
+    fn missing_param_panics() {
+        let (g, _, batch) = toy();
+        let state = State::default();
+        execute(&g, &state, &batch, Backend::Rep, 1, &ExecOpts::default());
+    }
+}

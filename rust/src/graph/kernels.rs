@@ -1,0 +1,733 @@
+//! Operator execution: maps each [`Op`] onto the RepOps or baseline tensor
+//! kernels, under a chosen [`Backend`].
+//!
+//! `Backend::Rep` is the paper's RepOps path — bitwise identical on every
+//! host. `Backend::Free(profile)` is the "ordinary tuned library" path whose
+//! reduction order follows the simulated hardware profile; running the same
+//! program under two different profiles is how the test-suite (and the
+//! `NonRepHardware` fault) reproduces cross-hardware divergence.
+
+use crate::tensor::baseline;
+use crate::tensor::math;
+use crate::tensor::profile::HardwareProfile;
+use crate::tensor::repops;
+use crate::tensor::Tensor;
+
+use super::{InitKind, Op};
+
+/// Which operator family executes the graph.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Backend {
+    /// RepOps: fixed FP order, hardware-independent bits (paper §3).
+    Rep,
+    /// Free-order tuned kernels on the given simulated device.
+    Free(HardwareProfile),
+}
+
+impl Backend {
+    pub fn describe(&self) -> String {
+        match self {
+            Backend::Rep => "repops".to_string(),
+            Backend::Free(hw) => format!("free[{}]", hw.name),
+        }
+    }
+
+    /// The scalar sum this backend uses for order-sensitive row reductions.
+    #[inline]
+    fn sum(&self, xs: &[f32]) -> f32 {
+        match self {
+            Backend::Rep => repops::sum_slice(xs),
+            Backend::Free(hw) => baseline::sum_slice(xs, hw),
+        }
+    }
+
+    #[inline]
+    fn exp(&self, x: f32) -> f32 {
+        match self {
+            Backend::Rep => math::rep_exp(x),
+            Backend::Free(_) => x.exp(),
+        }
+    }
+}
+
+/// Fixed-order integer power (RepOps never calls `powf`).
+fn pow_fixed(base: f32, exp: u64) -> f32 {
+    let mut r = 1.0f32;
+    for _ in 0..exp {
+        r *= base;
+    }
+    r
+}
+
+/// Execute one operator. `step_t` is the 1-based training-step index (used
+/// by Adam bias correction). `Init` nodes are materialized by the executor,
+/// not here.
+///
+/// # Panics
+/// On shape mismatches (the executor converts these into protocol-visible
+/// execution failures) and on `Init` ops.
+pub fn run_op(op: &Op, inputs: &[&Tensor], backend: Backend, step_t: u64) -> Vec<Tensor> {
+    match op {
+        Op::Init { .. } => panic!("Init nodes are materialized by the executor"),
+        Op::Const { value } => vec![value.clone()],
+
+        // ---- movement -------------------------------------------------
+        Op::Reshape { shape } => vec![inputs[0].reshape(shape.clone())],
+        Op::Transpose2D => vec![repops::transpose2d(inputs[0])],
+        Op::TransposeLast2 => vec![repops::transpose_last2(inputs[0])],
+        Op::Perm0213 => vec![perm0213(inputs[0])],
+        Op::Embedding => vec![repops::embedding(inputs[0], inputs[1])],
+        Op::EmbeddingGrad { vocab } => {
+            vec![repops::embedding_grad(*vocab, inputs[0], inputs[1])]
+        }
+
+        // ---- elementwise ----------------------------------------------
+        Op::Add => vec![repops::add(inputs[0], inputs[1])],
+        Op::Sub => vec![repops::sub(inputs[0], inputs[1])],
+        Op::Mul => vec![repops::mul(inputs[0], inputs[1])],
+        Op::AddBcast => vec![add_bcast(inputs[0], inputs[1])],
+        Op::Scale { c } => vec![repops::scale(inputs[0], *c)],
+        Op::Gelu => vec![match backend {
+            Backend::Rep => repops::gelu(inputs[0]),
+            Backend::Free(_) => baseline::gelu(inputs[0]),
+        }],
+        Op::Silu => vec![match backend {
+            Backend::Rep => repops::silu(inputs[0]),
+            Backend::Free(_) => baseline::silu(inputs[0]),
+        }],
+        Op::Relu => vec![repops::relu(inputs[0])],
+        Op::Tanh => vec![match backend {
+            Backend::Rep => repops::tanh(inputs[0]),
+            Backend::Free(_) => repops::map(inputs[0], |x| x.tanh()),
+        }],
+
+        // ---- contractions ----------------------------------------------
+        Op::MatMul => vec![match backend {
+            Backend::Rep => repops::matmul(inputs[0], inputs[1]),
+            Backend::Free(hw) => baseline::matmul(inputs[0], inputs[1], &hw),
+        }],
+        Op::BatchMatMul => vec![match backend {
+            Backend::Rep => repops::bmm(inputs[0], inputs[1]),
+            Backend::Free(hw) => baseline::bmm(inputs[0], inputs[1], &hw),
+        }],
+
+        // ---- normalization / softmax / loss -----------------------------
+        Op::Softmax => vec![match backend {
+            Backend::Rep => repops::softmax_lastdim(inputs[0]),
+            Backend::Free(hw) => baseline::softmax_lastdim(inputs[0], &hw),
+        }],
+        Op::LayerNorm { eps } => vec![match backend {
+            Backend::Rep => repops::layernorm(inputs[0], inputs[1], inputs[2], *eps),
+            Backend::Free(hw) => baseline::layernorm(inputs[0], inputs[1], inputs[2], *eps, &hw),
+        }],
+        Op::RmsNorm { eps } => vec![match backend {
+            Backend::Rep => repops::rmsnorm(inputs[0], inputs[1], *eps),
+            Backend::Free(hw) => baseline::rmsnorm(inputs[0], inputs[1], *eps, &hw),
+        }],
+        Op::Rope => vec![rope_fwd(inputs[0], inputs[1], inputs[2])],
+        Op::CeLoss => vec![ce_loss(inputs[0], inputs[1], backend)],
+
+        // ---- backward ----------------------------------------------------
+        Op::GeluGrad => vec![gelu_grad(inputs[0], inputs[1], backend)],
+        Op::SiluGrad => vec![silu_grad(inputs[0], inputs[1], backend)],
+        Op::ReluGrad => vec![repops::zipmap(inputs[0], inputs[1], |x, dy| {
+            if x > 0.0 {
+                dy
+            } else {
+                0.0
+            }
+        })],
+        Op::TanhGrad => vec![repops::zipmap(inputs[0], inputs[1], |y, dy| dy * (1.0 - y * y))],
+        Op::SoftmaxGrad => vec![softmax_grad(inputs[0], inputs[1], backend)],
+        Op::LayerNormGrad { eps } => layernorm_grad(inputs[0], inputs[1], inputs[2], *eps, backend),
+        Op::RmsNormGrad { eps } => rmsnorm_grad(inputs[0], inputs[1], inputs[2], *eps, backend),
+        Op::RopeGrad => vec![rope_bwd(inputs[0], inputs[1], inputs[2])],
+        Op::CeGrad => vec![ce_grad(inputs[0], inputs[1], inputs[2], backend)],
+        Op::SumLeading { suffix_rank } => vec![sum_leading(inputs[0], *suffix_rank)],
+
+        // ---- optimizer -----------------------------------------------------
+        Op::AdamUpdate { lr, beta1, beta2, eps } => {
+            adam_update(inputs[0], inputs[1], inputs[2], inputs[3], *lr, *beta1, *beta2, *eps, step_t)
+        }
+        Op::SgdUpdate { lr } => {
+            vec![repops::zipmap(inputs[0], inputs[1], |w, g| w - *lr * g)]
+        }
+    }
+}
+
+/// `[a,b,c,d] -> [a,c,b,d]`.
+fn perm0213(x: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 4, "perm0213 wants rank-4, got {:?}", x.shape());
+    let (a, b, c, d) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let mut out = vec![0.0f32; x.numel()];
+    let src = x.data();
+    for ia in 0..a {
+        for ib in 0..b {
+            for ic in 0..c {
+                let srow = &src[(((ia * b) + ib) * c + ic) * d..][..d];
+                let drow = &mut out[(((ia * c) + ic) * b + ib) * d..][..d];
+                drow.copy_from_slice(srow);
+            }
+        }
+    }
+    Tensor::new([a, c, b, d], out)
+}
+
+/// `a + b` where `b.shape` is a suffix of `a.shape`.
+fn add_bcast(a: &Tensor, b: &Tensor) -> Tensor {
+    let ar = a.rank();
+    let br = b.rank();
+    assert!(br <= ar, "add_bcast: {:?} + {:?}", a.shape(), b.shape());
+    assert_eq!(
+        &a.shape()[ar - br..],
+        b.shape(),
+        "add_bcast: rhs shape must be a suffix: {:?} + {:?}",
+        a.shape(),
+        b.shape()
+    );
+    let bn = b.numel().max(1);
+    let mut out = a.data().to_vec();
+    for (i, o) in out.iter_mut().enumerate() {
+        *o += b.data()[i % bn];
+    }
+    Tensor::new(a.shape().to_vec(), out)
+}
+
+/// Backward of `add_bcast`'s broadcast operand: fold leading dims by
+/// ascending-index summation into the trailing `suffix_rank` shape.
+fn sum_leading(dy: &Tensor, suffix_rank: usize) -> Tensor {
+    let r = dy.rank();
+    assert!(suffix_rank <= r);
+    let suffix: Vec<usize> = dy.shape()[r - suffix_rank..].to_vec();
+    let sn: usize = suffix.iter().product::<usize>().max(1);
+    let mut out = vec![0.0f32; sn];
+    for (i, &v) in dy.data().iter().enumerate() {
+        out[i % sn] += v;
+    }
+    Tensor::new(suffix, out)
+}
+
+/// Interleaved-pair RoPE: pairs `(x_{2i}, x_{2i+1})` rotate by `θ_{s,i}`.
+/// `x [n, s, d]`, `sin`/`cos` `[s, d/2]`.
+fn rope_fwd(x: &Tensor, sin: &Tensor, cos: &Tensor) -> Tensor {
+    rope_apply(x, sin, cos, false)
+}
+
+/// Inverse rotation (backward pass): rotate by `-θ`.
+fn rope_bwd(dy: &Tensor, sin: &Tensor, cos: &Tensor) -> Tensor {
+    rope_apply(dy, sin, cos, true)
+}
+
+fn rope_apply(x: &Tensor, sin: &Tensor, cos: &Tensor, inverse: bool) -> Tensor {
+    assert_eq!(x.rank(), 3, "rope wants [n, s, d], got {:?}", x.shape());
+    let (n, s, d) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    assert_eq!(d % 2, 0, "rope head dim must be even");
+    assert_eq!(sin.shape(), [s, d / 2], "rope sin table {:?}", sin.shape());
+    assert_eq!(cos.shape(), [s, d / 2]);
+    let mut out = vec![0.0f32; x.numel()];
+    for b in 0..n {
+        for t in 0..s {
+            let row = &x.data()[(b * s + t) * d..][..d];
+            let orow = &mut out[(b * s + t) * d..][..d];
+            let srow = &sin.data()[t * (d / 2)..][..d / 2];
+            let crow = &cos.data()[t * (d / 2)..][..d / 2];
+            for i in 0..d / 2 {
+                let (x0, x1) = (row[2 * i], row[2 * i + 1]);
+                let (sn, cs) = if inverse { (-srow[i], crow[i]) } else { (srow[i], crow[i]) };
+                orow[2 * i] = x0 * cs - x1 * sn;
+                orow[2 * i + 1] = x0 * sn + x1 * cs;
+            }
+        }
+    }
+    Tensor::new(x.shape().to_vec(), out)
+}
+
+/// Mean cross-entropy over rows (fixed ascending-row accumulation).
+fn ce_loss(logits: &Tensor, targets: &Tensor, backend: Backend) -> Tensor {
+    assert_eq!(logits.rank(), 2, "ce_loss wants [r, v] logits");
+    let (r, v) = (logits.shape()[0], logits.shape()[1]);
+    assert_eq!(targets.numel(), r, "ce_loss targets {:?}", targets.shape());
+    let logp = match backend {
+        Backend::Rep => repops::log_softmax_lastdim(logits),
+        Backend::Free(hw) => baseline::log_softmax_lastdim(logits, &hw),
+    };
+    let mut acc = 0.0f32;
+    for row in 0..r {
+        let t = targets.data()[row] as usize;
+        assert!(t < v, "target {t} out of vocab {v}");
+        acc += -logp.data()[row * v + t];
+    }
+    Tensor::scalar(acc / r as f32)
+}
+
+/// `(softmax(logits) - onehot) * dloss / r`.
+fn ce_grad(logits: &Tensor, targets: &Tensor, dloss: &Tensor, backend: Backend) -> Tensor {
+    let (r, v) = (logits.shape()[0], logits.shape()[1]);
+    let dl = dloss.data()[0];
+    let mut p = match backend {
+        Backend::Rep => repops::softmax_lastdim(logits),
+        Backend::Free(hw) => baseline::softmax_lastdim(logits, &hw),
+    };
+    let scale = dl / r as f32;
+    for row in 0..r {
+        let t = targets.data()[row] as usize;
+        let prow = &mut p.data_mut()[row * v..(row + 1) * v];
+        for x in prow.iter_mut() {
+            *x *= scale;
+        }
+        prow[t] -= scale;
+    }
+    p
+}
+
+fn gelu_grad(x: &Tensor, dy: &Tensor, backend: Backend) -> Tensor {
+    // gelu'(x) = Φ(x) + x·φ(x),  Φ = 0.5(1+erf(x/√2)), φ = N(0,1) pdf
+    const INV_SQRT2: f32 = 0.707_106_781_186_547_6;
+    const INV_SQRT_2PI: f32 = 0.398_942_280_401_432_7;
+    repops::zipmap(x, dy, |x, dy| {
+        let cdf = match backend {
+            Backend::Rep => 0.5 * (1.0 + math::rep_erf(x * INV_SQRT2)),
+            Backend::Free(_) => 0.5 * (1.0 + math::rep_erf(x * INV_SQRT2)),
+        };
+        let pdf = INV_SQRT_2PI * backend.exp(-0.5 * x * x);
+        dy * (cdf + x * pdf)
+    })
+}
+
+fn silu_grad(x: &Tensor, dy: &Tensor, backend: Backend) -> Tensor {
+    repops::zipmap(x, dy, |x, dy| {
+        let s = match backend {
+            Backend::Rep => math::rep_sigmoid(x),
+            Backend::Free(_) => 1.0 / (1.0 + (-x).exp()),
+        };
+        dy * (s + x * s * (1.0 - s))
+    })
+}
+
+/// `dx = y ⊙ (dy - Σ_j dy_j·y_j)` per row; the dot is order-sensitive.
+fn softmax_grad(y: &Tensor, dy: &Tensor, backend: Backend) -> Tensor {
+    assert_eq!(y.shape(), dy.shape());
+    let n = *y.shape().last().unwrap();
+    let rows = y.numel() / n;
+    let mut out = vec![0.0f32; y.numel()];
+    let mut prod = vec![0.0f32; n];
+    for r in 0..rows {
+        let yr = &y.data()[r * n..(r + 1) * n];
+        let dyr = &dy.data()[r * n..(r + 1) * n];
+        for j in 0..n {
+            prod[j] = dyr[j] * yr[j];
+        }
+        let dot = backend.sum(&prod);
+        let orow = &mut out[r * n..(r + 1) * n];
+        for j in 0..n {
+            orow[j] = yr[j] * (dyr[j] - dot);
+        }
+    }
+    Tensor::new(y.shape().to_vec(), out)
+}
+
+/// LayerNorm backward → `(dx, dgamma, dbeta)`.
+fn layernorm_grad(x: &Tensor, gamma: &Tensor, dy: &Tensor, eps: f32, backend: Backend) -> Vec<Tensor> {
+    let n = *x.shape().last().unwrap();
+    let rows = x.numel() / n;
+    assert_eq!(gamma.shape(), [n]);
+    assert_eq!(dy.shape(), x.shape());
+    let inv_n = 1.0 / n as f32;
+    let mut dx = vec![0.0f32; x.numel()];
+    let mut dgamma = vec![0.0f32; n];
+    let mut dbeta = vec![0.0f32; n];
+    let mut xhat = vec![0.0f32; n];
+    let mut g = vec![0.0f32; n];
+    let mut gx = vec![0.0f32; n];
+    let mut sq = vec![0.0f32; n];
+    for r in 0..rows {
+        let xr = &x.data()[r * n..(r + 1) * n];
+        let dyr = &dy.data()[r * n..(r + 1) * n];
+        let mean = backend.sum(xr) * inv_n;
+        for j in 0..n {
+            let d = xr[j] - mean;
+            sq[j] = d * d;
+        }
+        let var = backend.sum(&sq) * inv_n;
+        let inv_std = match backend {
+            Backend::Rep => math::rep_rsqrt(var + eps),
+            Backend::Free(_) => 1.0 / (var + eps).sqrt(),
+        };
+        for j in 0..n {
+            xhat[j] = (xr[j] - mean) * inv_std;
+            g[j] = dyr[j] * gamma.data()[j];
+            gx[j] = g[j] * xhat[j];
+        }
+        let mg = backend.sum(&g) * inv_n;
+        let mgx = backend.sum(&gx) * inv_n;
+        let dxr = &mut dx[r * n..(r + 1) * n];
+        for j in 0..n {
+            dxr[j] = (g[j] - mg - xhat[j] * mgx) * inv_std;
+            // rows ascending: fixed accumulation order for the param grads
+            dgamma[j] += dyr[j] * xhat[j];
+            dbeta[j] += dyr[j];
+        }
+    }
+    vec![
+        Tensor::new(x.shape().to_vec(), dx),
+        Tensor::new([n], dgamma),
+        Tensor::new([n], dbeta),
+    ]
+}
+
+/// RMSNorm backward → `(dx, dgamma)`.
+fn rmsnorm_grad(x: &Tensor, gamma: &Tensor, dy: &Tensor, eps: f32, backend: Backend) -> Vec<Tensor> {
+    let n = *x.shape().last().unwrap();
+    let rows = x.numel() / n;
+    assert_eq!(gamma.shape(), [n]);
+    assert_eq!(dy.shape(), x.shape());
+    let inv_n = 1.0 / n as f32;
+    let mut dx = vec![0.0f32; x.numel()];
+    let mut dgamma = vec![0.0f32; n];
+    let mut g = vec![0.0f32; n];
+    let mut gx = vec![0.0f32; n];
+    let mut sq = vec![0.0f32; n];
+    for r in 0..rows {
+        let xr = &x.data()[r * n..(r + 1) * n];
+        let dyr = &dy.data()[r * n..(r + 1) * n];
+        for j in 0..n {
+            sq[j] = xr[j] * xr[j];
+        }
+        let ms = backend.sum(&sq) * inv_n + eps;
+        let inv_rms = match backend {
+            Backend::Rep => math::rep_rsqrt(ms),
+            Backend::Free(_) => 1.0 / ms.sqrt(),
+        };
+        for j in 0..n {
+            g[j] = dyr[j] * gamma.data()[j];
+            gx[j] = g[j] * xr[j];
+        }
+        let sgx = backend.sum(&gx);
+        let dxr = &mut dx[r * n..(r + 1) * n];
+        let inv_rms3 = inv_rms * inv_rms * inv_rms;
+        for j in 0..n {
+            dxr[j] = g[j] * inv_rms - xr[j] * sgx * inv_rms3 * inv_n;
+            dgamma[j] += dyr[j] * xr[j] * inv_rms;
+        }
+    }
+    vec![Tensor::new(x.shape().to_vec(), dx), Tensor::new([n], dgamma)]
+}
+
+/// Adam with bias correction at step `t` (1-based). All elementwise.
+#[allow(clippy::too_many_arguments)]
+fn adam_update(
+    w: &Tensor,
+    g: &Tensor,
+    m: &Tensor,
+    v: &Tensor,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: u64,
+) -> Vec<Tensor> {
+    assert_eq!(w.shape(), g.shape());
+    assert_eq!(w.shape(), m.shape());
+    assert_eq!(w.shape(), v.shape());
+    assert!(t >= 1, "Adam step index is 1-based");
+    let bc1 = 1.0 - pow_fixed(beta1, t);
+    let bc2 = 1.0 - pow_fixed(beta2, t);
+    let mut nw = vec![0.0f32; w.numel()];
+    let mut nm = vec![0.0f32; w.numel()];
+    let mut nv = vec![0.0f32; w.numel()];
+    for i in 0..w.numel() {
+        let gi = g.data()[i];
+        let mi = beta1 * m.data()[i] + (1.0 - beta1) * gi;
+        let vi = beta2 * v.data()[i] + (1.0 - beta2) * (gi * gi);
+        let mhat = mi / bc1;
+        let vhat = vi / bc2;
+        nw[i] = w.data()[i] - lr * mhat / (vhat.sqrt() + eps);
+        nm[i] = mi;
+        nv[i] = vi;
+    }
+    vec![
+        Tensor::new(w.shape().to_vec(), nw),
+        Tensor::new(w.shape().to_vec(), nm),
+        Tensor::new(w.shape().to_vec(), nv),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+
+    fn t(shape: &[usize], seed: u64) -> Tensor {
+        Tensor::rand(shape.to_vec(), seed, 1.0)
+    }
+
+    /// Central-difference check of a scalar function's gradient.
+    fn finite_diff(
+        f: &dyn Fn(&Tensor) -> f32,
+        x: &Tensor,
+        idx: usize,
+        h: f32,
+    ) -> f32 {
+        let mut xp = x.clone();
+        xp.data_mut()[idx] += h;
+        let mut xm = x.clone();
+        xm.data_mut()[idx] -= h;
+        (f(&xp) - f(&xm)) / (2.0 * h)
+    }
+
+    #[test]
+    fn perm0213_roundtrip_and_layout() {
+        let x = t(&[2, 3, 4, 5], 1);
+        let y = perm0213(&x);
+        assert_eq!(y.shape(), &[2, 4, 3, 5]);
+        let z = perm0213(&y);
+        assert!(z.bit_eq(&x), "perm0213 is an involution on dims 1,2");
+        // spot-check an element: x[1,2,3,4] == y[1,3,2,4]
+        let xi = ((1 * 3 + 2) * 4 + 3) * 5 + 4;
+        let yi = ((1 * 4 + 3) * 3 + 2) * 5 + 4;
+        assert_eq!(x.data()[xi], y.data()[yi]);
+    }
+
+    #[test]
+    fn add_bcast_row_and_matrix() {
+        let a = t(&[2, 3, 4], 2);
+        let row = t(&[4], 3);
+        let r = add_bcast(&a, &row);
+        assert_eq!(r.data()[5], a.data()[5] + row.data()[1]);
+        let mat = t(&[3, 4], 4);
+        let r2 = add_bcast(&a, &mat);
+        assert_eq!(r2.data()[13], a.data()[13] + mat.data()[1]);
+    }
+
+    #[test]
+    fn sum_leading_inverts_bcast_shape() {
+        let dy = Tensor::full([2, 3, 4], 1.0);
+        let s = sum_leading(&dy, 1);
+        assert_eq!(s.shape(), &[4]);
+        assert!(s.data().iter().all(|&x| x == 6.0));
+        let s2 = sum_leading(&dy, 2);
+        assert_eq!(s2.shape(), &[3, 4]);
+        assert!(s2.data().iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn rope_inverse_recovers_input() {
+        let x = t(&[2, 5, 8], 5);
+        let mut sin = Tensor::zeros([5, 4]);
+        let mut cos = Tensor::zeros([5, 4]);
+        for s in 0..5 {
+            for i in 0..4 {
+                let theta = s as f32 / (10_000f32).powf(2.0 * i as f32 / 8.0);
+                sin.data_mut()[s * 4 + i] = math::rep_sin(theta);
+                cos.data_mut()[s * 4 + i] = math::rep_cos(theta);
+            }
+        }
+        let y = rope_fwd(&x, &sin, &cos);
+        let back = rope_bwd(&y, &sin, &cos);
+        assert!(back.max_abs_diff(&x) < 1e-5, "rope inverse");
+        // norm preservation (rotations)
+        let nx: f32 = x.data().iter().map(|v| v * v).sum();
+        let ny: f32 = y.data().iter().map(|v| v * v).sum();
+        assert!((nx - ny).abs() / nx < 1e-5);
+    }
+
+    #[test]
+    fn ce_loss_uniform_logits_is_log_vocab() {
+        let logits = Tensor::zeros([4, 16]);
+        let targets = Tensor::new([4], vec![0.0, 5.0, 10.0, 15.0]);
+        let l = ce_loss(&logits, &targets, Backend::Rep);
+        assert!((l.data()[0] - (16f32).ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn ce_grad_matches_finite_difference() {
+        let logits = t(&[3, 7], 6);
+        let targets = Tensor::new([3], vec![1.0, 4.0, 6.0]);
+        let dl = Tensor::scalar(1.0);
+        let grad = ce_grad(&logits, &targets, &dl, Backend::Rep);
+        let f = |l: &Tensor| ce_loss(l, &targets, Backend::Rep).data()[0];
+        for idx in [0, 5, 10, 20] {
+            let fd = finite_diff(&f, &logits, idx, 1e-2);
+            assert!(
+                (grad.data()[idx] - fd).abs() < 1e-3,
+                "idx {idx}: analytic {} vs fd {fd}",
+                grad.data()[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn activation_grads_match_finite_difference() {
+        let x = t(&[32], 7);
+        let dy = Tensor::full([32], 1.0);
+        let cases: Vec<(Op, Box<dyn Fn(&Tensor) -> Tensor>)> = vec![
+            (Op::GeluGrad, Box::new(|x: &Tensor| repops::gelu(x))),
+            (Op::SiluGrad, Box::new(|x: &Tensor| repops::silu(x))),
+            (Op::ReluGrad, Box::new(|x: &Tensor| repops::relu(x))),
+        ];
+        for (gop, f) in cases {
+            let g = run_op(&gop, &[&x, &dy], Backend::Rep, 1);
+            for idx in [0, 7, 31] {
+                let fd = finite_diff(
+                    &|xx: &Tensor| repops::sum_all(&f(xx)),
+                    &x,
+                    idx,
+                    1e-3,
+                );
+                let got = g[0].data()[idx];
+                assert!(
+                    (got - fd).abs() < 1e-2,
+                    "{}: idx {idx} analytic {got} vs fd {fd}",
+                    gop.mnemonic()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tanh_grad_uses_output() {
+        let x = t(&[16], 8);
+        let y = repops::tanh(&x);
+        let dy = Tensor::full([16], 1.0);
+        let g = run_op(&Op::TanhGrad, &[&y, &dy], Backend::Rep, 1);
+        for idx in [0, 9, 15] {
+            let fd = finite_diff(&|xx: &Tensor| repops::sum_all(&repops::tanh(xx)), &x, idx, 1e-3);
+            assert!((g[0].data()[idx] - fd).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn softmax_grad_matches_finite_difference() {
+        let x = t(&[2, 5], 9);
+        let dy = t(&[2, 5], 10);
+        let y = repops::softmax_lastdim(&x);
+        let g = softmax_grad(&y, &dy, Backend::Rep);
+        let f = |xx: &Tensor| {
+            let yy = repops::softmax_lastdim(xx);
+            repops::sum_all(&repops::mul(&yy, &dy))
+        };
+        for idx in 0..10 {
+            let fd = finite_diff(&f, &x, idx, 1e-3);
+            assert!(
+                (g.data()[idx] - fd).abs() < 1e-3,
+                "idx {idx}: {} vs {fd}",
+                g.data()[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn layernorm_grad_matches_finite_difference() {
+        let x = t(&[3, 8], 11);
+        let gamma = t(&[8], 12);
+        let beta = t(&[8], 13);
+        let dy = t(&[3, 8], 14);
+        let eps = 1e-5;
+        let grads = layernorm_grad(&x, &gamma, &dy, eps, Backend::Rep);
+        let f_x = |xx: &Tensor| {
+            repops::sum_all(&repops::mul(&repops::layernorm(xx, &gamma, &beta, eps), &dy))
+        };
+        for idx in [0, 10, 23] {
+            let fd = finite_diff(&f_x, &x, idx, 1e-3);
+            assert!(
+                (grads[0].data()[idx] - fd).abs() < 2e-2,
+                "dx[{idx}]: {} vs {fd}",
+                grads[0].data()[idx]
+            );
+        }
+        let f_g = |gg: &Tensor| {
+            repops::sum_all(&repops::mul(&repops::layernorm(&x, gg, &beta, eps), &dy))
+        };
+        for idx in [0, 4, 7] {
+            let fd = finite_diff(&f_g, &gamma, idx, 1e-3);
+            assert!((grads[1].data()[idx] - fd).abs() < 1e-2, "dgamma[{idx}]");
+        }
+        let f_b = |bb: &Tensor| {
+            repops::sum_all(&repops::mul(&repops::layernorm(&x, &gamma, bb, eps), &dy))
+        };
+        for idx in [0, 7] {
+            let fd = finite_diff(&f_b, &beta, idx, 1e-3);
+            assert!((grads[2].data()[idx] - fd).abs() < 1e-2, "dbeta[{idx}]");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_grad_matches_finite_difference() {
+        let x = t(&[3, 8], 15);
+        let gamma = t(&[8], 16);
+        let dy = t(&[3, 8], 17);
+        let eps = 1e-6;
+        let grads = rmsnorm_grad(&x, &gamma, &dy, eps, Backend::Rep);
+        let f_x = |xx: &Tensor| {
+            repops::sum_all(&repops::mul(&repops::rmsnorm(xx, &gamma, eps), &dy))
+        };
+        for idx in [0, 11, 23] {
+            let fd = finite_diff(&f_x, &x, idx, 1e-3);
+            assert!(
+                (grads[0].data()[idx] - fd).abs() < 2e-2,
+                "dx[{idx}]: {} vs {fd}",
+                grads[0].data()[idx]
+            );
+        }
+        let f_g = |gg: &Tensor| {
+            repops::sum_all(&repops::mul(&repops::rmsnorm(&x, gg, eps), &dy))
+        };
+        for idx in [0, 5] {
+            let fd = finite_diff(&f_g, &gamma, idx, 1e-3);
+            assert!((grads[1].data()[idx] - fd).abs() < 1e-2, "dgamma[{idx}]");
+        }
+    }
+
+    #[test]
+    fn adam_first_step_moves_against_gradient() {
+        let w = Tensor::zeros([4]);
+        let g = Tensor::new([4], vec![1.0, -1.0, 2.0, 0.0]);
+        let m = Tensor::zeros([4]);
+        let v = Tensor::zeros([4]);
+        let out = adam_update(&w, &g, &m, &v, 0.1, 0.9, 0.999, 1e-8, 1);
+        // with zero m/v and bias correction, |Δw| ≈ lr for any g≠0
+        assert!((out[0].data()[0] + 0.1).abs() < 1e-3);
+        assert!((out[0].data()[1] - 0.1).abs() < 1e-3);
+        assert!((out[0].data()[2] + 0.1).abs() < 1e-3);
+        assert_eq!(out[0].data()[3], 0.0);
+        // moments updated
+        assert!((out[1].data()[0] - 0.1).abs() < 1e-6);
+        assert!((out[2].data()[0] - 0.001).abs() < 1e-7);
+    }
+
+    #[test]
+    fn adam_is_step_dependent() {
+        let w = t(&[8], 18);
+        let g = t(&[8], 19);
+        let m = t(&[8], 20);
+        let v = repops::map(&t(&[8], 21), |x| x * x + 0.01);
+        let s1 = adam_update(&w, &g, &m, &v, 0.01, 0.9, 0.999, 1e-8, 1);
+        let s9 = adam_update(&w, &g, &m, &v, 0.01, 0.9, 0.999, 1e-8, 9);
+        assert!(!s1[0].bit_eq(&s9[0]), "bias correction must depend on t");
+    }
+
+    #[test]
+    fn pow_fixed_matches_powi() {
+        for t in 0..30u64 {
+            let want = 0.9f64.powi(t as i32) as f32;
+            assert!((pow_fixed(0.9, t) - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn free_backend_runs_all_op_kinds() {
+        // smoke: every op executes under Free backend too
+        let hw = HardwareProfile::T4_16G;
+        let x = t(&[4, 6], 22);
+        let w = t(&[6, 3], 23);
+        for (op, ins) in [
+            (Op::MatMul, vec![&x, &w]),
+            (Op::Gelu, vec![&x]),
+            (Op::Softmax, vec![&x]),
+        ] {
+            let r = run_op(&op, &ins, Backend::Free(hw), 1);
+            let r2 = run_op(&op, &ins, Backend::Free(hw), 1);
+            assert!(r[0].bit_eq(&r2[0]), "{} deterministic per profile", op.mnemonic());
+        }
+    }
+}

@@ -1,0 +1,494 @@
+//! The computational-graph IR Verde arbitrates over (paper §2.2).
+//!
+//! A neural-network *program* is a topologically-sorted DAG of operator
+//! nodes, ONNX-style. Model builders ([`crate::model`]) construct the
+//! **forward** graph; [`autodiff`] extends it with backward and
+//! optimizer-update nodes into the *extended computational graph* of paper
+//! Figure 1; [`executor`] runs it node by node, producing the
+//! `AugmentedCGNode` records (operator + input/output tensor hashes) that the
+//! dispute-resolution protocol commits to.
+//!
+//! The node order of a [`Graph`] IS its canonical topological order — the
+//! builder can only reference already-inserted nodes, and [`Graph::validate`]
+//! re-checks the invariant. "We topologically sort the graph to ensure a
+//! common order for all parties" (§2.2).
+
+pub mod autodiff;
+pub mod builder;
+pub mod executor;
+pub mod kernels;
+
+use crate::hash::{Hash, Hasher};
+use crate::tensor::Tensor;
+
+/// Index of a node within its graph (== position in `Graph::nodes`).
+pub type NodeId = usize;
+
+/// A reference to the `out_idx`-th output tensor of node `node`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Slot {
+    pub node: NodeId,
+    pub out_idx: usize,
+}
+
+impl Slot {
+    pub fn new(node: NodeId, out_idx: usize) -> Slot {
+        Slot { node, out_idx }
+    }
+}
+
+/// Where an initialization node's value comes from at execution time.
+/// These are the "yellow" nodes of paper Figure 1.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InitKind {
+    /// A learnable parameter, read from the checkpoint state by name.
+    Param,
+    /// Optimizer state (Adam first/second moment), read from the checkpoint.
+    OptState,
+    /// A training-data tensor (token ids, targets), read from the batch.
+    Data,
+}
+
+/// Operators. Forward ("blue"), backward ("red"), and update nodes all draw
+/// from this one enum; the extended graph is just a graph that contains the
+/// latter two kinds (Figure 1).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    // ---- initialization ----------------------------------------------------
+    /// Value injected from checkpoint/batch at execution time.
+    Init { kind: InitKind, name: String },
+    /// A constant baked into the program (masks, RoPE tables). The tensor is
+    /// part of the graph structure and thus of the program commitment.
+    Const { value: Tensor },
+
+    // ---- structure / movement ----------------------------------------------
+    Reshape { shape: Vec<usize> },
+    Transpose2D,
+    /// `[b, m, n] -> [b, n, m]`.
+    TransposeLast2,
+    /// `[a, b, c, d] -> [a, c, b, d]` (head split/merge for attention).
+    Perm0213,
+    /// Gather rows of input 0 (table `[v, d]`) by integer ids (input 1).
+    Embedding,
+    /// Scatter-add of gradients (input 1, `[..., d]`) by ids (input 0) into a
+    /// zero `[vocab, d]` table — backward of `Embedding`.
+    EmbeddingGrad { vocab: usize },
+
+    // ---- elementwise -------------------------------------------------------
+    Add,
+    Sub,
+    Mul,
+    /// `a + b` where `b`'s shape is a suffix of `a`'s (bias add, mask add).
+    AddBcast,
+    Scale { c: f32 },
+    Gelu,
+    Silu,
+    Relu,
+    Tanh,
+
+    // ---- contractions ------------------------------------------------------
+    MatMul,
+    BatchMatMul,
+
+    // ---- normalization / softmax / loss ------------------------------------
+    Softmax,
+    LayerNorm { eps: f32 },
+    RmsNorm { eps: f32 },
+    /// Rotary position embedding. Inputs: `x [n, s, d]`, `sin [s, d/2]`,
+    /// `cos [s, d/2]`.
+    Rope,
+    /// Mean cross-entropy over rows. Inputs: logits `[r, v]`, integer
+    /// targets `[r]`; output: scalar loss.
+    CeLoss,
+
+    // ---- backward-only operators -------------------------------------------
+    /// Inputs `(x, dy)` → `dy * gelu'(x)`.
+    GeluGrad,
+    /// Inputs `(x, dy)` → `dy * silu'(x)`.
+    SiluGrad,
+    /// Inputs `(x, dy)` → `dy * 1[x>0]`.
+    ReluGrad,
+    /// Inputs `(y, dy)` → `dy * (1 - y²)` (uses the saved output).
+    TanhGrad,
+    /// Inputs `(y, dy)` where `y = softmax(x)` → `y ⊙ (dy - Σ_j dy_j y_j)`.
+    SoftmaxGrad,
+    /// Inputs `(x, gamma, dy)` → `(dx, dgamma, dbeta)`.
+    LayerNormGrad { eps: f32 },
+    /// Inputs `(x, gamma, dy)` → `(dx, dgamma)`.
+    RmsNormGrad { eps: f32 },
+    /// Inputs `(dy, sin, cos)` → rotation by `-θ` (inverse of `Rope`).
+    RopeGrad,
+    /// Inputs `(logits, targets, dloss)` → dlogits `(softmax - onehot)·dloss/r`.
+    CeGrad,
+    /// Sum over leading dims until only the trailing `suffix_rank` dims
+    /// remain — backward of `AddBcast`'s broadcast input.
+    SumLeading { suffix_rank: usize },
+
+    // ---- optimizer update nodes ---------------------------------------------
+    /// Adam. Inputs `(w, g, m, v)` → `(w', m', v')`. Bias correction uses the
+    /// executing step's 1-based index `t` (supplied by the executor; part of
+    /// the step identity the protocol already pins down).
+    AdamUpdate { lr: f32, beta1: f32, beta2: f32, eps: f32 },
+    /// Plain SGD. Inputs `(w, g)` → `w'`.
+    SgdUpdate { lr: f32 },
+}
+
+impl Op {
+    /// Number of output tensors this operator produces.
+    pub fn n_outputs(&self) -> usize {
+        match self {
+            Op::LayerNormGrad { .. } | Op::AdamUpdate { .. } => 3,
+            Op::RmsNormGrad { .. } => 2,
+            _ => 1,
+        }
+    }
+
+    /// Number of input slots this operator consumes.
+    pub fn n_inputs(&self) -> usize {
+        match self {
+            Op::Init { .. } | Op::Const { .. } => 0,
+            Op::Reshape { .. }
+            | Op::Transpose2D
+            | Op::TransposeLast2
+            | Op::Perm0213
+            | Op::Scale { .. }
+            | Op::Gelu
+            | Op::Silu
+            | Op::Relu
+            | Op::Tanh
+            | Op::Softmax
+            | Op::SumLeading { .. } => 1,
+            Op::Embedding
+            | Op::EmbeddingGrad { .. }
+            | Op::Add
+            | Op::Sub
+            | Op::Mul
+            | Op::AddBcast
+            | Op::MatMul
+            | Op::BatchMatMul
+            | Op::RmsNorm { .. }
+            | Op::CeLoss
+            | Op::GeluGrad
+            | Op::SiluGrad
+            | Op::ReluGrad
+            | Op::TanhGrad
+            | Op::SoftmaxGrad
+            | Op::SgdUpdate { .. } => 2,
+            Op::LayerNorm { .. }
+            | Op::Rope
+            | Op::LayerNormGrad { .. }
+            | Op::RmsNormGrad { .. }
+            | Op::RopeGrad
+            | Op::CeGrad => 3,
+            Op::AdamUpdate { .. } => 4,
+        }
+    }
+
+    /// A short stable mnemonic, part of the node commitment.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Op::Init { kind: InitKind::Param, .. } => "init.param",
+            Op::Init { kind: InitKind::OptState, .. } => "init.opt",
+            Op::Init { kind: InitKind::Data, .. } => "init.data",
+            Op::Const { .. } => "const",
+            Op::Reshape { .. } => "reshape",
+            Op::Transpose2D => "transpose2d",
+            Op::TransposeLast2 => "transpose_last2",
+            Op::Perm0213 => "perm0213",
+            Op::Embedding => "embedding",
+            Op::EmbeddingGrad { .. } => "embedding_grad",
+            Op::Add => "add",
+            Op::Sub => "sub",
+            Op::Mul => "mul",
+            Op::AddBcast => "add_bcast",
+            Op::Scale { .. } => "scale",
+            Op::Gelu => "gelu",
+            Op::Silu => "silu",
+            Op::Relu => "relu",
+            Op::Tanh => "tanh",
+            Op::MatMul => "matmul",
+            Op::BatchMatMul => "bmm",
+            Op::Softmax => "softmax",
+            Op::LayerNorm { .. } => "layernorm",
+            Op::RmsNorm { .. } => "rmsnorm",
+            Op::Rope => "rope",
+            Op::CeLoss => "ce_loss",
+            Op::GeluGrad => "gelu_grad",
+            Op::SiluGrad => "silu_grad",
+            Op::ReluGrad => "relu_grad",
+            Op::TanhGrad => "tanh_grad",
+            Op::SoftmaxGrad => "softmax_grad",
+            Op::LayerNormGrad { .. } => "layernorm_grad",
+            Op::RmsNormGrad { .. } => "rmsnorm_grad",
+            Op::RopeGrad => "rope_grad",
+            Op::CeGrad => "ce_grad",
+            Op::SumLeading { .. } => "sum_leading",
+            Op::AdamUpdate { .. } => "adam_update",
+            Op::SgdUpdate { .. } => "sgd_update",
+        }
+    }
+
+    /// Commit the operator *and its attributes* (paper: "operation (operator
+    /// and attribute details)" is part of the AugmentedCGNode).
+    pub fn attr_hash(&self) -> Hash {
+        let mut h = Hasher::new("verde.op.v1");
+        h.str(self.mnemonic());
+        match self {
+            Op::Init { name, .. } => {
+                h.str(name);
+            }
+            Op::Const { value } => {
+                let th = crate::hash::hash_tensor(value);
+                h.hash(&th);
+            }
+            Op::Reshape { shape } => {
+                h.u64(shape.len() as u64);
+                for &d in shape {
+                    h.u64(d as u64);
+                }
+            }
+            Op::EmbeddingGrad { vocab } => {
+                h.u64(*vocab as u64);
+            }
+            Op::Scale { c } => {
+                h.u64(c.to_bits() as u64);
+            }
+            Op::LayerNorm { eps }
+            | Op::RmsNorm { eps }
+            | Op::LayerNormGrad { eps }
+            | Op::RmsNormGrad { eps } => {
+                h.u64(eps.to_bits() as u64);
+            }
+            Op::SumLeading { suffix_rank } => {
+                h.u64(*suffix_rank as u64);
+            }
+            Op::AdamUpdate { lr, beta1, beta2, eps } => {
+                h.u64(lr.to_bits() as u64);
+                h.u64(beta1.to_bits() as u64);
+                h.u64(beta2.to_bits() as u64);
+                h.u64(eps.to_bits() as u64);
+            }
+            Op::SgdUpdate { lr } => {
+                h.u64(lr.to_bits() as u64);
+            }
+            _ => {}
+        }
+        h.finish()
+    }
+}
+
+/// One vertex of the computational graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: NodeId,
+    /// Human-readable label (e.g. `"blk0.attn.q_proj"`); not committed —
+    /// structure and attributes are what the protocol hashes.
+    pub label: String,
+    pub op: Op,
+    pub inputs: Vec<Slot>,
+}
+
+/// A topologically-ordered operator DAG.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new() -> Graph {
+        Graph::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Append a node; inputs must reference existing nodes (this is what
+    /// keeps `nodes` topologically sorted by construction).
+    pub fn push(&mut self, label: impl Into<String>, op: Op, inputs: Vec<Slot>) -> NodeId {
+        let id = self.nodes.len();
+        assert_eq!(
+            inputs.len(),
+            op.n_inputs(),
+            "op {} wants {} inputs, got {}",
+            op.mnemonic(),
+            op.n_inputs(),
+            inputs.len()
+        );
+        for s in &inputs {
+            assert!(s.node < id, "node {id} references future node {}", s.node);
+            assert!(
+                s.out_idx < self.nodes[s.node].op.n_outputs(),
+                "node {id} references output {} of node {} which has {}",
+                s.out_idx,
+                s.node,
+                self.nodes[s.node].op.n_outputs()
+            );
+        }
+        self.nodes.push(Node { id, label: label.into(), op, inputs });
+        id
+    }
+
+    /// Check the topological invariant and id consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id != i {
+                return Err(format!("node at position {i} has id {}", n.id));
+            }
+            if n.inputs.len() != n.op.n_inputs() {
+                return Err(format!("node {i} input arity mismatch"));
+            }
+            for s in &n.inputs {
+                if s.node >= i {
+                    return Err(format!("node {i} references non-past node {}", s.node));
+                }
+                if s.out_idx >= self.nodes[s.node].op.n_outputs() {
+                    return Err(format!("node {i} references invalid output of {}", s.node));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Structural commitment to the whole program: op attributes + wiring.
+    /// This is what the client hands the referee as "the model specification"
+    /// and what Case 1 of the decision algorithm compares against.
+    pub fn structure_hash(&self) -> Hash {
+        let mut h = Hasher::new("verde.graph.v1");
+        h.u64(self.nodes.len() as u64);
+        for n in &self.nodes {
+            let ah = n.op.attr_hash();
+            h.hash(&ah);
+            h.u64(n.inputs.len() as u64);
+            for s in &n.inputs {
+                h.u64(s.node as u64);
+                h.u64(s.out_idx as u64);
+            }
+        }
+        h.finish()
+    }
+
+    /// Structural commitment to a single node (op attrs + input wiring) —
+    /// the "graph structure" part of an AugmentedCGNode, used by Case 1.
+    pub fn node_structure_hash(&self, id: NodeId) -> Hash {
+        let n = &self.nodes[id];
+        let mut h = Hasher::new("verde.node-structure.v1");
+        h.u64(n.id as u64);
+        let ah = n.op.attr_hash();
+        h.hash(&ah);
+        h.u64(n.inputs.len() as u64);
+        for s in &n.inputs {
+            h.u64(s.node as u64);
+            h.u64(s.out_idx as u64);
+        }
+        h.finish()
+    }
+
+    /// All `Init` nodes of a given kind, in topological order.
+    pub fn init_nodes(&self, kind: &InitKind) -> Vec<(NodeId, String)> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                Op::Init { kind: k, name } if k == kind => Some((n.id, name.clone())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Consumers of each node (adjacency, for autodiff).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for s in &n.inputs {
+                out[s.node].push(n.id);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Graph {
+        let mut g = Graph::new();
+        let x = g.push("x", Op::Init { kind: InitKind::Data, name: "x".into() }, vec![]);
+        let w = g.push("w", Op::Init { kind: InitKind::Param, name: "w".into() }, vec![]);
+        let mm = g.push("mm", Op::MatMul, vec![Slot::new(x, 0), Slot::new(w, 0)]);
+        g.push("act", Op::Gelu, vec![Slot::new(mm, 0)]);
+        g
+    }
+
+    #[test]
+    fn push_keeps_topo_order_and_validates() {
+        let g = tiny_graph();
+        assert_eq!(g.len(), 4);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_rejects_wrong_arity() {
+        let mut g = Graph::new();
+        g.push("bad", Op::MatMul, vec![]);
+    }
+
+    #[test]
+    fn structure_hash_sensitive_to_wiring_and_attrs() {
+        let g1 = tiny_graph();
+        let mut g2 = tiny_graph();
+        // change an attribute: swap Gelu for Relu
+        g2.nodes[3].op = Op::Relu;
+        assert_ne!(g1.structure_hash(), g2.structure_hash());
+
+        let mut g3 = tiny_graph();
+        // rewire: act consumes w instead of mm
+        g3.nodes[3].inputs[0] = Slot::new(1, 0);
+        assert_ne!(g1.structure_hash(), g3.structure_hash());
+
+        // labels are NOT committed
+        let mut g4 = tiny_graph();
+        g4.nodes[3].label = "renamed".into();
+        assert_eq!(g1.structure_hash(), g4.structure_hash());
+    }
+
+    #[test]
+    fn scale_attr_in_hash() {
+        let mut g1 = Graph::new();
+        let x = g1.push("x", Op::Init { kind: InitKind::Data, name: "x".into() }, vec![]);
+        g1.push("s", Op::Scale { c: 2.0 }, vec![Slot::new(x, 0)]);
+        let mut g2 = Graph::new();
+        let x2 = g2.push("x", Op::Init { kind: InitKind::Data, name: "x".into() }, vec![]);
+        g2.push("s", Op::Scale { c: 3.0 }, vec![Slot::new(x2, 0)]);
+        assert_ne!(g1.structure_hash(), g2.structure_hash());
+    }
+
+    #[test]
+    fn init_nodes_filtered_by_kind() {
+        let g = tiny_graph();
+        assert_eq!(g.init_nodes(&InitKind::Data).len(), 1);
+        assert_eq!(g.init_nodes(&InitKind::Param).len(), 1);
+        assert_eq!(g.init_nodes(&InitKind::OptState).len(), 0);
+    }
+
+    #[test]
+    fn consumers_adjacency() {
+        let g = tiny_graph();
+        let c = g.consumers();
+        assert_eq!(c[0], vec![2]); // x feeds mm
+        assert_eq!(c[2], vec![3]); // mm feeds act
+        assert!(c[3].is_empty());
+    }
+
+    #[test]
+    fn validate_catches_future_reference() {
+        let mut g = tiny_graph();
+        g.nodes[2].inputs[0] = Slot::new(3, 0);
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! Binary Merkle trees over protocol commitments (paper Figure 2).
+//!
+//! The checkpoint after a training step is the Merkle root over the hashes
+//! of all `AugmentedCGNode`s of that step; Case 2a of the referee's decision
+//! algorithm verifies *membership proofs* against committed roots. Interior
+//! nodes are domain-separated from leaves so a leaf can never be
+//! reinterpreted as an interior node (second-preimage hardening).
+
+use super::Hash;
+
+const LEAF_TAG: u8 = 0x00;
+const NODE_TAG: u8 = 0x01;
+
+/// A Merkle tree retaining all levels (so proofs can be generated).
+#[derive(Debug, Clone)]
+pub struct MerkleTree {
+    /// `levels[0]` = hashed leaves, `levels.last()` = `[root]`.
+    levels: Vec<Vec<Hash>>,
+}
+
+/// A membership proof: sibling hashes bottom-up plus the leaf index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MerkleProof {
+    pub index: usize,
+    pub siblings: Vec<Hash>,
+}
+
+impl MerkleProof {
+    /// Wire size in bytes (for communication accounting).
+    pub fn byte_len(&self) -> usize {
+        8 + 32 * self.siblings.len()
+    }
+}
+
+/// Leaf commitment: domain-separated hash of the raw leaf hash.
+fn leaf_hash(h: &Hash) -> Hash {
+    Hash::combine(LEAF_TAG, h, &Hash::ZERO)
+}
+
+impl MerkleTree {
+    /// Build from pre-hashed leaves. An odd node at any level is promoted by
+    /// pairing with itself (standard duplicate-last construction).
+    ///
+    /// # Panics
+    /// On zero leaves — the protocol never commits to an empty step.
+    pub fn build(leaves: &[Hash]) -> MerkleTree {
+        assert!(!leaves.is_empty(), "cannot build a Merkle tree over 0 leaves");
+        let mut levels = vec![leaves.iter().map(leaf_hash).collect::<Vec<_>>()];
+        while levels.last().unwrap().len() > 1 {
+            let prev = levels.last().unwrap();
+            let mut next = Vec::with_capacity(prev.len().div_ceil(2));
+            for pair in prev.chunks(2) {
+                let l = &pair[0];
+                let r = pair.get(1).unwrap_or(l);
+                next.push(Hash::combine(NODE_TAG, l, r));
+            }
+            levels.push(next);
+        }
+        MerkleTree { levels }
+    }
+
+    pub fn root(&self) -> Hash {
+        self.levels.last().unwrap()[0]
+    }
+
+    pub fn leaf_count(&self) -> usize {
+        self.levels[0].len()
+    }
+
+    /// Membership proof for leaf `index`.
+    pub fn prove(&self, index: usize) -> MerkleProof {
+        assert!(index < self.leaf_count(), "leaf {index} out of range");
+        let mut siblings = Vec::new();
+        let mut i = index;
+        for level in &self.levels[..self.levels.len() - 1] {
+            let sib = if i % 2 == 0 {
+                // right sibling, or self-duplicate at the edge
+                *level.get(i + 1).unwrap_or(&level[i])
+            } else {
+                level[i - 1]
+            };
+            siblings.push(sib);
+            i /= 2;
+        }
+        MerkleProof { index, siblings }
+    }
+
+    /// Verify `proof` that `leaf` (raw hash, pre-domain-separation) is the
+    /// `proof.index`-th leaf of the tree with root `root`.
+    pub fn verify(root: &Hash, leaf: &Hash, proof: &MerkleProof) -> bool {
+        let mut acc = leaf_hash(leaf);
+        let mut i = proof.index;
+        for sib in &proof.siblings {
+            acc = if i % 2 == 0 {
+                Hash::combine(NODE_TAG, &acc, sib)
+            } else {
+                Hash::combine(NODE_TAG, sib, &acc)
+            };
+            i /= 2;
+        }
+        acc == *root
+    }
+}
+
+/// Convenience: Merkle root of a hash sequence (the `MerkleHash(seq)` of
+/// Algorithm 2 line 7).
+pub fn merkle_root(leaves: &[Hash]) -> Hash {
+    MerkleTree::build(leaves).root()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, Gen};
+
+    fn leaves(n: usize, seed: u64) -> Vec<Hash> {
+        (0..n)
+            .map(|i| Hash::of_bytes(format!("leaf-{seed}-{i}").as_bytes()))
+            .collect()
+    }
+
+    #[test]
+    fn single_leaf_tree() {
+        let ls = leaves(1, 0);
+        let t = MerkleTree::build(&ls);
+        let p = t.prove(0);
+        assert!(p.siblings.is_empty());
+        assert!(MerkleTree::verify(&t.root(), &ls[0], &p));
+    }
+
+    #[test]
+    fn all_proofs_verify_various_sizes() {
+        for n in [1, 2, 3, 4, 5, 7, 8, 15, 16, 17, 33] {
+            let ls = leaves(n, n as u64);
+            let t = MerkleTree::build(&ls);
+            for i in 0..n {
+                let p = t.prove(i);
+                assert!(MerkleTree::verify(&t.root(), &ls[i], &p), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn tampered_proofs_fail() {
+        let ls = leaves(9, 1);
+        let t = MerkleTree::build(&ls);
+        let root = t.root();
+        let p = t.prove(4);
+        // wrong leaf
+        assert!(!MerkleTree::verify(&root, &ls[5], &p));
+        // wrong index
+        let mut p2 = p.clone();
+        p2.index = 5;
+        assert!(!MerkleTree::verify(&root, &ls[4], &p2));
+        // corrupted sibling
+        let mut p3 = p.clone();
+        p3.siblings[0] = Hash::of_bytes(b"evil");
+        assert!(!MerkleTree::verify(&root, &ls[4], &p3));
+        // wrong root
+        assert!(!MerkleTree::verify(&Hash::of_bytes(b"no"), &ls[4], &p));
+    }
+
+    #[test]
+    fn root_sensitive_to_any_leaf_and_to_order() {
+        let ls = leaves(8, 2);
+        let r = merkle_root(&ls);
+        for i in 0..8 {
+            let mut tampered = ls.clone();
+            tampered[i] = Hash::of_bytes(b"swap");
+            assert_ne!(merkle_root(&tampered), r, "leaf {i}");
+        }
+        let mut swapped = ls.clone();
+        swapped.swap(2, 3);
+        assert_ne!(merkle_root(&swapped), r);
+    }
+
+    #[test]
+    fn leaf_interior_domain_separation() {
+        // A 2-leaf root must not equal any single-leaf construction over the
+        // concatenated children (classic CVE-2012-2459-style ambiguity).
+        let ls = leaves(2, 3);
+        let t = MerkleTree::build(&ls);
+        let fake = Hash::combine(NODE_TAG, &ls[0], &ls[1]);
+        assert_ne!(t.root(), fake);
+    }
+
+    #[test]
+    fn prop_proofs_roundtrip_and_cross_fail() {
+        forall("merkle proofs verify; cross-leaf proofs fail", 48, |g: &mut Gen| {
+            let n = g.usize_in(1, 40);
+            let ls: Vec<Hash> =
+                (0..n).map(|i| Hash::of_bytes(&[(g.u64() & 0xff) as u8, i as u8])).collect();
+            let t = MerkleTree::build(&ls);
+            let i = g.usize_in(0, n - 1);
+            let p = t.prove(i);
+            assert!(MerkleTree::verify(&t.root(), &ls[i], &p));
+            let j = g.usize_in(0, n - 1);
+            if ls[j] != ls[i] {
+                assert!(!MerkleTree::verify(&t.root(), &ls[j], &p));
+            }
+        });
+    }
+}

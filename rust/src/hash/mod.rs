@@ -1,0 +1,187 @@
+//! Cryptographic commitments: SHA-256 hashing of tensors and protocol
+//! objects, plus Merkle trees ([`merkle`]) for the checkpoint format of
+//! paper §2.2 / Figure 2.
+
+pub mod merkle;
+
+use sha2::{Digest as _, Sha256};
+use std::fmt;
+
+use crate::tensor::Tensor;
+
+/// A 32-byte SHA-256 digest. The protocol's only commitment primitive
+/// (the paper assumes "a standard collision-resistant hash function like
+/// SHA-256", §2).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Hash(pub [u8; 32]);
+
+impl Hash {
+    pub const ZERO: Hash = Hash([0u8; 32]);
+
+    pub fn of_bytes(bytes: &[u8]) -> Hash {
+        let mut h = Sha256::new();
+        h.update(bytes);
+        Hash(h.finalize().into())
+    }
+
+    /// Domain-separated two-input hash (Merkle interior nodes etc.).
+    pub fn combine(tag: u8, left: &Hash, right: &Hash) -> Hash {
+        let mut h = Sha256::new();
+        h.update([tag]);
+        h.update(left.0);
+        h.update(right.0);
+        Hash(h.finalize().into())
+    }
+
+    pub fn to_hex(&self) -> String {
+        let mut s = String::with_capacity(64);
+        for b in self.0 {
+            s.push_str(&format!("{b:02x}"));
+        }
+        s
+    }
+
+    /// Short prefix for log lines.
+    pub fn short(&self) -> String {
+        self.to_hex()[..8].to_string()
+    }
+}
+
+impl fmt::Debug for Hash {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "#{}", self.short())
+    }
+}
+
+impl fmt::Display for Hash {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.to_hex())
+    }
+}
+
+/// An incremental SHA-256 hasher with domain separation, used to build
+/// structured commitments (tensor payloads, protocol nodes).
+pub struct Hasher {
+    inner: Sha256,
+}
+
+impl Hasher {
+    /// Start a hasher domain-separated by `tag` (prevents cross-protocol
+    /// collisions between e.g. tensor hashes and node hashes).
+    pub fn new(tag: &str) -> Hasher {
+        let mut inner = Sha256::new();
+        inner.update((tag.len() as u64).to_le_bytes());
+        inner.update(tag.as_bytes());
+        Hasher { inner }
+    }
+
+    pub fn bytes(&mut self, bytes: &[u8]) -> &mut Self {
+        self.inner.update((bytes.len() as u64).to_le_bytes());
+        self.inner.update(bytes);
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.inner.update(v.to_le_bytes());
+        self
+    }
+
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.bytes(s.as_bytes())
+    }
+
+    pub fn hash(&mut self, h: &Hash) -> &mut Self {
+        self.inner.update(h.0);
+        self
+    }
+
+    pub fn finish(self) -> Hash {
+        Hash(self.inner.finalize().into())
+    }
+}
+
+/// Commit to a tensor: shape (rank-prefixed, u64 LE dims) then the raw
+/// little-endian FP32 bit patterns. Bitwise equality of tensors ⟺ equal
+/// hashes (modulo SHA-256 collisions).
+pub fn hash_tensor(t: &Tensor) -> Hash {
+    let mut h = Hasher::new("verde.tensor.v1");
+    h.u64(t.rank() as u64);
+    for &d in t.shape() {
+        h.u64(d as u64);
+    }
+    // Hash payload in one update; 4-byte LE per element.
+    h.bytes(&t.to_le_bytes());
+    h.finish()
+}
+
+/// Hash a labelled list of tensors (e.g. a parameter set) — order matters.
+pub fn hash_tensor_list(items: &[(&str, &Tensor)]) -> Hash {
+    let mut h = Hasher::new("verde.tensorlist.v1");
+    h.u64(items.len() as u64);
+    for (name, t) in items {
+        h.str(name);
+        let th = hash_tensor(t);
+        h.hash(&th);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_known_answer() {
+        // SHA-256("abc")
+        let h = Hash::of_bytes(b"abc");
+        assert_eq!(
+            h.to_hex(),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn tensor_hash_sensitive_to_bits_and_shape() {
+        let a = Tensor::new([2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new([2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(hash_tensor(&a), hash_tensor(&b));
+
+        let reshaped = a.reshape([4]);
+        assert_ne!(hash_tensor(&a), hash_tensor(&reshaped), "shape is committed");
+
+        let mut c = a.clone();
+        c.data_mut()[3] = 4.0 + f32::EPSILON * 4.0;
+        assert_ne!(hash_tensor(&a), hash_tensor(&c), "one-ulp flip changes hash");
+
+        let zero = Tensor::new([1], vec![0.0]);
+        let negzero = Tensor::new([1], vec![-0.0]);
+        assert_ne!(hash_tensor(&zero), hash_tensor(&negzero), "raw bits, not values");
+    }
+
+    #[test]
+    fn domain_separation() {
+        let t = Tensor::new([1], vec![1.0]);
+        let th = hash_tensor(&t);
+        let raw = Hash::of_bytes(&t.to_le_bytes());
+        assert_ne!(th, raw);
+    }
+
+    #[test]
+    fn tensor_list_order_matters() {
+        let a = Tensor::new([1], vec![1.0]);
+        let b = Tensor::new([1], vec![2.0]);
+        let h1 = hash_tensor_list(&[("a", &a), ("b", &b)]);
+        let h2 = hash_tensor_list(&[("b", &b), ("a", &a)]);
+        assert_ne!(h1, h2);
+    }
+
+    #[test]
+    fn hasher_length_prefixing_prevents_ambiguity() {
+        // ("ab","c") must differ from ("a","bc")
+        let mut h1 = Hasher::new("t");
+        h1.str("ab").str("c");
+        let mut h2 = Hasher::new("t");
+        h2.str("a").str("bc");
+        assert_ne!(h1.finish(), h2.finish());
+    }
+}

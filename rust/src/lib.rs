@@ -1,0 +1,25 @@
+//! # Verde: Verification via Refereed Delegation for Machine Learning Programs
+//!
+//! A reproduction of the Verde paper (Arun et al., 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the dispute-resolution coordinator: trainers,
+//!   referee, the two-phase bisection protocol, Merkle commitments, and the
+//!   deterministic (RepOps) execution substrate it arbitrates over.
+//! * **Layer 2** — a JAX training-step / inference graph (`python/compile/model.py`)
+//!   lowered AOT to HLO text and executed from Rust via PJRT (`runtime`).
+//! * **Layer 1** — Pallas kernels implementing reproducible (fixed
+//!   floating-point-order) operators (`python/compile/kernels/`).
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod tensor;
+pub mod hash;
+pub mod graph;
+pub mod model;
+pub mod train;
+pub mod verde;
+pub mod net;
+pub mod runtime;
+pub mod util;

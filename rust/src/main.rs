@@ -1,0 +1,183 @@
+//! `verde` — CLI for the refereed-delegation training system.
+//!
+//! Subcommands:
+//!   train       run a training job honestly and print the loss curve + commitment
+//!   dispute     delegate to 2 trainers (one faulty) and resolve the dispute
+//!   tournament  k trainers with a mix of faults; run the knockout
+//!   info        print a model preset's graph statistics
+//!
+//! Examples:
+//!   verde train --model llama-tiny --steps 32 --batch 2 --seq 8
+//!   verde dispute --model mlp --steps 16 --fault tamper --fault-step 9
+//!   verde tournament --model mlp --steps 8 --k 4
+//!   verde info --model llama-small
+
+use verde::graph::kernels::Backend;
+use verde::model::Preset;
+use verde::tensor::profile::HardwareProfile;
+use verde::train::session::Session;
+use verde::train::JobSpec;
+use verde::util::cli::Args;
+use verde::util::metrics::human_bytes;
+use verde::verde::faults::{first_mutable_node, Fault};
+use verde::verde::tournament::run_tournament;
+use verde::verde::trainer::TrainerNode;
+use verde::verde::run_dispute;
+
+fn spec_from(args: &Args) -> JobSpec {
+    let preset = Preset::parse(args.get_or("model", "mlp"))
+        .unwrap_or_else(|| panic!("unknown --model (try: mlp, llama-tiny, llama-small, llama-base, bert-tiny, bert-small)"));
+    let mut spec = JobSpec::quick(preset, args.get_u64("steps", 16));
+    spec.batch = args.get_usize("batch", 2);
+    spec.seq = args.get_usize("seq", 8);
+    spec.checkpoint_n = args.get_u64("checkpoint-n", 4);
+    spec.weight_seed = args.get_u64("weight-seed", 0xA11CE);
+    spec.data_seed = args.get_u64("data-seed", 0xDA7A);
+    spec
+}
+
+fn fault_from(args: &Args, spec: JobSpec) -> Fault {
+    let step = args.get_u64("fault-step", spec.steps / 2 + 1);
+    let session = Session::new(spec);
+    let upd = *session.program.param_updates.values().map(|s| &s.node).min().unwrap();
+    match args.get_or("fault", "tamper") {
+        "tamper" => Fault::TamperOutput {
+            step,
+            node: args.get_usize("fault-node", upd),
+            delta: args.get_f32("fault-delta", 0.05),
+        },
+        "wrong-op" => Fault::WrongOperator {
+            step,
+            node: args.get_usize(
+                "fault-node",
+                first_mutable_node(&session.program.graph).expect("no mutable op"),
+            ),
+        },
+        "wrong-data" => Fault::WrongData { step },
+        "skip-opt" => Fault::SkipOptimizer { step },
+        "skip-steps" => Fault::SkipSteps { after: step.saturating_sub(1).max(1) },
+        "forged-lineage" => {
+            let mm = session
+                .program
+                .graph
+                .nodes
+                .iter()
+                .position(|n| matches!(n.op, verde::graph::Op::MatMul))
+                .expect("no matmul");
+            Fault::ForgedLineage { step, node: args.get_usize("fault-node", mm) }
+        }
+        "inconsistent" => Fault::InconsistentCommit { step },
+        "non-rep" => Fault::NonRepHardware,
+        other => panic!("unknown --fault '{other}' (tamper, wrong-op, wrong-data, skip-opt, skip-steps, forged-lineage, inconsistent, non-rep)"),
+    }
+}
+
+fn cmd_train(args: &Args) {
+    let spec = spec_from(args);
+    println!("training {} for {} steps (batch={}, seq={})", spec.preset.name(), spec.steps, spec.batch, spec.seq);
+    let mut t = TrainerNode::honest("trainer", spec);
+    let t0 = std::time::Instant::now();
+    let commit = t.train();
+    let dt = t0.elapsed();
+    for (i, l) in t.losses.iter().enumerate() {
+        if i == 0 || (i + 1) % 10 == 0 || i + 1 == t.losses.len() {
+            println!("  step {:>5}  loss {:.4}", i + 1, l);
+        }
+    }
+    println!("final commitment: {}", commit.to_hex());
+    println!(
+        "wall {dt:?}  ({:.1} steps/s)  checkpoint storage {}",
+        spec.steps as f64 / dt.as_secs_f64(),
+        human_bytes(t.counters.get("checkpoint_bytes_stored"))
+    );
+}
+
+fn cmd_dispute(args: &Args) {
+    let spec = spec_from(args);
+    let fault = fault_from(args, spec);
+    println!("job: {} x{} steps; cheater fault: {fault:?}", spec.preset.name(), spec.steps);
+    let backend = if matches!(fault, Fault::NonRepHardware) {
+        Backend::Free(HardwareProfile::T4_16G)
+    } else {
+        Backend::Rep
+    };
+    let mut honest = TrainerNode::honest("honest", spec);
+    let mut cheat = TrainerNode::new("cheat", spec, backend, fault);
+    print!("training honest trainer... ");
+    honest.train();
+    print!("done. training cheater... ");
+    cheat.train();
+    println!("done.");
+    let r = run_dispute(spec, honest, cheat);
+    println!("--- dispute report ---");
+    println!("verdict:        {:?}", r.verdict);
+    println!("diverging step: {:?}", r.diverging_step);
+    println!("diverging node: {:?}", r.diverging_node);
+    println!("phase-1 rounds: {}", r.phase1_rounds);
+    println!(
+        "bytes moved:    trainer0 {} / trainer1 {}",
+        human_bytes(r.bytes[0]),
+        human_bytes(r.bytes[1])
+    );
+    println!("referee work:   {}", r.referee.to_json());
+}
+
+fn cmd_tournament(args: &Args) {
+    let spec = spec_from(args);
+    let k = args.get_usize("k", 4);
+    println!("tournament: {k} trainers, {} x{} steps", spec.preset.name(), spec.steps);
+    let session = Session::new(spec);
+    let upd = *session.program.param_updates.values().map(|s| &s.node).min().unwrap();
+    let mut trainers: Vec<TrainerNode> = (0..k)
+        .map(|i| {
+            // trainer 0 honest; others get a spread of faults
+            let fault = match i % 4 {
+                0 => Fault::None,
+                1 => Fault::TamperOutput { step: 2, node: upd, delta: 0.03 },
+                2 => Fault::WrongData { step: 3 },
+                _ => Fault::SkipSteps { after: spec.steps / 2 },
+            };
+            let mut t = TrainerNode::new(&format!("t{i}"), spec, Backend::Rep, fault);
+            print!("training t{i} ({:?})... ", fault);
+            t.train();
+            println!("done");
+            t
+        })
+        .collect();
+    let r = run_tournament(spec, &mut trainers);
+    println!("--- tournament report ---");
+    println!("winner:    t{} (commitment {})", r.winner, r.accepted.short());
+    println!("disputes:  {}", r.disputes);
+    for (i, v) in &r.eliminated {
+        println!("eliminated t{i}: {v:?}");
+    }
+}
+
+fn cmd_info(args: &Args) {
+    let spec = spec_from(args);
+    let session = Session::new(spec);
+    let m = spec.preset.build(spec.batch, spec.seq);
+    println!("model {}", spec.preset.name());
+    println!("  parameters:        {}", m.n_params());
+    println!("  forward nodes:     {}", m.builder.graph.len());
+    println!("  extended nodes:    {}", session.program.graph.len());
+    println!("  trainable tensors: {}", session.program.param_updates.len());
+    println!("  state size:        {}", human_bytes(session.genesis.byte_len() as u64));
+    println!("  graph commitment:  {}", session.program.graph.structure_hash().to_hex());
+    println!("  job commitment:    {}", session.job_hash.to_hex());
+}
+
+fn main() {
+    let args = Args::parse();
+    match args.positional.first().map(String::as_str) {
+        Some("train") => cmd_train(&args),
+        Some("dispute") => cmd_dispute(&args),
+        Some("tournament") => cmd_tournament(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!("usage: verde <train|dispute|tournament|info> [--model M] [--steps N] ...");
+            eprintln!("see rust/src/main.rs header for examples");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! LoRA helpers: presets for the paper's Table 2 fine-tuning benchmark
+//! (Llama-8B + LoRA → our `llama-base` + rank-8 adapters).
+
+use super::transformer::{build_llama, LlamaConfig};
+use super::BuiltModel;
+
+/// `llama-base` with rank-`r` adapters on the attention q/v projections and
+/// all base weights frozen — the Table 2 configuration at testbed scale.
+pub fn llama_base_lora(r: usize, batch: usize, seq: usize) -> BuiltModel {
+    build_llama(&LlamaConfig {
+        vocab: 256,
+        d_model: 192,
+        n_layers: 6,
+        n_heads: 6,
+        d_ff: 384,
+        seq,
+        batch,
+        lora_rank: Some(r),
+        rope_base: 10_000.0,
+    })
+}
+
+/// Tiny LoRA model for protocol tests.
+pub fn llama_tiny_lora(r: usize, batch: usize, seq: usize) -> BuiltModel {
+    build_llama(&LlamaConfig {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        seq,
+        batch,
+        lora_rank: Some(r),
+        rope_base: 10_000.0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::autodiff::Optimizer;
+
+    #[test]
+    fn lora_update_set_is_adapters_only() {
+        let m = llama_tiny_lora(4, 1, 4);
+        let ts = m.train_step(&Optimizer::adam(1e-3));
+        assert!(!ts.param_updates.is_empty());
+        for k in ts.param_updates.keys() {
+            assert!(k.contains("lora_"), "{k}");
+        }
+        // 2 layers × (q, v) × (a, b) = 8 adapters
+        assert_eq!(ts.param_updates.len(), 8);
+    }
+
+    #[test]
+    fn frozen_params_carry_over_in_state() {
+        let m = llama_tiny_lora(2, 1, 4);
+        let opt = Optimizer::adam(1e-3);
+        let st = m.init_state(5, &opt);
+        // optimizer state exists only for adapters
+        for k in st.opt.keys() {
+            assert!(k.contains("lora_"), "{k}");
+        }
+        assert_eq!(st.opt.len(), 2 * 8);
+    }
+}

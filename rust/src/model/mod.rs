@@ -1,0 +1,265 @@
+//! Model zoo: graph-builder definitions of the paper's evaluation models,
+//! scaled to this testbed (DESIGN.md §4 substitution 3).
+//!
+//! Two transformer families cover the paper's operator inventories:
+//!
+//! * **Llama family** ([`transformer`]) — RMSNorm, SiLU-gated MLP, RoPE,
+//!   untied LM head (paper's Llama-3.1-1B / 8B rows);
+//! * **BERT family** ([`bert`]) — LayerNorm, exact-erf GeLU, learned
+//!   positional embeddings (paper's DistilBERT rows).
+//!
+//! Plus [`mlp`] (a small classifier for fast protocol tests) and [`lora`]
+//! (low-rank adapters for the paper's Table 2 fine-tuning row).
+
+pub mod bert;
+pub mod lora;
+pub mod mlp;
+pub mod transformer;
+
+use crate::graph::autodiff::{build_train_step, Optimizer, TrainStep};
+use crate::graph::builder::GraphBuilder;
+use crate::graph::executor::State;
+use crate::graph::Slot;
+use crate::tensor::Tensor;
+use crate::util::prng::derive_seed;
+
+/// A built forward pass, ready for [`build_train_step`] or inference.
+pub struct BuiltModel {
+    pub builder: GraphBuilder,
+    /// `[batch*seq, vocab]` logits.
+    pub logits: Slot,
+    /// Scalar mean cross-entropy over all positions.
+    pub loss: Slot,
+    /// Names of parameters a LoRA run freezes (empty without LoRA).
+    pub frozen: Vec<String>,
+}
+
+impl BuiltModel {
+    /// Derive the extended training-step program.
+    pub fn train_step(&self, opt: &Optimizer) -> TrainStep {
+        let freeze: Vec<&str> = self.frozen.iter().map(String::as_str).collect();
+        build_train_step(&self.builder, self.loss, opt, &freeze)
+    }
+
+    /// Deterministic initial state: params from seeded uniform init scaled by
+    /// 1/√fan_in, optimizer state zeroed per `opt`.
+    pub fn init_state(&self, seed: u64, opt: &Optimizer) -> State {
+        let mut st = State::default();
+        for (name, shape) in &self.builder.param_shapes {
+            let fan_in = if shape.len() >= 2 { shape[0] } else { shape[0].max(1) };
+            let scale = if shape.len() == 1 {
+                // norm gains init to 1, biases to 0 — match convention by name
+                0.0
+            } else {
+                1.0 / (fan_in as f32).sqrt()
+            };
+            let t = if shape.len() == 1 {
+                if name.ends_with(".gamma") || name.ends_with(".gain") {
+                    Tensor::full(shape.clone(), 1.0)
+                } else {
+                    Tensor::zeros(shape.clone())
+                }
+            } else {
+                let _ = scale;
+                Tensor::rand(shape.clone(), derive_seed(seed, "param", param_index(name)), 1.0 / (fan_in as f32).sqrt())
+            };
+            st.params.insert(name.clone(), t);
+        }
+        // optimizer state: zeros matching each trainable param
+        let ts = self.train_step(opt);
+        for name in ts.opt_updates.keys() {
+            let pname = name.rsplit_once('.').unwrap().0;
+            st.opt.insert(name.clone(), Tensor::zeros(st.params[pname].shape().to_vec()));
+        }
+        st
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.builder
+            .param_shapes
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+}
+
+/// Stable per-name stream index for parameter init.
+fn param_index(name: &str) -> u64 {
+    // FNV over the name; collisions only mean shared streams, harmless.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Named model presets used by the CLI, tests and benches.
+/// `(family)-(size)` mirror the paper's evaluation models at testbed scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Preset {
+    /// 2-layer byte-vocab Llama — protocol tests & disputes (~110k params).
+    LlamaTiny,
+    /// `llama-tiny` with rank-4 LoRA adapters, base weights frozen — the
+    /// Table 2 fine-tuning shape at protocol-test scale.
+    LlamaTinyLora,
+    /// 4-layer Llama — the Table 1 "Llama-1B" stand-in (~3M params).
+    LlamaSmall,
+    /// 6-layer Llama — the Table 2 "Llama-8B" stand-in (~6M params).
+    LlamaBase,
+    /// 2-layer BERT — protocol tests.
+    BertTiny,
+    /// 4-layer BERT — the Table 1 "DistilBERT" stand-in (~1M params).
+    BertSmall,
+    /// Tiny MLP classifier — fastest dispute demos.
+    Mlp,
+}
+
+impl Preset {
+    pub fn parse(s: &str) -> Option<Preset> {
+        Some(match s {
+            "llama-tiny" => Preset::LlamaTiny,
+            "llama-tiny-lora" => Preset::LlamaTinyLora,
+            "llama-small" => Preset::LlamaSmall,
+            "llama-base" => Preset::LlamaBase,
+            "bert-tiny" => Preset::BertTiny,
+            "bert-small" => Preset::BertSmall,
+            "mlp" => Preset::Mlp,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Preset::LlamaTiny => "llama-tiny",
+            Preset::LlamaTinyLora => "llama-tiny-lora",
+            Preset::LlamaSmall => "llama-small",
+            Preset::LlamaBase => "llama-base",
+            Preset::BertTiny => "bert-tiny",
+            Preset::BertSmall => "bert-small",
+            Preset::Mlp => "mlp",
+        }
+    }
+
+    /// Build the forward graph with the preset's default batch/seq.
+    pub fn build(&self, batch: usize, seq: usize) -> BuiltModel {
+        match self {
+            Preset::LlamaTinyLora => lora::llama_tiny_lora(4, batch, seq),
+            Preset::LlamaTiny => transformer::build_llama(&transformer::LlamaConfig {
+                vocab: 64,
+                d_model: 32,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 64,
+                seq,
+                batch,
+                lora_rank: None,
+                rope_base: 10_000.0,
+            }),
+            Preset::LlamaSmall => transformer::build_llama(&transformer::LlamaConfig {
+                vocab: 256,
+                d_model: 128,
+                n_layers: 4,
+                n_heads: 4,
+                d_ff: 256,
+                seq,
+                batch,
+                lora_rank: None,
+                rope_base: 10_000.0,
+            }),
+            Preset::LlamaBase => transformer::build_llama(&transformer::LlamaConfig {
+                vocab: 256,
+                d_model: 192,
+                n_layers: 6,
+                n_heads: 6,
+                d_ff: 384,
+                seq,
+                batch,
+                lora_rank: None,
+                rope_base: 10_000.0,
+            }),
+            Preset::BertTiny => bert::build_bert(&bert::BertConfig {
+                vocab: 64,
+                d_model: 32,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 64,
+                seq,
+                batch,
+            }),
+            Preset::BertSmall => bert::build_bert(&bert::BertConfig {
+                vocab: 256,
+                d_model: 96,
+                n_layers: 4,
+                n_heads: 4,
+                d_ff: 192,
+                seq,
+                batch,
+            }),
+            Preset::Mlp => mlp::build_mlp(&mlp::MlpConfig {
+                d_in: 16,
+                d_hidden: 32,
+                classes: 8,
+                batch,
+            }),
+        }
+    }
+
+    pub const ALL: [Preset; 7] = [
+        Preset::LlamaTiny,
+        Preset::LlamaTinyLora,
+        Preset::LlamaSmall,
+        Preset::LlamaBase,
+        Preset::BertTiny,
+        Preset::BertSmall,
+        Preset::Mlp,
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_build_and_validate() {
+        for p in Preset::ALL {
+            let m = p.build(2, 8);
+            m.builder.graph.validate().unwrap();
+            assert!(m.n_params() > 0, "{}", p.name());
+            assert!(m.builder.shape(m.loss).is_empty(), "loss is scalar");
+        }
+    }
+
+    #[test]
+    fn preset_names_roundtrip() {
+        for p in Preset::ALL {
+            assert_eq!(Preset::parse(p.name()), Some(p));
+        }
+        assert_eq!(Preset::parse("nope"), None);
+    }
+
+    #[test]
+    fn init_state_is_seed_deterministic() {
+        let m = Preset::LlamaTiny.build(2, 8);
+        let opt = Optimizer::adam(1e-3);
+        let a = m.init_state(7, &opt);
+        let b = m.init_state(7, &opt);
+        let c = m.init_state(8, &opt);
+        assert_eq!(a.params.len(), b.params.len());
+        for (k, t) in &a.params {
+            assert!(t.bit_eq(&b.params[k]), "{k}");
+        }
+        assert!(a.params.iter().any(|(k, t)| !t.bit_eq(&c.params[k])));
+        // every trainable param has m and v
+        assert_eq!(a.opt.len(), 2 * a.params.len());
+    }
+
+    #[test]
+    fn norm_gains_init_to_one() {
+        let m = Preset::LlamaTiny.build(1, 4);
+        let st = m.init_state(1, &Optimizer::adam(1e-3));
+        let gamma = st.params.iter().find(|(k, _)| k.ends_with(".gamma")).unwrap();
+        assert!(gamma.1.data().iter().all(|&x| x == 1.0));
+    }
+}

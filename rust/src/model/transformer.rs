@@ -1,0 +1,376 @@
+//! Llama-family causal transformer LM: RMSNorm, RoPE, SiLU-gated MLP,
+//! untied LM head — the operator inventory of the paper's Llama-3.1 rows,
+//! optionally with LoRA adapters on the attention projections (Table 2).
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::Slot;
+use crate::tensor::math::{rep_cos, rep_sin};
+use crate::tensor::Tensor;
+
+use super::BuiltModel;
+
+/// Configuration for [`build_llama`].
+#[derive(Debug, Clone)]
+pub struct LlamaConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    /// `Some(r)` adds LoRA adapters (rank `r`) to q/v projections and
+    /// freezes every base weight — the paper's Table 2 fine-tuning setup.
+    pub lora_rank: Option<usize>,
+    pub rope_base: f32,
+}
+
+/// Deterministic RoPE tables `[seq, d_head/2]`, built with RepOps math so
+/// the program constants are bit-identical everywhere.
+pub fn rope_tables(seq: usize, d_head: usize, base: f32) -> (Tensor, Tensor) {
+    let half = d_head / 2;
+    let mut sin = vec![0.0f32; seq * half];
+    let mut cos = vec![0.0f32; seq * half];
+    for s in 0..seq {
+        for i in 0..half {
+            // theta = s * base^(-2i/d)
+            let exponent = -2.0 * i as f32 / d_head as f32;
+            // base^e = exp(e·ln base) via repops math
+            let freq = crate::tensor::math::rep_exp(exponent * crate::tensor::math::rep_ln(base));
+            let theta = s as f32 * freq;
+            sin[s * half + i] = rep_sin(theta);
+            cos[s * half + i] = rep_cos(theta);
+        }
+    }
+    (Tensor::new([seq, half], sin), Tensor::new([seq, half], cos))
+}
+
+/// Causal attention mask `[seq, seq]`: 0 on/below the diagonal, -1e9 above.
+pub fn causal_mask(seq: usize) -> Tensor {
+    let mut m = vec![0.0f32; seq * seq];
+    for i in 0..seq {
+        for j in (i + 1)..seq {
+            m[i * seq + j] = -1e9;
+        }
+    }
+    Tensor::new([seq, seq], m)
+}
+
+/// A linear projection, optionally LoRA-adapted:
+/// `y = x @ W (+ (x @ A) @ B · 1/r)`.
+/// Returns the output slot; pushes `A`/`B` params when `rank` is set.
+fn linear(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: Slot,
+    d_in: usize,
+    d_out: usize,
+    lora: Option<usize>,
+    frozen: &mut Vec<String>,
+) -> Slot {
+    let w = b.param(&format!("{name}.w"), [d_in, d_out]);
+    let base = b.matmul(&format!("{name}.mm"), x, w);
+    match lora {
+        None => base,
+        Some(r) => {
+            frozen.push(format!("{name}.w"));
+            let a = b.param(&format!("{name}.lora_a"), [d_in, r]);
+            let bb = b.param(&format!("{name}.lora_b"), [r, d_out]);
+            let xa = b.matmul(&format!("{name}.xa"), x, a);
+            let xab = b.matmul(&format!("{name}.xab"), xa, bb);
+            let scaled = b.scale(&format!("{name}.lora_scale"), xab, 1.0 / r as f32);
+            b.add(&format!("{name}.lora_add"), base, scaled)
+        }
+    }
+}
+
+/// Build the forward graph of a Llama-style causal LM.
+///
+/// Data inputs: `tokens [batch, seq]` (integer-valued), `targets
+/// [batch*seq]`. Output: mean next-token cross-entropy.
+pub fn build_llama(cfg: &LlamaConfig) -> BuiltModel {
+    let LlamaConfig { vocab, d_model: d, n_layers, n_heads: h, d_ff, seq: s, batch: bs, lora_rank, rope_base } = *cfg;
+    assert_eq!(d % h, 0, "d_model must divide n_heads");
+    let dh = d / h;
+    assert_eq!(dh % 2, 0, "head dim must be even for RoPE");
+    let mut b = GraphBuilder::new();
+    let mut frozen = Vec::new();
+
+    let tokens = b.data("tokens", [bs, s]);
+    let targets = b.data("targets", [bs * s]);
+
+    let embed = b.param("embed.w", [vocab, d]);
+    if lora_rank.is_some() {
+        frozen.push("embed.w".to_string());
+    }
+    let x0 = b.embedding("embed", embed, tokens);
+    let mut x = b.reshape("embed.flat", x0, [bs * s, d]); // [B*S, D]
+
+    let (sin_t, cos_t) = rope_tables(s, dh, rope_base);
+    let sin = b.constant("rope.sin", sin_t);
+    let cos = b.constant("rope.cos", cos_t);
+    let mask = b.constant("mask.causal", causal_mask(s));
+
+    for l in 0..n_layers {
+        let p = |part: &str| format!("blk{l}.{part}");
+
+        // ---- attention ----------------------------------------------------
+        let g1 = b.param(&p("attn_norm.gamma"), [d]);
+        if lora_rank.is_some() {
+            frozen.push(p("attn_norm.gamma"));
+        }
+        let xn = b.rmsnorm(&p("attn_norm"), x, g1, 1e-6);
+
+        let q = linear(&mut b, &p("attn.q"), xn, d, d, lora_rank, &mut frozen);
+        let k = linear(&mut b, &p("attn.k"), xn, d, d, None, &mut frozen);
+        let v = linear(&mut b, &p("attn.v"), xn, d, d, lora_rank, &mut frozen);
+        if lora_rank.is_some() {
+            frozen.push(p("attn.k.w"));
+        }
+
+        // heads: [B*S, D] -> [B, S, H, Dh] -> [B, H, S, Dh] -> [B*H, S, Dh]
+        let split = |b: &mut GraphBuilder, t: Slot, tag: &str| {
+            let r4 = b.reshape(&p(&format!("attn.{tag}.r4")), t, [bs, s, h, dh]);
+            let pm = b.perm0213(&p(&format!("attn.{tag}.perm")), r4);
+            b.reshape(&p(&format!("attn.{tag}.r3")), pm, [bs * h, s, dh])
+        };
+        let q3 = split(&mut b, q, "q");
+        let k3 = split(&mut b, k, "k");
+        let v3 = split(&mut b, v, "v");
+
+        let qr = b.rope(&p("attn.q.rope"), q3, sin, cos);
+        let kr = b.rope(&p("attn.k.rope"), k3, sin, cos);
+
+        let kt = b.transpose_last2(&p("attn.kt"), kr);
+        let scores = b.bmm(&p("attn.scores"), qr, kt);
+        let scaled = b.scale(&p("attn.scale"), scores, 1.0 / (dh as f32).sqrt());
+        let masked = b.add_bcast(&p("attn.mask"), scaled, mask);
+        let probs = b.softmax(&p("attn.softmax"), masked);
+        let ctx = b.bmm(&p("attn.ctx"), probs, v3);
+
+        // merge heads: [B*H, S, Dh] -> [B, H, S, Dh] -> [B, S, H, Dh] -> [B*S, D]
+        let c4 = b.reshape(&p("attn.merge.r4"), ctx, [bs, h, s, dh]);
+        let cp = b.perm0213(&p("attn.merge.perm"), c4);
+        let cm = b.reshape(&p("attn.merge.r2"), cp, [bs * s, d]);
+
+        let o = linear(&mut b, &p("attn.o"), cm, d, d, None, &mut frozen);
+        if lora_rank.is_some() {
+            frozen.push(p("attn.o.w"));
+        }
+        x = b.add(&p("attn.residual"), x, o);
+
+        // ---- SiLU-gated MLP -------------------------------------------------
+        let g2 = b.param(&p("mlp_norm.gamma"), [d]);
+        if lora_rank.is_some() {
+            frozen.push(p("mlp_norm.gamma"));
+        }
+        let xn2 = b.rmsnorm(&p("mlp_norm"), x, g2, 1e-6);
+        let gate_w = b.param(&p("mlp.gate.w"), [d, d_ff]);
+        let up_w = b.param(&p("mlp.up.w"), [d, d_ff]);
+        let down_w = b.param(&p("mlp.down.w"), [d_ff, d]);
+        if lora_rank.is_some() {
+            frozen.push(p("mlp.gate.w"));
+            frozen.push(p("mlp.up.w"));
+            frozen.push(p("mlp.down.w"));
+        }
+        let gate = b.matmul(&p("mlp.gate"), xn2, gate_w);
+        let gact = b.silu(&p("mlp.silu"), gate);
+        let up = b.matmul(&p("mlp.up"), xn2, up_w);
+        let prod = b.mul(&p("mlp.gateup"), gact, up);
+        let down = b.matmul(&p("mlp.down"), prod, down_w);
+        x = b.add(&p("mlp.residual"), x, down);
+    }
+
+    let gf = b.param("final_norm.gamma", [d]);
+    if lora_rank.is_some() {
+        frozen.push("final_norm.gamma".to_string());
+    }
+    let xf = b.rmsnorm("final_norm", x, gf, 1e-6);
+    let head = b.param("lm_head.w", [d, vocab]);
+    if lora_rank.is_some() {
+        frozen.push("lm_head.w".to_string());
+    }
+    let logits = b.matmul("lm_head", xf, head);
+    let loss = b.ce_loss("loss", logits, targets);
+
+    BuiltModel { builder: b, logits, loss, frozen }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::autodiff::Optimizer;
+    use crate::graph::executor::{execute, ExecOpts};
+    use crate::graph::kernels::Backend;
+    use std::collections::BTreeMap;
+
+    fn tiny() -> LlamaConfig {
+        LlamaConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            seq: 6,
+            batch: 2,
+            lora_rank: None,
+            rope_base: 10_000.0,
+        }
+    }
+
+    fn batch_for(cfg: &LlamaConfig, seed: u64) -> BTreeMap<String, Tensor> {
+        let mut rng = crate::util::prng::SplitMix64::new(seed);
+        let toks: Vec<f32> = (0..cfg.batch * cfg.seq)
+            .map(|_| rng.next_bounded(cfg.vocab as u64) as f32)
+            .collect();
+        let tgts: Vec<f32> = (0..cfg.batch * cfg.seq)
+            .map(|_| rng.next_bounded(cfg.vocab as u64) as f32)
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("tokens".into(), Tensor::new([cfg.batch, cfg.seq], toks));
+        m.insert("targets".into(), Tensor::new([cfg.batch * cfg.seq], tgts));
+        m
+    }
+
+    #[test]
+    fn forward_runs_and_loss_near_uniform() {
+        let cfg = tiny();
+        let m = build_llama(&cfg);
+        let st = m.init_state(3, &Optimizer::adam(1e-3));
+        let batch = batch_for(&cfg, 5);
+        let e = execute(&m.builder.graph, &st, &batch, Backend::Rep, 1, &ExecOpts::default());
+        let loss = e.values[m.loss.node][0].data()[0];
+        let uniform = (cfg.vocab as f32).ln();
+        assert!(
+            (loss - uniform).abs() < 0.5,
+            "random-init loss {loss} should be near ln V = {uniform}"
+        );
+    }
+
+    #[test]
+    fn causal_mask_blocks_future() {
+        let m = causal_mask(4);
+        assert_eq!(m.at2(0, 0), 0.0);
+        assert_eq!(m.at2(2, 1), 0.0);
+        assert_eq!(m.at2(1, 2), -1e9);
+        assert_eq!(m.at2(0, 3), -1e9);
+    }
+
+    #[test]
+    fn causality_future_tokens_dont_affect_past_logits() {
+        let cfg = tiny();
+        let m = build_llama(&cfg);
+        let st = m.init_state(3, &Optimizer::adam(1e-3));
+        let mut b1 = batch_for(&cfg, 7);
+        let mut b2 = b1.clone();
+        // change the LAST token of sequence 0
+        let last = cfg.seq - 1;
+        b2.get_mut("tokens").unwrap().data_mut()[last] =
+            (b1["tokens"].data()[last] as usize as f32 + 1.0) % cfg.vocab as f32;
+        let e1 = execute(&m.builder.graph, &st, &b1, Backend::Rep, 1, &ExecOpts::default());
+        let e2 = execute(&m.builder.graph, &st, &b2, Backend::Rep, 1, &ExecOpts::default());
+        let l1 = &e1.values[m.logits.node][0];
+        let l2 = &e2.values[m.logits.node][0];
+        let v = cfg.vocab;
+        // logits at positions < last of sequence 0 must be bit-identical
+        for pos in 0..last {
+            for j in 0..v {
+                assert_eq!(
+                    l1.data()[pos * v + j].to_bits(),
+                    l2.data()[pos * v + j].to_bits(),
+                    "position {pos} leaked future info"
+                );
+            }
+        }
+        // ...and the last position must differ
+        let differs = (0..v).any(|j| l1.data()[last * v + j] != l2.data()[last * v + j]);
+        assert!(differs);
+        let _ = &mut b1;
+    }
+
+    #[test]
+    fn rope_tables_bounded_and_first_row_identity() {
+        let (sin, cos) = rope_tables(8, 8, 10_000.0);
+        // position 0 ⇒ zero rotation
+        for i in 0..4 {
+            assert_eq!(sin.at2(0, i), 0.0);
+            assert_eq!(cos.at2(0, i), 1.0);
+        }
+        for v in sin.data().iter().chain(cos.data()) {
+            assert!(v.abs() <= 1.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn lora_freezes_base_trains_adapters() {
+        let mut cfg = tiny();
+        cfg.lora_rank = Some(4);
+        let m = build_llama(&cfg);
+        let ts = m.train_step(&Optimizer::adam(1e-3));
+        // all updated params are LoRA adapters
+        for name in ts.param_updates.keys() {
+            assert!(
+                name.contains("lora_"),
+                "only adapters should train, got {name}"
+            );
+        }
+        assert!(!ts.param_updates.is_empty());
+        // base weights exist but are frozen
+        assert!(m.frozen.iter().any(|f| f == "lm_head.w"));
+        // trainable fraction is small (the point of LoRA)
+        let total: usize = m.n_params();
+        let trainable: usize = m
+            .builder
+            .param_shapes
+            .iter()
+            .filter(|(n, _)| ts.param_updates.contains_key(n))
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+        assert!(
+            (trainable as f64) < 0.3 * total as f64,
+            "trainable {trainable} of {total}"
+        );
+    }
+
+    #[test]
+    fn training_reduces_loss_on_learnable_data() {
+        // learnable task: next token = (token + 1) mod V
+        let cfg = LlamaConfig { n_layers: 1, seq: 8, ..tiny() };
+        let m = build_llama(&cfg);
+        let ts = m.train_step(&Optimizer::adam(0.01));
+        let mut st = m.init_state(1, &Optimizer::adam(0.01));
+        let mut rng = crate::util::prng::SplitMix64::new(9);
+        let mut first = None;
+        let mut last = 0.0;
+        for step in 1..=30u64 {
+            let mut toks = Vec::new();
+            for _ in 0..cfg.batch {
+                let start = rng.next_bounded(cfg.vocab as u64) as usize;
+                for i in 0..cfg.seq {
+                    toks.push(((start + i) % cfg.vocab) as f32);
+                }
+            }
+            let tgts: Vec<f32> = toks.iter().map(|&t| ((t as usize + 1) % cfg.vocab) as f32).collect();
+            let mut batch = BTreeMap::new();
+            batch.insert("tokens".into(), Tensor::new([cfg.batch, cfg.seq], toks));
+            batch.insert("targets".into(), Tensor::new([cfg.batch * cfg.seq], tgts));
+            let e = execute(&ts.graph, &st, &batch, Backend::Rep, step, &ExecOpts::default());
+            last = e.values[ts.loss.node][0].data()[0];
+            first.get_or_insert(last);
+            let mut next = st.clone();
+            for (name, slot) in &ts.param_updates {
+                next.params.insert(name.clone(), e.values[slot.node][slot.out_idx].clone());
+            }
+            for (name, slot) in &ts.opt_updates {
+                next.opt.insert(name.clone(), e.values[slot.node][slot.out_idx].clone());
+            }
+            next.step += 1;
+            st = next;
+        }
+        assert!(
+            last < first.unwrap() * 0.7,
+            "loss {} -> {last} should drop on deterministic data",
+            first.unwrap()
+        );
+    }
+}

@@ -1,0 +1,90 @@
+//! Party communication layer: a synchronous request/response endpoint
+//! abstraction with byte-level accounting, plus a thread-backed transport so
+//! trainers can run as independent actors (the deployment shape of the
+//! paper's client/trainers/referee topology).
+//!
+//! The dispute protocol is referee-driven and strictly turn-based, so a
+//! synchronous `call` interface is the faithful model; the threaded
+//! transport exists to prove process-separation works and to host long
+//! training runs off the coordinator thread.
+
+pub mod threaded;
+
+use crate::util::metrics::Counters;
+use crate::verde::protocol::{Request, Response};
+
+/// Anything the referee/client can issue protocol requests to.
+pub trait Endpoint {
+    fn name(&self) -> &str;
+    fn call(&mut self, req: Request) -> Response;
+}
+
+impl<E: Endpoint + ?Sized> Endpoint for &mut E {
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+    fn call(&mut self, req: Request) -> Response {
+        (**self).call(req)
+    }
+}
+
+/// Wraps an endpoint and meters traffic in both directions — the
+/// communication-cost numbers of EXPERIMENTS.md come from these counters.
+pub struct Metered<E: Endpoint> {
+    pub inner: E,
+    pub counters: Counters,
+}
+
+impl<E: Endpoint> Metered<E> {
+    pub fn new(inner: E) -> Self {
+        Metered { inner, counters: Counters::new() }
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        self.counters.get("bytes_to")
+    }
+
+    pub fn bytes_received(&self) -> u64 {
+        self.counters.get("bytes_from")
+    }
+}
+
+impl<E: Endpoint> Endpoint for Metered<E> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn call(&mut self, req: Request) -> Response {
+        self.counters.add("bytes_to", req.wire_size() as u64);
+        self.counters.incr("requests");
+        let resp = self.inner.call(req);
+        self.counters.add("bytes_from", resp.wire_size() as u64);
+        resp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo;
+
+    impl Endpoint for Echo {
+        fn name(&self) -> &str {
+            "echo"
+        }
+        fn call(&mut self, _req: Request) -> Response {
+            Response::Refuse("echo".into())
+        }
+    }
+
+    #[test]
+    fn meter_counts_traffic() {
+        let mut m = Metered::new(Echo);
+        let r = m.call(Request::FinalCommit);
+        assert!(matches!(r, Response::Refuse(_)));
+        assert!(m.bytes_sent() > 0);
+        assert!(m.bytes_received() > 0);
+        assert_eq!(m.counters.get("requests"), 1);
+    }
+}

@@ -1,0 +1,105 @@
+//! Thread-backed transport: run any [`Endpoint`] as an independent actor
+//! with an mpsc mailbox, mirroring a trainer process on a remote machine.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use super::Endpoint;
+use crate::verde::protocol::{Request, Response};
+
+/// Client-side handle to an endpoint running on its own thread.
+pub struct Remote {
+    name: String,
+    tx: Sender<Request>,
+    rx: Receiver<Response>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Spawn `endpoint` onto a dedicated thread; the returned [`Remote`] is
+/// itself an [`Endpoint`].
+pub fn spawn<E: Endpoint + Send + 'static>(mut endpoint: E) -> Remote {
+    let name = endpoint.name().to_string();
+    let (req_tx, req_rx) = channel::<Request>();
+    let (resp_tx, resp_rx) = channel::<Response>();
+    let join = std::thread::Builder::new()
+        .name(format!("verde-{name}"))
+        .spawn(move || {
+            while let Ok(req) = req_rx.recv() {
+                let stop = matches!(req, Request::Shutdown);
+                let resp = endpoint.call(req);
+                if resp_tx.send(resp).is_err() || stop {
+                    break;
+                }
+            }
+        })
+        .expect("spawn endpoint thread");
+    Remote { name, tx: req_tx, rx: resp_rx, join: Some(join) }
+}
+
+impl Endpoint for Remote {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn call(&mut self, req: Request) -> Response {
+        if self.tx.send(req).is_err() {
+            return Response::Refuse("endpoint thread gone".into());
+        }
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Response::Refuse("endpoint thread gone".into()))
+    }
+}
+
+impl Drop for Remote {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        let _ = self.rx.recv();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Const(u8);
+
+    impl Endpoint for Const {
+        fn name(&self) -> &str {
+            "const"
+        }
+        fn call(&mut self, req: Request) -> Response {
+            match req {
+                Request::Shutdown => Response::Bye,
+                _ => Response::Refuse(format!("const-{}", self.0)),
+            }
+        }
+    }
+
+    #[test]
+    fn remote_roundtrip() {
+        let mut r = spawn(Const(7));
+        for _ in 0..3 {
+            match r.call(Request::FinalCommit) {
+                Response::Refuse(s) => assert_eq!(s, "const-7"),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn two_remotes_run_concurrently() {
+        let mut a = spawn(Const(1));
+        let mut b = spawn(Const(2));
+        match (a.call(Request::FinalCommit), b.call(Request::FinalCommit)) {
+            (Response::Refuse(x), Response::Refuse(y)) => {
+                assert_eq!(x, "const-1");
+                assert_eq!(y, "const-2");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

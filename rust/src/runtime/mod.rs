@@ -1,0 +1,176 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! HLO *text* is the interchange format (jax ≥ 0.5 emits 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects in proto form; the text parser
+//! reassigns ids — see /opt/xla-example/README.md).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// A PJRT CPU client plus the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+/// One compiled executable.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The AOT model manifest (`manifest.txt`): flat parameter order + config.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub params: Vec<(String, Vec<usize>)>,
+    pub config: std::collections::BTreeMap<String, u64>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut m = Manifest::default();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("config") => {
+                    let key = it.next().ok_or_else(|| anyhow!("bad config line"))?;
+                    let val: u64 = it.next().ok_or_else(|| anyhow!("bad config line"))?.parse()?;
+                    m.config.insert(key.to_string(), val);
+                }
+                Some("param") => {
+                    let name = it.next().ok_or_else(|| anyhow!("bad param line"))?;
+                    let dims: Vec<usize> =
+                        it.map(|d| d.parse()).collect::<Result<_, _>>()?;
+                    m.params.push((name.to_string(), dims));
+                }
+                _ => {}
+            }
+        }
+        if m.params.is_empty() {
+            bail!("manifest {} has no params", path.display());
+        }
+        Ok(m)
+    }
+
+    pub fn cfg(&self, key: &str) -> u64 {
+        self.config[key]
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+}
+
+/// FP32 tensor → PJRT literal.
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+}
+
+/// Integer-valued FP32 tensor → i32 PJRT literal (token ids).
+pub fn to_literal_i32(t: &Tensor) -> Result<xla::Literal> {
+    let ints: Vec<i32> = t.data().iter().map(|&v| v as i32).collect();
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&ints).reshape(&dims)?)
+}
+
+/// PJRT literal → FP32 tensor.
+pub fn from_literal(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>()?;
+    Ok(Tensor::new(dims, data))
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at `artifacts_dir`.
+    pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir: artifacts_dir.into() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.dir.join("manifest.txt"))
+    }
+
+    /// Load + compile one HLO-text artifact by file name.
+    pub fn load(&self, file: &str) -> Result<Artifact> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Artifact { exe, name: file.to_string() })
+    }
+}
+
+impl Artifact {
+    /// Execute with the given literals; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("{}: empty result", self.name))?;
+        let lit = first.to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute on FP32 tensors only (kernel artifacts).
+    pub fn run_f32(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| to_literal(t)).collect::<Result<_>>()?;
+        let outs = self.run(&lits)?;
+        outs.iter().map(from_literal).collect()
+    }
+}
+
+/// Default artifact directory (`artifacts/` next to the binary's CWD, or
+/// `$VERDE_ARTIFACTS`).
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("VERDE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True when the AOT artifacts exist (tests skip gracefully otherwise).
+pub fn artifacts_present() -> bool {
+    default_dir().join("manifest.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::rand([3, 5], 1, 2.0);
+        let l = to_literal(&t).unwrap();
+        let back = from_literal(&l).unwrap();
+        assert!(t.bit_eq(&back));
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("verde-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("manifest.txt");
+        std::fs::write(&p, "config vocab 256\nconfig seq 16\nparam embed.w 256 64\nparam lm_head.w 64 256\n").unwrap();
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.cfg("vocab"), 256);
+        assert_eq!(m.n_params(), 2);
+        assert_eq!(m.params[0], ("embed.w".to_string(), vec![256, 64]));
+    }
+}

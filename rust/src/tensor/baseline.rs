@@ -1,0 +1,471 @@
+//! Free-order ("hardware-tuned") operators — the stand-in for cuDNN/torch
+//! kernels in the paper's overhead benchmarks (§4) and the *source* of the
+//! cross-hardware nondeterminism Verde exists to eliminate.
+//!
+//! Two deliberate differences from [`super::repops`]:
+//!
+//! 1. **Fused multiply-add.** Like cuDNN's FFMA-based kernels, the matmul
+//!    contracts `a*b + c` with a single rounding. This is faster on any FMA
+//!    machine and produces different bits than separate mul+add.
+//! 2. **Profile-scheduled reductions.** Reductions split into
+//!    `profile.lanes` independent partial accumulators (the analogue of
+//!    assigning the K loop to multiple threads) and combine them in the
+//!    profile's [`CombineOrder`]. Different profiles ⇒ different reduction
+//!    trees ⇒ different bits, deterministically *per profile* — a GPU is
+//!    self-consistent, but a T4 disagrees with an A100.
+//!
+//! Everything here is still sequential Rust on one core; what varies by
+//! profile is only the floating-point combination order, which is the
+//! paper-relevant behaviour (DESIGN.md §4, substitution 1–2).
+
+
+use super::profile::{CombineOrder, HardwareProfile};
+use super::repops::{bmm_dims, mm_dims, rows_lastdim};
+use super::Tensor;
+
+/// Combine per-lane partials in the profile's order.
+#[inline]
+fn combine(partials: &mut [f32], order: CombineOrder) -> f32 {
+    match order {
+        CombineOrder::Sequential => {
+            let mut acc = partials[0];
+            for &p in &partials[1..] {
+                acc += p;
+            }
+            acc
+        }
+        CombineOrder::ReverseSequential => {
+            let mut acc = *partials.last().unwrap();
+            for &p in partials[..partials.len() - 1].iter().rev() {
+                acc += p;
+            }
+            acc
+        }
+        CombineOrder::PairwiseTree => {
+            let mut n = partials.len();
+            while n > 1 {
+                let half = n / 2;
+                for i in 0..half {
+                    partials[i] = partials[2 * i] + partials[2 * i + 1];
+                }
+                if n % 2 == 1 {
+                    partials[half] = partials[n - 1];
+                    n = half + 1;
+                } else {
+                    n = half;
+                }
+            }
+            partials[0]
+        }
+    }
+}
+
+/// Free-order sum: lane-strided partials (`lane c` takes elements
+/// `c, c+L, c+2L, …`, like a strided thread assignment) combined per profile.
+pub fn sum_slice(xs: &[f32], hw: &HardwareProfile) -> f32 {
+    let lanes = hw.lanes.min(xs.len().max(1));
+    let mut partials = vec![0.0f32; lanes];
+    for (i, &x) in xs.iter().enumerate() {
+        partials[i % lanes] += x;
+    }
+    combine(&mut partials, hw.combine)
+}
+
+/// The order in which a profile's K chunks retire — the architecture-
+/// dependent schedule a tuned library's threadblocks would induce.
+fn chunk_order(lanes: usize, combine: CombineOrder) -> Vec<usize> {
+    match combine {
+        CombineOrder::Sequential => (0..lanes).collect(),
+        CombineOrder::ReverseSequential => (0..lanes).rev().collect(),
+        // tree-ish interleave: even chunks first, then odd
+        CombineOrder::PairwiseTree => {
+            (0..lanes).step_by(2).chain((1..lanes).step_by(2)).collect()
+        }
+    }
+}
+
+/// Hardware-tuned matmul: FMA contraction at full speed (single accumulator
+/// row, unit stride), with the K range split into `lanes` chunks retired in
+/// the profile's [`chunk_order`]. Per output element the FP addition order
+/// is therefore a function of the profile — deterministic per device,
+/// different across devices — at zero cost relative to the fastest schedule.
+pub fn matmul(a: &Tensor, b: &Tensor, hw: &HardwareProfile) -> Tensor {
+    let (m, k, n) = mm_dims(a, b);
+    let mut c = vec![0.0f32; m * n];
+    matmul_into(a.data(), b.data(), &mut c, m, k, n, hw);
+    Tensor::new([m, n], c)
+}
+
+pub(crate) fn matmul_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    hw: &HardwareProfile,
+) {
+    let lanes = hw.lanes.min(k.max(1));
+    // chunk boundaries: chunk L owns k in [bounds[L], bounds[L+1])
+    let bounds: Vec<usize> = (0..=lanes).map(|l| l * k / lanes).collect();
+    let order = chunk_order(lanes, hw.combine);
+    // register-tiled j panels, K retired chunk-by-chunk in the profile's
+    // order and KB-blocked within each chunk (mirrors repops::mm_kernel so
+    // the overhead metric measures ORDER, not blocking quality)
+    const JB: usize = 32;
+    const KB: usize = 256;
+
+    if k <= KB {
+        // small-K fast path: the whole reduction fits one block, so the
+        // accumulator stays in registers across ALL chunks (the chunk order
+        // still dictates the per-element FP addition order).
+        let mut pack = vec![0.0f32; k * JB];
+        let mut jb = 0;
+        while jb < n {
+            let w = JB.min(n - jb);
+            for kk in 0..k {
+                pack[kk * w..kk * w + w].copy_from_slice(&b[kk * n + jb..kk * n + jb + w]);
+            }
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                if w == JB {
+                    let mut acc = [0.0f32; JB];
+                    for &l in &order {
+                        let (c0, c1) = (bounds[l], bounds[l + 1]);
+                        for (off, &aik) in arow[c0..c1].iter().enumerate() {
+                            let brow = &pack[(c0 + off) * JB..(c0 + off) * JB + JB];
+                            for j in 0..JB {
+                                acc[j] = aik.mul_add(brow[j], acc[j]);
+                            }
+                        }
+                    }
+                    c[i * n + jb..i * n + jb + JB].copy_from_slice(&acc);
+                } else {
+                    let mut acc = [0.0f32; JB];
+                    for &l in &order {
+                        let (c0, c1) = (bounds[l], bounds[l + 1]);
+                        for (off, &aik) in arow[c0..c1].iter().enumerate() {
+                            let brow = &pack[(c0 + off) * w..(c0 + off) * w + w];
+                            for j in 0..w {
+                                acc[j] = aik.mul_add(brow[j], acc[j]);
+                            }
+                        }
+                    }
+                    c[i * n + jb..i * n + jb + w].copy_from_slice(&acc[..w]);
+                }
+            }
+            jb += w;
+        }
+        return;
+    }
+
+    let mut pack = vec![0.0f32; KB * JB];
+    let mut jb = 0;
+    while jb < n {
+        let w = JB.min(n - jb);
+        for &l in &order {
+            let (c0, c1) = (bounds[l], bounds[l + 1]);
+            let mut kb = c0;
+            while kb < c1 {
+                let kw = KB.min(c1 - kb);
+                for kk in 0..kw {
+                    pack[kk * w..kk * w + w]
+                        .copy_from_slice(&b[(kb + kk) * n + jb..(kb + kk) * n + jb + w]);
+                }
+                for i in 0..m {
+                    let arow = &a[i * k + kb..i * k + kb + kw];
+                    let crow = &mut c[i * n + jb..i * n + jb + w];
+                    if w == JB {
+                        let mut acc = [0.0f32; JB];
+                        acc.copy_from_slice(crow);
+                        for (kk, &aik) in arow.iter().enumerate() {
+                            let brow = &pack[kk * JB..kk * JB + JB];
+                            for j in 0..JB {
+                                // single-rounded contraction, like FFMA
+                                acc[j] = aik.mul_add(brow[j], acc[j]);
+                            }
+                        }
+                        crow.copy_from_slice(&acc);
+                    } else {
+                        let mut accbuf = [0.0f32; JB];
+                        let acc = &mut accbuf[..w];
+                        acc.copy_from_slice(crow);
+                        for (kk, &aik) in arow.iter().enumerate() {
+                            let brow = &pack[kk * w..kk * w + w];
+                            for j in 0..w {
+                                acc[j] = aik.mul_add(brow[j], acc[j]);
+                            }
+                        }
+                        crow.copy_from_slice(acc);
+                    }
+                }
+                kb += kw;
+            }
+        }
+        jb += w;
+    }
+}
+
+/// Free-order batched matmul.
+pub fn bmm(a: &Tensor, b: &Tensor, hw: &HardwareProfile) -> Tensor {
+    let (bs, m, k, n) = bmm_dims(a, b);
+    let mut c = vec![0.0f32; bs * m * n];
+    for ib in 0..bs {
+        matmul_into(
+            &a.data()[ib * m * k..(ib + 1) * m * k],
+            &b.data()[ib * k * n..(ib + 1) * k * n],
+            &mut c[ib * m * n..(ib + 1) * m * n],
+            m,
+            k,
+            n,
+            hw,
+        );
+    }
+    Tensor::new([bs, m, n], c)
+}
+
+/// Free-order softmax: vendor-libm `exp`, profile-scheduled row sums.
+pub fn softmax_lastdim(a: &Tensor, hw: &HardwareProfile) -> Tensor {
+    let (rows, n) = rows_lastdim(a);
+    let mut out = vec![0.0f32; rows * n];
+    for r in 0..rows {
+        let row = &a.data()[r * n..(r + 1) * n];
+        let orow = &mut out[r * n..(r + 1) * n];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        for (o, &x) in orow.iter_mut().zip(row) {
+            *o = (x - m).exp();
+        }
+        let s = sum_slice(orow, hw);
+        let inv = 1.0 / s;
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    Tensor::new(a.shape().to_vec(), out)
+}
+
+/// Free-order log-softmax.
+pub fn log_softmax_lastdim(a: &Tensor, hw: &HardwareProfile) -> Tensor {
+    let (rows, n) = rows_lastdim(a);
+    let mut out = vec![0.0f32; rows * n];
+    let mut scratch = vec![0.0f32; n];
+    for r in 0..rows {
+        let row = &a.data()[r * n..(r + 1) * n];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        for (s, &x) in scratch.iter_mut().zip(row) {
+            *s = (x - m).exp();
+        }
+        let lse = sum_slice(&scratch, hw).ln();
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (o, &x) in orow.iter_mut().zip(row) {
+            *o = (x - m) - lse;
+        }
+    }
+    Tensor::new(a.shape().to_vec(), out)
+}
+
+/// Free-order LayerNorm (profile-scheduled mean/variance sums, libm rsqrt
+/// path via `1/sqrt`).
+pub fn layernorm(a: &Tensor, gamma: &Tensor, beta: &Tensor, eps: f32, hw: &HardwareProfile) -> Tensor {
+    let (rows, n) = rows_lastdim(a);
+    assert_eq!(gamma.shape(), [n]);
+    assert_eq!(beta.shape(), [n]);
+    let mut out = vec![0.0f32; rows * n];
+    let mut sq = vec![0.0f32; n];
+    let inv_n = 1.0 / n as f32;
+    for r in 0..rows {
+        let row = &a.data()[r * n..(r + 1) * n];
+        let mean = sum_slice(row, hw) * inv_n;
+        for (s, &x) in sq.iter_mut().zip(row) {
+            let d = x - mean;
+            *s = d * d;
+        }
+        let var = sum_slice(&sq, hw) * inv_n;
+        let inv_std = 1.0 / (var + eps).sqrt();
+        let orow = &mut out[r * n..(r + 1) * n];
+        for j in 0..n {
+            orow[j] = (row[j] - mean) * inv_std * gamma.data()[j] + beta.data()[j];
+        }
+    }
+    Tensor::new(a.shape().to_vec(), out)
+}
+
+/// Free-order RMSNorm.
+pub fn rmsnorm(a: &Tensor, gamma: &Tensor, eps: f32, hw: &HardwareProfile) -> Tensor {
+    let (rows, n) = rows_lastdim(a);
+    assert_eq!(gamma.shape(), [n]);
+    let mut out = vec![0.0f32; rows * n];
+    let mut sq = vec![0.0f32; n];
+    let inv_n = 1.0 / n as f32;
+    for r in 0..rows {
+        let row = &a.data()[r * n..(r + 1) * n];
+        for (s, &x) in sq.iter_mut().zip(row) {
+            *s = x * x;
+        }
+        let ms = sum_slice(&sq, hw) * inv_n;
+        let inv_rms = 1.0 / (ms + eps).sqrt();
+        let orow = &mut out[r * n..(r + 1) * n];
+        for j in 0..n {
+            orow[j] = row[j] * inv_rms * gamma.data()[j];
+        }
+    }
+    Tensor::new(a.shape().to_vec(), out)
+}
+
+/// Free-order elementwise transcendentals use the platform libm — the bits
+/// a vendor math library would produce (self-consistent, not portable).
+pub fn gelu(a: &Tensor) -> Tensor {
+    super::repops::map(a, |x| {
+        0.5 * x * (1.0 + libm_erf(x * std::f32::consts::FRAC_1_SQRT_2))
+    })
+}
+
+pub fn silu(a: &Tensor) -> Tensor {
+    super::repops::map(a, |x| x / (1.0 + (-x).exp()))
+}
+
+/// `erf` is not in Rust's std; the "vendor" erf is our polynomial with libm
+/// exp substituted — close to what a tuned device library ships.
+fn libm_erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0f32 } else { 1.0 };
+    let ax = sign * x;
+    if ax > 4.0 {
+        return sign;
+    }
+    let t = 1.0 / (1.0 + 0.327_591_1 * ax);
+    let poly = ((((1.061_405_429 * t - 1.453_152_027) * t + 1.421_413_741) * t
+        - 0.284_496_736)
+        * t
+        + 0.254_829_592)
+        * t;
+    sign * (1.0 - poly * (-(ax * ax)).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::repops;
+
+    /// Inputs that expose reduction-order sensitivity: wide dynamic range so
+    /// different summation orders round differently.
+    fn adversarial(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::rand(shape.to_vec(), seed, 1.0);
+        for (i, v) in t.data_mut().iter_mut().enumerate() {
+            let mag = ((i * 2654435761) % 24) as i32 - 12;
+            *v *= (2.0f32).powi(mag);
+        }
+        t
+    }
+
+    #[test]
+    fn baseline_close_to_repops() {
+        // numerically the same answer (to rounding), bitwise not required
+        let a = Tensor::rand([16, 32], 1, 1.0);
+        let b = Tensor::rand([32, 8], 2, 1.0);
+        let free = matmul(&a, &b, &HardwareProfile::T4_16G);
+        let rep = repops::matmul(&a, &b);
+        assert!(free.max_abs_diff(&rep) < 1e-4);
+    }
+
+    #[test]
+    fn profiles_diverge_on_adversarial_matmul() {
+        // the paper's §3.1 phenomenon: same program, different "hardware",
+        // different bits.
+        let a = adversarial(&[8, 256], 3);
+        let b = adversarial(&[256, 8], 4);
+        let t4 = matmul(&a, &b, &HardwareProfile::T4_16G);
+        let a100 = matmul(&a, &b, &HardwareProfile::A100_40G);
+        let a100b = matmul(&a, &b, &HardwareProfile::A100_40G);
+        assert!(t4.bit_eq(&t4), "self-consistency");
+        assert!(a100.bit_eq(&a100b), "per-device determinism");
+        assert!(!t4.bit_eq(&a100), "cross-device divergence expected");
+    }
+
+    #[test]
+    fn repops_profile_invariant_where_baseline_is_not() {
+        let a = adversarial(&[4, 512], 5);
+        let b = adversarial(&[512, 4], 6);
+        let rep = repops::matmul(&a, &b);
+        for hw in &HardwareProfile::ALL {
+            let rep2 = repops::matmul(&a, &b);
+            assert!(rep.bit_eq(&rep2), "repops ignores {}", hw.name);
+        }
+        let free: Vec<Tensor> = HardwareProfile::ALL
+            .iter()
+            .map(|hw| matmul(&a, &b, hw))
+            .collect();
+        let any_diverge = free.windows(2).any(|w| !w[0].bit_eq(&w[1]));
+        assert!(any_diverge, "baseline should diverge across profiles");
+    }
+
+    #[test]
+    fn sum_diverges_across_profiles_but_is_stable_per_profile() {
+        let xs = adversarial(&[4096], 7);
+        let mut seen = Vec::new();
+        for hw in &HardwareProfile::ALL {
+            let s1 = sum_slice(xs.data(), hw);
+            let s2 = sum_slice(xs.data(), hw);
+            assert_eq!(s1.to_bits(), s2.to_bits(), "{} self-consistent", hw.name);
+            seen.push(s1.to_bits());
+        }
+        seen.dedup();
+        assert!(seen.len() > 1, "expected ≥2 distinct sums, got {seen:?}");
+    }
+
+    #[test]
+    fn combine_orders_differ() {
+        // seq: ((1e8+1)-1e8)+1 = 1 (the +1 survives the first rounding);
+        // tree: (1e8+1)+(-1e8+1) = 1e8 + (-1e8) = 0 (both +1s rounded away);
+        // rev:  ((1+(-1e8))+1)+1e8 = 0 (both +1s rounded away).
+        let p = vec![1.0e8f32, 1.0, -1.0e8, 1.0];
+        assert_eq!(combine(&mut p.clone(), CombineOrder::Sequential), 1.0);
+        assert_eq!(combine(&mut p.clone(), CombineOrder::PairwiseTree), 0.0);
+        assert_eq!(combine(&mut p.clone(), CombineOrder::ReverseSequential), 0.0);
+        // a vector where reverse differs from sequential:
+        // seq: ((1-1e8)+1)+1e8 = 0 ; rev: ((1e8+1)+(-1e8))+1 = 1.
+        let q = vec![1.0f32, -1.0e8, 1.0, 1.0e8];
+        assert_eq!(combine(&mut q.clone(), CombineOrder::Sequential), 0.0);
+        assert_eq!(combine(&mut q.clone(), CombineOrder::ReverseSequential), 1.0);
+    }
+
+    #[test]
+    fn baseline_softmax_close_to_repops() {
+        let a = Tensor::rand([4, 64], 8, 6.0);
+        for hw in &HardwareProfile::ALL {
+            let f = softmax_lastdim(&a, hw);
+            let r = repops::softmax_lastdim(&a);
+            assert!(f.max_abs_diff(&r) < 1e-5, "{}", hw.name);
+        }
+    }
+
+    #[test]
+    fn baseline_norms_close_to_repops() {
+        let a = Tensor::rand([4, 96], 9, 2.0);
+        let g = Tensor::rand([96], 10, 1.0);
+        let b = Tensor::rand([96], 11, 1.0);
+        let hw = HardwareProfile::RTX3090_24G;
+        assert!(layernorm(&a, &g, &b, 1e-5, &hw)
+            .max_abs_diff(&repops::layernorm(&a, &g, &b, 1e-5))
+            < 1e-4);
+        assert!(rmsnorm(&a, &g, 1e-6, &hw).max_abs_diff(&repops::rmsnorm(&a, &g, 1e-6)) < 1e-4);
+    }
+
+    #[test]
+    fn vendor_activations_close_to_repops() {
+        let a = Tensor::rand([256], 12, 4.0);
+        assert!(gelu(&a).max_abs_diff(&repops::gelu(&a)) < 1e-5);
+        assert!(silu(&a).max_abs_diff(&repops::silu(&a)) < 1e-5);
+    }
+
+    #[test]
+    fn bmm_matches_matmul_per_batch() {
+        let a = Tensor::rand([2, 3, 4], 13, 1.0);
+        let b = Tensor::rand([2, 4, 5], 14, 1.0);
+        let hw = HardwareProfile::A100_80G;
+        let c = bmm(&a, &b, &hw);
+        let a0 = Tensor::new([3, 4], a.data()[..12].to_vec());
+        let b0 = Tensor::new([4, 5], b.data()[..20].to_vec());
+        let c0 = matmul(&a0, &b0, &hw);
+        assert_eq!(&c.data()[..15], c0.data());
+    }
+}

@@ -1,0 +1,385 @@
+//! Reproducible scalar math: fixed-evaluation-order implementations of the
+//! transcendental functions neural networks need (paper §3.1: RepOps
+//! "re-implements common ML operators and mathematical functions like exp,
+//! sin, cos, tanh").
+//!
+//! `libm` implementations differ between platforms/versions, so RepOps cannot
+//! call them. Every function here is a fixed sequence of IEEE-754 single
+//! operations (add/mul/div/sqrt are correctly rounded and therefore
+//! bit-deterministic on every compliant implementation); polynomials are
+//! evaluated in Horner form, which fixes the operation order syntactically.
+//! Rust never licenses FP reassociation or contraction (no implicit FMA), so
+//! the compiled order equals the source order.
+//!
+//! Accuracy targets are a few ULP — plenty for training parity — and are
+//! checked against `std` libm in the tests. Determinism, not last-bit
+//! accuracy, is the contract.
+
+/// ln(2) split Cody–Waite style: `LN2_HI + LN2_LO ≈ ln 2` with `LN2_HI`
+/// having enough trailing zero bits that `n * LN2_HI` is exact for |n| < 2^8.
+const LN2_HI: f32 = 0.693_145_751_953_125; // 0x1.62e4p-1
+const LN2_LO: f32 = 1.428_606_765_330_187_e-6; // ln2 - LN2_HI
+const LOG2_E: f32 = 1.442_695_040_888_963_4;
+
+/// Reproducible `exp(x)` for f32.
+///
+/// Range-reduce `x = n·ln2 + r`, `|r| ≤ ln2/2`, evaluate a degree-5
+/// minimax-ish polynomial of `e^r` in Horner form, then scale by `2^n`
+/// through exponent-bit arithmetic (exact).
+pub fn rep_exp(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    if x > 88.72 {
+        return f32::INFINITY;
+    }
+    if x < -87.33 {
+        return 0.0;
+    }
+    // n = round(x / ln2)
+    let n = (x * LOG2_E).round_ties_even();
+    let r = (x - n * LN2_HI) - n * LN2_LO;
+    // e^r ≈ 1 + r + r²/2! + r³/3! + r⁴/4! + r⁵/5!  (|r| ≤ 0.347 ⇒ ~1e-8 rel)
+    let p = {
+        let c5 = 1.0 / 120.0;
+        let c4 = 1.0 / 24.0;
+        let c3 = 1.0 / 6.0;
+        let c2 = 0.5;
+        ((((c5 * r + c4) * r + c3) * r + c2) * r + 1.0) * r + 1.0
+    };
+    scale_by_pow2(p, n as i32)
+}
+
+/// Exact multiplication by 2^n via exponent bits, handling subnormal spill
+/// by splitting the scale.
+#[inline]
+fn scale_by_pow2(x: f32, n: i32) -> f32 {
+    // Clamp to the representable exponent window, splitting in two steps so
+    // intermediate scales stay normal.
+    let step = |x: f32, n: i32| -> f32 {
+        let n = n.clamp(-126, 127);
+        x * f32::from_bits(((127 + n) as u32) << 23)
+    };
+    if (-126..=127).contains(&n) {
+        step(x, n)
+    } else if n > 0 {
+        step(step(x, 127), n - 127)
+    } else {
+        step(step(x, -126), n + 126)
+    }
+}
+
+/// Reproducible natural log.
+///
+/// Decompose `x = m·2^e`, `m ∈ [√2/2, √2)`; `ln m` via the `atanh` series in
+/// `s = (m-1)/(m+1)`:  `ln m = 2s + 2s³/3 + 2s⁵/5 + …` (Horner in `s²`).
+pub fn rep_ln(x: f32) -> f32 {
+    if x.is_nan() || x < 0.0 {
+        return f32::NAN;
+    }
+    if x == 0.0 {
+        return f32::NEG_INFINITY;
+    }
+    if x.is_infinite() {
+        return f32::INFINITY;
+    }
+    let bits = x.to_bits();
+    let mut e = ((bits >> 23) as i32) - 127;
+    let mut m = f32::from_bits((bits & 0x007f_ffff) | 0x3f80_0000); // [1,2)
+    // subnormals: normalize first
+    if e == -127 {
+        let xn = x * f32::from_bits((127 + 24) << 23); // x * 2^24, exact
+        let nb = xn.to_bits();
+        e = ((nb >> 23) as i32) - 127 - 24;
+        m = f32::from_bits((nb & 0x007f_ffff) | 0x3f80_0000);
+    }
+    const SQRT2: f32 = 1.414_213_562_373_095_1;
+    if m >= SQRT2 {
+        m *= 0.5;
+        e += 1;
+    }
+    let s = (m - 1.0) / (m + 1.0);
+    let s2 = s * s;
+    // 2·(s + s³/3 + s⁵/5 + s⁷/7 + s⁹/9)
+    let p = (((s2 / 9.0 + 1.0 / 7.0) * s2 + 1.0 / 5.0) * s2 + 1.0 / 3.0) * s2 + 1.0;
+    let ef = e as f32;
+    (ef * LN2_HI + ef * LN2_LO) + 2.0 * s * p
+}
+
+/// Reproducible `tanh` via `rep_exp`: `tanh x = 1 − 2/(e^{2x}+1)` for x ≥ 0,
+/// odd-extended for x < 0. Saturates exactly to ±1 beyond |x| > 9.
+pub fn rep_tanh(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    let neg = x.is_sign_negative(); // preserves -0.0 → -0.0 (IEEE tanh)
+    let ax = if neg { -x } else { x };
+    if ax > 9.02 {
+        return if neg { -1.0 } else { 1.0 };
+    }
+    let t = 1.0 - 2.0 / (rep_exp(2.0 * ax) + 1.0);
+    if neg {
+        -t
+    } else {
+        t
+    }
+}
+
+/// Reproducible logistic sigmoid `1/(1+e^{-x})`, evaluated on the
+/// numerically stable branch for each sign so it is monotone and bounded.
+pub fn rep_sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + rep_exp(-x))
+    } else {
+        let e = rep_exp(x);
+        e / (1.0 + e)
+    }
+}
+
+/// Reproducible `erf` (Abramowitz & Stegun 7.1.26; |ε| ≤ 1.5e-7).
+pub fn rep_erf(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let ax = sign * x;
+    if ax > 4.0 {
+        return sign; // erf saturates well within f32 below 4
+    }
+    const A1: f32 = 0.254_829_592;
+    const A2: f32 = -0.284_496_736;
+    const A3: f32 = 1.421_413_741;
+    const A4: f32 = -1.453_152_027;
+    const A5: f32 = 1.061_405_429;
+    const P: f32 = 0.327_591_1;
+    let t = 1.0 / (1.0 + P * ax);
+    let poly = ((((A5 * t + A4) * t + A3) * t + A2) * t + A1) * t;
+    let y = 1.0 - poly * rep_exp(-(ax * ax));
+    sign * y
+}
+
+/// Exact-GELU (the DistilBERT/BERT activation): `0.5·x·(1 + erf(x/√2))`.
+pub fn rep_gelu(x: f32) -> f32 {
+    const INV_SQRT2: f32 = 0.707_106_781_186_547_6;
+    0.5 * x * (1.0 + rep_erf(x * INV_SQRT2))
+}
+
+/// SiLU / swish (the Llama activation): `x · sigmoid(x)`.
+pub fn rep_silu(x: f32) -> f32 {
+    x * rep_sigmoid(x)
+}
+
+/// Reproducible sine for the bounded arguments RoPE produces (|x| ≤ ~2^13).
+/// Cody–Waite reduction mod π/2 then degree-7/6 Taylor–Horner kernels.
+pub fn rep_sin(x: f32) -> f32 {
+    let (q, r) = reduce_pi_2(x);
+    match q & 3 {
+        0 => sin_kernel(r),
+        1 => cos_kernel(r),
+        2 => -sin_kernel(r),
+        _ => -cos_kernel(r),
+    }
+}
+
+/// Reproducible cosine (see [`rep_sin`]).
+pub fn rep_cos(x: f32) -> f32 {
+    let (q, r) = reduce_pi_2(x);
+    match q & 3 {
+        0 => cos_kernel(r),
+        1 => -sin_kernel(r),
+        2 => -cos_kernel(r),
+        _ => sin_kernel(r),
+    }
+}
+
+/// Argument reduction `x = q·(π/2) + r`, |r| ≤ π/4, Cody–Waite two-part π/2.
+/// Accurate for |x| ≲ 2^13 — RoPE angles are ≤ max-position, far below that.
+fn reduce_pi_2(x: f32) -> (i32, f32) {
+    const PI2_HI: f32 = 1.570_796_251_296_997_1; // 0x1.921fb4p0
+    const PI2_LO: f32 = 7.549_789_415_861_596e-8;
+    let q = (x * (1.0 / (PI2_HI + PI2_LO))).round_ties_even();
+    let r = (x - q * PI2_HI) - q * PI2_LO;
+    (q as i32, r)
+}
+
+#[inline]
+fn sin_kernel(r: f32) -> f32 {
+    // sin r ≈ r − r³/3! + r⁵/5! − r⁷/7!
+    let r2 = r * r;
+    ((( -1.0 / 5040.0 * r2 + 1.0 / 120.0) * r2 - 1.0 / 6.0) * r2 + 1.0) * r
+}
+
+#[inline]
+fn cos_kernel(r: f32) -> f32 {
+    // cos r ≈ 1 − r²/2! + r⁴/4! − r⁶/6! + r⁸/8!
+    let r2 = r * r;
+    (((1.0 / 40320.0 * r2 - 1.0 / 720.0) * r2 + 1.0 / 24.0) * r2 - 0.5) * r2 + 1.0
+}
+
+/// `sqrt` — IEEE-754 requires correct rounding, so the hardware instruction
+/// is already bit-deterministic; exposed for symmetry/clarity at call sites.
+#[inline]
+pub fn rep_sqrt(x: f32) -> f32 {
+    x.sqrt()
+}
+
+/// `1/√x` composed from two correctly-rounded ops (NOT the fast-rsqrt
+/// intrinsic, whose precision differs per architecture).
+#[inline]
+pub fn rep_rsqrt(x: f32) -> f32 {
+    1.0 / x.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sweep(lo: f32, hi: f32, n: usize) -> impl Iterator<Item = f32> {
+        (0..=n).map(move |i| lo + (hi - lo) * i as f32 / n as f32)
+    }
+
+    #[test]
+    fn exp_matches_libm() {
+        for x in sweep(-80.0, 80.0, 40_000) {
+            let got = rep_exp(x);
+            let want = x.exp();
+            let rel = if want == 0.0 { got.abs() } else { ((got - want) / want).abs() };
+            assert!(rel < 4e-6, "exp({x}) = {got}, libm {want}, rel {rel}");
+        }
+    }
+
+    #[test]
+    fn exp_edge_cases() {
+        assert_eq!(rep_exp(0.0), 1.0);
+        assert_eq!(rep_exp(f32::INFINITY), f32::INFINITY);
+        assert_eq!(rep_exp(f32::NEG_INFINITY), 0.0);
+        assert_eq!(rep_exp(100.0), f32::INFINITY);
+        assert_eq!(rep_exp(-100.0), 0.0);
+        assert!(rep_exp(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn ln_matches_libm() {
+        for x in sweep(1e-30, 1e4, 40_000).chain(sweep(1e-4, 2.0, 10_000)) {
+            if x <= 0.0 {
+                continue;
+            }
+            let got = rep_ln(x);
+            let want = x.ln();
+            let tol = 1e-6_f32.max(want.abs() * 2e-6);
+            assert!((got - want).abs() < tol, "ln({x}) = {got}, libm {want}");
+        }
+    }
+
+    #[test]
+    fn ln_exp_roundtrip() {
+        for x in sweep(-10.0, 10.0, 1000) {
+            let got = rep_ln(rep_exp(x));
+            assert!((got - x).abs() < 1e-5 * x.abs().max(1.0), "ln(exp({x})) = {got}");
+        }
+    }
+
+    #[test]
+    fn ln_edge_cases() {
+        assert_eq!(rep_ln(1.0), 0.0);
+        assert_eq!(rep_ln(0.0), f32::NEG_INFINITY);
+        assert!(rep_ln(-1.0).is_nan());
+        assert_eq!(rep_ln(f32::INFINITY), f32::INFINITY);
+        // subnormal input
+        let sub = f32::from_bits(1);
+        assert!((rep_ln(sub) - sub.ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn tanh_matches_libm() {
+        for x in sweep(-12.0, 12.0, 20_000) {
+            let got = rep_tanh(x);
+            let want = x.tanh();
+            assert!((got - want).abs() < 3e-6, "tanh({x}) = {got}, libm {want}");
+        }
+        assert_eq!(rep_tanh(50.0), 1.0);
+        assert_eq!(rep_tanh(-50.0), -1.0);
+    }
+
+    #[test]
+    fn tanh_is_odd_bitwise() {
+        for x in sweep(0.0, 10.0, 5000) {
+            assert_eq!(rep_tanh(-x).to_bits(), (-rep_tanh(x)).to_bits());
+        }
+    }
+
+    #[test]
+    fn erf_matches_reference() {
+        // reference values from double-precision erf
+        let cases: [(f32, f32); 7] = [
+            (0.0, 0.0),
+            (0.5, 0.5204999),
+            (1.0, 0.8427008),
+            (1.5, 0.9661051),
+            (2.0, 0.9953223),
+            (3.0, 0.9999779),
+            (-1.0, -0.8427008),
+        ];
+        for (x, want) in cases {
+            let got = rep_erf(x);
+            assert!((got - want).abs() < 2e-6, "erf({x}) = {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_properties() {
+        assert_eq!(rep_sigmoid(0.0), 0.5);
+        for x in sweep(-30.0, 30.0, 10_000) {
+            let s = rep_sigmoid(x);
+            assert!((0.0..=1.0).contains(&s));
+            let want = 1.0 / (1.0 + (-x).exp());
+            assert!((s - want).abs() < 3e-6, "sigmoid({x}) = {s}, want {want}");
+        }
+    }
+
+    #[test]
+    fn gelu_silu_spot_checks() {
+        // torch reference values
+        assert!((rep_gelu(1.0) - 0.8413447).abs() < 1e-5);
+        assert!((rep_gelu(-1.0) - (-0.15865526)).abs() < 1e-5);
+        assert!((rep_silu(1.0) - 0.7310586).abs() < 1e-5);
+        assert_eq!(rep_gelu(0.0), 0.0);
+        assert_eq!(rep_silu(0.0), 0.0);
+    }
+
+    #[test]
+    fn sin_cos_match_libm_on_rope_range() {
+        for x in sweep(-4096.0, 4096.0, 100_000) {
+            let (gs, gc) = (rep_sin(x), rep_cos(x));
+            let (ws, wc) = (x.sin(), x.cos());
+            assert!((gs - ws).abs() < 3e-4, "sin({x}) = {gs}, libm {ws}");
+            assert!((gc - wc).abs() < 3e-4, "cos({x}) = {gc}, libm {wc}");
+        }
+        // tighter check near zero where RoPE's high-frequency dims live
+        for x in sweep(-3.2, 3.2, 10_000) {
+            assert!((rep_sin(x) - x.sin()).abs() < 2e-6);
+            assert!((rep_cos(x) - x.cos()).abs() < 2e-6);
+        }
+    }
+
+    #[test]
+    fn determinism_bitwise() {
+        // same input -> same bits, across calls (trivially true in one
+        // process, but guards against accidental statics/rng).
+        for x in sweep(-5.0, 5.0, 1000) {
+            assert_eq!(rep_exp(x).to_bits(), rep_exp(x).to_bits());
+            assert_eq!(rep_tanh(x).to_bits(), rep_tanh(x).to_bits());
+            assert_eq!(rep_erf(x).to_bits(), rep_erf(x).to_bits());
+        }
+    }
+
+    #[test]
+    fn scale_by_pow2_extremes() {
+        assert_eq!(scale_by_pow2(1.0, 10), 1024.0);
+        assert_eq!(scale_by_pow2(1.0, -10), 1.0 / 1024.0);
+        assert_eq!(scale_by_pow2(1.5, 0), 1.5);
+        // deep subnormal round-trip
+        let tiny = scale_by_pow2(1.0, -140);
+        assert!(tiny > 0.0 && tiny < f32::MIN_POSITIVE);
+    }
+}

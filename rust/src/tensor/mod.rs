@@ -1,0 +1,231 @@
+//! Dense FP32 tensors and the two operator families Verde arbitrates over:
+//!
+//! * [`repops`] — **RepOps**: bitwise-reproducible operators with a fixed
+//!   floating-point evaluation order (paper §3).
+//! * [`baseline`] — hardware-tuned, *free-order* operators whose reduction
+//!   order depends on a [`HardwareProfile`](profile::HardwareProfile),
+//!   standing in for cuDNN/torch on the paper's four GPUs (DESIGN.md §4.1).
+//!
+//! All tensors are contiguous, row-major, `f32`. FP32 is the only dtype the
+//! paper's RepOps supports (IEEE-754 compliance, §4), so it is the only
+//! arithmetic dtype here; integer tensors (token ids) are carried as `f32`
+//! bit-exact integers which is lossless below 2^24.
+
+pub mod baseline;
+pub mod math;
+pub mod profile;
+pub mod repops;
+
+use std::fmt;
+
+/// A dense, contiguous, row-major FP32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build a tensor from a shape and a flat row-major buffer.
+    ///
+    /// # Panics
+    /// If `data.len()` does not equal the product of `shape`.
+    pub fn new(shape: impl Into<Vec<usize>>, data: Vec<f32>) -> Self {
+        let shape = shape.into();
+        let numel: usize = shape.iter().product();
+        assert_eq!(
+            data.len(),
+            numel,
+            "shape {:?} wants {} elements, got {}",
+            shape,
+            numel,
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: impl Into<Vec<usize>>) -> Self {
+        let shape = shape.into();
+        let numel = shape.iter().product();
+        Self { shape, data: vec![0.0; numel] }
+    }
+
+    /// Tensor filled with `value`.
+    pub fn full(shape: impl Into<Vec<usize>>, value: f32) -> Self {
+        let shape = shape.into();
+        let numel = shape.iter().product();
+        Self { shape, data: vec![value; numel] }
+    }
+
+    /// Scalar (rank-0) tensor.
+    pub fn scalar(value: f32) -> Self {
+        Self { shape: vec![], data: vec![value] }
+    }
+
+    /// Deterministically pseudo-random tensor in `[-scale, scale)`,
+    /// generated from a [`SplitMix64`](crate::util::prng::SplitMix64) stream.
+    /// Used for synthetic weights and data; the same seed always produces the
+    /// same bits, which the whole protocol relies on.
+    pub fn rand(shape: impl Into<Vec<usize>>, seed: u64, scale: f32) -> Self {
+        let shape = shape.into();
+        let numel: usize = shape.iter().product();
+        let mut rng = crate::util::prng::SplitMix64::new(seed);
+        let data = (0..numel)
+            .map(|_| (rng.next_f32() * 2.0 - 1.0) * scale)
+            .collect();
+        Self { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Size in bytes of the raw FP32 payload.
+    pub fn byte_len(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(&self, shape: impl Into<Vec<usize>>) -> Tensor {
+        let shape = shape.into();
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.numel(),
+            "reshape {:?} -> {:?} changes element count",
+            self.shape,
+            shape
+        );
+        Tensor { shape, data: self.data.clone() }
+    }
+
+    /// 2-D strict accessor.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Bitwise equality — the equality Verde cares about. `PartialEq` on
+    /// floats treats `-0.0 == 0.0` and `NaN != NaN`; commitments hash raw
+    /// bits, so tests should use this.
+    pub fn bit_eq(&self, other: &Tensor) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+
+    /// Max absolute elementwise difference (for *approximate* comparisons
+    /// against oracles only — never for protocol decisions).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Raw little-endian bytes of the payload (hashing, wire format).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Inverse of [`Tensor::to_le_bytes`].
+    pub fn from_le_bytes(shape: impl Into<Vec<usize>>, bytes: &[u8]) -> Self {
+        assert_eq!(bytes.len() % 4, 0);
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Self::new(shape, data)
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.numel() <= 8 {
+            write!(f, " {:?}", self.data)
+        } else {
+            write!(f, " [{:?}, {:?}, ..]", self.data[0], self.data[1])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_numel() {
+        let t = Tensor::new([2, 3], vec![0.0; 6]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn new_rejects_bad_numel() {
+        Tensor::new([2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn rand_is_seed_deterministic() {
+        let a = Tensor::rand([4, 4], 7, 1.0);
+        let b = Tensor::rand([4, 4], 7, 1.0);
+        let c = Tensor::rand([4, 4], 8, 1.0);
+        assert!(a.bit_eq(&b));
+        assert!(!a.bit_eq(&c));
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let a = Tensor::rand([3, 5], 42, 2.0);
+        let b = Tensor::from_le_bytes([3, 5], &a.to_le_bytes());
+        assert!(a.bit_eq(&b));
+    }
+
+    #[test]
+    fn bit_eq_distinguishes_signed_zero() {
+        let a = Tensor::new([1], vec![0.0]);
+        let b = Tensor::new([1], vec![-0.0]);
+        assert_eq!(a, b); // PartialEq: equal
+        assert!(!a.bit_eq(&b)); // bitwise: different
+    }
+
+    #[test]
+    fn reshape_preserves_bits() {
+        let a = Tensor::rand([2, 6], 1, 1.0);
+        let b = a.reshape([3, 4]);
+        assert_eq!(b.shape(), &[3, 4]);
+        assert_eq!(a.data(), b.data());
+    }
+}

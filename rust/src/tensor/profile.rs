@@ -1,0 +1,117 @@
+//! Simulated hardware profiles (DESIGN.md §4, substitution 1).
+//!
+//! The paper's source of nondeterminism is that different GPU architectures
+//! schedule the partial sums of a reduction differently: more SMs / different
+//! warp widths ⇒ a different floating-point combination tree, hence (by
+//! non-associativity of FP addition) different bits for the *same* program.
+//!
+//! We reify "the architecture-dependent part of the schedule" as a
+//! [`HardwareProfile`]. Baseline (free-order) operators consult it to decide
+//! how a reduction is chunked and in which order partial results combine;
+//! RepOps operators ignore it entirely. Each profile is internally
+//! deterministic — running twice on the same profile gives the same bits,
+//! just as a given GPU is (usually) self-consistent — but profiles differ
+//! from each other, which is exactly the cross-hardware setting of §3.1.
+
+/// An execution-environment fingerprint: the knobs of a reduction schedule
+/// that, on real hardware, are fixed by the silicon + library version.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HardwareProfile {
+    /// Human-readable device name (mirrors the paper's four test GPUs).
+    pub name: &'static str,
+    /// Number of independent accumulation lanes a reduction is split across
+    /// (the analogue of how many threads/warps cuDNN assigns to the K loop).
+    pub lanes: usize,
+    /// Combination tree for the per-lane partials.
+    pub combine: CombineOrder,
+    /// Simulated device memory in bytes — used by the model benches to decide
+    /// feasible batch sizes, mirroring the paper's VRAM-driven observations.
+    pub vram_bytes: u64,
+    /// Relative throughput multiplier of the simulated device, used only for
+    /// reporting projected wall-clock in EXPERIMENTS.md (never for numerics).
+    pub rel_throughput: f64,
+}
+
+/// Order in which per-lane partial sums are combined.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CombineOrder {
+    /// `((p0 + p1) + p2) + p3 …` — lane-ascending left fold.
+    Sequential,
+    /// Balanced pairwise tree: `(p0+p1) + (p2+p3) …`.
+    PairwiseTree,
+    /// Lane-descending fold — models a device that retires high lanes first.
+    ReverseSequential,
+}
+
+impl HardwareProfile {
+    /// NVIDIA T4 (16 GB) stand-in: few lanes, sequential combine.
+    pub const T4_16G: HardwareProfile = HardwareProfile {
+        name: "T4-16G",
+        lanes: 4,
+        combine: CombineOrder::Sequential,
+        vram_bytes: 16 << 30,
+        rel_throughput: 1.0,
+    };
+
+    /// NVIDIA RTX 3090 (24 GB) stand-in.
+    pub const RTX3090_24G: HardwareProfile = HardwareProfile {
+        name: "RTX3090-24G",
+        lanes: 8,
+        combine: CombineOrder::PairwiseTree,
+        vram_bytes: 24 << 30,
+        rel_throughput: 2.2,
+    };
+
+    /// NVIDIA A100 (40 GB) stand-in.
+    pub const A100_40G: HardwareProfile = HardwareProfile {
+        name: "A100-40G",
+        lanes: 16,
+        combine: CombineOrder::PairwiseTree,
+        vram_bytes: 40 << 30,
+        rel_throughput: 4.0,
+    };
+
+    /// NVIDIA A100 (80 GB) stand-in.
+    pub const A100_80G: HardwareProfile = HardwareProfile {
+        name: "A100-80G",
+        lanes: 16,
+        combine: CombineOrder::ReverseSequential,
+        vram_bytes: 80 << 30,
+        rel_throughput: 4.2,
+    };
+
+    /// The paper's full device matrix (§4).
+    pub const ALL: [HardwareProfile; 4] = [
+        Self::T4_16G,
+        Self::RTX3090_24G,
+        Self::A100_40G,
+        Self::A100_80G,
+    ];
+}
+
+impl Default for HardwareProfile {
+    fn default() -> Self {
+        Self::A100_40G
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_are_distinct() {
+        for (i, a) in HardwareProfile::ALL.iter().enumerate() {
+            for b in &HardwareProfile::ALL[i + 1..] {
+                assert_ne!(a, b);
+                // distinct reduction schedules, not just names:
+                assert!(
+                    a.lanes != b.lanes || a.combine != b.combine,
+                    "{} and {} share a reduction schedule",
+                    a.name,
+                    b.name
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Multi-level checkpoint schedules and their cost model (paper §2.1).
+//!
+//! With `N` checkpoints per level, trainers store/log `N` evenly-spaced
+//! checkpoints over `[0, n]`; each Phase 1 round narrows the dispute to one
+//! interval and re-executes it with `N` finer checkpoints, until interval
+//! length 1. Re-execution totals a `1/N + 1/N² + …` fraction of training —
+//! the paper's "under 6% at N=20, under 1.1% at N=100".
+
+/// The boundaries at which a segment `(start, end]` is checkpointed when
+/// split `n_intervals` ways: strictly increasing step numbers ending at
+/// `end`. Every party derives the identical schedule.
+pub fn split_points(start: u64, end: u64, n_intervals: u64) -> Vec<u64> {
+    assert!(end > start, "empty segment ({start}, {end}]");
+    let len = end - start;
+    let k = n_intervals.min(len).max(1);
+    // even split: boundary i at start + ceil(len·i/k), deduplicated by
+    // construction since len ≥ k
+    (1..=k).map(|i| start + (len * i).div_ceil(k)).collect()
+}
+
+/// Steps at which a trainer logs checkpoints during the *initial* training
+/// run (level-0 schedule plus the final step).
+pub fn level0_schedule(steps: u64, n: u64) -> Vec<u64> {
+    split_points(0, steps, n)
+}
+
+/// Number of levels Phase 1 needs to reach interval length 1.
+pub fn levels_needed(steps: u64, n: u64) -> u32 {
+    let mut len = steps;
+    let mut levels = 0;
+    while len > 1 {
+        len = len.div_ceil(n.max(2));
+        levels += 1;
+    }
+    levels.max(1)
+}
+
+/// Upper bound on the fraction of training re-executed during Phase 1
+/// (geometric series `Σ_{ℓ≥1} N^{-ℓ}`; the paper's §2.1 cost analysis).
+pub fn reexec_fraction_bound(n: u64) -> f64 {
+    let n = n as f64;
+    1.0 / (n - 1.0)
+}
+
+/// Storage cost model: bytes a trainer holds for level-0 checkpoints of a
+/// state of `state_bytes` bytes.
+pub fn storage_bytes(n: u64, state_bytes: u64) -> u64 {
+    n * state_bytes
+}
+
+/// The paper's §2.1 worked examples, used by the `phase1_costs` bench to
+/// print the paper-vs-ours table: (model, params, fp32 state bytes with
+/// Adam m+v = 3×params×4).
+pub const PAPER_MODELS: [(&str, u64); 3] = [
+    ("DistilBERT-66M", 66_000_000),
+    ("Llama-1B", 1_240_000_000),
+    ("Llama-8B", 8_030_000_000),
+];
+
+/// FP32 bytes of weights + Adam state for a parameter count.
+pub fn adam_state_bytes(params: u64) -> u64 {
+    3 * params * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, Gen};
+
+    #[test]
+    fn split_points_even_and_terminal() {
+        assert_eq!(split_points(0, 100, 4), vec![25, 50, 75, 100]);
+        assert_eq!(split_points(0, 10, 3), vec![4, 7, 10]);
+        assert_eq!(split_points(5, 8, 10), vec![6, 7, 8]); // clamps to len
+        assert_eq!(split_points(0, 1, 5), vec![1]);
+    }
+
+    #[test]
+    fn prop_split_points_invariants() {
+        forall("split points strictly increase and end at end", 64, |g: &mut Gen| {
+            let start = g.usize_in(0, 1000) as u64;
+            let len = g.usize_in(1, 500) as u64;
+            let n = g.usize_in(1, 64) as u64;
+            let pts = split_points(start, start + len, n);
+            assert_eq!(*pts.last().unwrap(), start + len);
+            assert!(pts[0] > start);
+            for w in pts.windows(2) {
+                assert!(w[0] < w[1], "{pts:?}");
+            }
+            assert!(pts.len() as u64 <= n.min(len));
+        });
+    }
+
+    #[test]
+    fn levels_match_log() {
+        assert_eq!(levels_needed(1, 20), 1);
+        assert_eq!(levels_needed(20, 20), 1);
+        assert_eq!(levels_needed(400, 20), 2);
+        assert_eq!(levels_needed(401, 20), 3);
+        assert_eq!(levels_needed(8000, 20), 3);
+    }
+
+    #[test]
+    fn paper_cost_numbers() {
+        // "When N=20, this comes to under 6%."
+        assert!(reexec_fraction_bound(20) < 0.06);
+        // "With N=100, the amount of re-execution reduces to under 1.1%"
+        assert!(reexec_fraction_bound(100) < 0.011);
+        // "a few hundred gigabytes of storage" for Llama-8B weights at N=20:
+        // the paper counts just the learnable parameters here (8B × 4B = 32GB,
+        // ×20 = 640GB ≈ "a few hundred GB").
+        let w = 8_030_000_000u64 * 4;
+        let s20 = storage_bytes(20, w);
+        assert!(s20 > 100 << 30 && s20 < 1000 << 30, "{s20}");
+        // "With N=100 … storage requirements reaches a few terabytes."
+        let s100 = storage_bytes(100, w);
+        assert!(s100 > (1u64) << 40 && s100 < (10u64) << 40, "{s100}");
+    }
+}

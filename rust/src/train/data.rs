@@ -1,0 +1,193 @@
+//! Deterministic synthetic training data (DESIGN.md §4 substitution 4).
+//!
+//! The corpus is a Markov byte stream: a fixed random successor map over the
+//! vocabulary, followed with probability ~0.8 — enough structure for the
+//! LM loss to fall visibly within a few hundred steps, with entropy left
+//! over so it never collapses. Every batch is a pure function of
+//! `(data_seed, step)`, which is what lets the client commit to the whole
+//! dataset up front and lets any party re-derive any batch.
+
+use std::collections::BTreeMap;
+
+use crate::hash::{hash_tensor, merkle::MerkleTree, Hash, Hasher};
+use crate::model::Preset;
+use crate::tensor::Tensor;
+use crate::util::prng::{derive_seed, SplitMix64};
+
+/// What kind of batch a model preset consumes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Kind {
+    /// `tokens [b, s]` + `targets [b*s]` (next-token LM).
+    TokenLm { vocab: usize },
+    /// `x [b, d]` + `targets [b]` (classification).
+    Features { d_in: usize, classes: usize },
+}
+
+/// Deterministic per-step batch generator.
+#[derive(Debug, Clone)]
+pub struct DataGen {
+    seed: u64,
+    batch: usize,
+    seq: usize,
+    kind: Kind,
+    /// Markov successor table (TokenLm only).
+    successor: Vec<usize>,
+}
+
+impl DataGen {
+    pub fn new(preset: Preset, batch: usize, seq: usize, seed: u64) -> DataGen {
+        let kind = match preset {
+            Preset::Mlp => Kind::Features { d_in: 16, classes: 8 },
+            Preset::LlamaTiny | Preset::LlamaTinyLora | Preset::BertTiny => {
+                Kind::TokenLm { vocab: 64 }
+            }
+            Preset::LlamaSmall | Preset::LlamaBase | Preset::BertSmall => {
+                Kind::TokenLm { vocab: 256 }
+            }
+        };
+        let successor = match kind {
+            Kind::TokenLm { vocab } => {
+                let mut rng = SplitMix64::new(derive_seed(seed, "successor", 0));
+                (0..vocab).map(|_| rng.next_bounded(vocab as u64) as usize).collect()
+            }
+            Kind::Features { .. } => Vec::new(),
+        };
+        DataGen { seed, batch, seq, kind, successor }
+    }
+
+    /// The batch for 1-based training step `step`.
+    pub fn batch(&self, step: u64) -> BTreeMap<String, Tensor> {
+        let mut rng = SplitMix64::new(derive_seed(self.seed, "batch", step));
+        let mut out = BTreeMap::new();
+        match self.kind {
+            Kind::TokenLm { vocab } => {
+                let mut toks = Vec::with_capacity(self.batch * self.seq);
+                let mut tgts = Vec::with_capacity(self.batch * self.seq);
+                for _ in 0..self.batch {
+                    let mut cur = rng.next_bounded(vocab as u64) as usize;
+                    for _ in 0..self.seq {
+                        toks.push(cur as f32);
+                        // next token: Markov successor 80% of the time
+                        let next = if rng.next_f32() < 0.8 {
+                            self.successor[cur]
+                        } else {
+                            rng.next_bounded(vocab as u64) as usize
+                        };
+                        tgts.push(next as f32);
+                        cur = next;
+                    }
+                }
+                out.insert("tokens".into(), Tensor::new([self.batch, self.seq], toks));
+                out.insert("targets".into(), Tensor::new([self.batch * self.seq], tgts));
+            }
+            Kind::Features { d_in, classes } => {
+                let x = Tensor::rand([self.batch, d_in], derive_seed(self.seed, "x", step), 1.0);
+                let t: Vec<f32> = (0..self.batch)
+                    .map(|r| {
+                        let row = &x.data()[r * d_in..r * d_in + classes];
+                        row.iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .unwrap()
+                            .0 as f32
+                    })
+                    .collect();
+                out.insert("x".into(), x);
+                out.insert("targets".into(), Tensor::new([self.batch], t));
+            }
+        }
+        out
+    }
+
+    /// Leaf commitment to step `step`'s batch (name → tensor hash, ordered).
+    pub fn batch_leaf(&self, step: u64) -> Hash {
+        let batch = self.batch(step);
+        let mut h = Hasher::new("verde.data-leaf.v1");
+        h.u64(step);
+        h.u64(batch.len() as u64);
+        for (name, t) in &batch {
+            h.str(name);
+            let th = hash_tensor(t);
+            h.hash(&th);
+        }
+        h.finish()
+    }
+
+    /// Merkle commitment to the entire `steps`-long dataset (the client's
+    /// up-front data commitment).
+    pub fn commitment(&self, steps: u64) -> MerkleTree {
+        let leaves: Vec<Hash> = (1..=steps).map(|s| self.batch_leaf(s)).collect();
+        MerkleTree::build(&leaves)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_are_step_deterministic() {
+        let g = DataGen::new(Preset::LlamaTiny, 2, 8, 42);
+        let a = g.batch(5);
+        let b = g.batch(5);
+        let c = g.batch(6);
+        assert!(a["tokens"].bit_eq(&b["tokens"]));
+        assert!(a["targets"].bit_eq(&b["targets"]));
+        assert!(!a["tokens"].bit_eq(&c["tokens"]));
+    }
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let g = DataGen::new(Preset::LlamaTiny, 4, 16, 1);
+        for step in 1..=10 {
+            let b = g.batch(step);
+            for &t in b["tokens"].data().iter().chain(b["targets"].data()) {
+                assert!(t >= 0.0 && t < 64.0 && t.fract() == 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn markov_structure_is_learnable() {
+        // ≥60% of targets should follow the successor map (0.8 nominal)
+        let g = DataGen::new(Preset::LlamaTiny, 8, 32, 3);
+        let mut follow = 0;
+        let mut total = 0;
+        for step in 1..=20 {
+            let b = g.batch(step);
+            for (tok, tgt) in b["tokens"].data().iter().zip(b["targets"].data()) {
+                total += 1;
+                if g.successor[*tok as usize] == *tgt as usize {
+                    follow += 1;
+                }
+            }
+        }
+        let frac = follow as f64 / total as f64;
+        assert!(frac > 0.6, "successor-follow fraction {frac}");
+    }
+
+    #[test]
+    fn mlp_batches_have_valid_labels() {
+        let g = DataGen::new(Preset::Mlp, 8, 0, 2);
+        let b = g.batch(1);
+        assert_eq!(b["x"].shape(), &[8, 16]);
+        for &t in b["targets"].data() {
+            assert!(t >= 0.0 && t < 8.0);
+        }
+    }
+
+    #[test]
+    fn commitment_and_leaves_verify() {
+        let g = DataGen::new(Preset::LlamaTiny, 2, 4, 9);
+        let tree = g.commitment(8);
+        assert_eq!(tree.leaf_count(), 8);
+        for step in 1..=8u64 {
+            let proof = tree.prove((step - 1) as usize);
+            assert!(MerkleTree::verify(&tree.root(), &g.batch_leaf(step), &proof));
+        }
+        // a forged leaf fails
+        let forged = g.batch_leaf(99);
+        let proof = tree.prove(0);
+        assert!(!MerkleTree::verify(&tree.root(), &forged, &proof));
+    }
+}

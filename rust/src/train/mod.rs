@@ -1,0 +1,80 @@
+//! Training-program setup and execution: the "program setup" of paper §2
+//! (client specifies model, initial weights, training data, optimizer,
+//! batch size), the synthetic corpus ([`data`]), the multi-level checkpoint
+//! schedule ([`checkpoint`]), and the step-by-step session driver
+//! ([`session`]).
+
+pub mod checkpoint;
+pub mod data;
+pub mod session;
+
+use crate::graph::autodiff::Optimizer;
+use crate::hash::{Hash, Hasher};
+use crate::model::Preset;
+
+/// Everything the client fixes up front. All parties (trainers, referee)
+/// derive identical programs, initial states, and data streams from this —
+/// the paper's "program setup" plus training metadata.
+#[derive(Debug, Clone, Copy)]
+pub struct JobSpec {
+    pub preset: Preset,
+    pub batch: usize,
+    pub seq: usize,
+    /// Total number of training steps `n`.
+    pub steps: u64,
+    pub optimizer: Optimizer,
+    /// Seed for the initial parameters.
+    pub weight_seed: u64,
+    /// Seed for the synthetic data stream.
+    pub data_seed: u64,
+    /// Phase 1 checkpoint count per level (`N` in §2.1).
+    pub checkpoint_n: u64,
+}
+
+impl JobSpec {
+    pub fn quick(preset: Preset, steps: u64) -> JobSpec {
+        JobSpec {
+            preset,
+            batch: 2,
+            seq: 8,
+            steps,
+            optimizer: Optimizer::adam(1e-2),
+            weight_seed: 0xA11CE,
+            data_seed: 0xDA7A,
+            checkpoint_n: 4,
+        }
+    }
+
+    /// Commitment to the job itself (model structure + seeds + metadata);
+    /// disputes are scoped to a job hash.
+    pub fn commit(&self, graph_structure: &Hash, genesis_root: &Hash) -> Hash {
+        let mut h = Hasher::new("verde.job.v1");
+        h.str(self.preset.name());
+        h.u64(self.batch as u64);
+        h.u64(self.seq as u64);
+        h.u64(self.steps);
+        h.u64(self.weight_seed);
+        h.u64(self.data_seed);
+        h.u64(self.checkpoint_n);
+        h.hash(graph_structure);
+        h.hash(genesis_root);
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::Hash;
+
+    #[test]
+    fn job_commit_binds_fields() {
+        let a = JobSpec::quick(Preset::Mlp, 16);
+        let mut b = a;
+        b.data_seed += 1;
+        let g = Hash::of_bytes(b"g");
+        let s = Hash::of_bytes(b"s");
+        assert_ne!(a.commit(&g, &s), b.commit(&g, &s));
+        assert_eq!(a.commit(&g, &s), a.commit(&g, &s));
+    }
+}

@@ -1,0 +1,165 @@
+//! The per-job execution driver shared by trainers and (during disputes)
+//! the referee's bookkeeping: builds the model + extended graph from a
+//! [`JobSpec`], derives deterministic batches, and advances the state
+//! machine one step at a time.
+
+use std::collections::BTreeMap;
+
+use crate::graph::autodiff::TrainStep;
+use crate::graph::executor::{execute, execute_traced, ExecOpts, State, StepTrace, TamperFn};
+use crate::graph::kernels::Backend;
+use crate::hash::Hash;
+use crate::tensor::Tensor;
+
+use super::data::DataGen;
+use super::JobSpec;
+
+/// A fully-instantiated training program: everybody (client, trainers,
+/// referee) constructs an identical `Session` from the same [`JobSpec`].
+pub struct Session {
+    pub spec: JobSpec,
+    pub program: TrainStep,
+    pub genesis: State,
+    pub data: DataGen,
+    /// Commitment to the whole job (graph structure + genesis + metadata).
+    pub job_hash: Hash,
+}
+
+impl Session {
+    pub fn new(spec: JobSpec) -> Session {
+        let model = spec.preset.build(spec.batch, spec.seq);
+        let program = model.train_step(&spec.optimizer);
+        let mut genesis = model.init_state(spec.weight_seed, &spec.optimizer);
+        genesis.step = 0;
+        let data = DataGen::new(spec.preset, spec.batch, spec.seq, spec.data_seed);
+        let job_hash = spec.commit(
+            &program.graph.structure_hash(),
+            &genesis.genesis_commitment().root(),
+        );
+        Session { spec, program, genesis, data, job_hash }
+    }
+
+    /// Deterministic batch for 1-based `step`.
+    pub fn batch(&self, step: u64) -> BTreeMap<String, Tensor> {
+        self.data.batch(step)
+    }
+
+    /// Advance one step WITHOUT tracing (the fast honest path).
+    /// Returns the next state and the step loss.
+    pub fn advance(&self, state: &State, backend: Backend) -> (State, f32) {
+        let step = state.step + 1;
+        let batch = self.batch(step);
+        let e = execute(&self.program.graph, state, &batch, backend, step, &ExecOpts::default());
+        let loss = e.values[self.program.loss.node][0].data()[0];
+        (self.apply(state, step, &e.values), loss)
+    }
+
+    /// Advance one step WITH AugmentedCGNode tracing (checkpoint steps and
+    /// dispute re-execution). `tamper` injects faults (dishonest trainers).
+    pub fn advance_traced(
+        &self,
+        state: &State,
+        backend: Backend,
+        keep_values: bool,
+        tamper: Option<TamperFn>,
+    ) -> (State, f32, StepTrace) {
+        let step = state.step + 1;
+        let batch = self.batch(step);
+        let (e, trace) =
+            execute_traced(&self.program.graph, state, &batch, backend, step, keep_values, tamper);
+        let loss = e.values[self.program.loss.node][0].data()[0];
+        (self.apply(state, step, &e.values), loss, trace)
+    }
+
+    /// Build the next state from executed values: updated params/opt-state
+    /// replace old entries; frozen params carry over.
+    fn apply(&self, state: &State, step: u64, values: &[Vec<Tensor>]) -> State {
+        let mut next = state.clone();
+        next.step = step;
+        for (name, slot) in &self.program.param_updates {
+            next.params.insert(name.clone(), values[slot.node][slot.out_idx].clone());
+        }
+        for (name, slot) in &self.program.opt_updates {
+            next.opt.insert(name.clone(), values[slot.node][slot.out_idx].clone());
+        }
+        next
+    }
+
+    /// The checkpoint hash at a state+trace boundary: genesis root for step
+    /// 0, otherwise the Merkle root of the producing step's node hashes.
+    pub fn genesis_root(&self) -> Hash {
+        self.genesis.genesis_commitment().root()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Preset;
+
+    #[test]
+    fn two_sessions_agree_bitwise() {
+        let spec = JobSpec::quick(Preset::Mlp, 6);
+        let s1 = Session::new(spec);
+        let s2 = Session::new(spec);
+        assert_eq!(s1.job_hash, s2.job_hash);
+        let mut a = s1.genesis.clone();
+        let mut b = s2.genesis.clone();
+        for _ in 0..6 {
+            let (na, la) = s1.advance(&a, Backend::Rep);
+            let (nb, lb) = s2.advance(&b, Backend::Rep);
+            assert_eq!(la.to_bits(), lb.to_bits());
+            a = na;
+            b = nb;
+        }
+        for (k, t) in &a.params {
+            assert!(t.bit_eq(&b.params[k]), "{k}");
+        }
+    }
+
+    #[test]
+    fn traced_and_untraced_states_match() {
+        let spec = JobSpec::quick(Preset::LlamaTiny, 3);
+        let s = Session::new(spec);
+        let (plain, l1) = s.advance(&s.genesis, Backend::Rep);
+        let (traced, l2, trace) = s.advance_traced(&s.genesis, Backend::Rep, false, None);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(plain.step, traced.step);
+        for (k, t) in &plain.params {
+            assert!(t.bit_eq(&traced.params[k]), "{k}");
+        }
+        assert_eq!(trace.step, 1);
+        assert!(trace.nodes.len() > 50, "extended graph has many nodes");
+    }
+
+    #[test]
+    fn loss_decreases_over_llama_tiny_run() {
+        let spec = JobSpec::quick(Preset::LlamaTiny, 30);
+        let s = Session::new(spec);
+        let mut st = s.genesis.clone();
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..30 {
+            let (n, l) = s.advance(&st, Backend::Rep);
+            first.get_or_insert(l);
+            last = l;
+            st = n;
+        }
+        assert!(last < first.unwrap(), "{:?} -> {last}", first.unwrap());
+    }
+
+    #[test]
+    fn trace_root_is_stable_across_reexecution() {
+        let spec = JobSpec::quick(Preset::Mlp, 4);
+        let s = Session::new(spec);
+        // run to step 2, then re-execute step 3 twice
+        let mut st = s.genesis.clone();
+        for _ in 0..2 {
+            st = s.advance(&st, Backend::Rep).0;
+        }
+        let (_, _, t1) = s.advance_traced(&st, Backend::Rep, false, None);
+        let (_, _, t2) = s.advance_traced(&st, Backend::Rep, true, None);
+        assert_eq!(t1.root(), t2.root());
+        assert!(t2.values.is_some());
+    }
+}

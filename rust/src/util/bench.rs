@@ -1,0 +1,131 @@
+//! Benchmark harness (stand-in for criterion, unavailable offline).
+//!
+//! Provides warmup + repeated timed runs with median/min/mean reporting and
+//! a machine-readable JSON line per measurement, which the bench binaries
+//! use to regenerate the paper's tables and figures (EXPERIMENTS.md).
+
+use std::time::{Duration, Instant};
+
+/// One measured quantity.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub samples: usize,
+}
+
+impl Measurement {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `samples` measured runs.
+/// The closure's return value is consumed via `std::hint::black_box` so the
+/// optimizer cannot elide the work.
+pub fn time<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Measurement {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let median = times[times.len() / 2];
+    let min = times[0];
+    let mean = times.iter().sum::<Duration>() / samples as u32;
+    Measurement { name: name.to_string(), median, mean, min, samples }
+}
+
+/// Adaptive variant: keeps sampling until `min_total` wall time is spent or
+/// `max_samples` reached — good for very fast ops.
+pub fn time_adaptive<T>(name: &str, min_total: Duration, max_samples: usize, mut f: impl FnMut() -> T) -> Measurement {
+    // warmup once
+    std::hint::black_box(f());
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < min_total && times.len() < max_samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    if times.is_empty() {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let median = times[times.len() / 2];
+    let min = times[0];
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    Measurement { name: name.to_string(), median, mean, min, samples: times.len() }
+}
+
+/// Overhead of `slow` relative to `fast`, in percent (the paper's metric:
+/// "RepOps incurs X% extra time").
+pub fn overhead_pct(slow: &Measurement, fast: &Measurement) -> f64 {
+    (slow.median_secs() / fast.median_secs() - 1.0) * 100.0
+}
+
+/// Pretty-print a table row and emit a JSON line for downstream tooling.
+pub fn report(m: &Measurement, extra: &[(&str, String)]) {
+    let mut json = format!(
+        "{{\"name\":\"{}\",\"median_s\":{:.9},\"mean_s\":{:.9},\"min_s\":{:.9},\"samples\":{}",
+        m.name,
+        m.median.as_secs_f64(),
+        m.mean.as_secs_f64(),
+        m.min.as_secs_f64(),
+        m.samples
+    );
+    for (k, v) in extra {
+        json.push_str(&format!(",\"{k}\":{v}"));
+    }
+    json.push('}');
+    println!("  {:<48} median {:>12?}  (n={})", m.name, m.median, m.samples);
+    println!("JSON {json}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_measures_something() {
+        let m = time("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(m.median > Duration::ZERO);
+        assert_eq!(m.samples, 5);
+        assert!(m.min <= m.median);
+    }
+
+    #[test]
+    fn overhead_pct_sane() {
+        let fast = Measurement {
+            name: "f".into(),
+            median: Duration::from_millis(10),
+            mean: Duration::from_millis(10),
+            min: Duration::from_millis(10),
+            samples: 1,
+        };
+        let slow = Measurement {
+            name: "s".into(),
+            median: Duration::from_millis(15),
+            mean: Duration::from_millis(15),
+            min: Duration::from_millis(15),
+            samples: 1,
+        };
+        let o = overhead_pct(&slow, &fast);
+        assert!((o - 50.0).abs() < 1e-9);
+    }
+}

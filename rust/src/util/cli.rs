@@ -1,0 +1,97 @@
+//! Tiny CLI argument parser (stand-in for clap, unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — skips argv[0].
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> f32 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants a float, got '{v}'")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        // NOTE: a `--key` followed by a non-dashed token consumes it as the
+        // value, so bare flags go last or use `--key=value` style.
+        let a = parse("train extra --steps 100 --model=llama-tiny --verbose");
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("model"), Some("llama-tiny"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn trailing_flag_is_flag() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+}

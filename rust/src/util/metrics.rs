@@ -1,0 +1,104 @@
+//! Lightweight metrics: counters and a JSON-lines emitter.
+//!
+//! The protocol accounts for the quantities the paper reasons about —
+//! bytes communicated per party, steps re-executed, hashes computed,
+//! operators recomputed by the referee — through [`Counters`].
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A named bag of monotonically increasing counters.
+#[derive(Debug, Default, Clone)]
+pub struct Counters {
+    vals: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, key: &str, delta: u64) {
+        *self.vals.entry(key.to_string()).or_insert(0) += delta;
+    }
+
+    pub fn incr(&mut self, key: &str) {
+        self.add(key, 1);
+    }
+
+    pub fn get(&self, key: &str) -> u64 {
+        self.vals.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, v) in &other.vals {
+            self.add(k, *v);
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.vals.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// Render as a single JSON object (sorted keys, stable output).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{");
+        for (i, (k, v)) in self.vals.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "\"{k}\":{v}");
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// Human-friendly byte formatting for reports.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_merge() {
+        let mut a = Counters::new();
+        a.add("bytes", 10);
+        a.incr("msgs");
+        let mut b = Counters::new();
+        b.add("bytes", 5);
+        a.merge(&b);
+        assert_eq!(a.get("bytes"), 15);
+        assert_eq!(a.get("msgs"), 1);
+        assert_eq!(a.get("absent"), 0);
+    }
+
+    #[test]
+    fn json_stable_sorted() {
+        let mut c = Counters::new();
+        c.add("z", 1);
+        c.add("a", 2);
+        assert_eq!(c.to_json(), "{\"a\":2,\"z\":1}");
+    }
+
+    #[test]
+    fn human_bytes_formats() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 << 30), "3.00 GiB");
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities: deterministic PRNGs, a property-testing
+//! harness, a benchmarking harness, CLI parsing, and metrics emission.
+//!
+//! These replace crates (proptest, criterion, clap) that are unavailable in
+//! the offline build environment — see DESIGN.md §4 substitution 5.
+
+pub mod bench;
+pub mod cli;
+pub mod metrics;
+pub mod prng;
+pub mod proptest;

@@ -1,0 +1,141 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! All randomness in the system (weight init, synthetic data, fault
+//! placement, property-test case generation) flows through these seeded
+//! generators, which is what lets two independent trainers — and the test
+//! suite — reproduce identical bit streams. The paper relies on "built-in
+//! support for deterministic pseudorandomness" (§3.1); this module is our
+//! equivalent.
+
+/// SplitMix64 — tiny, fast, full-period 2^64 stream; the recommended seeder
+/// for other generators and good enough statistically for synthetic data.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, 1)` with 24 bits of mantissa entropy (exact in f32).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, bound)` (bound > 0), via 128-bit multiply —
+    /// avoids modulo bias.
+    #[inline]
+    pub fn next_bounded(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller (fixed operation order; uses libm only
+    /// in test/data-generation contexts, never inside RepOps kernels).
+    pub fn next_normal(&mut self) -> f32 {
+        let u1 = self.next_f32().max(1e-7);
+        let u2 = self.next_f32();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_bounded(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Derive a fresh stream for a labelled sub-purpose, so e.g. "weights of
+/// layer 3" and "batch 17 of the corpus" never share a stream even under the
+/// same root seed.
+pub fn derive_seed(root: u64, label: &str, index: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ root;
+    for b in label.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h ^= index;
+    h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    SplitMix64::new(h).next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn bounded_respects_bound() {
+        let mut r = SplitMix64::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.next_bounded(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all buckets should be hit");
+    }
+
+    #[test]
+    fn derive_seed_separates_labels() {
+        let a = derive_seed(1, "weights", 0);
+        let b = derive_seed(1, "data", 0);
+        let c = derive_seed(1, "weights", 1);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, derive_seed(1, "weights", 0));
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut r = SplitMix64::new(11);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.next_normal()).collect();
+        let mean: f32 = xs.iter().sum::<f32>() / n as f32;
+        let var: f32 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(13);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "astronomically unlikely");
+    }
+}

@@ -1,0 +1,125 @@
+//! Minimal property-testing harness (stand-in for the `proptest` crate,
+//! unavailable offline — DESIGN.md §4.5).
+//!
+//! Usage:
+//! ```
+//! use verde::util::proptest::{forall, Gen};
+//! forall("matmul associativity of shapes", 64, |g: &mut Gen| {
+//!     let m = g.usize_in(1, 8);
+//!     assert!(m >= 1);
+//! });
+//! ```
+//!
+//! On failure the panic message carries the case index and the seed, so a
+//! failing case replays with `Gen::replay(seed)`.
+
+use super::prng::SplitMix64;
+
+/// A generator handle passed to each property invocation.
+pub struct Gen {
+    rng: SplitMix64,
+    seed: u64,
+}
+
+impl Gen {
+    pub fn replay(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed), seed }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.next_bounded((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// f32 with a wide exponent range — the adversarial distribution for
+    /// reduction-order sensitivity tests.
+    pub fn f32_wide(&mut self) -> f32 {
+        let mag = self.usize_in(0, 24) as i32 - 12;
+        (self.rng.next_f32() * 2.0 - 1.0) * (2.0f32).powi(mag)
+    }
+
+    pub fn vec_f32_wide(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.f32_wide()).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Run `prop` against `cases` generated cases. Panics (with replay seed) on
+/// the first failing case.
+pub fn forall(name: &str, cases: u32, mut prop: impl FnMut(&mut Gen)) {
+    // Root seed fixed for CI reproducibility; vary locally by setting
+    // VERDE_PROPTEST_SEED.
+    let root = std::env::var("VERDE_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_u64);
+    let mut seeder = SplitMix64::new(root);
+    for case in 0..cases {
+        let seed = seeder.next_u64();
+        let mut g = Gen::replay(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("sum is commutative", 32, |g| {
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            assert_eq!((a + b).to_bits(), (b + a).to_bits());
+        });
+    }
+
+    #[test]
+    fn forall_reports_failures_with_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always fails", 4, |_| panic!("boom"));
+        });
+        let err = r.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "got: {msg}");
+        assert!(msg.contains("boom"), "got: {msg}");
+    }
+
+    #[test]
+    fn gen_replay_reproduces() {
+        let mut a = Gen::replay(123);
+        let mut b = Gen::replay(123);
+        for _ in 0..10 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Full 2-trainer dispute orchestration: Phase 1 → Phase 2 → decision,
+//! with communication and referee-work accounting.
+
+use crate::net::{Endpoint, Metered};
+use crate::train::JobSpec;
+use crate::util::metrics::Counters;
+
+use super::phase1::{run_phase1, Phase1Error};
+use super::phase2::run_phase2;
+use super::referee::{Referee, Verdict};
+
+/// Everything a resolved dispute reports.
+#[derive(Debug, Clone)]
+pub struct DisputeReport {
+    pub verdict: Verdict,
+    /// First diverging training step (None if no dispute / early verdict).
+    pub diverging_step: Option<u64>,
+    /// First diverging node in the step's extended graph.
+    pub diverging_node: Option<usize>,
+    /// Phase 1 interaction rounds.
+    pub phase1_rounds: u32,
+    /// Total protocol bytes exchanged with each trainer.
+    pub bytes: [u64; 2],
+    /// Referee work counters (ops recomputed, lineage checks, input bytes).
+    pub referee: Counters,
+}
+
+/// Run a complete dispute between two trainer endpoints.
+///
+/// The referee derives its own program/genesis/data view from `spec` (the
+/// client's program setup) and ends up recomputing at most one operator.
+pub fn run_dispute(
+    spec: JobSpec,
+    trainer0: impl Endpoint,
+    trainer1: impl Endpoint,
+) -> DisputeReport {
+    let mut referee = Referee::new(spec);
+    let mut t0 = Metered::new(trainer0);
+    let mut t1 = Metered::new(trainer1);
+    let genesis = referee.session.genesis_root();
+    let graph_len = referee.session.program.graph.len();
+
+    let p1 = match run_phase1(&mut [&mut t0, &mut t1], genesis, spec.steps, spec.checkpoint_n) {
+        Ok(p1) => p1,
+        Err(Phase1Error::NoDispute) => {
+            return DisputeReport {
+                verdict: Verdict::NoDispute,
+                diverging_step: None,
+                diverging_node: None,
+                phase1_rounds: 0,
+                bytes: [t0.bytes_sent() + t0.bytes_received(), t1.bytes_sent() + t1.bytes_received()],
+                referee: referee.counters,
+            }
+        }
+        Err(Phase1Error::Misbehaved { trainer, why }) => {
+            return DisputeReport {
+                verdict: Verdict::misbehaved(trainer, why),
+                diverging_step: None,
+                diverging_node: None,
+                phase1_rounds: 0,
+                bytes: [t0.bytes_sent() + t0.bytes_received(), t1.bytes_sent() + t1.bytes_received()],
+                referee: referee.counters,
+            }
+        }
+        Err(Phase1Error::CommitMismatch { trainer }) => {
+            return DisputeReport {
+                verdict: Verdict::commit_inconsistent(trainer),
+                diverging_step: None,
+                diverging_node: None,
+                phase1_rounds: 0,
+                bytes: [t0.bytes_sent() + t0.bytes_received(), t1.bytes_sent() + t1.bytes_received()],
+                referee: referee.counters,
+            }
+        }
+    };
+
+    let (verdict, node_idx) = match run_phase2(&mut [&mut t0, &mut t1], &p1, graph_len) {
+        Ok(p2) => {
+            let v = referee.decide(&mut [&mut t0, &mut t1], &p1, &p2);
+            (v, Some(p2.node_idx))
+        }
+        Err(early) => (early, None),
+    };
+
+    DisputeReport {
+        verdict,
+        diverging_step: Some(p1.diverging_step),
+        diverging_node: node_idx,
+        phase1_rounds: p1.rounds,
+        bytes: [t0.bytes_sent() + t0.bytes_received(), t1.bytes_sent() + t1.bytes_received()],
+        referee: referee.counters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::kernels::Backend;
+    use crate::model::Preset;
+    use crate::verde::faults::Fault;
+    use crate::verde::referee::DecisionCase;
+    use crate::verde::trainer::TrainerNode;
+
+    fn dispute(fault: Fault) -> DisputeReport {
+        let spec = JobSpec::quick(Preset::Mlp, 8);
+        let mut honest = TrainerNode::honest("honest", spec);
+        let mut cheat = TrainerNode::new("cheat", spec, Backend::Rep, fault);
+        honest.train();
+        cheat.train();
+        run_dispute(spec, honest, cheat)
+    }
+
+    #[test]
+    fn honest_pair_no_dispute() {
+        let spec = JobSpec::quick(Preset::Mlp, 8);
+        let mut a = TrainerNode::honest("a", spec);
+        let mut b = TrainerNode::honest("b", spec);
+        a.train();
+        b.train();
+        let r = run_dispute(spec, a, b);
+        assert_eq!(r.verdict, Verdict::NoDispute);
+    }
+
+    #[test]
+    fn tamper_output_convicted_by_recompute() {
+        let r = dispute(Fault::TamperOutput { step: 5, node: 7, delta: 0.5 });
+        assert_eq!(r.verdict.convicted(), Some(1), "{:?}", r.verdict);
+        assert_eq!(r.verdict.case(), Some(DecisionCase::OutputRecompute));
+        assert_eq!(r.diverging_step, Some(5));
+        assert_eq!(r.referee.get("ops_recomputed"), 1, "exactly one op recomputed");
+    }
+
+    #[test]
+    fn wrong_data_convicted_by_data_check() {
+        let r = dispute(Fault::WrongData { step: 3 });
+        assert_eq!(r.verdict.convicted(), Some(1), "{:?}", r.verdict);
+        assert_eq!(r.verdict.case(), Some(DecisionCase::DataCheck));
+        assert_eq!(r.referee.get("ops_recomputed"), 0, "no recompute needed");
+    }
+
+    #[test]
+    fn cheater_as_trainer0_also_convicted() {
+        let spec = JobSpec::quick(Preset::Mlp, 8);
+        let mut honest = TrainerNode::honest("honest", spec);
+        let mut cheat = TrainerNode::new(
+            "cheat",
+            spec,
+            Backend::Rep,
+            Fault::TamperOutput { step: 2, node: 7, delta: -0.25 },
+        );
+        honest.train();
+        cheat.train();
+        // NOTE: cheater first this time
+        let r = run_dispute(spec, cheat, honest);
+        assert_eq!(r.verdict.convicted(), Some(0), "{:?}", r.verdict);
+    }
+}

@@ -1,0 +1,146 @@
+//! The fault model: every dishonest-trainer behaviour the protocol must
+//! catch (DESIGN.md §1 maps each to the referee case that convicts it).
+//!
+//! Faults are *consistent* lies: the cheating trainer commits to the same
+//! wrong computation during training and during dispute re-execution —
+//! the hard case. (Inconsistent lying is caught immediately by the Merkle
+//! checks; [`Fault::InconsistentCommit`] covers that path explicitly.)
+
+use crate::graph::{NodeId, Op};
+
+/// Dishonest-trainer strategies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// Honest execution on RepOps.
+    None,
+    /// Perturb one operator's output tensor at one step (bit flip / lazy
+    /// approximation / backdoor insertion all look like this on the wire).
+    TamperOutput { step: u64, node: NodeId, delta: f32 },
+    /// Run a structurally different operator at one node (wrong graph —
+    /// referee Case 1).
+    WrongOperator { step: u64, node: NodeId },
+    /// Train on a substituted data batch at one step (data poisoning).
+    WrongData { step: u64 },
+    /// Skip the optimizer update at one step (lazy trainer; weights pass
+    /// through unchanged).
+    SkipOptimizer { step: u64 },
+    /// Stop computing after `after` steps and replay the stale checkpoint
+    /// for the rest of the run (the paper's "lazy server" example).
+    SkipSteps { after: u64 },
+    /// Lie about one input hash in the committed trace (forged lineage —
+    /// referee Case 2).
+    ForgedLineage { step: u64, node: NodeId },
+    /// Send a Phase 2 node sequence inconsistent with the Phase 1
+    /// commitment (caught by Algorithm 2 line 7).
+    InconsistentCommit { step: u64 },
+    /// Honest intent, but executing on non-reproducible (free-order)
+    /// kernels — the hardware-nondeterminism hazard RepOps removes (§3).
+    NonRepHardware,
+}
+
+impl Fault {
+    /// Does this fault alter the execution of step `step`?
+    pub fn affects_step(&self, step: u64) -> bool {
+        match self {
+            Fault::None => false,
+            Fault::TamperOutput { step: s, .. }
+            | Fault::WrongOperator { step: s, .. }
+            | Fault::WrongData { step: s }
+            | Fault::SkipOptimizer { step: s }
+            | Fault::ForgedLineage { step: s, .. }
+            | Fault::InconsistentCommit { step: s } => *s == step,
+            Fault::SkipSteps { after } => step > *after,
+            Fault::NonRepHardware => true,
+        }
+    }
+
+    /// The first training step whose checkpoint diverges from honest
+    /// execution, if statically known (tests use this to validate Phase 1).
+    pub fn first_divergent_step(&self) -> Option<u64> {
+        match self {
+            Fault::None => None,
+            Fault::TamperOutput { step, .. }
+            | Fault::WrongOperator { step, .. }
+            | Fault::WrongData { step }
+            | Fault::SkipOptimizer { step }
+            | Fault::ForgedLineage { step, .. }
+            | Fault::InconsistentCommit { step } => Some(*step),
+            Fault::SkipSteps { after } => Some(after + 1),
+            Fault::NonRepHardware => Some(1),
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        format!("{self:?}")
+    }
+}
+
+/// A structure-changing mutation for [`Fault::WrongOperator`]: swap the
+/// operator for a shape-compatible impostor. Returns `None` when the node's
+/// op has no safe impostor (callers pick a different node).
+pub fn mutate_op(op: &Op) -> Option<Op> {
+    match op {
+        Op::Gelu => Some(Op::Relu),
+        Op::Silu => Some(Op::Relu),
+        Op::Relu => Some(Op::Tanh),
+        Op::Tanh => Some(Op::Relu),
+        Op::Scale { c } => Some(Op::Scale { c: c * 1.25 }),
+        Op::RmsNorm { eps } => Some(Op::RmsNorm { eps: eps * 10.0 }),
+        Op::LayerNorm { eps } => Some(Op::LayerNorm { eps: eps * 10.0 }),
+        Op::AdamUpdate { lr, beta1, beta2, eps } => Some(Op::AdamUpdate {
+            lr: lr * 0.5, // trains with half the promised learning rate
+            beta1: *beta1,
+            beta2: *beta2,
+            eps: *eps,
+        }),
+        _ => None,
+    }
+}
+
+/// First node in `graph` whose op has an impostor — a convenient target for
+/// `WrongOperator` tests and CLI demos.
+pub fn first_mutable_node(graph: &crate::graph::Graph) -> Option<NodeId> {
+    graph.nodes.iter().position(|n| mutate_op(&n.op).is_some())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affects_step_logic() {
+        let f = Fault::TamperOutput { step: 5, node: 3, delta: 1.0 };
+        assert!(f.affects_step(5));
+        assert!(!f.affects_step(4));
+        let s = Fault::SkipSteps { after: 10 };
+        assert!(!s.affects_step(10));
+        assert!(s.affects_step(11));
+        assert!(s.affects_step(99));
+        assert!(!Fault::None.affects_step(1));
+        assert!(Fault::NonRepHardware.affects_step(1));
+    }
+
+    #[test]
+    fn first_divergence_matches_affects() {
+        for f in [
+            Fault::TamperOutput { step: 3, node: 0, delta: 0.1 },
+            Fault::WrongData { step: 7 },
+            Fault::SkipSteps { after: 4 },
+        ] {
+            let d = f.first_divergent_step().unwrap();
+            assert!(f.affects_step(d));
+            assert!(!f.affects_step(d - 1) || matches!(f, Fault::NonRepHardware));
+        }
+    }
+
+    #[test]
+    fn mutate_op_changes_attr_hash() {
+        let g = Op::Gelu;
+        let m = mutate_op(&g).unwrap();
+        assert_ne!(g.attr_hash(), m.attr_hash());
+        let s = Op::Scale { c: 2.0 };
+        let ms = mutate_op(&s).unwrap();
+        assert_ne!(s.attr_hash(), ms.attr_hash());
+        assert!(mutate_op(&Op::MatMul).is_none());
+    }
+}

@@ -1,0 +1,30 @@
+//! Verde — the dispute-resolution protocol (paper §2).
+//!
+//! A client delegates the same training job ([`crate::train::JobSpec`]) to
+//! `k` trainers ([`trainer::TrainerNode`]). If their final commitments
+//! disagree, the referee runs:
+//!
+//! * **Phase 1** ([`phase1`]) — multi-level checkpoint bisection to the
+//!   first diverging *training step* (Algorithm 1);
+//! * **Phase 2** ([`phase2`]) — node-hash comparison inside that step to the
+//!   first diverging *operator* (Algorithm 2);
+//! * **Decision** ([`referee`]) — Cases 1–3 of §2.3 over the two opened
+//!   `AugmentedCGNode`s, recomputing at most ONE operator.
+//!
+//! [`faults`] catalogues dishonest-trainer behaviours, [`dispute`]
+//! orchestrates a full 2-trainer dispute, and [`tournament`] extends to
+//! k > 2 trainers (paper footnote 1).
+
+pub mod dispute;
+pub mod faults;
+pub mod phase1;
+pub mod phase2;
+pub mod protocol;
+pub mod referee;
+pub mod tournament;
+pub mod trainer;
+
+pub use dispute::{run_dispute, DisputeReport};
+pub use faults::Fault;
+pub use referee::{DecisionCase, Verdict};
+pub use trainer::TrainerNode;

@@ -1,0 +1,192 @@
+//! Phase 1 (paper Algorithm 1): identify the first diverging training step
+//! by multi-level checkpoint-hash comparison.
+//!
+//! Per the paper's footnote 2, within a level the referee receives all N
+//! checkpoint hashes in one round and scans linearly (N is small enough
+//! that this beats binary search in round trips); *levels* provide the
+//! logarithmic narrowing.
+
+use crate::hash::Hash;
+use crate::net::Endpoint;
+use crate::train::checkpoint::split_points;
+
+use super::protocol::{Request, Response};
+
+/// Outcome of Phase 1.
+#[derive(Debug, Clone)]
+pub struct Phase1Result {
+    /// The first training step the trainers diverged at (1-based).
+    pub diverging_step: u64,
+    /// The agreed checkpoint hash entering that step (`h_start`).
+    pub h_start: Hash,
+    /// The two disputed ending hashes (`h_end[i]` from trainer `i`).
+    pub h_end: [Hash; 2],
+    /// Interaction rounds used (levels walked).
+    pub rounds: u32,
+}
+
+/// Errors that end the dispute during Phase 1 (before any decision).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Phase1Error {
+    /// Final commitments match — nothing to resolve.
+    NoDispute,
+    /// Trainer `i` refused or answered malformed — treated as dishonest.
+    Misbehaved { trainer: usize, why: String },
+    /// A trainer's reported hash for the final boundary contradicts its own
+    /// final commitment (consistency check).
+    CommitMismatch { trainer: usize },
+}
+
+/// Run Phase 1 between the referee and two trainer endpoints.
+///
+/// `genesis_root` is `C_0` (the referee derives it from the job spec);
+/// `steps` is the total step count `n`; `n_per_level` is the checkpoint
+/// count `N`.
+pub fn run_phase1(
+    trainers: &mut [&mut dyn Endpoint; 2],
+    genesis_root: Hash,
+    steps: u64,
+    n_per_level: u64,
+) -> Result<Phase1Result, Phase1Error> {
+    // Algorithm 1 lines 4–7: final commitments.
+    let mut finals = [Hash::ZERO; 2];
+    for (i, t) in trainers.iter_mut().enumerate() {
+        finals[i] = match t.call(Request::FinalCommit) {
+            Response::Commit(h) => h,
+            other => {
+                return Err(Phase1Error::Misbehaved {
+                    trainer: i,
+                    why: format!("bad FinalCommit response: {other:?}"),
+                })
+            }
+        };
+    }
+    if finals[0] == finals[1] {
+        return Err(Phase1Error::NoDispute);
+    }
+
+    // interval (s0, s1] known to contain the first divergence
+    let mut s0 = 0u64;
+    let mut s1 = steps;
+    let mut h_start = genesis_root;
+    let mut h_end = finals;
+    let mut rounds = 0u32;
+
+    while s1 - s0 > 1 {
+        rounds += 1;
+        let boundaries = split_points(s0, s1, n_per_level);
+        let mut reported: [Vec<Hash>; 2] = [Vec::new(), Vec::new()];
+        for (i, t) in trainers.iter_mut().enumerate() {
+            reported[i] = match t.call(Request::CheckpointHashes {
+                boundaries: boundaries.clone(),
+            }) {
+                Response::Hashes(h) if h.len() == boundaries.len() => h,
+                other => {
+                    return Err(Phase1Error::Misbehaved {
+                        trainer: i,
+                        why: format!("bad CheckpointHashes response: {other:?}"),
+                    })
+                }
+            };
+        }
+        // consistency: last boundary == s1, whose hashes must equal the
+        // h_end each trainer already committed to
+        for i in 0..2 {
+            if *reported[i].last().unwrap() != h_end[i] {
+                return Err(Phase1Error::CommitMismatch { trainer: i });
+            }
+        }
+        // find the first diverging boundary (must exist: the last one does)
+        let d = boundaries
+            .iter()
+            .zip(reported[0].iter().zip(reported[1].iter()))
+            .position(|(_, (a, b))| a != b)
+            .expect("h_end differs, so some boundary differs");
+        // narrow: previous boundary (or s0) agrees
+        if d > 0 {
+            s0 = boundaries[d - 1];
+            h_start = reported[0][d - 1]; // == reported[1][d-1]
+        }
+        s1 = boundaries[d];
+        h_end = [reported[0][d], reported[1][d]];
+    }
+
+    Ok(Phase1Result { diverging_step: s1, h_start, h_end, rounds })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::kernels::Backend;
+    use crate::model::Preset;
+    use crate::net::Metered;
+    use crate::train::JobSpec;
+    use crate::verde::faults::Fault;
+    use crate::verde::trainer::TrainerNode;
+
+    fn run(fault: Fault, steps: u64, n: u64) -> Result<Phase1Result, Phase1Error> {
+        let mut spec = JobSpec::quick(Preset::Mlp, steps);
+        spec.checkpoint_n = n;
+        let mut honest = TrainerNode::honest("honest", spec);
+        let mut cheat = TrainerNode::new("cheat", spec, Backend::Rep, fault);
+        honest.train();
+        cheat.train();
+        let genesis = honest.session.genesis_root();
+        let mut a = Metered::new(honest);
+        let mut b = Metered::new(cheat);
+        run_phase1(&mut [&mut a, &mut b], genesis, steps, n)
+    }
+
+    #[test]
+    fn no_dispute_when_honest() {
+        let r = run(Fault::None, 8, 4);
+        assert_eq!(r.unwrap_err(), Phase1Error::NoDispute);
+    }
+
+    #[test]
+    fn finds_exact_diverging_step() {
+        for target in [1u64, 5, 13, 16] {
+            let r = run(Fault::TamperOutput { step: target, node: 4, delta: 0.25 }, 16, 4)
+                .unwrap();
+            assert_eq!(r.diverging_step, target, "fault at step {target}");
+            assert_ne!(r.h_end[0], r.h_end[1]);
+        }
+    }
+
+    #[test]
+    fn finds_step_with_large_n_and_deep_levels() {
+        let r = run(Fault::WrongData { step: 11 }, 27, 3).unwrap();
+        assert_eq!(r.diverging_step, 11);
+        assert!(r.rounds >= 2, "27 steps at N=3 needs ≥3 levels, got {}", r.rounds);
+    }
+
+    #[test]
+    fn skip_steps_diverges_right_after_cutoff() {
+        let r = run(Fault::SkipSteps { after: 9 }, 16, 4).unwrap();
+        assert_eq!(r.diverging_step, 10);
+    }
+
+    #[test]
+    fn communication_is_hashes_only() {
+        let mut spec = JobSpec::quick(Preset::Mlp, 32);
+        spec.checkpoint_n = 4;
+        let mut honest = TrainerNode::honest("honest", spec);
+        let mut cheat = TrainerNode::new(
+            "cheat",
+            spec,
+            Backend::Rep,
+            Fault::TamperOutput { step: 17, node: 4, delta: 0.5 },
+        );
+        honest.train();
+        cheat.train();
+        let genesis = honest.session.genesis_root();
+        let mut a = Metered::new(honest);
+        let mut b = Metered::new(cheat);
+        let r = run_phase1(&mut [&mut a, &mut b], genesis, 32, 4).unwrap();
+        assert_eq!(r.diverging_step, 17);
+        // Phase 1 total traffic should be a few KiB of hashes, nowhere near
+        // the model-state megabytes.
+        let total = a.bytes_received() + a.bytes_sent() + b.bytes_received() + b.bytes_sent();
+        assert!(total < 10_000, "phase 1 moved {total} bytes");
+    }
+}

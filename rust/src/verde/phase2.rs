@@ -1,0 +1,179 @@
+//! Phase 2 (paper Algorithm 2): inside the disputed step, identify the
+//! first diverging node of the extended computational graph and obtain both
+//! trainers' openings of it.
+
+use crate::graph::executor::AugmentedCGNode;
+use crate::hash::merkle::merkle_root;
+use crate::net::Endpoint;
+
+use super::phase1::Phase1Result;
+use super::protocol::{Request, Response};
+use super::referee::Verdict;
+
+/// Outcome of Phase 2: the diverging node's index and both openings,
+/// ready for the referee's decision algorithm.
+#[derive(Debug, Clone)]
+pub struct Phase2Result {
+    pub step: u64,
+    pub node_idx: usize,
+    pub openings: [AugmentedCGNode; 2],
+    /// Both committed node-hash sequences (consulted by the decision
+    /// algorithm when verifying source-node openings in Case 2b).
+    pub seqs: [Vec<crate::hash::Hash>; 2],
+}
+
+/// Run Phase 2. Returns either the diverging-node openings or an early
+/// verdict (a trainer whose Phase 2 messages are inconsistent with its
+/// Phase 1 commitments is convicted without any decision algorithm).
+pub fn run_phase2(
+    trainers: &mut [&mut dyn Endpoint; 2],
+    p1: &Phase1Result,
+    graph_len: usize,
+) -> Result<Phase2Result, Verdict> {
+    let step = p1.diverging_step;
+
+    // lines 3–5: node-hash sequences
+    let mut seqs: [Vec<crate::hash::Hash>; 2] = [Vec::new(), Vec::new()];
+    for (i, t) in trainers.iter_mut().enumerate() {
+        seqs[i] = match t.call(Request::NodeHashSeq { step }) {
+            Response::NodeSeq(s) => s,
+            other => {
+                return Err(Verdict::misbehaved(i, format!("bad NodeHashSeq: {other:?}")))
+            }
+        };
+        // structural sanity: the program has a fixed node count
+        if seqs[i].len() != graph_len {
+            return Err(Verdict::misbehaved(
+                i,
+                format!("sequence length {} != program length {graph_len}", seqs[i].len()),
+            ));
+        }
+    }
+
+    // line 7: the sequences must merkle-hash to the Phase 1 commitments
+    for i in 0..2 {
+        if merkle_root(&seqs[i]) != p1.h_end[i] {
+            return Err(Verdict::commit_inconsistent(i));
+        }
+    }
+
+    // lines 8–9: first diverging node index
+    let d = match seqs[0].iter().zip(seqs[1].iter()).position(|(a, b)| a != b) {
+        Some(d) => d,
+        None => {
+            // identical sequences would imply identical roots — the merkle
+            // check above makes this unreachable for differing h_end
+            unreachable!("h_end differ but node sequences agree");
+        }
+    };
+
+    // line 10: openings, each verified against the trainer's own sequence
+    let mut openings: Vec<AugmentedCGNode> = Vec::with_capacity(2);
+    for (i, t) in trainers.iter_mut().enumerate() {
+        let node = match t.call(Request::OpenNode { step, idx: d }) {
+            Response::Node(n) => n,
+            other => {
+                return Err(Verdict::misbehaved(i, format!("bad OpenNode: {other:?}")))
+            }
+        };
+        if node.commit() != seqs[i][d] {
+            return Err(Verdict::misbehaved(
+                i,
+                format!("node opening does not hash to committed sequence entry {d}"),
+            ));
+        }
+        if node.id != d {
+            return Err(Verdict::misbehaved(i, format!("opened node id {} != {d}", node.id)));
+        }
+        openings.push(node);
+    }
+
+    Ok(Phase2Result {
+        step,
+        node_idx: d,
+        openings: [openings[0].clone(), openings[1].clone()],
+        seqs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::kernels::Backend;
+    use crate::model::Preset;
+    use crate::train::JobSpec;
+    use crate::verde::faults::Fault;
+    use crate::verde::phase1::run_phase1;
+    use crate::verde::referee::DecisionCase;
+    use crate::verde::trainer::TrainerNode;
+
+    fn dispute_to_phase2(
+        fault: Fault,
+        steps: u64,
+    ) -> (Result<Phase2Result, Verdict>, TrainerNode, TrainerNode) {
+        let spec = JobSpec::quick(Preset::Mlp, steps);
+        let mut honest = TrainerNode::honest("honest", spec);
+        let mut cheat = TrainerNode::new("cheat", spec, Backend::Rep, fault);
+        honest.train();
+        cheat.train();
+        let genesis = honest.session.genesis_root();
+        let graph_len = honest.session.program.graph.len();
+        let p1 = run_phase1(&mut [&mut honest, &mut cheat], genesis, steps, 4).unwrap();
+        let r = run_phase2(&mut [&mut honest, &mut cheat], &p1, graph_len);
+        (r, honest, cheat)
+    }
+
+    #[test]
+    fn finds_the_tampered_node() {
+        let (r, honest, _) = dispute_to_phase2(
+            Fault::TamperOutput { step: 5, node: 7, delta: 0.5 },
+            8,
+        );
+        let r = r.unwrap();
+        assert_eq!(r.step, 5);
+        assert_eq!(r.node_idx, 7, "first divergence is the tampered node");
+        // inputs agree (first divergence), outputs differ — Case 3 shape
+        assert_eq!(r.openings[0].input_hashes, r.openings[1].input_hashes);
+        assert_ne!(r.openings[0].output_hashes, r.openings[1].output_hashes);
+        drop(honest);
+    }
+
+    #[test]
+    fn wrong_data_diverges_at_a_data_init_node() {
+        let (r, honest, _) = dispute_to_phase2(Fault::WrongData { step: 3 }, 8);
+        let r = r.unwrap();
+        let node = &honest.session.program.graph.nodes[r.node_idx];
+        assert!(
+            matches!(
+                node.op,
+                crate::graph::Op::Init { kind: crate::graph::InitKind::Data, .. }
+            ),
+            "diverged at {:?}",
+            node.op
+        );
+    }
+
+    #[test]
+    fn inconsistent_commit_convicted_at_line7() {
+        let (r, _, _) = dispute_to_phase2(Fault::InconsistentCommit { step: 6 }, 8);
+        match r.unwrap_err() {
+            Verdict::Dishonest { trainer, case, .. } => {
+                assert_eq!(trainer, 1);
+                assert_eq!(case, DecisionCase::CommitInconsistent);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn skip_optimizer_diverges_at_update_node() {
+        let (r, honest, _) = dispute_to_phase2(Fault::SkipOptimizer { step: 4 }, 8);
+        let r = r.unwrap();
+        let node = &honest.session.program.graph.nodes[r.node_idx];
+        assert!(
+            matches!(node.op, crate::graph::Op::AdamUpdate { .. }),
+            "diverged at {:?}",
+            node.op
+        );
+    }
+}

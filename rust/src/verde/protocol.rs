@@ -1,0 +1,118 @@
+//! Protocol messages between the referee and trainers, with wire-size
+//! models for communication accounting (the paper's "only short hashes are
+//! communicated" claim is measured, not assumed).
+
+use crate::graph::executor::AugmentedCGNode;
+use crate::hash::merkle::MerkleProof;
+use crate::hash::Hash;
+use crate::tensor::Tensor;
+
+/// Referee → trainer requests.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// The trainer's commitment to its final checkpoint.
+    FinalCommit,
+    /// Checkpoint hashes at the given step boundaries (trainers re-execute
+    /// segments as needed — Algorithm 1's per-level logging).
+    CheckpointHashes { boundaries: Vec<u64> },
+    /// The full node-hash sequence of one step (Algorithm 2 lines 4–5).
+    NodeHashSeq { step: u64 },
+    /// Open node `idx` of `step` (Algorithm 2 line 10).
+    OpenNode { step: u64, idx: usize },
+    /// Provenance proof for the value feeding `(step, node_idx)`'s state
+    /// input — Case 2(a): Merkle membership vs the previous checkpoint (or
+    /// genesis).
+    InputProof { step: u64, node_idx: usize },
+    /// A full input tensor of a disputed node (Case 3 recomputation).
+    InputTensor { step: u64, node_idx: usize, input_idx: usize },
+    /// End the conversation (threaded transport).
+    Shutdown,
+}
+
+/// Where a disputed state input came from (Case 2a evidence).
+#[derive(Debug, Clone)]
+pub enum InputProvenance {
+    /// The job's initial state: membership proof of the state leaf in the
+    /// genesis commitment.
+    Genesis { leaf: Hash, proof: MerkleProof },
+    /// Produced by a node of the previous step: that node's opening plus a
+    /// membership proof of its hash in the agreed previous checkpoint.
+    PrevStep { node: AugmentedCGNode, out_idx: usize, proof: MerkleProof },
+}
+
+impl InputProvenance {
+    pub fn wire_size(&self) -> usize {
+        match self {
+            InputProvenance::Genesis { proof, .. } => 32 + proof.byte_len(),
+            InputProvenance::PrevStep { node, proof, .. } => {
+                node.byte_len() + 8 + proof.byte_len()
+            }
+        }
+    }
+}
+
+/// Trainer → referee responses.
+#[derive(Debug, Clone)]
+pub enum Response {
+    Commit(Hash),
+    Hashes(Vec<Hash>),
+    NodeSeq(Vec<Hash>),
+    Node(AugmentedCGNode),
+    Proof(InputProvenance),
+    TensorPayload(Tensor),
+    /// The trainer cannot or will not answer (counted as dishonest).
+    Refuse(String),
+    Bye,
+}
+
+impl Request {
+    /// Modeled wire size in bytes (tag + payload).
+    pub fn wire_size(&self) -> usize {
+        1 + match self {
+            Request::FinalCommit | Request::Shutdown => 0,
+            Request::CheckpointHashes { boundaries } => 8 * boundaries.len(),
+            Request::NodeHashSeq { .. } => 8,
+            Request::OpenNode { .. } => 16,
+            Request::InputProof { .. } => 16,
+            Request::InputTensor { .. } => 24,
+        }
+    }
+}
+
+impl Response {
+    pub fn wire_size(&self) -> usize {
+        1 + match self {
+            Response::Commit(_) => 32,
+            Response::Hashes(h) => 32 * h.len(),
+            Response::NodeSeq(h) => 32 * h.len(),
+            Response::Node(n) => n.byte_len(),
+            Response::Proof(p) => p.wire_size(),
+            Response::TensorPayload(t) => 8 + 8 * t.rank() + t.byte_len(),
+            Response::Refuse(s) => s.len(),
+            Response::Bye => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_sizes_scale_with_payload() {
+        let small = Response::Hashes(vec![Hash::ZERO; 2]);
+        let big = Response::Hashes(vec![Hash::ZERO; 20]);
+        assert!(big.wire_size() > small.wire_size());
+        assert_eq!(big.wire_size(), 1 + 640);
+
+        let t = Tensor::zeros([16, 16]);
+        let payload = Response::TensorPayload(t);
+        assert!(payload.wire_size() > 1024);
+
+        assert_eq!(Request::FinalCommit.wire_size(), 1);
+        assert_eq!(
+            Request::CheckpointHashes { boundaries: vec![1, 2, 3] }.wire_size(),
+            25
+        );
+    }
+}

@@ -1,0 +1,315 @@
+//! The referee's decision algorithm (paper §2.3): given both trainers'
+//! openings of the first diverging AugmentedCGNode, determine the dishonest
+//! party — recomputing AT MOST ONE operator.
+//!
+//! Case 1 — structure differs → compare against the client's program.
+//! Case 2 — an input tensor hash differs →
+//!   (a) input from the starting checkpoint/data → Merkle membership proof
+//!       against the agreed commitment (or the referee's own data/genesis
+//!       derivation);
+//!   (b) input from another node of the step → source-node opening.
+//! Case 3 — an output tensor hash differs → fetch the (agreed) input
+//!   tensors and recompute the single operator with RepOps.
+
+use crate::graph::executor::AugmentedCGNode;
+use crate::graph::kernels::{run_op, Backend};
+use crate::graph::{InitKind, Op, Slot};
+use crate::hash::merkle::MerkleTree;
+use crate::hash::{hash_tensor, Hash, Hasher};
+use crate::net::Endpoint;
+use crate::tensor::Tensor;
+use crate::train::session::Session;
+use crate::train::JobSpec;
+use crate::util::metrics::Counters;
+
+use super::phase1::Phase1Result;
+use super::phase2::Phase2Result;
+use super::protocol::{InputProvenance, Request, Response};
+
+/// Which branch of the decision algorithm produced the verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionCase {
+    /// Case 1: graph structure mismatch vs the client's program.
+    Structure,
+    /// Case 2a: state-input lineage (Merkle membership) failure.
+    StateLineage,
+    /// Case 2a (data): data-init output contradicts the committed dataset.
+    DataCheck,
+    /// Constant node contradicts the program's baked constant.
+    ConstCheck,
+    /// Case 2b: input hash contradicts the (agreed) source node's output.
+    InputLineage,
+    /// Case 3: single-operator recomputation.
+    OutputRecompute,
+    /// Algorithm 2 line 7: Phase 2 messages inconsistent with Phase 1.
+    CommitInconsistent,
+    /// Refused/malformed protocol messages.
+    Misbehaved,
+}
+
+/// The referee's ruling.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Verdict {
+    Dishonest { trainer: usize, case: DecisionCase, reason: String },
+    /// Every participant proved dishonest (possible when no trainer is
+    /// honest; the protocol still exposes them all, §2's limitation note).
+    BothDishonest { case: DecisionCase, reason: String },
+    NoDispute,
+}
+
+impl Verdict {
+    pub fn misbehaved(trainer: usize, why: String) -> Verdict {
+        Verdict::Dishonest { trainer, case: DecisionCase::Misbehaved, reason: why }
+    }
+
+    pub fn commit_inconsistent(trainer: usize) -> Verdict {
+        Verdict::Dishonest {
+            trainer,
+            case: DecisionCase::CommitInconsistent,
+            reason: "phase 2 node sequence does not merkle-hash to the phase 1 commitment".into(),
+        }
+    }
+
+    /// The convicted trainer index, if a single one.
+    pub fn convicted(&self) -> Option<usize> {
+        match self {
+            Verdict::Dishonest { trainer, .. } => Some(*trainer),
+            _ => None,
+        }
+    }
+
+    pub fn case(&self) -> Option<DecisionCase> {
+        match self {
+            Verdict::Dishonest { case, .. } | Verdict::BothDishonest { case, .. } => Some(*case),
+            Verdict::NoDispute => None,
+        }
+    }
+}
+
+/// From a per-trainer boolean "is consistent with the truth", produce the
+/// verdict.
+fn convict(ok: [bool; 2], case: DecisionCase, reason: &str) -> Verdict {
+    match ok {
+        [true, false] => Verdict::Dishonest { trainer: 1, case, reason: reason.into() },
+        [false, true] => Verdict::Dishonest { trainer: 0, case, reason: reason.into() },
+        [false, false] => Verdict::BothDishonest { case, reason: reason.into() },
+        [true, true] => unreachable!("diverging claims cannot both match the truth: {reason}"),
+    }
+}
+
+/// The referee party. Holds its own [`Session`] (program, data stream,
+/// genesis) derived from the client's job spec — but never trains.
+pub struct Referee {
+    pub session: Session,
+    pub counters: Counters,
+}
+
+impl Referee {
+    pub fn new(spec: JobSpec) -> Referee {
+        Referee { session: Session::new(spec), counters: Counters::new() }
+    }
+
+    /// §2.3 decision algorithm over the Phase 2 openings.
+    pub fn decide(
+        &mut self,
+        trainers: &mut [&mut dyn Endpoint; 2],
+        p1: &Phase1Result,
+        p2: &Phase2Result,
+    ) -> Verdict {
+        let graph = &self.session.program.graph;
+        let d = p2.node_idx;
+        let node = &graph.nodes[d];
+        let expected_structure = graph.node_structure_hash(d);
+        let [n0, n1] = &p2.openings;
+
+        // ---- Case 1: structure --------------------------------------------
+        let ok = [n0.structure == expected_structure, n1.structure == expected_structure];
+        if !(ok[0] && ok[1]) {
+            return convict(ok, DecisionCase::Structure, "node structure differs from the client's program");
+        }
+
+        // ---- leaf nodes: outputs are checked against ground truth ----------
+        match &node.op {
+            Op::Init { kind: InitKind::Data, name } => {
+                // the referee has the training data (program setup): derive
+                // the true batch tensor hash itself
+                let batch = self.session.batch(p2.step);
+                let truth = hash_tensor(&batch[name]);
+                self.counters.incr("data_checks");
+                let ok = [n0.output_hashes[0] == truth, n1.output_hashes[0] == truth];
+                return convict(ok, DecisionCase::DataCheck, "data-init output contradicts the committed dataset");
+            }
+            Op::Const { value } => {
+                let truth = hash_tensor(value);
+                let ok = [n0.output_hashes[0] == truth, n1.output_hashes[0] == truth];
+                return convict(ok, DecisionCase::ConstCheck, "constant contradicts the program");
+            }
+            Op::Init { kind, name } => {
+                // Case 2a: state input — membership proofs
+                return self.decide_state_lineage(trainers, p1, p2, kind.clone(), name.clone());
+            }
+            _ => {}
+        }
+
+        // ---- Case 2b: diverging input hash ---------------------------------
+        if n0.input_hashes != n1.input_hashes {
+            let j = n0
+                .input_hashes
+                .iter()
+                .zip(&n1.input_hashes)
+                .position(|(a, b)| a != b)
+                .unwrap();
+            let src = node.inputs[j];
+            // both trainers committed the same hash for the source node
+            // (it precedes the first divergence)
+            debug_assert_eq!(p2.seqs[0][src.node], p2.seqs[1][src.node]);
+            let agreed_src_hash = p2.seqs[0][src.node];
+            // open the source from either trainer; accept the first opening
+            // that matches the agreed commitment
+            let mut src_open: Option<AugmentedCGNode> = None;
+            for t in trainers.iter_mut() {
+                if let Response::Node(n) = t.call(Request::OpenNode { step: p2.step, idx: src.node }) {
+                    if n.commit() == agreed_src_hash {
+                        src_open = Some(n);
+                        break;
+                    }
+                }
+            }
+            let Some(src_open) = src_open else {
+                return Verdict::BothDishonest {
+                    case: DecisionCase::Misbehaved,
+                    reason: "neither trainer opened the agreed source node".into(),
+                };
+            };
+            let truth = src_open.output_hashes[src.out_idx];
+            self.counters.incr("lineage_checks");
+            let ok = [n0.input_hashes[j] == truth, n1.input_hashes[j] == truth];
+            return convict(
+                ok,
+                DecisionCase::InputLineage,
+                "claimed input hash was never emitted by its source node",
+            );
+        }
+
+        // ---- Case 3: inputs agree, outputs differ → recompute one operator --
+        debug_assert_ne!(n0.output_hashes, n1.output_hashes);
+        let mut input_tensors: Vec<Tensor> = Vec::with_capacity(node.inputs.len());
+        for (j, _) in node.inputs.iter().enumerate() {
+            let want = n0.input_hashes[j];
+            let mut got: Option<Tensor> = None;
+            for t in trainers.iter_mut() {
+                if let Response::TensorPayload(tensor) =
+                    t.call(Request::InputTensor { step: p2.step, node_idx: d, input_idx: j })
+                {
+                    if hash_tensor(&tensor) == want {
+                        got = Some(tensor);
+                        break;
+                    }
+                }
+            }
+            match got {
+                Some(t) => {
+                    self.counters.add("recompute_input_bytes", t.byte_len() as u64);
+                    input_tensors.push(t);
+                }
+                None => {
+                    return Verdict::BothDishonest {
+                        case: DecisionCase::Misbehaved,
+                        reason: format!("no trainer produced input {j} matching the agreed hash"),
+                    }
+                }
+            }
+        }
+        let refs: Vec<&Tensor> = input_tensors.iter().collect();
+        let outs = run_op(&node.op, &refs, Backend::Rep, p2.step);
+        self.counters.incr("ops_recomputed");
+        let truth: Vec<Hash> = outs.iter().map(hash_tensor).collect();
+        let ok = [n0.output_hashes == truth, n1.output_hashes == truth];
+        convict(ok, DecisionCase::OutputRecompute, "operator output contradicts RepOps recomputation")
+    }
+
+    /// Case 2a: the diverging node is a Param/OptState init — ask both
+    /// trainers to prove their claimed value's lineage against the agreed
+    /// commitments (genesis for step 1, the previous checkpoint otherwise).
+    fn decide_state_lineage(
+        &mut self,
+        trainers: &mut [&mut dyn Endpoint; 2],
+        p1: &Phase1Result,
+        p2: &Phase2Result,
+        kind: InitKind,
+        name: String,
+    ) -> Verdict {
+        let d = p2.node_idx;
+        // expected producer of this tensor in the PREVIOUS step's trace
+        let producer: Slot = match kind {
+            InitKind::Param => {
+                self.session.program.param_updates.get(&name).copied().unwrap_or(Slot::new(d, 0))
+            }
+            InitKind::OptState => {
+                self.session.program.opt_updates.get(&name).copied().unwrap_or(Slot::new(d, 0))
+            }
+            InitKind::Data => unreachable!("data handled by decide()"),
+        };
+        let mut ok = [false, false];
+        for (i, t) in trainers.iter_mut().enumerate() {
+            let claimed = p2.openings[i].output_hashes[0];
+            let resp = t.call(Request::InputProof { step: p2.step, node_idx: d });
+            ok[i] = match resp {
+                Response::Proof(InputProvenance::Genesis { leaf, proof }) => {
+                    if p2.step != 1 {
+                        false
+                    } else {
+                        // the leaf must bind this (kind, name, claimed hash)
+                        let tag = match kind {
+                            InitKind::Param => "verde.state-leaf.param.v1",
+                            _ => "verde.state-leaf.opt.v1",
+                        };
+                        let mut h = Hasher::new(tag);
+                        h.str(&name);
+                        h.hash(&claimed);
+                        let expect_leaf = h.finish();
+                        leaf == expect_leaf
+                            && MerkleTree::verify(&p1.h_start, &leaf, &proof)
+                    }
+                }
+                Response::Proof(InputProvenance::PrevStep { node, out_idx, proof }) => {
+                    p2.step > 1
+                        && node.id == producer.node
+                        && out_idx == producer.out_idx
+                        && out_idx < node.output_hashes.len()
+                        && node.output_hashes[out_idx] == claimed
+                        && MerkleTree::verify(&p1.h_start, &node.commit(), &proof)
+                }
+                _ => false,
+            };
+            self.counters.incr("lineage_checks");
+        }
+        convict(
+            ok,
+            DecisionCase::StateLineage,
+            "claimed state value has no valid lineage to the agreed checkpoint",
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn convict_logic() {
+        let v = convict([true, false], DecisionCase::Structure, "x");
+        assert_eq!(v.convicted(), Some(1));
+        let v = convict([false, true], DecisionCase::Structure, "x");
+        assert_eq!(v.convicted(), Some(0));
+        let v = convict([false, false], DecisionCase::OutputRecompute, "x");
+        assert!(matches!(v, Verdict::BothDishonest { .. }));
+        assert_eq!(v.case(), Some(DecisionCase::OutputRecompute));
+    }
+
+    #[test]
+    #[should_panic]
+    fn convict_rejects_impossible_both_ok() {
+        convict([true, true], DecisionCase::Structure, "impossible");
+    }
+}

@@ -1,0 +1,176 @@
+//! k > 2 trainers (paper §2 footnote 1): trainers claiming identical
+//! outputs merge; distinct claims are resolved pairwise, the survivor
+//! carrying forward. An honest participant can never be eliminated, so the
+//! surviving claim is correct whenever at least one trainer is honest.
+
+use std::collections::BTreeMap;
+
+use crate::hash::Hash;
+use crate::train::JobSpec;
+use crate::verde::dispute::run_dispute;
+use crate::verde::referee::Verdict;
+use crate::verde::trainer::TrainerNode;
+
+/// Outcome of a k-trainer tournament.
+#[derive(Debug)]
+pub struct TournamentReport {
+    /// Index (into the input vector) of the trainer whose output is accepted.
+    pub winner: usize,
+    /// The accepted final commitment.
+    pub accepted: Hash,
+    /// Trainers proven dishonest, with the dispute verdicts that convicted
+    /// them (merged trainers share their representative's fate only for
+    /// accounting — identical claims are indistinguishable).
+    pub eliminated: Vec<(usize, Verdict)>,
+    /// Number of pairwise disputes run (≤ distinct-claims − 1).
+    pub disputes: usize,
+}
+
+/// Run the tournament. Trainers are borrowed — each dispute requires the
+/// participants to serve re-execution queries, and survivors go on to later
+/// rounds with their caches warm.
+///
+/// # Panics
+/// If `trainers` is empty or a dispute between distinct claims ends without
+/// a conviction (impossible under the protocol's assumptions).
+pub fn run_tournament(spec: JobSpec, trainers: &mut [TrainerNode]) -> TournamentReport {
+    assert!(!trainers.is_empty());
+    // collect claims
+    let claims: Vec<Hash> = trainers.iter_mut().map(|t| t.final_commit()).collect();
+
+    // merge identical claims: keep the first trainer per distinct claim
+    let mut groups: BTreeMap<Hash, Vec<usize>> = BTreeMap::new();
+    for (i, c) in claims.iter().enumerate() {
+        groups.entry(*c).or_default().push(i);
+    }
+    if groups.len() == 1 {
+        return TournamentReport {
+            winner: 0,
+            accepted: claims[0],
+            eliminated: Vec::new(),
+            disputes: 0,
+        };
+    }
+
+    // representatives, in input order for determinism
+    let mut reps: Vec<usize> = groups.values().map(|g| g[0]).collect();
+    reps.sort();
+
+    let mut eliminated = Vec::new();
+    let mut disputes = 0;
+    // pairwise knockout: champion vs next challenger
+    let mut champion = reps[0];
+    for &challenger in &reps[1..] {
+        if champion == usize::MAX {
+            // every prior claim was proven dishonest; adopt the challenger
+            champion = challenger;
+            continue;
+        }
+        let (lo, hi) = (champion.min(challenger), champion.max(challenger));
+        let (left, right) = trainers.split_at_mut(hi);
+        let (t_lo, t_hi) = (&mut left[lo], &mut right[0]);
+        let (t0_idx, t1_idx) = (lo, hi);
+        let report = run_dispute(spec, t_lo, t_hi);
+        disputes += 1;
+        match &report.verdict {
+            Verdict::Dishonest { trainer, .. } => {
+                let loser_idx = if *trainer == 0 { t0_idx } else { t1_idx };
+                let winner_idx = if *trainer == 0 { t1_idx } else { t0_idx };
+                eliminated.push((loser_idx, report.verdict.clone()));
+                champion = winner_idx;
+            }
+            Verdict::BothDishonest { .. } => {
+                eliminated.push((t0_idx, report.verdict.clone()));
+                eliminated.push((t1_idx, report.verdict.clone()));
+                champion = usize::MAX; // next challenger takes over
+            }
+            other => panic!("dispute between distinct claims ended with {other:?}"),
+        }
+    }
+    if champion == usize::MAX {
+        // everyone was proven dishonest; accept the last eliminated claim
+        // holder by convention and report it as such (paper's limitation:
+        // with zero honest trainers the accepted output may be wrong, but
+        // k−1 parties are still exposed).
+        champion = eliminated.last().map(|(i, _)| *i).unwrap_or(0);
+    }
+
+    TournamentReport {
+        winner: champion,
+        accepted: claims[champion],
+        eliminated,
+        disputes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::kernels::Backend;
+    use crate::model::Preset;
+    use crate::verde::faults::Fault;
+
+    fn mk(spec: JobSpec, fault: Fault, name: &str) -> TrainerNode {
+        let mut t = TrainerNode::new(name, spec, Backend::Rep, fault);
+        t.train();
+        t
+    }
+
+    #[test]
+    fn all_honest_merge_without_disputes() {
+        let spec = JobSpec::quick(Preset::Mlp, 6);
+        let mut ts = vec![
+            mk(spec, Fault::None, "a"),
+            mk(spec, Fault::None, "b"),
+            mk(spec, Fault::None, "c"),
+        ];
+        let r = run_tournament(spec, &mut ts);
+        assert_eq!(r.disputes, 0);
+        assert!(r.eliminated.is_empty());
+    }
+
+    #[test]
+    fn single_honest_survives_two_cheaters() {
+        let spec = JobSpec::quick(Preset::Mlp, 6);
+        let honest_commit = {
+            let mut t = mk(spec, Fault::None, "h");
+            t.final_commit()
+        };
+        let mut ts = vec![
+            mk(spec, Fault::TamperOutput { step: 2, node: 7, delta: 0.5 }, "c1"),
+            mk(spec, Fault::None, "h"),
+            mk(spec, Fault::WrongData { step: 4 }, "c2"),
+        ];
+        let r = run_tournament(spec, &mut ts);
+        assert_eq!(r.accepted, honest_commit, "honest claim must win");
+        assert_eq!(r.disputes, 2);
+        assert_eq!(r.eliminated.len(), 2);
+        let eliminated: Vec<usize> = r.eliminated.iter().map(|(i, _)| *i).collect();
+        assert!(eliminated.contains(&0));
+        assert!(eliminated.contains(&2));
+    }
+
+    #[test]
+    fn duplicate_cheater_claims_merge() {
+        let spec = JobSpec::quick(Preset::Mlp, 6);
+        let honest_commit = {
+            let mut t = mk(spec, Fault::None, "h");
+            t.final_commit()
+        };
+        // Tamper an optimizer-update output: guaranteed to diverge the
+        // state (an activation tamper can be swallowed by a ReLU).
+        let upd = {
+            let s = crate::train::session::Session::new(spec);
+            *s.program.param_updates.values().map(|sl| &sl.node).min().unwrap()
+        };
+        // two cheaters with the SAME fault produce the same (wrong) claim
+        let mut ts = vec![
+            mk(spec, Fault::TamperOutput { step: 3, node: upd, delta: 0.5 }, "c1"),
+            mk(spec, Fault::TamperOutput { step: 3, node: upd, delta: 0.5 }, "c2"),
+            mk(spec, Fault::None, "h"),
+        ];
+        let r = run_tournament(spec, &mut ts);
+        assert_eq!(r.accepted, honest_commit);
+        assert_eq!(r.disputes, 1, "identical claims merged into one dispute");
+    }
+}

@@ -1,0 +1,595 @@
+//! The trainer party: runs the delegated training job (honestly or with an
+//! injected [`Fault`]), logs multi-level checkpoints, and answers the
+//! referee's dispute requests.
+//!
+//! A dishonest trainer here is a *consistent* cheater: whatever wrong
+//! computation it committed to during training, it reproduces faithfully
+//! during dispute re-execution. That is the strongest adversary the
+//! protocol's hash comparisons must pin down.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::graph::executor::{execute, execute_traced_swap, ExecOpts, State, StepTrace};
+use crate::graph::kernels::Backend;
+use crate::graph::{Graph, InitKind, NodeId, Op, Slot};
+use crate::hash::Hash;
+use crate::net::Endpoint;
+use crate::tensor::Tensor;
+use crate::train::checkpoint::level0_schedule;
+use crate::train::session::Session;
+use crate::train::JobSpec;
+use crate::util::metrics::Counters;
+
+use super::faults::{mutate_op, Fault};
+use super::protocol::{InputProvenance, Request, Response};
+
+/// A trainer node (honest or faulty).
+pub struct TrainerNode {
+    pub name: String,
+    pub session: Session,
+    pub backend: Backend,
+    pub fault: Fault,
+    /// Checkpoint states stored during training + dispute (step → state
+    /// AFTER that step; step 0 = genesis).
+    stored: BTreeMap<u64, State>,
+    /// Checkpoint roots (step → Merkle root of that step's trace; step 0 =
+    /// genesis commitment root).
+    roots: BTreeMap<u64, Hash>,
+    /// Cached traces (hashes only) for steps we had to record.
+    traces: HashMap<u64, StepTrace>,
+    /// Full node-output values for the one step currently under dispute.
+    value_cache: Option<(u64, Vec<Vec<Tensor>>)>,
+    /// Lazily-built mutated graph for `WrongOperator`.
+    wrong_graph: Option<Graph>,
+    pub counters: Counters,
+    /// Per-step training losses (logging/examples).
+    pub losses: Vec<f32>,
+}
+
+impl TrainerNode {
+    pub fn new(name: &str, spec: JobSpec, backend: Backend, fault: Fault) -> TrainerNode {
+        let session = Session::new(spec);
+        TrainerNode {
+            name: name.to_string(),
+            session,
+            backend,
+            fault,
+            stored: BTreeMap::new(),
+            roots: BTreeMap::new(),
+            traces: HashMap::new(),
+            value_cache: None,
+            wrong_graph: None,
+            counters: Counters::new(),
+            losses: Vec::new(),
+        }
+    }
+
+    pub fn honest(name: &str, spec: JobSpec) -> TrainerNode {
+        Self::new(name, spec, Backend::Rep, Fault::None)
+    }
+
+    // -----------------------------------------------------------------
+    // training
+    // -----------------------------------------------------------------
+
+    /// Run the whole job, logging level-0 checkpoints, and return the final
+    /// commitment the trainer reports to the client.
+    pub fn train(&mut self) -> Hash {
+        let spec = self.session.spec;
+        let schedule = level0_schedule(spec.steps, spec.checkpoint_n);
+        self.stored.insert(0, self.session.genesis.clone());
+        self.roots.insert(0, self.session.genesis_root());
+
+        let mut state = self.session.genesis.clone();
+        for step in 1..=spec.steps {
+            let record = schedule.contains(&step);
+            let (next, loss) = self.exec_step(&state, record, false);
+            self.losses.push(loss);
+            self.counters.incr("steps_trained");
+            if record {
+                self.stored.insert(step, next.clone());
+                self.counters.add("checkpoint_bytes_stored", next.byte_len() as u64);
+            }
+            state = next;
+        }
+        self.final_commit()
+    }
+
+    /// The trainer's claimed final commitment.
+    pub fn final_commit(&mut self) -> Hash {
+        self.root_at(self.effective_step(self.session.spec.steps))
+    }
+
+    pub fn final_state(&mut self) -> State {
+        self.state_at(self.session.spec.steps)
+    }
+
+    // -----------------------------------------------------------------
+    // faulty execution machinery
+    // -----------------------------------------------------------------
+
+    /// For `SkipSteps`, every step past the cutoff is answered with the
+    /// stale step's artifacts.
+    fn effective_step(&self, step: u64) -> u64 {
+        match self.fault {
+            Fault::SkipSteps { after } => step.min(after),
+            _ => step,
+        }
+    }
+
+    /// Graph used at `step` (the `WrongOperator` cheater runs — and commits
+    /// to — a mutated program at its target step).
+    fn graph_for(&mut self, step: u64) -> Graph {
+        if let Fault::WrongOperator { step: s, node } = self.fault {
+            if s == step {
+                if self.wrong_graph.is_none() {
+                    let mut g = self.session.program.graph.clone();
+                    let op = mutate_op(&g.nodes[node].op).unwrap_or_else(|| {
+                        panic!(
+                            "WrongOperator target node {node} ({}) has no impostor",
+                            g.nodes[node].op.mnemonic()
+                        )
+                    });
+                    g.nodes[node].op = op;
+                    self.wrong_graph = Some(g);
+                }
+                return self.wrong_graph.clone().unwrap();
+            }
+        }
+        self.session.program.graph.clone()
+    }
+
+    /// Batch used at `step` (`WrongData` swaps in a far-future batch).
+    fn batch_for(&self, step: u64) -> BTreeMap<String, Tensor> {
+        match self.fault {
+            Fault::WrongData { step: s } if s == step => self.session.batch(step + 7777),
+            _ => self.session.batch(step),
+        }
+    }
+
+    /// Execute the step after `state` under this trainer's fault model.
+    /// Returns (next state, loss) and caches the trace/values as requested.
+    fn exec_step(&mut self, state: &State, record: bool, keep_values: bool) -> (State, f32) {
+        let step = state.step + 1;
+        let graph = self.graph_for(step);
+        let batch = self.batch_for(step);
+        let fault = self.fault;
+        // InconsistentCommit diverges the state at its target step (so a
+        // dispute happens at all); the Phase 2 inconsistency is injected
+        // when answering NodeHashSeq.
+        let first_update_node =
+            self.session.program.param_updates.values().map(|s| s.node).min().unwrap_or(0);
+        let tamper = move |id: NodeId, ins: &[&Tensor], outs: &mut Vec<Tensor>| match fault {
+            Fault::TamperOutput { step: s, node, delta } if s == step && id == node => {
+                outs[0].data_mut()[0] += delta;
+            }
+            Fault::InconsistentCommit { step: s } if s == step && id == first_update_node => {
+                outs[0].data_mut()[0] += 1e-2;
+            }
+            Fault::SkipOptimizer { step: s } if s == step => {
+                // pass (w, m, v) through untouched on every update node
+                if outs.len() == 3 && ins.len() == 4 {
+                    outs[0] = ins[0].clone();
+                    outs[1] = ins[2].clone();
+                    outs[2] = ins[3].clone();
+                }
+            }
+            _ => {}
+        };
+        // ForgedLineage: compute one node from an input its upstream never
+        // produced — and commit to the hash of that forged input.
+        let swap = move |id: NodeId, input_idx: usize, t: &Tensor| -> Option<Tensor> {
+            match fault {
+                Fault::ForgedLineage { step: s, node } if s == step && id == node && input_idx == 0 => {
+                    let mut forged = t.clone();
+                    forged.data_mut()[0] += 1.0;
+                    Some(forged)
+                }
+                _ => None,
+            }
+        };
+        let needs_tamper = fault.affects_step(step)
+            && matches!(
+                fault,
+                Fault::TamperOutput { .. } | Fault::InconsistentCommit { .. } | Fault::SkipOptimizer { .. }
+            );
+        let needs_swap = matches!(fault, Fault::ForgedLineage { step: s, .. } if s == step);
+
+        if !record && !keep_values {
+            // fast honest-path execution: no per-node hashing
+            let opts = ExecOpts {
+                record_trace: false,
+                keep_values: false,
+                tamper: if needs_tamper { Some(&tamper) } else { None },
+                input_swap: if needs_swap { Some(&swap) } else { None },
+            };
+            let exec = execute(&graph, state, &batch, self.backend, step, &opts);
+            let loss = exec.values[self.session.program.loss.node][0].data()[0];
+            let next = self.apply(state, step, &exec.values);
+            return (next, loss);
+        }
+
+        let (exec, mut trace) = execute_traced_swap(
+            &graph,
+            state,
+            &batch,
+            self.backend,
+            step,
+            keep_values,
+            if needs_tamper { Some(&tamper) } else { None },
+            if needs_swap { Some(&swap) } else { None },
+        );
+        self.counters.incr("traces_recorded");
+        self.counters.add("hash_bytes", (trace.nodes.len() * 32) as u64);
+        self.roots.insert(step, trace.root());
+        if keep_values {
+            self.value_cache = Some((step, exec.values.clone()));
+        }
+        trace.values = None;
+        self.traces.insert(step, trace);
+        let loss = exec.values[self.session.program.loss.node][0].data()[0];
+        let next = self.apply(state, step, &exec.values);
+        (next, loss)
+    }
+
+    fn apply(&self, state: &State, step: u64, values: &[Vec<Tensor>]) -> State {
+        let mut next = state.clone();
+        next.step = step;
+        for (name, slot) in &self.session.program.param_updates {
+            next.params.insert(name.clone(), values[slot.node][slot.out_idx].clone());
+        }
+        for (name, slot) in &self.session.program.opt_updates {
+            next.opt.insert(name.clone(), values[slot.node][slot.out_idx].clone());
+        }
+        next
+    }
+
+    // -----------------------------------------------------------------
+    // dispute-side materialization
+    // -----------------------------------------------------------------
+
+    /// State after `step` (re-executing from the nearest stored checkpoint;
+    /// re-executed steps are counted — they are the §2.1 cost).
+    fn state_at(&mut self, step: u64) -> State {
+        let step = self.effective_step(step);
+        if let Some(s) = self.stored.get(&step) {
+            return s.clone();
+        }
+        let (&from, base) = self
+            .stored
+            .range(..=step)
+            .next_back()
+            .expect("genesis always stored");
+        let mut state = base.clone();
+        for _ in from..step {
+            let (next, _) = self.exec_step(&state, false, false);
+            self.counters.incr("steps_reexecuted");
+            state = next;
+        }
+        self.stored.insert(step, state.clone());
+        state
+    }
+
+    /// Checkpoint root at `step` (0 = genesis).
+    fn root_at(&mut self, step: u64) -> Hash {
+        let step = self.effective_step(step);
+        if let Some(r) = self.roots.get(&step) {
+            return *r;
+        }
+        let prev = self.state_at(step - 1);
+        let (next, _) = self.exec_step(&prev, true, false);
+        self.counters.incr("steps_reexecuted");
+        self.stored.insert(step, next);
+        self.roots[&step]
+    }
+
+    /// Trace of `step` (recording it if missing).
+    fn trace_at(&mut self, step: u64) -> StepTrace {
+        let step = self.effective_step(step);
+        if !self.traces.contains_key(&step) {
+            let prev = self.state_at(step - 1);
+            let (next, _) = self.exec_step(&prev, true, false);
+            self.counters.incr("steps_reexecuted");
+            self.stored.insert(step, next);
+        }
+        self.traces[&step].clone()
+    }
+
+    /// Node output values of `step` (re-executing with retained values).
+    fn values_at(&mut self, step: u64) -> Vec<Vec<Tensor>> {
+        let step = self.effective_step(step);
+        if let Some((s, v)) = &self.value_cache {
+            if *s == step {
+                return v.clone();
+            }
+        }
+        let prev = self.state_at(step - 1);
+        let (_, _) = self.exec_step(&prev, true, true);
+        self.counters.incr("steps_reexecuted");
+        self.value_cache.as_ref().expect("just cached").1.clone()
+    }
+
+    /// Build the Case 2(a) provenance proof for a state tensor feeding the
+    /// `Init` node `node_idx` of `step`.
+    fn input_proof(&mut self, step: u64, node_idx: usize) -> Option<InputProvenance> {
+        let graph = &self.session.program.graph;
+        let (kind, name) = match &graph.nodes.get(node_idx)?.op {
+            Op::Init { kind, name } => (kind.clone(), name.clone()),
+            _ => return None,
+        };
+        if step <= 1 {
+            // value comes from the genesis commitment
+            let state = self.state_at(0);
+            let idx = state.leaf_index(&kind, &name)?;
+            let leaves = state.leaf_hashes();
+            let tree = state.genesis_commitment();
+            return Some(InputProvenance::Genesis { leaf: leaves[idx], proof: tree.prove(idx) });
+        }
+        // value was emitted by a node of the previous step: the update node
+        // if the tensor is trainable, otherwise its own Init node
+        // (carried-over frozen value).
+        let slot: Slot = match kind {
+            InitKind::Param => self
+                .session
+                .program
+                .param_updates
+                .get(&name)
+                .copied()
+                .unwrap_or(Slot::new(node_idx, 0)),
+            InitKind::OptState => self
+                .session
+                .program
+                .opt_updates
+                .get(&name)
+                .copied()
+                .unwrap_or(Slot::new(node_idx, 0)),
+            InitKind::Data => return None,
+        };
+        let prev_trace = self.trace_at(step - 1);
+        let node = prev_trace.nodes[slot.node].clone();
+        let proof = prev_trace.commit().prove(slot.node);
+        Some(InputProvenance::PrevStep { node, out_idx: slot.out_idx, proof })
+    }
+}
+
+impl Endpoint for TrainerNode {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn call(&mut self, req: Request) -> Response {
+        match req {
+            Request::FinalCommit => Response::Commit(self.final_commit()),
+            Request::CheckpointHashes { boundaries } => {
+                let hashes = boundaries.iter().map(|&b| self.root_at(b)).collect();
+                Response::Hashes(hashes)
+            }
+            Request::NodeHashSeq { step } => {
+                let mut seq = self.trace_at(step).node_hashes;
+                if let Fault::InconsistentCommit { step: s } = self.fault {
+                    if s == step {
+                        // lie in Phase 2: corrupt the last entry so the
+                        // sequence no longer matches the Phase 1 root
+                        if let Some(last) = seq.last_mut() {
+                            last.0[0] ^= 0xAA;
+                        }
+                    }
+                }
+                Response::NodeSeq(seq)
+            }
+            Request::OpenNode { step, idx } => {
+                let trace = self.trace_at(step);
+                match trace.nodes.get(idx) {
+                    Some(n) => Response::Node(n.clone()),
+                    None => Response::Refuse(format!("no node {idx} at step {step}")),
+                }
+            }
+            Request::InputProof { step, node_idx } => match self.input_proof(step, node_idx) {
+                Some(p) => Response::Proof(p),
+                None => Response::Refuse(format!("no provenance for node {node_idx}")),
+            },
+            Request::InputTensor { step, node_idx, input_idx } => {
+                let graph = self.graph_for(step);
+                let Some(node) = graph.nodes.get(node_idx) else {
+                    return Response::Refuse(format!("no node {node_idx}"));
+                };
+                let Some(slot) = node.inputs.get(input_idx).copied() else {
+                    return Response::Refuse(format!("no input {input_idx}"));
+                };
+                let values = self.values_at(step);
+                Response::TensorPayload(values[slot.node][slot.out_idx].clone())
+            }
+            Request::Shutdown => Response::Bye,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Preset;
+
+    fn spec() -> JobSpec {
+        JobSpec::quick(Preset::Mlp, 8)
+    }
+
+    #[test]
+    fn honest_trainers_agree() {
+        let mut a = TrainerNode::honest("a", spec());
+        let mut b = TrainerNode::honest("b", spec());
+        assert_eq!(a.train(), b.train());
+        assert_eq!(a.losses.len(), 8);
+    }
+
+    #[test]
+    fn every_fault_changes_the_final_commit() {
+        let honest = TrainerNode::honest("h", spec()).train();
+        // forged-lineage target: first MatMul (a node with real inputs)
+        let s = Session::new(spec());
+        let mm = s
+            .program
+            .graph
+            .nodes
+            .iter()
+            .position(|n| matches!(n.op, crate::graph::Op::MatMul))
+            .unwrap();
+        let faults = [
+            Fault::TamperOutput { step: 3, node: 4, delta: 0.5 },
+            Fault::WrongData { step: 2 },
+            Fault::SkipOptimizer { step: 5 },
+            Fault::SkipSteps { after: 4 },
+            Fault::ForgedLineage { step: 3, node: mm },
+            Fault::InconsistentCommit { step: 6 },
+        ];
+        for f in faults {
+            let mut t = TrainerNode::new("f", spec(), Backend::Rep, f);
+            assert_ne!(t.train(), honest, "{f:?} must diverge");
+        }
+        // WrongOperator on a mutable node
+        let s = Session::new(spec());
+        let node = super::super::faults::first_mutable_node(&s.program.graph).unwrap();
+        let mut t = TrainerNode::new(
+            "wo",
+            spec(),
+            Backend::Rep,
+            Fault::WrongOperator { step: 2, node },
+        );
+        assert_ne!(t.train(), honest);
+    }
+
+    #[test]
+    fn free_backend_diverges_from_rep() {
+        use crate::tensor::profile::HardwareProfile;
+        let honest = TrainerNode::honest("h", spec()).train();
+        let mut t = TrainerNode::new(
+            "hw",
+            spec(),
+            Backend::Free(HardwareProfile::T4_16G),
+            Fault::NonRepHardware,
+        );
+        assert_ne!(t.train(), honest, "free-order kernels must diverge bitwise");
+    }
+
+    #[test]
+    fn checkpoint_roots_are_reproducible_after_training() {
+        let mut t = TrainerNode::honest("t", spec());
+        let final1 = t.train();
+        // roots can be re-derived for arbitrary steps (dispute path)
+        let r3a = t.root_at(3);
+        let r3b = t.root_at(3);
+        assert_eq!(r3a, r3b);
+        assert_eq!(t.final_commit(), final1);
+        // reexecution happened only for uncached steps
+        assert!(t.counters.get("steps_reexecuted") > 0);
+    }
+
+    #[test]
+    fn skip_steps_replays_stale_roots() {
+        let mut t = TrainerNode::new("lazy", spec(), Backend::Rep, Fault::SkipSteps { after: 3 });
+        t.train();
+        assert_eq!(t.root_at(3), t.root_at(5));
+        assert_eq!(t.root_at(3), t.root_at(8));
+        let mut h = TrainerNode::honest("h", spec());
+        h.train();
+        assert_eq!(h.root_at(3), t.root_at(3), "honest prefix agrees");
+        assert_ne!(h.root_at(4), t.root_at(4));
+    }
+
+    #[test]
+    fn endpoint_answers_protocol_requests() {
+        let mut t = TrainerNode::honest("t", spec());
+        t.train();
+        match t.call(Request::FinalCommit) {
+            Response::Commit(_) => {}
+            other => panic!("{other:?}"),
+        }
+        match t.call(Request::CheckpointHashes { boundaries: vec![2, 4, 6, 8] }) {
+            Response::Hashes(h) => assert_eq!(h.len(), 4),
+            other => panic!("{other:?}"),
+        }
+        let seq = match t.call(Request::NodeHashSeq { step: 5 }) {
+            Response::NodeSeq(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(seq.len(), t.session.program.graph.len());
+        match t.call(Request::OpenNode { step: 5, idx: 3 }) {
+            Response::Node(n) => {
+                assert_eq!(n.id, 3);
+                assert_eq!(n.commit(), seq[3]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn input_tensor_matches_trace_hash() {
+        let mut t = TrainerNode::honest("t", spec());
+        t.train();
+        let trace = t.trace_at(4);
+        // find a node with at least one input
+        let idx = t
+            .session
+            .program
+            .graph
+            .nodes
+            .iter()
+            .position(|n| !n.inputs.is_empty())
+            .unwrap();
+        match t.call(Request::InputTensor { step: 4, node_idx: idx, input_idx: 0 }) {
+            Response::TensorPayload(tensor) => {
+                assert_eq!(
+                    crate::hash::hash_tensor(&tensor),
+                    trace.nodes[idx].input_hashes[0]
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn genesis_input_proof_verifies() {
+        use crate::hash::merkle::MerkleTree;
+        let mut t = TrainerNode::honest("t", spec());
+        t.train();
+        // find a Param init node
+        let pid = t
+            .session
+            .program
+            .graph
+            .init_nodes(&InitKind::Param)
+            .first()
+            .unwrap()
+            .0;
+        match t.call(Request::InputProof { step: 1, node_idx: pid }) {
+            Response::Proof(InputProvenance::Genesis { leaf, proof }) => {
+                assert!(MerkleTree::verify(&t.session.genesis_root(), &leaf, &proof));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn prev_step_input_proof_verifies() {
+        use crate::hash::merkle::MerkleTree;
+        let mut t = TrainerNode::honest("t", spec());
+        t.train();
+        let pid = t
+            .session
+            .program
+            .graph
+            .init_nodes(&InitKind::Param)
+            .first()
+            .unwrap()
+            .0;
+        let prev_root = t.root_at(3);
+        match t.call(Request::InputProof { step: 4, node_idx: pid }) {
+            Response::Proof(InputProvenance::PrevStep { node, out_idx, proof }) => {
+                assert!(MerkleTree::verify(&prev_root, &node.commit(), &proof));
+                // the emitted output hash is the param value entering step 4
+                let trace4 = t.trace_at(4);
+                assert_eq!(node.output_hashes[out_idx], trace4.nodes[pid].output_hashes[0]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Cross-backend reproducibility (the heart of the RepOps claim, §3):
+//! the SAME logical program executed by two entirely different stacks —
+//! the Rust RepOps engine and the XLA-compiled Pallas kernel — must
+//! produce bitwise-identical results.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a
+//! message) otherwise so plain `cargo test` stays green pre-AOT.
+
+use verde::runtime::{artifacts_present, default_dir, Runtime};
+use verde::tensor::repops;
+use verde::tensor::Tensor;
+
+/// Wide-exponent inputs that expose any reduction-order difference.
+fn adversarial(shape: &[usize], seed: u64) -> Tensor {
+    let mut t = Tensor::rand(shape.to_vec(), seed, 1.0);
+    for (i, v) in t.data_mut().iter_mut().enumerate() {
+        let mag = ((i * 2654435761) % 24) as i32 - 12;
+        *v *= (2.0f32).powi(mag);
+    }
+    t
+}
+
+fn skip() -> bool {
+    if !artifacts_present() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        return true;
+    }
+    false
+}
+
+#[test]
+fn strict_kernel_bitwise_matches_rust_engine() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::cpu(default_dir()).unwrap();
+    let manifest = rt.manifest().unwrap();
+    let (m, k, n) = (
+        manifest.cfg("xm") as usize,
+        manifest.cfg("xk") as usize,
+        manifest.cfg("xn") as usize,
+    );
+    let art = rt.load("repmatmul_strict.hlo.txt").unwrap();
+    for seed in [1u64, 7, 42] {
+        let x = adversarial(&[m, k], seed);
+        let y = adversarial(&[k, n], seed + 100);
+        let xla_out = &art.run_f32(&[&x, &y]).unwrap()[0];
+        // the kernel's pinned FP sequence is fma(a,b,acc) ascending k —
+        // implemented in Rust as repops::matmul_fma
+        let rust_out = repops::matmul_fma(&x, &y);
+        assert!(
+            xla_out.bit_eq(&rust_out),
+            "seed {seed}: XLA-compiled Pallas and Rust RepOps disagree bitwise \
+             (max abs diff {})",
+            xla_out.max_abs_diff(&rust_out)
+        );
+        // and the separate-rounding engine agrees to float tolerance
+        let sep = repops::matmul(&x, &y);
+        let scale = sep.data().iter().fold(0f32, |a, &b| a.max(b.abs()));
+        assert!(xla_out.max_abs_diff(&sep) / scale < 1e-5);
+    }
+}
+
+#[test]
+fn xla_artifact_is_self_deterministic() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::cpu(default_dir()).unwrap();
+    let manifest = rt.manifest().unwrap();
+    let (m, k, n) = (
+        manifest.cfg("xm") as usize,
+        manifest.cfg("xk") as usize,
+        manifest.cfg("xn") as usize,
+    );
+    let strict = rt.load("repmatmul_strict.hlo.txt").unwrap();
+    let mxu = rt.load("repmatmul_mxu.hlo.txt").unwrap();
+    let x = adversarial(&[m, k], 3);
+    let y = adversarial(&[k, n], 4);
+    for art in [&strict, &mxu] {
+        let a = &art.run_f32(&[&x, &y]).unwrap()[0];
+        let b = &art.run_f32(&[&x, &y]).unwrap()[0];
+        assert!(a.bit_eq(b), "{} not self-deterministic", art.name);
+    }
+    // both kernels agree numerically (different reduction trees → approx)
+    let a = &strict.run_f32(&[&x, &y]).unwrap()[0];
+    let b = &mxu.run_f32(&[&x, &y]).unwrap()[0];
+    let scale = a.data().iter().fold(0f32, |acc, &v| acc.max(v.abs()));
+    assert!(a.max_abs_diff(b) <= 1e-2 * scale);
+}
+
+#[test]
+fn model_forward_artifact_runs() {
+    if skip() {
+        return;
+    }
+    use verde::runtime::{from_literal, to_literal, to_literal_i32};
+    let rt = Runtime::cpu(default_dir()).unwrap();
+    let manifest = rt.manifest().unwrap();
+    let art = rt.load("forward.hlo.txt").unwrap();
+    // params in manifest order, deterministic init
+    let mut lits = Vec::new();
+    for (i, (_name, shape)) in manifest.params.iter().enumerate() {
+        let t = Tensor::rand(shape.clone(), 1000 + i as u64, 0.05);
+        lits.push(to_literal(&t).unwrap());
+    }
+    let (b, s, v) = (
+        manifest.cfg("batch") as usize,
+        manifest.cfg("seq") as usize,
+        manifest.cfg("vocab") as usize,
+    );
+    let mut tokens = Tensor::zeros([b, s]);
+    for (i, t) in tokens.data_mut().iter_mut().enumerate() {
+        *t = ((i * 13) % v) as f32;
+    }
+    lits.push(to_literal_i32(&tokens).unwrap());
+    let outs = art.run(&lits).unwrap();
+    assert_eq!(outs.len(), 1);
+    let logits = from_literal(&outs[0]).unwrap();
+    assert_eq!(logits.shape(), &[b * s, v]);
+    assert!(logits.data().iter().all(|x| x.is_finite()));
+    // determinism of the whole compiled model
+    let outs2 = art.run(&lits).unwrap();
+    let logits2 = from_literal(&outs2[0]).unwrap();
+    assert!(logits.bit_eq(&logits2));
+}

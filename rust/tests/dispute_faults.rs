@@ -1,0 +1,244 @@
+//! Integration: one full dispute per fault class, asserting the referee
+//! convicts exactly the dishonest trainer through the expected decision
+//! case (the DESIGN.md §1 fault table, executed).
+
+use verde::graph::kernels::Backend;
+use verde::graph::Op;
+use verde::model::Preset;
+use verde::tensor::profile::HardwareProfile;
+use verde::train::session::Session;
+use verde::train::JobSpec;
+use verde::verde::faults::{first_mutable_node, Fault};
+use verde::verde::referee::{DecisionCase, Verdict};
+use verde::verde::run_dispute;
+use verde::verde::trainer::TrainerNode;
+
+fn dispute_with(spec: JobSpec, fault: Fault, cheater_backend: Backend) -> verde::verde::DisputeReport {
+    let mut honest = TrainerNode::honest("honest", spec);
+    let mut cheat = TrainerNode::new("cheat", spec, cheater_backend, fault);
+    honest.train();
+    cheat.train();
+    run_dispute(spec, honest, cheat)
+}
+
+fn assert_convicts(spec: JobSpec, fault: Fault, case: DecisionCase) {
+    let r = dispute_with(spec, fault, Backend::Rep);
+    assert_eq!(
+        r.verdict.convicted(),
+        Some(1),
+        "{fault:?} verdict: {:?}",
+        r.verdict
+    );
+    assert_eq!(r.verdict.case(), Some(case), "{fault:?}");
+    if let Some(expected) = fault.first_divergent_step() {
+        assert_eq!(r.diverging_step, Some(expected), "{fault:?}");
+    }
+}
+
+#[test]
+fn tamper_output_case3() {
+    let spec = JobSpec::quick(Preset::Mlp, 8);
+    // node 8 is the ReLU output in the MLP extended graph
+    assert_convicts(
+        spec,
+        Fault::TamperOutput { step: 5, node: 8, delta: 5.0 },
+        DecisionCase::OutputRecompute,
+    );
+}
+
+#[test]
+fn tamper_update_node_case3() {
+    let spec = JobSpec::quick(Preset::Mlp, 8);
+    let upd = {
+        let s = Session::new(spec);
+        *s.program.param_updates.values().map(|sl| &sl.node).min().unwrap()
+    };
+    assert_convicts(
+        spec,
+        Fault::TamperOutput { step: 4, node: upd, delta: 0.01 },
+        DecisionCase::OutputRecompute,
+    );
+}
+
+#[test]
+fn wrong_operator_case1() {
+    let spec = JobSpec::quick(Preset::Mlp, 8);
+    let node = {
+        let s = Session::new(spec);
+        first_mutable_node(&s.program.graph).expect("mlp has a mutable op")
+    };
+    assert_convicts(
+        spec,
+        Fault::WrongOperator { step: 3, node },
+        DecisionCase::Structure,
+    );
+}
+
+#[test]
+fn wrong_data_case2a_data() {
+    let spec = JobSpec::quick(Preset::Mlp, 8);
+    assert_convicts(spec, Fault::WrongData { step: 6 }, DecisionCase::DataCheck);
+}
+
+#[test]
+fn skip_optimizer_case3() {
+    let spec = JobSpec::quick(Preset::Mlp, 8);
+    assert_convicts(
+        spec,
+        Fault::SkipOptimizer { step: 5 },
+        DecisionCase::OutputRecompute,
+    );
+}
+
+#[test]
+fn skip_steps_lazy_trainer() {
+    let spec = JobSpec::quick(Preset::Mlp, 12);
+    let r = dispute_with(spec, Fault::SkipSteps { after: 7 }, Backend::Rep);
+    assert_eq!(r.verdict.convicted(), Some(1), "{:?}", r.verdict);
+    assert_eq!(r.diverging_step, Some(8));
+    // the lazy trainer replays a stale trace whose data node contradicts
+    // the committed dataset for step 8
+    assert_eq!(r.verdict.case(), Some(DecisionCase::DataCheck));
+}
+
+#[test]
+fn forged_lineage_case2b() {
+    let spec = JobSpec::quick(Preset::Mlp, 8);
+    let mm = {
+        let s = Session::new(spec);
+        s.program.graph.nodes.iter().position(|n| matches!(n.op, Op::MatMul)).unwrap()
+    };
+    assert_convicts(
+        spec,
+        Fault::ForgedLineage { step: 4, node: mm },
+        DecisionCase::InputLineage,
+    );
+}
+
+#[test]
+fn inconsistent_commit_line7() {
+    let spec = JobSpec::quick(Preset::Mlp, 8);
+    let r = dispute_with(spec, Fault::InconsistentCommit { step: 5 }, Backend::Rep);
+    assert_eq!(r.verdict.convicted(), Some(1), "{:?}", r.verdict);
+    assert_eq!(r.verdict.case(), Some(DecisionCase::CommitInconsistent));
+}
+
+#[test]
+fn non_rep_hardware_convicted_by_recompute() {
+    // honest *intent*, free-order kernels: the referee's RepOps
+    // recomputation sides with the reproducible trainer — the §3 motivation
+    let spec = JobSpec::quick(Preset::Mlp, 6);
+    let r = dispute_with(
+        spec,
+        Fault::NonRepHardware,
+        Backend::Free(HardwareProfile::T4_16G),
+    );
+    assert_eq!(r.verdict.convicted(), Some(1), "{:?}", r.verdict);
+    assert_eq!(r.verdict.case(), Some(DecisionCase::OutputRecompute));
+}
+
+#[test]
+fn two_free_order_trainers_on_different_gpus_both_lose() {
+    // The paper's nightmare scenario without RepOps: two honest trainers on
+    // different hardware disagree, and the referee (on RepOps) refutes both.
+    let spec = JobSpec::quick(Preset::Mlp, 6);
+    let mut t4 = TrainerNode::new(
+        "t4",
+        spec,
+        Backend::Free(HardwareProfile::T4_16G),
+        Fault::NonRepHardware,
+    );
+    let mut a100 = TrainerNode::new(
+        "a100",
+        spec,
+        Backend::Free(HardwareProfile::A100_40G),
+        Fault::NonRepHardware,
+    );
+    t4.train();
+    a100.train();
+    let r = run_dispute(spec, t4, a100);
+    match r.verdict {
+        Verdict::BothDishonest { case, .. } => {
+            assert_eq!(case, DecisionCase::OutputRecompute)
+        }
+        // depending on where rounding falls, one trainer may happen to match
+        // RepOps on the single disputed node; then only the other is caught
+        Verdict::Dishonest { case, .. } => assert_eq!(case, DecisionCase::OutputRecompute),
+        other => panic!("expected conviction(s), got {other:?}"),
+    }
+}
+
+#[test]
+fn transformer_model_dispute() {
+    // the full pipeline on a real transformer graph (llama-tiny)
+    let spec = JobSpec::quick(Preset::LlamaTiny, 6);
+    let upd = {
+        let s = Session::new(spec);
+        *s.program.param_updates.values().map(|sl| &sl.node).min().unwrap()
+    };
+    let r = dispute_with(
+        spec,
+        Fault::TamperOutput { step: 4, node: upd, delta: 0.02 },
+        Backend::Rep,
+    );
+    assert_eq!(r.verdict.convicted(), Some(1), "{:?}", r.verdict);
+    assert_eq!(r.verdict.case(), Some(DecisionCase::OutputRecompute));
+    assert_eq!(r.diverging_step, Some(4));
+    assert_eq!(r.referee.get("ops_recomputed"), 1);
+}
+
+#[test]
+fn bert_model_dispute() {
+    let spec = JobSpec::quick(Preset::BertTiny, 5);
+    let r = dispute_with(spec, Fault::WrongData { step: 2 }, Backend::Rep);
+    assert_eq!(r.verdict.convicted(), Some(1), "{:?}", r.verdict);
+    assert_eq!(r.verdict.case(), Some(DecisionCase::DataCheck));
+}
+
+#[test]
+fn referee_work_is_small() {
+    // §2.2's point: the referee recomputes ONE operator and moves KBs, not
+    // the GBs of a full training step / checkpoint.
+    let spec = JobSpec::quick(Preset::LlamaTiny, 8);
+    let upd = {
+        let s = Session::new(spec);
+        *s.program.param_updates.values().map(|sl| &sl.node).min().unwrap()
+    };
+    let mut honest = TrainerNode::honest("honest", spec);
+    let mut cheat = TrainerNode::new(
+        "cheat",
+        spec,
+        Backend::Rep,
+        Fault::TamperOutput { step: 6, node: upd, delta: 0.02 },
+    );
+    honest.train();
+    cheat.train();
+    let state_bytes = honest.session.genesis.byte_len() as u64;
+    let r = run_dispute(spec, honest, cheat);
+    assert_eq!(r.verdict.convicted(), Some(1));
+    assert_eq!(r.referee.get("ops_recomputed"), 1);
+    let moved = r.bytes[0] + r.bytes[1];
+    assert!(
+        moved < state_bytes,
+        "dispute moved {moved} bytes vs state {state_bytes}"
+    );
+}
+
+#[test]
+fn threaded_trainers_resolve_disputes() {
+    // trainers as independent actor threads (the deployment topology)
+    let spec = JobSpec::quick(Preset::Mlp, 6);
+    let mut honest = TrainerNode::honest("honest", spec);
+    let mut cheat = TrainerNode::new(
+        "cheat",
+        spec,
+        Backend::Rep,
+        Fault::WrongData { step: 3 },
+    );
+    honest.train();
+    cheat.train();
+    let h = verde::net::threaded::spawn(honest);
+    let c = verde::net::threaded::spawn(cheat);
+    let r = run_dispute(spec, h, c);
+    assert_eq!(r.verdict.convicted(), Some(1), "{:?}", r.verdict);
+}

@@ -1,0 +1,87 @@
+//! Property tests over the protocol's core invariants: random fault
+//! placements must always (a) be caught, (b) never convict the honest
+//! trainer, (c) localize the dispute to the exact faulty step.
+
+use verde::graph::kernels::Backend;
+use verde::model::Preset;
+use verde::train::JobSpec;
+use verde::util::proptest::{forall, Gen};
+use verde::verde::faults::Fault;
+use verde::verde::run_dispute;
+use verde::verde::trainer::TrainerNode;
+
+fn spec_with(steps: u64, n: u64) -> JobSpec {
+    let mut spec = JobSpec::quick(Preset::Mlp, steps);
+    spec.checkpoint_n = n;
+    spec
+}
+
+#[test]
+fn prop_random_tamper_always_convicts_cheater_never_honest() {
+    forall("random tamper placements are caught", 12, |g: &mut Gen| {
+        let steps = g.usize_in(4, 12) as u64;
+        let n = g.usize_in(2, 5) as u64;
+        let spec = spec_with(steps, n);
+        let step = g.usize_in(1, steps as usize) as u64;
+        // target any node of the extended graph with a tensor output whose
+        // perturbation survives (update nodes always qualify)
+        let session = verde::train::session::Session::new(spec);
+        let updates: Vec<usize> =
+            session.program.param_updates.values().map(|s| s.node).collect();
+        let node = *g.pick(&updates);
+        let delta = if g.bool() { 0.05 } else { -0.125 };
+        let fault = Fault::TamperOutput { step, node, delta };
+
+        let honest_first = g.bool();
+        let mut honest = TrainerNode::honest("honest", spec);
+        let mut cheat = TrainerNode::new("cheat", spec, Backend::Rep, fault);
+        honest.train();
+        cheat.train();
+        let (r, cheater_idx) = if honest_first {
+            (run_dispute(spec, honest, cheat), 1)
+        } else {
+            (run_dispute(spec, cheat, honest), 0)
+        };
+        assert_eq!(
+            r.verdict.convicted(),
+            Some(cheater_idx),
+            "fault {fault:?}, honest_first={honest_first}, verdict {:?}",
+            r.verdict
+        );
+        assert_eq!(r.diverging_step, Some(step), "fault {fault:?}");
+    });
+}
+
+#[test]
+fn prop_random_skip_and_data_faults_localized() {
+    forall("skip/data faults localize to their step", 8, |g: &mut Gen| {
+        let steps = g.usize_in(6, 14) as u64;
+        let spec = spec_with(steps, g.usize_in(2, 6) as u64);
+        let (fault, want_step) = if g.bool() {
+            let after = g.usize_in(1, steps as usize - 1) as u64;
+            (Fault::SkipSteps { after }, after + 1)
+        } else {
+            let s = g.usize_in(1, steps as usize) as u64;
+            (Fault::WrongData { step: s }, s)
+        };
+        let mut honest = TrainerNode::honest("honest", spec);
+        let mut cheat = TrainerNode::new("cheat", spec, Backend::Rep, fault);
+        honest.train();
+        cheat.train();
+        let r = run_dispute(spec, honest, cheat);
+        assert_eq!(r.verdict.convicted(), Some(1), "{fault:?}: {:?}", r.verdict);
+        assert_eq!(r.diverging_step, Some(want_step), "{fault:?}");
+    });
+}
+
+#[test]
+fn prop_honest_pairs_never_dispute_across_seeds() {
+    forall("honest pairs agree for any seed", 6, |g: &mut Gen| {
+        let mut spec = spec_with(g.usize_in(3, 6) as u64, 3);
+        spec.weight_seed = g.u64();
+        spec.data_seed = g.u64();
+        let mut a = TrainerNode::honest("a", spec);
+        let mut b = TrainerNode::honest("b", spec);
+        assert_eq!(a.train(), b.train());
+    });
+}
