@@ -1,0 +1,113 @@
+//! SERVICE — delegation-service load generator: N concurrent jobs × k
+//! workers with honest and faulty mixes, tracking service-level jobs/sec,
+//! mean latency, and protocol bytes/job. Emits `BENCH_service.json` so the
+//! perf trajectory of the coordinator is machine-readable run over run.
+//!
+//! Run: `cargo bench --bench service_throughput`
+
+use std::time::Instant;
+
+use verde::model::Preset;
+use verde::net::threaded::spawn;
+use verde::service::{run_service, FaultPlan, PooledWorker, WorkerHost, WorkerPool};
+use verde::train::JobSpec;
+use verde::util::metrics::human_bytes;
+
+struct Scenario {
+    name: &'static str,
+    workers: usize,
+    faulty: usize,
+    k: usize,
+    jobs: u64,
+    steps: u64,
+}
+
+/// Worker `i` of `n` gets a fault from a small rotating menu when it is one
+/// of the `faulty` first slots.
+fn plan_for(i: usize, faulty: usize) -> FaultPlan {
+    if i >= faulty {
+        return FaultPlan::Honest;
+    }
+    match i % 3 {
+        0 => FaultPlan::Tamper { step: Some(2), delta: 0.05 },
+        1 => FaultPlan::WrongData { step: Some(3) },
+        _ => FaultPlan::SkipSteps { after: Some(2) },
+    }
+}
+
+fn run_scenario(sc: &Scenario) -> String {
+    // Workers as independent thread actors (the same WorkerHost code path
+    // a TCP worker process runs), so jobs genuinely execute in parallel.
+    let pool = WorkerPool::new(
+        (0..sc.workers)
+            .map(|i| {
+                let name = format!("w{i}");
+                PooledWorker::new(&name, spawn(WorkerHost::new(&name, plan_for(i, sc.faulty))))
+            })
+            .collect(),
+    );
+    let jobs: Vec<JobSpec> = (0..sc.jobs)
+        .map(|i| {
+            let mut spec = JobSpec::quick(Preset::Mlp, sc.steps);
+            spec.data_seed = spec.data_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9));
+            spec
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let report = run_service(jobs, &pool, sc.k);
+    let wall = t0.elapsed();
+
+    let resolved = report.outcomes.iter().filter(|o| o.accepted.is_some()).count();
+    println!(
+        "  {:<18} {:>3} jobs  k={} over {:>2} workers ({} faulty)  {:>10.2?}  {:>7.2} jobs/s  {:>10}/job  {:>3} disputes",
+        sc.name,
+        report.outcomes.len(),
+        sc.k,
+        sc.workers,
+        sc.faulty,
+        wall,
+        report.jobs_per_sec(),
+        human_bytes(report.bytes_per_job() as u64),
+        report.total_disputes(),
+    );
+    assert_eq!(resolved, report.outcomes.len(), "all jobs must resolve");
+
+    format!(
+        "{{\"name\":\"{}\",\"jobs\":{},\"k\":{},\"workers\":{},\"faulty\":{},\"steps\":{},\
+         \"wall_s\":{:.6},\"jobs_per_sec\":{:.3},\"mean_latency_s\":{:.6},\
+         \"total_bytes\":{},\"bytes_per_job\":{:.1},\"disputes\":{}}}",
+        sc.name,
+        report.outcomes.len(),
+        sc.k,
+        sc.workers,
+        sc.faulty,
+        sc.steps,
+        wall.as_secs_f64(),
+        report.jobs_per_sec(),
+        report.mean_latency().as_secs_f64(),
+        report.total_bytes(),
+        report.bytes_per_job(),
+        report.total_disputes(),
+    )
+}
+
+fn main() {
+    println!("SERVICE: delegation-service throughput (jobs/sec, bytes/job)");
+    let scenarios = [
+        Scenario { name: "honest_w4_k2", workers: 4, faulty: 0, k: 2, jobs: 8, steps: 6 },
+        Scenario { name: "mixed_w4_k2", workers: 4, faulty: 1, k: 2, jobs: 8, steps: 6 },
+        Scenario { name: "mixed_w4_k4", workers: 4, faulty: 2, k: 4, jobs: 8, steps: 6 },
+        Scenario { name: "mixed_w8_k2", workers: 8, faulty: 2, k: 2, jobs: 16, steps: 6 },
+        Scenario { name: "adversarial_w6_k3", workers: 6, faulty: 3, k: 3, jobs: 9, steps: 6 },
+    ];
+    let lines: Vec<String> = scenarios.iter().map(run_scenario).collect();
+    let json = format!("[\n  {}\n]\n", lines.join(",\n  "));
+    for line in &lines {
+        println!("JSON {line}");
+    }
+    match std::fs::write("BENCH_service.json", &json) {
+        Ok(()) => println!("wrote BENCH_service.json"),
+        Err(e) => eprintln!("could not write BENCH_service.json: {e}"),
+    }
+}

@@ -26,9 +26,10 @@ pub struct MerkleProof {
 }
 
 impl MerkleProof {
-    /// Wire size in bytes (for communication accounting).
+    /// Exact wire size in bytes (leaf index + sibling count + siblings),
+    /// matching the encoding in [`crate::verde::wire`].
     pub fn byte_len(&self) -> usize {
-        8 + 32 * self.siblings.len()
+        16 + 32 * self.siblings.len()
     }
 }
 

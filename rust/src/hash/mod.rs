@@ -3,9 +3,11 @@
 //! paper §2.2 / Figure 2.
 
 pub mod merkle;
+pub mod sha256;
 
-use sha2::{Digest as _, Sha256};
 use std::fmt;
+
+use self::sha256::Sha256;
 
 use crate::tensor::Tensor;
 

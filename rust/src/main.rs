@@ -1,25 +1,36 @@
 //! `verde` — CLI for the refereed-delegation training system.
 //!
 //! Subcommands:
-//!   train       run a training job honestly and print the loss curve + commitment
-//!   dispute     delegate to 2 trainers (one faulty) and resolve the dispute
-//!   tournament  k trainers with a mix of faults; run the knockout
-//!   info        print a model preset's graph statistics
+//!   train        run a training job honestly and print the loss curve + commitment
+//!   dispute      delegate to 2 trainers (one faulty) and resolve the dispute
+//!   tournament   k trainers with a mix of faults; run the knockout
+//!   info         print a model preset's graph statistics
+//!   worker       serve a worker process over TCP (`--listen`, `--fault`)
+//!   coordinator  delegate N jobs to a TCP worker pool, k workers per job
 //!
 //! Examples:
 //!   verde train --model llama-tiny --steps 32 --batch 2 --seq 8
 //!   verde dispute --model mlp --steps 16 --fault tamper --fault-step 9
 //!   verde tournament --model mlp --steps 8 --k 4
 //!   verde info --model llama-small
+//!   verde worker --listen 127.0.0.1:7000
+//!   verde worker --listen 127.0.0.1:7001 --fault tamper@3
+//!   verde coordinator --workers 127.0.0.1:7000,127.0.0.1:7001 --jobs 8 --k 2
+
+use std::net::TcpListener;
 
 use verde::graph::kernels::Backend;
 use verde::model::Preset;
+use verde::net::tcp::{serve_connection, TcpEndpoint};
+use verde::net::Endpoint as _;
+use verde::service::{run_service, FaultPlan, PooledWorker, WorkerHost, WorkerPool};
 use verde::tensor::profile::HardwareProfile;
 use verde::train::session::Session;
 use verde::train::JobSpec;
 use verde::util::cli::Args;
 use verde::util::metrics::human_bytes;
-use verde::verde::faults::{first_mutable_node, Fault};
+use verde::verde::faults::{first_mutable_node, first_update_node, Fault};
+use verde::verde::protocol::Request;
 use verde::verde::tournament::run_tournament;
 use verde::verde::trainer::TrainerNode;
 use verde::verde::run_dispute;
@@ -39,7 +50,7 @@ fn spec_from(args: &Args) -> JobSpec {
 fn fault_from(args: &Args, spec: JobSpec) -> Fault {
     let step = args.get_u64("fault-step", spec.steps / 2 + 1);
     let session = Session::new(spec);
-    let upd = *session.program.param_updates.values().map(|s| &s.node).min().unwrap();
+    let upd = first_update_node(&session.program).expect("no trainable params");
     match args.get_or("fault", "tamper") {
         "tamper" => Fault::TamperOutput {
             step,
@@ -127,7 +138,7 @@ fn cmd_tournament(args: &Args) {
     let k = args.get_usize("k", 4);
     println!("tournament: {k} trainers, {} x{} steps", spec.preset.name(), spec.steps);
     let session = Session::new(spec);
-    let upd = *session.program.param_updates.values().map(|s| &s.node).min().unwrap();
+    let upd = first_update_node(&session.program).expect("no trainable params");
     let mut trainers: Vec<TrainerNode> = (0..k)
         .map(|i| {
             // trainer 0 honest; others get a spread of faults
@@ -167,6 +178,108 @@ fn cmd_info(args: &Args) {
     println!("  job commitment:    {}", session.job_hash.to_hex());
 }
 
+fn cmd_worker(args: &Args) {
+    let listen = args.get_or("listen", "127.0.0.1:7000");
+    let plan = FaultPlan::parse(args.get_or("fault", "none")).unwrap_or_else(|| {
+        panic!("unknown --fault (none, tamper[@S], wrong-op[@S], wrong-data[@S], skip-opt[@S], skip-steps[@S], forged-lineage[@S], inconsistent[@S])")
+    });
+    let max_conns = args.get("max-conns").map(|v| {
+        v.parse::<usize>().unwrap_or_else(|_| panic!("--max-conns wants an integer, got '{v}'"))
+    });
+    let listener = TcpListener::bind(listen)
+        .unwrap_or_else(|e| panic!("cannot bind {listen}: {e}"));
+    let addr = listener.local_addr().expect("local addr");
+    println!("worker listening on {addr} (plan: {plan})");
+    let mut host = WorkerHost::new(&format!("worker@{addr}"), plan);
+    let mut served = 0usize;
+    for conn in listener.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("accept failed: {e}");
+                continue;
+            }
+        };
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+        match serve_connection(stream, &mut host) {
+            Ok(stats) => println!(
+                "connection from {peer}: {} requests, {} in / {} out",
+                stats.requests,
+                human_bytes(stats.bytes_in),
+                human_bytes(stats.bytes_out)
+            ),
+            Err(e) => eprintln!("connection from {peer} failed: {e}"),
+        }
+        served += 1;
+        if max_conns.is_some_and(|m| served >= m) {
+            break;
+        }
+    }
+    println!("worker exiting after {served} connections ({})", host.counters.to_json());
+}
+
+fn cmd_coordinator(args: &Args) {
+    let addrs = args.get_list("workers");
+    assert!(!addrs.is_empty(), "--workers host:port[,host:port...] is required");
+    let k = args.get_usize("k", addrs.len().min(4));
+    let n_jobs = args.get_usize("jobs", 8) as u64;
+    let base = spec_from(args);
+
+    let workers: Vec<PooledWorker> = addrs
+        .iter()
+        .map(|addr| {
+            let ep = TcpEndpoint::connect(addr, addr)
+                .unwrap_or_else(|e| panic!("cannot connect to worker {addr}: {e}"));
+            println!("connected to worker {addr}");
+            PooledWorker::new(addr, ep)
+        })
+        .collect();
+    let pool = WorkerPool::new(workers);
+
+    // Distinct jobs: same model/length, per-job data stream.
+    let jobs: Vec<JobSpec> = (0..n_jobs)
+        .map(|i| {
+            let mut spec = base;
+            spec.data_seed = base.data_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9));
+            spec
+        })
+        .collect();
+
+    println!(
+        "delegating {n_jobs} jobs ({} x{} steps) to {} workers, k={k}",
+        base.preset.name(),
+        base.steps,
+        pool.size()
+    );
+    let report = run_service(jobs, &pool, k);
+    println!("--- service report ---");
+    for o in &report.outcomes {
+        println!(
+            "job {:>3}: winner {:<24} disputes {}  eliminated {}  {}  {:?}",
+            o.job_id,
+            o.winner.as_deref().unwrap_or("<unresolved>"),
+            o.disputes,
+            o.eliminated,
+            human_bytes(o.bytes),
+            o.wall
+        );
+    }
+    println!(
+        "{} jobs in {:?}  ({:.2} jobs/s, {} total, {} / job)",
+        report.outcomes.len(),
+        report.wall,
+        report.jobs_per_sec(),
+        human_bytes(report.total_bytes()),
+        human_bytes(report.bytes_per_job() as u64)
+    );
+    println!("JSON {}", report.to_json());
+
+    // orderly shutdown
+    for mut w in pool.into_workers() {
+        let _ = w.endpoint.call(Request::Shutdown);
+    }
+}
+
 fn main() {
     let args = Args::parse();
     match args.positional.first().map(String::as_str) {
@@ -174,8 +287,12 @@ fn main() {
         Some("dispute") => cmd_dispute(&args),
         Some("tournament") => cmd_tournament(&args),
         Some("info") => cmd_info(&args),
+        Some("worker") => cmd_worker(&args),
+        Some("coordinator") => cmd_coordinator(&args),
         _ => {
-            eprintln!("usage: verde <train|dispute|tournament|info> [--model M] [--steps N] ...");
+            eprintln!(
+                "usage: verde <train|dispute|tournament|info|worker|coordinator> [--model M] [--steps N] ..."
+            );
             eprintln!("see rust/src/main.rs header for examples");
             std::process::exit(2);
         }

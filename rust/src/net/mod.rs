@@ -8,6 +8,7 @@
 //! transport exists to prove process-separation works and to host long
 //! training runs off the coordinator thread.
 
+pub mod tcp;
 pub mod threaded;
 
 use crate::util::metrics::Counters;

@@ -1,0 +1,269 @@
+//! The delegation coordinator: a job queue drained by scheduler lanes,
+//! each lane leasing `k` workers from the pool, dispatching the job to all
+//! of them concurrently, and resolving disagreements with a dispute
+//! tournament — many jobs in flight at once, with per-job and aggregate
+//! throughput/latency/byte metrics.
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::hash::Hash;
+use crate::net::{Endpoint, Metered};
+use crate::train::JobSpec;
+use crate::verde::protocol::{Request, Response};
+use crate::verde::tournament::run_tournament;
+
+use super::pool::{PooledWorker, WorkerPool};
+
+/// Per-job result plus its cost accounting.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub job_id: u64,
+    /// The commitment the service vouches for (`None` when no worker even
+    /// produced a claim — all assignments failed).
+    pub accepted: Option<Hash>,
+    /// Name of the worker whose claim was accepted.
+    pub winner: Option<String>,
+    /// Pairwise disputes the job needed (0 when all claims agree).
+    pub disputes: usize,
+    /// Workers eliminated as dishonest (or unresponsive).
+    pub eliminated: usize,
+    /// Wall-clock latency: lease → verdict.
+    pub wall: Duration,
+    /// Protocol bytes exchanged with this job's workers (both directions,
+    /// exact `wire_size` accounting).
+    pub bytes: u64,
+    /// Protocol requests issued to this job's workers.
+    pub requests: u64,
+}
+
+/// Aggregate service run report.
+#[derive(Debug)]
+pub struct ServiceReport {
+    /// Outcomes sorted by job id.
+    pub outcomes: Vec<JobOutcome>,
+    /// Wall time for the whole batch.
+    pub wall: Duration,
+    /// Workers assigned per job.
+    pub k: usize,
+    /// Pool size the batch ran against.
+    pub workers: usize,
+}
+
+impl ServiceReport {
+    pub fn jobs_per_sec(&self) -> f64 {
+        self.outcomes.len() as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.outcomes.iter().map(|o| o.bytes).sum()
+    }
+
+    pub fn total_disputes(&self) -> usize {
+        self.outcomes.iter().map(|o| o.disputes).sum()
+    }
+
+    /// Mean protocol bytes per job.
+    pub fn bytes_per_job(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            0.0
+        } else {
+            self.total_bytes() as f64 / self.outcomes.len() as f64
+        }
+    }
+
+    /// Mean job latency (lease → verdict).
+    pub fn mean_latency(&self) -> Duration {
+        if self.outcomes.is_empty() {
+            Duration::ZERO
+        } else {
+            self.outcomes.iter().map(|o| o.wall).sum::<Duration>() / self.outcomes.len() as u32
+        }
+    }
+
+    /// One machine-readable JSON object (stable key order).
+    pub fn to_json(&self) -> String {
+        let resolved = self.outcomes.iter().filter(|o| o.accepted.is_some()).count();
+        let mut s = String::from("{");
+        let _ = write!(
+            s,
+            "\"jobs\":{},\"resolved\":{},\"k\":{},\"workers\":{},\"wall_s\":{:.6},\
+             \"jobs_per_sec\":{:.3},\"mean_latency_s\":{:.6},\"total_bytes\":{},\
+             \"bytes_per_job\":{:.1},\"disputes\":{}",
+            self.outcomes.len(),
+            resolved,
+            self.k,
+            self.workers,
+            self.wall.as_secs_f64(),
+            self.jobs_per_sec(),
+            self.mean_latency().as_secs_f64(),
+            self.total_bytes(),
+            self.bytes_per_job(),
+            self.total_disputes(),
+        );
+        s.push('}');
+        s
+    }
+}
+
+/// Dispatch one job to its leased workers and resolve it.
+fn run_job(job_id: u64, spec: JobSpec, workers: &mut [PooledWorker]) -> JobOutcome {
+    let t0 = Instant::now();
+    // names up front: `metered` mutably borrows every endpoint below
+    let names: Vec<String> = workers.iter().map(|w| w.name.clone()).collect();
+    let mut metered: Vec<Metered<&mut (dyn Endpoint + Send)>> =
+        workers.iter_mut().map(|w| Metered::new(w.endpoint.as_mut())).collect();
+
+    // Assign the job to every worker concurrently — training dominates the
+    // job's latency, so serializing here would forfeit the whole point of
+    // a k-worker pool.
+    let trained: Vec<bool> = std::thread::scope(|scope| {
+        let handles: Vec<_> = metered
+            .iter_mut()
+            .map(|m| scope.spawn(move || matches!(m.call(Request::Train { spec }), Response::Commit(_))))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or(false)).collect()
+    });
+
+    if !trained.iter().any(|&ok| ok) {
+        let bytes = metered.iter().map(|m| m.bytes_sent() + m.bytes_received()).sum();
+        let requests = metered.iter().map(|m| m.counters.get("requests")).sum();
+        return JobOutcome {
+            job_id,
+            accepted: None,
+            winner: None,
+            disputes: 0,
+            eliminated: names.len(),
+            wall: t0.elapsed(),
+            bytes,
+            requests,
+        };
+    }
+
+    // Tournament over the same metered endpoints: workers that failed to
+    // train refuse `FinalCommit` and are eliminated up front.
+    let report = run_tournament(spec, &mut metered);
+    let bytes = metered.iter().map(|m| m.bytes_sent() + m.bytes_received()).sum();
+    let requests = metered.iter().map(|m| m.counters.get("requests")).sum();
+    JobOutcome {
+        job_id,
+        accepted: Some(report.accepted),
+        winner: Some(names[report.winner].clone()),
+        disputes: report.disputes,
+        eliminated: report.eliminated.len(),
+        wall: t0.elapsed(),
+        bytes,
+        requests,
+    }
+}
+
+/// Run a batch of jobs against the pool, `k` workers per job, with
+/// `pool.size() / k` scheduler lanes draining the queue concurrently.
+///
+/// # Panics
+/// If `k == 0` or `k > pool.size()`.
+pub fn run_service(jobs: Vec<JobSpec>, pool: &WorkerPool, k: usize) -> ServiceReport {
+    assert!(k >= 1 && k <= pool.size(), "k={k} vs pool of {}", pool.size());
+    let n_jobs = jobs.len();
+    let queue: Mutex<VecDeque<(u64, JobSpec)>> = Mutex::new(
+        jobs.into_iter().enumerate().map(|(i, s)| (i as u64, s)).collect(),
+    );
+    let outcomes: Mutex<Vec<JobOutcome>> = Mutex::new(Vec::with_capacity(n_jobs));
+    let lanes = (pool.size() / k).clamp(1, n_jobs.max(1));
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..lanes {
+            scope.spawn(|| loop {
+                let next = queue.lock().unwrap().pop_front();
+                let Some((job_id, spec)) = next else { break };
+                let mut lease = pool.acquire(k);
+                let outcome = run_job(job_id, spec, &mut lease);
+                pool.release(lease);
+                outcomes.lock().unwrap().push(outcome);
+            });
+        }
+    });
+    let mut outcomes = outcomes.into_inner().unwrap();
+    outcomes.sort_by_key(|o| o.job_id);
+    ServiceReport { outcomes, wall: t0.elapsed(), k, workers: pool.size() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Preset;
+    use crate::service::worker::{FaultPlan, WorkerHost};
+    use crate::verde::trainer::TrainerNode;
+
+    fn jobs(n: u64, steps: u64) -> Vec<JobSpec> {
+        (0..n)
+            .map(|i| {
+                let mut spec = JobSpec::quick(Preset::Mlp, steps);
+                spec.data_seed = spec.data_seed.wrapping_add(i * 1047);
+                spec
+            })
+            .collect()
+    }
+
+    fn in_process_pool(plans: &[FaultPlan]) -> WorkerPool {
+        WorkerPool::new(
+            plans
+                .iter()
+                .enumerate()
+                .map(|(i, &plan)| {
+                    PooledWorker::new(&format!("w{i}"), WorkerHost::new(&format!("w{i}"), plan))
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn all_honest_jobs_resolve_without_disputes() {
+        let pool = in_process_pool(&[FaultPlan::Honest, FaultPlan::Honest]);
+        let report = run_service(jobs(4, 4), &pool, 2);
+        assert_eq!(report.outcomes.len(), 4);
+        for o in &report.outcomes {
+            assert!(o.accepted.is_some());
+            assert_eq!(o.disputes, 0);
+            assert_eq!(o.eliminated, 0);
+            assert!(o.bytes > 0);
+        }
+        assert_eq!(report.total_disputes(), 0);
+        assert!(report.jobs_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn faulty_worker_is_beaten_on_every_job() {
+        let pool = in_process_pool(&[
+            FaultPlan::Honest,
+            FaultPlan::Tamper { step: Some(2), delta: 0.05 },
+        ]);
+        let js = jobs(3, 5);
+        let expected: Vec<Hash> =
+            js.iter().map(|s| TrainerNode::honest("ref", *s).train()).collect();
+        let report = run_service(js, &pool, 2);
+        for (o, want) in report.outcomes.iter().zip(&expected) {
+            assert_eq!(o.accepted, Some(*want), "job {}", o.job_id);
+            assert_eq!(o.winner.as_deref(), Some("w0"));
+            assert_eq!(o.disputes, 1);
+            assert_eq!(o.eliminated, 1);
+        }
+    }
+
+    #[test]
+    fn lanes_run_jobs_concurrently_from_one_queue() {
+        // 4 workers, k=2 → 2 lanes; 6 jobs must all resolve exactly once.
+        let pool = in_process_pool(&[FaultPlan::Honest; 4]);
+        let report = run_service(jobs(6, 3), &pool, 2);
+        assert_eq!(report.outcomes.len(), 6);
+        let ids: Vec<u64> = report.outcomes.iter().map(|o| o.job_id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(pool.idle(), 4, "all leases returned");
+        let json = report.to_json();
+        assert!(json.contains("\"jobs\":6"), "{json}");
+        assert!(json.contains("\"resolved\":6"), "{json}");
+    }
+}

@@ -1,0 +1,29 @@
+//! The delegation **service**: a coordinator that accepts many training
+//! jobs, schedules each onto `k` workers drawn from a shared pool, collects
+//! final commitments, and resolves disagreements with concurrent dispute
+//! tournaments — the deployment shape of the paper's client/trainers/referee
+//! topology at many-jobs scale.
+//!
+//! * [`pool`] — a blocking free-list of worker endpoints; jobs acquire `k`
+//!   workers atomically and return them when resolved.
+//! * [`worker`] — [`worker::WorkerHost`]: the worker-process brain. It
+//!   accepts [`Request::Train`](crate::verde::protocol::Request) job
+//!   assignments, runs them through a
+//!   [`TrainerNode`](crate::verde::trainer::TrainerNode) (honestly or under
+//!   a configured [`worker::FaultPlan`]), and then answers dispute queries
+//!   for the active job.
+//! * [`coordinator`] — [`coordinator::run_service`]: the job queue,
+//!   scheduler lanes, per-job tournaments, and aggregate
+//!   throughput/latency/byte metrics.
+//!
+//! Workers can live anywhere an [`Endpoint`](crate::net::Endpoint) can:
+//! in-process, on threads ([`crate::net::threaded`]), or in separate
+//! processes over TCP ([`crate::net::tcp`], `verde worker --listen`).
+
+pub mod coordinator;
+pub mod pool;
+pub mod worker;
+
+pub use coordinator::{run_service, JobOutcome, ServiceReport};
+pub use pool::{PooledWorker, WorkerPool};
+pub use worker::{FaultPlan, WorkerHost};

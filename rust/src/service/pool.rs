@@ -1,0 +1,130 @@
+//! A blocking pool of worker endpoints. Scheduler lanes acquire `k`
+//! workers **atomically** (all-or-nothing under one lock), which keeps the
+//! acquire path deadlock-free: a lane either gets its full complement or
+//! sleeps without holding anything.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::net::Endpoint;
+
+/// A worker endpoint owned by the pool, addressable by name in reports.
+pub struct PooledWorker {
+    pub name: String,
+    pub endpoint: Box<dyn Endpoint + Send>,
+}
+
+impl PooledWorker {
+    pub fn new(name: &str, endpoint: impl Endpoint + Send + 'static) -> PooledWorker {
+        PooledWorker { name: name.to_string(), endpoint: Box::new(endpoint) }
+    }
+}
+
+/// Free-list of idle workers plus a condvar for lanes waiting on capacity.
+pub struct WorkerPool {
+    size: usize,
+    free: Mutex<VecDeque<PooledWorker>>,
+    available: Condvar,
+}
+
+impl WorkerPool {
+    /// # Panics
+    /// On an empty worker set.
+    pub fn new(workers: Vec<PooledWorker>) -> WorkerPool {
+        assert!(!workers.is_empty(), "a pool needs at least one worker");
+        WorkerPool {
+            size: workers.len(),
+            free: Mutex::new(workers.into()),
+            available: Condvar::new(),
+        }
+    }
+
+    /// Total workers owned by the pool (idle + leased).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Idle workers right now (diagnostic; racy by nature).
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    /// Block until `k` workers are free, then take them all at once.
+    ///
+    /// # Panics
+    /// If `k` exceeds the pool size (would deadlock) or `k == 0`.
+    pub fn acquire(&self, k: usize) -> Vec<PooledWorker> {
+        assert!(k >= 1, "acquire(0) is meaningless");
+        assert!(k <= self.size, "acquire({k}) from a pool of {}", self.size);
+        let mut free = self.free.lock().unwrap();
+        while free.len() < k {
+            free = self.available.wait(free).unwrap();
+        }
+        free.drain(..k).collect()
+    }
+
+    /// Return leased workers and wake waiting lanes.
+    pub fn release(&self, workers: Vec<PooledWorker>) {
+        let mut free = self.free.lock().unwrap();
+        free.extend(workers);
+        drop(free);
+        self.available.notify_all();
+    }
+
+    /// Tear the pool down, handing every idle worker back (used for
+    /// orderly shutdown: callers typically send `Request::Shutdown` to
+    /// each endpoint). Leased workers must be released first.
+    pub fn into_workers(self) -> Vec<PooledWorker> {
+        self.free.into_inner().unwrap().into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::verde::protocol::{Request, Response};
+
+    struct Nop;
+
+    impl Endpoint for Nop {
+        fn name(&self) -> &str {
+            "nop"
+        }
+        fn call(&mut self, _req: Request) -> Response {
+            Response::Bye
+        }
+    }
+
+    #[test]
+    fn acquire_release_roundtrip() {
+        let pool = WorkerPool::new((0..4).map(|i| PooledWorker::new(&format!("w{i}"), Nop)).collect());
+        assert_eq!(pool.size(), 4);
+        let lease = pool.acquire(3);
+        assert_eq!(lease.len(), 3);
+        assert_eq!(pool.idle(), 1);
+        pool.release(lease);
+        assert_eq!(pool.idle(), 4);
+        assert_eq!(pool.into_workers().len(), 4);
+    }
+
+    #[test]
+    fn blocked_acquire_wakes_on_release() {
+        use std::sync::Arc;
+        let pool = Arc::new(WorkerPool::new(
+            (0..2).map(|i| PooledWorker::new(&format!("w{i}"), Nop)).collect(),
+        ));
+        let lease = pool.acquire(2);
+        let p2 = Arc::clone(&pool);
+        let waiter = std::thread::spawn(move || p2.acquire(2).len());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        pool.release(lease);
+        assert_eq!(waiter.join().unwrap(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "acquire(3) from a pool of 2")]
+    fn oversubscription_panics_rather_than_deadlocks() {
+        let pool = WorkerPool::new((0..2).map(|i| PooledWorker::new(&format!("w{i}"), Nop)).collect());
+        pool.acquire(3);
+    }
+}

@@ -1,0 +1,273 @@
+//! The worker-process brain: accepts job assignments over the protocol and
+//! answers dispute queries for the active job.
+//!
+//! A [`WorkerHost`] is configured once (at process/actor start) with a
+//! [`FaultPlan`] — honest, or one of the trainer faults with per-job
+//! placement resolved lazily against each delegated [`JobSpec`]. This
+//! mirrors deployment reality: whether a provider cheats is a property of
+//! the provider, not of any single job.
+
+use std::fmt;
+
+use crate::graph::kernels::Backend;
+use crate::net::Endpoint;
+use crate::train::session::Session;
+use crate::train::JobSpec;
+use crate::util::metrics::Counters;
+use crate::verde::faults::{first_mutable_node, first_update_node, Fault};
+use crate::verde::protocol::{Request, Response};
+use crate::verde::trainer::TrainerNode;
+
+/// A job-independent fault recipe; concrete node/step targets are resolved
+/// against each delegated job's spec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultPlan {
+    Honest,
+    /// Perturb the first parameter-update output at `step`.
+    Tamper { step: Option<u64>, delta: f32 },
+    /// Run an impostor operator at the first mutable node at `step`.
+    WrongOperator { step: Option<u64> },
+    /// Substitute the data batch at `step`.
+    WrongData { step: Option<u64> },
+    /// Skip the optimizer update at `step`.
+    SkipOptimizer { step: Option<u64> },
+    /// Stop computing after `after` steps.
+    SkipSteps { after: Option<u64> },
+    /// Forge one input's lineage at the first MatMul at `step`.
+    ForgedLineage { step: Option<u64> },
+    /// Commit inconsistently between Phase 1 and Phase 2 at `step`.
+    InconsistentCommit { step: Option<u64> },
+}
+
+impl FaultPlan {
+    /// Parse CLI syntax: `none` | `kind` | `kind@step`, with kinds
+    /// `tamper`, `wrong-op`, `wrong-data`, `skip-opt`, `skip-steps`,
+    /// `forged-lineage`, `inconsistent`.
+    pub fn parse(s: &str) -> Option<FaultPlan> {
+        let (kind, step) = match s.split_once('@') {
+            Some((k, v)) => (k, Some(v.parse::<u64>().ok()?)),
+            None => (s, None),
+        };
+        Some(match kind {
+            "none" | "honest" => FaultPlan::Honest,
+            "tamper" => FaultPlan::Tamper { step, delta: 0.05 },
+            "wrong-op" => FaultPlan::WrongOperator { step },
+            "wrong-data" => FaultPlan::WrongData { step },
+            "skip-opt" => FaultPlan::SkipOptimizer { step },
+            "skip-steps" => FaultPlan::SkipSteps { after: step },
+            "forged-lineage" => FaultPlan::ForgedLineage { step },
+            "inconsistent" => FaultPlan::InconsistentCommit { step },
+            _ => return None,
+        })
+    }
+
+    fn step_for(step: Option<u64>, spec: &JobSpec) -> u64 {
+        step.unwrap_or(spec.steps / 2 + 1).clamp(1, spec.steps.max(1))
+    }
+
+    /// Materialize the plan against a delegated job. Takes the session the
+    /// trainer will run with, so node targets are looked up without a
+    /// second graph/state build.
+    pub fn resolve(&self, session: &Session) -> Fault {
+        let spec = &session.spec;
+        match *self {
+            FaultPlan::Honest => Fault::None,
+            FaultPlan::Tamper { step, delta } => {
+                let node = first_update_node(&session.program)
+                    .expect("preset has no trainable parameters");
+                Fault::TamperOutput { step: Self::step_for(step, spec), node, delta }
+            }
+            FaultPlan::WrongOperator { step } => {
+                let node = first_mutable_node(&session.program.graph)
+                    .expect("preset has no mutable operator");
+                Fault::WrongOperator { step: Self::step_for(step, spec), node }
+            }
+            FaultPlan::WrongData { step } => {
+                Fault::WrongData { step: Self::step_for(step, spec) }
+            }
+            FaultPlan::SkipOptimizer { step } => {
+                Fault::SkipOptimizer { step: Self::step_for(step, spec) }
+            }
+            FaultPlan::SkipSteps { after } => Fault::SkipSteps {
+                after: after.unwrap_or(spec.steps / 2).clamp(1, spec.steps.saturating_sub(1).max(1)),
+            },
+            FaultPlan::ForgedLineage { step } => {
+                let node = session
+                    .program
+                    .graph
+                    .nodes
+                    .iter()
+                    .position(|n| matches!(n.op, crate::graph::Op::MatMul))
+                    .expect("preset has no MatMul");
+                Fault::ForgedLineage { step: Self::step_for(step, spec), node }
+            }
+            FaultPlan::InconsistentCommit { step } => {
+                Fault::InconsistentCommit { step: Self::step_for(step, spec) }
+            }
+        }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultPlan::Honest => write!(f, "honest"),
+            FaultPlan::Tamper { step, delta } => write!(f, "tamper@{step:?} delta={delta}"),
+            FaultPlan::WrongOperator { step } => write!(f, "wrong-op@{step:?}"),
+            FaultPlan::WrongData { step } => write!(f, "wrong-data@{step:?}"),
+            FaultPlan::SkipOptimizer { step } => write!(f, "skip-opt@{step:?}"),
+            FaultPlan::SkipSteps { after } => write!(f, "skip-steps@{after:?}"),
+            FaultPlan::ForgedLineage { step } => write!(f, "forged-lineage@{step:?}"),
+            FaultPlan::InconsistentCommit { step } => write!(f, "inconsistent@{step:?}"),
+        }
+    }
+}
+
+/// Endpoint served by a worker process/actor: `Train` assigns a job, every
+/// other request addresses the active job's trainer.
+pub struct WorkerHost {
+    name: String,
+    plan: FaultPlan,
+    backend: Backend,
+    active: Option<TrainerNode>,
+    pub counters: Counters,
+}
+
+impl WorkerHost {
+    pub fn new(name: &str, plan: FaultPlan) -> WorkerHost {
+        WorkerHost {
+            name: name.to_string(),
+            plan,
+            backend: Backend::Rep,
+            active: None,
+            counters: Counters::new(),
+        }
+    }
+
+    pub fn with_backend(mut self, backend: Backend) -> WorkerHost {
+        self.backend = backend;
+        self
+    }
+
+    pub fn plan(&self) -> FaultPlan {
+        self.plan
+    }
+}
+
+impl Endpoint for WorkerHost {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn call(&mut self, req: Request) -> Response {
+        match req {
+            Request::Train { spec } => {
+                // Drop the previous job before training so a failure can
+                // never leave a stale job answering dispute queries.
+                self.active = None;
+                let session = Session::new(spec);
+                let fault = self.plan.resolve(&session);
+                let mut trainer =
+                    TrainerNode::with_session(&self.name, session, self.backend, fault);
+                let commit = trainer.train();
+                self.counters.incr("jobs_trained");
+                self.counters.add("steps_trained", spec.steps);
+                self.active = Some(trainer);
+                Response::Commit(commit)
+            }
+            Request::Shutdown => Response::Bye,
+            other => match &mut self.active {
+                Some(trainer) => trainer.call(other),
+                None => Response::Refuse(format!("{}: no active job", self.name)),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Preset;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(FaultPlan::parse("none"), Some(FaultPlan::Honest));
+        assert_eq!(
+            FaultPlan::parse("tamper@3"),
+            Some(FaultPlan::Tamper { step: Some(3), delta: 0.05 })
+        );
+        assert_eq!(
+            FaultPlan::parse("skip-steps@2"),
+            Some(FaultPlan::SkipSteps { after: Some(2) })
+        );
+        assert_eq!(FaultPlan::parse("wrong-data"), Some(FaultPlan::WrongData { step: None }));
+        assert_eq!(FaultPlan::parse("nonsense"), None);
+        assert_eq!(FaultPlan::parse("tamper@x"), None);
+    }
+
+    #[test]
+    fn host_trains_and_answers_dispute_queries() {
+        let spec = JobSpec::quick(Preset::Mlp, 5);
+        let mut host = WorkerHost::new("w0", FaultPlan::Honest);
+        // no job yet: dispute queries are refused
+        assert!(matches!(
+            host.call(Request::NodeHashSeq { step: 1 }),
+            Response::Refuse(_)
+        ));
+        let commit = match host.call(Request::Train { spec }) {
+            Response::Commit(h) => h,
+            other => panic!("{other:?}"),
+        };
+        let honest = TrainerNode::honest("ref", spec).train();
+        assert_eq!(commit, honest);
+        // dispute queries now hit the active job
+        match host.call(Request::FinalCommit) {
+            Response::Commit(h) => assert_eq!(h, commit),
+            other => panic!("{other:?}"),
+        }
+        match host.call(Request::NodeHashSeq { step: 2 }) {
+            Response::NodeSeq(seq) => assert!(!seq.is_empty()),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(host.counters.get("jobs_trained"), 1);
+    }
+
+    #[test]
+    fn faulty_plan_diverges_from_honest() {
+        let spec = JobSpec::quick(Preset::Mlp, 6);
+        let honest = TrainerNode::honest("ref", spec).train();
+        for plan in [
+            FaultPlan::Tamper { step: Some(2), delta: 0.05 },
+            FaultPlan::WrongData { step: Some(3) },
+            FaultPlan::SkipSteps { after: Some(2) },
+        ] {
+            let mut host = WorkerHost::new("w", plan);
+            match host.call(Request::Train { spec }) {
+                Response::Commit(h) => assert_ne!(h, honest, "{plan}"),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn new_job_replaces_old_one() {
+        let a = JobSpec::quick(Preset::Mlp, 4);
+        let mut b = a;
+        b.data_seed ^= 0x5555;
+        let mut host = WorkerHost::new("w", FaultPlan::Honest);
+        let ca = match host.call(Request::Train { spec: a }) {
+            Response::Commit(h) => h,
+            other => panic!("{other:?}"),
+        };
+        let cb = match host.call(Request::Train { spec: b }) {
+            Response::Commit(h) => h,
+            other => panic!("{other:?}"),
+        };
+        assert_ne!(ca, cb);
+        match host.call(Request::FinalCommit) {
+            Response::Commit(h) => assert_eq!(h, cb, "active job is the newest"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(host.counters.get("jobs_trained"), 2);
+    }
+}

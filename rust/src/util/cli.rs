@@ -60,6 +60,13 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Comma-separated list value (`--workers a:1,b:2`); empty when absent.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .map(|v| v.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect())
+            .unwrap_or_default()
+    }
+
     pub fn get_f32(&self, name: &str, default: f32) -> f32 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants a float, got '{v}'")))
@@ -86,6 +93,13 @@ mod tests {
         assert!(a.flag("verbose"));
         assert_eq!(a.get_usize("steps", 0), 100);
         assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn list_values_split_on_commas() {
+        let a = parse("coordinator --workers 127.0.0.1:7000,127.0.0.1:7001");
+        assert_eq!(a.get_list("workers"), vec!["127.0.0.1:7000", "127.0.0.1:7001"]);
+        assert!(a.get_list("absent").is_empty());
     }
 
     #[test]

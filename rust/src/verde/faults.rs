@@ -103,6 +103,15 @@ pub fn first_mutable_node(graph: &crate::graph::Graph) -> Option<NodeId> {
     graph.nodes.iter().position(|n| mutate_op(&n.op).is_some())
 }
 
+/// The first (lowest-id) parameter-update node of a training program — the
+/// canonical `TamperOutput` target: perturbing an update output is
+/// guaranteed to diverge the committed state (an activation tamper can be
+/// swallowed by a ReLU). Shared by the CLI, the service's fault plans, and
+/// tests so they can never drift apart.
+pub fn first_update_node(program: &crate::graph::autodiff::TrainStep) -> Option<NodeId> {
+    program.param_updates.values().map(|s| s.node).min()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -23,6 +23,7 @@ pub mod protocol;
 pub mod referee;
 pub mod tournament;
 pub mod trainer;
+pub mod wire;
 
 pub use dispute::{run_dispute, DisputeReport};
 pub use faults::Fault;

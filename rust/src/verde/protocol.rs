@@ -1,13 +1,21 @@
-//! Protocol messages between the referee and trainers, with wire-size
-//! models for communication accounting (the paper's "only short hashes are
-//! communicated" claim is measured, not assumed).
+//! Protocol messages between the referee/coordinator and trainers.
+//!
+//! Wire sizes are no longer modeled: [`Request::wire_size`] and
+//! [`Response::wire_size`] are defined as the exact length of the canonical
+//! encoding produced by [`super::wire`], so the paper's "only short hashes
+//! are communicated" claim is measured against real bytes. Tests here and
+//! the property suite in `rust/tests/wire_props.rs` pin
+//! `wire_size() == encode().len()` permanently.
 
 use crate::graph::executor::AugmentedCGNode;
 use crate::hash::merkle::MerkleProof;
 use crate::hash::Hash;
 use crate::tensor::Tensor;
+use crate::train::JobSpec;
 
-/// Referee → trainer requests.
+use super::wire;
+
+/// Referee/coordinator → trainer requests.
 #[derive(Debug, Clone)]
 pub enum Request {
     /// The trainer's commitment to its final checkpoint.
@@ -25,7 +33,11 @@ pub enum Request {
     InputProof { step: u64, node_idx: usize },
     /// A full input tensor of a disputed node (Case 3 recomputation).
     InputTensor { step: u64, node_idx: usize, input_idx: usize },
-    /// End the conversation (threaded transport).
+    /// Delegate a training job to a worker (service layer): run it to
+    /// completion and answer with the final commitment. Subsequent dispute
+    /// requests on the same connection address this job.
+    Train { spec: JobSpec },
+    /// End the conversation (stream/threaded transports).
     Shutdown,
 }
 
@@ -41,17 +53,13 @@ pub enum InputProvenance {
 }
 
 impl InputProvenance {
+    /// Exact encoded size in bytes (discriminant included).
     pub fn wire_size(&self) -> usize {
-        match self {
-            InputProvenance::Genesis { proof, .. } => 32 + proof.byte_len(),
-            InputProvenance::PrevStep { node, proof, .. } => {
-                node.byte_len() + 8 + proof.byte_len()
-            }
-        }
+        wire::provenance_wire_len(self)
     }
 }
 
-/// Trainer → referee responses.
+/// Trainer → referee/coordinator responses.
 #[derive(Debug, Clone)]
 pub enum Response {
     Commit(Hash),
@@ -66,53 +74,68 @@ pub enum Response {
 }
 
 impl Request {
-    /// Modeled wire size in bytes (tag + payload).
+    /// Exact wire size in bytes: `self.encode().len()` by definition.
     pub fn wire_size(&self) -> usize {
-        1 + match self {
-            Request::FinalCommit | Request::Shutdown => 0,
-            Request::CheckpointHashes { boundaries } => 8 * boundaries.len(),
-            Request::NodeHashSeq { .. } => 8,
-            Request::OpenNode { .. } => 16,
-            Request::InputProof { .. } => 16,
-            Request::InputTensor { .. } => 24,
-        }
+        wire::request_wire_len(self)
     }
 }
 
 impl Response {
+    /// Exact wire size in bytes: `self.encode().len()` by definition.
     pub fn wire_size(&self) -> usize {
-        1 + match self {
-            Response::Commit(_) => 32,
-            Response::Hashes(h) => 32 * h.len(),
-            Response::NodeSeq(h) => 32 * h.len(),
-            Response::Node(n) => n.byte_len(),
-            Response::Proof(p) => p.wire_size(),
-            Response::TensorPayload(t) => 8 + 8 * t.rank() + t.byte_len(),
-            Response::Refuse(s) => s.len(),
-            Response::Bye => 0,
-        }
+        wire::response_wire_len(self)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::Preset;
 
     #[test]
     fn wire_sizes_scale_with_payload() {
         let small = Response::Hashes(vec![Hash::ZERO; 2]);
         let big = Response::Hashes(vec![Hash::ZERO; 20]);
         assert!(big.wire_size() > small.wire_size());
-        assert_eq!(big.wire_size(), 1 + 640);
+        // tag + u64 count + 20 digests
+        assert_eq!(big.wire_size(), 1 + 8 + 640);
 
         let t = Tensor::zeros([16, 16]);
         let payload = Response::TensorPayload(t);
         assert!(payload.wire_size() > 1024);
 
         assert_eq!(Request::FinalCommit.wire_size(), 1);
+        // tag + u64 count + 3 × u64 boundary
         assert_eq!(
             Request::CheckpointHashes { boundaries: vec![1, 2, 3] }.wire_size(),
-            25
+            33
         );
+    }
+
+    #[test]
+    fn wire_size_equals_encoded_length() {
+        let reqs = [
+            Request::FinalCommit,
+            Request::CheckpointHashes { boundaries: vec![4, 8, 15, 16, 23, 42] },
+            Request::NodeHashSeq { step: 3 },
+            Request::OpenNode { step: 3, idx: 9 },
+            Request::InputProof { step: 2, node_idx: 1 },
+            Request::InputTensor { step: 2, node_idx: 1, input_idx: 0 },
+            Request::Train { spec: JobSpec::quick(Preset::LlamaTiny, 64) },
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            assert_eq!(r.wire_size(), r.encode().len(), "{r:?}");
+        }
+        let resps = [
+            Response::Commit(Hash::ZERO),
+            Response::Hashes(vec![Hash::ZERO; 7]),
+            Response::TensorPayload(Tensor::rand([4, 5], 1, 1.0)),
+            Response::Refuse("why".into()),
+            Response::Bye,
+        ];
+        for r in resps {
+            assert_eq!(r.wire_size(), r.encode().len(), "{r:?}");
+        }
     }
 }

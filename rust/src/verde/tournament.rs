@@ -2,14 +2,21 @@
 //! outputs merge; distinct claims are resolved pairwise, the survivor
 //! carrying forward. An honest participant can never be eliminated, so the
 //! surviving claim is correct whenever at least one trainer is honest.
+//!
+//! The tournament is generic over [`Endpoint`], so the same knockout runs
+//! against in-process [`TrainerNode`](crate::verde::trainer::TrainerNode)s,
+//! thread actors ([`crate::net::threaded::Remote`]), or remote worker
+//! processes over TCP ([`crate::net::tcp::TcpEndpoint`]) — the service
+//! layer's deployment shape.
 
 use std::collections::BTreeMap;
 
 use crate::hash::Hash;
+use crate::net::Endpoint;
 use crate::train::JobSpec;
 use crate::verde::dispute::run_dispute;
+use crate::verde::protocol::{Request, Response};
 use crate::verde::referee::Verdict;
-use crate::verde::trainer::TrainerNode;
 
 /// Outcome of a k-trainer tournament.
 #[derive(Debug)]
@@ -20,34 +27,52 @@ pub struct TournamentReport {
     pub accepted: Hash,
     /// Trainers proven dishonest, with the dispute verdicts that convicted
     /// them (merged trainers share their representative's fate only for
-    /// accounting — identical claims are indistinguishable).
+    /// accounting — identical claims are indistinguishable). Trainers that
+    /// refuse to produce a final commitment at all are eliminated up front
+    /// with a `Misbehaved` verdict.
     pub eliminated: Vec<(usize, Verdict)>,
     /// Number of pairwise disputes run (≤ distinct-claims − 1).
     pub disputes: usize,
 }
 
-/// Run the tournament. Trainers are borrowed — each dispute requires the
-/// participants to serve re-execution queries, and survivors go on to later
-/// rounds with their caches warm.
+/// Run the tournament over any endpoints. Final commitments are collected
+/// via [`Request::FinalCommit`]; each dispute requires the participants to
+/// serve re-execution queries, and survivors go on to later rounds with
+/// their caches warm.
 ///
 /// # Panics
-/// If `trainers` is empty or a dispute between distinct claims ends without
-/// a conviction (impossible under the protocol's assumptions).
-pub fn run_tournament(spec: JobSpec, trainers: &mut [TrainerNode]) -> TournamentReport {
+/// If `trainers` is empty, if every trainer refuses to commit, or if a
+/// dispute between distinct claims ends without a conviction (impossible
+/// under the protocol's assumptions).
+pub fn run_tournament<E: Endpoint>(spec: JobSpec, trainers: &mut [E]) -> TournamentReport {
     assert!(!trainers.is_empty());
-    // collect claims
-    let claims: Vec<Hash> = trainers.iter_mut().map(|t| t.final_commit()).collect();
+    // collect claims; refusal to commit is an immediate elimination
+    let mut eliminated: Vec<(usize, Verdict)> = Vec::new();
+    let mut claims: Vec<Option<Hash>> = Vec::with_capacity(trainers.len());
+    for (i, t) in trainers.iter_mut().enumerate() {
+        match t.call(Request::FinalCommit) {
+            Response::Commit(h) => claims.push(Some(h)),
+            other => {
+                claims.push(None);
+                eliminated.push((i, Verdict::misbehaved(i, format!("no final commitment: {other:?}"))));
+            }
+        }
+    }
 
     // merge identical claims: keep the first trainer per distinct claim
     let mut groups: BTreeMap<Hash, Vec<usize>> = BTreeMap::new();
     for (i, c) in claims.iter().enumerate() {
-        groups.entry(*c).or_default().push(i);
+        if let Some(c) = c {
+            groups.entry(*c).or_default().push(i);
+        }
     }
+    assert!(!groups.is_empty(), "every trainer refused to commit");
     if groups.len() == 1 {
+        let winner = groups.values().next().unwrap()[0];
         return TournamentReport {
-            winner: 0,
-            accepted: claims[0],
-            eliminated: Vec::new(),
+            winner,
+            accepted: claims[winner].unwrap(),
+            eliminated,
             disputes: 0,
         };
     }
@@ -56,7 +81,6 @@ pub fn run_tournament(spec: JobSpec, trainers: &mut [TrainerNode]) -> Tournament
     let mut reps: Vec<usize> = groups.values().map(|g| g[0]).collect();
     reps.sort();
 
-    let mut eliminated = Vec::new();
     let mut disputes = 0;
     // pairwise knockout: champion vs next challenger
     let mut champion = reps[0];
@@ -95,12 +119,10 @@ pub fn run_tournament(spec: JobSpec, trainers: &mut [TrainerNode]) -> Tournament
         champion = eliminated.last().map(|(i, _)| *i).unwrap_or(0);
     }
 
-    TournamentReport {
-        winner: champion,
-        accepted: claims[champion],
-        eliminated,
-        disputes,
-    }
+    let accepted = claims[champion]
+        .or_else(|| claims.iter().flatten().next().copied())
+        .expect("some claim exists");
+    TournamentReport { winner: champion, accepted, eliminated, disputes }
 }
 
 #[cfg(test)]
@@ -109,6 +131,7 @@ mod tests {
     use crate::graph::kernels::Backend;
     use crate::model::Preset;
     use crate::verde::faults::Fault;
+    use crate::verde::trainer::TrainerNode;
 
     fn mk(spec: JobSpec, fault: Fault, name: &str) -> TrainerNode {
         let mut t = TrainerNode::new(name, spec, Backend::Rep, fault);
@@ -172,5 +195,51 @@ mod tests {
         let r = run_tournament(spec, &mut ts);
         assert_eq!(r.accepted, honest_commit);
         assert_eq!(r.disputes, 1, "identical claims merged into one dispute");
+    }
+
+    /// A party that refuses even to commit is eliminated without a dispute.
+    struct Refusenik;
+
+    impl Endpoint for Refusenik {
+        fn name(&self) -> &str {
+            "refusenik"
+        }
+        fn call(&mut self, _req: Request) -> Response {
+            Response::Refuse("not playing".into())
+        }
+    }
+
+    #[test]
+    fn refusing_endpoint_is_eliminated_without_dispute() {
+        enum Party {
+            Node(TrainerNode),
+            Refuse(Refusenik),
+        }
+        impl Endpoint for Party {
+            fn name(&self) -> &str {
+                match self {
+                    Party::Node(t) => t.name(),
+                    Party::Refuse(r) => r.name(),
+                }
+            }
+            fn call(&mut self, req: Request) -> Response {
+                match self {
+                    Party::Node(t) => t.call(req),
+                    Party::Refuse(r) => r.call(req),
+                }
+            }
+        }
+        let spec = JobSpec::quick(Preset::Mlp, 5);
+        let honest_commit = mk(spec, Fault::None, "h").final_commit();
+        let mut parties = vec![
+            Party::Refuse(Refusenik),
+            Party::Node(mk(spec, Fault::None, "h")),
+        ];
+        let r = run_tournament(spec, &mut parties);
+        assert_eq!(r.accepted, honest_commit);
+        assert_eq!(r.winner, 1);
+        assert_eq!(r.disputes, 0, "one real claim, nothing to dispute");
+        assert_eq!(r.eliminated.len(), 1);
+        assert_eq!(r.eliminated[0].0, 0);
     }
 }

@@ -48,7 +48,12 @@ pub struct TrainerNode {
 
 impl TrainerNode {
     pub fn new(name: &str, spec: JobSpec, backend: Backend, fault: Fault) -> TrainerNode {
-        let session = Session::new(spec);
+        Self::with_session(name, Session::new(spec), backend, fault)
+    }
+
+    /// Build from an already-constructed session (callers that needed the
+    /// session to pick fault targets avoid a second graph/state build).
+    pub fn with_session(name: &str, session: Session, backend: Backend, fault: Fault) -> TrainerNode {
         TrainerNode {
             name: name.to_string(),
             session,
@@ -398,6 +403,11 @@ impl Endpoint for TrainerNode {
                 };
                 let values = self.values_at(step);
                 Response::TensorPayload(values[slot.node][slot.out_idx].clone())
+            }
+            Request::Train { .. } => {
+                // A TrainerNode is bound to one job at construction; job
+                // delegation is handled by `service::worker::WorkerHost`.
+                Response::Refuse("trainer is bound to a single job".into())
             }
             Request::Shutdown => Response::Bye,
         }

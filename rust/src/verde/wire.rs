@@ -1,0 +1,809 @@
+//! The protocol's real wire format: a canonical length-prefixed binary
+//! codec for every message the referee, coordinator, and trainers exchange,
+//! plus frame I/O for stream transports ([`crate::net::tcp`]).
+//!
+//! Design rules:
+//!
+//! * **Canonical** — one valid encoding per value; `decode(encode(x))`
+//!   reproduces `x` bit-exactly and `encode(decode(b)) == b` for any
+//!   accepted `b`. Communication accounting can therefore use
+//!   [`Request::wire_size`] / [`Response::wire_size`], which are defined to
+//!   equal `encode().len()` exactly (enforced by tests here and by the
+//!   property suite in `rust/tests/wire_props.rs`).
+//! * **Total** — decoding never panics on hostile bytes: truncated,
+//!   corrupted, or oversized input returns a [`WireError`]. Trainers are
+//!   untrusted; the referee parses their bytes with this codec.
+//! * **Simple** — fixed-width little-endian integers, 32-byte raw digests,
+//!   `u64` element counts before every variable-length sequence. No
+//!   varints, no compression, no reflection.
+//!
+//! Frame format on stream transports: `u32 LE payload length ‖ payload`,
+//! with payloads capped at [`MAX_FRAME`] bytes.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+use crate::graph::autodiff::Optimizer;
+use crate::graph::executor::AugmentedCGNode;
+use crate::hash::merkle::MerkleProof;
+use crate::hash::Hash;
+use crate::model::Preset;
+use crate::tensor::Tensor;
+use crate::train::JobSpec;
+
+use super::protocol::{InputProvenance, Request, Response};
+
+/// Maximum frame payload a peer may send (256 MiB) — bounds allocation on
+/// hostile length prefixes while leaving room for full-tensor payloads.
+pub const MAX_FRAME: usize = 1 << 28;
+
+/// Maximum tensor elements accepted by the decoder (payload ≤ [`MAX_FRAME`]).
+const MAX_TENSOR_ELEMS: usize = MAX_FRAME / 4;
+
+/// Maximum tensor rank accepted by the decoder.
+const MAX_RANK: usize = 8;
+
+// Message tags. Requests and responses share one tag space so a stray
+// response can never parse as a request (and vice versa).
+const REQ_FINAL_COMMIT: u8 = 0x01;
+const REQ_CHECKPOINT_HASHES: u8 = 0x02;
+const REQ_NODE_HASH_SEQ: u8 = 0x03;
+const REQ_OPEN_NODE: u8 = 0x04;
+const REQ_INPUT_PROOF: u8 = 0x05;
+const REQ_INPUT_TENSOR: u8 = 0x06;
+const REQ_SHUTDOWN: u8 = 0x07;
+const REQ_TRAIN: u8 = 0x08;
+
+const RESP_COMMIT: u8 = 0x81;
+const RESP_HASHES: u8 = 0x82;
+const RESP_NODE_SEQ: u8 = 0x83;
+const RESP_NODE: u8 = 0x84;
+const RESP_PROOF: u8 = 0x85;
+const RESP_TENSOR: u8 = 0x86;
+const RESP_REFUSE: u8 = 0x87;
+const RESP_BYE: u8 = 0x88;
+
+const PROV_GENESIS: u8 = 0x01;
+const PROV_PREV_STEP: u8 = 0x02;
+
+const OPT_ADAM: u8 = 0x01;
+const OPT_SGD: u8 = 0x02;
+
+/// Everything that can go wrong decoding hostile bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ended before the structure did.
+    Truncated { context: &'static str, need: usize, have: usize },
+    /// An unknown discriminant byte.
+    BadTag { context: &'static str, tag: u8 },
+    /// The structure ended before the buffer did (non-canonical encoding).
+    Trailing { extra: usize },
+    /// A field value violates an invariant (bad UTF-8, unknown preset,
+    /// absurd rank/length, ...).
+    Malformed { context: &'static str },
+    /// A frame length prefix exceeded [`MAX_FRAME`].
+    FrameTooLarge { len: usize },
+    /// Underlying transport failure while framing.
+    Io(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated { context, need, have } => {
+                write!(f, "truncated at {context}: need {need} bytes, have {have}")
+            }
+            WireError::BadTag { context, tag } => write!(f, "bad tag {tag:#04x} at {context}"),
+            WireError::Trailing { extra } => write!(f, "{extra} trailing bytes after message"),
+            WireError::Malformed { context } => write!(f, "malformed field: {context}"),
+            WireError::FrameTooLarge { len } => {
+                write!(f, "frame of {len} bytes exceeds cap {MAX_FRAME}")
+            }
+            WireError::Io(e) => write!(f, "transport: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---------------------------------------------------------------------------
+// primitive writers
+// ---------------------------------------------------------------------------
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_hash(out: &mut Vec<u8>, h: &Hash) {
+    out.extend_from_slice(&h.0);
+}
+
+fn put_hashes(out: &mut Vec<u8>, hs: &[Hash]) {
+    put_u64(out, hs.len() as u64);
+    for h in hs {
+        put_hash(out, h);
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// primitive reader
+// ---------------------------------------------------------------------------
+
+/// Cursor over an untrusted byte buffer; every accessor is total.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, context: &'static str) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { context, need: n, have: self.remaining() });
+        }
+        let slice = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(slice)
+    }
+
+    pub fn u8(&mut self, context: &'static str) -> Result<u8, WireError> {
+        Ok(self.take(1, context)?[0])
+    }
+
+    pub fn u64(&mut self, context: &'static str) -> Result<u64, WireError> {
+        let b = self.take(8, context)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    pub fn f32(&mut self, context: &'static str) -> Result<f32, WireError> {
+        let b = self.take(4, context)?;
+        Ok(f32::from_le_bytes(b.try_into().expect("4 bytes")))
+    }
+
+    pub fn usize(&mut self, context: &'static str) -> Result<usize, WireError> {
+        let v = self.u64(context)?;
+        usize::try_from(v).map_err(|_| WireError::Malformed { context })
+    }
+
+    pub fn hash(&mut self, context: &'static str) -> Result<Hash, WireError> {
+        let b = self.take(32, context)?;
+        Ok(Hash(b.try_into().expect("32 bytes")))
+    }
+
+    pub fn hashes(&mut self, context: &'static str) -> Result<Vec<Hash>, WireError> {
+        let n = self.usize(context)?;
+        if n > self.remaining() / 32 {
+            return Err(WireError::Truncated {
+                context,
+                need: n.saturating_mul(32),
+                have: self.remaining(),
+            });
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.hash(context)?);
+        }
+        Ok(out)
+    }
+
+    pub fn str(&mut self, context: &'static str) -> Result<String, WireError> {
+        let n = self.usize(context)?;
+        let bytes = self.take(n, context)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::Malformed { context })
+    }
+
+    /// Assert full consumption — rejects non-canonical padded encodings.
+    pub fn finish(self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::Trailing { extra: self.remaining() });
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// composite codecs
+// ---------------------------------------------------------------------------
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    put_u64(out, t.rank() as u64);
+    for &d in t.shape() {
+        put_u64(out, d as u64);
+    }
+    out.extend_from_slice(&t.to_le_bytes());
+}
+
+fn read_tensor(r: &mut Reader<'_>) -> Result<Tensor, WireError> {
+    let rank = r.usize("tensor.rank")?;
+    if rank > MAX_RANK {
+        return Err(WireError::Malformed { context: "tensor.rank" });
+    }
+    let mut shape = Vec::with_capacity(rank);
+    let mut numel: usize = 1;
+    for _ in 0..rank {
+        let d = r.usize("tensor.dim")?;
+        numel = numel
+            .checked_mul(d)
+            .filter(|&n| n <= MAX_TENSOR_ELEMS)
+            .ok_or(WireError::Malformed { context: "tensor.numel" })?;
+        shape.push(d);
+    }
+    let bytes = r.take(numel * 4, "tensor.data")?;
+    Ok(Tensor::from_le_bytes(shape, bytes))
+}
+
+pub fn tensor_wire_len(t: &Tensor) -> usize {
+    8 + 8 * t.rank() + t.byte_len()
+}
+
+fn put_proof(out: &mut Vec<u8>, p: &MerkleProof) {
+    put_u64(out, p.index as u64);
+    put_hashes(out, &p.siblings);
+}
+
+fn read_proof(r: &mut Reader<'_>) -> Result<MerkleProof, WireError> {
+    let index = r.usize("proof.index")?;
+    let siblings = r.hashes("proof.siblings")?;
+    Ok(MerkleProof { index, siblings })
+}
+
+fn put_node(out: &mut Vec<u8>, n: &AugmentedCGNode) {
+    put_u64(out, n.id as u64);
+    put_hash(out, &n.structure);
+    put_hashes(out, &n.input_hashes);
+    put_hashes(out, &n.output_hashes);
+}
+
+fn read_node(r: &mut Reader<'_>) -> Result<AugmentedCGNode, WireError> {
+    let id = r.usize("node.id")?;
+    let structure = r.hash("node.structure")?;
+    let input_hashes = r.hashes("node.inputs")?;
+    let output_hashes = r.hashes("node.outputs")?;
+    Ok(AugmentedCGNode { id, structure, input_hashes, output_hashes })
+}
+
+fn put_provenance(out: &mut Vec<u8>, p: &InputProvenance) {
+    match p {
+        InputProvenance::Genesis { leaf, proof } => {
+            out.push(PROV_GENESIS);
+            put_hash(out, leaf);
+            put_proof(out, proof);
+        }
+        InputProvenance::PrevStep { node, out_idx, proof } => {
+            out.push(PROV_PREV_STEP);
+            put_node(out, node);
+            put_u64(out, *out_idx as u64);
+            put_proof(out, proof);
+        }
+    }
+}
+
+fn read_provenance(r: &mut Reader<'_>) -> Result<InputProvenance, WireError> {
+    match r.u8("provenance.tag")? {
+        PROV_GENESIS => {
+            let leaf = r.hash("provenance.leaf")?;
+            let proof = read_proof(r)?;
+            Ok(InputProvenance::Genesis { leaf, proof })
+        }
+        PROV_PREV_STEP => {
+            let node = read_node(r)?;
+            let out_idx = r.usize("provenance.out_idx")?;
+            let proof = read_proof(r)?;
+            Ok(InputProvenance::PrevStep { node, out_idx, proof })
+        }
+        tag => Err(WireError::BadTag { context: "provenance", tag }),
+    }
+}
+
+/// Encoded size of a provenance value including its discriminant byte.
+pub fn provenance_wire_len(p: &InputProvenance) -> usize {
+    match p {
+        InputProvenance::Genesis { proof, .. } => 1 + 32 + proof.byte_len(),
+        InputProvenance::PrevStep { node, proof, .. } => 1 + node.byte_len() + 8 + proof.byte_len(),
+    }
+}
+
+fn put_optimizer(out: &mut Vec<u8>, o: &Optimizer) {
+    match o {
+        Optimizer::Adam { lr, beta1, beta2, eps } => {
+            out.push(OPT_ADAM);
+            put_f32(out, *lr);
+            put_f32(out, *beta1);
+            put_f32(out, *beta2);
+            put_f32(out, *eps);
+        }
+        Optimizer::Sgd { lr } => {
+            out.push(OPT_SGD);
+            put_f32(out, *lr);
+        }
+    }
+}
+
+fn read_optimizer(r: &mut Reader<'_>) -> Result<Optimizer, WireError> {
+    match r.u8("optimizer.tag")? {
+        OPT_ADAM => Ok(Optimizer::Adam {
+            lr: r.f32("optimizer.lr")?,
+            beta1: r.f32("optimizer.beta1")?,
+            beta2: r.f32("optimizer.beta2")?,
+            eps: r.f32("optimizer.eps")?,
+        }),
+        OPT_SGD => Ok(Optimizer::Sgd { lr: r.f32("optimizer.lr")? }),
+        tag => Err(WireError::BadTag { context: "optimizer", tag }),
+    }
+}
+
+fn optimizer_wire_len(o: &Optimizer) -> usize {
+    match o {
+        Optimizer::Adam { .. } => 1 + 16,
+        Optimizer::Sgd { .. } => 1 + 4,
+    }
+}
+
+fn put_spec(out: &mut Vec<u8>, s: &JobSpec) {
+    put_str(out, s.preset.name());
+    put_u64(out, s.batch as u64);
+    put_u64(out, s.seq as u64);
+    put_u64(out, s.steps);
+    put_optimizer(out, &s.optimizer);
+    put_u64(out, s.weight_seed);
+    put_u64(out, s.data_seed);
+    put_u64(out, s.checkpoint_n);
+}
+
+fn read_spec(r: &mut Reader<'_>) -> Result<JobSpec, WireError> {
+    let name = r.str("spec.preset")?;
+    let preset = Preset::parse(&name).ok_or(WireError::Malformed { context: "spec.preset" })?;
+    let batch = r.usize("spec.batch")?;
+    let seq = r.usize("spec.seq")?;
+    if batch == 0 || batch > 1 << 20 || seq == 0 || seq > 1 << 20 {
+        return Err(WireError::Malformed { context: "spec.shape" });
+    }
+    let steps = r.u64("spec.steps")?;
+    if steps == 0 {
+        // A zero-step job would panic the checkpoint scheduler — reject at
+        // the trust boundary, not inside the worker.
+        return Err(WireError::Malformed { context: "spec.steps" });
+    }
+    let optimizer = read_optimizer(r)?;
+    let weight_seed = r.u64("spec.weight_seed")?;
+    let data_seed = r.u64("spec.data_seed")?;
+    let checkpoint_n = r.u64("spec.checkpoint_n")?;
+    Ok(JobSpec { preset, batch, seq, steps, optimizer, weight_seed, data_seed, checkpoint_n })
+}
+
+fn spec_wire_len(s: &JobSpec) -> usize {
+    (8 + s.preset.name().len()) + 8 * 3 + optimizer_wire_len(&s.optimizer) + 8 * 3
+}
+
+// ---------------------------------------------------------------------------
+// messages
+// ---------------------------------------------------------------------------
+
+impl Request {
+    /// Canonical wire encoding (tag ‖ payload, no frame prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_size());
+        match self {
+            Request::FinalCommit => out.push(REQ_FINAL_COMMIT),
+            Request::CheckpointHashes { boundaries } => {
+                out.push(REQ_CHECKPOINT_HASHES);
+                put_u64(&mut out, boundaries.len() as u64);
+                for &b in boundaries {
+                    put_u64(&mut out, b);
+                }
+            }
+            Request::NodeHashSeq { step } => {
+                out.push(REQ_NODE_HASH_SEQ);
+                put_u64(&mut out, *step);
+            }
+            Request::OpenNode { step, idx } => {
+                out.push(REQ_OPEN_NODE);
+                put_u64(&mut out, *step);
+                put_u64(&mut out, *idx as u64);
+            }
+            Request::InputProof { step, node_idx } => {
+                out.push(REQ_INPUT_PROOF);
+                put_u64(&mut out, *step);
+                put_u64(&mut out, *node_idx as u64);
+            }
+            Request::InputTensor { step, node_idx, input_idx } => {
+                out.push(REQ_INPUT_TENSOR);
+                put_u64(&mut out, *step);
+                put_u64(&mut out, *node_idx as u64);
+                put_u64(&mut out, *input_idx as u64);
+            }
+            Request::Shutdown => out.push(REQ_SHUTDOWN),
+            Request::Train { spec } => {
+                out.push(REQ_TRAIN);
+                put_spec(&mut out, spec);
+            }
+        }
+        debug_assert_eq!(out.len(), self.wire_size(), "wire_size drifted from encoder");
+        out
+    }
+
+    /// Decode a full message; rejects trailing bytes.
+    pub fn decode(buf: &[u8]) -> Result<Request, WireError> {
+        let mut r = Reader::new(buf);
+        let req = match r.u8("request.tag")? {
+            REQ_FINAL_COMMIT => Request::FinalCommit,
+            REQ_CHECKPOINT_HASHES => {
+                let n = r.usize("request.boundaries")?;
+                if n > r.remaining() / 8 {
+                    return Err(WireError::Truncated {
+                        context: "request.boundaries",
+                        need: n.saturating_mul(8),
+                        have: r.remaining(),
+                    });
+                }
+                let mut boundaries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    boundaries.push(r.u64("request.boundary")?);
+                }
+                Request::CheckpointHashes { boundaries }
+            }
+            REQ_NODE_HASH_SEQ => Request::NodeHashSeq { step: r.u64("request.step")? },
+            REQ_OPEN_NODE => Request::OpenNode {
+                step: r.u64("request.step")?,
+                idx: r.usize("request.idx")?,
+            },
+            REQ_INPUT_PROOF => Request::InputProof {
+                step: r.u64("request.step")?,
+                node_idx: r.usize("request.node_idx")?,
+            },
+            REQ_INPUT_TENSOR => Request::InputTensor {
+                step: r.u64("request.step")?,
+                node_idx: r.usize("request.node_idx")?,
+                input_idx: r.usize("request.input_idx")?,
+            },
+            REQ_SHUTDOWN => Request::Shutdown,
+            REQ_TRAIN => Request::Train { spec: read_spec(&mut r)? },
+            tag => return Err(WireError::BadTag { context: "request", tag }),
+        };
+        r.finish()?;
+        Ok(req)
+    }
+}
+
+/// Exact encoded length of a request — the single source of truth for
+/// [`Request::wire_size`].
+pub fn request_wire_len(req: &Request) -> usize {
+    1 + match req {
+        Request::FinalCommit | Request::Shutdown => 0,
+        Request::CheckpointHashes { boundaries } => 8 + 8 * boundaries.len(),
+        Request::NodeHashSeq { .. } => 8,
+        Request::OpenNode { .. } | Request::InputProof { .. } => 16,
+        Request::InputTensor { .. } => 24,
+        Request::Train { spec } => spec_wire_len(spec),
+    }
+}
+
+impl Response {
+    /// Canonical wire encoding (tag ‖ payload, no frame prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_size());
+        match self {
+            Response::Commit(h) => {
+                out.push(RESP_COMMIT);
+                put_hash(&mut out, h);
+            }
+            Response::Hashes(hs) => {
+                out.push(RESP_HASHES);
+                put_hashes(&mut out, hs);
+            }
+            Response::NodeSeq(hs) => {
+                out.push(RESP_NODE_SEQ);
+                put_hashes(&mut out, hs);
+            }
+            Response::Node(n) => {
+                out.push(RESP_NODE);
+                put_node(&mut out, n);
+            }
+            Response::Proof(p) => {
+                out.push(RESP_PROOF);
+                put_provenance(&mut out, p);
+            }
+            Response::TensorPayload(t) => {
+                out.push(RESP_TENSOR);
+                put_tensor(&mut out, t);
+            }
+            Response::Refuse(s) => {
+                out.push(RESP_REFUSE);
+                put_str(&mut out, s);
+            }
+            Response::Bye => out.push(RESP_BYE),
+        }
+        debug_assert_eq!(out.len(), self.wire_size(), "wire_size drifted from encoder");
+        out
+    }
+
+    /// Decode a full message; rejects trailing bytes.
+    pub fn decode(buf: &[u8]) -> Result<Response, WireError> {
+        let mut r = Reader::new(buf);
+        let resp = match r.u8("response.tag")? {
+            RESP_COMMIT => Response::Commit(r.hash("response.commit")?),
+            RESP_HASHES => Response::Hashes(r.hashes("response.hashes")?),
+            RESP_NODE_SEQ => Response::NodeSeq(r.hashes("response.node_seq")?),
+            RESP_NODE => Response::Node(read_node(&mut r)?),
+            RESP_PROOF => Response::Proof(read_provenance(&mut r)?),
+            RESP_TENSOR => Response::TensorPayload(read_tensor(&mut r)?),
+            RESP_REFUSE => Response::Refuse(r.str("response.refuse")?),
+            RESP_BYE => Response::Bye,
+            tag => return Err(WireError::BadTag { context: "response", tag }),
+        };
+        r.finish()?;
+        Ok(resp)
+    }
+}
+
+/// Exact encoded length of a response — the single source of truth for
+/// [`Response::wire_size`].
+pub fn response_wire_len(resp: &Response) -> usize {
+    1 + match resp {
+        Response::Commit(_) => 32,
+        Response::Hashes(hs) | Response::NodeSeq(hs) => 8 + 32 * hs.len(),
+        Response::Node(n) => n.byte_len(),
+        Response::Proof(p) => provenance_wire_len(p),
+        Response::TensorPayload(t) => tensor_wire_len(t),
+        Response::Refuse(s) => 8 + s.len(),
+        Response::Bye => 0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// frame I/O
+// ---------------------------------------------------------------------------
+
+/// Write one `u32 LE length ‖ payload` frame and flush.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    assert!(payload.len() <= MAX_FRAME, "outgoing frame exceeds MAX_FRAME");
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame. `Ok(None)` on clean EOF at a frame boundary; EOF inside
+/// a frame is [`WireError::Truncated`].
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, WireError> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(WireError::Truncated { context: "frame.len", need: 4, have: got })
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e.to_string())),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(WireError::FrameTooLarge { len });
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            WireError::Truncated { context: "frame.payload", need: len, have: 0 }
+        } else {
+            WireError::Io(e.to_string())
+        }
+    })?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn sample_node() -> AugmentedCGNode {
+        AugmentedCGNode {
+            id: 17,
+            structure: Hash::of_bytes(b"structure"),
+            input_hashes: vec![Hash::of_bytes(b"i0"), Hash::of_bytes(b"i1")],
+            output_hashes: vec![Hash::of_bytes(b"o0")],
+        }
+    }
+
+    fn sample_proof(depth: usize) -> MerkleProof {
+        MerkleProof {
+            index: 5,
+            siblings: (0..depth).map(|i| Hash::of_bytes(&[i as u8])).collect(),
+        }
+    }
+
+    fn sample_requests() -> Vec<Request> {
+        vec![
+            Request::FinalCommit,
+            Request::CheckpointHashes { boundaries: vec![1, 2, 3, 99] },
+            Request::CheckpointHashes { boundaries: vec![] },
+            Request::NodeHashSeq { step: 7 },
+            Request::OpenNode { step: 3, idx: 41 },
+            Request::InputProof { step: 9, node_idx: 2 },
+            Request::InputTensor { step: 1, node_idx: 0, input_idx: 3 },
+            Request::Shutdown,
+            Request::Train {
+                spec: crate::train::JobSpec::quick(crate::model::Preset::Mlp, 12),
+            },
+        ]
+    }
+
+    fn sample_responses() -> Vec<Response> {
+        vec![
+            Response::Commit(Hash::of_bytes(b"c")),
+            Response::Hashes(vec![Hash::of_bytes(b"a"); 5]),
+            Response::Hashes(vec![]),
+            Response::NodeSeq(vec![Hash::of_bytes(b"n"); 3]),
+            Response::Node(sample_node()),
+            Response::Proof(InputProvenance::Genesis {
+                leaf: Hash::of_bytes(b"leaf"),
+                proof: sample_proof(6),
+            }),
+            Response::Proof(InputProvenance::PrevStep {
+                node: sample_node(),
+                out_idx: 1,
+                proof: sample_proof(12),
+            }),
+            Response::TensorPayload(Tensor::rand([3, 4, 2], 7, 1.0)),
+            Response::TensorPayload(Tensor::scalar(2.5)),
+            Response::Refuse("nope — not answering".into()),
+            Response::Bye,
+        ]
+    }
+
+    #[test]
+    fn requests_roundtrip_canonically() {
+        for req in sample_requests() {
+            let bytes = req.encode();
+            assert_eq!(bytes.len(), req.wire_size(), "{req:?}");
+            let back = Request::decode(&bytes).unwrap_or_else(|e| panic!("{req:?}: {e}"));
+            assert_eq!(back.encode(), bytes, "{req:?} not canonical");
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip_canonically() {
+        for resp in sample_responses() {
+            let bytes = resp.encode();
+            assert_eq!(bytes.len(), resp.wire_size(), "{resp:?}");
+            let back = Response::decode(&bytes).unwrap_or_else(|e| panic!("{resp:?}: {e}"));
+            assert_eq!(back.encode(), bytes, "{resp:?} not canonical");
+        }
+    }
+
+    #[test]
+    fn tensor_payload_survives_bit_exactly() {
+        let t = Tensor::rand([2, 3, 4], 42, 3.0);
+        let bytes = Response::TensorPayload(t.clone()).encode();
+        match Response::decode(&bytes).unwrap() {
+            Response::TensorPayload(back) => assert!(back.bit_eq(&t)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn job_spec_roundtrips_for_all_presets_and_optimizers() {
+        use crate::graph::autodiff::Optimizer;
+        use crate::model::Preset;
+        for preset in ["mlp", "llama-tiny", "llama-tiny-lora", "llama-small", "bert-tiny"] {
+            for opt in [Optimizer::adam(3e-3), Optimizer::Sgd { lr: 0.5 }] {
+                let mut spec = JobSpec::quick(Preset::parse(preset).unwrap(), 17);
+                spec.optimizer = opt;
+                spec.weight_seed = 0xDEAD_BEEF;
+                let bytes = Request::Train { spec }.encode();
+                match Request::decode(&bytes).unwrap() {
+                    Request::Train { spec: back } => {
+                        assert_eq!(back.preset, spec.preset);
+                        assert_eq!(back.optimizer, spec.optimizer);
+                        assert_eq!(back.steps, spec.steps);
+                        assert_eq!(back.weight_seed, spec.weight_seed);
+                        assert_eq!(back.data_seed, spec.data_seed);
+                        assert_eq!(back.batch, spec.batch);
+                        assert_eq!(back.seq, spec.seq);
+                        assert_eq!(back.checkpoint_n, spec.checkpoint_n);
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_and_trailing_are_errors_not_panics() {
+        let bytes = Response::Proof(InputProvenance::PrevStep {
+            node: sample_node(),
+            out_idx: 0,
+            proof: sample_proof(9),
+        })
+        .encode();
+        for cut in 0..bytes.len() {
+            assert!(Response::decode(&bytes[..cut]).is_err(), "prefix {cut} accepted");
+        }
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(matches!(Response::decode(&padded), Err(WireError::Trailing { extra: 1 })));
+    }
+
+    #[test]
+    fn unknown_tags_rejected() {
+        assert!(matches!(
+            Request::decode(&[0x7f]),
+            Err(WireError::BadTag { context: "request", .. })
+        ));
+        assert!(matches!(
+            Response::decode(&[0x01]),
+            Err(WireError::BadTag { context: "response", .. })
+        ));
+        assert!(Request::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn hostile_counts_do_not_allocate() {
+        // Hashes response claiming u64::MAX entries in a 20-byte buffer.
+        let mut evil = vec![RESP_HASHES];
+        evil.extend_from_slice(&u64::MAX.to_le_bytes());
+        evil.extend_from_slice(&[0u8; 11]);
+        assert!(matches!(Response::decode(&evil), Err(WireError::Truncated { .. })));
+        // Tensor with absurd dims.
+        let mut evil = vec![RESP_TENSOR];
+        evil.extend_from_slice(&2u64.to_le_bytes());
+        evil.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        evil.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        assert!(matches!(Response::decode(&evil), Err(WireError::Malformed { .. })));
+    }
+
+    #[test]
+    fn zero_step_job_delegation_rejected() {
+        let spec = crate::train::JobSpec::quick(crate::model::Preset::Mlp, 0);
+        let bytes = Request::Train { spec }.encode();
+        assert!(matches!(
+            Request::decode(&bytes),
+            Err(WireError::Malformed { context: "spec.steps" })
+        ));
+    }
+
+    #[test]
+    fn frames_roundtrip_and_reject_oversize() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut cur = Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut cur).unwrap().is_none(), "clean EOF");
+
+        let mut evil = Vec::new();
+        evil.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut Cursor::new(evil)),
+            Err(WireError::FrameTooLarge { .. })
+        ));
+
+        // EOF mid-frame is truncation, not a clean close.
+        let mut cut = Vec::new();
+        write_frame(&mut cut, b"abcdef").unwrap();
+        cut.truncate(7);
+        assert!(matches!(
+            read_frame(&mut Cursor::new(cut)),
+            Err(WireError::Truncated { .. })
+        ));
+    }
+}

@@ -5,6 +5,9 @@
 //!
 //! These tests need `make artifacts` to have run; they skip (with a
 //! message) otherwise so plain `cargo test` stays green pre-AOT.
+//! The whole file is gated on the `pjrt` feature (the PJRT runtime needs
+//! the `xla` crate from the rust_pallas toolchain image).
+#![cfg(feature = "pjrt")]
 
 use verde::runtime::{artifacts_present, default_dir, Runtime};
 use verde::tensor::repops;

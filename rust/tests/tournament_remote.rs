@@ -1,0 +1,67 @@
+//! Tournament over remote actors: k = 4 trainers (2 honest, 2 with
+//! distinct faults) served through `net::threaded` mailboxes. The honest
+//! claim must survive and the knockout must need at most
+//! `distinct_claims − 1` disputes.
+
+use verde::graph::kernels::Backend;
+use verde::model::Preset;
+use verde::net::threaded::{spawn, Remote};
+use verde::train::session::Session;
+use verde::train::JobSpec;
+use verde::verde::faults::{first_update_node, Fault};
+use verde::verde::tournament::run_tournament;
+use verde::verde::trainer::TrainerNode;
+
+fn trained(name: &str, spec: JobSpec, fault: Fault) -> TrainerNode {
+    let mut t = TrainerNode::new(name, spec, Backend::Rep, fault);
+    t.train();
+    t
+}
+
+#[test]
+fn k4_tournament_over_threaded_remotes() {
+    let spec = JobSpec::quick(Preset::Mlp, 6);
+    let honest_commit = trained("ref", spec, Fault::None).final_commit();
+    // a tamper target that provably diverges the state (an update node)
+    let upd = first_update_node(&Session::new(spec).program).expect("no trainable params");
+
+    let roster = [
+        ("h0", Fault::None),
+        ("h1", Fault::None),
+        ("tamperer", Fault::TamperOutput { step: 2, node: upd, delta: 0.25 }),
+        ("poisoner", Fault::WrongData { step: 4 }),
+    ];
+    let mut remotes: Vec<Remote> = roster
+        .iter()
+        .map(|(name, fault)| spawn(trained(name, spec, *fault)))
+        .collect();
+
+    let r = run_tournament(spec, &mut remotes);
+
+    // The honest claim survives; both distinct cheats are exposed.
+    assert_eq!(r.accepted, honest_commit);
+    assert!(r.winner <= 1, "an honest trainer wins, got {}", r.winner);
+    let eliminated: Vec<usize> = r.eliminated.iter().map(|(i, _)| *i).collect();
+    assert!(eliminated.contains(&2), "tamperer exposed: {eliminated:?}");
+    assert!(eliminated.contains(&3), "poisoner exposed: {eliminated:?}");
+    assert_eq!(r.eliminated.len(), 2);
+
+    // h0 and h1 merge into one claim: 3 distinct claims → ≤ 2 disputes.
+    assert!(
+        r.disputes <= 2,
+        "disputes ({}) must be ≤ distinct_claims − 1 (2)",
+        r.disputes
+    );
+    assert!(r.disputes >= 1, "distinct claims cannot merge without a dispute");
+}
+
+#[test]
+fn k4_all_honest_over_remotes_needs_no_dispute() {
+    let spec = JobSpec::quick(Preset::Mlp, 4);
+    let mut remotes: Vec<Remote> = (0..4)
+        .map(|i| spawn(trained(&format!("h{i}"), spec, Fault::None)))
+        .collect();
+    let r = run_tournament(spec, &mut remotes);
+    assert_eq!(r.disputes, 0);
+    assert!(r.eliminated.is_empty());
+}

@@ -1,0 +1,250 @@
+//! Property tests over the wire codec: arbitrary protocol messages —
+//! including multi-rank tensors and deep Merkle proofs — survive
+//! `encode → decode` bit-exactly, `wire_size()` always equals the encoded
+//! length, and truncated/corrupted frames return errors instead of
+//! panicking.
+
+use verde::graph::autodiff::Optimizer;
+use verde::graph::executor::AugmentedCGNode;
+use verde::hash::merkle::MerkleProof;
+use verde::hash::Hash;
+use verde::model::Preset;
+use verde::tensor::Tensor;
+use verde::train::JobSpec;
+use verde::util::proptest::{forall, Gen};
+use verde::verde::protocol::{InputProvenance, Request, Response};
+
+fn gen_hash(g: &mut Gen) -> Hash {
+    Hash::of_bytes(&g.u64().to_le_bytes())
+}
+
+fn gen_hashes(g: &mut Gen, max: usize) -> Vec<Hash> {
+    let n = g.usize_in(0, max);
+    (0..n).map(|_| gen_hash(g)).collect()
+}
+
+/// Finite but otherwise unconstrained payload values. NaN payloads would
+/// also roundtrip bit-exactly, but canonical-bytes comparison is what the
+/// properties check, so finite wide-exponent values suffice.
+fn gen_tensor(g: &mut Gen) -> Tensor {
+    let rank = g.usize_in(0, 4);
+    let shape: Vec<usize> = (0..rank).map(|_| g.usize_in(1, 5)).collect();
+    let numel = shape.iter().product();
+    Tensor::new(shape, g.vec_f32_wide(numel))
+}
+
+fn gen_proof(g: &mut Gen, max_depth: usize) -> MerkleProof {
+    MerkleProof {
+        index: g.usize_in(0, 1 << 20),
+        siblings: gen_hashes(g, max_depth),
+    }
+}
+
+fn gen_node(g: &mut Gen) -> AugmentedCGNode {
+    AugmentedCGNode {
+        id: g.usize_in(0, 10_000),
+        structure: gen_hash(g),
+        input_hashes: gen_hashes(g, 6),
+        output_hashes: gen_hashes(g, 3),
+    }
+}
+
+fn gen_spec(g: &mut Gen) -> JobSpec {
+    let preset = *g.pick(&[
+        Preset::Mlp,
+        Preset::LlamaTiny,
+        Preset::LlamaTinyLora,
+        Preset::LlamaSmall,
+        Preset::LlamaBase,
+        Preset::BertTiny,
+        Preset::BertSmall,
+    ]);
+    let mut spec = JobSpec::quick(preset, g.usize_in(1, 100_000) as u64);
+    spec.batch = g.usize_in(1, 64);
+    spec.seq = g.usize_in(1, 256);
+    spec.optimizer = if g.bool() {
+        Optimizer::Adam {
+            lr: g.f32_in(1e-5, 1.0),
+            beta1: g.f32_in(0.0, 1.0),
+            beta2: g.f32_in(0.0, 1.0),
+            eps: g.f32_in(1e-10, 1e-4),
+        }
+    } else {
+        Optimizer::Sgd { lr: g.f32_in(1e-5, 1.0) }
+    };
+    spec.weight_seed = g.u64();
+    spec.data_seed = g.u64();
+    spec.checkpoint_n = g.usize_in(1, 64) as u64;
+    spec
+}
+
+fn gen_request(g: &mut Gen) -> Request {
+    match g.usize_in(0, 7) {
+        0 => Request::FinalCommit,
+        1 => Request::CheckpointHashes {
+            boundaries: (0..g.usize_in(0, 40)).map(|_| g.u64()).collect(),
+        },
+        2 => Request::NodeHashSeq { step: g.u64() },
+        3 => Request::OpenNode { step: g.u64(), idx: g.usize_in(0, 1 << 20) },
+        4 => Request::InputProof { step: g.u64(), node_idx: g.usize_in(0, 1 << 20) },
+        5 => Request::InputTensor {
+            step: g.u64(),
+            node_idx: g.usize_in(0, 1 << 20),
+            input_idx: g.usize_in(0, 16),
+        },
+        6 => Request::Train { spec: gen_spec(g) },
+        _ => Request::Shutdown,
+    }
+}
+
+fn gen_response(g: &mut Gen) -> Response {
+    match g.usize_in(0, 7) {
+        0 => Response::Commit(gen_hash(g)),
+        1 => Response::Hashes(gen_hashes(g, 200)),
+        2 => Response::NodeSeq(gen_hashes(g, 200)),
+        3 => Response::Node(gen_node(g)),
+        4 => {
+            if g.bool() {
+                Response::Proof(InputProvenance::Genesis {
+                    leaf: gen_hash(g),
+                    proof: gen_proof(g, 40),
+                })
+            } else {
+                Response::Proof(InputProvenance::PrevStep {
+                    node: gen_node(g),
+                    out_idx: g.usize_in(0, 8),
+                    proof: gen_proof(g, 40),
+                })
+            }
+        }
+        5 => Response::TensorPayload(gen_tensor(g)),
+        6 => Response::Refuse(
+            (0..g.usize_in(0, 60)).map(|_| char::from(b' ' + (g.u64() % 94) as u8)).collect(),
+        ),
+        _ => Response::Bye,
+    }
+}
+
+#[test]
+fn prop_requests_roundtrip_bit_exactly_and_size_exactly() {
+    forall("request encode→decode→encode is identity", 200, |g: &mut Gen| {
+        let req = gen_request(g);
+        let bytes = req.encode();
+        assert_eq!(bytes.len(), req.wire_size(), "{req:?}");
+        let back = Request::decode(&bytes).unwrap_or_else(|e| panic!("{req:?}: {e}"));
+        assert_eq!(back.encode(), bytes, "{req:?}");
+    });
+}
+
+#[test]
+fn prop_responses_roundtrip_bit_exactly_and_size_exactly() {
+    forall("response encode→decode→encode is identity", 200, |g: &mut Gen| {
+        let resp = gen_response(g);
+        let bytes = resp.encode();
+        assert_eq!(bytes.len(), resp.wire_size(), "{resp:?}");
+        let back = Response::decode(&bytes).unwrap_or_else(|e| panic!("{resp:?}: {e}"));
+        assert_eq!(back.encode(), bytes, "{resp:?}");
+    });
+}
+
+#[test]
+fn prop_tensor_payload_values_survive() {
+    forall("tensor payload bits survive the wire", 80, |g: &mut Gen| {
+        let t = gen_tensor(g);
+        let bytes = Response::TensorPayload(t.clone()).encode();
+        match Response::decode(&bytes).unwrap() {
+            Response::TensorPayload(back) => {
+                assert!(back.bit_eq(&t), "shape {:?}", t.shape())
+            }
+            other => panic!("{other:?}"),
+        }
+    });
+}
+
+#[test]
+fn prop_every_truncation_errors_never_panics() {
+    forall("all strict prefixes are rejected", 60, |g: &mut Gen| {
+        let bytes = if g.bool() { gen_request(g).encode() } else { gen_response(g).encode() };
+        // sample up to 24 cut points (plus always the empty prefix)
+        let mut cuts = vec![0usize];
+        for _ in 0..24.min(bytes.len().saturating_sub(1)) {
+            cuts.push(g.usize_in(0, bytes.len() - 1));
+        }
+        // A strict prefix can never be a complete message (every field is
+        // demanded by fixed layout or a length prefix), and cross-decoding
+        // fails on the disjoint tag spaces — so both decoders must error.
+        for cut in cuts {
+            assert!(
+                Request::decode(&bytes[..cut]).is_err(),
+                "request prefix {cut}/{} accepted",
+                bytes.len()
+            );
+            assert!(
+                Response::decode(&bytes[..cut]).is_err(),
+                "response prefix {cut}/{} accepted",
+                bytes.len()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_corrupted_bytes_never_panic_and_stay_canonical() {
+    forall("single-byte corruption is safe", 120, |g: &mut Gen| {
+        let bytes = if g.bool() { gen_request(g).encode() } else { gen_response(g).encode() };
+        let mut corrupt = bytes.clone();
+        let pos = g.usize_in(0, corrupt.len() - 1);
+        let flip = 1u8 << g.usize_in(0, 7);
+        corrupt[pos] ^= flip;
+        // Decoding hostile bytes must be total: either a WireError or a
+        // value whose canonical encoding is exactly the bytes we fed in.
+        if let Ok(req) = Request::decode(&corrupt) {
+            assert_eq!(req.encode(), corrupt, "non-canonical request accepted");
+        }
+        if let Ok(resp) = Response::decode(&corrupt) {
+            assert_eq!(resp.encode(), corrupt, "non-canonical response accepted");
+        }
+    });
+}
+
+#[test]
+fn deep_merkle_proof_roundtrips() {
+    // A 64-level proof (a 2^64-leaf tree's worth of siblings).
+    let proof = MerkleProof {
+        index: usize::MAX >> 1,
+        siblings: (0..64).map(|i| Hash::of_bytes(&[i as u8, 0xAA])).collect(),
+    };
+    let resp = Response::Proof(InputProvenance::Genesis {
+        leaf: Hash::of_bytes(b"deep"),
+        proof: proof.clone(),
+    });
+    let bytes = resp.encode();
+    assert_eq!(bytes.len(), resp.wire_size());
+    match Response::decode(&bytes).unwrap() {
+        Response::Proof(InputProvenance::Genesis { proof: back, .. }) => {
+            assert_eq!(back, proof);
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn prop_job_specs_roundtrip_field_exact() {
+    forall("job specs survive delegation framing", 100, |g: &mut Gen| {
+        let spec = gen_spec(g);
+        let bytes = Request::Train { spec }.encode();
+        match Request::decode(&bytes).unwrap() {
+            Request::Train { spec: back } => {
+                assert_eq!(back.preset, spec.preset);
+                assert_eq!(back.batch, spec.batch);
+                assert_eq!(back.seq, spec.seq);
+                assert_eq!(back.steps, spec.steps);
+                assert_eq!(back.optimizer, spec.optimizer);
+                assert_eq!(back.weight_seed, spec.weight_seed);
+                assert_eq!(back.data_seed, spec.data_seed);
+                assert_eq!(back.checkpoint_n, spec.checkpoint_n);
+            }
+            other => panic!("{other:?}"),
+        }
+    });
+}
