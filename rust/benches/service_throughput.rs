@@ -1,17 +1,35 @@
-//! SERVICE — delegation-service load generator: N concurrent jobs × k
-//! workers with honest and faulty mixes, tracking service-level jobs/sec,
-//! mean latency, and protocol bytes/job. Emits `BENCH_service.json` so the
-//! perf trajectory of the coordinator is machine-readable run over run.
+//! SERVICE — delegation-service load generator, two parts:
+//!
+//! 1. In-process scenarios (honest and adversarial worker mixes) through
+//!    the event-driven coordinator: jobs/sec, mean latency, bytes/job.
+//! 2. **Blocking vs multiplexed dispatch** over real TCP worker fleets at
+//!    pool sizes {4, 16, 64}: the thread-per-dispatch baseline
+//!    (`run_service_blocking`) against the event core (`run_service`) with
+//!    its fixed coordinator thread budget. The acceptance bar: the
+//!    multiplexed coordinator drives 64 workers with ≤ 8 coordinator
+//!    threads at jobs/sec no worse than the blocking path at pool size 4.
+//!
+//! Emits `BENCH_service.json` so the perf trajectory of the coordinator is
+//! machine-readable run over run.
 //!
 //! Run: `cargo bench --bench service_throughput`
 
+use std::net::{SocketAddr, TcpListener};
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 use verde::model::Preset;
+use verde::net::mux::Mux;
+use verde::net::tcp::{spawn_server, TcpEndpoint};
+use verde::net::Endpoint as _;
 use verde::net::threaded::spawn;
-use verde::service::{run_service, FaultPlan, PooledWorker, WorkerHost, WorkerPool};
+use verde::service::{
+    run_service, run_service_blocking, FaultPlan, PooledWorker, ServiceReport, WorkerHost,
+    WorkerPool,
+};
 use verde::train::JobSpec;
 use verde::util::metrics::human_bytes;
+use verde::verde::protocol::Request;
 
 struct Scenario {
     name: &'static str,
@@ -35,6 +53,48 @@ fn plan_for(i: usize, faulty: usize) -> FaultPlan {
     }
 }
 
+fn job_batch(n: u64, steps: u64) -> Vec<JobSpec> {
+    (0..n)
+        .map(|i| {
+            let mut spec = JobSpec::quick(Preset::Mlp, steps);
+            spec.data_seed = spec.data_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9));
+            spec
+        })
+        .collect()
+}
+
+fn report_json(
+    name: &str,
+    mode: &str,
+    sc_threads: usize,
+    report: &ServiceReport,
+    faulty: usize,
+    steps: u64,
+) -> String {
+    format!(
+        "{{\"name\":\"{}\",\"mode\":\"{}\",\"jobs\":{},\"k\":{},\"workers\":{},\"faulty\":{},\
+         \"steps\":{},\"coordinator_threads\":{},\"wall_s\":{:.6},\"jobs_per_sec\":{:.3},\
+         \"mean_latency_s\":{:.6},\"total_bytes\":{},\"bytes_per_job\":{:.1},\"disputes\":{},\
+         \"eliminated\":{},\"requeued\":{}}}",
+        name,
+        mode,
+        report.outcomes.len(),
+        report.k,
+        report.workers,
+        faulty,
+        steps,
+        sc_threads,
+        report.wall.as_secs_f64(),
+        report.jobs_per_sec(),
+        report.mean_latency().as_secs_f64(),
+        report.total_bytes(),
+        report.bytes_per_job(),
+        report.total_disputes(),
+        report.total_eliminated(),
+        report.total_requeued(),
+    )
+}
+
 fn run_scenario(sc: &Scenario) -> String {
     // Workers as independent thread actors (the same WorkerHost code path
     // a TCP worker process runs), so jobs genuinely execute in parallel.
@@ -46,13 +106,7 @@ fn run_scenario(sc: &Scenario) -> String {
             })
             .collect(),
     );
-    let jobs: Vec<JobSpec> = (0..sc.jobs)
-        .map(|i| {
-            let mut spec = JobSpec::quick(Preset::Mlp, sc.steps);
-            spec.data_seed = spec.data_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9));
-            spec
-        })
-        .collect();
+    let jobs = job_batch(sc.jobs, sc.steps);
 
     let t0 = Instant::now();
     let report = run_service(jobs, &pool, sc.k);
@@ -72,24 +126,91 @@ fn run_scenario(sc: &Scenario) -> String {
         report.total_disputes(),
     );
     assert_eq!(resolved, report.outcomes.len(), "all jobs must resolve");
+    report_json(sc.name, "event", report.threads, &report, sc.faulty, sc.steps)
+}
 
-    format!(
-        "{{\"name\":\"{}\",\"jobs\":{},\"k\":{},\"workers\":{},\"faulty\":{},\"steps\":{},\
-         \"wall_s\":{:.6},\"jobs_per_sec\":{:.3},\"mean_latency_s\":{:.6},\
-         \"total_bytes\":{},\"bytes_per_job\":{:.1},\"disputes\":{}}}",
-        sc.name,
+/// Spawn `n` honest TCP worker "processes" (one server thread each — those
+/// are worker-side, not coordinator-side, threads) on ephemeral ports.
+fn tcp_fleet(n: usize) -> (Vec<JoinHandle<WorkerHost>>, Vec<SocketAddr>) {
+    (0..n)
+        .map(|i| {
+            let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+            let addr = listener.local_addr().unwrap();
+            let name = format!("w{i}");
+            (
+                spawn_server(listener, WorkerHost::new(&name, FaultPlan::Honest), Some(1)),
+                addr,
+            )
+        })
+        .unzip()
+}
+
+/// One blocking-vs-mux comparison point: `size` TCP workers, k=4.
+/// Returns (json, jobs_per_sec, coordinator_threads).
+fn run_tcp_dispatch(size: usize, mux_mode: bool) -> (String, f64, usize) {
+    let k = 4.min(size);
+    let n_jobs = size.clamp(8, 32) as u64;
+    let steps = 3;
+    let (servers, addrs) = tcp_fleet(size);
+
+    let mux = if mux_mode { Some(Mux::new()) } else { None };
+    let pool = WorkerPool::new(
+        addrs
+            .iter()
+            .enumerate()
+            .map(|(i, addr)| {
+                let name = format!("w{i}");
+                match &mux {
+                    Some(mux) => {
+                        PooledWorker::mux(&name, mux.connect(&name, addr).expect("connect"))
+                    }
+                    None => {
+                        let ep = TcpEndpoint::connect(&name, addr).expect("connect");
+                        PooledWorker::new(&name, ep)
+                    }
+                }
+            })
+            .collect(),
+    );
+    let jobs = job_batch(n_jobs, steps);
+
+    let report = if mux_mode {
+        run_service(jobs, &pool, k)
+    } else {
+        run_service_blocking(jobs, &pool, k)
+    };
+    let resolved = report.outcomes.iter().filter(|o| o.accepted.is_some()).count();
+    assert_eq!(resolved, report.outcomes.len(), "all jobs must resolve");
+
+    // Coordinator-side thread budget: the event core is 1 event loop +
+    // resolvers + 1 shared mux driver; the blocking baseline is lanes ×
+    // (1 + k) at peak. Worker server threads are the fleet, not the
+    // coordinator.
+    let threads = report.threads + usize::from(mux_mode);
+    let mode = if mux_mode { "mux" } else { "blocking" };
+    let name = format!("{mode}_w{size}_k{k}");
+    println!(
+        "  {:<18} {:>3} jobs  k={k} over {:>2} TCP workers  {:>10.2?}  {:>7.2} jobs/s  {:>2} coordinator threads",
+        name,
         report.outcomes.len(),
-        sc.k,
-        sc.workers,
-        sc.faulty,
-        sc.steps,
-        wall.as_secs_f64(),
+        size,
+        report.wall,
         report.jobs_per_sec(),
-        report.mean_latency().as_secs_f64(),
-        report.total_bytes(),
-        report.bytes_per_job(),
-        report.total_disputes(),
-    )
+        threads,
+    );
+
+    let jps = report.jobs_per_sec();
+    let json = report_json(&name, mode, threads, &report, 0, steps);
+
+    // Orderly teardown: shut the fleet down and join the server threads.
+    for mut w in pool.into_workers() {
+        let _ = w.call(Request::Shutdown);
+    }
+    drop(mux);
+    for s in servers {
+        let _ = s.join();
+    }
+    (json, jps, threads)
 }
 
 fn main() {
@@ -101,7 +222,31 @@ fn main() {
         Scenario { name: "mixed_w8_k2", workers: 8, faulty: 2, k: 2, jobs: 16, steps: 6 },
         Scenario { name: "adversarial_w6_k3", workers: 6, faulty: 3, k: 3, jobs: 9, steps: 6 },
     ];
-    let lines: Vec<String> = scenarios.iter().map(run_scenario).collect();
+    let mut lines: Vec<String> = scenarios.iter().map(run_scenario).collect();
+
+    println!("SERVICE: blocking vs multiplexed dispatch over TCP fleets");
+    let mut blocking_w4_jps = 0.0f64;
+    for &size in &[4usize, 16, 64] {
+        for &mux_mode in &[false, true] {
+            let (json, jps, threads) = run_tcp_dispatch(size, mux_mode);
+            if !mux_mode && size == 4 {
+                blocking_w4_jps = jps;
+            }
+            if mux_mode && size == 64 {
+                assert!(
+                    threads <= 8,
+                    "event core must drive 64 workers with ≤ 8 coordinator threads, used {threads}"
+                );
+                assert!(
+                    jps >= blocking_w4_jps,
+                    "multiplexed 64-worker dispatch ({jps:.2} jobs/s) must not be slower than \
+                     blocking dispatch at pool size 4 ({blocking_w4_jps:.2} jobs/s)"
+                );
+            }
+            lines.push(json);
+        }
+    }
+
     let json = format!("[\n  {}\n]\n", lines.join(",\n  "));
     for line in &lines {
         println!("JSON {line}");

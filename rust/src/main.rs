@@ -7,6 +7,9 @@
 //!   info         print a model preset's graph statistics
 //!   worker       serve a worker process over TCP (`--listen`, `--fault`)
 //!   coordinator  delegate N jobs to a TCP worker pool, k workers per job
+//!                (multiplexed event-driven core; `--blocking` for the
+//!                legacy scheduler, `--deadline-ms`, `--health-ms`,
+//!                `--requeues`, `--resolvers` for the failure policy)
 //!
 //! Examples:
 //!   verde train --model llama-tiny --steps 32 --batch 2 --seq 8
@@ -21,9 +24,13 @@ use std::net::TcpListener;
 
 use verde::graph::kernels::Backend;
 use verde::model::Preset;
+use verde::net::mux::Mux;
 use verde::net::tcp::{serve_connection, TcpEndpoint};
 use verde::net::Endpoint as _;
-use verde::service::{run_service, FaultPlan, PooledWorker, WorkerHost, WorkerPool};
+use verde::service::{
+    run_service_blocking, run_service_with, FaultPlan, PooledWorker, ServiceConfig, WorkerHost,
+    WorkerPool,
+};
 use verde::tensor::profile::HardwareProfile;
 use verde::train::session::Session;
 use verde::train::JobSpec;
@@ -181,7 +188,7 @@ fn cmd_info(args: &Args) {
 fn cmd_worker(args: &Args) {
     let listen = args.get_or("listen", "127.0.0.1:7000");
     let plan = FaultPlan::parse(args.get_or("fault", "none")).unwrap_or_else(|| {
-        panic!("unknown --fault (none, tamper[@S], wrong-op[@S], wrong-data[@S], skip-opt[@S], skip-steps[@S], forged-lineage[@S], inconsistent[@S])")
+        panic!("unknown --fault (none, tamper[@S], wrong-op[@S], wrong-data[@S], skip-opt[@S], skip-steps[@S], forged-lineage[@S], inconsistent[@S], stall[@N])")
     });
     let max_conns = args.get("max-conns").map(|v| {
         v.parse::<usize>().unwrap_or_else(|_| panic!("--max-conns wants an integer, got '{v}'"))
@@ -223,15 +230,31 @@ fn cmd_coordinator(args: &Args) {
     assert!(!addrs.is_empty(), "--workers host:port[,host:port...] is required");
     let k = args.get_usize("k", addrs.len().min(4));
     let n_jobs = args.get_usize("jobs", 8) as u64;
+    let blocking = args.flag("blocking");
     let base = spec_from(args);
 
+    // Event-driven path: one multiplexed connection per worker, zero
+    // coordinator threads per worker. `--blocking` keeps the legacy
+    // thread-per-dispatch scheduler over blocking TCP endpoints.
+    let mux = if blocking { None } else { Some(Mux::new()) };
     let workers: Vec<PooledWorker> = addrs
         .iter()
         .map(|addr| {
-            let ep = TcpEndpoint::connect(addr, addr)
-                .unwrap_or_else(|e| panic!("cannot connect to worker {addr}: {e}"));
+            let worker = match &mux {
+                Some(mux) => {
+                    let conn = mux
+                        .connect(addr, addr)
+                        .unwrap_or_else(|e| panic!("cannot connect to worker {addr}: {e}"));
+                    PooledWorker::mux(addr, conn)
+                }
+                None => {
+                    let ep = TcpEndpoint::connect(addr, addr)
+                        .unwrap_or_else(|e| panic!("cannot connect to worker {addr}: {e}"));
+                    PooledWorker::new(addr, ep)
+                }
+            };
             println!("connected to worker {addr}");
-            PooledWorker::new(addr, ep)
+            worker
         })
         .collect();
     let pool = WorkerPool::new(workers);
@@ -246,37 +269,57 @@ fn cmd_coordinator(args: &Args) {
         .collect();
 
     println!(
-        "delegating {n_jobs} jobs ({} x{} steps) to {} workers, k={k}",
+        "delegating {n_jobs} jobs ({} x{} steps) to {} workers, k={k} ({})",
         base.preset.name(),
         base.steps,
-        pool.size()
+        pool.size(),
+        if blocking { "blocking scheduler" } else { "event-driven core" }
     );
-    let report = run_service(jobs, &pool, k);
+    let report = if blocking {
+        run_service_blocking(jobs, &pool, k)
+    } else {
+        let mut cfg = ServiceConfig::new(k);
+        cfg.dispatch_deadline =
+            std::time::Duration::from_millis(args.get_u64("deadline-ms", 600_000));
+        cfg.call_deadline =
+            std::time::Duration::from_millis(args.get_u64("call-deadline-ms", 60_000));
+        cfg.max_requeues = args.get_u64("requeues", 3) as u32;
+        cfg.resolvers = args.get_usize("resolvers", 4);
+        cfg.health_check = args
+            .get("health-ms")
+            .map(|v| std::time::Duration::from_millis(v.parse().expect("--health-ms integer")));
+        run_service_with(jobs, &pool, cfg)
+    };
     println!("--- service report ---");
     for o in &report.outcomes {
         println!(
-            "job {:>3}: winner {:<24} disputes {}  eliminated {}  {}  {:?}",
+            "job {:>3}: winner {:<24} disputes {}  eliminated {}  requeues {}  {}  {:?}",
             o.job_id,
             o.winner.as_deref().unwrap_or("<unresolved>"),
             o.disputes,
             o.eliminated,
+            o.requeues,
             human_bytes(o.bytes),
             o.wall
         );
     }
+    if !report.revoked.is_empty() {
+        println!("revoked workers: {}", report.revoked.join(", "));
+    }
     println!(
-        "{} jobs in {:?}  ({:.2} jobs/s, {} total, {} / job)",
+        "{} jobs in {:?}  ({:.2} jobs/s, {} total, {} / job, {} coordinator threads)",
         report.outcomes.len(),
         report.wall,
         report.jobs_per_sec(),
         human_bytes(report.total_bytes()),
-        human_bytes(report.bytes_per_job() as u64)
+        human_bytes(report.bytes_per_job() as u64),
+        report.threads
     );
     println!("JSON {}", report.to_json());
 
-    // orderly shutdown
+    // orderly shutdown (revoked workers are gone already)
     for mut w in pool.into_workers() {
-        let _ = w.endpoint.call(Request::Shutdown);
+        let _ = w.call(Request::Shutdown);
     }
 }
 

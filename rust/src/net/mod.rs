@@ -1,13 +1,17 @@
 //! Party communication layer: a synchronous request/response endpoint
-//! abstraction with byte-level accounting, plus a thread-backed transport so
-//! trainers can run as independent actors (the deployment shape of the
-//! paper's client/trainers/referee topology).
+//! abstraction with byte-level accounting, a thread-backed transport so
+//! trainers can run as independent actors, and a non-blocking connection
+//! multiplexer ([`mux`]) — the event-driven core the service layer
+//! dispatches through.
 //!
-//! The dispute protocol is referee-driven and strictly turn-based, so a
-//! synchronous `call` interface is the faithful model; the threaded
-//! transport exists to prove process-separation works and to host long
-//! training runs off the coordinator thread.
+//! The dispute protocol is referee-driven and strictly turn-based, so the
+//! synchronous [`Endpoint::call`] interface remains the faithful model for
+//! disputes; the multiplexer exists so a coordinator can keep thousands of
+//! workers in flight from a handful of threads, with the blocking interface
+//! kept as a thin adapter ([`mux::MuxConn`] implements [`Endpoint`]) so
+//! tournaments and disputes run over it unchanged.
 
+pub mod mux;
 pub mod tcp;
 pub mod threaded;
 

@@ -1,0 +1,748 @@
+//! Non-blocking connection multiplexer: many in-flight requests over many
+//! worker sockets, driven by one readiness-loop thread.
+//!
+//! The blocking [`TcpEndpoint`](crate::net::tcp::TcpEndpoint) burns one
+//! socket round-trip per `call` and one OS thread per concurrent dispatch.
+//! The [`Mux`] replaces that with the event-driven core the service layer
+//! runs on:
+//!
+//! * every connection is `set_nonblocking(true)`; a single driver thread
+//!   polls readiness in-tree (no epoll dependency — the loop attempts
+//!   writes/reads and backs off on `WouldBlock`);
+//! * request frames carry a caller-chosen **correlation tag**
+//!   ([`crate::verde::wire`]); the peer echoes it, and the driver routes
+//!   each answer to the completion sink registered under that tag, so any
+//!   number of requests can be outstanding per connection;
+//! * every submission may carry a **deadline**. When it passes without an
+//!   answer the driver synthesizes a [`Response::Refuse`] completion with
+//!   [`CompletionKind::DeadlineExpired`] — the connection itself stays up,
+//!   and a late answer to an expired tag is discarded as stale;
+//! * a transport failure (reset, EOF with requests outstanding, bad frame)
+//!   fails **all** pending requests with [`CompletionKind::Transport`] and
+//!   marks the connection dead.
+//!
+//! [`MuxConn`] is the per-connection handle: non-blocking [`MuxConn::submit`]
+//! for the coordinator's completion-queue state machines, plus a blocking
+//! [`Endpoint`] adapter (submit + wait with the connection's default
+//! deadline) so `run_dispute`/`run_tournament` work over multiplexed
+//! connections unchanged.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::verde::protocol::{Request, Response};
+use crate::verde::wire::{frame_bytes, split_frame};
+
+use super::Endpoint;
+
+/// Identifies one multiplexed connection for the lifetime of its [`Mux`].
+pub type ConnId = u64;
+
+/// Poll cadence when no socket made progress — the latency floor of the
+/// in-tree readiness loop.
+const IDLE_POLL: Duration = Duration::from_millis(1);
+
+/// Extra slack a blocking [`MuxConn::call`] waits beyond its deadline for
+/// the driver to deliver the synthesized refusal (covers a torn-down mux).
+const CALL_GRACE: Duration = Duration::from_millis(500);
+
+/// How a completion was produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompletionKind {
+    /// The peer answered within the deadline.
+    Answered,
+    /// The deadline passed first; `resp` is a synthesized `Refuse`. The
+    /// connection is still up — the caller decides whether to revoke.
+    DeadlineExpired,
+    /// The connection died (reset, EOF mid-conversation, hostile frame);
+    /// `resp` is a synthesized `Refuse` and later submits fail instantly.
+    Transport,
+}
+
+impl CompletionKind {
+    /// True when the worker failed to answer (deadline or dead transport) —
+    /// the lease-revocation trigger.
+    pub fn unresponsive(self) -> bool {
+        !matches!(self, CompletionKind::Answered)
+    }
+}
+
+/// One resolved request, delivered to the sink registered at submit time.
+#[derive(Debug)]
+pub struct Completion {
+    /// The correlation tag the caller chose at submit time.
+    pub token: u64,
+    pub kind: CompletionKind,
+    pub resp: Response,
+}
+
+struct Pending {
+    deadline: Option<Instant>,
+    reply: Sender<Completion>,
+}
+
+struct Conn {
+    name: String,
+    stream: TcpStream,
+    /// `Some(reason)` once the transport failed; pending requests were
+    /// refused and later submits refuse immediately.
+    dead: Option<String>,
+    /// Outgoing bytes not yet accepted by the socket (`send_pos` consumed).
+    send_buf: Vec<u8>,
+    send_pos: usize,
+    /// Incoming bytes not yet forming a complete frame.
+    recv_buf: Vec<u8>,
+    /// In-flight requests keyed by correlation tag.
+    pending: HashMap<u64, Pending>,
+    raw_sent: u64,
+    raw_received: u64,
+    frames_sent: u64,
+    frames_received: u64,
+}
+
+/// Raw traffic counters for one connection (frame headers included in the
+/// `raw_*` figures, exactly as they crossed the socket).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ConnStats {
+    pub raw_sent: u64,
+    pub raw_received: u64,
+    pub frames_sent: u64,
+    pub frames_received: u64,
+    pub pending: usize,
+}
+
+struct State {
+    conns: HashMap<ConnId, Conn>,
+    next_conn: ConnId,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    wake: Condvar,
+}
+
+/// The multiplexer: owns the driver thread and all registered connections.
+pub struct Mux {
+    shared: Arc<Shared>,
+    driver: Option<JoinHandle<()>>,
+}
+
+impl Mux {
+    /// Start a multiplexer with its driver thread.
+    pub fn new() -> Mux {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                conns: HashMap::new(),
+                next_conn: 1,
+                shutdown: false,
+            }),
+            wake: Condvar::new(),
+        });
+        let driver_shared = Arc::clone(&shared);
+        let driver = std::thread::Builder::new()
+            .name("verde-mux".into())
+            .spawn(move || drive(&driver_shared))
+            .expect("spawn mux driver");
+        Mux { shared, driver: Some(driver) }
+    }
+
+    /// Connect to a listening worker and register the socket with the
+    /// driver. The returned handle submits work and reads completions.
+    pub fn connect(&self, name: &str, addr: impl ToSocketAddrs) -> io::Result<MuxConn> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(true)?;
+        let mut st = self.shared.state.lock().unwrap();
+        let id = st.next_conn;
+        st.next_conn += 1;
+        st.conns.insert(
+            id,
+            Conn {
+                name: name.to_string(),
+                stream,
+                dead: None,
+                send_buf: Vec::new(),
+                send_pos: 0,
+                recv_buf: Vec::new(),
+                pending: HashMap::new(),
+                raw_sent: 0,
+                raw_received: 0,
+                frames_sent: 0,
+                frames_received: 0,
+            },
+        );
+        drop(st);
+        self.shared.wake.notify_all();
+        let (reply_tx, reply_rx) = channel();
+        Ok(MuxConn {
+            shared: Arc::clone(&self.shared),
+            id,
+            name: name.to_string(),
+            call_deadline: Duration::from_secs(60),
+            // Blocking calls tag from the top half of the space so they can
+            // never collide with coordinator dispatch tokens (< 2^63).
+            next_call_tag: 1 << 63,
+            reply_tx,
+            reply_rx,
+            faulted: false,
+        })
+    }
+}
+
+impl Default for Mux {
+    fn default() -> Self {
+        Mux::new()
+    }
+}
+
+impl Drop for Mux {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.wake.notify_all();
+        if let Some(j) = self.driver.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Handle to one multiplexed connection. Submit is non-blocking; the
+/// [`Endpoint`] impl is the thin blocking adapter (used by disputes and
+/// tournaments) over the same completion machinery.
+pub struct MuxConn {
+    shared: Arc<Shared>,
+    id: ConnId,
+    name: String,
+    /// Deadline applied to blocking [`Endpoint::call`]s.
+    call_deadline: Duration,
+    next_call_tag: u64,
+    reply_tx: Sender<Completion>,
+    reply_rx: Receiver<Completion>,
+    /// Latched when any request on this handle went unanswered — the
+    /// coordinator reads this after a job to decide on revocation.
+    faulted: bool,
+}
+
+impl MuxConn {
+    /// Override the deadline blocking calls use (default 60 s).
+    pub fn with_call_deadline(mut self, d: Duration) -> MuxConn {
+        self.call_deadline = d;
+        self
+    }
+
+    /// Enqueue `req` under correlation tag `token`; the answer (or a
+    /// synthesized refusal on deadline/transport failure) arrives on
+    /// `reply` as a [`Completion`]. Never blocks on the socket.
+    ///
+    /// `token` must be unique among this connection's in-flight requests
+    /// and below `2^63` (the upper half is reserved for blocking calls).
+    pub fn submit(
+        &self,
+        token: u64,
+        req: &Request,
+        deadline: Option<Instant>,
+        reply: &Sender<Completion>,
+    ) {
+        let payload = req.encode();
+        let mut st = self.shared.state.lock().unwrap();
+        let dead = CompletionKind::Transport;
+        if st.shutdown {
+            let _ = reply.send(refused(token, dead, &self.name, "multiplexer shut down"));
+            return;
+        }
+        let Some(conn) = st.conns.get_mut(&self.id) else {
+            let _ = reply.send(refused(token, dead, &self.name, "connection unregistered"));
+            return;
+        };
+        if let Some(why) = conn.dead.clone() {
+            let _ = reply.send(refused(token, dead, &self.name, &why));
+            return;
+        }
+        if conn.pending.contains_key(&token) {
+            let _ = reply.send(refused(token, dead, &self.name, "duplicate correlation tag"));
+            return;
+        }
+        conn.send_buf.extend_from_slice(&frame_bytes(token, &payload));
+        conn.frames_sent += 1;
+        conn.pending.insert(token, Pending { deadline, reply: reply.clone() });
+        drop(st);
+        self.shared.wake.notify_all();
+    }
+
+    /// Traffic counters for this connection.
+    pub fn stats(&self) -> ConnStats {
+        let st = self.shared.state.lock().unwrap();
+        match st.conns.get(&self.id) {
+            Some(c) => ConnStats {
+                raw_sent: c.raw_sent,
+                raw_received: c.raw_received,
+                frames_sent: c.frames_sent,
+                frames_received: c.frames_received,
+                pending: c.pending.len(),
+            },
+            None => ConnStats::default(),
+        }
+    }
+
+    /// True once any request on this handle went unanswered (deadline or
+    /// transport failure).
+    pub fn faulted(&self) -> bool {
+        self.faulted
+    }
+
+    /// Clear the fault latch (called when a fresh lease begins).
+    pub fn reset_fault(&mut self) {
+        self.faulted = false;
+    }
+}
+
+impl Drop for MuxConn {
+    /// Deregister the connection: the handle is the only way to use it, so
+    /// dropping it (lease revocation, pool teardown) must close the socket
+    /// and stop the driver polling it — a revoked worker may not leak an
+    /// fd and driver work for the mux's lifetime.
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        if let Some(mut conn) = st.conns.remove(&self.id) {
+            fail_conn(&mut conn, "connection handle dropped");
+        }
+        drop(st);
+        self.shared.wake.notify_all();
+    }
+}
+
+impl Endpoint for MuxConn {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Blocking adapter: submit with the connection's default deadline and
+    /// wait for the completion. A deadline or transport failure returns the
+    /// synthesized `Refuse` and latches [`MuxConn::faulted`].
+    fn call(&mut self, req: Request) -> Response {
+        let tag = self.next_call_tag;
+        self.next_call_tag += 1;
+        let deadline = Instant::now() + self.call_deadline;
+        let reply = self.reply_tx.clone();
+        self.submit(tag, &req, Some(deadline), &reply);
+        loop {
+            match self.reply_rx.recv_timeout(self.call_deadline + CALL_GRACE) {
+                Ok(c) if c.token == tag => {
+                    if c.kind.unresponsive() {
+                        self.faulted = true;
+                    }
+                    return c.resp;
+                }
+                // Stale completion from an earlier abandoned call: skip.
+                Ok(_) => continue,
+                Err(_) => {
+                    self.faulted = true;
+                    return Response::Refuse(format!("{}: multiplexer unresponsive", self.name));
+                }
+            }
+        }
+    }
+}
+
+fn refused(token: u64, kind: CompletionKind, name: &str, why: &str) -> Completion {
+    Completion {
+        token,
+        kind,
+        resp: Response::Refuse(format!("{name}: {why}")),
+    }
+}
+
+/// Fail every pending request on `conn` and mark it dead.
+fn fail_conn(conn: &mut Conn, why: &str) {
+    if conn.dead.is_some() {
+        return;
+    }
+    conn.dead = Some(why.to_string());
+    for (tag, p) in conn.pending.drain() {
+        let _ = p.reply.send(refused(tag, CompletionKind::Transport, &conn.name, why));
+    }
+}
+
+/// Flush queued outgoing bytes; returns true if any byte moved.
+fn pump_writes(conn: &mut Conn) -> bool {
+    let mut progress = false;
+    while conn.send_pos < conn.send_buf.len() {
+        match conn.stream.write(&conn.send_buf[conn.send_pos..]) {
+            Ok(0) => {
+                fail_conn(conn, "socket write returned 0");
+                break;
+            }
+            Ok(n) => {
+                conn.send_pos += n;
+                conn.raw_sent += n as u64;
+                progress = true;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                fail_conn(conn, &format!("socket write failed: {e}"));
+                break;
+            }
+        }
+    }
+    if conn.send_pos == conn.send_buf.len() && !conn.send_buf.is_empty() {
+        conn.send_buf.clear();
+        conn.send_pos = 0;
+    }
+    progress
+}
+
+/// Drain readable bytes into the reassembly buffer. Returns `(progress,
+/// failure)`; a failure (EOF or read error) is NOT applied here — the
+/// caller must deliver already-buffered frames first, so a peer that
+/// answers and immediately closes does not lose its final response.
+fn pump_reads(conn: &mut Conn, scratch: &mut [u8]) -> (bool, Option<String>) {
+    let mut progress = false;
+    let mut failure = None;
+    loop {
+        match conn.stream.read(scratch) {
+            Ok(0) => {
+                failure = Some("peer closed the connection".to_string());
+                break;
+            }
+            Ok(n) => {
+                conn.recv_buf.extend_from_slice(&scratch[..n]);
+                conn.raw_received += n as u64;
+                progress = true;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                failure = Some(format!("socket read failed: {e}"));
+                break;
+            }
+        }
+    }
+    (progress, failure)
+}
+
+/// Carve complete frames out of the reassembly buffer and complete their
+/// pending requests. Frames for expired/unknown tags are stale — dropped.
+fn deliver_frames(conn: &mut Conn) {
+    loop {
+        match split_frame(&conn.recv_buf) {
+            Ok(Some((tag, payload, consumed))) => {
+                conn.recv_buf.drain(..consumed);
+                conn.frames_received += 1;
+                if let Some(p) = conn.pending.remove(&tag) {
+                    let resp = Response::decode(&payload).unwrap_or_else(|e| {
+                        Response::Refuse(format!("bad frame from {}: {e}", conn.name))
+                    });
+                    let _ = p.reply.send(Completion {
+                        token: tag,
+                        kind: CompletionKind::Answered,
+                        resp,
+                    });
+                }
+            }
+            Ok(None) => break,
+            Err(e) => {
+                fail_conn(conn, &format!("bad frame from {}: {e}", conn.name));
+                break;
+            }
+        }
+    }
+}
+
+/// Refuse every pending request whose deadline has passed. The connection
+/// stays registered — the peer may still be healthy for later work; policy
+/// (revocation) belongs to the coordinator.
+fn expire_deadlines(conn: &mut Conn, now: Instant) {
+    let expired: Vec<u64> = conn
+        .pending
+        .iter()
+        .filter(|(_, p)| p.deadline.is_some_and(|d| d <= now))
+        .map(|(&t, _)| t)
+        .collect();
+    for tag in expired {
+        if let Some(p) = conn.pending.remove(&tag) {
+            let _ = p.reply.send(refused(
+                tag,
+                CompletionKind::DeadlineExpired,
+                &conn.name,
+                "deadline expired before the worker answered",
+            ));
+        }
+    }
+}
+
+/// The readiness loop: pump every live connection, deliver completions,
+/// fire deadlines, and sleep only when nothing moved.
+fn drive(shared: &Shared) {
+    let mut scratch = vec![0u8; 64 * 1024];
+    loop {
+        let mut st = shared.state.lock().unwrap();
+        if st.shutdown {
+            for conn in st.conns.values_mut() {
+                fail_conn(conn, "multiplexer shut down");
+            }
+            return;
+        }
+        let now = Instant::now();
+        let mut progress = false;
+        let mut outstanding = false;
+        let mut next_deadline: Option<Instant> = None;
+        for conn in st.conns.values_mut() {
+            if conn.dead.is_some() {
+                continue;
+            }
+            progress |= pump_writes(conn);
+            if conn.dead.is_none() {
+                let (read_progress, failure) = pump_reads(conn, &mut scratch);
+                progress |= read_progress;
+                // Complete frames first: an answer that arrived in the same
+                // pass as the EOF must reach its caller, not a refusal.
+                deliver_frames(conn);
+                if let Some(why) = failure {
+                    if conn.dead.is_none() {
+                        if conn.pending.is_empty() {
+                            conn.dead = Some(why);
+                        } else {
+                            fail_conn(conn, &why);
+                        }
+                    }
+                }
+            }
+            if conn.dead.is_none() {
+                expire_deadlines(conn, now);
+                outstanding |= !conn.pending.is_empty() || conn.send_pos < conn.send_buf.len();
+                for p in conn.pending.values() {
+                    if let Some(d) = p.deadline {
+                        next_deadline = Some(next_deadline.map_or(d, |nd: Instant| nd.min(d)));
+                    }
+                }
+            }
+        }
+        if !progress {
+            if outstanding {
+                // Answers or deadlines are due: poll at the readiness cadence.
+                let mut timeout = IDLE_POLL;
+                if let Some(d) = next_deadline {
+                    timeout = timeout
+                        .min(d.saturating_duration_since(now))
+                        .max(Duration::from_micros(100));
+                }
+                let _ = shared.wake.wait_timeout(st, timeout);
+            } else {
+                // Fully idle: sleep until a submit/connect/shutdown notifies.
+                let _ = shared.wake.wait(st);
+            }
+        }
+    }
+}
+
+/// Payload-byte and frame accounting identity for a flushed connection:
+/// `raw = Σ payload + FRAME_HEADER_LEN × frames` in each direction. Tests
+/// assert it; exported for reuse by integration tests and benches.
+pub fn accounting_identity(stats: &ConnStats, payload_sent: u64, payload_received: u64) -> bool {
+    use crate::verde::wire::FRAME_HEADER_LEN;
+    stats.raw_sent == payload_sent + FRAME_HEADER_LEN as u64 * stats.frames_sent
+        && stats.raw_received == payload_received + FRAME_HEADER_LEN as u64 * stats.frames_received
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::Hash;
+    use crate::net::tcp::spawn_server;
+    use std::net::TcpListener;
+
+    /// Answers every request with a fixed commit (Shutdown with Bye).
+    struct Fixed(Hash);
+
+    impl Endpoint for Fixed {
+        fn name(&self) -> &str {
+            "fixed"
+        }
+        fn call(&mut self, req: Request) -> Response {
+            match req {
+                Request::Shutdown => Response::Bye,
+                Request::Ping => Response::Pong,
+                _ => Response::Commit(self.0),
+            }
+        }
+    }
+
+    fn ephemeral() -> TcpListener {
+        TcpListener::bind("127.0.0.1:0").expect("bind ephemeral")
+    }
+
+    #[test]
+    fn many_requests_in_flight_complete_by_tag() {
+        let listener = ephemeral();
+        let addr = listener.local_addr().unwrap();
+        let h = Hash::of_bytes(b"muxed");
+        let server = spawn_server(listener, Fixed(h), Some(1));
+
+        let mux = Mux::new();
+        let conn = mux.connect("fixed", addr).unwrap();
+        let (tx, rx) = channel();
+        // Submit a burst before reading any completion: all in flight at
+        // once on one connection, matched back by tag.
+        for token in 0..8u64 {
+            conn.submit(token, &Request::FinalCommit, None, &tx);
+        }
+        let mut seen = Vec::new();
+        for _ in 0..8 {
+            let c = rx.recv_timeout(Duration::from_secs(10)).expect("completion");
+            assert_eq!(c.kind, CompletionKind::Answered);
+            match c.resp {
+                Response::Commit(got) => assert_eq!(got, h),
+                other => panic!("{other:?}"),
+            }
+            seen.push(c.token);
+        }
+        seen.sort();
+        assert_eq!(seen, (0..8).collect::<Vec<u64>>());
+
+        // Raw traffic identity: payloads + 12-byte header per frame.
+        let stats = conn.stats();
+        assert_eq!(stats.frames_sent, 8);
+        assert_eq!(stats.frames_received, 8);
+        let req_payload = 8 * Request::FinalCommit.wire_size() as u64;
+        let resp_payload = 8 * Response::Commit(h).wire_size() as u64;
+        assert!(accounting_identity(&stats, req_payload, resp_payload));
+
+        // Clean shutdown via the blocking adapter.
+        let mut conn = conn;
+        assert!(matches!(conn.call(Request::Shutdown), Response::Bye));
+        server.join().expect("server thread");
+    }
+
+    #[test]
+    fn deadline_expires_to_refuse_without_blocking_any_thread() {
+        // A listener that accepts and then never answers.
+        let listener = ephemeral();
+        let addr = listener.local_addr().unwrap();
+        let hold = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().expect("accept");
+            // Hold the socket open past the deadline under test.
+            std::thread::sleep(Duration::from_secs(2));
+            drop(stream);
+        });
+
+        let mux = Mux::new();
+        let conn = mux.connect("silent", addr).unwrap();
+        let (tx, rx) = channel();
+        let t0 = Instant::now();
+        conn.submit(
+            1,
+            &Request::FinalCommit,
+            Some(Instant::now() + Duration::from_millis(100)),
+            &tx,
+        );
+        let c = rx.recv_timeout(Duration::from_secs(5)).expect("deadline completion");
+        assert_eq!(c.kind, CompletionKind::DeadlineExpired);
+        assert!(matches!(c.resp, Response::Refuse(_)));
+        assert!(c.kind.unresponsive());
+        assert!(
+            t0.elapsed() < Duration::from_secs(3),
+            "deadline must fire promptly, took {:?}",
+            t0.elapsed()
+        );
+        drop(conn);
+        drop(mux); // must not hang on the silent peer
+        let _ = hold.join();
+    }
+
+    #[test]
+    fn transport_death_fails_all_pending_and_later_submits() {
+        // Peer accepts, reads nothing, and closes immediately.
+        let listener = ephemeral();
+        let addr = listener.local_addr().unwrap();
+        let closer = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().expect("accept");
+            drop(stream);
+        });
+
+        let mux = Mux::new();
+        let conn = mux.connect("flaky", addr).unwrap();
+        closer.join().unwrap();
+        let (tx, rx) = channel();
+        conn.submit(1, &Request::FinalCommit, None, &tx);
+        conn.submit(2, &Request::FinalCommit, None, &tx);
+        let mut kinds = Vec::new();
+        for _ in 0..2 {
+            let c = rx.recv_timeout(Duration::from_secs(10)).expect("failure completion");
+            assert!(matches!(c.resp, Response::Refuse(_)));
+            kinds.push(c.kind);
+        }
+        assert!(kinds.iter().all(|k| k.unresponsive()));
+        // The connection is now dead: new submits refuse instantly.
+        conn.submit(3, &Request::FinalCommit, None, &tx);
+        let c = rx.recv_timeout(Duration::from_secs(2)).expect("instant refuse");
+        assert_eq!(c.kind, CompletionKind::Transport);
+    }
+
+    #[test]
+    fn blocking_endpoint_adapter_latches_fault_on_deadline() {
+        let listener = ephemeral();
+        let addr = listener.local_addr().unwrap();
+        let hold = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().expect("accept");
+            std::thread::sleep(Duration::from_secs(2));
+            drop(stream);
+        });
+
+        let mux = Mux::new();
+        let mut conn = mux
+            .connect("silent", addr)
+            .unwrap()
+            .with_call_deadline(Duration::from_millis(100));
+        assert!(!conn.faulted());
+        let resp = conn.call(Request::FinalCommit);
+        assert!(matches!(resp, Response::Refuse(_)));
+        assert!(conn.faulted(), "unanswered call latches the fault flag");
+        conn.reset_fault();
+        assert!(!conn.faulted());
+        drop(conn);
+        drop(mux);
+        let _ = hold.join();
+    }
+
+    #[test]
+    fn two_connections_multiplex_through_one_driver() {
+        let la = ephemeral();
+        let lb = ephemeral();
+        let (aa, ab) = (la.local_addr().unwrap(), lb.local_addr().unwrap());
+        let ha = Hash::of_bytes(b"a");
+        let hb = Hash::of_bytes(b"b");
+        let sa = spawn_server(la, Fixed(ha), Some(1));
+        let sb = spawn_server(lb, Fixed(hb), Some(1));
+
+        let mux = Mux::new();
+        let ca = mux.connect("a", aa).unwrap();
+        let cb = mux.connect("b", ab).unwrap();
+        let (tx, rx) = channel();
+        for token in 0..4u64 {
+            ca.submit(token, &Request::FinalCommit, None, &tx);
+            cb.submit(token, &Request::FinalCommit, None, &tx);
+        }
+        let mut got_a = 0;
+        let mut got_b = 0;
+        for _ in 0..8 {
+            let c = rx.recv_timeout(Duration::from_secs(10)).expect("completion");
+            match c.resp {
+                Response::Commit(h) if h == ha => got_a += 1,
+                Response::Commit(h) if h == hb => got_b += 1,
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!((got_a, got_b), (4, 4));
+        let (mut ca, mut cb) = (ca, cb);
+        assert!(matches!(ca.call(Request::Shutdown), Response::Bye));
+        assert!(matches!(cb.call(Request::Shutdown), Response::Bye));
+        sa.join().unwrap();
+        sb.join().unwrap();
+    }
+}

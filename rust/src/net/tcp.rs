@@ -10,12 +10,17 @@
 use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::util::metrics::Counters;
 use crate::verde::protocol::{Request, Response};
 use crate::verde::wire::{read_frame, write_frame, WireError};
 
 use super::Endpoint;
+
+/// How long [`Drop`] waits for the goodbye handshake before abandoning the
+/// stream — a dead worker must never be able to hang an endpoint drop.
+const GOODBYE_TIMEOUT: Duration = Duration::from_millis(250);
 
 /// A stream wrapper counting the bytes that actually pass through the
 /// socket in each direction.
@@ -50,6 +55,10 @@ impl Write for CountingStream {
 pub struct TcpEndpoint {
     name: String,
     stream: CountingStream,
+    /// Correlation tag for the next request frame; responses are matched
+    /// by echoed tag, so a stale answer to an abandoned request can never
+    /// be mistaken for the current one.
+    next_tag: u64,
     /// Protocol-level accounting: payload bytes (`bytes_to`/`bytes_from`)
     /// and frame counts (`frames_to`/`frames_from`).
     pub counters: Counters,
@@ -63,6 +72,7 @@ impl TcpEndpoint {
         Ok(TcpEndpoint {
             name: name.to_string(),
             stream: CountingStream { inner: stream, sent: 0, received: 0 },
+            next_tag: 1,
             counters: Counters::new(),
         })
     }
@@ -84,23 +94,35 @@ impl Endpoint for TcpEndpoint {
     }
 
     fn call(&mut self, req: Request) -> Response {
+        let tag = self.next_tag;
+        self.next_tag += 1;
         let payload = req.encode();
         self.counters.add("bytes_to", payload.len() as u64);
         self.counters.incr("frames_to");
-        if let Err(e) = write_frame(&mut self.stream, &payload) {
+        if let Err(e) = write_frame(&mut self.stream, tag, &payload) {
             return Response::Refuse(format!("send to {} failed: {e}", self.name));
         }
-        match read_frame(&mut self.stream) {
-            Ok(Some(frame)) => {
-                self.counters.add("bytes_from", frame.len() as u64);
-                self.counters.incr("frames_from");
-                match Response::decode(&frame) {
-                    Ok(resp) => resp,
-                    Err(e) => Response::Refuse(format!("bad frame from {}: {e}", self.name)),
+        // One request is in flight at a time on the blocking path, but a
+        // peer may still replay stale tags; skip them rather than
+        // desynchronize.
+        loop {
+            match read_frame(&mut self.stream) {
+                Ok(Some((got_tag, frame))) => {
+                    self.counters.add("bytes_from", frame.len() as u64);
+                    self.counters.incr("frames_from");
+                    if got_tag != tag {
+                        continue;
+                    }
+                    return match Response::decode(&frame) {
+                        Ok(resp) => resp,
+                        Err(e) => Response::Refuse(format!("bad frame from {}: {e}", self.name)),
+                    };
                 }
+                Ok(None) => {
+                    return Response::Refuse(format!("{} closed the connection", self.name))
+                }
+                Err(e) => return Response::Refuse(format!("recv from {} failed: {e}", self.name)),
             }
-            Ok(None) => Response::Refuse(format!("{} closed the connection", self.name)),
-            Err(e) => Response::Refuse(format!("recv from {} failed: {e}", self.name)),
         }
     }
 }
@@ -108,7 +130,14 @@ impl Endpoint for TcpEndpoint {
 impl Drop for TcpEndpoint {
     fn drop(&mut self) {
         // Best-effort goodbye so the server's serve loop ends promptly.
-        let _ = write_frame(&mut self.stream, &Request::Shutdown.encode());
+        // Both directions are bounded: a dead worker with a full kernel
+        // send buffer could otherwise block the write, and one that never
+        // answers could block the read — dropping an endpoint must not
+        // hang on a socket that will never cooperate.
+        let _ = self.stream.inner.set_write_timeout(Some(GOODBYE_TIMEOUT));
+        let _ = self.stream.inner.set_read_timeout(Some(GOODBYE_TIMEOUT));
+        let tag = self.next_tag;
+        let _ = write_frame(&mut self.stream, tag, &Request::Shutdown.encode());
         let _ = read_frame(&mut self.stream);
     }
 }
@@ -132,7 +161,7 @@ pub fn serve_connection<E: Endpoint>(
     let mut stream = CountingStream { inner: stream, sent: 0, received: 0 };
     let mut stats = ServeStats::default();
     loop {
-        let frame = match read_frame(&mut stream)? {
+        let (tag, frame) = match read_frame(&mut stream)? {
             Some(f) => f,
             None => break,
         };
@@ -142,7 +171,7 @@ pub fn serve_connection<E: Endpoint>(
             Err(e) => {
                 // Tell the peer why, then drop the desynchronized stream.
                 let refuse = Response::Refuse(format!("bad request: {e}")).encode();
-                let _ = write_frame(&mut stream, &refuse);
+                let _ = write_frame(&mut stream, tag, &refuse);
                 return Err(e);
             }
         };
@@ -151,7 +180,9 @@ pub fn serve_connection<E: Endpoint>(
         let payload = resp.encode();
         stats.bytes_out += payload.len() as u64;
         stats.requests += 1;
-        write_frame(&mut stream, &payload).map_err(|e| WireError::Io(e.to_string()))?;
+        // Echo the request's correlation tag so multiplexing clients can
+        // match this answer to the frame that asked for it.
+        write_frame(&mut stream, tag, &payload).map_err(|e| WireError::Io(e.to_string()))?;
         if stop {
             break;
         }
@@ -228,14 +259,16 @@ mod tests {
                 other => panic!("{other:?}"),
             }
         }
-        // Raw socket traffic == protocol payloads + 4-byte prefix per frame.
+        // Raw socket traffic == protocol payloads + one 12-byte header
+        // (u32 length + u64 correlation tag) per frame.
+        let header = crate::verde::wire::FRAME_HEADER_LEN as u64;
         assert_eq!(
             ep.raw_sent(),
-            ep.counters.get("bytes_to") + 4 * ep.counters.get("frames_to")
+            ep.counters.get("bytes_to") + header * ep.counters.get("frames_to")
         );
         assert_eq!(
             ep.raw_received(),
-            ep.counters.get("bytes_from") + 4 * ep.counters.get("frames_from")
+            ep.counters.get("bytes_from") + header * ep.counters.get("frames_from")
         );
         assert_eq!(ep.counters.get("frames_to"), 3);
         drop(ep); // sends Shutdown, unblocking the serve loop

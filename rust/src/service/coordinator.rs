@@ -1,15 +1,47 @@
-//! The delegation coordinator: a job queue drained by scheduler lanes,
-//! each lane leasing `k` workers from the pool, dispatching the job to all
-//! of them concurrently, and resolving disagreements with a dispute
-//! tournament — many jobs in flight at once, with per-job and aggregate
-//! throughput/latency/byte metrics.
+//! The delegation coordinator, rebuilt as an **event-driven core**: one
+//! event-loop thread drives per-job state machines off a completion queue,
+//! so the number of coordinator threads is fixed (`1` event loop + a small
+//! tournament-resolver pool) no matter how many workers are in flight —
+//! thousands of multiplexed TCP workers fit in a handful of threads.
+//!
+//! Job lifecycle:
+//!
+//! ```text
+//!   Queued ──lease k workers──▶ Dispatching ──all slots answered──▶ Resolving ──▶ Done
+//!     ▲                            │                                  (tournament on a
+//!     │       deadline expired /   │                                   resolver thread)
+//!     └── job re-queued ◀── lease revoked for the silent worker
+//! ```
+//!
+//! * **Dispatching** — `Request::Train` is submitted to every leased worker
+//!   with a per-request deadline ([`ServiceConfig::dispatch_deadline`]).
+//!   Completions (answers, deadline expiries, transport failures) arrive on
+//!   one channel; the deadline for actor-backed workers is enforced by the
+//!   loop's timer heap, for mux-backed workers by the mux driver — both
+//!   paths synthesize `Response::Refuse`, deduplicated by token.
+//! * **Revocation & re-queue** — a worker that misses its deadline (or a
+//!   health-check ping) has its lease revoked: it never re-enters the pool
+//!   and [`WorkerPool::size`] shrinks. Its job releases the surviving
+//!   workers and re-queues (bounded by [`ServiceConfig::max_requeues`]),
+//!   completing on whoever remains.
+//! * **Resolving** — collected claims go to a resolver thread, which runs
+//!   the unchanged blocking [`run_tournament`] over the workers' blocking
+//!   [`Endpoint`] adapters (dispute traffic is deadline-bounded too; a
+//!   worker that goes silent mid-dispute is convicted by the referee and
+//!   revoked afterwards).
+//!
+//! The pre-event-core scheduler survives as [`run_service_blocking`] — the
+//! thread-per-dispatch baseline the benches compare against.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::fmt::Write as _;
-use std::sync::Mutex;
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::hash::Hash;
+use crate::net::mux::{Completion, CompletionKind};
 use crate::net::{Endpoint, Metered};
 use crate::train::JobSpec;
 use crate::verde::protocol::{Request, Response};
@@ -17,23 +49,66 @@ use crate::verde::tournament::run_tournament;
 
 use super::pool::{PooledWorker, WorkerPool};
 
+/// Tuning knobs for the event-driven service core.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceConfig {
+    /// Workers leased per job.
+    pub k: usize,
+    /// Deadline for each `Train` dispatch; expiry revokes the silent
+    /// worker's lease and re-queues the job.
+    pub dispatch_deadline: Duration,
+    /// Deadline for each blocking dispute/tournament request.
+    pub call_deadline: Duration,
+    /// How many times a job may be re-queued after lease revocations
+    /// before it is reported unresolved.
+    pub max_requeues: u32,
+    /// Tournament resolver threads. Coordinator threads total
+    /// `1 + resolvers` (plus the global mux driver when multiplexed
+    /// transport is used).
+    pub resolvers: usize,
+    /// Ping idle workers this often; a missed ping revokes the lease.
+    /// `None` disables health checks.
+    pub health_check: Option<Duration>,
+    /// Deadline for health-check pings.
+    pub ping_deadline: Duration,
+}
+
+impl ServiceConfig {
+    pub fn new(k: usize) -> ServiceConfig {
+        ServiceConfig {
+            k,
+            dispatch_deadline: Duration::from_secs(600),
+            call_deadline: Duration::from_secs(60),
+            max_requeues: 3,
+            resolvers: 4,
+            health_check: None,
+            ping_deadline: Duration::from_secs(5),
+        }
+    }
+}
+
 /// Per-job result plus its cost accounting.
 #[derive(Debug, Clone)]
 pub struct JobOutcome {
     pub job_id: u64,
     /// The commitment the service vouches for (`None` when no worker even
-    /// produced a claim — all assignments failed).
+    /// produced a claim — all assignments failed or were revoked).
     pub accepted: Option<Hash>,
     /// Name of the worker whose claim was accepted.
     pub winner: Option<String>,
     /// Pairwise disputes the job needed (0 when all claims agree).
     pub disputes: usize,
-    /// Workers eliminated as dishonest (or unresponsive).
+    /// Workers eliminated as dishonest by the tournament.
     pub eliminated: usize,
-    /// Wall-clock latency: lease → verdict.
+    /// Times this job was re-queued after a lease revocation.
+    pub requeues: u32,
+    /// Worker leases revoked across this job's attempts (deadline misses
+    /// and transport deaths).
+    pub revoked: usize,
+    /// Wall-clock latency: first lease → verdict.
     pub wall: Duration,
     /// Protocol bytes exchanged with this job's workers (both directions,
-    /// exact `wire_size` accounting).
+    /// exact `wire_size` accounting, all attempts included).
     pub bytes: u64,
     /// Protocol requests issued to this job's workers.
     pub requests: u64,
@@ -48,8 +123,15 @@ pub struct ServiceReport {
     pub wall: Duration,
     /// Workers assigned per job.
     pub k: usize,
-    /// Pool size the batch ran against.
+    /// Pool size the batch started with.
     pub workers: usize,
+    /// Names of workers whose leases were revoked during the run.
+    pub revoked: Vec<String>,
+    /// Coordinator-side threads the run used. Event core: event loop +
+    /// resolvers + one actor thread per blocking-linked worker it had to
+    /// activate (mux-linked workers need none — that is the scaling
+    /// argument). Blocking baseline: lanes × (1 + k) at peak.
+    pub threads: usize,
 }
 
 impl ServiceReport {
@@ -65,6 +147,16 @@ impl ServiceReport {
         self.outcomes.iter().map(|o| o.disputes).sum()
     }
 
+    /// Workers eliminated as dishonest across all tournaments.
+    pub fn total_eliminated(&self) -> usize {
+        self.outcomes.iter().map(|o| o.eliminated).sum()
+    }
+
+    /// Job re-queues forced by lease revocations.
+    pub fn total_requeued(&self) -> u64 {
+        self.outcomes.iter().map(|o| u64::from(o.requeues)).sum()
+    }
+
     /// Mean protocol bytes per job.
     pub fn bytes_per_job(&self) -> f64 {
         if self.outcomes.is_empty() {
@@ -74,7 +166,7 @@ impl ServiceReport {
         }
     }
 
-    /// Mean job latency (lease → verdict).
+    /// Mean job latency (first lease → verdict).
     pub fn mean_latency(&self) -> Duration {
         if self.outcomes.is_empty() {
             Duration::ZERO
@@ -91,7 +183,8 @@ impl ServiceReport {
             s,
             "\"jobs\":{},\"resolved\":{},\"k\":{},\"workers\":{},\"wall_s\":{:.6},\
              \"jobs_per_sec\":{:.3},\"mean_latency_s\":{:.6},\"total_bytes\":{},\
-             \"bytes_per_job\":{:.1},\"disputes\":{}",
+             \"bytes_per_job\":{:.1},\"disputes\":{},\"eliminated\":{},\"requeued\":{},\
+             \"revoked\":{},\"threads\":{}",
             self.outcomes.len(),
             resolved,
             self.k,
@@ -102,27 +195,522 @@ impl ServiceReport {
             self.total_bytes(),
             self.bytes_per_job(),
             self.total_disputes(),
+            self.total_eliminated(),
+            self.total_requeued(),
+            self.revoked.len(),
+            self.threads,
         );
         s.push('}');
         s
     }
 }
 
-/// Dispatch one job to its leased workers and resolve it.
-fn run_job(job_id: u64, spec: JobSpec, workers: &mut [PooledWorker]) -> JobOutcome {
-    let t0 = Instant::now();
-    // names up front: `metered` mutably borrows every endpoint below
-    let names: Vec<String> = workers.iter().map(|w| w.name.clone()).collect();
-    let mut metered: Vec<Metered<&mut (dyn Endpoint + Send)>> =
-        workers.iter_mut().map(|w| Metered::new(w.endpoint.as_mut())).collect();
+// ---------------------------------------------------------------------------
+// event-driven core
+// ---------------------------------------------------------------------------
 
-    // Assign the job to every worker concurrently — training dominates the
-    // job's latency, so serializing here would forfeit the whole point of
-    // a k-worker pool.
+/// Wake-only completion token (resolver → event loop nudge).
+const WAKE_TOKEN: u64 = u64::MAX;
+
+/// A job waiting for a lease.
+struct QueuedJob {
+    job_id: u64,
+    spec: JobSpec,
+    requeues: u32,
+    revoked: usize,
+    bytes: u64,
+    requests: u64,
+    /// First-lease instant, kept across re-queues so `wall` measures
+    /// first lease → verdict.
+    t0: Option<Instant>,
+}
+
+enum SlotState {
+    Waiting,
+    Done(Response),
+    /// Deadline expired or transport died — the worker gets revoked.
+    Failed,
+}
+
+/// A job whose `Train` dispatches are in flight.
+struct ActiveJob {
+    spec: JobSpec,
+    t0: Instant,
+    requeues: u32,
+    revoked: usize,
+    bytes: u64,
+    requests: u64,
+    workers: Vec<PooledWorker>,
+    slots: Vec<SlotState>,
+    outstanding: usize,
+}
+
+/// What a completion token addresses.
+enum Target {
+    Job { job_id: u64, slot: usize },
+    Probe,
+}
+
+/// Work order for a resolver thread.
+struct ResolveTask {
+    job_id: u64,
+    spec: JobSpec,
+    t0: Instant,
+    requeues: u32,
+    revoked: usize,
+    bytes: u64,
+    requests: u64,
+    workers: Vec<PooledWorker>,
+}
+
+struct Resolved {
+    outcome: JobOutcome,
+    workers: Vec<PooledWorker>,
+}
+
+/// Run the tournament for one job on a resolver thread. The workers'
+/// blocking [`Endpoint`] adapters carry the dispute traffic; unanswered
+/// requests surface as `Refuse` (convicting the silent worker) and latch
+/// the worker's fault flag for revocation by the event loop.
+fn resolve(task: ResolveTask) -> Resolved {
+    let ResolveTask { job_id, spec, t0, requeues, revoked, mut bytes, mut requests, mut workers } =
+        task;
+    let names: Vec<String> = workers.iter().map(|w| w.name.clone()).collect();
+    let mut metered: Vec<Metered<&mut PooledWorker>> =
+        workers.iter_mut().map(Metered::new).collect();
+    let report = run_tournament(spec, &mut metered);
+    bytes += metered.iter().map(|m| m.bytes_sent() + m.bytes_received()).sum::<u64>();
+    requests += metered.iter().map(|m| m.counters.get("requests")).sum::<u64>();
+    drop(metered);
+    let outcome = JobOutcome {
+        job_id,
+        accepted: Some(report.accepted),
+        winner: Some(names[report.winner].clone()),
+        disputes: report.disputes,
+        eliminated: report.eliminated.len(),
+        requeues,
+        revoked,
+        wall: t0.elapsed(),
+        bytes,
+        requests,
+    };
+    Resolved { outcome, workers }
+}
+
+/// Pop every expired deadline and synthesize a `DeadlineExpired` refusal
+/// for tokens still outstanding. Answered tokens were already removed from
+/// the map — which is also what dedups this timer against mux-enforced
+/// deadlines racing it.
+fn fire_expired_deadlines(
+    deadlines: &mut BinaryHeap<Reverse<(Instant, u64)>>,
+    tokens: &HashMap<u64, Target>,
+    events: &mut Vec<Completion>,
+) {
+    let now = Instant::now();
+    while deadlines.peek().is_some_and(|Reverse((d, _))| *d <= now) {
+        let Reverse((_, token)) = deadlines.pop().expect("peeked");
+        if tokens.contains_key(&token) {
+            events.push(Completion {
+                token,
+                kind: CompletionKind::DeadlineExpired,
+                resp: Response::Refuse("deadline expired before the worker answered".into()),
+            });
+        }
+    }
+}
+
+/// Resolve a health probe: an unanswered ping (or a latched fault) revokes
+/// the lease; a healthy worker returns to the free list.
+fn settle_probe(w: PooledWorker, kind: CompletionKind, pool: &WorkerPool) {
+    if kind.unresponsive() || w.faulted() {
+        pool.revoke(w);
+    } else {
+        pool.release(vec![w]);
+    }
+}
+
+/// Run a batch of jobs against the pool with the event-driven core and
+/// default tuning: `k` workers per job, per-dispatch deadlines, lease
+/// revocation + re-queue, tournaments on a small resolver pool.
+///
+/// # Panics
+/// If `k == 0` or `k > pool.size()`.
+pub fn run_service(jobs: Vec<JobSpec>, pool: &WorkerPool, k: usize) -> ServiceReport {
+    run_service_with(jobs, pool, ServiceConfig::new(k))
+}
+
+/// [`run_service`] with explicit tuning.
+///
+/// # Panics
+/// If `cfg.k == 0` or `cfg.k > pool.size()`.
+pub fn run_service_with(
+    jobs: Vec<JobSpec>,
+    pool: &WorkerPool,
+    cfg: ServiceConfig,
+) -> ServiceReport {
+    let start_size = pool.size();
+    assert!(cfg.k >= 1 && cfg.k <= start_size, "k={} vs pool of {start_size}", cfg.k);
+    let resolvers = cfg.resolvers.max(1);
+    let n_jobs = jobs.len();
+    let t_start = Instant::now();
+
+    let mut queue: VecDeque<QueuedJob> = jobs
+        .into_iter()
+        .enumerate()
+        .map(|(i, spec)| QueuedJob {
+            job_id: i as u64,
+            spec,
+            requeues: 0,
+            revoked: 0,
+            bytes: 0,
+            requests: 0,
+            t0: None,
+        })
+        .collect();
+    let mut outcomes: Vec<JobOutcome> = Vec::with_capacity(n_jobs);
+    // Actor threads spawned for blocking-linked workers (0 for mux pools).
+    let mut actor_threads: usize = 0;
+
+    let (comp_tx, comp_rx) = channel::<Completion>();
+    let (task_tx, task_rx) = channel::<ResolveTask>();
+    let (resolved_tx, resolved_rx) = channel::<Resolved>();
+    let task_rx = Arc::new(Mutex::new(task_rx));
+
+    std::thread::scope(|scope| {
+        for _ in 0..resolvers {
+            let task_rx = Arc::clone(&task_rx);
+            let resolved_tx = resolved_tx.clone();
+            let comp_tx = comp_tx.clone();
+            scope.spawn(move || loop {
+                let task = task_rx.lock().unwrap().recv();
+                let Ok(task) = task else { break };
+                let resolved = resolve(task);
+                if resolved_tx.send(resolved).is_err() {
+                    break;
+                }
+                // Nudge the event loop: resolved jobs ride a side channel.
+                let _ = comp_tx.send(Completion {
+                    token: WAKE_TOKEN,
+                    kind: CompletionKind::Answered,
+                    resp: Response::Pong,
+                });
+            });
+        }
+
+        // --- event loop state ---
+        let mut tokens: HashMap<u64, Target> = HashMap::new();
+        let mut active: HashMap<u64, ActiveJob> = HashMap::new();
+        let mut probing: HashMap<u64, PooledWorker> = HashMap::new();
+        let mut deadlines: BinaryHeap<Reverse<(Instant, u64)>> = BinaryHeap::new();
+        let mut next_token: u64 = 1;
+        // First sweep fires immediately so even a short run probes its
+        // idle workers at least once.
+        let mut next_health = cfg.health_check.map(|_| Instant::now());
+        let mut events: Vec<Completion> = Vec::new();
+
+        while outcomes.len() < n_jobs {
+            // 1. Lease workers for queued jobs while capacity allows.
+            while let Some(job) = queue.pop_front() {
+                let live = pool.size();
+                if live == 0 {
+                    outcomes.push(JobOutcome {
+                        job_id: job.job_id,
+                        accepted: None,
+                        winner: None,
+                        disputes: 0,
+                        eliminated: 0,
+                        requeues: job.requeues,
+                        revoked: job.revoked,
+                        wall: job.t0.map(|t| t.elapsed()).unwrap_or(Duration::ZERO),
+                        bytes: job.bytes,
+                        requests: job.requests,
+                    });
+                    continue;
+                }
+                let k = cfg.k.min(live);
+                let Some(mut workers) = pool.try_acquire(k) else {
+                    queue.push_front(job);
+                    break;
+                };
+                let t0 = job.t0.unwrap_or_else(Instant::now);
+                let deadline = Instant::now() + cfg.dispatch_deadline;
+                let mut aj = ActiveJob {
+                    spec: job.spec,
+                    t0,
+                    requeues: job.requeues,
+                    revoked: job.revoked,
+                    bytes: job.bytes,
+                    requests: job.requests,
+                    workers: Vec::new(),
+                    slots: Vec::new(),
+                    outstanding: 0,
+                };
+                for (slot, w) in workers.iter_mut().enumerate() {
+                    actor_threads += usize::from(w.activate());
+                    w.reset_fault();
+                    w.set_call_deadline(cfg.call_deadline);
+                    let token = next_token;
+                    next_token += 1;
+                    tokens.insert(token, Target::Job { job_id: job.job_id, slot });
+                    deadlines.push(Reverse((deadline, token)));
+                    let req = Request::Train { spec: job.spec };
+                    aj.bytes += req.wire_size() as u64;
+                    aj.requests += 1;
+                    w.dispatch(token, req, Some(deadline), &comp_tx);
+                    aj.slots.push(SlotState::Waiting);
+                    aj.outstanding += 1;
+                }
+                aj.workers = workers;
+                active.insert(job.job_id, aj);
+            }
+
+            if outcomes.len() >= n_jobs {
+                break;
+            }
+
+            // 2. Sleep until the next completion, deadline, or health tick.
+            let now = Instant::now();
+            let mut timeout = Duration::from_millis(50);
+            if let Some(Reverse((d, _))) = deadlines.peek() {
+                timeout = timeout.min(d.saturating_duration_since(now));
+            }
+            if let Some(h) = next_health {
+                timeout = timeout.min(h.saturating_duration_since(now));
+            }
+            match comp_rx.recv_timeout(timeout.max(Duration::from_micros(100))) {
+                Ok(c) => events.push(c),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+            while let Ok(c) = comp_rx.try_recv() {
+                events.push(c);
+            }
+
+            // 3. Fire expired deadlines for tokens still outstanding.
+            fire_expired_deadlines(&mut deadlines, &tokens, &mut events);
+
+            // 4. Advance per-job state machines.
+            for c in events.drain(..) {
+                if c.token == WAKE_TOKEN {
+                    continue;
+                }
+                let Some(target) = tokens.remove(&c.token) else {
+                    continue; // stale: deadline already handled, or late duplicate
+                };
+                match target {
+                    Target::Probe => {
+                        let Some(w) = probing.remove(&c.token) else { continue };
+                        settle_probe(w, c.kind, pool);
+                    }
+                    Target::Job { job_id, slot } => {
+                        let Some(job) = active.get_mut(&job_id) else { continue };
+                        job.slots[slot] = if c.kind.unresponsive() {
+                            // Synthesized refusal: nothing crossed the wire.
+                            SlotState::Failed
+                        } else {
+                            job.bytes += c.resp.wire_size() as u64;
+                            SlotState::Done(c.resp)
+                        };
+                        job.outstanding -= 1;
+                        if job.outstanding == 0 {
+                            let job = active.remove(&job_id).expect("just seen");
+                            finish_dispatch(
+                                job_id,
+                                job,
+                                pool,
+                                &cfg,
+                                &mut queue,
+                                &mut outcomes,
+                                &task_tx,
+                            );
+                        }
+                    }
+                }
+            }
+
+            // 5. Collect resolved tournaments; revoke workers that went
+            //    silent mid-dispute, release the rest.
+            while let Ok(Resolved { mut outcome, workers }) = resolved_rx.try_recv() {
+                let mut keep = Vec::new();
+                for w in workers {
+                    if w.faulted() {
+                        outcome.revoked += 1;
+                        pool.revoke(w);
+                    } else {
+                        keep.push(w);
+                    }
+                }
+                pool.release(keep);
+                outcomes.push(outcome);
+            }
+
+            // 6. Health-check sweep: ping every idle worker.
+            let now = Instant::now();
+            if next_health.is_some_and(|h| h <= now) {
+                for mut w in pool.drain_idle() {
+                    actor_threads += usize::from(w.activate());
+                    let token = next_token;
+                    next_token += 1;
+                    let deadline = now + cfg.ping_deadline;
+                    w.reset_fault();
+                    tokens.insert(token, Target::Probe);
+                    deadlines.push(Reverse((deadline, token)));
+                    w.dispatch(token, Request::Ping, Some(deadline), &comp_tx);
+                    probing.insert(token, w);
+                }
+                next_health = cfg.health_check.map(|p| now + p);
+            }
+        }
+
+        // Drain outstanding health probes so every live worker is back in
+        // the pool (deterministically) before the report is returned.
+        while !probing.is_empty() {
+            let now = Instant::now();
+            let timeout = deadlines
+                .peek()
+                .map(|Reverse((d, _))| d.saturating_duration_since(now))
+                .unwrap_or(Duration::from_millis(10));
+            if let Ok(c) = comp_rx.recv_timeout(timeout.max(Duration::from_millis(1))) {
+                events.push(c);
+            }
+            fire_expired_deadlines(&mut deadlines, &tokens, &mut events);
+            for c in events.drain(..) {
+                if let Some(Target::Probe) = tokens.remove(&c.token) {
+                    if let Some(w) = probing.remove(&c.token) {
+                        settle_probe(w, c.kind, pool);
+                    }
+                }
+            }
+        }
+
+        drop(task_tx); // resolvers exit once the queue is empty
+    });
+
+    // Hand actors their endpoints back so the pool can be torn down with
+    // plain blocking calls (`into_workers` + `Shutdown`).
+    let mut idle = pool.drain_idle();
+    for w in &mut idle {
+        w.deactivate();
+    }
+    if !idle.is_empty() {
+        pool.release(idle);
+    }
+
+    let mut outcomes = outcomes;
+    outcomes.sort_by_key(|o| o.job_id);
+    ServiceReport {
+        outcomes,
+        wall: t_start.elapsed(),
+        k: cfg.k,
+        workers: start_size,
+        revoked: pool.revoked(),
+        threads: 1 + resolvers + actor_threads,
+    }
+}
+
+/// All of a job's dispatches answered (or expired): revoke silent workers
+/// and re-queue, hand the claims to a resolver, or report failure.
+#[allow(clippy::too_many_arguments)]
+fn finish_dispatch(
+    job_id: u64,
+    job: ActiveJob,
+    pool: &WorkerPool,
+    cfg: &ServiceConfig,
+    queue: &mut VecDeque<QueuedJob>,
+    outcomes: &mut Vec<JobOutcome>,
+    task_tx: &Sender<ResolveTask>,
+) {
+    let ActiveJob { spec, t0, requeues, mut revoked, bytes, requests, workers, slots, .. } = job;
+    let mut keep: Vec<PooledWorker> = Vec::new();
+    let mut any_failed = false;
+    let mut commits = 0usize;
+    for (w, slot) in workers.into_iter().zip(slots) {
+        match slot {
+            SlotState::Failed => {
+                any_failed = true;
+                revoked += 1;
+                pool.revoke(w);
+            }
+            SlotState::Done(resp) => {
+                if matches!(resp, Response::Commit(_)) {
+                    commits += 1;
+                }
+                keep.push(w);
+            }
+            SlotState::Waiting => unreachable!("outstanding == 0"),
+        }
+    }
+
+    if any_failed {
+        // A silent worker compromised this assignment: release the
+        // survivors and re-delegate the whole job to a fresh lease.
+        pool.release(keep);
+        if requeues < cfg.max_requeues && pool.size() > 0 {
+            queue.push_back(QueuedJob {
+                job_id,
+                spec,
+                requeues: requeues + 1,
+                revoked,
+                bytes,
+                requests,
+                t0: Some(t0),
+            });
+        } else {
+            outcomes.push(JobOutcome {
+                job_id,
+                accepted: None,
+                winner: None,
+                disputes: 0,
+                eliminated: 0,
+                requeues,
+                revoked,
+                wall: t0.elapsed(),
+                bytes,
+                requests,
+            });
+        }
+    } else if commits == 0 {
+        // Everyone answered, nobody produced a claim: unresolvable.
+        let eliminated = keep.len();
+        pool.release(keep);
+        outcomes.push(JobOutcome {
+            job_id,
+            accepted: None,
+            winner: None,
+            disputes: 0,
+            eliminated,
+            requeues,
+            revoked,
+            wall: t0.elapsed(),
+            bytes,
+            requests,
+        });
+    } else {
+        let task =
+            ResolveTask { job_id, spec, t0, requeues, revoked, bytes, requests, workers: keep };
+        task_tx.send(task).expect("resolver pool alive while jobs outstanding");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// blocking baseline (pre-event-core scheduler, kept for comparison)
+// ---------------------------------------------------------------------------
+
+/// Dispatch one job to its leased workers with thread-per-dispatch and
+/// resolve it inline — the blocking baseline.
+fn run_job_blocking(job_id: u64, spec: JobSpec, workers: &mut [PooledWorker]) -> JobOutcome {
+    let t0 = Instant::now();
+    let names: Vec<String> = workers.iter().map(|w| w.name.clone()).collect();
+    let mut metered: Vec<Metered<&mut PooledWorker>> =
+        workers.iter_mut().map(Metered::new).collect();
+
+    // One OS thread per Train dispatch — the cost the event core removes.
     let trained: Vec<bool> = std::thread::scope(|scope| {
         let handles: Vec<_> = metered
             .iter_mut()
-            .map(|m| scope.spawn(move || matches!(m.call(Request::Train { spec }), Response::Commit(_))))
+            .map(|m| {
+                scope.spawn(move || matches!(m.call(Request::Train { spec }), Response::Commit(_)))
+            })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap_or(false)).collect()
     });
@@ -136,14 +724,14 @@ fn run_job(job_id: u64, spec: JobSpec, workers: &mut [PooledWorker]) -> JobOutco
             winner: None,
             disputes: 0,
             eliminated: names.len(),
+            requeues: 0,
+            revoked: 0,
             wall: t0.elapsed(),
             bytes,
             requests,
         };
     }
 
-    // Tournament over the same metered endpoints: workers that failed to
-    // train refuse `FinalCommit` and are eliminated up front.
     let report = run_tournament(spec, &mut metered);
     let bytes = metered.iter().map(|m| m.bytes_sent() + m.bytes_received()).sum();
     let requests = metered.iter().map(|m| m.counters.get("requests")).sum();
@@ -153,25 +741,27 @@ fn run_job(job_id: u64, spec: JobSpec, workers: &mut [PooledWorker]) -> JobOutco
         winner: Some(names[report.winner].clone()),
         disputes: report.disputes,
         eliminated: report.eliminated.len(),
+        requeues: 0,
+        revoked: 0,
         wall: t0.elapsed(),
         bytes,
         requests,
     }
 }
 
-/// Run a batch of jobs against the pool, `k` workers per job, with
-/// `pool.size() / k` scheduler lanes draining the queue concurrently.
-///
-/// # Panics
-/// If `k == 0` or `k > pool.size()`.
-pub fn run_service(jobs: Vec<JobSpec>, pool: &WorkerPool, k: usize) -> ServiceReport {
+/// The pre-event-core scheduler: `pool.size() / k` lanes drain the queue,
+/// each lane blocking on its lease and spawning one thread per Train
+/// dispatch. No deadlines, no revocation — a hung worker stalls its lane
+/// forever. Kept as the baseline the benches compare the event core
+/// against (and as a worked example of the blocking `Endpoint` path).
+pub fn run_service_blocking(jobs: Vec<JobSpec>, pool: &WorkerPool, k: usize) -> ServiceReport {
     assert!(k >= 1 && k <= pool.size(), "k={k} vs pool of {}", pool.size());
+    let start_size = pool.size();
     let n_jobs = jobs.len();
-    let queue: Mutex<VecDeque<(u64, JobSpec)>> = Mutex::new(
-        jobs.into_iter().enumerate().map(|(i, s)| (i as u64, s)).collect(),
-    );
+    let queue: Mutex<VecDeque<(u64, JobSpec)>> =
+        Mutex::new(jobs.into_iter().enumerate().map(|(i, s)| (i as u64, s)).collect());
     let outcomes: Mutex<Vec<JobOutcome>> = Mutex::new(Vec::with_capacity(n_jobs));
-    let lanes = (pool.size() / k).clamp(1, n_jobs.max(1));
+    let lanes = (start_size / k).clamp(1, n_jobs.max(1));
 
     let t0 = Instant::now();
     std::thread::scope(|scope| {
@@ -180,7 +770,7 @@ pub fn run_service(jobs: Vec<JobSpec>, pool: &WorkerPool, k: usize) -> ServiceRe
                 let next = queue.lock().unwrap().pop_front();
                 let Some((job_id, spec)) = next else { break };
                 let mut lease = pool.acquire(k);
-                let outcome = run_job(job_id, spec, &mut lease);
+                let outcome = run_job_blocking(job_id, spec, &mut lease);
                 pool.release(lease);
                 outcomes.lock().unwrap().push(outcome);
             });
@@ -188,7 +778,14 @@ pub fn run_service(jobs: Vec<JobSpec>, pool: &WorkerPool, k: usize) -> ServiceRe
     });
     let mut outcomes = outcomes.into_inner().unwrap();
     outcomes.sort_by_key(|o| o.job_id);
-    ServiceReport { outcomes, wall: t0.elapsed(), k, workers: pool.size() }
+    ServiceReport {
+        outcomes,
+        wall: t0.elapsed(),
+        k,
+        workers: start_size,
+        revoked: pool.revoked(),
+        threads: lanes * (1 + k),
+    }
 }
 
 #[cfg(test)]
@@ -229,9 +826,12 @@ mod tests {
             assert!(o.accepted.is_some());
             assert_eq!(o.disputes, 0);
             assert_eq!(o.eliminated, 0);
+            assert_eq!(o.requeues, 0);
+            assert_eq!(o.revoked, 0);
             assert!(o.bytes > 0);
         }
         assert_eq!(report.total_disputes(), 0);
+        assert!(report.revoked.is_empty());
         assert!(report.jobs_per_sec() > 0.0);
     }
 
@@ -255,7 +855,8 @@ mod tests {
 
     #[test]
     fn lanes_run_jobs_concurrently_from_one_queue() {
-        // 4 workers, k=2 → 2 lanes; 6 jobs must all resolve exactly once.
+        // 4 workers, k=2: several jobs in flight at once off one queue; 6
+        // jobs must all resolve exactly once and every lease must return.
         let pool = in_process_pool(&[FaultPlan::Honest; 4]);
         let report = run_service(jobs(6, 3), &pool, 2);
         assert_eq!(report.outcomes.len(), 6);
@@ -265,5 +866,100 @@ mod tests {
         let json = report.to_json();
         assert!(json.contains("\"jobs\":6"), "{json}");
         assert!(json.contains("\"resolved\":6"), "{json}");
+        assert!(json.contains("\"requeued\":0"), "{json}");
+        assert!(json.contains("\"eliminated\":0"), "{json}");
+    }
+
+    #[test]
+    fn blocking_baseline_still_resolves_the_batch() {
+        let pool = in_process_pool(&[
+            FaultPlan::Honest,
+            FaultPlan::Honest,
+            FaultPlan::WrongData { step: Some(2) },
+        ]);
+        let report = run_service_blocking(jobs(4, 4), &pool, 3);
+        assert_eq!(report.outcomes.len(), 4);
+        for o in &report.outcomes {
+            assert!(o.accepted.is_some());
+            assert_eq!(o.eliminated, 1, "the poisoner is convicted each job");
+        }
+        assert!(report.threads >= 4, "thread-per-dispatch baseline");
+    }
+
+    #[test]
+    fn stalled_worker_is_revoked_and_job_requeues() {
+        // w2 stalls on its very first request (the Train dispatch): its
+        // deadline fires, its lease is revoked, the job re-queues and
+        // completes on the two honest survivors.
+        let pool = in_process_pool(&[
+            FaultPlan::Honest,
+            FaultPlan::Honest,
+            FaultPlan::Stall { at_request: 1 },
+        ]);
+        let js = jobs(3, 3);
+        let expected: Vec<Hash> =
+            js.iter().map(|s| TrainerNode::honest("ref", *s).train()).collect();
+        let mut cfg = ServiceConfig::new(2);
+        cfg.dispatch_deadline = Duration::from_millis(800);
+        let report = run_service_with(js, &pool, cfg);
+
+        assert_eq!(report.outcomes.len(), 3);
+        for o in &report.outcomes {
+            assert_eq!(o.accepted, Some(expected[o.job_id as usize]), "job {}", o.job_id);
+        }
+        assert_eq!(report.revoked, vec!["w2".to_string()]);
+        assert_eq!(pool.size(), 2, "pool shrank by the revoked worker");
+        assert_eq!(pool.idle(), 2, "surviving leases all returned");
+        assert_eq!(report.total_requeued(), 1, "exactly one job paid a re-queue");
+        let victim: Vec<&JobOutcome> =
+            report.outcomes.iter().filter(|o| o.requeues > 0).collect();
+        assert_eq!(victim.len(), 1);
+        assert_eq!(victim[0].revoked, 1);
+        let json = report.to_json();
+        assert!(json.contains("\"requeued\":1"), "{json}");
+        assert!(json.contains("\"revoked\":1"), "{json}");
+    }
+
+    #[test]
+    fn health_check_ping_revokes_stalled_idle_worker() {
+        // w1 never answers anything. A long dispatch deadline keeps the
+        // dispatch path from catching it; the health-check ping must. The
+        // single job runs on w0 while w1 idles, gets pinged, misses the
+        // ping deadline, and is revoked.
+        let pool = in_process_pool(&[
+            FaultPlan::Honest,
+            FaultPlan::Stall { at_request: 1 },
+        ]);
+        let mut cfg = ServiceConfig::new(1);
+        cfg.dispatch_deadline = Duration::from_secs(60);
+        cfg.health_check = Some(Duration::from_millis(1));
+        cfg.ping_deadline = Duration::from_millis(120);
+        let report = run_service_with(jobs(1, 8), &pool, cfg);
+
+        assert_eq!(report.outcomes.len(), 1);
+        assert!(report.outcomes[0].accepted.is_some());
+        assert_eq!(report.revoked, vec!["w1".to_string()]);
+        assert_eq!(pool.size(), 1);
+        assert_eq!(pool.idle(), 1);
+    }
+
+    #[test]
+    fn exhausted_requeues_report_unresolved_not_hang() {
+        // Every worker stalls: each attempt revokes the whole lease, and
+        // once the pool is empty the job must be reported unresolved
+        // rather than hanging the coordinator.
+        let pool = in_process_pool(&[
+            FaultPlan::Stall { at_request: 1 },
+            FaultPlan::Stall { at_request: 1 },
+        ]);
+        let mut cfg = ServiceConfig::new(2);
+        cfg.dispatch_deadline = Duration::from_millis(200);
+        cfg.max_requeues = 4;
+        let report = run_service_with(jobs(1, 3), &pool, cfg);
+        assert_eq!(report.outcomes.len(), 1);
+        assert!(report.outcomes[0].accepted.is_none());
+        assert_eq!(report.outcomes[0].revoked, 2, "both stallers revoked");
+        assert_eq!(pool.size(), 0, "nobody left");
+        assert_eq!(report.revoked.len(), 2);
     }
 }

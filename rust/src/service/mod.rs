@@ -1,29 +1,40 @@
-//! The delegation **service**: a coordinator that accepts many training
-//! jobs, schedules each onto `k` workers drawn from a shared pool, collects
-//! final commitments, and resolves disagreements with concurrent dispute
-//! tournaments — the deployment shape of the paper's client/trainers/referee
-//! topology at many-jobs scale.
+//! The delegation **service**: an event-driven coordinator that accepts
+//! many training jobs, schedules each onto `k` workers drawn from a shared
+//! pool, collects final commitments off a completion queue, and resolves
+//! disagreements with concurrent dispute tournaments — the deployment shape
+//! of the paper's client/trainers/referee topology at many-jobs scale, with
+//! the untrusted-provider failure modes (hangs, dead sockets) handled by
+//! per-request deadlines and lease revocation.
 //!
-//! * [`pool`] — a blocking free-list of worker endpoints; jobs acquire `k`
-//!   workers atomically and return them when resolved.
+//! * [`pool`] — the leasable worker free-list. Jobs acquire `k` workers
+//!   atomically; a worker that misses a dispatch deadline or health-check
+//!   ping is **revoked** (never returns, pool shrinks). Each
+//!   [`pool::PooledWorker`] fronts a blocking endpoint, an actor thread, or
+//!   a multiplexed TCP connection behind one non-blocking dispatch surface.
 //! * [`worker`] — [`worker::WorkerHost`]: the worker-process brain. It
 //!   accepts [`Request::Train`](crate::verde::protocol::Request) job
 //!   assignments, runs them through a
 //!   [`TrainerNode`](crate::verde::trainer::TrainerNode) (honestly or under
-//!   a configured [`worker::FaultPlan`]), and then answers dispute queries
-//!   for the active job.
-//! * [`coordinator`] — [`coordinator::run_service`]: the job queue,
-//!   scheduler lanes, per-job tournaments, and aggregate
-//!   throughput/latency/byte metrics.
+//!   a configured [`worker::FaultPlan`], including
+//!   [`worker::FaultPlan::Stall`] — hanging mid-protocol), answers
+//!   health-check pings, and serves dispute queries for the active job.
+//! * [`coordinator`] — [`coordinator::run_service`]: per-job state machines
+//!   driven off one completion queue by a single event-loop thread plus a
+//!   small tournament-resolver pool; deadline expiry → lease revocation →
+//!   job re-queue. The thread-per-dispatch baseline survives as
+//!   [`coordinator::run_service_blocking`].
 //!
 //! Workers can live anywhere an [`Endpoint`](crate::net::Endpoint) can:
 //! in-process, on threads ([`crate::net::threaded`]), or in separate
-//! processes over TCP ([`crate::net::tcp`], `verde worker --listen`).
+//! processes over TCP — blocking ([`crate::net::tcp`]) or multiplexed
+//! ([`crate::net::mux`], thousands of workers per coordinator thread).
 
 pub mod coordinator;
 pub mod pool;
 pub mod worker;
 
-pub use coordinator::{run_service, JobOutcome, ServiceReport};
+pub use coordinator::{
+    run_service, run_service_blocking, run_service_with, JobOutcome, ServiceConfig, ServiceReport,
+};
 pub use pool::{PooledWorker, WorkerPool};
 pub use worker::{FaultPlan, WorkerHost};

@@ -1,29 +1,285 @@
-//! A blocking pool of worker endpoints. Scheduler lanes acquire `k`
-//! workers **atomically** (all-or-nothing under one lock), which keeps the
-//! acquire path deadlock-free: a lane either gets its full complement or
-//! sleeps without holding anything.
+//! The worker pool: a free-list of leasable worker endpoints with
+//! **lease revocation**. Scheduler state machines acquire `k` workers
+//! **atomically** (all-or-nothing under one lock) which keeps the acquire
+//! path deadlock-free, and hand back each worker either by releasing it
+//! (healthy) or revoking it (missed a dispatch deadline or health-check
+//! ping). A revoked worker leaves the pool permanently: it never re-enters
+//! the free list and [`WorkerPool::size`] shrinks.
+//!
+//! Workers are held as [`PooledWorker`]s, which unify three transports
+//! behind one dispatch surface:
+//!
+//! * **Blocking** — any [`Endpoint`] (in-process [`WorkerHost`]
+//!   (crate::service::worker::WorkerHost), threaded remote, blocking TCP).
+//! * **Actor** — the same endpoint activated onto its own mailbox thread so
+//!   the event-driven coordinator can dispatch without blocking; the
+//!   endpoint is recovered when the actor is deactivated.
+//! * **Mux** — a [`MuxConn`] on the non-blocking multiplexer: no
+//!   coordinator-side thread at all, deadlines enforced by the mux driver.
+//!
+//! All three offer the non-blocking [`PooledWorker::dispatch`] (completions
+//! arrive on a channel) and the blocking [`Endpoint`] adapter used by
+//! dispute tournaments.
 
 use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
+use crate::net::mux::{Completion, CompletionKind, MuxConn};
 use crate::net::Endpoint;
+use crate::verde::protocol::{Request, Response};
+
+/// Message into a worker actor's mailbox.
+enum ActorMsg {
+    Dispatch { token: u64, req: Request, reply: Sender<Completion> },
+    Stop,
+}
+
+/// A blocking endpoint running on its own mailbox thread, so dispatches
+/// return immediately and the caller collects the answer as a
+/// [`Completion`]. Deadlines for actor-backed workers are enforced by the
+/// coordinator's timer (the actor itself cannot be interrupted — a stalled
+/// endpoint strands its thread, which is exactly the failure the service
+/// layer revokes leases over).
+struct ActorHandle {
+    tx: Sender<ActorMsg>,
+    join: JoinHandle<Box<dyn Endpoint + Send>>,
+    reply_tx: Sender<Completion>,
+    reply_rx: Receiver<Completion>,
+    next_call_tag: u64,
+}
+
+fn spawn_actor(name: &str, mut endpoint: Box<dyn Endpoint + Send>) -> ActorHandle {
+    let (tx, rx) = channel::<ActorMsg>();
+    let join = std::thread::Builder::new()
+        .name(format!("verde-actor-{name}"))
+        .spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    ActorMsg::Dispatch { token, req, reply } => {
+                        let resp = endpoint.call(req);
+                        let _ = reply.send(Completion {
+                            token,
+                            kind: CompletionKind::Answered,
+                            resp,
+                        });
+                    }
+                    ActorMsg::Stop => break,
+                }
+            }
+            endpoint
+        })
+        .expect("spawn worker actor");
+    let (reply_tx, reply_rx) = channel();
+    ActorHandle {
+        tx,
+        join,
+        reply_tx,
+        reply_rx,
+        // Blocking calls tag from the top half of the space, mirroring the
+        // mux convention: dispatch tokens stay below 2^63.
+        next_call_tag: 1 << 63,
+    }
+}
+
+/// The transport behind one pooled worker.
+enum Link {
+    Blocking(Box<dyn Endpoint + Send>),
+    Actor(ActorHandle),
+    Mux(MuxConn),
+    /// The worker was lost (actor thread panicked / link torn down).
+    Dead(String),
+}
 
 /// A worker endpoint owned by the pool, addressable by name in reports.
 pub struct PooledWorker {
     pub name: String,
-    pub endpoint: Box<dyn Endpoint + Send>,
+    link: Link,
+    /// Deadline applied to blocking calls routed through an actor link.
+    call_deadline: Duration,
+    /// Latched when a blocking call through this worker went unanswered;
+    /// the coordinator revokes the lease of a faulted worker at job end.
+    faulted: bool,
 }
 
 impl PooledWorker {
+    /// Wrap any blocking endpoint (in-process host, threaded remote,
+    /// blocking TCP endpoint).
     pub fn new(name: &str, endpoint: impl Endpoint + Send + 'static) -> PooledWorker {
-        PooledWorker { name: name.to_string(), endpoint: Box::new(endpoint) }
+        PooledWorker {
+            name: name.to_string(),
+            link: Link::Blocking(Box::new(endpoint)),
+            call_deadline: Duration::from_secs(60),
+            faulted: false,
+        }
+    }
+
+    /// Wrap a multiplexed connection — the zero-thread-per-worker shape.
+    pub fn mux(name: &str, conn: MuxConn) -> PooledWorker {
+        PooledWorker {
+            name: name.to_string(),
+            link: Link::Mux(conn),
+            call_deadline: Duration::from_secs(60),
+            faulted: false,
+        }
+    }
+
+    /// Deadline for blocking calls (dispute/tournament traffic). Applies
+    /// to actor and mux links; a plain blocking link runs unbounded, which
+    /// is the pre-event-core behavior tests rely on.
+    pub fn set_call_deadline(&mut self, d: Duration) {
+        self.call_deadline = d;
+        if let Link::Mux(_) = self.link {
+            // Rebuild the mux handle's deadline in place.
+            let link = std::mem::replace(&mut self.link, Link::Dead(String::new()));
+            if let Link::Mux(conn) = link {
+                self.link = Link::Mux(conn.with_call_deadline(d));
+            }
+        }
+    }
+
+    /// Move a blocking endpoint onto its own actor thread so dispatches
+    /// don't block the event loop. Idempotent; no-op for mux links.
+    /// Returns `true` when a thread was actually spawned, so callers can
+    /// account coordinator-side threads honestly.
+    pub fn activate(&mut self) -> bool {
+        if matches!(self.link, Link::Blocking(_)) {
+            let link = std::mem::replace(&mut self.link, Link::Dead(String::new()));
+            if let Link::Blocking(endpoint) = link {
+                self.link = Link::Actor(spawn_actor(&self.name, endpoint));
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Stop the actor thread and recover the blocking endpoint. Only safe
+    /// for responsive workers (a stalled actor never drains its mailbox);
+    /// the coordinator revokes unresponsive workers instead of
+    /// deactivating them.
+    pub fn deactivate(&mut self) {
+        if matches!(self.link, Link::Actor(_)) {
+            let link = std::mem::replace(&mut self.link, Link::Dead(String::new()));
+            if let Link::Actor(actor) = link {
+                let _ = actor.tx.send(ActorMsg::Stop);
+                match actor.join.join() {
+                    Ok(endpoint) => self.link = Link::Blocking(endpoint),
+                    Err(_) => self.link = Link::Dead("worker actor panicked".into()),
+                }
+            }
+        }
+    }
+
+    /// Non-blocking dispatch: enqueue `req` under `token`; the answer (or
+    /// a synthesized refusal) arrives on `reply`. For mux links the
+    /// deadline is enforced by the mux driver; for actor links the
+    /// coordinator's timer enforces it (the actor cannot be interrupted).
+    pub fn dispatch(
+        &mut self,
+        token: u64,
+        req: Request,
+        deadline: Option<Instant>,
+        reply: &Sender<Completion>,
+    ) {
+        let _ = self.activate();
+        match &mut self.link {
+            Link::Mux(conn) => conn.submit(token, &req, deadline, reply),
+            Link::Actor(actor) => {
+                let msg = ActorMsg::Dispatch { token, req, reply: reply.clone() };
+                if actor.tx.send(msg).is_err() {
+                    let _ = reply.send(Completion {
+                        token,
+                        kind: CompletionKind::Transport,
+                        resp: Response::Refuse(format!("{}: worker actor gone", self.name)),
+                    });
+                }
+            }
+            Link::Blocking(_) => unreachable!("activate() precedes dispatch"),
+            Link::Dead(why) => {
+                let _ = reply.send(Completion {
+                    token,
+                    kind: CompletionKind::Transport,
+                    resp: Response::Refuse(format!("{}: {why}", self.name)),
+                });
+            }
+        }
+    }
+
+    /// True once any request through this worker went unanswered (blocking
+    /// call deadline, mux deadline, or dead transport).
+    pub fn faulted(&self) -> bool {
+        if self.faulted {
+            return true;
+        }
+        match &self.link {
+            Link::Mux(conn) => conn.faulted(),
+            Link::Dead(_) => true,
+            _ => false,
+        }
+    }
+
+    /// Clear the fault latch at the start of a fresh lease.
+    pub fn reset_fault(&mut self) {
+        self.faulted = false;
+        if let Link::Mux(conn) = &mut self.link {
+            conn.reset_fault();
+        }
     }
 }
 
-/// Free-list of idle workers plus a condvar for lanes waiting on capacity.
-pub struct WorkerPool {
+impl Endpoint for PooledWorker {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Blocking adapter over whichever link backs this worker — disputes
+    /// and tournaments run over it unchanged.
+    fn call(&mut self, req: Request) -> Response {
+        match &mut self.link {
+            Link::Blocking(endpoint) => endpoint.call(req),
+            Link::Mux(conn) => conn.call(req),
+            Link::Actor(actor) => {
+                let tag = actor.next_call_tag;
+                actor.next_call_tag += 1;
+                let msg = ActorMsg::Dispatch { token: tag, req, reply: actor.reply_tx.clone() };
+                if actor.tx.send(msg).is_err() {
+                    self.faulted = true;
+                    return Response::Refuse(format!("{}: worker actor gone", self.name));
+                }
+                loop {
+                    match actor.reply_rx.recv_timeout(self.call_deadline) {
+                        Ok(c) if c.token == tag => return c.resp,
+                        // Stale answer from an earlier abandoned call.
+                        Ok(_) => continue,
+                        Err(_) => {
+                            self.faulted = true;
+                            return Response::Refuse(format!(
+                                "{}: deadline expired before the worker answered",
+                                self.name
+                            ));
+                        }
+                    }
+                }
+            }
+            Link::Dead(why) => Response::Refuse(format!("{}: {why}", self.name)),
+        }
+    }
+}
+
+struct PoolState {
+    free: VecDeque<PooledWorker>,
+    /// Live workers (idle + leased); shrinks on revocation.
     size: usize,
-    free: Mutex<VecDeque<PooledWorker>>,
+    /// Names of revoked workers, in revocation order.
+    revoked: Vec<String>,
+}
+
+/// Free-list of idle workers plus a condvar for callers waiting on
+/// capacity, with permanent lease revocation.
+pub struct WorkerPool {
+    state: Mutex<PoolState>,
     available: Condvar,
 }
 
@@ -33,41 +289,86 @@ impl WorkerPool {
     pub fn new(workers: Vec<PooledWorker>) -> WorkerPool {
         assert!(!workers.is_empty(), "a pool needs at least one worker");
         WorkerPool {
-            size: workers.len(),
-            free: Mutex::new(workers.into()),
+            state: Mutex::new(PoolState {
+                size: workers.len(),
+                free: workers.into(),
+                revoked: Vec::new(),
+            }),
             available: Condvar::new(),
         }
     }
 
-    /// Total workers owned by the pool (idle + leased).
+    /// Live workers owned by the pool (idle + leased, revoked excluded).
     pub fn size(&self) -> usize {
-        self.size
+        self.state.lock().unwrap().size
     }
 
     /// Idle workers right now (diagnostic; racy by nature).
     pub fn idle(&self) -> usize {
-        self.free.lock().unwrap().len()
+        self.state.lock().unwrap().free.len()
+    }
+
+    /// Names of workers whose leases were revoked, in revocation order.
+    pub fn revoked(&self) -> Vec<String> {
+        self.state.lock().unwrap().revoked.clone()
     }
 
     /// Block until `k` workers are free, then take them all at once.
     ///
     /// # Panics
-    /// If `k` exceeds the pool size (would deadlock) or `k == 0`.
+    /// If `k == 0`, or if `k` exceeds the pool's live size (at entry or
+    /// after revocations shrink the pool below `k` while waiting — the
+    /// panic is the deadlock-free alternative to waiting forever).
     pub fn acquire(&self, k: usize) -> Vec<PooledWorker> {
         assert!(k >= 1, "acquire(0) is meaningless");
-        assert!(k <= self.size, "acquire({k}) from a pool of {}", self.size);
-        let mut free = self.free.lock().unwrap();
-        while free.len() < k {
-            free = self.available.wait(free).unwrap();
+        let mut st = self.state.lock().unwrap();
+        loop {
+            assert!(k <= st.size, "acquire({k}) from a pool of {}", st.size);
+            if st.free.len() >= k {
+                return st.free.drain(..k).collect();
+            }
+            st = self.available.wait(st).unwrap();
         }
-        free.drain(..k).collect()
     }
 
-    /// Return leased workers and wake waiting lanes.
+    /// Take `k` workers if they are free right now, else `None` — the
+    /// event-driven coordinator's non-blocking acquire.
+    pub fn try_acquire(&self, k: usize) -> Option<Vec<PooledWorker>> {
+        if k == 0 {
+            return Some(Vec::new());
+        }
+        let mut st = self.state.lock().unwrap();
+        if st.free.len() >= k {
+            Some(st.free.drain(..k).collect())
+        } else {
+            None
+        }
+    }
+
+    /// Take every currently idle worker (health-check sweeps, teardown).
+    pub fn drain_idle(&self) -> Vec<PooledWorker> {
+        let mut st = self.state.lock().unwrap();
+        st.free.drain(..).collect()
+    }
+
+    /// Return leased workers and wake waiting acquirers.
     pub fn release(&self, workers: Vec<PooledWorker>) {
-        let mut free = self.free.lock().unwrap();
-        free.extend(workers);
-        drop(free);
+        let mut st = self.state.lock().unwrap();
+        st.free.extend(workers);
+        drop(st);
+        self.available.notify_all();
+    }
+
+    /// Permanently expel a leased worker: it never re-enters the free list
+    /// and the pool's size shrinks. Waiting acquirers are woken so an
+    /// acquire that can no longer be satisfied panics instead of sleeping
+    /// forever.
+    pub fn revoke(&self, worker: PooledWorker) {
+        let mut st = self.state.lock().unwrap();
+        st.size -= 1;
+        st.revoked.push(worker.name.clone());
+        drop(st);
+        drop(worker);
         self.available.notify_all();
     }
 
@@ -75,14 +376,13 @@ impl WorkerPool {
     /// orderly shutdown: callers typically send `Request::Shutdown` to
     /// each endpoint). Leased workers must be released first.
     pub fn into_workers(self) -> Vec<PooledWorker> {
-        self.free.into_inner().unwrap().into_iter().collect()
+        self.state.into_inner().unwrap().free.into_iter().collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::verde::protocol::{Request, Response};
 
     struct Nop;
 
@@ -95,9 +395,13 @@ mod tests {
         }
     }
 
+    fn pool_of(n: usize) -> WorkerPool {
+        WorkerPool::new((0..n).map(|i| PooledWorker::new(&format!("w{i}"), Nop)).collect())
+    }
+
     #[test]
     fn acquire_release_roundtrip() {
-        let pool = WorkerPool::new((0..4).map(|i| PooledWorker::new(&format!("w{i}"), Nop)).collect());
+        let pool = pool_of(4);
         assert_eq!(pool.size(), 4);
         let lease = pool.acquire(3);
         assert_eq!(lease.len(), 3);
@@ -110,9 +414,7 @@ mod tests {
     #[test]
     fn blocked_acquire_wakes_on_release() {
         use std::sync::Arc;
-        let pool = Arc::new(WorkerPool::new(
-            (0..2).map(|i| PooledWorker::new(&format!("w{i}"), Nop)).collect(),
-        ));
+        let pool = Arc::new(pool_of(2));
         let lease = pool.acquire(2);
         let p2 = Arc::clone(&pool);
         let waiter = std::thread::spawn(move || p2.acquire(2).len());
@@ -124,7 +426,89 @@ mod tests {
     #[test]
     #[should_panic(expected = "acquire(3) from a pool of 2")]
     fn oversubscription_panics_rather_than_deadlocks() {
-        let pool = WorkerPool::new((0..2).map(|i| PooledWorker::new(&format!("w{i}"), Nop)).collect());
+        let pool = pool_of(2);
         pool.acquire(3);
+    }
+
+    #[test]
+    fn revoked_worker_never_returns_and_size_shrinks() {
+        let pool = pool_of(3);
+        let mut lease = pool.acquire(2);
+        let victim = lease.pop().unwrap();
+        let victim_name = victim.name.clone();
+        pool.revoke(victim);
+        assert_eq!(pool.size(), 2, "revocation shrinks the pool");
+        assert_eq!(pool.revoked(), vec![victim_name.clone()]);
+        pool.release(lease);
+        assert_eq!(pool.idle(), 2);
+        // the revoked name is not among the survivors
+        let names: Vec<String> =
+            pool.into_workers().into_iter().map(|w| w.name).collect();
+        assert_eq!(names.len(), 2);
+        assert!(!names.contains(&victim_name), "{names:?}");
+    }
+
+    #[test]
+    fn try_acquire_never_blocks() {
+        let pool = pool_of(2);
+        let lease = pool.try_acquire(2).expect("both free");
+        assert!(pool.try_acquire(1).is_none(), "everything is leased");
+        pool.release(lease);
+        assert!(pool.try_acquire(1).is_some());
+    }
+
+    #[test]
+    fn actor_roundtrip_activate_dispatch_deactivate() {
+        let mut w = PooledWorker::new("w0", Nop);
+        assert!(w.activate(), "first activation spawns the actor");
+        assert!(!w.activate(), "activation is idempotent");
+        let (tx, rx) = channel();
+        w.dispatch(7, Request::FinalCommit, None, &tx);
+        let c = rx.recv_timeout(Duration::from_secs(5)).expect("completion");
+        assert_eq!(c.token, 7);
+        assert_eq!(c.kind, CompletionKind::Answered);
+        assert!(matches!(c.resp, Response::Bye));
+        // blocking adapter works through the actor too
+        assert!(matches!(w.call(Request::FinalCommit), Response::Bye));
+        // deactivation hands the endpoint back; blocking calls keep working
+        w.deactivate();
+        assert!(matches!(w.call(Request::FinalCommit), Response::Bye));
+        assert!(!w.faulted());
+    }
+
+    /// An endpoint that never answers its second request — the actor-link
+    /// equivalent of a worker process hanging mid-protocol.
+    struct StallSecond {
+        seen: u64,
+    }
+
+    impl Endpoint for StallSecond {
+        fn name(&self) -> &str {
+            "stall2"
+        }
+        fn call(&mut self, _req: Request) -> Response {
+            self.seen += 1;
+            if self.seen >= 2 {
+                loop {
+                    std::thread::sleep(Duration::from_secs(3600));
+                }
+            }
+            Response::Bye
+        }
+    }
+
+    #[test]
+    fn blocking_call_deadline_latches_fault_on_stalled_actor() {
+        let mut w = PooledWorker::new("w0", StallSecond { seen: 0 });
+        w.set_call_deadline(Duration::from_millis(100));
+        w.activate();
+        assert!(matches!(w.call(Request::FinalCommit), Response::Bye));
+        assert!(!w.faulted());
+        let t0 = Instant::now();
+        let resp = w.call(Request::FinalCommit);
+        assert!(matches!(resp, Response::Refuse(_)), "{resp:?}");
+        assert!(w.faulted(), "missed deadline latches the fault");
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        // do NOT deactivate: the actor is stranded. Dropping w detaches it.
     }
 }

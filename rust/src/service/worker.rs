@@ -37,12 +37,18 @@ pub enum FaultPlan {
     ForgedLineage { step: Option<u64> },
     /// Commit inconsistently between Phase 1 and Phase 2 at `step`.
     InconsistentCommit { step: Option<u64> },
+    /// Stop responding from protocol request number `at_request` on (1 =
+    /// the first request, typically the `Train` dispatch itself). Models a
+    /// worker that hangs mid-protocol: the request never returns, so only
+    /// deadline expiry and lease revocation can unblock the job.
+    Stall { at_request: u64 },
 }
 
 impl FaultPlan {
     /// Parse CLI syntax: `none` | `kind` | `kind@step`, with kinds
     /// `tamper`, `wrong-op`, `wrong-data`, `skip-opt`, `skip-steps`,
-    /// `forged-lineage`, `inconsistent`.
+    /// `forged-lineage`, `inconsistent`, `stall` (`stall@N` = stop
+    /// responding from protocol request `N` on).
     pub fn parse(s: &str) -> Option<FaultPlan> {
         let (kind, step) = match s.split_once('@') {
             Some((k, v)) => (k, Some(v.parse::<u64>().ok()?)),
@@ -57,6 +63,7 @@ impl FaultPlan {
             "skip-steps" => FaultPlan::SkipSteps { after: step },
             "forged-lineage" => FaultPlan::ForgedLineage { step },
             "inconsistent" => FaultPlan::InconsistentCommit { step },
+            "stall" => FaultPlan::Stall { at_request: step.unwrap_or(1).max(1) },
             _ => return None,
         })
     }
@@ -104,6 +111,9 @@ impl FaultPlan {
             FaultPlan::InconsistentCommit { step } => {
                 Fault::InconsistentCommit { step: Self::step_for(step, spec) }
             }
+            // The stall lives at the request layer (the host never answers),
+            // not in the training computation itself.
+            FaultPlan::Stall { .. } => Fault::None,
         }
     }
 }
@@ -119,6 +129,7 @@ impl fmt::Display for FaultPlan {
             FaultPlan::SkipSteps { after } => write!(f, "skip-steps@{after:?}"),
             FaultPlan::ForgedLineage { step } => write!(f, "forged-lineage@{step:?}"),
             FaultPlan::InconsistentCommit { step } => write!(f, "inconsistent@{step:?}"),
+            FaultPlan::Stall { at_request } => write!(f, "stall@{at_request}"),
         }
     }
 }
@@ -130,6 +141,8 @@ pub struct WorkerHost {
     plan: FaultPlan,
     backend: Backend,
     active: Option<TrainerNode>,
+    /// Protocol requests seen so far (drives [`FaultPlan::Stall`]).
+    requests_seen: u64,
     pub counters: Counters,
 }
 
@@ -140,6 +153,7 @@ impl WorkerHost {
             plan,
             backend: Backend::Rep,
             active: None,
+            requests_seen: 0,
             counters: Counters::new(),
         }
     }
@@ -160,8 +174,29 @@ impl Endpoint for WorkerHost {
     }
 
     fn call(&mut self, req: Request) -> Response {
+        self.requests_seen += 1;
+        if let FaultPlan::Stall { at_request } = self.plan {
+            if self.requests_seen >= at_request {
+                // Hang mid-protocol, never answering: the caller's only
+                // way out is its deadline. (The thread serving this host
+                // is deliberately stranded — exactly what a hung worker
+                // process does to its connection.)
+                loop {
+                    std::thread::sleep(std::time::Duration::from_secs(3600));
+                }
+            }
+        }
         match req {
             Request::Train { spec } => {
+                // Re-delegation of the active job (a re-queued assignment
+                // after a peer's lease was revoked): determinism makes the
+                // cached commitment exact, so skip the retrain.
+                if let Some(active) = &mut self.active {
+                    if active.session.spec == spec {
+                        self.counters.incr("jobs_cached");
+                        return Response::Commit(active.final_commit());
+                    }
+                }
                 // Drop the previous job before training so a failure can
                 // never leave a stale job answering dispute queries.
                 self.active = None;
@@ -175,6 +210,7 @@ impl Endpoint for WorkerHost {
                 self.active = Some(trainer);
                 Response::Commit(commit)
             }
+            Request::Ping => Response::Pong,
             Request::Shutdown => Response::Bye,
             other => match &mut self.active {
                 Some(trainer) => trainer.call(other),
@@ -201,8 +237,46 @@ mod tests {
             Some(FaultPlan::SkipSteps { after: Some(2) })
         );
         assert_eq!(FaultPlan::parse("wrong-data"), Some(FaultPlan::WrongData { step: None }));
+        assert_eq!(
+            FaultPlan::parse("stall@3"),
+            Some(FaultPlan::Stall { at_request: 3 })
+        );
+        assert_eq!(FaultPlan::parse("stall"), Some(FaultPlan::Stall { at_request: 1 }));
         assert_eq!(FaultPlan::parse("nonsense"), None);
         assert_eq!(FaultPlan::parse("tamper@x"), None);
+    }
+
+    #[test]
+    fn ping_answers_pong_without_touching_job_state() {
+        let mut host = WorkerHost::new("w0", FaultPlan::Honest);
+        assert!(matches!(host.call(Request::Ping), Response::Pong));
+        let spec = JobSpec::quick(Preset::Mlp, 4);
+        let commit = match host.call(Request::Train { spec }) {
+            Response::Commit(h) => h,
+            other => panic!("{other:?}"),
+        };
+        assert!(matches!(host.call(Request::Ping), Response::Pong));
+        match host.call(Request::FinalCommit) {
+            Response::Commit(h) => assert_eq!(h, commit, "ping left the job intact"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn redelegated_identical_job_answers_from_cache() {
+        let spec = JobSpec::quick(Preset::Mlp, 4);
+        let mut host = WorkerHost::new("w0", FaultPlan::Honest);
+        let first = match host.call(Request::Train { spec }) {
+            Response::Commit(h) => h,
+            other => panic!("{other:?}"),
+        };
+        let second = match host.call(Request::Train { spec }) {
+            Response::Commit(h) => h,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(first, second);
+        assert_eq!(host.counters.get("jobs_trained"), 1, "no retrain");
+        assert_eq!(host.counters.get("jobs_cached"), 1);
     }
 
     #[test]

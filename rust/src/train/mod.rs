@@ -15,7 +15,7 @@ use crate::model::Preset;
 /// Everything the client fixes up front. All parties (trainers, referee)
 /// derive identical programs, initial states, and data streams from this —
 /// the paper's "program setup" plus training metadata.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct JobSpec {
     pub preset: Preset,
     pub batch: usize,

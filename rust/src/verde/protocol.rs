@@ -37,6 +37,11 @@ pub enum Request {
     /// completion and answer with the final commitment. Subsequent dispute
     /// requests on the same connection address this job.
     Train { spec: JobSpec },
+    /// Liveness probe (service layer): a healthy worker answers
+    /// [`Response::Pong`] immediately without touching its active job. The
+    /// coordinator revokes the lease of a worker that misses its ping
+    /// deadline.
+    Ping,
     /// End the conversation (stream/threaded transports).
     Shutdown,
 }
@@ -71,6 +76,8 @@ pub enum Response {
     /// The trainer cannot or will not answer (counted as dishonest).
     Refuse(String),
     Bye,
+    /// Liveness answer to [`Request::Ping`].
+    Pong,
 }
 
 impl Request {
@@ -122,6 +129,7 @@ mod tests {
             Request::InputProof { step: 2, node_idx: 1 },
             Request::InputTensor { step: 2, node_idx: 1, input_idx: 0 },
             Request::Train { spec: JobSpec::quick(Preset::LlamaTiny, 64) },
+            Request::Ping,
             Request::Shutdown,
         ];
         for r in reqs {
@@ -133,6 +141,7 @@ mod tests {
             Response::TensorPayload(Tensor::rand([4, 5], 1, 1.0)),
             Response::Refuse("why".into()),
             Response::Bye,
+            Response::Pong,
         ];
         for r in resps {
             assert_eq!(r.wire_size(), r.encode().len(), "{r:?}");

@@ -409,6 +409,7 @@ impl Endpoint for TrainerNode {
                 // delegation is handled by `service::worker::WorkerHost`.
                 Response::Refuse("trainer is bound to a single job".into())
             }
+            Request::Ping => Response::Pong,
             Request::Shutdown => Response::Bye,
         }
     }

@@ -17,8 +17,11 @@
 //!   `u64` element counts before every variable-length sequence. No
 //!   varints, no compression, no reflection.
 //!
-//! Frame format on stream transports: `u32 LE payload length ‖ payload`,
-//! with payloads capped at [`MAX_FRAME`] bytes.
+//! Frame format on stream transports: `u32 LE payload length ‖ u64 LE
+//! correlation tag ‖ payload`, with payloads capped at [`MAX_FRAME`] bytes.
+//! The tag is chosen by the requester and echoed verbatim on the response
+//! frame, so many requests can be in flight per connection and completions
+//! are matched by tag, not arrival order ([`crate::net::mux`]).
 
 use std::fmt;
 use std::io::{self, Read, Write};
@@ -37,6 +40,10 @@ use super::protocol::{InputProvenance, Request, Response};
 /// hostile length prefixes while leaving room for full-tensor payloads.
 pub const MAX_FRAME: usize = 1 << 28;
 
+/// Bytes of framing overhead per message on stream transports: a `u32 LE`
+/// payload length followed by a `u64 LE` correlation tag.
+pub const FRAME_HEADER_LEN: usize = 12;
+
 /// Maximum tensor elements accepted by the decoder (payload ≤ [`MAX_FRAME`]).
 const MAX_TENSOR_ELEMS: usize = MAX_FRAME / 4;
 
@@ -53,6 +60,7 @@ const REQ_INPUT_PROOF: u8 = 0x05;
 const REQ_INPUT_TENSOR: u8 = 0x06;
 const REQ_SHUTDOWN: u8 = 0x07;
 const REQ_TRAIN: u8 = 0x08;
+const REQ_PING: u8 = 0x09;
 
 const RESP_COMMIT: u8 = 0x81;
 const RESP_HASHES: u8 = 0x82;
@@ -62,6 +70,7 @@ const RESP_PROOF: u8 = 0x85;
 const RESP_TENSOR: u8 = 0x86;
 const RESP_REFUSE: u8 = 0x87;
 const RESP_BYE: u8 = 0x88;
+const RESP_PONG: u8 = 0x89;
 
 const PROV_GENESIS: u8 = 0x01;
 const PROV_PREV_STEP: u8 = 0x02;
@@ -433,6 +442,7 @@ impl Request {
                 out.push(REQ_TRAIN);
                 put_spec(&mut out, spec);
             }
+            Request::Ping => out.push(REQ_PING),
         }
         debug_assert_eq!(out.len(), self.wire_size(), "wire_size drifted from encoder");
         out
@@ -474,6 +484,7 @@ impl Request {
             },
             REQ_SHUTDOWN => Request::Shutdown,
             REQ_TRAIN => Request::Train { spec: read_spec(&mut r)? },
+            REQ_PING => Request::Ping,
             tag => return Err(WireError::BadTag { context: "request", tag }),
         };
         r.finish()?;
@@ -485,7 +496,7 @@ impl Request {
 /// [`Request::wire_size`].
 pub fn request_wire_len(req: &Request) -> usize {
     1 + match req {
-        Request::FinalCommit | Request::Shutdown => 0,
+        Request::FinalCommit | Request::Shutdown | Request::Ping => 0,
         Request::CheckpointHashes { boundaries } => 8 + 8 * boundaries.len(),
         Request::NodeHashSeq { .. } => 8,
         Request::OpenNode { .. } | Request::InputProof { .. } => 16,
@@ -528,6 +539,7 @@ impl Response {
                 put_str(&mut out, s);
             }
             Response::Bye => out.push(RESP_BYE),
+            Response::Pong => out.push(RESP_PONG),
         }
         debug_assert_eq!(out.len(), self.wire_size(), "wire_size drifted from encoder");
         out
@@ -545,6 +557,7 @@ impl Response {
             RESP_TENSOR => Response::TensorPayload(read_tensor(&mut r)?),
             RESP_REFUSE => Response::Refuse(r.str("response.refuse")?),
             RESP_BYE => Response::Bye,
+            RESP_PONG => Response::Pong,
             tag => return Err(WireError::BadTag { context: "response", tag }),
         };
         r.finish()?;
@@ -562,7 +575,7 @@ pub fn response_wire_len(resp: &Response) -> usize {
         Response::Proof(p) => provenance_wire_len(p),
         Response::TensorPayload(t) => tensor_wire_len(t),
         Response::Refuse(s) => 8 + s.len(),
-        Response::Bye => 0,
+        Response::Bye | Response::Pong => 0,
     }
 }
 
@@ -570,34 +583,53 @@ pub fn response_wire_len(resp: &Response) -> usize {
 // frame I/O
 // ---------------------------------------------------------------------------
 
-/// Write one `u32 LE length ‖ payload` frame and flush.
-pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+/// Write one `u32 LE length ‖ u64 LE tag ‖ payload` frame and flush. The
+/// tag correlates this frame with its eventual answer: requesters pick a
+/// per-connection-unique tag, responders echo it back verbatim.
+pub fn write_frame(w: &mut impl Write, tag: u64, payload: &[u8]) -> io::Result<()> {
     assert!(payload.len() <= MAX_FRAME, "outgoing frame exceeds MAX_FRAME");
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&tag.to_le_bytes())?;
     w.write_all(payload)?;
     w.flush()
 }
 
-/// Read one frame. `Ok(None)` on clean EOF at a frame boundary; EOF inside
-/// a frame is [`WireError::Truncated`].
-pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, WireError> {
-    let mut len_buf = [0u8; 4];
+/// Serialize a full `(tag, payload)` frame into a buffer — the form the
+/// non-blocking multiplexer queues for readiness-driven writes.
+pub fn frame_bytes(tag: u64, payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_FRAME, "outgoing frame exceeds MAX_FRAME");
+    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&tag.to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Read one `(tag, payload)` frame. `Ok(None)` on clean EOF at a frame
+/// boundary; EOF inside a frame is [`WireError::Truncated`].
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(u64, Vec<u8>)>, WireError> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
     let mut got = 0;
-    while got < 4 {
-        match r.read(&mut len_buf[got..]) {
+    while got < FRAME_HEADER_LEN {
+        match r.read(&mut header[got..]) {
             Ok(0) if got == 0 => return Ok(None),
             Ok(0) => {
-                return Err(WireError::Truncated { context: "frame.len", need: 4, have: got })
+                return Err(WireError::Truncated {
+                    context: "frame.header",
+                    need: FRAME_HEADER_LEN,
+                    have: got,
+                })
             }
             Ok(n) => got += n,
             Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
             Err(e) => return Err(WireError::Io(e.to_string())),
         }
     }
-    let len = u32::from_le_bytes(len_buf) as usize;
+    let len = u32::from_le_bytes(header[0..4].try_into().expect("4 bytes")) as usize;
     if len > MAX_FRAME {
         return Err(WireError::FrameTooLarge { len });
     }
+    let tag = u64::from_le_bytes(header[4..12].try_into().expect("8 bytes"));
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload).map_err(|e| {
         if e.kind() == io::ErrorKind::UnexpectedEof {
@@ -606,7 +638,26 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, WireError> {
             WireError::Io(e.to_string())
         }
     })?;
-    Ok(Some(payload))
+    Ok(Some((tag, payload)))
+}
+
+/// Incremental frame parser for non-blocking transports: if `buf` starts
+/// with a complete frame, return `(tag, payload, bytes_consumed)`;
+/// `Ok(None)` means more bytes are needed. Never consumes a partial frame.
+pub fn split_frame(buf: &[u8]) -> Result<Option<(u64, Vec<u8>, usize)>, WireError> {
+    if buf.len() < FRAME_HEADER_LEN {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[0..4].try_into().expect("4 bytes")) as usize;
+    if len > MAX_FRAME {
+        return Err(WireError::FrameTooLarge { len });
+    }
+    let total = FRAME_HEADER_LEN + len;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let tag = u64::from_le_bytes(buf[4..12].try_into().expect("8 bytes"));
+    Ok(Some((tag, buf[FRAME_HEADER_LEN..total].to_vec(), total)))
 }
 
 #[cfg(test)]
@@ -640,6 +691,7 @@ mod tests {
             Request::InputProof { step: 9, node_idx: 2 },
             Request::InputTensor { step: 1, node_idx: 0, input_idx: 3 },
             Request::Shutdown,
+            Request::Ping,
             Request::Train {
                 spec: crate::train::JobSpec::quick(crate::model::Preset::Mlp, 12),
             },
@@ -666,6 +718,7 @@ mod tests {
             Response::TensorPayload(Tensor::scalar(2.5)),
             Response::Refuse("nope — not answering".into()),
             Response::Bye,
+            Response::Pong,
         ]
     }
 
@@ -783,15 +836,16 @@ mod tests {
     #[test]
     fn frames_roundtrip_and_reject_oversize() {
         let mut buf = Vec::new();
-        write_frame(&mut buf, b"hello").unwrap();
-        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, 7, b"hello").unwrap();
+        write_frame(&mut buf, u64::MAX, b"").unwrap();
         let mut cur = Cursor::new(buf);
-        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"hello");
-        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), (7, b"hello".to_vec()));
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), (u64::MAX, Vec::new()));
         assert!(read_frame(&mut cur).unwrap().is_none(), "clean EOF");
 
         let mut evil = Vec::new();
         evil.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        evil.extend_from_slice(&0u64.to_le_bytes());
         assert!(matches!(
             read_frame(&mut Cursor::new(evil)),
             Err(WireError::FrameTooLarge { .. })
@@ -799,11 +853,46 @@ mod tests {
 
         // EOF mid-frame is truncation, not a clean close.
         let mut cut = Vec::new();
-        write_frame(&mut cut, b"abcdef").unwrap();
-        cut.truncate(7);
+        write_frame(&mut cut, 3, b"abcdef").unwrap();
+        cut.truncate(FRAME_HEADER_LEN + 3);
         assert!(matches!(
             read_frame(&mut Cursor::new(cut)),
             Err(WireError::Truncated { .. })
         ));
+    }
+
+    #[test]
+    fn split_frame_parses_incrementally_and_echoes_tags() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 0xAB, b"first").unwrap();
+        write_frame(&mut buf, 0xCD, b"second!").unwrap();
+
+        // Feed the stream byte by byte: split_frame must return None until
+        // a whole frame is buffered, then consume exactly that frame.
+        let mut fed = Vec::new();
+        let mut seen = Vec::new();
+        for &b in &buf {
+            fed.push(b);
+            while let Some((tag, payload, consumed)) = split_frame(&fed).unwrap() {
+                seen.push((tag, payload));
+                fed.drain(..consumed);
+            }
+        }
+        assert!(fed.is_empty(), "all bytes consumed at frame boundaries");
+        assert_eq!(
+            seen,
+            vec![(0xAB, b"first".to_vec()), (0xCD, b"second!".to_vec())]
+        );
+
+        // frame_bytes agrees with write_frame byte-for-byte
+        let mut via_writer = Vec::new();
+        write_frame(&mut via_writer, 42, b"xyz").unwrap();
+        assert_eq!(frame_bytes(42, b"xyz"), via_writer);
+
+        // hostile length prefix is an error, not an allocation
+        let mut evil = Vec::new();
+        evil.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        evil.extend_from_slice(&0u64.to_le_bytes());
+        assert!(matches!(split_frame(&evil), Err(WireError::FrameTooLarge { .. })));
     }
 }

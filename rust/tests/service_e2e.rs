@@ -5,18 +5,23 @@
 //! protocol's `wire_size()` accounting exactly.
 
 use std::net::TcpListener;
+use std::time::{Duration, Instant};
 
 use verde::graph::kernels::Backend;
 use verde::hash::Hash;
 use verde::model::Preset;
+use verde::net::mux::Mux;
 use verde::net::tcp::{spawn_server, TcpEndpoint};
 use verde::net::{Endpoint, Metered};
-use verde::service::{run_service, FaultPlan, PooledWorker, WorkerHost, WorkerPool};
+use verde::service::{
+    run_service, run_service_with, FaultPlan, PooledWorker, ServiceConfig, WorkerHost, WorkerPool,
+};
 use verde::train::JobSpec;
 use verde::verde::faults::Fault;
 use verde::verde::protocol::Request;
 use verde::verde::run_dispute;
 use verde::verde::trainer::TrainerNode;
+use verde::verde::wire::FRAME_HEADER_LEN;
 
 fn ephemeral() -> TcpListener {
     TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port")
@@ -86,7 +91,7 @@ fn eight_plus_jobs_against_four_tcp_workers_reach_honest_verdicts() {
     // orderly shutdown: workers get Shutdown, server threads hand their
     // hosts back with 9 jobs trained each (every job visited all 4).
     for mut w in pool.into_workers() {
-        let _ = w.endpoint.call(Request::Shutdown);
+        let _ = w.call(Request::Shutdown);
     }
     for server in servers {
         let host = server.join().expect("worker thread");
@@ -128,17 +133,19 @@ fn tcp_dispute_bytes_match_wire_size_accounting_exactly() {
 
     for (who, m) in [("honest", &m0), ("cheat", &m1)] {
         let frames = m.counters.get("requests");
+        let header = FRAME_HEADER_LEN as u64;
         assert!(frames > 0, "{who}: dispute exchanged messages");
-        // requests: raw socket bytes == Σ wire_size + 4 per frame
+        // requests: raw socket bytes == Σ wire_size + one tagged frame
+        // header (u32 length + u64 correlation tag) per message
         assert_eq!(
             m.inner.raw_sent(),
-            m.bytes_sent() + 4 * frames,
+            m.bytes_sent() + header * frames,
             "{who}: request bytes on the wire must match wire_size() exactly"
         );
         // responses: one frame per request
         assert_eq!(
             m.inner.raw_received(),
-            m.bytes_received() + 4 * frames,
+            m.bytes_received() + header * frames,
             "{who}: response bytes on the wire must match wire_size() exactly"
         );
         // and the socket endpoint's own payload counters agree too
@@ -194,9 +201,97 @@ fn k2_lanes_share_the_pool_and_still_reach_honest_verdicts() {
     }
 
     for mut w in pool.into_workers() {
-        let _ = w.endpoint.call(Request::Shutdown);
+        let _ = w.call(Request::Shutdown);
     }
     for server in servers {
         server.join().unwrap();
     }
+}
+
+/// The event-core acceptance scenario: one of k = 4 TCP workers stalls
+/// mid-job (it never answers its `Train` dispatch). The per-request
+/// deadline fires, the worker's lease is revoked, the job re-queues onto
+/// the three survivors, and every job still reaches the honest verdict —
+/// all over **multiplexed** sockets with zero coordinator threads per
+/// worker, and without any thread left blocked on the dead socket.
+#[test]
+fn stalled_tcp_worker_is_revoked_and_job_requeues_to_honest_verdict() {
+    let plans = [
+        ("w0", FaultPlan::Honest),
+        ("w1", FaultPlan::Honest),
+        ("w2", FaultPlan::Tamper { step: Some(2), delta: 0.05 }),
+        ("w3", FaultPlan::Stall { at_request: 1 }),
+    ];
+    let mux = Mux::new();
+    let mut servers = Vec::new();
+    let mut workers = Vec::new();
+    for (name, plan) in plans {
+        let listener = ephemeral();
+        let addr = listener.local_addr().unwrap();
+        servers.push((name, spawn_server(listener, WorkerHost::new(name, plan), Some(1))));
+        let conn = mux.connect(name, addr).expect("connect worker");
+        workers.push(PooledWorker::mux(name, conn));
+    }
+    let pool = WorkerPool::new(workers);
+
+    let jobs: Vec<JobSpec> = (0..2u64)
+        .map(|i| {
+            let mut spec = JobSpec::quick(Preset::Mlp, 4);
+            spec.data_seed = spec.data_seed.wrapping_add(i * 6151);
+            spec
+        })
+        .collect();
+    let expected: Vec<Hash> = jobs.iter().map(|s| expected_honest(*s)).collect();
+
+    let mut cfg = ServiceConfig::new(4);
+    cfg.dispatch_deadline = Duration::from_secs(3);
+    let t0 = Instant::now();
+    let report = run_service_with(jobs, &pool, cfg);
+
+    assert_eq!(report.outcomes.len(), 2);
+    for o in &report.outcomes {
+        assert_eq!(
+            o.accepted,
+            Some(expected[o.job_id as usize]),
+            "job {} must still reach the honest verdict",
+            o.job_id
+        );
+        let winner = o.winner.as_deref().expect("resolved");
+        assert!(winner == "w0" || winner == "w1", "honest worker wins, got {winner}");
+    }
+    // job 0 hit the staller (k=4 takes the whole pool), paid the deadline
+    // and exactly one re-queue; after revocation the pool is 3 wide and
+    // job 1 sails through.
+    assert_eq!(report.outcomes[0].requeues, 1, "{:?}", report.outcomes[0]);
+    assert_eq!(report.outcomes[0].revoked, 1);
+    assert_eq!(report.outcomes[1].requeues, 0);
+    assert_eq!(report.revoked, vec!["w3".to_string()]);
+    assert_eq!(pool.size(), 3, "revoked worker left the pool");
+    assert_eq!(pool.idle(), 3, "surviving leases all returned");
+    assert_eq!(report.total_requeued(), 1);
+    // The whole run must finish promptly after the one deadline — nothing
+    // may sit blocked on the dead socket.
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "run took {:?}: something blocked on the stalled worker",
+        t0.elapsed()
+    );
+    let json = report.to_json();
+    assert!(json.contains("\"requeued\":1"), "{json}");
+    assert!(json.contains("\"revoked\":1"), "{json}");
+
+    // Orderly shutdown of the three survivors over the mux; their server
+    // threads hand their hosts back. The stalled worker's serve thread is
+    // stranded inside its own sleep — by design we never join it, proving
+    // no coordinator-side resource is tied to the dead peer.
+    for mut w in pool.into_workers() {
+        let _ = w.call(Request::Shutdown);
+    }
+    for (name, server) in servers {
+        if name != "w3" {
+            let host = server.join().expect("surviving worker thread");
+            assert!(host.counters.get("jobs_trained") >= 1, "{name}");
+        }
+    }
+    drop(mux);
 }

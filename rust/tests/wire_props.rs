@@ -79,7 +79,7 @@ fn gen_spec(g: &mut Gen) -> JobSpec {
 }
 
 fn gen_request(g: &mut Gen) -> Request {
-    match g.usize_in(0, 7) {
+    match g.usize_in(0, 8) {
         0 => Request::FinalCommit,
         1 => Request::CheckpointHashes {
             boundaries: (0..g.usize_in(0, 40)).map(|_| g.u64()).collect(),
@@ -93,12 +93,13 @@ fn gen_request(g: &mut Gen) -> Request {
             input_idx: g.usize_in(0, 16),
         },
         6 => Request::Train { spec: gen_spec(g) },
+        7 => Request::Ping,
         _ => Request::Shutdown,
     }
 }
 
 fn gen_response(g: &mut Gen) -> Response {
-    match g.usize_in(0, 7) {
+    match g.usize_in(0, 8) {
         0 => Response::Commit(gen_hash(g)),
         1 => Response::Hashes(gen_hashes(g, 200)),
         2 => Response::NodeSeq(gen_hashes(g, 200)),
@@ -121,6 +122,7 @@ fn gen_response(g: &mut Gen) -> Response {
         6 => Response::Refuse(
             (0..g.usize_in(0, 60)).map(|_| char::from(b' ' + (g.u64() % 94) as u8)).collect(),
         ),
+        7 => Response::Pong,
         _ => Response::Bye,
     }
 }
