@@ -1,0 +1,87 @@
+//! The handle-based client API in one sitting: start a long-lived
+//! [`Delegation`] over an untrusted worker pool, submit jobs with per-job
+//! policy (priority, replication, checkpoint-segment sharding), cancel one
+//! mid-flight, and read the per-segment verdicts out of the outcomes.
+//!
+//! Run: `cargo run --release --example delegate_service`
+
+use verde::model::Preset;
+use verde::service::{
+    Delegation, FaultPlan, JobRequest, PooledWorker, ServiceConfig, WorkerHost, WorkerPool,
+};
+use verde::train::JobSpec;
+
+fn main() {
+    // 1. An untrusted provider fleet: three honest workers and one that
+    //    tampers with an optimizer update — indistinguishable on the wire
+    //    until a dispute opens its computation.
+    let plans = [
+        ("honest-0", FaultPlan::Honest),
+        ("honest-1", FaultPlan::Honest),
+        ("honest-2", FaultPlan::Honest),
+        ("cheater", FaultPlan::Tamper { step: Some(2), delta: 0.05 }),
+    ];
+    let pool = WorkerPool::new(
+        plans
+            .iter()
+            .map(|&(name, plan)| PooledWorker::new(name, WorkerHost::new(name, plan)))
+            .collect(),
+    );
+
+    // 2. A persistent delegation service: jobs arrive one at a time from
+    //    handles, not as one batch.
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+
+    // 3. A big job sharded into 4 checkpoint segments: each boundary is
+    //    verified by its own k=2 tournament on its own worker subset, and
+    //    the final segment's verdict is the whole job's verdict.
+    let big = JobSpec::quick(Preset::Mlp, 12);
+    let sharded = delegation.submit(JobRequest::new(big).with_segments(4).with_priority(1));
+
+    // 4. A quick job, and one we abandon: cancel releases its leases back
+    //    to the pool so the others finish sooner.
+    let mut quick = JobSpec::quick(Preset::Mlp, 4);
+    quick.data_seed ^= 0xF00D;
+    let quick_handle = delegation.submit(JobRequest::new(quick));
+    let mut doomed = JobSpec::quick(Preset::Mlp, 200);
+    doomed.data_seed ^= 0xDEAD;
+    let doomed_handle = delegation.submit(JobRequest::new(doomed));
+    println!(
+        "cancel doomed job {}: {}",
+        doomed_handle.id(),
+        if doomed_handle.cancel() { "accepted" } else { "too late" }
+    );
+
+    // 5. Await the survivors and inspect per-segment verdicts.
+    let big_outcome = sharded.wait();
+    println!(
+        "sharded job {}: accepted {} after {} disputes ({} cheater eliminations)",
+        big_outcome.job_id,
+        big_outcome.accepted.expect("resolved").short(),
+        big_outcome.disputes,
+        big_outcome.eliminated,
+    );
+    for seg in &big_outcome.segments {
+        println!(
+            "  segment {} (steps {}..={}): checkpoint {} via {:?}, winner {}",
+            seg.seg,
+            seg.start + 1,
+            seg.end,
+            seg.accepted.expect("resolved").short(),
+            seg.workers,
+            seg.winner.as_deref().unwrap_or("<none>"),
+        );
+    }
+    let quick_outcome = quick_handle.wait();
+    println!(
+        "quick job {}: accepted {}",
+        quick_outcome.job_id,
+        quick_outcome.accepted.expect("resolved").short()
+    );
+    let doomed_outcome = doomed_handle.wait();
+    assert!(doomed_outcome.cancelled);
+
+    // 6. Close the service and read the aggregate report.
+    let report = delegation.finish();
+    println!("JSON {}", report.to_json());
+}

@@ -214,7 +214,14 @@ fn run_tcp_dispatch(size: usize, mux_mode: bool) -> (String, f64, usize) {
 }
 
 fn main() {
-    println!("SERVICE: delegation-service throughput (jobs/sec, bytes/job)");
+    // `--smoke` (the CI mode) runs one in-process scenario and the
+    // smallest TCP fleet only, so the bench is exercised on every push
+    // without CI paying for the full sweep — it can't silently rot.
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "SERVICE: delegation-service throughput (jobs/sec, bytes/job){}",
+        if smoke { " [smoke]" } else { "" }
+    );
     let scenarios = [
         Scenario { name: "honest_w4_k2", workers: 4, faulty: 0, k: 2, jobs: 8, steps: 6 },
         Scenario { name: "mixed_w4_k2", workers: 4, faulty: 1, k: 2, jobs: 8, steps: 6 },
@@ -222,11 +229,13 @@ fn main() {
         Scenario { name: "mixed_w8_k2", workers: 8, faulty: 2, k: 2, jobs: 16, steps: 6 },
         Scenario { name: "adversarial_w6_k3", workers: 6, faulty: 3, k: 3, jobs: 9, steps: 6 },
     ];
+    let scenarios = if smoke { &scenarios[..1] } else { &scenarios[..] };
     let mut lines: Vec<String> = scenarios.iter().map(run_scenario).collect();
 
     println!("SERVICE: blocking vs multiplexed dispatch over TCP fleets");
+    let sizes: &[usize] = if smoke { &[4] } else { &[4, 16, 64] };
     let mut blocking_w4_jps = 0.0f64;
-    for &size in &[4usize, 16, 64] {
+    for &size in sizes {
         for &mux_mode in &[false, true] {
             let (json, jps, threads) = run_tcp_dispatch(size, mux_mode);
             if !mux_mode && size == 4 {

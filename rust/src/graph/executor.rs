@@ -2,7 +2,8 @@
 //!
 //! This is the trainer's engine: it materializes `Init` nodes from the
 //! checkpoint state / data batch, runs every operator through
-//! [`kernels::run_op`], and (when asked) records the per-node commitment
+//! [`run_op`](super::kernels::run_op), and (when asked) records the
+//! per-node commitment
 //! objects — the `AugmentedCGNode`s of paper §2.2 — whose hash sequence
 //! forms the step checkpoint (Figure 2).
 

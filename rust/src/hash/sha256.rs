@@ -5,7 +5,8 @@
 //!
 //! Correctness is pinned by the FIPS known-answer vectors in the tests
 //! below (empty input, "abc", the two-block message, and one million
-//! 'a's) plus the protocol-level known answer in [`super::tests`].
+//! 'a's) plus the protocol-level known answer in the parent module's
+//! tests.
 
 /// Initial hash state (fractional parts of the square roots of the first
 /// eight primes).

@@ -6,10 +6,17 @@
 //!   tournament   k trainers with a mix of faults; run the knockout
 //!   info         print a model preset's graph statistics
 //!   worker       serve a worker process over TCP (`--listen`, `--fault`)
-//!   coordinator  delegate N jobs to a TCP worker pool, k workers per job
+//!   coordinator  delegate jobs to a TCP worker pool, k workers per segment
 //!                (multiplexed event-driven core; `--blocking` for the
-//!                legacy scheduler, `--deadline-ms`, `--health-ms`,
-//!                `--requeues`, `--resolvers` for the failure policy)
+//!                legacy scheduler; `--deadline-ms`, `--health-ms`,
+//!                `--requeues`, `--resolvers`, `--readmit-ms` for the
+//!                failure policy; `--segments` shards each job at its
+//!                checkpoint boundaries; `--serve ADDR` exposes the
+//!                Submit/Status/Cancel client API over TCP instead of
+//!                submitting `--jobs` itself)
+//!   client       drive a serving coordinator remotely: submit `--jobs`
+//!                jobs over the wire, poll status, optionally `--cancel N`
+//!                one of them mid-flight
 //!
 //! Examples:
 //!   verde train --model llama-tiny --steps 32 --batch 2 --seq 8
@@ -18,7 +25,9 @@
 //!   verde info --model llama-small
 //!   verde worker --listen 127.0.0.1:7000
 //!   verde worker --listen 127.0.0.1:7001 --fault tamper@3
-//!   verde coordinator --workers 127.0.0.1:7000,127.0.0.1:7001 --jobs 8 --k 2
+//!   verde coordinator --workers 127.0.0.1:7000,127.0.0.1:7001 --jobs 8 --k 2 --segments 4
+//!   verde coordinator --workers 127.0.0.1:7000,127.0.0.1:7001 --serve 127.0.0.1:9000
+//!   verde client --coordinator 127.0.0.1:9000 --jobs 4 --segments 4 --cancel 1
 
 use std::net::TcpListener;
 
@@ -28,8 +37,8 @@ use verde::net::mux::Mux;
 use verde::net::tcp::{serve_connection, TcpEndpoint};
 use verde::net::Endpoint as _;
 use verde::service::{
-    run_service_blocking, run_service_with, FaultPlan, PooledWorker, ServiceConfig, WorkerHost,
-    WorkerPool,
+    run_service_blocking, Delegation, DelegationFrontend, FaultPlan, JobPolicy, JobRequest,
+    PooledWorker, RemoteStatus, ServiceConfig, ServiceReport, WorkerHost, WorkerPool,
 };
 use verde::tensor::profile::HardwareProfile;
 use verde::train::session::Session;
@@ -37,7 +46,7 @@ use verde::train::JobSpec;
 use verde::util::cli::Args;
 use verde::util::metrics::human_bytes;
 use verde::verde::faults::{first_mutable_node, first_update_node, Fault};
-use verde::verde::protocol::Request;
+use verde::verde::protocol::{Request, Response};
 use verde::verde::tournament::run_tournament;
 use verde::verde::trainer::TrainerNode;
 use verde::verde::run_dispute;
@@ -188,7 +197,7 @@ fn cmd_info(args: &Args) {
 fn cmd_worker(args: &Args) {
     let listen = args.get_or("listen", "127.0.0.1:7000");
     let plan = FaultPlan::parse(args.get_or("fault", "none")).unwrap_or_else(|| {
-        panic!("unknown --fault (none, tamper[@S], wrong-op[@S], wrong-data[@S], skip-opt[@S], skip-steps[@S], forged-lineage[@S], inconsistent[@S], stall[@N])")
+        panic!("unknown --fault (none, tamper[@S], wrong-op[@S], wrong-data[@S], skip-opt[@S], skip-steps[@S], forged-lineage[@S], inconsistent[@S], stall[@N], nap[@N])")
     });
     let max_conns = args.get("max-conns").map(|v| {
         v.parse::<usize>().unwrap_or_else(|_| panic!("--max-conns wants an integer, got '{v}'"))
@@ -225,6 +234,44 @@ fn cmd_worker(args: &Args) {
     println!("worker exiting after {served} connections ({})", host.counters.to_json());
 }
 
+fn print_report(report: &ServiceReport) {
+    println!("--- service report ---");
+    for o in &report.outcomes {
+        println!(
+            "job {:>3}: winner {:<24} disputes {}  eliminated {}  requeues {}  {}  {:?}{}",
+            o.job_id,
+            if o.cancelled {
+                "<cancelled>"
+            } else {
+                o.winner.as_deref().unwrap_or("<unresolved>")
+            },
+            o.disputes,
+            o.eliminated,
+            o.requeues,
+            human_bytes(o.bytes),
+            o.wall,
+            if o.segments.len() > 1 {
+                format!("  ({} segments)", o.segments.len())
+            } else {
+                String::new()
+            }
+        );
+    }
+    if !report.revoked.is_empty() {
+        println!("revoked/suspended workers: {}", report.revoked.join(", "));
+    }
+    println!(
+        "{} jobs in {:?}  ({:.2} jobs/s, {} total, {} / job, {} coordinator threads)",
+        report.outcomes.len(),
+        report.wall,
+        report.jobs_per_sec(),
+        human_bytes(report.total_bytes()),
+        human_bytes(report.bytes_per_job() as u64),
+        report.threads
+    );
+    println!("JSON {}", report.to_json());
+}
+
 fn cmd_coordinator(args: &Args) {
     let addrs = args.get_list("workers");
     assert!(!addrs.is_empty(), "--workers host:port[,host:port...] is required");
@@ -259,68 +306,198 @@ fn cmd_coordinator(args: &Args) {
         .collect();
     let pool = WorkerPool::new(workers);
 
-    // Distinct jobs: same model/length, per-job data stream.
-    let jobs: Vec<JobSpec> = (0..n_jobs)
-        .map(|i| {
-            let mut spec = base;
-            spec.data_seed = base.data_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9));
-            spec
-        })
-        .collect();
-
-    println!(
-        "delegating {n_jobs} jobs ({} x{} steps) to {} workers, k={k} ({})",
-        base.preset.name(),
-        base.steps,
-        pool.size(),
-        if blocking { "blocking scheduler" } else { "event-driven core" }
-    );
-    let report = if blocking {
-        run_service_blocking(jobs, &pool, k)
-    } else {
-        let mut cfg = ServiceConfig::new(k);
-        cfg.dispatch_deadline =
-            std::time::Duration::from_millis(args.get_u64("deadline-ms", 600_000));
-        cfg.call_deadline =
-            std::time::Duration::from_millis(args.get_u64("call-deadline-ms", 60_000));
-        cfg.max_requeues = args.get_u64("requeues", 3) as u32;
-        cfg.resolvers = args.get_usize("resolvers", 4);
-        cfg.health_check = args
-            .get("health-ms")
-            .map(|v| std::time::Duration::from_millis(v.parse().expect("--health-ms integer")));
-        run_service_with(jobs, &pool, cfg)
-    };
-    println!("--- service report ---");
-    for o in &report.outcomes {
+    if blocking {
+        let jobs: Vec<JobSpec> = (0..n_jobs)
+            .map(|i| {
+                let mut spec = base;
+                spec.data_seed = base.data_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9));
+                spec
+            })
+            .collect();
         println!(
-            "job {:>3}: winner {:<24} disputes {}  eliminated {}  requeues {}  {}  {:?}",
-            o.job_id,
-            o.winner.as_deref().unwrap_or("<unresolved>"),
-            o.disputes,
-            o.eliminated,
-            o.requeues,
-            human_bytes(o.bytes),
-            o.wall
+            "delegating {n_jobs} jobs ({} x{} steps) to {} workers, k={k} (blocking scheduler)",
+            base.preset.name(),
+            base.steps,
+            pool.size(),
         );
+        let report = run_service_blocking(jobs, &pool, k);
+        print_report(&report);
+        for mut w in pool.into_workers() {
+            let _ = w.call(Request::Shutdown);
+        }
+        return;
     }
-    if !report.revoked.is_empty() {
-        println!("revoked workers: {}", report.revoked.join(", "));
+
+    let mut cfg = ServiceConfig::new(k);
+    cfg.dispatch_deadline = std::time::Duration::from_millis(args.get_u64("deadline-ms", 600_000));
+    cfg.call_deadline = std::time::Duration::from_millis(args.get_u64("call-deadline-ms", 60_000));
+    cfg.max_requeues = args.get_u64("requeues", 3) as u32;
+    cfg.resolvers = args.get_usize("resolvers", 4);
+    cfg.health_check = args
+        .get("health-ms")
+        .map(|v| std::time::Duration::from_millis(v.parse().expect("--health-ms integer")));
+    // Re-admission with exponential backoff is on by default in the CLI;
+    // `--readmit-ms 0` restores permanent expulsion.
+    let readmit_ms = args.get_u64("readmit-ms", 1000);
+    cfg.readmit_backoff =
+        (readmit_ms > 0).then(|| std::time::Duration::from_millis(readmit_ms));
+    cfg.max_strikes = args.get_u64("max-strikes", 3) as u32;
+    let segments = args.get_u64("segments", 1).max(1);
+
+    let delegation = Delegation::start(&pool, cfg);
+
+    if let Some(listen) = args.get("serve") {
+        // Serve the Submit/Status/Cancel client API over TCP: remote
+        // `verde client` processes drive this delegation.
+        let conns = args.get_usize("serve-conns", 1);
+        let listener =
+            TcpListener::bind(listen).unwrap_or_else(|e| panic!("cannot bind {listen}: {e}"));
+        let addr = listener.local_addr().expect("local addr");
+        println!(
+            "coordinator serving the client API on {addr} ({} workers, k={k}, {conns} connection(s))",
+            pool.size()
+        );
+        let mut frontend = DelegationFrontend::new("coordinator", delegation.client());
+        let mut served = 0usize;
+        for conn in listener.incoming() {
+            match conn {
+                Ok(stream) => {
+                    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+                    match serve_connection(stream, &mut frontend) {
+                        Ok(stats) => println!(
+                            "client {peer}: {} requests, {} in / {} out",
+                            stats.requests,
+                            human_bytes(stats.bytes_in),
+                            human_bytes(stats.bytes_out)
+                        ),
+                        Err(e) => eprintln!("client {peer} failed: {e}"),
+                    }
+                    served += 1;
+                }
+                Err(e) => {
+                    eprintln!("accept failed: {e}");
+                    continue;
+                }
+            }
+            if served >= conns {
+                break;
+            }
+        }
+        // Drain every remotely submitted job before reporting.
+        for h in frontend.handles() {
+            h.wait();
+        }
+    } else {
+        println!(
+            "delegating {n_jobs} jobs ({} x{} steps, {segments} segment(s)) to {} workers, k={k} (event-driven core)",
+            base.preset.name(),
+            base.steps,
+            pool.size(),
+        );
+        let handles: Vec<_> = (0..n_jobs)
+            .map(|i| {
+                let mut spec = base;
+                spec.data_seed = base.data_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9));
+                delegation.submit(JobRequest::new(spec).with_segments(segments))
+            })
+            .collect();
+        for h in &handles {
+            h.wait();
+        }
     }
-    println!(
-        "{} jobs in {:?}  ({:.2} jobs/s, {} total, {} / job, {} coordinator threads)",
-        report.outcomes.len(),
-        report.wall,
-        report.jobs_per_sec(),
-        human_bytes(report.total_bytes()),
-        human_bytes(report.bytes_per_job() as u64),
-        report.threads
-    );
-    println!("JSON {}", report.to_json());
+
+    let report = delegation.finish();
+    print_report(&report);
 
     // orderly shutdown (revoked workers are gone already)
     for mut w in pool.into_workers() {
         let _ = w.call(Request::Shutdown);
     }
+}
+
+fn cmd_client(args: &Args) {
+    let addr = args.get("coordinator").expect("--coordinator host:port is required");
+    let n_jobs = args.get_u64("jobs", 4);
+    let segments = args.get_u64("segments", 1).max(1);
+    let k = args.get_usize("k", 0);
+    // Priorities are signed (higher schedules first, negatives demote).
+    let priority = args
+        .get("priority")
+        .map(|v| {
+            v.parse::<i64>()
+                .unwrap_or_else(|_| panic!("--priority wants an integer, got '{v}'"))
+        })
+        .unwrap_or(0);
+    let cancel_idx =
+        args.get("cancel").map(|v| v.parse::<usize>().expect("--cancel wants a job index"));
+    let base = spec_from(args);
+
+    let mut ep = TcpEndpoint::connect("coordinator", addr)
+        .unwrap_or_else(|e| panic!("cannot connect to coordinator {addr}: {e}"));
+    let policy = JobPolicy { k, segments, priority, ..JobPolicy::default() };
+    let mut ids: Vec<u64> = Vec::new();
+    for i in 0..n_jobs {
+        let mut spec = base;
+        spec.data_seed = base.data_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9));
+        match ep.call(Request::Submit { spec, policy }) {
+            Response::Submitted { job_id } => {
+                println!("submitted job {job_id} ({} x{} steps)", spec.preset.name(), spec.steps);
+                ids.push(job_id);
+            }
+            other => panic!("submit refused: {other:?}"),
+        }
+    }
+
+    if let Some(idx) = cancel_idx {
+        let job_id = *ids.get(idx).unwrap_or_else(|| {
+            panic!("--cancel {idx} is out of range: only {} jobs were submitted", ids.len())
+        });
+        match ep.call(Request::Cancel { job_id }) {
+            Response::Cancelled(ok) => println!(
+                "cancel job {job_id}: {}",
+                if ok { "accepted, leases released" } else { "too late (already finished)" }
+            ),
+            other => panic!("cancel failed: {other:?}"),
+        }
+    }
+
+    let mut settled = vec![false; ids.len()];
+    loop {
+        for (i, &job_id) in ids.iter().enumerate() {
+            if settled[i] {
+                continue;
+            }
+            match ep.call(Request::Status { job_id }) {
+                Response::Status(RemoteStatus::Done {
+                    accepted,
+                    cancelled,
+                    disputes,
+                    eliminated,
+                }) => {
+                    settled[i] = true;
+                    let what = if cancelled {
+                        "cancelled".to_string()
+                    } else {
+                        match accepted {
+                            Some(h) => format!(
+                                "accepted {} ({disputes} disputes, {eliminated} eliminated)",
+                                h.short()
+                            ),
+                            None => "unresolved".to_string(),
+                        }
+                    };
+                    println!("job {job_id}: {what}");
+                }
+                Response::Status(_) => {}
+                other => panic!("status failed: {other:?}"),
+            }
+        }
+        if settled.iter().all(|&s| s) {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+    println!("all {} jobs settled", ids.len());
 }
 
 fn main() {
@@ -332,9 +509,10 @@ fn main() {
         Some("info") => cmd_info(&args),
         Some("worker") => cmd_worker(&args),
         Some("coordinator") => cmd_coordinator(&args),
+        Some("client") => cmd_client(&args),
         _ => {
             eprintln!(
-                "usage: verde <train|dispute|tournament|info|worker|coordinator> [--model M] [--steps N] ..."
+                "usage: verde <train|dispute|tournament|info|worker|coordinator|client> [--model M] [--steps N] ..."
             );
             eprintln!("see rust/src/main.rs header for examples");
             std::process::exit(2);

@@ -1,0 +1,480 @@
+//! The handle-based client API: a long-lived [`Delegation`] service
+//! object wrapping the event-driven core, [`Client`] handles that
+//! [`submit`](Client::submit) jobs with per-job [`JobPolicy`], and
+//! [`JobHandle`]s that [`wait`](JobHandle::wait),
+//! [`try_status`](JobHandle::try_status), and [`cancel`](JobHandle::cancel)
+//! — the deployment shape of a client continuously delegating ML programs
+//! to an untrusted provider fleet, rather than a one-shot batch call.
+//!
+//! ```text
+//!   Delegation::start(&pool, cfg)          (event loop + resolver pool spawn)
+//!        │
+//!        ├─ client() ──▶ Client ──submit(JobRequest)──▶ JobHandle
+//!        │                                   │   │   │
+//!        │                  wait() ◀─────────┘   │   └─▶ cancel()
+//!        │                  (blocks → JobOutcome)└─▶ try_status()
+//!        │                                           (Queued / Running / Done)
+//!        └─ finish() ──▶ ServiceReport      (drains, joins, aggregates)
+//! ```
+//!
+//! A [`JobRequest`] carries the [`JobSpec`] plus [`JobPolicy`]:
+//! replication factor `k`, dispatch deadline, scheduling priority, a
+//! [`BackendRequirement`] (reproducible-only vs. any hardware profile),
+//! and the checkpoint-segment count for sharding. Cancelling a handle
+//! releases its leases back to the pool mid-flight, so a queued job takes
+//! them immediately.
+//!
+//! [`DelegationFrontend`] exposes the same API over the wire: it is an
+//! [`Endpoint`] that answers [`Request::Submit`] / [`Request::Status`] /
+//! [`Request::Cancel`], so a remote client drives a coordinator over TCP
+//! (`verde coordinator --serve`, `verde client`) with the exact semantics
+//! of the in-process handles.
+//!
+//! ## Migrating from `run_service`
+//!
+//! ```ignore
+//! // before (one-shot batch):
+//! let report = run_service(jobs, &pool, k);
+//! // after (persistent client):
+//! let delegation = Delegation::start(&pool, ServiceConfig::new(k));
+//! let handles: Vec<_> =
+//!     jobs.into_iter().map(|spec| delegation.submit(JobRequest::new(spec))).collect();
+//! for h in &handles { h.wait(); }
+//! let report = delegation.finish();
+//! ```
+//!
+//! `run_service` / `run_service_with` still exist and do exactly the
+//! above, so existing callers compile unchanged.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::net::mux::Completion;
+use crate::net::Endpoint;
+use crate::train::JobSpec;
+use crate::verde::protocol::{
+    BackendRequirement, JobPolicy, RemoteStatus, Request, Response,
+};
+
+use super::coordinator::{
+    wake, Cmd, CmdGate, JobOutcome, LoopReport, ServiceConfig, ServiceReport,
+};
+use super::pool::WorkerPool;
+
+/// A job submission: the program spec plus its delegation policy.
+#[derive(Debug, Clone, Copy)]
+pub struct JobRequest {
+    pub spec: JobSpec,
+    pub policy: JobPolicy,
+}
+
+impl JobRequest {
+    /// Submit `spec` under the default policy (service-default `k` and
+    /// deadline, priority 0, any backend, unsharded).
+    pub fn new(spec: JobSpec) -> JobRequest {
+        JobRequest { spec, policy: JobPolicy::default() }
+    }
+
+    /// Override the replication factor for this job.
+    pub fn with_k(mut self, k: usize) -> JobRequest {
+        self.policy.k = k;
+        self
+    }
+
+    /// Override the dispatch deadline for this job.
+    pub fn with_deadline(mut self, deadline: std::time::Duration) -> JobRequest {
+        self.policy.deadline = Some(deadline);
+        self
+    }
+
+    /// Scheduling priority: higher schedules first, ties FIFO.
+    pub fn with_priority(mut self, priority: i64) -> JobRequest {
+        self.policy.priority = priority;
+        self
+    }
+
+    /// Restrict which hardware may serve this job.
+    pub fn with_backend(mut self, backend: BackendRequirement) -> JobRequest {
+        self.policy.backend = backend;
+        self
+    }
+
+    /// Shard the job into `segments` checkpoint-delimited segments that
+    /// schedule independently (shard edges from the Phase-1 `split_points`
+    /// schedule).
+    pub fn with_segments(mut self, segments: u64) -> JobRequest {
+        self.policy.segments = segments.max(1);
+        self
+    }
+
+    /// Override the per-segment re-queue budget.
+    pub fn with_max_requeues(mut self, max_requeues: u32) -> JobRequest {
+        self.policy.max_requeues = Some(max_requeues);
+        self
+    }
+}
+
+/// A snapshot of a submitted job's progress ([`JobHandle::try_status`]).
+#[derive(Debug, Clone)]
+pub enum JobStatus {
+    /// Submitted, no segment leased yet.
+    Queued,
+    /// At least one segment leased.
+    Running { segments_done: usize, segments_total: usize },
+    /// Terminal: every segment settled, or the job was cancelled
+    /// (`outcome.cancelled`).
+    Done(JobOutcome),
+}
+
+impl JobStatus {
+    /// The wire-level mirror of this status ([`Response::Status`]).
+    pub fn remote(&self) -> RemoteStatus {
+        match self {
+            JobStatus::Queued => RemoteStatus::Queued,
+            JobStatus::Running { segments_done, segments_total } => RemoteStatus::Running {
+                segments_done: *segments_done as u64,
+                segments_total: *segments_total as u64,
+            },
+            JobStatus::Done(o) => RemoteStatus::Done {
+                accepted: o.accepted,
+                cancelled: o.cancelled,
+                disputes: o.disputes as u64,
+                eliminated: o.eliminated as u64,
+            },
+        }
+    }
+}
+
+/// Shared per-job state: the event loop writes, handles read/wait.
+pub(crate) struct JobCell {
+    state: Mutex<JobStatus>,
+    done: Condvar,
+}
+
+impl JobCell {
+    fn new() -> JobCell {
+        JobCell { state: Mutex::new(JobStatus::Queued), done: Condvar::new() }
+    }
+
+    pub(crate) fn set_running(&self, segments_done: usize, segments_total: usize) {
+        let mut st = self.state.lock().unwrap();
+        if !matches!(*st, JobStatus::Done(_)) {
+            *st = JobStatus::Running { segments_done, segments_total };
+        }
+    }
+
+    pub(crate) fn finish(&self, outcome: JobOutcome) {
+        let mut st = self.state.lock().unwrap();
+        *st = JobStatus::Done(outcome);
+        drop(st);
+        self.done.notify_all();
+    }
+
+    fn snapshot(&self) -> JobStatus {
+        self.state.lock().unwrap().clone()
+    }
+
+    fn wait(&self) -> JobOutcome {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let JobStatus::Done(o) = &*st {
+                return o.clone();
+            }
+            st = self.done.wait(st).unwrap();
+        }
+    }
+}
+
+/// Shared plumbing every client/handle talks to the event loop through.
+struct ClientCore {
+    gate: Arc<Mutex<CmdGate>>,
+    comp_tx: Mutex<Sender<Completion>>,
+    next_job: AtomicU64,
+}
+
+impl ClientCore {
+    /// Send a command and nudge the event loop awake. `Err` once the
+    /// event loop has closed the gate (or exited) — the gate's mutex makes
+    /// this exact: a send that returns `Ok` is guaranteed to be processed
+    /// (by the loop or its final straggler drain), and a send after
+    /// shutdown always errors so the caller can settle its own handle.
+    fn send(&self, cmd: Cmd) -> Result<(), ()> {
+        {
+            let gate = self.gate.lock().unwrap();
+            if gate.closed {
+                return Err(());
+            }
+            gate.tx.send(cmd).map_err(|_| ())?;
+        }
+        let _ = self.comp_tx.lock().unwrap().send(wake());
+        Ok(())
+    }
+}
+
+/// A cheap handle for submitting jobs to a [`Delegation`]. Cloneable and
+/// `Send`: many threads (or a TCP frontend) can submit concurrently.
+#[derive(Clone)]
+pub struct Client {
+    core: Arc<ClientCore>,
+}
+
+impl Client {
+    /// Register a job and get its handle back immediately; scheduling,
+    /// sharding, dispatch, and verification proceed in the background. If
+    /// the delegation has already shut down, the handle comes back
+    /// already `Done` with a cancelled outcome.
+    pub fn submit(&self, req: JobRequest) -> JobHandle {
+        let job_id = self.core.next_job.fetch_add(1, Ordering::Relaxed);
+        let cell = Arc::new(JobCell::new());
+        let cmd = Cmd::Submit {
+            job_id,
+            spec: req.spec,
+            policy: req.policy,
+            cell: Arc::clone(&cell),
+        };
+        if self.core.send(cmd).is_err() {
+            cell.finish(JobOutcome::cancelled_stub(job_id));
+        }
+        JobHandle { job_id, cell, core: Arc::clone(&self.core) }
+    }
+}
+
+/// One submitted job. Dropping the handle does **not** cancel the job —
+/// it keeps running and its outcome lands in the final [`ServiceReport`].
+pub struct JobHandle {
+    job_id: u64,
+    cell: Arc<JobCell>,
+    core: Arc<ClientCore>,
+}
+
+impl JobHandle {
+    /// The delegation-wide job id (also the id `Status`/`Cancel` wire
+    /// messages address).
+    pub fn id(&self) -> u64 {
+        self.job_id
+    }
+
+    /// Block until the job reaches a terminal state and return its
+    /// outcome (cancelled jobs return `outcome.cancelled == true`).
+    pub fn wait(&self) -> JobOutcome {
+        self.cell.wait()
+    }
+
+    /// Non-blocking progress snapshot.
+    pub fn try_status(&self) -> JobStatus {
+        self.cell.snapshot()
+    }
+
+    /// Cancel the job: queued segments are dropped and in-flight leases
+    /// drain back to the pool — each worker re-enters as soon as its
+    /// current dispatch settles (its deadline still bounds a stalled
+    /// one), so waiting jobs take the freed leases without ever landing
+    /// on a link still crunching the cancelled work. Returns `true` when
+    /// the cancel landed before the job finished; `false` when the job
+    /// was already terminal. After a successful cancel,
+    /// [`wait`](JobHandle::wait) returns promptly regardless of the
+    /// drain.
+    pub fn cancel(&self) -> bool {
+        if matches!(self.try_status(), JobStatus::Done(_)) {
+            return false;
+        }
+        let (reply_tx, reply_rx) = channel();
+        if self.core.send(Cmd::Cancel { job_id: self.job_id, reply: reply_tx }).is_err() {
+            return false;
+        }
+        reply_rx.recv().unwrap_or(false)
+    }
+}
+
+/// The long-lived delegation service: owns the event loop and resolver
+/// threads over a [`WorkerPool`]. Create with [`Delegation::start`], hand
+/// out [`Client`]s, and close with [`Delegation::finish`] to get the
+/// aggregate [`ServiceReport`].
+pub struct Delegation {
+    core: Arc<ClientCore>,
+    pool: WorkerPool,
+    cfg: ServiceConfig,
+    start_size: usize,
+    t_start: Instant,
+    event_join: Option<JoinHandle<LoopReport>>,
+    resolver_joins: Vec<JoinHandle<()>>,
+}
+
+impl Delegation {
+    /// Spawn the event core over a clone of the pool handle.
+    ///
+    /// # Panics
+    /// If `cfg.k == 0` (per-job policies may still lower/raise `k`; it is
+    /// clamped to the live pool size at lease time).
+    pub fn start(pool: &WorkerPool, cfg: ServiceConfig) -> Delegation {
+        assert!(cfg.k >= 1, "a delegation needs k >= 1");
+        let core = super::coordinator::start_core(pool, cfg);
+        Delegation {
+            core: Arc::new(ClientCore {
+                gate: core.gate,
+                comp_tx: Mutex::new(core.comp_tx),
+                next_job: AtomicU64::new(0),
+            }),
+            pool: pool.clone(),
+            cfg,
+            start_size: pool.size(),
+            t_start: Instant::now(),
+            event_join: Some(core.event_join),
+            resolver_joins: core.resolver_joins,
+        }
+    }
+
+    /// A cheap submission handle (cloneable, shareable across threads).
+    pub fn client(&self) -> Client {
+        Client { core: Arc::clone(&self.core) }
+    }
+
+    /// Convenience: submit directly on the delegation.
+    pub fn submit(&self, req: JobRequest) -> JobHandle {
+        self.client().submit(req)
+    }
+
+    fn shutdown(&mut self) -> Option<LoopReport> {
+        let join = self.event_join.take()?;
+        let _ = self.core.send(Cmd::Shutdown);
+        let report = join.join().expect("event loop thread");
+        for j in self.resolver_joins.drain(..) {
+            let _ = j.join();
+        }
+        // Hand actors their endpoints back so the pool can be torn down
+        // with plain blocking calls (`into_workers` + `Shutdown`).
+        let mut idle = self.pool.drain_idle();
+        for w in &mut idle {
+            w.deactivate();
+        }
+        if !idle.is_empty() {
+            self.pool.release(idle);
+        }
+        Some(report)
+    }
+
+    /// Drain all outstanding work (every submitted job still completes or
+    /// reports unresolved — deadlines bound the wait), stop the event
+    /// core, and aggregate the run.
+    pub fn finish(mut self) -> ServiceReport {
+        let lr = self.shutdown().expect("finish() runs once");
+        let mut outcomes = lr.outcomes;
+        outcomes.sort_by_key(|o| o.job_id);
+        ServiceReport {
+            outcomes,
+            wall: self.t_start.elapsed(),
+            k: self.cfg.k,
+            workers: self.start_size,
+            revoked: self.pool.revoked(),
+            threads: 1 + self.cfg.resolvers.max(1) + lr.actor_threads,
+        }
+    }
+}
+
+impl Drop for Delegation {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}
+
+/// Terminal handles a frontend keeps for late `Status` queries before
+/// evicting the oldest — bounds memory on a long-lived serving
+/// coordinator (each retained handle pins its full `JobOutcome`).
+const MAX_FINISHED_RETAINED: usize = 1024;
+
+/// Serves the client API over the wire: an [`Endpoint`] answering
+/// [`Request::Submit`] / [`Request::Status`] / [`Request::Cancel`] by
+/// driving an in-process [`Client`]. Plug it into
+/// [`serve_connection`](crate::net::tcp::serve_connection) (or
+/// [`spawn_server`](crate::net::tcp::spawn_server)) and any
+/// [`TcpEndpoint`](crate::net::tcp::TcpEndpoint) becomes a remote job
+/// submitter — the `verde coordinator --serve` / `verde client` pair.
+pub struct DelegationFrontend {
+    name: String,
+    client: Client,
+    /// Jobs not yet observed terminal.
+    jobs: HashMap<u64, JobHandle>,
+    /// Terminal jobs, evicted FIFO beyond [`MAX_FINISHED_RETAINED`] (a
+    /// `Status` for an evicted id answers `Unknown`).
+    finished: HashMap<u64, JobHandle>,
+    finished_order: VecDeque<u64>,
+}
+
+impl DelegationFrontend {
+    pub fn new(name: &str, client: Client) -> DelegationFrontend {
+        DelegationFrontend {
+            name: name.to_string(),
+            client,
+            jobs: HashMap::new(),
+            finished: HashMap::new(),
+            finished_order: VecDeque::new(),
+        }
+    }
+
+    /// Handles registered by remote submissions and not yet evicted
+    /// (waiting on all of them is how a serving CLI drains before
+    /// shutdown).
+    pub fn handles(&self) -> impl Iterator<Item = &JobHandle> {
+        self.jobs.values().chain(self.finished.values())
+    }
+
+    /// Migrate every job observed terminal into the bounded finished set,
+    /// evicting the oldest beyond the cap. Runs on each submission, so a
+    /// continuously submitting client never accumulates unbounded state.
+    fn retire_done(&mut self) {
+        let done: Vec<u64> = self
+            .jobs
+            .iter()
+            .filter(|(_, h)| matches!(h.try_status(), JobStatus::Done(_)))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in done {
+            let handle = self.jobs.remove(&id).expect("listed");
+            self.finished.insert(id, handle);
+            self.finished_order.push_back(id);
+            while self.finished_order.len() > MAX_FINISHED_RETAINED {
+                let evict = self.finished_order.pop_front().expect("nonempty");
+                self.finished.remove(&evict);
+            }
+        }
+    }
+
+    fn lookup(&self, job_id: u64) -> Option<&JobHandle> {
+        self.jobs.get(&job_id).or_else(|| self.finished.get(&job_id))
+    }
+}
+
+impl Endpoint for DelegationFrontend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn call(&mut self, req: Request) -> Response {
+        match req {
+            Request::Submit { spec, policy } => {
+                self.retire_done();
+                let handle = self.client.submit(JobRequest { spec, policy });
+                let job_id = handle.id();
+                self.jobs.insert(job_id, handle);
+                Response::Submitted { job_id }
+            }
+            Request::Status { job_id } => Response::Status(match self.lookup(job_id) {
+                None => RemoteStatus::Unknown,
+                Some(h) => h.try_status().remote(),
+            }),
+            Request::Cancel { job_id } => {
+                Response::Cancelled(self.lookup(job_id).is_some_and(|h| h.cancel()))
+            }
+            Request::Ping => Response::Pong,
+            Request::Shutdown => Response::Bye,
+            other => Response::Refuse(format!(
+                "{}: coordinator frontend serves Submit/Status/Cancel, not {other:?}",
+                self.name
+            )),
+        }
+    }
+}

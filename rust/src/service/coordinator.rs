@@ -1,76 +1,102 @@
-//! The delegation coordinator, rebuilt as an **event-driven core**: one
-//! event-loop thread drives per-job state machines off a completion queue,
-//! so the number of coordinator threads is fixed (`1` event loop + a small
-//! tournament-resolver pool) no matter how many workers are in flight —
-//! thousands of multiplexed TCP workers fit in a handful of threads.
+//! The delegation coordinator: a **persistent event-driven core** that
+//! per-job client handles ([`crate::service::client`]) submit into. One
+//! event-loop thread drives per-*segment* state machines off a completion
+//! queue, so the number of coordinator threads is fixed (`1` event loop +
+//! a small tournament-resolver pool) no matter how many workers are in
+//! flight — thousands of multiplexed TCP workers fit in a handful of
+//! threads.
 //!
-//! Job lifecycle:
+//! Jobs are sharded into **checkpoint-delimited segments** (shard edges
+//! from the Phase-1 [`split_points`] schedule, carried by
+//! [`JobPolicy::segments`]): segment `i` is the prefix job
+//! `spec.prefix(boundary_i)`, so its honest verdict is the full job's
+//! checkpoint commitment at that boundary, and the final segment's verdict
+//! is exactly the unsharded job's commitment. Segments schedule
+//! independently — different worker subsets, concurrently when capacity
+//! allows — and their verdicts roll up into one [`JobOutcome`].
+//!
+//! Segment lifecycle:
 //!
 //! ```text
 //!   Queued ──lease k workers──▶ Dispatching ──all slots answered──▶ Resolving ──▶ Done
 //!     ▲                            │                                  (tournament on a
-//!     │       deadline expired /   │                                   resolver thread)
-//!     └── job re-queued ◀── lease revoked for the silent worker
+//!     │     deadline expired /     │                                   resolver thread)
+//!     └── segment re-queued ◀── lease suspended/revoked
 //! ```
 //!
-//! * **Dispatching** — `Request::Train` is submitted to every leased worker
-//!   with a per-request deadline ([`ServiceConfig::dispatch_deadline`]).
-//!   Completions (answers, deadline expiries, transport failures) arrive on
-//!   one channel; the deadline for actor-backed workers is enforced by the
-//!   loop's timer heap, for mux-backed workers by the mux driver — both
-//!   paths synthesize `Response::Refuse`, deduplicated by token.
-//! * **Revocation & re-queue** — a worker that misses its deadline (or a
-//!   health-check ping) has its lease revoked: it never re-enters the pool
-//!   and [`WorkerPool::size`] shrinks. Its job releases the surviving
-//!   workers and re-queues (bounded by [`ServiceConfig::max_requeues`]),
-//!   completing on whoever remains.
-//! * **Resolving** — collected claims go to a resolver thread, which runs
-//!   the unchanged blocking [`run_tournament`] over the workers' blocking
-//!   [`Endpoint`] adapters (dispute traffic is deadline-bounded too; a
-//!   worker that goes silent mid-dispute is convicted by the referee and
-//!   revoked afterwards).
+//! * **Scheduling** — queued segments order by [`JobPolicy::priority`]
+//!   (higher first, FIFO among equals) and lease only workers admitted by
+//!   the job's [`BackendRequirement`](crate::verde::protocol::BackendRequirement).
+//! * **Suspension & re-admission** — a worker that misses its deadline is
+//!   *suspended* with exponential backoff ([`ServiceConfig::readmit_backoff`]):
+//!   once the backoff elapses it is probed with a ping and re-admitted if
+//!   it answers, or suspended again (doubled backoff) until
+//!   [`ServiceConfig::max_strikes`] expels it permanently. With
+//!   `readmit_backoff: None` every miss is a permanent revocation.
+//! * **Cancellation** — [`JobHandle::cancel`](crate::service::client::JobHandle::cancel)
+//!   drops queued segments and finalizes the handle immediately;
+//!   in-flight leases *drain* back to the pool as their dispatches settle
+//!   (deadline-bounded), so the next lease never lands on a worker still
+//!   crunching cancelled work, and the cancelled job's late answers are
+//!   discarded.
 //!
-//! The pre-event-core scheduler survives as [`run_service_blocking`] — the
+//! The batch entry points survive as thin compatibility wrappers:
+//! [`run_service`] / [`run_service_with`] start a [`Delegation`], submit
+//! every job, wait, and return the final [`ServiceReport`]. The
+//! pre-event-core scheduler is still [`run_service_blocking`] — the
 //! thread-per-dispatch baseline the benches compare against.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::fmt::Write as _;
-use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::hash::Hash;
 use crate::net::mux::{Completion, CompletionKind};
 use crate::net::{Endpoint, Metered};
+use crate::train::checkpoint::split_points;
 use crate::train::JobSpec;
-use crate::verde::protocol::{Request, Response};
+use crate::verde::protocol::{JobPolicy, Request, Response};
 use crate::verde::tournament::run_tournament;
 
+use super::client::{Delegation, JobCell, JobRequest};
 use super::pool::{PooledWorker, WorkerPool};
 
 /// Tuning knobs for the event-driven service core.
 #[derive(Debug, Clone, Copy)]
 pub struct ServiceConfig {
-    /// Workers leased per job.
+    /// Workers leased per segment (per-job [`JobPolicy::k`] overrides).
     pub k: usize,
-    /// Deadline for each `Train` dispatch; expiry revokes the silent
-    /// worker's lease and re-queues the job.
+    /// Deadline for each `Train` dispatch; expiry suspends/revokes the
+    /// silent worker's lease and re-queues the segment
+    /// ([`JobPolicy::deadline`] overrides).
     pub dispatch_deadline: Duration,
     /// Deadline for each blocking dispute/tournament request.
     pub call_deadline: Duration,
-    /// How many times a job may be re-queued after lease revocations
-    /// before it is reported unresolved.
+    /// How many times a segment may be re-queued after lease revocations
+    /// before it is reported unresolved ([`JobPolicy::max_requeues`]
+    /// overrides).
     pub max_requeues: u32,
     /// Tournament resolver threads. Coordinator threads total
     /// `1 + resolvers` (plus the global mux driver when multiplexed
     /// transport is used).
     pub resolvers: usize,
-    /// Ping idle workers this often; a missed ping revokes the lease.
-    /// `None` disables health checks.
+    /// Ping idle workers this often; a missed ping suspends/revokes the
+    /// lease. `None` disables health checks.
     pub health_check: Option<Duration>,
-    /// Deadline for health-check pings.
+    /// Deadline for health-check and parole pings.
     pub ping_deadline: Duration,
+    /// Base backoff for re-admitting workers that missed a deadline: the
+    /// n-th strike suspends for `readmit_backoff × 2^(n−1)`, and a parole
+    /// ping afterwards decides between re-admission and another round.
+    /// `None` (the default) keeps the legacy behavior: every miss is a
+    /// permanent revocation.
+    pub readmit_backoff: Option<Duration>,
+    /// Missed deadlines (dispatch, ping, or parole) after which a worker
+    /// is permanently expelled instead of suspended again.
+    pub max_strikes: u32,
 }
 
 impl ServiceConfig {
@@ -83,35 +109,126 @@ impl ServiceConfig {
             resolvers: 4,
             health_check: None,
             ping_deadline: Duration::from_secs(5),
+            readmit_backoff: None,
+            max_strikes: 3,
         }
     }
 }
 
-/// Per-job result plus its cost accounting.
+/// Verdict and accounting for one checkpoint segment of a job.
 #[derive(Debug, Clone)]
-pub struct JobOutcome {
-    pub job_id: u64,
-    /// The commitment the service vouches for (`None` when no worker even
-    /// produced a claim — all assignments failed or were revoked).
+pub struct SegmentOutcome {
+    /// Segment index within its job (0-based).
+    pub seg: usize,
+    /// Step range `(start, end]` this segment certifies; `end` is a
+    /// Phase-1 `split_points` boundary and the accepted hash is the job's
+    /// checkpoint commitment there.
+    pub start: u64,
+    pub end: u64,
+    /// The commitment accepted for this boundary (`None` when unresolved).
     pub accepted: Option<Hash>,
     /// Name of the worker whose claim was accepted.
     pub winner: Option<String>,
-    /// Pairwise disputes the job needed (0 when all claims agree).
+    /// Names of the workers in the final (resolving) lease.
+    pub workers: Vec<String>,
+    /// Pairwise disputes this segment needed.
     pub disputes: usize,
-    /// Workers eliminated as dishonest by the tournament.
+    /// Workers eliminated as dishonest by the segment's tournament.
     pub eliminated: usize,
-    /// Times this job was re-queued after a lease revocation.
+    /// Times this segment was re-queued after lease revocations.
     pub requeues: u32,
-    /// Worker leases revoked across this job's attempts (deadline misses
-    /// and transport deaths).
+    /// Worker leases suspended/revoked across this segment's attempts.
     pub revoked: usize,
-    /// Wall-clock latency: first lease → verdict.
+    /// Wall-clock latency: segment's first lease → verdict.
+    pub wall: Duration,
+    /// Protocol bytes exchanged with this segment's workers.
+    pub bytes: u64,
+    /// Protocol requests issued to this segment's workers.
+    pub requests: u64,
+    /// Global lease sequence number of the segment's first lease — a
+    /// deterministic record of scheduling order (priority tests and
+    /// post-mortems read this instead of racing wall clocks).
+    pub leased_seq: u64,
+}
+
+impl SegmentOutcome {
+    /// A settled-unresolved verdict (no claim accepted, all accounting
+    /// zeroed); call sites fill in the counters they have via struct
+    /// update. `start` is patched by the recording step from the job's
+    /// boundary table.
+    fn unresolved(seg: usize, end: u64) -> SegmentOutcome {
+        SegmentOutcome {
+            seg,
+            start: 0,
+            end,
+            accepted: None,
+            winner: None,
+            workers: Vec::new(),
+            disputes: 0,
+            eliminated: 0,
+            requeues: 0,
+            revoked: 0,
+            wall: Duration::ZERO,
+            bytes: 0,
+            requests: 0,
+            leased_seq: 0,
+        }
+    }
+}
+
+/// Per-job result plus its cost accounting, rolled up over the job's
+/// checkpoint segments.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub job_id: u64,
+    /// The commitment the service vouches for: the final segment's
+    /// verdict, provided *every* segment resolved (`None` otherwise, and
+    /// always `None` for cancelled jobs).
+    pub accepted: Option<Hash>,
+    /// Name of the worker whose final-segment claim was accepted.
+    pub winner: Option<String>,
+    /// True when the job was ended by `JobHandle::cancel`.
+    pub cancelled: bool,
+    /// Pairwise disputes across all segments (0 when all claims agree).
+    pub disputes: usize,
+    /// Workers eliminated as dishonest across all segments.
+    pub eliminated: usize,
+    /// Segment re-queues after lease revocations, summed.
+    pub requeues: u32,
+    /// Worker leases suspended/revoked across all attempts (deadline
+    /// misses and transport deaths).
+    pub revoked: usize,
+    /// Wall-clock latency: first lease of any segment → verdict.
     pub wall: Duration,
     /// Protocol bytes exchanged with this job's workers (both directions,
     /// exact `wire_size` accounting, all attempts included).
     pub bytes: u64,
     /// Protocol requests issued to this job's workers.
     pub requests: u64,
+    /// Per-segment verdicts in segment order (settled segments only for
+    /// cancelled jobs).
+    pub segments: Vec<SegmentOutcome>,
+}
+
+impl JobOutcome {
+    /// A terminal outcome for a job that never produced any verdict
+    /// (cancelled before finishing, or submitted to a dead service).
+    pub(crate) fn cancelled_stub(job_id: u64) -> JobOutcome {
+        JobOutcome {
+            job_id,
+            accepted: None,
+            winner: None,
+            cancelled: true,
+            disputes: 0,
+            eliminated: 0,
+            requeues: 0,
+            revoked: 0,
+            wall: Duration::ZERO,
+            bytes: 0,
+            requests: 0,
+            segments: Vec::new(),
+        }
+    }
 }
 
 /// Aggregate service run report.
@@ -119,13 +236,14 @@ pub struct JobOutcome {
 pub struct ServiceReport {
     /// Outcomes sorted by job id.
     pub outcomes: Vec<JobOutcome>,
-    /// Wall time for the whole batch.
+    /// Wall time for the whole run (delegation start → finish).
     pub wall: Duration,
-    /// Workers assigned per job.
+    /// Default workers assigned per segment.
     pub k: usize,
-    /// Pool size the batch started with.
+    /// Pool size the run started with.
     pub workers: usize,
-    /// Names of workers whose leases were revoked during the run.
+    /// Names of workers whose leases were suspended or revoked during the
+    /// run, in event order.
     pub revoked: Vec<String>,
     /// Coordinator-side threads the run used. Event core: event loop +
     /// resolvers + one actor thread per blocking-linked worker it had to
@@ -135,7 +253,12 @@ pub struct ServiceReport {
 }
 
 impl ServiceReport {
+    /// Jobs per wall-clock second; `0.0` for an empty report (a
+    /// just-started or idle service must never report NaN).
     pub fn jobs_per_sec(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
         self.outcomes.len() as f64 / self.wall.as_secs_f64().max(1e-9)
     }
 
@@ -152,12 +275,17 @@ impl ServiceReport {
         self.outcomes.iter().map(|o| o.eliminated).sum()
     }
 
-    /// Job re-queues forced by lease revocations.
+    /// Segment re-queues forced by lease revocations.
     pub fn total_requeued(&self) -> u64 {
         self.outcomes.iter().map(|o| u64::from(o.requeues)).sum()
     }
 
-    /// Mean protocol bytes per job.
+    /// Jobs ended by cancellation.
+    pub fn total_cancelled(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.cancelled).count()
+    }
+
+    /// Mean protocol bytes per job; `0.0` for an empty report.
     pub fn bytes_per_job(&self) -> f64 {
         if self.outcomes.is_empty() {
             0.0
@@ -166,7 +294,7 @@ impl ServiceReport {
         }
     }
 
-    /// Mean job latency (first lease → verdict).
+    /// Mean job latency (first lease → verdict); zero for an empty report.
     pub fn mean_latency(&self) -> Duration {
         if self.outcomes.is_empty() {
             Duration::ZERO
@@ -181,12 +309,13 @@ impl ServiceReport {
         let mut s = String::from("{");
         let _ = write!(
             s,
-            "\"jobs\":{},\"resolved\":{},\"k\":{},\"workers\":{},\"wall_s\":{:.6},\
-             \"jobs_per_sec\":{:.3},\"mean_latency_s\":{:.6},\"total_bytes\":{},\
-             \"bytes_per_job\":{:.1},\"disputes\":{},\"eliminated\":{},\"requeued\":{},\
-             \"revoked\":{},\"threads\":{}",
+            "\"jobs\":{},\"resolved\":{},\"cancelled\":{},\"k\":{},\"workers\":{},\
+             \"wall_s\":{:.6},\"jobs_per_sec\":{:.3},\"mean_latency_s\":{:.6},\
+             \"total_bytes\":{},\"bytes_per_job\":{:.1},\"disputes\":{},\"eliminated\":{},\
+             \"requeued\":{},\"revoked\":{},\"threads\":{}",
             self.outcomes.len(),
             resolved,
+            self.total_cancelled(),
             self.k,
             self.workers,
             self.wall.as_secs_f64(),
@@ -209,31 +338,74 @@ impl ServiceReport {
 // event-driven core
 // ---------------------------------------------------------------------------
 
-/// Wake-only completion token (resolver → event loop nudge).
-const WAKE_TOKEN: u64 = u64::MAX;
+/// Wake-only completion token (resolver/client → event loop nudge).
+pub(crate) const WAKE_TOKEN: u64 = u64::MAX;
 
-/// A job waiting for a lease.
-struct QueuedJob {
+pub(crate) fn wake() -> Completion {
+    Completion { token: WAKE_TOKEN, kind: CompletionKind::Answered, resp: Response::Pong }
+}
+
+/// Client → event loop commands (submissions ride a channel; a
+/// [`wake`] completion follows each send so the loop reacts promptly).
+pub(crate) enum Cmd {
+    Submit { job_id: u64, spec: JobSpec, policy: JobPolicy, cell: Arc<JobCell> },
+    Cancel { job_id: u64, reply: Sender<bool> },
+    Shutdown,
+}
+
+/// What the event loop hands back when it exits.
+pub(crate) struct LoopReport {
+    pub(crate) outcomes: Vec<JobOutcome>,
+    pub(crate) actor_threads: usize,
+}
+
+/// A segment waiting for a lease.
+struct QueuedSeg {
+    priority: i64,
     job_id: u64,
+    seg_idx: usize,
+    /// Prefix spec: `steps` is this segment's end boundary.
     spec: JobSpec,
     requeues: u32,
     revoked: usize,
     bytes: u64,
     requests: u64,
-    /// First-lease instant, kept across re-queues so `wall` measures
-    /// first lease → verdict.
+    /// First-lease instant of this segment, kept across re-queues.
     t0: Option<Instant>,
+    leased_seq: u64,
+}
+
+impl PartialEq for QueuedSeg {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for QueuedSeg {}
+impl PartialOrd for QueuedSeg {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueuedSeg {
+    /// Max-heap order: higher priority first, then FIFO by job id, then
+    /// segment order.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| other.job_id.cmp(&self.job_id))
+            .then_with(|| other.seg_idx.cmp(&self.seg_idx))
+    }
 }
 
 enum SlotState {
     Waiting,
     Done(Response),
-    /// Deadline expired or transport died — the worker gets revoked.
+    /// Deadline expired or transport died — the worker gets disciplined.
     Failed,
 }
 
-/// A job whose `Train` dispatches are in flight.
-struct ActiveJob {
+/// A segment whose `Train` dispatches are in flight.
+struct ActiveSeg {
     spec: JobSpec,
     t0: Instant,
     requeues: u32,
@@ -242,39 +414,64 @@ struct ActiveJob {
     requests: u64,
     workers: Vec<PooledWorker>,
     slots: Vec<SlotState>,
+    tokens: Vec<u64>,
     outstanding: usize,
+    leased_seq: u64,
 }
 
 /// What a completion token addresses.
 enum Target {
-    Job { job_id: u64, slot: usize },
+    Seg { job_id: u64, seg_idx: usize, slot: usize },
+    /// Health-check ping of an idle (live) worker.
     Probe,
+    /// Parole ping of a suspended worker serving its backoff.
+    Parole,
+    /// In-flight dispatch of a cancelled job: the worker re-enters the
+    /// pool (or is disciplined) when the dispatch settles.
+    Drain,
 }
 
 /// Work order for a resolver thread.
-struct ResolveTask {
+pub(crate) struct ResolveTask {
     job_id: u64,
+    seg_idx: usize,
+    start: u64,
+    end: u64,
     spec: JobSpec,
     t0: Instant,
     requeues: u32,
     revoked: usize,
     bytes: u64,
     requests: u64,
+    leased_seq: u64,
     workers: Vec<PooledWorker>,
 }
 
-struct Resolved {
-    outcome: JobOutcome,
+pub(crate) struct Resolved {
+    job_id: u64,
+    outcome: SegmentOutcome,
     workers: Vec<PooledWorker>,
 }
 
-/// Run the tournament for one job on a resolver thread. The workers'
+/// Run the tournament for one segment on a resolver thread. The workers'
 /// blocking [`Endpoint`] adapters carry the dispute traffic; unanswered
 /// requests surface as `Refuse` (convicting the silent worker) and latch
-/// the worker's fault flag for revocation by the event loop.
+/// the worker's fault flag for discipline by the event loop.
 fn resolve(task: ResolveTask) -> Resolved {
-    let ResolveTask { job_id, spec, t0, requeues, revoked, mut bytes, mut requests, mut workers } =
-        task;
+    let ResolveTask {
+        job_id,
+        seg_idx,
+        start,
+        end,
+        spec,
+        t0,
+        requeues,
+        revoked,
+        mut bytes,
+        mut requests,
+        leased_seq,
+        mut workers,
+    } = task;
     let names: Vec<String> = workers.iter().map(|w| w.name.clone()).collect();
     let mut metered: Vec<Metered<&mut PooledWorker>> =
         workers.iter_mut().map(Metered::new).collect();
@@ -282,10 +479,13 @@ fn resolve(task: ResolveTask) -> Resolved {
     bytes += metered.iter().map(|m| m.bytes_sent() + m.bytes_received()).sum::<u64>();
     requests += metered.iter().map(|m| m.counters.get("requests")).sum::<u64>();
     drop(metered);
-    let outcome = JobOutcome {
-        job_id,
+    let outcome = SegmentOutcome {
+        seg: seg_idx,
+        start,
+        end,
         accepted: Some(report.accepted),
         winner: Some(names[report.winner].clone()),
+        workers: names,
         disputes: report.disputes,
         eliminated: report.eliminated.len(),
         requeues,
@@ -293,8 +493,96 @@ fn resolve(task: ResolveTask) -> Resolved {
         wall: t0.elapsed(),
         bytes,
         requests,
+        leased_seq,
     };
-    Resolved { outcome, workers }
+    Resolved { job_id, outcome, workers }
+}
+
+/// The command channel plus its shutdown latch. Senders and the event
+/// loop's final drain synchronize on the same mutex: a command sent while
+/// the gate is open is guaranteed to be in the channel before the drain
+/// runs, and once `closed` is set every later send fails — so a
+/// [`Cmd::Submit`] can never slip through unprocessed and strand its
+/// handle in `wait()`.
+pub(crate) struct CmdGate {
+    pub(crate) tx: Sender<Cmd>,
+    pub(crate) closed: bool,
+}
+
+/// The spawned event core: gated command channel, the completion sender
+/// (clients send [`wake`] nudges on it after each command), and the join
+/// handles a [`Delegation`] collects at shutdown.
+pub(crate) struct Core {
+    pub(crate) gate: Arc<Mutex<CmdGate>>,
+    pub(crate) comp_tx: Sender<Completion>,
+    pub(crate) event_join: std::thread::JoinHandle<LoopReport>,
+    pub(crate) resolver_joins: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Spawn the full event core: the event loop thread plus its resolver
+/// pool.
+pub(crate) fn start_core(pool: &WorkerPool, cfg: ServiceConfig) -> Core {
+    let (comp_tx, comp_rx) = channel::<Completion>();
+    let (cmd_tx, cmd_rx) = channel::<Cmd>();
+    let (task_tx, task_rx) = channel::<ResolveTask>();
+    let (resolved_tx, resolved_rx) = channel::<Resolved>();
+    let gate = Arc::new(Mutex::new(CmdGate { tx: cmd_tx, closed: false }));
+    let resolver_joins =
+        spawn_resolvers(cfg.resolvers.max(1), task_rx, resolved_tx, comp_tx.clone());
+    let event_loop =
+        EventLoop::new(pool.clone(), cfg, comp_tx.clone(), task_tx, Arc::clone(&gate));
+    let event_join = std::thread::Builder::new()
+        .name("verde-event-loop".into())
+        .spawn(move || event_loop.run(comp_rx, cmd_rx, resolved_rx))
+        .expect("spawn event loop");
+    Core { gate, comp_tx, event_join, resolver_joins }
+}
+
+/// Spawn the resolver pool: each worker thread pulls [`ResolveTask`]s,
+/// runs the tournament, and nudges the event loop.
+fn spawn_resolvers(
+    n: usize,
+    task_rx: Receiver<ResolveTask>,
+    resolved_tx: Sender<Resolved>,
+    comp_tx: Sender<Completion>,
+) -> Vec<std::thread::JoinHandle<()>> {
+    let task_rx = Arc::new(Mutex::new(task_rx));
+    (0..n)
+        .map(|i| {
+            let task_rx = Arc::clone(&task_rx);
+            let resolved_tx = resolved_tx.clone();
+            let comp_tx = comp_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("verde-resolver-{i}"))
+                .spawn(move || loop {
+                    let task = task_rx.lock().unwrap().recv();
+                    let Ok(task) = task else { break };
+                    let resolved = resolve(task);
+                    if resolved_tx.send(resolved).is_err() {
+                        break;
+                    }
+                    // Nudge the event loop: resolved segments ride a side
+                    // channel.
+                    let _ = comp_tx.send(wake());
+                })
+                .expect("spawn resolver")
+        })
+        .collect()
+}
+
+/// One job's life inside the event loop. (The job's own spec is not kept:
+/// each queued segment carries its prefix spec.)
+struct JobRun {
+    policy: JobPolicy,
+    cell: Arc<JobCell>,
+    /// Segment end boundaries (strictly increasing, last == `spec.steps`).
+    boundaries: Vec<u64>,
+    /// Settled segments, indexed by segment.
+    done: Vec<Option<SegmentOutcome>>,
+    finished: usize,
+    /// First lease of any segment (job wall-clock anchor).
+    t0: Option<Instant>,
+    cancelled: bool,
 }
 
 /// Pop every expired deadline and synthesize a `DeadlineExpired` refusal
@@ -319,19 +607,701 @@ fn fire_expired_deadlines(
     }
 }
 
-/// Resolve a health probe: an unanswered ping (or a latched fault) revokes
-/// the lease; a healthy worker returns to the free list.
-fn settle_probe(w: PooledWorker, kind: CompletionKind, pool: &WorkerPool) {
-    if kind.unresponsive() || w.faulted() {
-        pool.revoke(w);
-    } else {
-        pool.release(vec![w]);
+/// The persistent event loop driving every segment state machine. Owned by
+/// a [`Delegation`]'s event thread; exits once a [`Cmd::Shutdown`] arrived
+/// and all work has drained.
+pub(crate) struct EventLoop {
+    pool: WorkerPool,
+    cfg: ServiceConfig,
+    comp_tx: Sender<Completion>,
+    task_tx: Sender<ResolveTask>,
+    gate: Arc<Mutex<CmdGate>>,
+    queue: BinaryHeap<QueuedSeg>,
+    jobs: HashMap<u64, JobRun>,
+    active: HashMap<(u64, usize), ActiveSeg>,
+    tokens: HashMap<u64, Target>,
+    probing: HashMap<u64, PooledWorker>,
+    paroling: HashMap<u64, PooledWorker>,
+    /// Workers of cancelled jobs whose dispatch is still in flight.
+    draining: HashMap<u64, PooledWorker>,
+    deadlines: BinaryHeap<Reverse<(Instant, u64)>>,
+    outcomes: Vec<JobOutcome>,
+    next_token: u64,
+    next_lease_seq: u64,
+    next_health: Option<Instant>,
+    actor_threads: usize,
+    resolving_out: usize,
+    shutting_down: bool,
+}
+
+impl EventLoop {
+    pub(crate) fn new(
+        pool: WorkerPool,
+        cfg: ServiceConfig,
+        comp_tx: Sender<Completion>,
+        task_tx: Sender<ResolveTask>,
+        gate: Arc<Mutex<CmdGate>>,
+    ) -> EventLoop {
+        EventLoop {
+            pool,
+            cfg,
+            comp_tx,
+            task_tx,
+            gate,
+            queue: BinaryHeap::new(),
+            jobs: HashMap::new(),
+            active: HashMap::new(),
+            tokens: HashMap::new(),
+            probing: HashMap::new(),
+            paroling: HashMap::new(),
+            draining: HashMap::new(),
+            deadlines: BinaryHeap::new(),
+            outcomes: Vec::new(),
+            next_token: 1,
+            next_lease_seq: 1,
+            // First sweep fires immediately so even a short run probes its
+            // idle workers at least once.
+            next_health: cfg.health_check.map(|_| Instant::now()),
+            actor_threads: 0,
+            resolving_out: 0,
+            shutting_down: false,
+        }
+    }
+
+    /// All work drained after a shutdown request?
+    fn finished(&self) -> bool {
+        self.shutting_down
+            && self.jobs.is_empty()
+            && self.queue.is_empty()
+            && self.active.is_empty()
+            && self.resolving_out == 0
+            && self.probing.is_empty()
+            && self.paroling.is_empty()
+            && self.draining.is_empty()
+    }
+
+    pub(crate) fn run(
+        mut self,
+        comp_rx: Receiver<Completion>,
+        cmd_rx: Receiver<Cmd>,
+        resolved_rx: Receiver<Resolved>,
+    ) -> LoopReport {
+        let mut events: Vec<Completion> = Vec::new();
+        loop {
+            // 1. Client commands (submissions, cancels, shutdown).
+            while let Ok(cmd) = cmd_rx.try_recv() {
+                self.handle_cmd(cmd);
+            }
+
+            // 2. Lease workers for queued segments while capacity allows.
+            self.lease_pass();
+
+            if self.finished() {
+                break;
+            }
+
+            // 3. Sleep until the next completion, deadline, health tick,
+            //    or parole instant.
+            let now = Instant::now();
+            let mut timeout = Duration::from_millis(50);
+            if let Some(Reverse((d, _))) = self.deadlines.peek() {
+                timeout = timeout.min(d.saturating_duration_since(now));
+            }
+            if let Some(h) = self.next_health {
+                timeout = timeout.min(h.saturating_duration_since(now));
+            }
+            if let Some(p) = self.pool.next_parole() {
+                timeout = timeout.min(p.saturating_duration_since(now));
+            }
+            match comp_rx.recv_timeout(timeout.max(Duration::from_micros(100))) {
+                Ok(c) => events.push(c),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+            while let Ok(c) = comp_rx.try_recv() {
+                events.push(c);
+            }
+
+            // 4. Fire expired deadlines for tokens still outstanding.
+            fire_expired_deadlines(&mut self.deadlines, &self.tokens, &mut events);
+
+            // 5. Advance per-segment state machines.
+            for c in events.drain(..) {
+                self.handle_completion(c);
+            }
+
+            // 6. Collect resolved tournaments; discipline workers that went
+            //    silent mid-dispute, release the rest.
+            while let Ok(resolved) = resolved_rx.try_recv() {
+                self.handle_resolved(resolved);
+            }
+
+            // 7. Health-check sweep: ping every idle worker.
+            self.health_sweep();
+
+            // 8. Parole sweep: probe suspended workers whose backoff is up.
+            self.parole_sweep();
+        }
+        // Close the command gate, then settle stragglers: under the gate's
+        // mutex, every command sent while the gate was open is already in
+        // the channel, and every later send fails at the client (which
+        // then stubs its own handle) — no submission can strand a waiter.
+        self.gate.lock().unwrap().closed = true;
+        while let Ok(cmd) = cmd_rx.try_recv() {
+            match cmd {
+                Cmd::Submit { job_id, cell, .. } => {
+                    cell.finish(JobOutcome::cancelled_stub(job_id));
+                }
+                Cmd::Cancel { reply, .. } => {
+                    let _ = reply.send(false);
+                }
+                Cmd::Shutdown => {}
+            }
+        }
+        LoopReport { outcomes: self.outcomes, actor_threads: self.actor_threads }
+    }
+
+    fn handle_cmd(&mut self, cmd: Cmd) {
+        match cmd {
+            Cmd::Submit { job_id, spec, policy, cell } => {
+                if self.shutting_down {
+                    // Late submission: the service is closing, the job
+                    // never ran — terminal as cancelled, outside the
+                    // report (the report covers the run being drained).
+                    cell.finish(JobOutcome::cancelled_stub(job_id));
+                    return;
+                }
+                if spec.steps == 0 {
+                    // A zero-step job has no checkpoint schedule to shard
+                    // or verify: settle it unresolved (not cancelled —
+                    // nobody cancelled it) and keep it in the report like
+                    // any other submission.
+                    let outcome =
+                        JobOutcome { cancelled: false, ..JobOutcome::cancelled_stub(job_id) };
+                    self.outcomes.push(outcome.clone());
+                    cell.finish(outcome);
+                    return;
+                }
+                let boundaries = split_points(0, spec.steps, policy.segments.max(1));
+                for (seg_idx, &end) in boundaries.iter().enumerate() {
+                    self.queue.push(QueuedSeg {
+                        priority: policy.priority,
+                        job_id,
+                        seg_idx,
+                        spec: spec.prefix(end),
+                        requeues: 0,
+                        revoked: 0,
+                        bytes: 0,
+                        requests: 0,
+                        t0: None,
+                        leased_seq: 0,
+                    });
+                }
+                let n = boundaries.len();
+                self.jobs.insert(
+                    job_id,
+                    JobRun {
+                        policy,
+                        cell,
+                        boundaries,
+                        done: (0..n).map(|_| None).collect(),
+                        finished: 0,
+                        t0: None,
+                        cancelled: false,
+                    },
+                );
+            }
+            Cmd::Cancel { job_id, reply } => {
+                let ok = self.handle_cancel(job_id);
+                let _ = reply.send(ok);
+            }
+            Cmd::Shutdown => self.shutting_down = true,
+        }
+    }
+
+    /// Cancel a job: drop its queued segments, drain its in-flight leases
+    /// back to the pool, and finalize the handle as cancelled. Returns
+    /// false when the job already finished (or is unknown).
+    fn handle_cancel(&mut self, job_id: u64) -> bool {
+        if !self.jobs.contains_key(&job_id) {
+            return false;
+        }
+        // Strip in-flight segments. A worker whose dispatch already
+        // settled goes straight back (or gets disciplined, if it failed);
+        // one whose Train is still executing is parked as *draining* — its
+        // token and deadline stay armed and it re-enters the pool only
+        // when the dispatch settles. Releasing it immediately would hand
+        // the next job a link still crunching the cancelled Train, whose
+        // deadline would then unjustly discipline an honest worker.
+        let keys: Vec<(u64, usize)> =
+            self.active.keys().filter(|(j, _)| *j == job_id).copied().collect();
+        for key in keys {
+            let aseg = self.active.remove(&key).expect("listed");
+            let ActiveSeg { workers, slots, tokens, .. } = aseg;
+            for ((w, slot), token) in workers.into_iter().zip(slots).zip(tokens) {
+                match slot {
+                    SlotState::Waiting => {
+                        self.tokens.insert(token, Target::Drain);
+                        self.draining.insert(token, w);
+                    }
+                    SlotState::Done(_) => self.pool.release(vec![w]),
+                    SlotState::Failed => self.discipline(w, false),
+                }
+            }
+        }
+        // Queued segments are dropped lazily by the lease pass (their job
+        // is gone from the map). Resolving segments finish on their
+        // resolver thread; their leases return via `handle_resolved`.
+        let run = self.jobs.remove(&job_id).expect("checked");
+        let segments: Vec<SegmentOutcome> = run.done.into_iter().flatten().collect();
+        let outcome = JobOutcome {
+            job_id,
+            accepted: None,
+            winner: None,
+            cancelled: true,
+            disputes: segments.iter().map(|s| s.disputes).sum(),
+            eliminated: segments.iter().map(|s| s.eliminated).sum(),
+            requeues: segments.iter().map(|s| s.requeues).sum(),
+            revoked: segments.iter().map(|s| s.revoked).sum(),
+            wall: run.t0.map(|t| t.elapsed()).unwrap_or(Duration::ZERO),
+            bytes: segments.iter().map(|s| s.bytes).sum(),
+            requests: segments.iter().map(|s| s.requests).sum(),
+            segments,
+        };
+        self.outcomes.push(outcome.clone());
+        run.cell.finish(outcome);
+        true
+    }
+
+    /// Lease workers for queued segments. Segments whose requirement
+    /// cannot be met *right now* are deferred (put back); segments whose
+    /// requirement can never be met again fail immediately.
+    fn lease_pass(&mut self) {
+        if self.pool.idle() == 0 && self.pool.size() > 0 {
+            // Every live worker is leased; they return via completions, so
+            // there is nothing to decide yet. (With size == 0 the pass
+            // still runs, to fail segments whose requirement can never be
+            // met again.)
+            return;
+        }
+        let mut deferred: Vec<QueuedSeg> = Vec::new();
+        while let Some(seg) = self.queue.pop() {
+            let policy = match self.jobs.get(&seg.job_id) {
+                // Cancelled and finalized: stale entry, drop it.
+                None => continue,
+                Some(j) if j.cancelled => continue,
+                Some(j) => j.policy,
+            };
+            let pred = move |w: &PooledWorker| policy.backend.admits(w.backend());
+            if !self.pool.any_eligible(policy.backend) {
+                // Nobody now, nobody ever: the segment is unresolvable.
+                self.fail_segment(seg);
+                continue;
+            }
+            let live = self.pool.size();
+            if live == 0 {
+                // Suspended workers may yet return; wait for parole.
+                deferred.push(seg);
+                continue;
+            }
+            let k = if policy.k == 0 { self.cfg.k } else { policy.k }.clamp(1, live);
+            let Some(workers) = self.pool.try_acquire_where(k, pred) else {
+                deferred.push(seg);
+                continue;
+            };
+            self.dispatch_segment(seg, workers, policy);
+        }
+        for seg in deferred {
+            self.queue.push(seg);
+        }
+    }
+
+    /// Submit `Train` to every leased worker and park the segment in the
+    /// active table.
+    fn dispatch_segment(
+        &mut self,
+        seg: QueuedSeg,
+        mut workers: Vec<PooledWorker>,
+        policy: JobPolicy,
+    ) {
+        let t0 = seg.t0.unwrap_or_else(Instant::now);
+        let lease_seq = self.next_lease_seq;
+        self.next_lease_seq += 1;
+        // The first lease stamps the scheduling order; re-queues keep it.
+        let leased_seq = if seg.leased_seq == 0 { lease_seq } else { seg.leased_seq };
+        let deadline = Instant::now() + policy.deadline.unwrap_or(self.cfg.dispatch_deadline);
+        let mut aseg = ActiveSeg {
+            spec: seg.spec,
+            t0,
+            requeues: seg.requeues,
+            revoked: seg.revoked,
+            bytes: seg.bytes,
+            requests: seg.requests,
+            workers: Vec::new(),
+            slots: Vec::new(),
+            tokens: Vec::new(),
+            outstanding: 0,
+            leased_seq,
+        };
+        for (slot, w) in workers.iter_mut().enumerate() {
+            self.actor_threads += usize::from(w.activate());
+            w.reset_fault();
+            w.set_call_deadline(self.cfg.call_deadline);
+            let token = self.next_token;
+            self.next_token += 1;
+            self.tokens
+                .insert(token, Target::Seg { job_id: seg.job_id, seg_idx: seg.seg_idx, slot });
+            self.deadlines.push(Reverse((deadline, token)));
+            let req = Request::Train { spec: seg.spec };
+            aseg.bytes += req.wire_size() as u64;
+            aseg.requests += 1;
+            w.dispatch(token, req, Some(deadline), &self.comp_tx);
+            aseg.slots.push(SlotState::Waiting);
+            aseg.tokens.push(token);
+            aseg.outstanding += 1;
+        }
+        aseg.workers = workers;
+        self.active.insert((seg.job_id, seg.seg_idx), aseg);
+        // Anchor the job's wall clock and mark it running.
+        if let Some(run) = self.jobs.get_mut(&seg.job_id) {
+            if run.t0.is_none() {
+                run.t0 = Some(t0);
+            }
+            run.cell.set_running(run.finished, run.boundaries.len());
+        }
+    }
+
+    /// A segment whose backend requirement can never again be satisfied
+    /// (or that exhausted its re-queues) settles unresolved.
+    fn fail_segment(&mut self, seg: QueuedSeg) {
+        let outcome = SegmentOutcome {
+            requeues: seg.requeues,
+            revoked: seg.revoked,
+            wall: seg.t0.map(|t| t.elapsed()).unwrap_or(Duration::ZERO),
+            bytes: seg.bytes,
+            requests: seg.requests,
+            leased_seq: seg.leased_seq,
+            ..SegmentOutcome::unresolved(seg.seg_idx, seg.spec.steps)
+        };
+        self.record_segment(seg.job_id, seg.seg_idx, outcome);
+    }
+
+    /// Miss-deadline discipline: suspend with exponential backoff when
+    /// re-admission is enabled and the worker has strikes left, expel
+    /// permanently otherwise.
+    fn discipline(&mut self, mut w: PooledWorker, from_parole: bool) {
+        w.add_strike();
+        match self.cfg.readmit_backoff {
+            Some(base) if w.strikes() < self.cfg.max_strikes => {
+                let factor = 1u32 << (w.strikes() - 1).min(16);
+                let until = Instant::now() + base.saturating_mul(factor);
+                if from_parole {
+                    self.pool.resuspend(w, until);
+                } else {
+                    self.pool.suspend(w, until);
+                }
+            }
+            _ => {
+                if from_parole {
+                    self.pool.expel(w);
+                } else {
+                    self.pool.revoke(w);
+                }
+            }
+        }
+    }
+
+    fn handle_completion(&mut self, c: Completion) {
+        if c.token == WAKE_TOKEN {
+            return;
+        }
+        let Some(target) = self.tokens.remove(&c.token) else {
+            return; // stale: deadline already handled, cancelled, or late duplicate
+        };
+        match target {
+            Target::Probe => {
+                let Some(w) = self.probing.remove(&c.token) else { return };
+                if c.kind.unresponsive() || w.faulted() {
+                    self.discipline(w, false);
+                } else {
+                    self.pool.release(vec![w]);
+                }
+            }
+            Target::Parole => {
+                let Some(mut w) = self.paroling.remove(&c.token) else { return };
+                if c.kind.unresponsive() || w.faulted() {
+                    self.discipline(w, true);
+                } else {
+                    w.reset_fault();
+                    self.pool.readmit(w);
+                }
+            }
+            Target::Drain => {
+                let Some(w) = self.draining.remove(&c.token) else { return };
+                if c.kind.unresponsive() || w.faulted() {
+                    // Even a cancelled job's stall is a stall.
+                    self.discipline(w, false);
+                } else {
+                    self.pool.release(vec![w]);
+                }
+            }
+            Target::Seg { job_id, seg_idx, slot } => {
+                let Some(aseg) = self.active.get_mut(&(job_id, seg_idx)) else { return };
+                aseg.slots[slot] = if c.kind.unresponsive() {
+                    // Synthesized refusal: nothing crossed the wire.
+                    SlotState::Failed
+                } else {
+                    aseg.bytes += c.resp.wire_size() as u64;
+                    SlotState::Done(c.resp)
+                };
+                aseg.outstanding -= 1;
+                if aseg.outstanding == 0 {
+                    let aseg = self.active.remove(&(job_id, seg_idx)).expect("just seen");
+                    self.finish_dispatch(job_id, seg_idx, aseg);
+                }
+            }
+        }
+    }
+
+    /// All of a segment's dispatches answered (or expired): discipline
+    /// silent workers and re-queue, hand the claims to a resolver, or
+    /// settle the segment unresolved.
+    fn finish_dispatch(&mut self, job_id: u64, seg_idx: usize, aseg: ActiveSeg) {
+        let ActiveSeg {
+            spec,
+            t0,
+            requeues,
+            mut revoked,
+            bytes,
+            requests,
+            workers,
+            slots,
+            leased_seq,
+            ..
+        } = aseg;
+        let mut keep: Vec<PooledWorker> = Vec::new();
+        let mut any_failed = false;
+        let mut commits = 0usize;
+        for (w, slot) in workers.into_iter().zip(slots) {
+            match slot {
+                SlotState::Failed => {
+                    any_failed = true;
+                    revoked += 1;
+                    self.discipline(w, false);
+                }
+                SlotState::Done(resp) => {
+                    if matches!(resp, Response::Commit(_)) {
+                        commits += 1;
+                    }
+                    keep.push(w);
+                }
+                SlotState::Waiting => unreachable!("outstanding == 0"),
+            }
+        }
+
+        let policy = self.jobs.get(&job_id).map(|j| j.policy).unwrap_or_default();
+        let max_requeues = policy.max_requeues.unwrap_or(self.cfg.max_requeues);
+        if any_failed {
+            // A silent worker compromised this assignment: release the
+            // survivors and re-delegate the segment to a fresh lease.
+            self.pool.release(keep);
+            if requeues < max_requeues && (self.pool.size() > 0 || self.pool.suspended() > 0) {
+                self.queue.push(QueuedSeg {
+                    priority: policy.priority,
+                    job_id,
+                    seg_idx,
+                    spec,
+                    requeues: requeues + 1,
+                    revoked,
+                    bytes,
+                    requests,
+                    t0: Some(t0),
+                    leased_seq,
+                });
+            } else {
+                self.record_segment(
+                    job_id,
+                    seg_idx,
+                    SegmentOutcome {
+                        requeues,
+                        revoked,
+                        wall: t0.elapsed(),
+                        bytes,
+                        requests,
+                        leased_seq,
+                        ..SegmentOutcome::unresolved(seg_idx, spec.steps)
+                    },
+                );
+            }
+        } else if commits == 0 {
+            // Everyone answered, nobody produced a claim: unresolvable.
+            let eliminated = keep.len();
+            let names = keep.iter().map(|w| w.name.clone()).collect();
+            self.pool.release(keep);
+            self.record_segment(
+                job_id,
+                seg_idx,
+                SegmentOutcome {
+                    workers: names,
+                    eliminated,
+                    requeues,
+                    revoked,
+                    wall: t0.elapsed(),
+                    bytes,
+                    requests,
+                    leased_seq,
+                    ..SegmentOutcome::unresolved(seg_idx, spec.steps)
+                },
+            );
+        } else {
+            let start = self
+                .jobs
+                .get(&job_id)
+                .map(|j| segment_start(&j.boundaries, seg_idx))
+                .unwrap_or(0);
+            let task = ResolveTask {
+                job_id,
+                seg_idx,
+                start,
+                end: spec.steps,
+                spec,
+                t0,
+                requeues,
+                revoked,
+                bytes,
+                requests,
+                leased_seq,
+                workers: keep,
+            };
+            self.resolving_out += 1;
+            self.task_tx.send(task).expect("resolver pool alive while segments outstanding");
+        }
+    }
+
+    fn handle_resolved(&mut self, resolved: Resolved) {
+        let Resolved { job_id, mut outcome, workers } = resolved;
+        self.resolving_out -= 1;
+        let mut keep = Vec::new();
+        for w in workers {
+            if w.faulted() {
+                outcome.revoked += 1;
+                self.discipline(w, false);
+            } else {
+                keep.push(w);
+            }
+        }
+        self.pool.release(keep);
+        if self.jobs.contains_key(&job_id) {
+            let seg_idx = outcome.seg;
+            self.record_segment(job_id, seg_idx, outcome);
+        }
+        // else: the job was cancelled mid-resolve; leases returned, verdict
+        // discarded.
+    }
+
+    /// Settle one segment and finalize its job once every segment settled.
+    fn record_segment(&mut self, job_id: u64, seg_idx: usize, mut outcome: SegmentOutcome) {
+        let Some(run) = self.jobs.get_mut(&job_id) else { return };
+        outcome.start = segment_start(&run.boundaries, seg_idx);
+        if run.done[seg_idx].is_none() {
+            run.finished += 1;
+        }
+        run.done[seg_idx] = Some(outcome);
+        run.cell.set_running(run.finished, run.boundaries.len());
+        if run.finished < run.boundaries.len() {
+            return;
+        }
+        let run = self.jobs.remove(&job_id).expect("just seen");
+        let segments: Vec<SegmentOutcome> =
+            run.done.into_iter().map(|s| s.expect("all settled")).collect();
+        let all_resolved = segments.iter().all(|s| s.accepted.is_some());
+        let last = segments.last().expect("jobs have >= 1 segment");
+        let outcome = JobOutcome {
+            job_id,
+            accepted: if all_resolved { last.accepted } else { None },
+            winner: if all_resolved { last.winner.clone() } else { None },
+            cancelled: false,
+            disputes: segments.iter().map(|s| s.disputes).sum(),
+            eliminated: segments.iter().map(|s| s.eliminated).sum(),
+            requeues: segments.iter().map(|s| s.requeues).sum(),
+            revoked: segments.iter().map(|s| s.revoked).sum(),
+            wall: run.t0.map(|t| t.elapsed()).unwrap_or(Duration::ZERO),
+            bytes: segments.iter().map(|s| s.bytes).sum(),
+            requests: segments.iter().map(|s| s.requests).sum(),
+            segments,
+        };
+        self.outcomes.push(outcome.clone());
+        run.cell.finish(outcome);
+    }
+
+    /// Ping every idle worker when the health tick is due.
+    fn health_sweep(&mut self) {
+        if self.shutting_down {
+            return;
+        }
+        let now = Instant::now();
+        if !self.next_health.is_some_and(|h| h <= now) {
+            return;
+        }
+        for mut w in self.pool.drain_idle() {
+            self.actor_threads += usize::from(w.activate());
+            let token = self.next_token;
+            self.next_token += 1;
+            let deadline = now + self.cfg.ping_deadline;
+            w.reset_fault();
+            self.tokens.insert(token, Target::Probe);
+            self.deadlines.push(Reverse((deadline, token)));
+            w.dispatch(token, Request::Ping, Some(deadline), &self.comp_tx);
+            self.probing.insert(token, w);
+        }
+        self.next_health = self.cfg.health_check.map(|p| now + p);
+    }
+
+    /// Probe suspended workers whose backoff elapsed: answer → re-admit,
+    /// silence → longer suspension or permanent expulsion.
+    fn parole_sweep(&mut self) {
+        if self.cfg.readmit_backoff.is_none() {
+            return;
+        }
+        if self.shutting_down && self.jobs.is_empty() {
+            return; // nothing left that could use a re-admitted worker
+        }
+        let now = Instant::now();
+        for mut w in self.pool.parole_due(now) {
+            self.actor_threads += usize::from(w.activate());
+            w.reset_fault();
+            let token = self.next_token;
+            self.next_token += 1;
+            let deadline = now + self.cfg.ping_deadline;
+            self.tokens.insert(token, Target::Parole);
+            self.deadlines.push(Reverse((deadline, token)));
+            w.dispatch(token, Request::Ping, Some(deadline), &self.comp_tx);
+            self.paroling.insert(token, w);
+        }
     }
 }
+
+/// Start step (exclusive) of segment `seg_idx` given its job's boundaries.
+fn segment_start(boundaries: &[u64], seg_idx: usize) -> u64 {
+    if seg_idx == 0 {
+        0
+    } else {
+        boundaries[seg_idx - 1]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batch compatibility wrappers
+// ---------------------------------------------------------------------------
 
 /// Run a batch of jobs against the pool with the event-driven core and
 /// default tuning: `k` workers per job, per-dispatch deadlines, lease
 /// revocation + re-queue, tournaments on a small resolver pool.
+///
+/// Compatibility wrapper: starts a [`Delegation`], submits every job,
+/// waits, and returns the report — new code should hold the
+/// [`Delegation`] and use [`Client::submit`](crate::service::client::Client::submit)
+/// handles directly.
 ///
 /// # Panics
 /// If `k == 0` or `k > pool.size()`.
@@ -350,346 +1320,13 @@ pub fn run_service_with(
 ) -> ServiceReport {
     let start_size = pool.size();
     assert!(cfg.k >= 1 && cfg.k <= start_size, "k={} vs pool of {start_size}", cfg.k);
-    let resolvers = cfg.resolvers.max(1);
-    let n_jobs = jobs.len();
-    let t_start = Instant::now();
-
-    let mut queue: VecDeque<QueuedJob> = jobs
-        .into_iter()
-        .enumerate()
-        .map(|(i, spec)| QueuedJob {
-            job_id: i as u64,
-            spec,
-            requeues: 0,
-            revoked: 0,
-            bytes: 0,
-            requests: 0,
-            t0: None,
-        })
-        .collect();
-    let mut outcomes: Vec<JobOutcome> = Vec::with_capacity(n_jobs);
-    // Actor threads spawned for blocking-linked workers (0 for mux pools).
-    let mut actor_threads: usize = 0;
-
-    let (comp_tx, comp_rx) = channel::<Completion>();
-    let (task_tx, task_rx) = channel::<ResolveTask>();
-    let (resolved_tx, resolved_rx) = channel::<Resolved>();
-    let task_rx = Arc::new(Mutex::new(task_rx));
-
-    std::thread::scope(|scope| {
-        for _ in 0..resolvers {
-            let task_rx = Arc::clone(&task_rx);
-            let resolved_tx = resolved_tx.clone();
-            let comp_tx = comp_tx.clone();
-            scope.spawn(move || loop {
-                let task = task_rx.lock().unwrap().recv();
-                let Ok(task) = task else { break };
-                let resolved = resolve(task);
-                if resolved_tx.send(resolved).is_err() {
-                    break;
-                }
-                // Nudge the event loop: resolved jobs ride a side channel.
-                let _ = comp_tx.send(Completion {
-                    token: WAKE_TOKEN,
-                    kind: CompletionKind::Answered,
-                    resp: Response::Pong,
-                });
-            });
-        }
-
-        // --- event loop state ---
-        let mut tokens: HashMap<u64, Target> = HashMap::new();
-        let mut active: HashMap<u64, ActiveJob> = HashMap::new();
-        let mut probing: HashMap<u64, PooledWorker> = HashMap::new();
-        let mut deadlines: BinaryHeap<Reverse<(Instant, u64)>> = BinaryHeap::new();
-        let mut next_token: u64 = 1;
-        // First sweep fires immediately so even a short run probes its
-        // idle workers at least once.
-        let mut next_health = cfg.health_check.map(|_| Instant::now());
-        let mut events: Vec<Completion> = Vec::new();
-
-        while outcomes.len() < n_jobs {
-            // 1. Lease workers for queued jobs while capacity allows.
-            while let Some(job) = queue.pop_front() {
-                let live = pool.size();
-                if live == 0 {
-                    outcomes.push(JobOutcome {
-                        job_id: job.job_id,
-                        accepted: None,
-                        winner: None,
-                        disputes: 0,
-                        eliminated: 0,
-                        requeues: job.requeues,
-                        revoked: job.revoked,
-                        wall: job.t0.map(|t| t.elapsed()).unwrap_or(Duration::ZERO),
-                        bytes: job.bytes,
-                        requests: job.requests,
-                    });
-                    continue;
-                }
-                let k = cfg.k.min(live);
-                let Some(mut workers) = pool.try_acquire(k) else {
-                    queue.push_front(job);
-                    break;
-                };
-                let t0 = job.t0.unwrap_or_else(Instant::now);
-                let deadline = Instant::now() + cfg.dispatch_deadline;
-                let mut aj = ActiveJob {
-                    spec: job.spec,
-                    t0,
-                    requeues: job.requeues,
-                    revoked: job.revoked,
-                    bytes: job.bytes,
-                    requests: job.requests,
-                    workers: Vec::new(),
-                    slots: Vec::new(),
-                    outstanding: 0,
-                };
-                for (slot, w) in workers.iter_mut().enumerate() {
-                    actor_threads += usize::from(w.activate());
-                    w.reset_fault();
-                    w.set_call_deadline(cfg.call_deadline);
-                    let token = next_token;
-                    next_token += 1;
-                    tokens.insert(token, Target::Job { job_id: job.job_id, slot });
-                    deadlines.push(Reverse((deadline, token)));
-                    let req = Request::Train { spec: job.spec };
-                    aj.bytes += req.wire_size() as u64;
-                    aj.requests += 1;
-                    w.dispatch(token, req, Some(deadline), &comp_tx);
-                    aj.slots.push(SlotState::Waiting);
-                    aj.outstanding += 1;
-                }
-                aj.workers = workers;
-                active.insert(job.job_id, aj);
-            }
-
-            if outcomes.len() >= n_jobs {
-                break;
-            }
-
-            // 2. Sleep until the next completion, deadline, or health tick.
-            let now = Instant::now();
-            let mut timeout = Duration::from_millis(50);
-            if let Some(Reverse((d, _))) = deadlines.peek() {
-                timeout = timeout.min(d.saturating_duration_since(now));
-            }
-            if let Some(h) = next_health {
-                timeout = timeout.min(h.saturating_duration_since(now));
-            }
-            match comp_rx.recv_timeout(timeout.max(Duration::from_micros(100))) {
-                Ok(c) => events.push(c),
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-            while let Ok(c) = comp_rx.try_recv() {
-                events.push(c);
-            }
-
-            // 3. Fire expired deadlines for tokens still outstanding.
-            fire_expired_deadlines(&mut deadlines, &tokens, &mut events);
-
-            // 4. Advance per-job state machines.
-            for c in events.drain(..) {
-                if c.token == WAKE_TOKEN {
-                    continue;
-                }
-                let Some(target) = tokens.remove(&c.token) else {
-                    continue; // stale: deadline already handled, or late duplicate
-                };
-                match target {
-                    Target::Probe => {
-                        let Some(w) = probing.remove(&c.token) else { continue };
-                        settle_probe(w, c.kind, pool);
-                    }
-                    Target::Job { job_id, slot } => {
-                        let Some(job) = active.get_mut(&job_id) else { continue };
-                        job.slots[slot] = if c.kind.unresponsive() {
-                            // Synthesized refusal: nothing crossed the wire.
-                            SlotState::Failed
-                        } else {
-                            job.bytes += c.resp.wire_size() as u64;
-                            SlotState::Done(c.resp)
-                        };
-                        job.outstanding -= 1;
-                        if job.outstanding == 0 {
-                            let job = active.remove(&job_id).expect("just seen");
-                            finish_dispatch(
-                                job_id,
-                                job,
-                                pool,
-                                &cfg,
-                                &mut queue,
-                                &mut outcomes,
-                                &task_tx,
-                            );
-                        }
-                    }
-                }
-            }
-
-            // 5. Collect resolved tournaments; revoke workers that went
-            //    silent mid-dispute, release the rest.
-            while let Ok(Resolved { mut outcome, workers }) = resolved_rx.try_recv() {
-                let mut keep = Vec::new();
-                for w in workers {
-                    if w.faulted() {
-                        outcome.revoked += 1;
-                        pool.revoke(w);
-                    } else {
-                        keep.push(w);
-                    }
-                }
-                pool.release(keep);
-                outcomes.push(outcome);
-            }
-
-            // 6. Health-check sweep: ping every idle worker.
-            let now = Instant::now();
-            if next_health.is_some_and(|h| h <= now) {
-                for mut w in pool.drain_idle() {
-                    actor_threads += usize::from(w.activate());
-                    let token = next_token;
-                    next_token += 1;
-                    let deadline = now + cfg.ping_deadline;
-                    w.reset_fault();
-                    tokens.insert(token, Target::Probe);
-                    deadlines.push(Reverse((deadline, token)));
-                    w.dispatch(token, Request::Ping, Some(deadline), &comp_tx);
-                    probing.insert(token, w);
-                }
-                next_health = cfg.health_check.map(|p| now + p);
-            }
-        }
-
-        // Drain outstanding health probes so every live worker is back in
-        // the pool (deterministically) before the report is returned.
-        while !probing.is_empty() {
-            let now = Instant::now();
-            let timeout = deadlines
-                .peek()
-                .map(|Reverse((d, _))| d.saturating_duration_since(now))
-                .unwrap_or(Duration::from_millis(10));
-            if let Ok(c) = comp_rx.recv_timeout(timeout.max(Duration::from_millis(1))) {
-                events.push(c);
-            }
-            fire_expired_deadlines(&mut deadlines, &tokens, &mut events);
-            for c in events.drain(..) {
-                if let Some(Target::Probe) = tokens.remove(&c.token) {
-                    if let Some(w) = probing.remove(&c.token) {
-                        settle_probe(w, c.kind, pool);
-                    }
-                }
-            }
-        }
-
-        drop(task_tx); // resolvers exit once the queue is empty
-    });
-
-    // Hand actors their endpoints back so the pool can be torn down with
-    // plain blocking calls (`into_workers` + `Shutdown`).
-    let mut idle = pool.drain_idle();
-    for w in &mut idle {
-        w.deactivate();
+    let delegation = Delegation::start(pool, cfg);
+    let handles: Vec<_> =
+        jobs.into_iter().map(|spec| delegation.submit(JobRequest::new(spec))).collect();
+    for h in &handles {
+        h.wait();
     }
-    if !idle.is_empty() {
-        pool.release(idle);
-    }
-
-    let mut outcomes = outcomes;
-    outcomes.sort_by_key(|o| o.job_id);
-    ServiceReport {
-        outcomes,
-        wall: t_start.elapsed(),
-        k: cfg.k,
-        workers: start_size,
-        revoked: pool.revoked(),
-        threads: 1 + resolvers + actor_threads,
-    }
-}
-
-/// All of a job's dispatches answered (or expired): revoke silent workers
-/// and re-queue, hand the claims to a resolver, or report failure.
-#[allow(clippy::too_many_arguments)]
-fn finish_dispatch(
-    job_id: u64,
-    job: ActiveJob,
-    pool: &WorkerPool,
-    cfg: &ServiceConfig,
-    queue: &mut VecDeque<QueuedJob>,
-    outcomes: &mut Vec<JobOutcome>,
-    task_tx: &Sender<ResolveTask>,
-) {
-    let ActiveJob { spec, t0, requeues, mut revoked, bytes, requests, workers, slots, .. } = job;
-    let mut keep: Vec<PooledWorker> = Vec::new();
-    let mut any_failed = false;
-    let mut commits = 0usize;
-    for (w, slot) in workers.into_iter().zip(slots) {
-        match slot {
-            SlotState::Failed => {
-                any_failed = true;
-                revoked += 1;
-                pool.revoke(w);
-            }
-            SlotState::Done(resp) => {
-                if matches!(resp, Response::Commit(_)) {
-                    commits += 1;
-                }
-                keep.push(w);
-            }
-            SlotState::Waiting => unreachable!("outstanding == 0"),
-        }
-    }
-
-    if any_failed {
-        // A silent worker compromised this assignment: release the
-        // survivors and re-delegate the whole job to a fresh lease.
-        pool.release(keep);
-        if requeues < cfg.max_requeues && pool.size() > 0 {
-            queue.push_back(QueuedJob {
-                job_id,
-                spec,
-                requeues: requeues + 1,
-                revoked,
-                bytes,
-                requests,
-                t0: Some(t0),
-            });
-        } else {
-            outcomes.push(JobOutcome {
-                job_id,
-                accepted: None,
-                winner: None,
-                disputes: 0,
-                eliminated: 0,
-                requeues,
-                revoked,
-                wall: t0.elapsed(),
-                bytes,
-                requests,
-            });
-        }
-    } else if commits == 0 {
-        // Everyone answered, nobody produced a claim: unresolvable.
-        let eliminated = keep.len();
-        pool.release(keep);
-        outcomes.push(JobOutcome {
-            job_id,
-            accepted: None,
-            winner: None,
-            disputes: 0,
-            eliminated,
-            requeues,
-            revoked,
-            wall: t0.elapsed(),
-            bytes,
-            requests,
-        });
-    } else {
-        let task =
-            ResolveTask { job_id, spec, t0, requeues, revoked, bytes, requests, workers: keep };
-        task_tx.send(task).expect("resolver pool alive while jobs outstanding");
-    }
+    delegation.finish()
 }
 
 // ---------------------------------------------------------------------------
@@ -722,6 +1359,7 @@ fn run_job_blocking(job_id: u64, spec: JobSpec, workers: &mut [PooledWorker]) ->
             job_id,
             accepted: None,
             winner: None,
+            cancelled: false,
             disputes: 0,
             eliminated: names.len(),
             requeues: 0,
@@ -729,6 +1367,7 @@ fn run_job_blocking(job_id: u64, spec: JobSpec, workers: &mut [PooledWorker]) ->
             wall: t0.elapsed(),
             bytes,
             requests,
+            segments: Vec::new(),
         };
     }
 
@@ -739,6 +1378,7 @@ fn run_job_blocking(job_id: u64, spec: JobSpec, workers: &mut [PooledWorker]) ->
         job_id,
         accepted: Some(report.accepted),
         winner: Some(names[report.winner].clone()),
+        cancelled: false,
         disputes: report.disputes,
         eliminated: report.eliminated.len(),
         requeues: 0,
@@ -746,14 +1386,16 @@ fn run_job_blocking(job_id: u64, spec: JobSpec, workers: &mut [PooledWorker]) ->
         wall: t0.elapsed(),
         bytes,
         requests,
+        segments: Vec::new(),
     }
 }
 
 /// The pre-event-core scheduler: `pool.size() / k` lanes drain the queue,
 /// each lane blocking on its lease and spawning one thread per Train
-/// dispatch. No deadlines, no revocation — a hung worker stalls its lane
-/// forever. Kept as the baseline the benches compare the event core
-/// against (and as a worked example of the blocking `Endpoint` path).
+/// dispatch. No deadlines, no revocation, no sharding — a hung worker
+/// stalls its lane forever. Kept as the baseline the benches compare the
+/// event core against (and as a worked example of the blocking `Endpoint`
+/// path).
 pub fn run_service_blocking(jobs: Vec<JobSpec>, pool: &WorkerPool, k: usize) -> ServiceReport {
     assert!(k >= 1 && k <= pool.size(), "k={k} vs pool of {}", pool.size());
     let start_size = pool.size();
@@ -828,7 +1470,11 @@ mod tests {
             assert_eq!(o.eliminated, 0);
             assert_eq!(o.requeues, 0);
             assert_eq!(o.revoked, 0);
+            assert!(!o.cancelled);
             assert!(o.bytes > 0);
+            assert_eq!(o.segments.len(), 1, "default policy is unsharded");
+            assert_eq!(o.segments[0].end, 4);
+            assert_eq!(o.segments[0].accepted, o.accepted);
         }
         assert_eq!(report.total_disputes(), 0);
         assert!(report.revoked.is_empty());
@@ -866,6 +1512,7 @@ mod tests {
         let json = report.to_json();
         assert!(json.contains("\"jobs\":6"), "{json}");
         assert!(json.contains("\"resolved\":6"), "{json}");
+        assert!(json.contains("\"cancelled\":0"), "{json}");
         assert!(json.contains("\"requeued\":0"), "{json}");
         assert!(json.contains("\"eliminated\":0"), "{json}");
     }
@@ -961,5 +1608,37 @@ mod tests {
         assert_eq!(report.outcomes[0].revoked, 2, "both stallers revoked");
         assert_eq!(pool.size(), 0, "nobody left");
         assert_eq!(report.revoked.len(), 2);
+    }
+
+    #[test]
+    fn empty_report_stats_are_zero_not_nan() {
+        // A just-started (or immediately finished) delegation has no
+        // outcomes; every derived statistic must be finite.
+        let report = ServiceReport {
+            outcomes: Vec::new(),
+            wall: Duration::ZERO,
+            k: 2,
+            workers: 4,
+            revoked: Vec::new(),
+            threads: 5,
+        };
+        assert_eq!(report.jobs_per_sec(), 0.0);
+        assert_eq!(report.bytes_per_job(), 0.0);
+        assert_eq!(report.mean_latency(), Duration::ZERO);
+        assert!(report.jobs_per_sec().is_finite());
+        assert!(report.bytes_per_job().is_finite());
+        let json = report.to_json();
+        assert!(json.contains("\"jobs\":0"), "{json}");
+        assert!(!json.contains("NaN"), "{json}");
+
+        // The same holds for a live delegation that is finished with no
+        // jobs ever submitted.
+        let pool = in_process_pool(&[FaultPlan::Honest]);
+        let d = Delegation::start(&pool, ServiceConfig::new(1));
+        let report = d.finish();
+        assert_eq!(report.outcomes.len(), 0);
+        assert_eq!(report.jobs_per_sec(), 0.0);
+        assert_eq!(report.bytes_per_job(), 0.0);
+        assert_eq!(report.mean_latency(), Duration::ZERO);
     }
 }

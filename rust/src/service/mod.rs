@@ -1,40 +1,99 @@
-//! The delegation **service**: an event-driven coordinator that accepts
-//! many training jobs, schedules each onto `k` workers drawn from a shared
-//! pool, collects final commitments off a completion queue, and resolves
-//! disagreements with concurrent dispute tournaments — the deployment shape
-//! of the paper's client/trainers/referee topology at many-jobs scale, with
-//! the untrusted-provider failure modes (hangs, dead sockets) handled by
-//! per-request deadlines and lease revocation.
+//! The delegation **service**: a long-lived, handle-based client API over
+//! an event-driven coordinator. A [`client::Delegation`] accepts jobs one
+//! at a time from persistent [`client::Client`]s, shards each into
+//! checkpoint-delimited segments, schedules segments onto `k`-worker
+//! subsets drawn from a shared pool, collects final commitments off a
+//! completion queue, and resolves disagreements with concurrent dispute
+//! tournaments — the deployment shape of the paper's
+//! client/trainers/referee topology at many-jobs scale, with the
+//! untrusted-provider failure modes (hangs, dead sockets, transient
+//! slowness) handled by per-request deadlines, lease suspension with
+//! exponential-backoff re-admission, and permanent revocation.
 //!
-//! * [`pool`] — the leasable worker free-list. Jobs acquire `k` workers
-//!   atomically; a worker that misses a dispatch deadline or health-check
-//!   ping is **revoked** (never returns, pool shrinks). Each
-//!   [`pool::PooledWorker`] fronts a blocking endpoint, an actor thread, or
-//!   a multiplexed TCP connection behind one non-blocking dispatch surface.
+//! ## Client & handle lifecycle
+//!
+//! ```text
+//!   Delegation::start(&pool, cfg)
+//!       │                             per job:
+//!       ├── client() ─▶ Client ──submit(JobRequest{spec, policy})──▶ JobHandle
+//!       │                                                            │  │  │
+//!       │        ┌───────────────────────────────────────────────────┘  │  │
+//!       │     wait() ─▶ JobOutcome         try_status() ─▶ Queued ◀─────┘  │
+//!       │     (terminal, per-segment          │ Running{done,total}        │
+//!       │      verdicts rolled up)            │ Done(outcome)              │
+//!       │                                                                  │
+//!       │     cancel() ─▶ queued segments dropped; in-flight leases ◀──────┘
+//!       │                 drain back to the pool as their dispatches
+//!       │                 settle; handle resolves Done immediately
+//!       │                 (outcome.cancelled == true)
+//!       └── finish() ─▶ ServiceReport (drain, join, aggregate)
+//! ```
+//!
+//! ## Segment sharding
+//!
+//! A job with `policy.segments = m` is split at the Phase-1
+//! [`split_points`](crate::train::checkpoint::split_points) boundaries
+//! `b_1 < … < b_m = steps`; segment `i` is the prefix job
+//! `spec.prefix(b_i)`. Determinism makes a prefix job's final commitment
+//! equal the full job's checkpoint commitment at that boundary, so
+//! per-segment tournaments certify the job's checkpoint chain and the
+//! final segment's verdict **is** the unsharded job's verdict. Segments
+//! schedule independently — different worker subsets, concurrently when
+//! the pool has capacity, re-queued individually on worker failure — and
+//! roll up into one [`coordinator::JobOutcome`] (`segments` holds the
+//! per-boundary verdicts).
+//!
+//! ## Migration from `run_service`
+//!
+//! `run_service(jobs, &pool, k)` and `run_service_with(jobs, &pool, cfg)`
+//! survive as wrappers (submit everything, wait, [`Delegation::finish`])
+//! so existing callers compile unchanged. New code should hold a
+//! [`client::Delegation`] and submit through handles; remote callers use
+//! the wire API (`Submit` / `Status` / `Cancel` requests in
+//! [`crate::verde::protocol`]) against a [`client::DelegationFrontend`]
+//! served over TCP.
+//!
+//! * [`pool`] — the leasable worker free-list. Segments acquire `k`
+//!   workers atomically, filtered by the job's backend requirement; a
+//!   worker that misses a deadline is **suspended** (with parole +
+//!   re-admission) or **revoked** (permanent, pool shrinks). Each
+//!   [`pool::PooledWorker`] fronts a blocking endpoint, an actor thread,
+//!   or a multiplexed TCP connection behind one non-blocking dispatch
+//!   surface, and advertises the [`Backend`](crate::graph::kernels::Backend)
+//!   it runs on.
 //! * [`worker`] — [`worker::WorkerHost`]: the worker-process brain. It
 //!   accepts [`Request::Train`](crate::verde::protocol::Request) job
 //!   assignments, runs them through a
 //!   [`TrainerNode`](crate::verde::trainer::TrainerNode) (honestly or under
 //!   a configured [`worker::FaultPlan`], including
-//!   [`worker::FaultPlan::Stall`] — hanging mid-protocol), answers
-//!   health-check pings, and serves dispute queries for the active job.
-//! * [`coordinator`] — [`coordinator::run_service`]: per-job state machines
-//!   driven off one completion queue by a single event-loop thread plus a
-//!   small tournament-resolver pool; deadline expiry → lease revocation →
-//!   job re-queue. The thread-per-dispatch baseline survives as
-//!   [`coordinator::run_service_blocking`].
+//!   [`worker::FaultPlan::Stall`] — hanging mid-protocol — and
+//!   [`worker::FaultPlan::Nap`] — transiently slow), answers health-check
+//!   pings, and serves dispute queries for the active job.
+//! * [`coordinator`] — the persistent event loop: per-segment state
+//!   machines driven off one completion queue by a single event-loop
+//!   thread plus a small tournament-resolver pool; deadline expiry →
+//!   suspension/revocation → segment re-queue. The thread-per-dispatch
+//!   baseline survives as [`coordinator::run_service_blocking`].
+//! * [`client`] — [`client::Delegation`], [`client::Client`],
+//!   [`client::JobHandle`], and the wire-facing
+//!   [`client::DelegationFrontend`].
 //!
 //! Workers can live anywhere an [`Endpoint`](crate::net::Endpoint) can:
 //! in-process, on threads ([`crate::net::threaded`]), or in separate
 //! processes over TCP — blocking ([`crate::net::tcp`]) or multiplexed
 //! ([`crate::net::mux`], thousands of workers per coordinator thread).
 
+pub mod client;
 pub mod coordinator;
 pub mod pool;
 pub mod worker;
 
+pub use client::{Client, Delegation, DelegationFrontend, JobHandle, JobRequest, JobStatus};
 pub use coordinator::{
-    run_service, run_service_blocking, run_service_with, JobOutcome, ServiceConfig, ServiceReport,
+    run_service, run_service_blocking, run_service_with, JobOutcome, SegmentOutcome,
+    ServiceConfig, ServiceReport,
 };
 pub use pool::{PooledWorker, WorkerPool};
 pub use worker::{FaultPlan, WorkerHost};
+
+pub use crate::verde::protocol::{BackendRequirement, JobPolicy, RemoteStatus};

@@ -1,16 +1,34 @@
-//! The worker pool: a free-list of leasable worker endpoints with
-//! **lease revocation**. Scheduler state machines acquire `k` workers
-//! **atomically** (all-or-nothing under one lock) which keeps the acquire
-//! path deadlock-free, and hand back each worker either by releasing it
-//! (healthy) or revoking it (missed a dispatch deadline or health-check
-//! ping). A revoked worker leaves the pool permanently: it never re-enters
-//! the free list and [`WorkerPool::size`] shrinks.
+//! The worker pool: a free-list of leasable worker endpoints with **lease
+//! revocation and suspension**. Scheduler state machines acquire `k`
+//! workers **atomically** (all-or-nothing under one lock) which keeps the
+//! acquire path deadlock-free, and hand back each worker by releasing it
+//! (healthy), suspending it (missed a deadline — it may return after a
+//! probation backoff), or revoking it (permanently expelled). Suspended
+//! and revoked workers leave the live count: [`WorkerPool::size`] shrinks.
+//!
+//! Suspension is the mechanism behind the coordinator's **re-admission
+//! with exponential backoff**: a worker that misses a dispatch deadline or
+//! ping is [`WorkerPool::suspend`]ed until a backoff instant; once due it
+//! is handed out via [`WorkerPool::parole_due`] for a probe ping, and
+//! either [`WorkerPool::readmit`]ted (answered — rejoins the free list,
+//! `size` grows back), [`WorkerPool::resuspend`]ed (still silent — backoff
+//! doubles), or [`WorkerPool::expel`]led (struck out). The pool is a
+//! cheaply clonable handle (`Arc` inside) so a long-lived
+//! [`Delegation`](crate::service::client::Delegation) can own a reference
+//! while callers keep theirs.
+//!
+//! Each worker carries the [`Backend`] it advertises
+//! ([`PooledWorker::with_backend`]); [`WorkerPool::try_acquire_where`]
+//! leases against a predicate so jobs with a
+//! [`BackendRequirement`](crate::verde::protocol::BackendRequirement) are
+//! routed to admissible hardware only.
 //!
 //! Workers are held as [`PooledWorker`]s, which unify three transports
 //! behind one dispatch surface:
 //!
-//! * **Blocking** — any [`Endpoint`] (in-process [`WorkerHost`]
-//!   (crate::service::worker::WorkerHost), threaded remote, blocking TCP).
+//! * **Blocking** — any [`Endpoint`] (in-process
+//!   [`WorkerHost`](crate::service::worker::WorkerHost), threaded remote,
+//!   blocking TCP).
 //! * **Actor** — the same endpoint activated onto its own mailbox thread so
 //!   the event-driven coordinator can dispatch without blocking; the
 //!   endpoint is recovered when the actor is deactivated.
@@ -23,13 +41,14 @@
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::graph::kernels::Backend;
 use crate::net::mux::{Completion, CompletionKind, MuxConn};
 use crate::net::Endpoint;
-use crate::verde::protocol::{Request, Response};
+use crate::verde::protocol::{BackendRequirement, Request, Response};
 
 /// Message into a worker actor's mailbox.
 enum ActorMsg {
@@ -97,6 +116,11 @@ enum Link {
 pub struct PooledWorker {
     pub name: String,
     link: Link,
+    /// The hardware class this worker advertises; jobs with a
+    /// reproducible-only requirement are never leased to `Free` workers.
+    backend: Backend,
+    /// Deadlines missed so far — drives the re-admission backoff doubling.
+    strikes: u32,
     /// Deadline applied to blocking calls routed through an actor link.
     call_deadline: Duration,
     /// Latched when a blocking call through this worker went unanswered;
@@ -111,6 +135,8 @@ impl PooledWorker {
         PooledWorker {
             name: name.to_string(),
             link: Link::Blocking(Box::new(endpoint)),
+            backend: Backend::Rep,
+            strikes: 0,
             call_deadline: Duration::from_secs(60),
             faulted: false,
         }
@@ -121,9 +147,34 @@ impl PooledWorker {
         PooledWorker {
             name: name.to_string(),
             link: Link::Mux(conn),
+            backend: Backend::Rep,
+            strikes: 0,
             call_deadline: Duration::from_secs(60),
             faulted: false,
         }
+    }
+
+    /// Declare the hardware class this worker runs on (default
+    /// [`Backend::Rep`]). This is advertised capability used for routing;
+    /// lying about it is caught the usual way — by losing disputes.
+    pub fn with_backend(mut self, backend: Backend) -> PooledWorker {
+        self.backend = backend;
+        self
+    }
+
+    /// The hardware class this worker advertises.
+    pub fn backend(&self) -> &Backend {
+        &self.backend
+    }
+
+    /// Deadlines this worker has missed (drives suspension backoff).
+    pub fn strikes(&self) -> u32 {
+        self.strikes
+    }
+
+    /// Record one more missed deadline.
+    pub fn add_strike(&mut self) {
+        self.strikes = self.strikes.saturating_add(1);
     }
 
     /// Deadline for blocking calls (dispute/tournament traffic). Applies
@@ -268,19 +319,44 @@ impl Endpoint for PooledWorker {
     }
 }
 
+/// A suspended worker serving its probation backoff.
+struct Suspended {
+    worker: PooledWorker,
+    until: Instant,
+}
+
 struct PoolState {
     free: VecDeque<PooledWorker>,
-    /// Live workers (idle + leased); shrinks on revocation.
+    /// Live workers (idle + leased); shrinks on suspension/revocation.
     size: usize,
-    /// Names of revoked workers, in revocation order.
+    /// Suspended workers waiting out their backoff.
+    suspended: Vec<Suspended>,
+    /// Workers handed out via [`WorkerPool::parole_due`] and not yet
+    /// readmitted / resuspended / expelled.
+    on_parole: usize,
+    /// Reproducible ([`Backend::Rep`]) workers that may ever serve again
+    /// (free + leased + suspended + paroled); shrinks only on permanent
+    /// expulsion. Drives [`WorkerPool::any_eligible`] for
+    /// reproducible-only jobs even while individual workers are leased
+    /// out and uninspectable.
+    rep_total: usize,
+    /// Names of workers whose leases were revoked or suspended, in event
+    /// order (a re-admitted worker's name stays on the record).
     revoked: Vec<String>,
 }
 
-/// Free-list of idle workers plus a condvar for callers waiting on
-/// capacity, with permanent lease revocation.
-pub struct WorkerPool {
+struct PoolInner {
     state: Mutex<PoolState>,
     available: Condvar,
+}
+
+/// Free-list of idle workers plus a condvar for callers waiting on
+/// capacity, with lease suspension (probation + re-admission) and
+/// permanent revocation. Cloning the pool clones a handle to the same
+/// shared state.
+#[derive(Clone)]
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
 }
 
 impl WorkerPool {
@@ -289,28 +365,63 @@ impl WorkerPool {
     pub fn new(workers: Vec<PooledWorker>) -> WorkerPool {
         assert!(!workers.is_empty(), "a pool needs at least one worker");
         WorkerPool {
-            state: Mutex::new(PoolState {
-                size: workers.len(),
-                free: workers.into(),
-                revoked: Vec::new(),
+            inner: Arc::new(PoolInner {
+                state: Mutex::new(PoolState {
+                    size: workers.len(),
+                    rep_total: workers
+                        .iter()
+                        .filter(|w| matches!(w.backend, Backend::Rep))
+                        .count(),
+                    free: workers.into(),
+                    suspended: Vec::new(),
+                    on_parole: 0,
+                    revoked: Vec::new(),
+                }),
+                available: Condvar::new(),
             }),
-            available: Condvar::new(),
         }
     }
 
-    /// Live workers owned by the pool (idle + leased, revoked excluded).
+    fn state(&self) -> std::sync::MutexGuard<'_, PoolState> {
+        self.inner.state.lock().unwrap()
+    }
+
+    /// Live workers owned by the pool (idle + leased; suspended and
+    /// revoked excluded).
     pub fn size(&self) -> usize {
-        self.state.lock().unwrap().size
+        self.state().size
     }
 
     /// Idle workers right now (diagnostic; racy by nature).
     pub fn idle(&self) -> usize {
-        self.state.lock().unwrap().free.len()
+        self.state().free.len()
     }
 
-    /// Names of workers whose leases were revoked, in revocation order.
+    /// Workers currently out of the live pool but eligible to return:
+    /// suspended plus out on a parole probe.
+    pub fn suspended(&self) -> usize {
+        let st = self.state();
+        st.suspended.len() + st.on_parole
+    }
+
+    /// Names of workers whose leases were revoked or suspended, in event
+    /// order.
     pub fn revoked(&self) -> Vec<String> {
-        self.state.lock().unwrap().revoked.clone()
+        self.state().revoked.clone()
+    }
+
+    /// Could a worker satisfying `req` ever be leased again? Counts free,
+    /// leased, suspended, and paroled workers — everything short of
+    /// permanent expulsion. Leased workers are not inspectable, so the
+    /// reproducible case is answered from a maintained counter rather
+    /// than a scan; a `false` here is final and lets the scheduler fail a
+    /// segment instead of deferring it forever.
+    pub fn any_eligible(&self, req: BackendRequirement) -> bool {
+        let st = self.state();
+        match req {
+            BackendRequirement::Any => st.size + st.suspended.len() + st.on_parole > 0,
+            BackendRequirement::ReproducibleOnly => st.rep_total > 0,
+        }
     }
 
     /// Block until `k` workers are free, then take them all at once.
@@ -321,42 +432,62 @@ impl WorkerPool {
     /// panic is the deadlock-free alternative to waiting forever).
     pub fn acquire(&self, k: usize) -> Vec<PooledWorker> {
         assert!(k >= 1, "acquire(0) is meaningless");
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state();
         loop {
             assert!(k <= st.size, "acquire({k}) from a pool of {}", st.size);
             if st.free.len() >= k {
                 return st.free.drain(..k).collect();
             }
-            st = self.available.wait(st).unwrap();
+            st = self.inner.available.wait(st).unwrap();
         }
     }
 
     /// Take `k` workers if they are free right now, else `None` — the
     /// event-driven coordinator's non-blocking acquire.
     pub fn try_acquire(&self, k: usize) -> Option<Vec<PooledWorker>> {
+        self.try_acquire_where(k, |_| true)
+    }
+
+    /// Take `k` workers satisfying `pred` if that many are free right
+    /// now, else `None` (free workers failing the predicate stay in
+    /// place, in order) — backend-requirement routing.
+    pub fn try_acquire_where(
+        &self,
+        k: usize,
+        pred: impl Fn(&PooledWorker) -> bool,
+    ) -> Option<Vec<PooledWorker>> {
         if k == 0 {
             return Some(Vec::new());
         }
-        let mut st = self.state.lock().unwrap();
-        if st.free.len() >= k {
-            Some(st.free.drain(..k).collect())
-        } else {
-            None
+        let mut st = self.state();
+        if st.free.iter().filter(|w| pred(w)).count() < k {
+            return None;
         }
+        let mut taken = Vec::with_capacity(k);
+        let mut rest = VecDeque::with_capacity(st.free.len());
+        while let Some(w) = st.free.pop_front() {
+            if taken.len() < k && pred(&w) {
+                taken.push(w);
+            } else {
+                rest.push_back(w);
+            }
+        }
+        st.free = rest;
+        Some(taken)
     }
 
     /// Take every currently idle worker (health-check sweeps, teardown).
     pub fn drain_idle(&self) -> Vec<PooledWorker> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state();
         st.free.drain(..).collect()
     }
 
     /// Return leased workers and wake waiting acquirers.
     pub fn release(&self, workers: Vec<PooledWorker>) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state();
         st.free.extend(workers);
         drop(st);
-        self.available.notify_all();
+        self.inner.available.notify_all();
     }
 
     /// Permanently expel a leased worker: it never re-enters the free list
@@ -364,19 +495,95 @@ impl WorkerPool {
     /// acquire that can no longer be satisfied panics instead of sleeping
     /// forever.
     pub fn revoke(&self, worker: PooledWorker) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state();
         st.size -= 1;
+        if matches!(worker.backend, Backend::Rep) {
+            st.rep_total -= 1;
+        }
         st.revoked.push(worker.name.clone());
         drop(st);
         drop(worker);
-        self.available.notify_all();
+        self.inner.available.notify_all();
+    }
+
+    /// Suspend a leased worker until `until`: it leaves the live pool
+    /// (size shrinks, like a revocation — the name is logged) but stays
+    /// eligible for parole once the backoff elapses.
+    pub fn suspend(&self, worker: PooledWorker, until: Instant) {
+        let mut st = self.state();
+        st.size -= 1;
+        st.revoked.push(worker.name.clone());
+        st.suspended.push(Suspended { worker, until });
+        drop(st);
+        self.inner.available.notify_all();
+    }
+
+    /// Earliest instant a suspended worker becomes due for parole.
+    pub fn next_parole(&self) -> Option<Instant> {
+        self.state().suspended.iter().map(|s| s.until).min()
+    }
+
+    /// Take every suspended worker whose backoff has elapsed, for a probe
+    /// ping. Each must come back via [`WorkerPool::readmit`],
+    /// [`WorkerPool::resuspend`], or [`WorkerPool::expel`].
+    pub fn parole_due(&self, now: Instant) -> Vec<PooledWorker> {
+        let mut st = self.state();
+        let mut due = Vec::new();
+        let mut keep = Vec::with_capacity(st.suspended.len());
+        for s in st.suspended.drain(..) {
+            if s.until <= now {
+                due.push(s.worker);
+            } else {
+                keep.push(s);
+            }
+        }
+        st.suspended = keep;
+        st.on_parole += due.len();
+        due
+    }
+
+    /// A paroled worker answered its probe: re-enter the free list, live
+    /// size grows back.
+    pub fn readmit(&self, worker: PooledWorker) {
+        let mut st = self.state();
+        st.on_parole -= 1;
+        st.size += 1;
+        st.free.push_back(worker);
+        drop(st);
+        self.inner.available.notify_all();
+    }
+
+    /// A paroled worker missed its probe: back to suspension with a new
+    /// (longer) backoff.
+    pub fn resuspend(&self, worker: PooledWorker, until: Instant) {
+        let mut st = self.state();
+        st.on_parole -= 1;
+        st.suspended.push(Suspended { worker, until });
+    }
+
+    /// A paroled worker struck out: permanently expelled.
+    pub fn expel(&self, worker: PooledWorker) {
+        let mut st = self.state();
+        st.on_parole -= 1;
+        if matches!(worker.backend, Backend::Rep) {
+            st.rep_total -= 1;
+        }
+        drop(st);
+        drop(worker);
+        self.inner.available.notify_all();
     }
 
     /// Tear the pool down, handing every idle worker back (used for
     /// orderly shutdown: callers typically send `Request::Shutdown` to
-    /// each endpoint). Leased workers must be released first.
+    /// each endpoint). Leased workers must be released first; suspended
+    /// workers are dropped — by definition they stopped answering, so no
+    /// goodbye is owed.
     pub fn into_workers(self) -> Vec<PooledWorker> {
-        self.state.into_inner().unwrap().free.into_iter().collect()
+        let mut st = self.state();
+        st.size = 0;
+        st.rep_total = 0;
+        st.suspended.clear();
+        st.free.drain(..).collect()
     }
 }
 
@@ -446,6 +653,85 @@ mod tests {
             pool.into_workers().into_iter().map(|w| w.name).collect();
         assert_eq!(names.len(), 2);
         assert!(!names.contains(&victim_name), "{names:?}");
+    }
+
+    #[test]
+    fn suspended_worker_paroles_and_readmits() {
+        let pool = pool_of(3);
+        let mut lease = pool.acquire(2);
+        let mut victim = lease.pop().unwrap();
+        victim.add_strike();
+        assert_eq!(victim.strikes(), 1);
+        let until = Instant::now() + Duration::from_millis(30);
+        pool.suspend(victim, until);
+        assert_eq!(pool.size(), 2, "suspension leaves the live pool");
+        assert_eq!(pool.suspended(), 1);
+        assert_eq!(pool.revoked().len(), 1, "suspension is logged");
+        assert!(pool.next_parole().is_some());
+        assert!(pool.parole_due(Instant::now()).is_empty(), "backoff not yet served");
+        std::thread::sleep(Duration::from_millis(40));
+        let due = pool.parole_due(Instant::now());
+        assert_eq!(due.len(), 1);
+        assert_eq!(pool.suspended(), 1, "paroled workers still count as out");
+        let w = due.into_iter().next().unwrap();
+        pool.readmit(w);
+        assert_eq!(pool.size(), 3, "re-admission restores the live size");
+        assert_eq!(pool.suspended(), 0);
+        pool.release(lease);
+        assert_eq!(pool.idle(), 3);
+    }
+
+    #[test]
+    fn resuspend_and_expel_account_parole_correctly() {
+        let pool = pool_of(2);
+        let mut lease = pool.acquire(2);
+        pool.suspend(lease.pop().unwrap(), Instant::now());
+        pool.suspend(lease.pop().unwrap(), Instant::now());
+        assert_eq!(pool.size(), 0);
+        let due = pool.parole_due(Instant::now());
+        assert_eq!(due.len(), 2);
+        let mut it = due.into_iter();
+        pool.resuspend(it.next().unwrap(), Instant::now() + Duration::from_secs(60));
+        pool.expel(it.next().unwrap());
+        assert_eq!(pool.suspended(), 1, "one back in suspension, one gone");
+        assert_eq!(pool.size(), 0);
+        assert!(
+            pool.any_eligible(BackendRequirement::Any),
+            "the resuspended worker keeps hope alive"
+        );
+        assert!(
+            pool.any_eligible(BackendRequirement::ReproducibleOnly),
+            "the resuspended worker is reproducible"
+        );
+    }
+
+    #[test]
+    fn try_acquire_where_routes_by_backend() {
+        use crate::tensor::profile::HardwareProfile;
+        let free_hw = Backend::Free(HardwareProfile::T4_16G);
+        let pool = WorkerPool::new(vec![
+            PooledWorker::new("gpu0", Nop).with_backend(free_hw),
+            PooledWorker::new("rep0", Nop),
+            PooledWorker::new("gpu1", Nop).with_backend(free_hw),
+            PooledWorker::new("rep1", Nop),
+        ]);
+        let rep_only = |w: &PooledWorker| matches!(w.backend(), Backend::Rep);
+        let lease = pool.try_acquire_where(2, rep_only).expect("two rep workers free");
+        let names: Vec<&str> = lease.iter().map(|w| w.name.as_str()).collect();
+        assert_eq!(names, vec!["rep0", "rep1"]);
+        assert!(pool.try_acquire_where(1, rep_only).is_none(), "no rep worker left");
+        assert_eq!(pool.idle(), 2, "free-order workers stay in place");
+        assert!(
+            pool.any_eligible(BackendRequirement::ReproducibleOnly),
+            "leased rep workers still count as eligible"
+        );
+        // Permanently expelling both rep workers extinguishes eligibility
+        // even though free-order workers remain.
+        let mut lease = lease;
+        pool.revoke(lease.pop().unwrap());
+        pool.revoke(lease.pop().unwrap());
+        assert!(!pool.any_eligible(BackendRequirement::ReproducibleOnly));
+        assert!(pool.any_eligible(BackendRequirement::Any));
     }
 
     #[test]

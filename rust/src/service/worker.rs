@@ -42,13 +42,21 @@ pub enum FaultPlan {
     /// worker that hangs mid-protocol: the request never returns, so only
     /// deadline expiry and lease revocation can unblock the job.
     Stall { at_request: u64 },
+    /// Sleep `nap_ms` before answering protocol request number
+    /// `at_request` (later requests answer normally) — a worker that is
+    /// *transiently* unresponsive (GC pause, checkpoint flush, noisy
+    /// neighbor) rather than dead. The dispatch deadline still fires and
+    /// the lease is suspended, but a later parole ping finds the worker
+    /// healthy and re-admits it.
+    Nap { at_request: u64, nap_ms: u64 },
 }
 
 impl FaultPlan {
     /// Parse CLI syntax: `none` | `kind` | `kind@step`, with kinds
     /// `tamper`, `wrong-op`, `wrong-data`, `skip-opt`, `skip-steps`,
     /// `forged-lineage`, `inconsistent`, `stall` (`stall@N` = stop
-    /// responding from protocol request `N` on).
+    /// responding from protocol request `N` on), `nap` (`nap@N` = sleep
+    /// 1500 ms before answering request `N`, then recover).
     pub fn parse(s: &str) -> Option<FaultPlan> {
         let (kind, step) = match s.split_once('@') {
             Some((k, v)) => (k, Some(v.parse::<u64>().ok()?)),
@@ -64,6 +72,7 @@ impl FaultPlan {
             "forged-lineage" => FaultPlan::ForgedLineage { step },
             "inconsistent" => FaultPlan::InconsistentCommit { step },
             "stall" => FaultPlan::Stall { at_request: step.unwrap_or(1).max(1) },
+            "nap" => FaultPlan::Nap { at_request: step.unwrap_or(1).max(1), nap_ms: 1500 },
             _ => return None,
         })
     }
@@ -111,9 +120,9 @@ impl FaultPlan {
             FaultPlan::InconsistentCommit { step } => {
                 Fault::InconsistentCommit { step: Self::step_for(step, spec) }
             }
-            // The stall lives at the request layer (the host never answers),
-            // not in the training computation itself.
-            FaultPlan::Stall { .. } => Fault::None,
+            // Stalls and naps live at the request layer (the host delays
+            // or withholds answers), not in the training computation.
+            FaultPlan::Stall { .. } | FaultPlan::Nap { .. } => Fault::None,
         }
     }
 }
@@ -130,6 +139,7 @@ impl fmt::Display for FaultPlan {
             FaultPlan::ForgedLineage { step } => write!(f, "forged-lineage@{step:?}"),
             FaultPlan::InconsistentCommit { step } => write!(f, "inconsistent@{step:?}"),
             FaultPlan::Stall { at_request } => write!(f, "stall@{at_request}"),
+            FaultPlan::Nap { at_request, nap_ms } => write!(f, "nap@{at_request} ({nap_ms}ms)"),
         }
     }
 }
@@ -184,6 +194,12 @@ impl Endpoint for WorkerHost {
                 loop {
                     std::thread::sleep(std::time::Duration::from_secs(3600));
                 }
+            }
+        }
+        if let FaultPlan::Nap { at_request, nap_ms } = self.plan {
+            if self.requests_seen == at_request {
+                // Transient unresponsiveness: miss one deadline, recover.
+                std::thread::sleep(std::time::Duration::from_millis(nap_ms));
             }
         }
         match req {
@@ -242,6 +258,10 @@ mod tests {
             Some(FaultPlan::Stall { at_request: 3 })
         );
         assert_eq!(FaultPlan::parse("stall"), Some(FaultPlan::Stall { at_request: 1 }));
+        assert_eq!(
+            FaultPlan::parse("nap@2"),
+            Some(FaultPlan::Nap { at_request: 2, nap_ms: 1500 })
+        );
         assert_eq!(FaultPlan::parse("nonsense"), None);
         assert_eq!(FaultPlan::parse("tamper@x"), None);
     }

@@ -86,7 +86,7 @@ fn chunk_order(lanes: usize, combine: CombineOrder) -> Vec<usize> {
 
 /// Hardware-tuned matmul: FMA contraction at full speed (single accumulator
 /// row, unit stride), with the K range split into `lanes` chunks retired in
-/// the profile's [`chunk_order`]. Per output element the FP addition order
+/// the profile's `chunk_order`. Per output element the FP addition order
 /// is therefore a function of the profile — deterministic per device,
 /// different across devices — at zero cost relative to the fastest schedule.
 pub fn matmul(a: &Tensor, b: &Tensor, hw: &HardwareProfile) -> Tensor {

@@ -45,6 +45,18 @@ impl JobSpec {
         }
     }
 
+    /// The job restricted to its first `steps` steps — the
+    /// checkpoint-segment prefix the service layer delegates when a job is
+    /// sharded. Segment ends come from the Phase-1
+    /// [`checkpoint::split_points`] schedule, so every party derives the
+    /// identical sub-job, and a prefix job's final commitment **is** the
+    /// full job's checkpoint commitment at that boundary (training is
+    /// deterministic from the spec).
+    pub fn prefix(&self, steps: u64) -> JobSpec {
+        debug_assert!(steps >= 1 && steps <= self.steps, "prefix {steps} of {}", self.steps);
+        JobSpec { steps, ..*self }
+    }
+
     /// Commitment to the job itself (model structure + seeds + metadata);
     /// disputes are scoped to a job hash.
     pub fn commit(&self, graph_structure: &Hash, genesis_root: &Hash) -> Hash {
@@ -66,6 +78,18 @@ impl JobSpec {
 mod tests {
     use super::*;
     use crate::hash::Hash;
+
+    #[test]
+    fn prefix_changes_only_steps() {
+        let a = JobSpec::quick(Preset::Mlp, 16);
+        let p = a.prefix(4);
+        assert_eq!(p.steps, 4);
+        assert_eq!(p.preset, a.preset);
+        assert_eq!(p.data_seed, a.data_seed);
+        assert_eq!(p.weight_seed, a.weight_seed);
+        assert_eq!(p.checkpoint_n, a.checkpoint_n);
+        assert_eq!(a.prefix(a.steps), a, "full-length prefix is the job itself");
+    }
 
     #[test]
     fn job_commit_binds_fields() {

@@ -7,13 +7,105 @@
 //! the property suite in `rust/tests/wire_props.rs` pin
 //! `wire_size() == encode().len()` permanently.
 
+use std::time::Duration;
+
 use crate::graph::executor::AugmentedCGNode;
+use crate::graph::kernels::Backend;
 use crate::hash::merkle::MerkleProof;
 use crate::hash::Hash;
 use crate::tensor::Tensor;
 use crate::train::JobSpec;
 
 use super::wire;
+
+/// Which hardware a job may be delegated to (per-job policy).
+///
+/// Verification hinges on bit-reproducibility: only RepOps workers
+/// ([`Backend::Rep`]) can take part in disputes without the cross-hardware
+/// divergence escape hatch. A client that intends to audit its job demands
+/// `ReproducibleOnly`; throughput-only work can accept `Any` hardware
+/// profile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendRequirement {
+    /// Any worker, including free-order tuned kernels on some
+    /// [`HardwareProfile`](crate::tensor::profile::HardwareProfile).
+    Any,
+    /// Only bit-reproducible (RepOps) workers.
+    ReproducibleOnly,
+}
+
+impl BackendRequirement {
+    /// Does a worker advertising `backend` satisfy this requirement?
+    pub fn admits(self, backend: &Backend) -> bool {
+        match self {
+            BackendRequirement::Any => true,
+            BackendRequirement::ReproducibleOnly => matches!(backend, Backend::Rep),
+        }
+    }
+}
+
+/// Per-job delegation policy, carried next to the [`JobSpec`] in
+/// [`Request::Submit`] and by `service::client::JobRequest`. Every field
+/// has an "inherit the service default" form so `JobPolicy::default()` is
+/// always a valid submission.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobPolicy {
+    /// Replication factor: workers leased per checkpoint segment.
+    /// `0` inherits the service default. On the wire, `k` and `segments`
+    /// clamp to [`POLICY_FIELD_MAX`](super::wire::POLICY_FIELD_MAX).
+    pub k: usize,
+    /// Per-dispatch deadline override (`None` inherits the service
+    /// default). Millisecond granularity on the wire.
+    pub deadline: Option<Duration>,
+    /// Scheduling priority: higher schedules first; ties run in
+    /// submission order.
+    pub priority: i64,
+    /// Which hardware the job's segments may be leased to.
+    pub backend: BackendRequirement,
+    /// Checkpoint-delimited segments to shard the job into (≥ 1; shard
+    /// edges come from the Phase-1 `split_points` schedule).
+    pub segments: u64,
+    /// Re-queue budget override (`None` inherits the service default).
+    pub max_requeues: Option<u32>,
+}
+
+impl Default for JobPolicy {
+    fn default() -> JobPolicy {
+        JobPolicy {
+            k: 0,
+            deadline: None,
+            priority: 0,
+            backend: BackendRequirement::Any,
+            segments: 1,
+            max_requeues: None,
+        }
+    }
+}
+
+/// Progress of a submitted job as reported over the wire by the
+/// coordinator frontend ([`Response::Status`]) — the remote mirror of the
+/// in-process `service::client::JobStatus`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RemoteStatus {
+    /// The frontend knows no job under that id.
+    Unknown,
+    /// Submitted, no segment leased yet.
+    Queued,
+    /// At least one segment leased; counts cover finished segments.
+    Running { segments_done: u64, segments_total: u64 },
+    /// All segments settled (or the job was cancelled).
+    Done {
+        /// The commitment the service vouches for (`None` when unresolved
+        /// or cancelled).
+        accepted: Option<Hash>,
+        /// True when the job ended by [`Request::Cancel`].
+        cancelled: bool,
+        /// Pairwise disputes across all segments.
+        disputes: u64,
+        /// Workers convicted as dishonest across all segments.
+        eliminated: u64,
+    },
+}
 
 /// Referee/coordinator → trainer requests.
 #[derive(Debug, Clone)]
@@ -42,6 +134,17 @@ pub enum Request {
     /// coordinator revokes the lease of a worker that misses its ping
     /// deadline.
     Ping,
+    /// Client → coordinator frontend: register a job with per-job policy.
+    /// Answered with [`Response::Submitted`] carrying the job id every
+    /// later `Status`/`Cancel` addresses.
+    Submit { spec: JobSpec, policy: JobPolicy },
+    /// Client → coordinator frontend: poll a submitted job's progress.
+    /// Answered with [`Response::Status`].
+    Status { job_id: u64 },
+    /// Client → coordinator frontend: cancel a submitted job; its leases
+    /// return to the pool mid-flight. Answered with
+    /// [`Response::Cancelled`].
+    Cancel { job_id: u64 },
     /// End the conversation (stream/threaded transports).
     Shutdown,
 }
@@ -78,6 +181,13 @@ pub enum Response {
     Bye,
     /// Liveness answer to [`Request::Ping`].
     Pong,
+    /// [`Request::Submit`] accepted; the job is registered under this id.
+    Submitted { job_id: u64 },
+    /// Answer to [`Request::Status`].
+    Status(RemoteStatus),
+    /// Answer to [`Request::Cancel`]: whether the cancel took effect
+    /// before the job finished.
+    Cancelled(bool),
 }
 
 impl Request {
@@ -130,6 +240,23 @@ mod tests {
             Request::InputTensor { step: 2, node_idx: 1, input_idx: 0 },
             Request::Train { spec: JobSpec::quick(Preset::LlamaTiny, 64) },
             Request::Ping,
+            Request::Submit {
+                spec: JobSpec::quick(Preset::Mlp, 32),
+                policy: JobPolicy {
+                    k: 3,
+                    deadline: Some(Duration::from_millis(1500)),
+                    priority: -4,
+                    backend: BackendRequirement::ReproducibleOnly,
+                    segments: 4,
+                    max_requeues: Some(2),
+                },
+            },
+            Request::Submit {
+                spec: JobSpec::quick(Preset::Mlp, 8),
+                policy: JobPolicy::default(),
+            },
+            Request::Status { job_id: 17 },
+            Request::Cancel { job_id: u64::MAX },
             Request::Shutdown,
         ];
         for r in reqs {
@@ -142,9 +269,38 @@ mod tests {
             Response::Refuse("why".into()),
             Response::Bye,
             Response::Pong,
+            Response::Submitted { job_id: 9 },
+            Response::Status(RemoteStatus::Unknown),
+            Response::Status(RemoteStatus::Queued),
+            Response::Status(RemoteStatus::Running { segments_done: 1, segments_total: 4 }),
+            Response::Status(RemoteStatus::Done {
+                accepted: Some(Hash::ZERO),
+                cancelled: false,
+                disputes: 2,
+                eliminated: 1,
+            }),
+            Response::Status(RemoteStatus::Done {
+                accepted: None,
+                cancelled: true,
+                disputes: 0,
+                eliminated: 0,
+            }),
+            Response::Cancelled(true),
+            Response::Cancelled(false),
         ];
         for r in resps {
             assert_eq!(r.wire_size(), r.encode().len(), "{r:?}");
         }
+    }
+
+    #[test]
+    fn backend_requirement_admits_matches_reproducibility() {
+        use crate::graph::kernels::Backend;
+        use crate::tensor::profile::HardwareProfile;
+        assert!(BackendRequirement::Any.admits(&Backend::Rep));
+        assert!(BackendRequirement::Any.admits(&Backend::Free(HardwareProfile::T4_16G)));
+        assert!(BackendRequirement::ReproducibleOnly.admits(&Backend::Rep));
+        assert!(!BackendRequirement::ReproducibleOnly
+            .admits(&Backend::Free(HardwareProfile::A100_40G)));
     }
 }

@@ -409,6 +409,11 @@ impl Endpoint for TrainerNode {
                 // delegation is handled by `service::worker::WorkerHost`.
                 Response::Refuse("trainer is bound to a single job".into())
             }
+            Request::Submit { .. } | Request::Status { .. } | Request::Cancel { .. } => {
+                // Client-API messages address a coordinator frontend
+                // (`service::client::DelegationFrontend`), never a trainer.
+                Response::Refuse("trainer does not host the client API".into())
+            }
             Request::Ping => Response::Pong,
             Request::Shutdown => Response::Bye,
         }

@@ -34,7 +34,9 @@ use crate::model::Preset;
 use crate::tensor::Tensor;
 use crate::train::JobSpec;
 
-use super::protocol::{InputProvenance, Request, Response};
+use super::protocol::{
+    BackendRequirement, InputProvenance, JobPolicy, RemoteStatus, Request, Response,
+};
 
 /// Maximum frame payload a peer may send (256 MiB) — bounds allocation on
 /// hostile length prefixes while leaving room for full-tensor payloads.
@@ -61,6 +63,9 @@ const REQ_INPUT_TENSOR: u8 = 0x06;
 const REQ_SHUTDOWN: u8 = 0x07;
 const REQ_TRAIN: u8 = 0x08;
 const REQ_PING: u8 = 0x09;
+const REQ_SUBMIT: u8 = 0x0A;
+const REQ_STATUS: u8 = 0x0B;
+const REQ_CANCEL: u8 = 0x0C;
 
 const RESP_COMMIT: u8 = 0x81;
 const RESP_HASHES: u8 = 0x82;
@@ -71,12 +76,23 @@ const RESP_TENSOR: u8 = 0x86;
 const RESP_REFUSE: u8 = 0x87;
 const RESP_BYE: u8 = 0x88;
 const RESP_PONG: u8 = 0x89;
+const RESP_SUBMITTED: u8 = 0x8A;
+const RESP_STATUS: u8 = 0x8B;
+const RESP_CANCELLED: u8 = 0x8C;
 
 const PROV_GENESIS: u8 = 0x01;
 const PROV_PREV_STEP: u8 = 0x02;
 
 const OPT_ADAM: u8 = 0x01;
 const OPT_SGD: u8 = 0x02;
+
+const BACKEND_ANY: u8 = 0x01;
+const BACKEND_REP_ONLY: u8 = 0x02;
+
+const STATUS_UNKNOWN: u8 = 0x01;
+const STATUS_QUEUED: u8 = 0x02;
+const STATUS_RUNNING: u8 = 0x03;
+const STATUS_DONE: u8 = 0x04;
 
 /// Everything that can go wrong decoding hostile bytes.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -400,6 +416,144 @@ fn spec_wire_len(s: &JobSpec) -> usize {
     (8 + s.preset.name().len()) + 8 * 3 + optimizer_wire_len(&s.optimizer) + 8 * 3
 }
 
+/// Presence byte for optional fields: constrained to `{0, 1}` so every
+/// optional keeps a single canonical encoding.
+fn read_presence(r: &mut Reader<'_>, context: &'static str) -> Result<bool, WireError> {
+    match r.u8(context)? {
+        0 => Ok(false),
+        1 => Ok(true),
+        tag => Err(WireError::BadTag { context, tag }),
+    }
+}
+
+/// Wire bound on `policy.k` and `policy.segments`. The encoder clamps to
+/// it (a locally oversized policy must never produce an undecodable
+/// message — it would tear the connection down instead of degrading) and
+/// the decoder rejects anything beyond it from untrusted peers.
+pub const POLICY_FIELD_MAX: u64 = 1 << 20;
+
+fn put_policy(out: &mut Vec<u8>, p: &JobPolicy) {
+    put_u64(out, (p.k as u64).min(POLICY_FIELD_MAX));
+    match p.deadline {
+        None => out.push(0),
+        Some(d) => {
+            out.push(1);
+            put_u64(out, d.as_millis() as u64);
+        }
+    }
+    put_u64(out, p.priority as u64);
+    out.push(match p.backend {
+        BackendRequirement::Any => BACKEND_ANY,
+        BackendRequirement::ReproducibleOnly => BACKEND_REP_ONLY,
+    });
+    put_u64(out, p.segments.clamp(1, POLICY_FIELD_MAX));
+    match p.max_requeues {
+        None => out.push(0),
+        Some(n) => {
+            out.push(1);
+            put_u64(out, u64::from(n));
+        }
+    }
+}
+
+fn read_policy(r: &mut Reader<'_>) -> Result<JobPolicy, WireError> {
+    let k = r.usize("policy.k")?;
+    if k as u64 > POLICY_FIELD_MAX {
+        return Err(WireError::Malformed { context: "policy.k" });
+    }
+    let deadline = if read_presence(r, "policy.deadline")? {
+        Some(std::time::Duration::from_millis(r.u64("policy.deadline_ms")?))
+    } else {
+        None
+    };
+    let priority = r.u64("policy.priority")? as i64;
+    let backend = match r.u8("policy.backend")? {
+        BACKEND_ANY => BackendRequirement::Any,
+        BACKEND_REP_ONLY => BackendRequirement::ReproducibleOnly,
+        tag => return Err(WireError::BadTag { context: "policy.backend", tag }),
+    };
+    let segments = r.u64("policy.segments")?;
+    if segments == 0 || segments > POLICY_FIELD_MAX {
+        // Zero segments is meaningless and absurd counts would let a
+        // hostile client inflate the scheduler's queue for free.
+        return Err(WireError::Malformed { context: "policy.segments" });
+    }
+    let max_requeues = if read_presence(r, "policy.max_requeues")? {
+        let v = r.u64("policy.max_requeues")?;
+        Some(u32::try_from(v).map_err(|_| WireError::Malformed { context: "policy.max_requeues" })?)
+    } else {
+        None
+    };
+    Ok(JobPolicy { k, deadline, priority, backend, segments, max_requeues })
+}
+
+fn policy_wire_len(p: &JobPolicy) -> usize {
+    8 + (1 + if p.deadline.is_some() { 8 } else { 0 })
+        + 8
+        + 1
+        + 8
+        + (1 + if p.max_requeues.is_some() { 8 } else { 0 })
+}
+
+fn put_status(out: &mut Vec<u8>, s: &RemoteStatus) {
+    match s {
+        RemoteStatus::Unknown => out.push(STATUS_UNKNOWN),
+        RemoteStatus::Queued => out.push(STATUS_QUEUED),
+        RemoteStatus::Running { segments_done, segments_total } => {
+            out.push(STATUS_RUNNING);
+            put_u64(out, *segments_done);
+            put_u64(out, *segments_total);
+        }
+        RemoteStatus::Done { accepted, cancelled, disputes, eliminated } => {
+            out.push(STATUS_DONE);
+            match accepted {
+                None => out.push(0),
+                Some(h) => {
+                    out.push(1);
+                    put_hash(out, h);
+                }
+            }
+            out.push(u8::from(*cancelled));
+            put_u64(out, *disputes);
+            put_u64(out, *eliminated);
+        }
+    }
+}
+
+fn read_status(r: &mut Reader<'_>) -> Result<RemoteStatus, WireError> {
+    match r.u8("status.tag")? {
+        STATUS_UNKNOWN => Ok(RemoteStatus::Unknown),
+        STATUS_QUEUED => Ok(RemoteStatus::Queued),
+        STATUS_RUNNING => Ok(RemoteStatus::Running {
+            segments_done: r.u64("status.segments_done")?,
+            segments_total: r.u64("status.segments_total")?,
+        }),
+        STATUS_DONE => {
+            let accepted = if read_presence(r, "status.accepted")? {
+                Some(r.hash("status.accepted")?)
+            } else {
+                None
+            };
+            let cancelled = read_presence(r, "status.cancelled")?;
+            let disputes = r.u64("status.disputes")?;
+            let eliminated = r.u64("status.eliminated")?;
+            Ok(RemoteStatus::Done { accepted, cancelled, disputes, eliminated })
+        }
+        tag => Err(WireError::BadTag { context: "status", tag }),
+    }
+}
+
+/// Encoded size of a status value including its discriminant byte.
+pub fn status_wire_len(s: &RemoteStatus) -> usize {
+    1 + match s {
+        RemoteStatus::Unknown | RemoteStatus::Queued => 0,
+        RemoteStatus::Running { .. } => 16,
+        RemoteStatus::Done { accepted, .. } => {
+            (1 + if accepted.is_some() { 32 } else { 0 }) + 1 + 8 + 8
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // messages
 // ---------------------------------------------------------------------------
@@ -443,6 +597,19 @@ impl Request {
                 put_spec(&mut out, spec);
             }
             Request::Ping => out.push(REQ_PING),
+            Request::Submit { spec, policy } => {
+                out.push(REQ_SUBMIT);
+                put_spec(&mut out, spec);
+                put_policy(&mut out, policy);
+            }
+            Request::Status { job_id } => {
+                out.push(REQ_STATUS);
+                put_u64(&mut out, *job_id);
+            }
+            Request::Cancel { job_id } => {
+                out.push(REQ_CANCEL);
+                put_u64(&mut out, *job_id);
+            }
         }
         debug_assert_eq!(out.len(), self.wire_size(), "wire_size drifted from encoder");
         out
@@ -485,6 +652,12 @@ impl Request {
             REQ_SHUTDOWN => Request::Shutdown,
             REQ_TRAIN => Request::Train { spec: read_spec(&mut r)? },
             REQ_PING => Request::Ping,
+            REQ_SUBMIT => Request::Submit {
+                spec: read_spec(&mut r)?,
+                policy: read_policy(&mut r)?,
+            },
+            REQ_STATUS => Request::Status { job_id: r.u64("request.job_id")? },
+            REQ_CANCEL => Request::Cancel { job_id: r.u64("request.job_id")? },
             tag => return Err(WireError::BadTag { context: "request", tag }),
         };
         r.finish()?;
@@ -502,6 +675,8 @@ pub fn request_wire_len(req: &Request) -> usize {
         Request::OpenNode { .. } | Request::InputProof { .. } => 16,
         Request::InputTensor { .. } => 24,
         Request::Train { spec } => spec_wire_len(spec),
+        Request::Submit { spec, policy } => spec_wire_len(spec) + policy_wire_len(policy),
+        Request::Status { .. } | Request::Cancel { .. } => 8,
     }
 }
 
@@ -540,6 +715,18 @@ impl Response {
             }
             Response::Bye => out.push(RESP_BYE),
             Response::Pong => out.push(RESP_PONG),
+            Response::Submitted { job_id } => {
+                out.push(RESP_SUBMITTED);
+                put_u64(&mut out, *job_id);
+            }
+            Response::Status(s) => {
+                out.push(RESP_STATUS);
+                put_status(&mut out, s);
+            }
+            Response::Cancelled(ok) => {
+                out.push(RESP_CANCELLED);
+                out.push(u8::from(*ok));
+            }
         }
         debug_assert_eq!(out.len(), self.wire_size(), "wire_size drifted from encoder");
         out
@@ -558,6 +745,9 @@ impl Response {
             RESP_REFUSE => Response::Refuse(r.str("response.refuse")?),
             RESP_BYE => Response::Bye,
             RESP_PONG => Response::Pong,
+            RESP_SUBMITTED => Response::Submitted { job_id: r.u64("response.job_id")? },
+            RESP_STATUS => Response::Status(read_status(&mut r)?),
+            RESP_CANCELLED => Response::Cancelled(read_presence(&mut r, "response.cancelled")?),
             tag => return Err(WireError::BadTag { context: "response", tag }),
         };
         r.finish()?;
@@ -576,6 +766,9 @@ pub fn response_wire_len(resp: &Response) -> usize {
         Response::TensorPayload(t) => tensor_wire_len(t),
         Response::Refuse(s) => 8 + s.len(),
         Response::Bye | Response::Pong => 0,
+        Response::Submitted { .. } => 8,
+        Response::Status(s) => status_wire_len(s),
+        Response::Cancelled(_) => 1,
     }
 }
 
@@ -695,6 +888,24 @@ mod tests {
             Request::Train {
                 spec: crate::train::JobSpec::quick(crate::model::Preset::Mlp, 12),
             },
+            Request::Submit {
+                spec: crate::train::JobSpec::quick(crate::model::Preset::Mlp, 24),
+                policy: JobPolicy::default(),
+            },
+            Request::Submit {
+                spec: crate::train::JobSpec::quick(crate::model::Preset::LlamaTiny, 64),
+                policy: JobPolicy {
+                    k: 4,
+                    deadline: Some(std::time::Duration::from_millis(30_000)),
+                    priority: -9,
+                    backend: BackendRequirement::ReproducibleOnly,
+                    segments: 8,
+                    max_requeues: Some(1),
+                },
+            },
+            Request::Status { job_id: 0 },
+            Request::Status { job_id: u64::MAX },
+            Request::Cancel { job_id: 3 },
         ]
     }
 
@@ -719,6 +930,24 @@ mod tests {
             Response::Refuse("nope — not answering".into()),
             Response::Bye,
             Response::Pong,
+            Response::Submitted { job_id: 41 },
+            Response::Status(RemoteStatus::Unknown),
+            Response::Status(RemoteStatus::Queued),
+            Response::Status(RemoteStatus::Running { segments_done: 2, segments_total: 5 }),
+            Response::Status(RemoteStatus::Done {
+                accepted: Some(Hash::of_bytes(b"done")),
+                cancelled: false,
+                disputes: 3,
+                eliminated: 2,
+            }),
+            Response::Status(RemoteStatus::Done {
+                accepted: None,
+                cancelled: true,
+                disputes: 0,
+                eliminated: 0,
+            }),
+            Response::Cancelled(true),
+            Response::Cancelled(false),
         ]
     }
 
@@ -831,6 +1060,72 @@ mod tests {
             Request::decode(&bytes),
             Err(WireError::Malformed { context: "spec.steps" })
         ));
+    }
+
+    #[test]
+    fn hostile_policy_and_status_bytes_rejected() {
+        // A presence byte outside {0,1} breaks canonicity and is refused.
+        let spec = crate::train::JobSpec::quick(crate::model::Preset::Mlp, 4);
+        let good = Request::Submit { spec, policy: JobPolicy::default() }.encode();
+        // policy.deadline presence byte sits right after the spec + k.
+        let pos = 1 + spec_wire_len(&spec) + 8;
+        let mut evil = good.clone();
+        assert_eq!(evil[pos], 0, "deadline presence byte located");
+        evil[pos] = 2;
+        assert!(matches!(
+            Request::decode(&evil),
+            Err(WireError::BadTag { context: "policy.deadline", .. })
+        ));
+        // Zero segments would divide the job into nothing.
+        let mut zero_seg = Request::Submit {
+            spec,
+            policy: JobPolicy { segments: 1, ..JobPolicy::default() },
+        }
+        .encode();
+        let seg_pos = good.len() - policy_wire_len(&JobPolicy::default()) + 8 + 1 + 8 + 1;
+        assert_eq!(zero_seg[seg_pos], 1, "segments field located");
+        zero_seg[seg_pos] = 0;
+        assert!(matches!(
+            Request::decode(&zero_seg),
+            Err(WireError::Malformed { context: "policy.segments" })
+        ));
+        // Cancelled payload must be exactly 0 or 1.
+        assert!(matches!(
+            Response::decode(&[RESP_CANCELLED, 7]),
+            Err(WireError::BadTag { context: "response.cancelled", .. })
+        ));
+        // Unknown status discriminant.
+        assert!(matches!(
+            Response::decode(&[RESP_STATUS, 0x7E]),
+            Err(WireError::BadTag { context: "status", .. })
+        ));
+    }
+
+    #[test]
+    fn oversized_policy_fields_clamp_to_the_wire_bound() {
+        // A locally absurd policy must still produce a decodable message:
+        // k and segments clamp to POLICY_FIELD_MAX (and segments to >= 1)
+        // rather than encoding bytes the receiving decoder would reject.
+        let spec = crate::train::JobSpec::quick(crate::model::Preset::Mlp, 4);
+        let policy = JobPolicy {
+            k: usize::MAX,
+            segments: u64::MAX,
+            ..JobPolicy::default()
+        };
+        let bytes = Request::Submit { spec, policy }.encode();
+        match Request::decode(&bytes).expect("clamped policy decodes") {
+            Request::Submit { policy: back, .. } => {
+                assert_eq!(back.k as u64, POLICY_FIELD_MAX);
+                assert_eq!(back.segments, POLICY_FIELD_MAX);
+            }
+            other => panic!("{other:?}"),
+        }
+        let zero_segments = JobPolicy { segments: 0, ..JobPolicy::default() };
+        let bytes = Request::Submit { spec, policy: zero_segments }.encode();
+        match Request::decode(&bytes).expect("zero segments clamps to 1") {
+            Request::Submit { policy: back, .. } => assert_eq!(back.segments, 1),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //! length, and truncated/corrupted frames return errors instead of
 //! panicking.
 
+use std::time::Duration;
+
 use verde::graph::autodiff::Optimizer;
 use verde::graph::executor::AugmentedCGNode;
 use verde::hash::merkle::MerkleProof;
@@ -12,7 +14,9 @@ use verde::model::Preset;
 use verde::tensor::Tensor;
 use verde::train::JobSpec;
 use verde::util::proptest::{forall, Gen};
-use verde::verde::protocol::{InputProvenance, Request, Response};
+use verde::verde::protocol::{
+    BackendRequirement, InputProvenance, JobPolicy, RemoteStatus, Request, Response,
+};
 
 fn gen_hash(g: &mut Gen) -> Hash {
     Hash::of_bytes(&g.u64().to_le_bytes())
@@ -78,8 +82,41 @@ fn gen_spec(g: &mut Gen) -> JobSpec {
     spec
 }
 
+fn gen_policy(g: &mut Gen) -> JobPolicy {
+    JobPolicy {
+        k: g.usize_in(0, 64),
+        deadline: if g.bool() {
+            Some(Duration::from_millis(g.usize_in(0, 10_000_000) as u64))
+        } else {
+            None
+        },
+        priority: g.u64() as i64,
+        backend: if g.bool() {
+            BackendRequirement::Any
+        } else {
+            BackendRequirement::ReproducibleOnly
+        },
+        segments: g.usize_in(1, 1 << 16) as u64,
+        max_requeues: if g.bool() { Some(g.usize_in(0, 1000) as u32) } else { None },
+    }
+}
+
+fn gen_status(g: &mut Gen) -> RemoteStatus {
+    match g.usize_in(0, 3) {
+        0 => RemoteStatus::Unknown,
+        1 => RemoteStatus::Queued,
+        2 => RemoteStatus::Running { segments_done: g.u64(), segments_total: g.u64() },
+        _ => RemoteStatus::Done {
+            accepted: if g.bool() { Some(gen_hash(g)) } else { None },
+            cancelled: g.bool(),
+            disputes: g.u64(),
+            eliminated: g.u64(),
+        },
+    }
+}
+
 fn gen_request(g: &mut Gen) -> Request {
-    match g.usize_in(0, 8) {
+    match g.usize_in(0, 11) {
         0 => Request::FinalCommit,
         1 => Request::CheckpointHashes {
             boundaries: (0..g.usize_in(0, 40)).map(|_| g.u64()).collect(),
@@ -94,12 +131,15 @@ fn gen_request(g: &mut Gen) -> Request {
         },
         6 => Request::Train { spec: gen_spec(g) },
         7 => Request::Ping,
+        8 => Request::Submit { spec: gen_spec(g), policy: gen_policy(g) },
+        9 => Request::Status { job_id: g.u64() },
+        10 => Request::Cancel { job_id: g.u64() },
         _ => Request::Shutdown,
     }
 }
 
 fn gen_response(g: &mut Gen) -> Response {
-    match g.usize_in(0, 8) {
+    match g.usize_in(0, 11) {
         0 => Response::Commit(gen_hash(g)),
         1 => Response::Hashes(gen_hashes(g, 200)),
         2 => Response::NodeSeq(gen_hashes(g, 200)),
@@ -123,6 +163,9 @@ fn gen_response(g: &mut Gen) -> Response {
             (0..g.usize_in(0, 60)).map(|_| char::from(b' ' + (g.u64() % 94) as u8)).collect(),
         ),
         7 => Response::Pong,
+        8 => Response::Submitted { job_id: g.u64() },
+        9 => Response::Status(gen_status(g)),
+        10 => Response::Cancelled(g.bool()),
         _ => Response::Bye,
     }
 }
@@ -228,6 +271,43 @@ fn deep_merkle_proof_roundtrips() {
         }
         other => panic!("{other:?}"),
     }
+}
+
+#[test]
+fn prop_submit_policies_roundtrip_field_exact() {
+    forall("submit policies survive delegation framing", 100, |g: &mut Gen| {
+        let spec = gen_spec(g);
+        let policy = gen_policy(g);
+        let bytes = Request::Submit { spec, policy }.encode();
+        assert_eq!(bytes.len(), Request::Submit { spec, policy }.wire_size());
+        match Request::decode(&bytes).unwrap() {
+            Request::Submit { spec: bspec, policy: bpol } => {
+                assert_eq!(bspec.steps, spec.steps);
+                assert_eq!(bspec.data_seed, spec.data_seed);
+                assert_eq!(bpol.k, policy.k);
+                assert_eq!(bpol.deadline, policy.deadline, "millisecond-exact deadlines");
+                assert_eq!(bpol.priority, policy.priority);
+                assert_eq!(bpol.backend, policy.backend);
+                assert_eq!(bpol.segments, policy.segments);
+                assert_eq!(bpol.max_requeues, policy.max_requeues);
+            }
+            other => panic!("{other:?}"),
+        }
+    });
+}
+
+#[test]
+fn prop_status_responses_roundtrip_field_exact() {
+    forall("status answers survive the wire", 100, |g: &mut Gen| {
+        let status = gen_status(g);
+        let resp = Response::Status(status.clone());
+        let bytes = resp.encode();
+        assert_eq!(bytes.len(), resp.wire_size());
+        match Response::decode(&bytes).unwrap() {
+            Response::Status(back) => assert_eq!(back, status),
+            other => panic!("{other:?}"),
+        }
+    });
 }
 
 #[test]
