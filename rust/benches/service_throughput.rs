@@ -24,8 +24,8 @@ use verde::net::tcp::{spawn_server, TcpEndpoint};
 use verde::net::Endpoint as _;
 use verde::net::threaded::spawn;
 use verde::service::{
-    run_service, run_service_blocking, FaultPlan, PooledWorker, ServiceReport, WorkerHost,
-    WorkerPool,
+    run_service, run_service_blocking, Delegation, FaultPlan, JobRequest, PooledWorker,
+    ServiceConfig, ServiceReport, WorkerHost, WorkerPool,
 };
 use verde::train::JobSpec;
 use verde::util::metrics::human_bytes;
@@ -213,6 +213,73 @@ fn run_tcp_dispatch(size: usize, mux_mode: bool) -> (String, f64, usize) {
     (json, jps, threads)
 }
 
+/// Sharded-with-transfer vs prefix-retrain: the same sharded job run both
+/// ways against identical fresh pools. The acceptance bar: transfer
+/// executes exactly `k × steps` worker-steps (each segment trains only its
+/// delta) while prefix re-training pays `k × Σ b_i`, and both reach the
+/// same verdict.
+fn run_transfer_compare(steps: u64, segments: u64) -> Vec<String> {
+    let k = 2;
+    let spec = {
+        let mut s = JobSpec::quick(Preset::Mlp, steps);
+        s.data_seed ^= 0x7273; // distinct stream from the scenario jobs
+        s
+    };
+    let mut out = Vec::new();
+    let mut verdicts = Vec::new();
+    for &transfer in &[false, true] {
+        let pool = WorkerPool::new(
+            (0..4)
+                .map(|i| {
+                    let name = format!("w{i}");
+                    PooledWorker::new(&name, spawn(WorkerHost::new(&name, FaultPlan::Honest)))
+                })
+                .collect(),
+        );
+        let delegation = Delegation::start(&pool, ServiceConfig::new(k));
+        let mut req = JobRequest::new(spec).with_segments(segments);
+        if transfer {
+            req = req.with_state_transfer();
+        }
+        let t0 = Instant::now();
+        let outcome = delegation.submit(req).wait();
+        let wall = t0.elapsed();
+        assert!(outcome.accepted.is_some(), "sharded job must resolve");
+        verdicts.push(outcome.accepted);
+        let report = delegation.finish();
+        let mode = if transfer { "transfer" } else { "prefix" };
+        println!(
+            "  shard_{:<10} 1 job   k={k} x{segments} segments of {steps} steps  {:>10.2?}  {:>5} worker-steps  {:>10} transferred",
+            mode,
+            wall,
+            report.total_steps_trained(),
+            human_bytes(report.total_transfer_bytes()),
+        );
+        if transfer {
+            assert_eq!(
+                report.total_steps_trained(),
+                k as u64 * steps,
+                "transfer must train exactly k x steps worker-steps"
+            );
+        }
+        out.push(format!(
+            "{{\"name\":\"shard_{}_s{}x{}\",\"mode\":\"{}\",\"k\":{},\"wall_s\":{:.6},\
+             \"worker_steps\":{},\"transfer_bytes\":{},\"seeded_segments\":{}}}",
+            mode,
+            steps,
+            segments,
+            mode,
+            k,
+            wall.as_secs_f64(),
+            report.total_steps_trained(),
+            report.total_transfer_bytes(),
+            report.total_seeded_segments(),
+        ));
+    }
+    assert_eq!(verdicts[0], verdicts[1], "transfer and prefix verdicts must agree");
+    out
+}
+
 fn main() {
     // `--smoke` (the CI mode) runs one in-process scenario and the
     // smallest TCP fleet only, so the bench is exercised on every push
@@ -231,6 +298,10 @@ fn main() {
     ];
     let scenarios = if smoke { &scenarios[..1] } else { &scenarios[..] };
     let mut lines: Vec<String> = scenarios.iter().map(run_scenario).collect();
+
+    println!("SERVICE: checkpoint state-transfer vs prefix re-training (sharded jobs)");
+    let (steps, segments) = if smoke { (16, 4) } else { (48, 6) };
+    lines.extend(run_transfer_compare(steps, segments));
 
     println!("SERVICE: blocking vs multiplexed dispatch over TCP fleets");
     let sizes: &[usize] = if smoke { &[4] } else { &[4, 16, 64] };

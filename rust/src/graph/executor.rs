@@ -69,6 +69,13 @@ impl State {
         MerkleTree::build(&self.leaf_hashes())
     }
 
+    /// The Merkle root over this state's leaves — the commitment a
+    /// checkpoint upload is verified against during segment state-transfer
+    /// (same tree as [`State::genesis_commitment`], usable at any step).
+    pub fn state_root(&self) -> Hash {
+        self.genesis_commitment().root()
+    }
+
     /// Total FP32 payload size (storage accounting for §2.1 cost analysis).
     pub fn byte_len(&self) -> usize {
         self.params.values().map(Tensor::byte_len).sum::<usize>()
@@ -209,9 +216,12 @@ impl OpProfile {
     }
 }
 
-static PROFILE_ENABLED: once_cell::sync::Lazy<bool> =
-    once_cell::sync::Lazy::new(|| std::env::var_os("VERDE_PROFILE").is_some());
+static PROFILE_ENABLED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
 static PROFILE: std::sync::Mutex<Option<OpProfile>> = std::sync::Mutex::new(None);
+
+fn profile_enabled() -> bool {
+    *PROFILE_ENABLED.get_or_init(|| std::env::var_os("VERDE_PROFILE").is_some())
+}
 
 /// Take and reset the global op profile (used with `VERDE_PROFILE=1`).
 pub fn take_profile() -> Option<OpProfile> {
@@ -250,7 +260,7 @@ pub fn execute(
             .collect();
 
         // 2. compute
-        let op_t0 = if *PROFILE_ENABLED { Some(std::time::Instant::now()) } else { None };
+        let op_t0 = if profile_enabled() { Some(std::time::Instant::now()) } else { None };
         let mut outs: Vec<Tensor> = match &node.op {
             Op::Init { kind, name } => {
                 let t = match kind {

@@ -11,12 +11,16 @@
 //!                legacy scheduler; `--deadline-ms`, `--health-ms`,
 //!                `--requeues`, `--resolvers`, `--readmit-ms` for the
 //!                failure policy; `--segments` shards each job at its
-//!                checkpoint boundaries; `--serve ADDR` exposes the
-//!                Submit/Status/Cancel client API over TCP instead of
-//!                submitting `--jobs` itself)
+//!                checkpoint boundaries and `--transfer` seeds each
+//!                segment with its predecessor's Merkle-verified
+//!                checkpoint so it trains only the delta; `--serve ADDR`
+//!                exposes the Submit/Status/Cancel client API over TCP —
+//!                `--serve-conns N` accepts N concurrent clients — instead
+//!                of submitting `--jobs` itself)
 //!   client       drive a serving coordinator remotely: submit `--jobs`
-//!                jobs over the wire, poll status, optionally `--cancel N`
-//!                one of them mid-flight
+//!                jobs over the wire (optionally `--segments`/`--transfer`
+//!                sharded), poll status, optionally `--cancel N` one of
+//!                them mid-flight
 //!
 //! Examples:
 //!   verde train --model llama-tiny --steps 32 --batch 2 --seq 8
@@ -34,7 +38,7 @@ use std::net::TcpListener;
 use verde::graph::kernels::Backend;
 use verde::model::Preset;
 use verde::net::mux::Mux;
-use verde::net::tcp::{serve_connection, TcpEndpoint};
+use verde::net::tcp::{serve_connection, spawn_server_threaded, TcpEndpoint};
 use verde::net::Endpoint as _;
 use verde::service::{
     run_service_blocking, Delegation, DelegationFrontend, FaultPlan, JobPolicy, JobRequest,
@@ -260,6 +264,15 @@ fn print_report(report: &ServiceReport) {
     if !report.revoked.is_empty() {
         println!("revoked/suspended workers: {}", report.revoked.join(", "));
     }
+    if report.total_seeded_segments() > 0 || report.total_uploads_rejected() > 0 {
+        println!(
+            "state transfer: {} seeded segments, {} moved, {} uploads rejected, {} worker-steps trained",
+            report.total_seeded_segments(),
+            human_bytes(report.total_transfer_bytes()),
+            report.total_uploads_rejected(),
+            report.total_steps_trained(),
+        );
+    }
     println!(
         "{} jobs in {:?}  ({:.2} jobs/s, {} total, {} / job, {} coordinator threads)",
         report.outcomes.len(),
@@ -343,62 +356,49 @@ fn cmd_coordinator(args: &Args) {
         (readmit_ms > 0).then(|| std::time::Duration::from_millis(readmit_ms));
     cfg.max_strikes = args.get_u64("max-strikes", 3) as u32;
     let segments = args.get_u64("segments", 1).max(1);
+    let transfer = args.flag("transfer");
 
     let delegation = Delegation::start(&pool, cfg);
 
     if let Some(listen) = args.get("serve") {
         // Serve the Submit/Status/Cancel client API over TCP: remote
-        // `verde client` processes drive this delegation.
+        // `verde client` processes drive this delegation, concurrently —
+        // each accepted connection runs on its own thread against a clone
+        // of the frontend (shared handle registry).
         let conns = args.get_usize("serve-conns", 1);
         let listener =
             TcpListener::bind(listen).unwrap_or_else(|e| panic!("cannot bind {listen}: {e}"));
         let addr = listener.local_addr().expect("local addr");
         println!(
-            "coordinator serving the client API on {addr} ({} workers, k={k}, {conns} connection(s))",
+            "coordinator serving the client API on {addr} ({} workers, k={k}, up to {conns} concurrent connection(s))",
             pool.size()
         );
-        let mut frontend = DelegationFrontend::new("coordinator", delegation.client());
-        let mut served = 0usize;
-        for conn in listener.incoming() {
-            match conn {
-                Ok(stream) => {
-                    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-                    match serve_connection(stream, &mut frontend) {
-                        Ok(stats) => println!(
-                            "client {peer}: {} requests, {} in / {} out",
-                            stats.requests,
-                            human_bytes(stats.bytes_in),
-                            human_bytes(stats.bytes_out)
-                        ),
-                        Err(e) => eprintln!("client {peer} failed: {e}"),
-                    }
-                    served += 1;
-                }
-                Err(e) => {
-                    eprintln!("accept failed: {e}");
-                    continue;
-                }
-            }
-            if served >= conns {
-                break;
-            }
-        }
+        let frontend = DelegationFrontend::new("coordinator", delegation.client());
+        let server = spawn_server_threaded(listener, frontend.clone(), Some(conns));
+        let frontend = server.join().expect("frontend accept thread");
         // Drain every remotely submitted job before reporting.
-        for h in frontend.handles() {
+        let handles = frontend.handles();
+        println!("all {} client connection(s) closed; draining {} jobs", conns, handles.len());
+        for h in handles {
             h.wait();
         }
     } else {
         println!(
-            "delegating {n_jobs} jobs ({} x{} steps, {segments} segment(s)) to {} workers, k={k} (event-driven core)",
+            "delegating {n_jobs} jobs ({} x{} steps, {segments} segment(s){}) to {} workers, k={k} (event-driven core)",
             base.preset.name(),
             base.steps,
+            if transfer { ", state transfer" } else { "" },
             pool.size(),
         );
         let handles: Vec<_> = (0..n_jobs)
             .map(|i| {
                 let mut spec = base;
                 spec.data_seed = base.data_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9));
-                delegation.submit(JobRequest::new(spec).with_segments(segments))
+                let mut req = JobRequest::new(spec).with_segments(segments);
+                if transfer {
+                    req = req.with_state_transfer();
+                }
+                delegation.submit(req)
             })
             .collect();
         for h in &handles {
@@ -419,6 +419,7 @@ fn cmd_client(args: &Args) {
     let addr = args.get("coordinator").expect("--coordinator host:port is required");
     let n_jobs = args.get_u64("jobs", 4);
     let segments = args.get_u64("segments", 1).max(1);
+    let transfer = args.flag("transfer");
     let k = args.get_usize("k", 0);
     // Priorities are signed (higher schedules first, negatives demote).
     let priority = args
@@ -434,7 +435,7 @@ fn cmd_client(args: &Args) {
 
     let mut ep = TcpEndpoint::connect("coordinator", addr)
         .unwrap_or_else(|e| panic!("cannot connect to coordinator {addr}: {e}"));
-    let policy = JobPolicy { k, segments, priority, ..JobPolicy::default() };
+    let policy = JobPolicy { k, segments, priority, transfer, ..JobPolicy::default() };
     let mut ids: Vec<u64> = Vec::new();
     for i in 0..n_jobs {
         let mut spec = base;

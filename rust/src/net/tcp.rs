@@ -190,6 +190,57 @@ pub fn serve_connection<E: Endpoint>(
     Ok(stats)
 }
 
+/// Spawn a **threaded** accept loop: every connection is served
+/// concurrently on its own thread through a clone of `endpoint`. Built for
+/// endpoints whose clones share state — a
+/// [`DelegationFrontend`](crate::service::client::DelegationFrontend)
+/// clone shares its handle registry, so many remote clients can submit,
+/// poll, and cancel simultaneously against one delegation. With
+/// `max_conns = Some(n)` the acceptor stops after `n` connections, joins
+/// every connection thread, and hands the endpoint back.
+pub fn spawn_server_threaded<E: Endpoint + Clone + Send + 'static>(
+    listener: TcpListener,
+    endpoint: E,
+    max_conns: Option<usize>,
+) -> JoinHandle<E> {
+    std::thread::Builder::new()
+        .name(format!("verde-accept-{}", endpoint.name()))
+        .spawn(move || {
+            let mut served = 0usize;
+            let mut conns: Vec<JoinHandle<()>> = Vec::new();
+            for conn in listener.incoming() {
+                // Reap finished connection threads so a long-lived server
+                // (max_conns: None) doesn't accumulate join handles.
+                conns.retain(|c| !c.is_finished());
+                match conn {
+                    Ok(stream) => {
+                        let mut ep = endpoint.clone();
+                        let handle = std::thread::Builder::new()
+                            .name(format!("verde-conn-{}", ep.name()))
+                            .spawn(move || {
+                                let _ = serve_connection(stream, &mut ep);
+                            })
+                            .expect("spawn connection thread");
+                        conns.push(handle);
+                        served += 1;
+                    }
+                    Err(e) => {
+                        eprintln!("accept failed: {e}");
+                        continue;
+                    }
+                }
+                if max_conns.is_some_and(|m| served >= m) {
+                    break;
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+            endpoint
+        })
+        .expect("spawn threaded server")
+}
+
 /// Spawn a worker server on its own thread: accept connections from
 /// `listener` and serve each sequentially through `endpoint` (workers hold
 /// per-job state, so one conversation at a time is the consistent model).

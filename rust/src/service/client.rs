@@ -111,6 +111,16 @@ impl JobRequest {
         self
     }
 
+    /// Verified checkpoint state-transfer between segments: each segment
+    /// is seeded with its predecessor's Merkle-verified checkpoint and
+    /// trains only `b_i − b_{i−1}` steps (instead of re-training the
+    /// prefix `[0, b_i]`). Segments then pipeline instead of running
+    /// concurrently; transfer failures fall back to prefix re-training.
+    pub fn with_state_transfer(mut self) -> JobRequest {
+        self.policy.transfer = true;
+        self
+    }
+
     /// Override the per-segment re-queue budget.
     pub fn with_max_requeues(mut self, max_requeues: u32) -> JobRequest {
         self.policy.max_requeues = Some(max_requeues);
@@ -245,6 +255,9 @@ impl Client {
 
 /// One submitted job. Dropping the handle does **not** cancel the job —
 /// it keeps running and its outcome lands in the final [`ServiceReport`].
+/// Cloning yields another handle to the same job (a shared frontend keeps
+/// clones across connections).
+#[derive(Clone)]
 pub struct JobHandle {
     job_id: u64,
     cell: Arc<JobCell>,
@@ -386,16 +399,10 @@ impl Drop for Delegation {
 /// coordinator (each retained handle pins its full `JobOutcome`).
 const MAX_FINISHED_RETAINED: usize = 1024;
 
-/// Serves the client API over the wire: an [`Endpoint`] answering
-/// [`Request::Submit`] / [`Request::Status`] / [`Request::Cancel`] by
-/// driving an in-process [`Client`]. Plug it into
-/// [`serve_connection`](crate::net::tcp::serve_connection) (or
-/// [`spawn_server`](crate::net::tcp::spawn_server)) and any
-/// [`TcpEndpoint`](crate::net::tcp::TcpEndpoint) becomes a remote job
-/// submitter — the `verde coordinator --serve` / `verde client` pair.
-pub struct DelegationFrontend {
-    name: String,
-    client: Client,
+/// The handle registry every clone of one [`DelegationFrontend`] shares:
+/// jobs submitted on one connection are visible to `Status`/`Cancel` from
+/// any other.
+struct FrontendState {
     /// Jobs not yet observed terminal.
     jobs: HashMap<u64, JobHandle>,
     /// Terminal jobs, evicted FIFO beyond [`MAX_FINISHED_RETAINED`] (a
@@ -404,24 +411,48 @@ pub struct DelegationFrontend {
     finished_order: VecDeque<u64>,
 }
 
+/// Serves the client API over the wire: an [`Endpoint`] answering
+/// [`Request::Submit`] / [`Request::Status`] / [`Request::Cancel`] by
+/// driving an in-process [`Client`]. Plug it into
+/// [`serve_connection`](crate::net::tcp::serve_connection) (or
+/// [`spawn_server`](crate::net::tcp::spawn_server)) and any
+/// [`TcpEndpoint`](crate::net::tcp::TcpEndpoint) becomes a remote job
+/// submitter — the `verde coordinator --serve` / `verde client` pair.
+///
+/// Cloning is cheap and shares the handle registry, so a **threaded accept
+/// loop** ([`spawn_server_threaded`](crate::net::tcp::spawn_server_threaded))
+/// can serve many concurrent remote clients against one delegation: each
+/// connection gets a clone, and every connection sees every job.
+#[derive(Clone)]
+pub struct DelegationFrontend {
+    name: String,
+    client: Client,
+    state: Arc<Mutex<FrontendState>>,
+}
+
 impl DelegationFrontend {
     pub fn new(name: &str, client: Client) -> DelegationFrontend {
         DelegationFrontend {
             name: name.to_string(),
             client,
-            jobs: HashMap::new(),
-            finished: HashMap::new(),
-            finished_order: VecDeque::new(),
+            state: Arc::new(Mutex::new(FrontendState {
+                jobs: HashMap::new(),
+                finished: HashMap::new(),
+                finished_order: VecDeque::new(),
+            })),
         }
     }
 
-    /// Handles registered by remote submissions and not yet evicted
-    /// (waiting on all of them is how a serving CLI drains before
-    /// shutdown).
-    pub fn handles(&self) -> impl Iterator<Item = &JobHandle> {
-        self.jobs.values().chain(self.finished.values())
+    /// Handles registered by remote submissions (on any connection sharing
+    /// this frontend) and not yet evicted — waiting on all of them is how
+    /// a serving CLI drains before shutdown.
+    pub fn handles(&self) -> Vec<JobHandle> {
+        let st = self.state.lock().unwrap();
+        st.jobs.values().chain(st.finished.values()).cloned().collect()
     }
+}
 
+impl FrontendState {
     /// Migrate every job observed terminal into the bounded finished set,
     /// evicting the oldest beyond the cap. Runs on each submission, so a
     /// continuously submitting client never accumulates unbounded state.
@@ -456,18 +487,28 @@ impl Endpoint for DelegationFrontend {
     fn call(&mut self, req: Request) -> Response {
         match req {
             Request::Submit { spec, policy } => {
-                self.retire_done();
+                // Submit outside the lock (it only touches the client
+                // core), then register under it.
                 let handle = self.client.submit(JobRequest { spec, policy });
                 let job_id = handle.id();
-                self.jobs.insert(job_id, handle);
+                let mut st = self.state.lock().unwrap();
+                st.retire_done();
+                st.jobs.insert(job_id, handle);
                 Response::Submitted { job_id }
             }
-            Request::Status { job_id } => Response::Status(match self.lookup(job_id) {
-                None => RemoteStatus::Unknown,
-                Some(h) => h.try_status().remote(),
-            }),
+            Request::Status { job_id } => {
+                let st = self.state.lock().unwrap();
+                Response::Status(match st.lookup(job_id) {
+                    None => RemoteStatus::Unknown,
+                    Some(h) => h.try_status().remote(),
+                })
+            }
             Request::Cancel { job_id } => {
-                Response::Cancelled(self.lookup(job_id).is_some_and(|h| h.cancel()))
+                // Clone the handle out so the (blocking) cancel round-trip
+                // to the event loop runs without holding the registry lock
+                // against other connections.
+                let handle = self.state.lock().unwrap().lookup(job_id).cloned();
+                Response::Cancelled(handle.is_some_and(|h| h.cancel()))
             }
             Request::Ping => Response::Pong,
             Request::Shutdown => Response::Bye,

@@ -56,10 +56,11 @@ use std::time::{Duration, Instant};
 use crate::hash::Hash;
 use crate::net::mux::{Completion, CompletionKind};
 use crate::net::{Endpoint, Metered};
-use crate::train::checkpoint::split_points;
+use crate::train::checkpoint::{chunk_count, chunk_slice, decode_state, split_points};
 use crate::train::JobSpec;
 use crate::verde::protocol::{JobPolicy, Request, Response};
 use crate::verde::tournament::run_tournament;
+use crate::verde::wire::MAX_CHECKPOINT_CHUNKS;
 
 use super::client::{Delegation, JobCell, JobRequest};
 use super::pool::{PooledWorker, WorkerPool};
@@ -149,6 +150,20 @@ pub struct SegmentOutcome {
     /// deterministic record of scheduling order (priority tests and
     /// post-mortems read this instead of racing wall clocks).
     pub leased_seq: u64,
+    /// Boundary this segment's final lease was seeded from (`None` when it
+    /// re-trained the whole prefix `[0, end]`).
+    pub seeded_from: Option<u64>,
+    /// Training steps each worker in the final lease executed for this
+    /// segment: `end − seeded_from` when seeded, `end` when prefix — the
+    /// observable speedup of verified state-transfer.
+    pub steps_trained: u64,
+    /// Checkpoint-transfer bytes moved while fetching this segment's
+    /// verified state for its successor (0 when no fetch ran).
+    pub transfer_bytes: u64,
+    /// Checkpoint uploads from this segment's winners that failed Merkle
+    /// verification against the agreed state root (each cost the uploader
+    /// its lease; the fetch moved on to a survivor).
+    pub uploads_rejected: u32,
 }
 
 impl SegmentOutcome {
@@ -172,6 +187,10 @@ impl SegmentOutcome {
             bytes: 0,
             requests: 0,
             leased_seq: 0,
+            seeded_from: None,
+            steps_trained: 0,
+            transfer_bytes: 0,
+            uploads_rejected: 0,
         }
     }
 }
@@ -285,6 +304,47 @@ impl ServiceReport {
         self.outcomes.iter().filter(|o| o.cancelled).count()
     }
 
+    /// Checkpoint-transfer bytes moved across all segment fetch+verify
+    /// phases.
+    pub fn total_transfer_bytes(&self) -> u64 {
+        self.outcomes
+            .iter()
+            .flat_map(|o| &o.segments)
+            .map(|s| s.transfer_bytes)
+            .sum()
+    }
+
+    /// Segments whose final lease was seeded with a verified checkpoint
+    /// (they trained `end − start` steps instead of the whole prefix).
+    pub fn total_seeded_segments(&self) -> usize {
+        self.outcomes
+            .iter()
+            .flat_map(|o| &o.segments)
+            .filter(|s| s.seeded_from.is_some())
+            .count()
+    }
+
+    /// Checkpoint uploads rejected by Merkle verification across the run.
+    pub fn total_uploads_rejected(&self) -> u64 {
+        self.outcomes
+            .iter()
+            .flat_map(|o| &o.segments)
+            .map(|s| u64::from(s.uploads_rejected))
+            .sum()
+    }
+
+    /// Training steps actually executed per worker lease, summed over all
+    /// settled segments (`k` workers per segment each train
+    /// `steps_trained`). With state transfer this is `k × steps` per job;
+    /// prefix re-training pays `k × Σ b_i`.
+    pub fn total_steps_trained(&self) -> u64 {
+        self.outcomes
+            .iter()
+            .flat_map(|o| &o.segments)
+            .map(|s| s.steps_trained * s.workers.len().max(1) as u64)
+            .sum()
+    }
+
     /// Mean protocol bytes per job; `0.0` for an empty report.
     pub fn bytes_per_job(&self) -> f64 {
         if self.outcomes.is_empty() {
@@ -312,7 +372,8 @@ impl ServiceReport {
             "\"jobs\":{},\"resolved\":{},\"cancelled\":{},\"k\":{},\"workers\":{},\
              \"wall_s\":{:.6},\"jobs_per_sec\":{:.3},\"mean_latency_s\":{:.6},\
              \"total_bytes\":{},\"bytes_per_job\":{:.1},\"disputes\":{},\"eliminated\":{},\
-             \"requeued\":{},\"revoked\":{},\"threads\":{}",
+             \"requeued\":{},\"revoked\":{},\"threads\":{},\"steps_trained\":{},\
+             \"seeded_segments\":{},\"transfer_bytes\":{},\"uploads_rejected\":{}",
             self.outcomes.len(),
             resolved,
             self.total_cancelled(),
@@ -328,6 +389,10 @@ impl ServiceReport {
             self.total_requeued(),
             self.revoked.len(),
             self.threads,
+            self.total_steps_trained(),
+            self.total_seeded_segments(),
+            self.total_transfer_bytes(),
+            self.total_uploads_rejected(),
         );
         s.push('}');
         s
@@ -359,6 +424,19 @@ pub(crate) struct LoopReport {
     pub(crate) actor_threads: usize,
 }
 
+/// A checkpoint fetched from a segment winner and verified against the
+/// unanimous state root — ready to seed the next segment's workers
+/// (shared via `Arc` so re-queues and multi-worker dispatches don't copy
+/// the state).
+pub(crate) struct SeedPayload {
+    /// Boundary the state sits at (the previous segment's end).
+    start: u64,
+    /// Merkle root over the state's leaves, verified before queueing.
+    root: Hash,
+    /// Canonical serialization ([`crate::train::checkpoint::encode_state`]).
+    bytes: Vec<u8>,
+}
+
 /// A segment waiting for a lease.
 struct QueuedSeg {
     priority: i64,
@@ -366,6 +444,10 @@ struct QueuedSeg {
     seg_idx: usize,
     /// Prefix spec: `steps` is this segment's end boundary.
     spec: JobSpec,
+    /// Verified checkpoint to seed the lease with (`None` = prefix
+    /// re-training). Kept across re-queues caused by worker failure;
+    /// dropped when a seeded lease *disagreed* (fallback to prefix).
+    seed: Option<Arc<SeedPayload>>,
     requeues: u32,
     revoked: usize,
     bytes: u64,
@@ -404,9 +486,11 @@ enum SlotState {
     Failed,
 }
 
-/// A segment whose `Train` dispatches are in flight.
+/// A segment whose `Train` (or chunked `SeedCheckpoint`) dispatches are in
+/// flight.
 struct ActiveSeg {
     spec: JobSpec,
+    seed: Option<Arc<SeedPayload>>,
     t0: Instant,
     requeues: u32,
     revoked: usize,
@@ -422,6 +506,10 @@ struct ActiveSeg {
 /// What a completion token addresses.
 enum Target {
     Seg { job_id: u64, seg_idx: usize, slot: usize },
+    /// Intermediate seed-chunk acknowledgement: accounted, never decides
+    /// the slot (the final chunk's token does; a stalled worker misses
+    /// that token's deadline).
+    Ack { job_id: u64, seg_idx: usize },
     /// Health-check ping of an idle (live) worker.
     Probe,
     /// Parole ping of a suspended worker serving its backoff.
@@ -431,6 +519,18 @@ enum Target {
     Drain,
 }
 
+/// How a resolver settles a segment.
+pub(crate) enum ResolveMode {
+    /// Prefix segment: full tournament (disputes available — every worker
+    /// holds its whole trajectory).
+    Tournament,
+    /// Seeded segment whose commits all agreed: the event loop already
+    /// established the verdict; the resolver only runs the state fetch.
+    /// (Seeded segments that *disagree* never reach a resolver — they fall
+    /// back to prefix re-training, where the dispute protocol applies.)
+    Agreed { accepted: Hash, winner: usize },
+}
+
 /// Work order for a resolver thread.
 pub(crate) struct ResolveTask {
     job_id: u64,
@@ -438,6 +538,10 @@ pub(crate) struct ResolveTask {
     start: u64,
     end: u64,
     spec: JobSpec,
+    mode: ResolveMode,
+    /// Fetch + verify this segment's end checkpoint for the next segment.
+    want_state: bool,
+    seeded_from: Option<u64>,
     t0: Instant,
     requeues: u32,
     revoked: usize,
@@ -451,12 +555,97 @@ pub(crate) struct Resolved {
     job_id: u64,
     outcome: SegmentOutcome,
     workers: Vec<PooledWorker>,
+    /// Verified checkpoint for the next segment (`None` when no fetch was
+    /// wanted, or every upload failed verification, or the winners
+    /// disagreed on the state root — the next segment then falls back to
+    /// prefix re-training).
+    seed: Option<SeedPayload>,
+    /// Indices into `workers` whose uploads failed Merkle verification —
+    /// the event loop revokes their leases.
+    rejected: Vec<usize>,
 }
 
-/// Run the tournament for one segment on a resolver thread. The workers'
-/// blocking [`Endpoint`] adapters carry the dispute traffic; unanswered
-/// requests surface as `Refuse` (convicting the silent worker) and latch
-/// the worker's fault flag for discipline by the event loop.
+/// Pull chunks `1..total` of the checkpoint at `step` from one worker,
+/// appending to the chunk-0 `bytes` the unanimity probe already received.
+/// Errors on refusals or chunk metadata inconsistent with the probe.
+fn fetch_remaining_chunks(
+    ep: &mut impl Endpoint,
+    step: u64,
+    root: Hash,
+    total: u64,
+    mut bytes: Vec<u8>,
+) -> Result<Vec<u8>, String> {
+    for chunk in 1..total {
+        match ep.call(Request::FetchCheckpoint { step, chunk }) {
+            Response::Checkpoint { step: s, root: r, total_chunks, chunk: c, payload }
+                if s == step && r == root && total_chunks == total && c == chunk =>
+            {
+                bytes.extend_from_slice(&payload);
+            }
+            other => return Err(format!("checkpoint fetch failed: {other:?}")),
+        }
+    }
+    Ok(bytes)
+}
+
+/// The fetch → verify half of state transfer, run against the workers
+/// whose final claim equals the accepted hash (`group`). The state root is
+/// certified by **unanimity** over the winning group: under the protocol's
+/// standing assumption (≥ 1 honest worker per lease when the accepted
+/// claim is honest), a unanimous root is the honest root; disagreement
+/// yields no certified root and the caller falls back to prefix
+/// re-training. Each member's upload is then Merkle-verified against the
+/// certified root until one passes (resuming from the chunk 0 its probe
+/// already delivered); members serving bad bytes land in `rejected`.
+fn fetch_verified_state(
+    metered: &mut [Metered<&mut PooledWorker>],
+    group: &[usize],
+    end: u64,
+) -> (Option<SeedPayload>, Vec<usize>) {
+    let mut rejected = Vec::new();
+    // Unanimity probe: chunk 0 from every group member carries its claimed
+    // root and chunk count. Declared counts are clamped even off-wire —
+    // an in-process peer must not be able to drive an unbounded fetch.
+    let mut probes: Vec<(usize, Hash, u64, Vec<u8>)> = Vec::new();
+    for &i in group {
+        match metered[i].call(Request::FetchCheckpoint { step: end, chunk: 0 }) {
+            Response::Checkpoint { step, root, total_chunks, chunk: 0, payload }
+                if step == end && (1..=MAX_CHECKPOINT_CHUNKS).contains(&total_chunks) =>
+            {
+                probes.push((i, root, total_chunks, payload));
+            }
+            _ => {} // refusals just drop the member from the fetch order
+        }
+    }
+    let Some(&(_, root, _, _)) = probes.first() else {
+        return (None, rejected);
+    };
+    if probes.iter().any(|&(_, r, _, _)| r != root) {
+        // No certified root: someone in the winning group is lying about
+        // the state commitment, but without a second claim to dispute we
+        // cannot attribute it. The caller falls back to the safe path.
+        return (None, rejected);
+    }
+    for (i, _, total, first) in probes {
+        match fetch_remaining_chunks(&mut metered[i], end, root, total, first) {
+            Ok(bytes) => match decode_state(&bytes) {
+                Ok(state) if state.step == end && state.state_root() == root => {
+                    return (Some(SeedPayload { start: end, root, bytes }), rejected);
+                }
+                _ => rejected.push(i),
+            },
+            Err(_) => rejected.push(i),
+        }
+    }
+    (None, rejected)
+}
+
+/// Run the tournament (or accept a seeded segment's agreed verdict) for
+/// one segment on a resolver thread, then optionally fetch + verify its
+/// end checkpoint for the next segment. The workers' blocking [`Endpoint`]
+/// adapters carry the dispute and transfer traffic; unanswered requests
+/// surface as `Refuse` (convicting the silent worker) and latch the
+/// worker's fault flag for discipline by the event loop.
 fn resolve(task: ResolveTask) -> Resolved {
     let ResolveTask {
         job_id,
@@ -464,6 +653,9 @@ fn resolve(task: ResolveTask) -> Resolved {
         start,
         end,
         spec,
+        mode,
+        want_state,
+        seeded_from,
         t0,
         requeues,
         revoked,
@@ -475,7 +667,37 @@ fn resolve(task: ResolveTask) -> Resolved {
     let names: Vec<String> = workers.iter().map(|w| w.name.clone()).collect();
     let mut metered: Vec<Metered<&mut PooledWorker>> =
         workers.iter_mut().map(Metered::new).collect();
-    let report = run_tournament(spec, &mut metered);
+    let (accepted, winner, disputes, eliminated) = match mode {
+        ResolveMode::Tournament => {
+            let report = run_tournament(spec, &mut metered);
+            (report.accepted, report.winner, report.disputes, report.eliminated.len())
+        }
+        ResolveMode::Agreed { accepted, winner } => (accepted, winner, 0, 0),
+    };
+
+    let mut seed = None;
+    let mut rejected = Vec::new();
+    let mut transfer_bytes = 0u64;
+    if want_state {
+        // The winning group: everyone whose (cached) final claim equals
+        // the accepted hash, winner first so the fetch tries it first.
+        let mut group: Vec<usize> = Vec::new();
+        for i in (0..metered.len()).map(|o| (winner + o) % metered.len()) {
+            if let Response::Commit(h) = metered[i].call(Request::FinalCommit) {
+                if h == accepted {
+                    group.push(i);
+                }
+            }
+        }
+        let before: u64 =
+            metered.iter().map(|m| m.bytes_sent() + m.bytes_received()).sum();
+        let (s, r) = fetch_verified_state(&mut metered, &group, end);
+        let after: u64 = metered.iter().map(|m| m.bytes_sent() + m.bytes_received()).sum();
+        transfer_bytes = after - before;
+        seed = s;
+        rejected = r;
+    }
+
     bytes += metered.iter().map(|m| m.bytes_sent() + m.bytes_received()).sum::<u64>();
     requests += metered.iter().map(|m| m.counters.get("requests")).sum::<u64>();
     drop(metered);
@@ -483,19 +705,23 @@ fn resolve(task: ResolveTask) -> Resolved {
         seg: seg_idx,
         start,
         end,
-        accepted: Some(report.accepted),
-        winner: Some(names[report.winner].clone()),
+        accepted: Some(accepted),
+        winner: Some(names[winner].clone()),
         workers: names,
-        disputes: report.disputes,
-        eliminated: report.eliminated.len(),
+        disputes,
+        eliminated,
         requeues,
         revoked,
         wall: t0.elapsed(),
         bytes,
         requests,
         leased_seq,
+        seeded_from,
+        steps_trained: end - seeded_from.unwrap_or(0),
+        transfer_bytes,
+        uploads_rejected: rejected.len() as u32,
     };
-    Resolved { job_id, outcome, workers }
+    Resolved { job_id, outcome, workers, seed, rejected }
 }
 
 /// The command channel plus its shutdown latch. Senders and the event
@@ -570,9 +796,12 @@ fn spawn_resolvers(
         .collect()
 }
 
-/// One job's life inside the event loop. (The job's own spec is not kept:
-/// each queued segment carries its prefix spec.)
+/// One job's life inside the event loop.
 struct JobRun {
+    /// The full job spec (state-transfer jobs queue later segments only
+    /// when their predecessor settles, so the prefix specs are derived
+    /// lazily).
+    spec: JobSpec,
     policy: JobPolicy,
     cell: Arc<JobCell>,
     /// Segment end boundaries (strictly increasing, last == `spec.steps`).
@@ -580,9 +809,25 @@ struct JobRun {
     /// Settled segments, indexed by segment.
     done: Vec<Option<SegmentOutcome>>,
     finished: usize,
-    /// First lease of any segment (job wall-clock anchor).
+    /// Next segment index to queue. Non-transfer jobs queue everything at
+    /// submit (`next_seg == boundaries.len()`); transfer jobs advance this
+    /// one segment at a time as predecessors settle (pipeline).
+    next_seg: usize,
+    /// First lease of any segment (job wall-clock anchor). (There is no
+    /// cancelled flag: `handle_cancel` removes the job from the map
+    /// outright, so presence in `jobs` means live.)
     t0: Option<Instant>,
-    cancelled: bool,
+}
+
+impl JobRun {
+    /// Does segment `seg_idx`'s resolution need to fetch the boundary
+    /// checkpoint (because the next segment is still waiting to be queued
+    /// and state transfer is on)?
+    fn wants_state(&self, seg_idx: usize) -> bool {
+        self.policy.transfer
+            && self.next_seg == seg_idx + 1
+            && self.next_seg < self.boundaries.len()
+    }
 }
 
 /// Pop every expired deadline and synthesize a `DeadlineExpired` refusal
@@ -783,12 +1028,18 @@ impl EventLoop {
                     return;
                 }
                 let boundaries = split_points(0, spec.steps, policy.segments.max(1));
-                for (seg_idx, &end) in boundaries.iter().enumerate() {
+                // With state transfer on, only the first segment queues
+                // now: each later segment needs its predecessor's verified
+                // checkpoint (or a fallback decision), so the pipeline
+                // advances in `record_segment`.
+                let queue_now = if policy.transfer { 1 } else { boundaries.len() };
+                for (seg_idx, &end) in boundaries.iter().enumerate().take(queue_now) {
                     self.queue.push(QueuedSeg {
                         priority: policy.priority,
                         job_id,
                         seg_idx,
                         spec: spec.prefix(end),
+                        seed: None,
                         requeues: 0,
                         revoked: 0,
                         bytes: 0,
@@ -801,13 +1052,14 @@ impl EventLoop {
                 self.jobs.insert(
                     job_id,
                     JobRun {
+                        spec,
                         policy,
                         cell,
                         boundaries,
                         done: (0..n).map(|_| None).collect(),
                         finished: 0,
+                        next_seg: queue_now,
                         t0: None,
-                        cancelled: false,
                     },
                 );
             }
@@ -889,7 +1141,6 @@ impl EventLoop {
             let policy = match self.jobs.get(&seg.job_id) {
                 // Cancelled and finalized: stale entry, drop it.
                 None => continue,
-                Some(j) if j.cancelled => continue,
                 Some(j) => j.policy,
             };
             let pred = move |w: &PooledWorker| policy.backend.admits(w.backend());
@@ -916,8 +1167,9 @@ impl EventLoop {
         }
     }
 
-    /// Submit `Train` to every leased worker and park the segment in the
-    /// active table.
+    /// Submit `Train` (or, for a seeded segment, the chunked
+    /// `SeedCheckpoint` sequence whose final chunk triggers training) to
+    /// every leased worker and park the segment in the active table.
     fn dispatch_segment(
         &mut self,
         seg: QueuedSeg,
@@ -932,6 +1184,7 @@ impl EventLoop {
         let deadline = Instant::now() + policy.deadline.unwrap_or(self.cfg.dispatch_deadline);
         let mut aseg = ActiveSeg {
             spec: seg.spec,
+            seed: seg.seed.clone(),
             t0,
             requeues: seg.requeues,
             revoked: seg.revoked,
@@ -947,17 +1200,57 @@ impl EventLoop {
             self.actor_threads += usize::from(w.activate());
             w.reset_fault();
             w.set_call_deadline(self.cfg.call_deadline);
-            let token = self.next_token;
-            self.next_token += 1;
-            self.tokens
-                .insert(token, Target::Seg { job_id: seg.job_id, seg_idx: seg.seg_idx, slot });
-            self.deadlines.push(Reverse((deadline, token)));
-            let req = Request::Train { spec: seg.spec };
-            aseg.bytes += req.wire_size() as u64;
-            aseg.requests += 1;
-            w.dispatch(token, req, Some(deadline), &self.comp_tx);
+            // The request sequence for this slot: one Train, or the seed
+            // chunks (the final chunk's answer is the training commit, so
+            // only its token becomes the slot's deciding token — the
+            // others are pipelined acks).
+            let final_token;
+            match &seg.seed {
+                None => {
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    let req = Request::Train { spec: seg.spec };
+                    aseg.bytes += req.wire_size() as u64;
+                    aseg.requests += 1;
+                    self.deadlines.push(Reverse((deadline, token)));
+                    w.dispatch(token, req, Some(deadline), &self.comp_tx);
+                    final_token = token;
+                }
+                Some(seed) => {
+                    let total = chunk_count(seed.bytes.len());
+                    let mut last = 0;
+                    for chunk in 0..total {
+                        let token = self.next_token;
+                        self.next_token += 1;
+                        if chunk + 1 < total {
+                            self.tokens.insert(
+                                token,
+                                Target::Ack { job_id: seg.job_id, seg_idx: seg.seg_idx },
+                            );
+                        }
+                        let req = Request::SeedCheckpoint {
+                            spec: seg.spec,
+                            start: seed.start,
+                            root: seed.root,
+                            total_chunks: total,
+                            chunk,
+                            payload: chunk_slice(&seed.bytes, chunk).to_vec(),
+                        };
+                        aseg.bytes += req.wire_size() as u64;
+                        aseg.requests += 1;
+                        self.deadlines.push(Reverse((deadline, token)));
+                        w.dispatch(token, req, Some(deadline), &self.comp_tx);
+                        last = token;
+                    }
+                    final_token = last;
+                }
+            }
+            self.tokens.insert(
+                final_token,
+                Target::Seg { job_id: seg.job_id, seg_idx: seg.seg_idx, slot },
+            );
             aseg.slots.push(SlotState::Waiting);
-            aseg.tokens.push(token);
+            aseg.tokens.push(final_token);
             aseg.outstanding += 1;
         }
         aseg.workers = workers;
@@ -983,7 +1276,7 @@ impl EventLoop {
             leased_seq: seg.leased_seq,
             ..SegmentOutcome::unresolved(seg.seg_idx, seg.spec.steps)
         };
-        self.record_segment(seg.job_id, seg.seg_idx, outcome);
+        self.record_segment(seg.job_id, seg.seg_idx, outcome, None);
     }
 
     /// Miss-deadline discipline: suspend with exponential backoff when
@@ -1019,6 +1312,16 @@ impl EventLoop {
             return; // stale: deadline already handled, cancelled, or late duplicate
         };
         match target {
+            Target::Ack { job_id, seg_idx } => {
+                // Intermediate seed-chunk acknowledgement: pure byte
+                // accounting. A worker that never acks also never answers
+                // the slot's deciding token, whose deadline disciplines it.
+                if !c.kind.unresponsive() {
+                    if let Some(aseg) = self.active.get_mut(&(job_id, seg_idx)) {
+                        aseg.bytes += c.resp.wire_size() as u64;
+                    }
+                }
+            }
             Target::Probe => {
                 let Some(w) = self.probing.remove(&c.token) else { return };
                 if c.kind.unresponsive() || w.faulted() {
@@ -1064,11 +1367,13 @@ impl EventLoop {
     }
 
     /// All of a segment's dispatches answered (or expired): discipline
-    /// silent workers and re-queue, hand the claims to a resolver, or
-    /// settle the segment unresolved.
+    /// silent workers and re-queue, hand the claims to a resolver, fall a
+    /// disagreeing *seeded* lease back to prefix re-training, or settle
+    /// the segment unresolved.
     fn finish_dispatch(&mut self, job_id: u64, seg_idx: usize, aseg: ActiveSeg) {
         let ActiveSeg {
             spec,
+            seed,
             t0,
             requeues,
             mut revoked,
@@ -1080,6 +1385,7 @@ impl EventLoop {
             ..
         } = aseg;
         let mut keep: Vec<PooledWorker> = Vec::new();
+        let mut claims: Vec<Option<Hash>> = Vec::new();
         let mut any_failed = false;
         let mut commits = 0usize;
         for (w, slot) in workers.into_iter().zip(slots) {
@@ -1090,8 +1396,11 @@ impl EventLoop {
                     self.discipline(w, false);
                 }
                 SlotState::Done(resp) => {
-                    if matches!(resp, Response::Commit(_)) {
+                    if let Response::Commit(h) = resp {
                         commits += 1;
+                        claims.push(Some(h));
+                    } else {
+                        claims.push(None);
                     }
                     keep.push(w);
                 }
@@ -1103,7 +1412,9 @@ impl EventLoop {
         let max_requeues = policy.max_requeues.unwrap_or(self.cfg.max_requeues);
         if any_failed {
             // A silent worker compromised this assignment: release the
-            // survivors and re-delegate the segment to a fresh lease.
+            // survivors and re-delegate the segment to a fresh lease (a
+            // seeded segment keeps its verified seed — the state is still
+            // good, only the lease was not).
             self.pool.release(keep);
             if requeues < max_requeues && (self.pool.size() > 0 || self.pool.suspended() > 0) {
                 self.queue.push(QueuedSeg {
@@ -1111,6 +1422,7 @@ impl EventLoop {
                     job_id,
                     seg_idx,
                     spec,
+                    seed,
                     requeues: requeues + 1,
                     revoked,
                     bytes,
@@ -1131,9 +1443,33 @@ impl EventLoop {
                         leased_seq,
                         ..SegmentOutcome::unresolved(seg_idx, spec.steps)
                     },
+                    None,
                 );
             }
-        } else if commits == 0 {
+            return;
+        }
+        if commits == 0 {
+            if seed.is_some() && requeues < max_requeues {
+                // Every worker refused the seed wholesale. Blame is
+                // unattributable (the seed itself could be at fault), so
+                // nobody is disciplined — the segment falls back to prefix
+                // re-training like any other seeded failure.
+                self.pool.release(keep);
+                self.queue.push(QueuedSeg {
+                    priority: policy.priority,
+                    job_id,
+                    seg_idx,
+                    spec,
+                    seed: None,
+                    requeues: requeues + 1,
+                    revoked,
+                    bytes,
+                    requests,
+                    t0: Some(t0),
+                    leased_seq,
+                });
+                return;
+            }
             // Everyone answered, nobody produced a claim: unresolvable.
             let eliminated = keep.len();
             let names = keep.iter().map(|w| w.name.clone()).collect();
@@ -1152,38 +1488,107 @@ impl EventLoop {
                     leased_seq,
                     ..SegmentOutcome::unresolved(seg_idx, spec.steps)
                 },
+                None,
             );
-        } else {
-            let start = self
-                .jobs
-                .get(&job_id)
-                .map(|j| segment_start(&j.boundaries, seg_idx))
-                .unwrap_or(0);
-            let task = ResolveTask {
-                job_id,
-                seg_idx,
-                start,
-                end: spec.steps,
-                spec,
-                t0,
-                requeues,
-                revoked,
-                bytes,
-                requests,
-                leased_seq,
-                workers: keep,
-            };
-            self.resolving_out += 1;
-            self.task_tx.send(task).expect("resolver pool alive while segments outstanding");
+            return;
         }
+
+        let want_state = self.jobs.get(&job_id).is_some_and(|j| j.wants_state(seg_idx));
+        let mode = match &seed {
+            None => ResolveMode::Tournament,
+            Some(_) => {
+                // Seeded lease: the optimistic fast path. All claims
+                // agreeing certifies the boundary (the seed itself was
+                // verified, and determinism makes every honest seeded run
+                // commit identically). Any disagreement — or refusal —
+                // falls back to prefix re-training, where the full dispute
+                // protocol can assign blame; seeded trainers hold no
+                // trajectory below their seed boundary, so bisection
+                // cannot run against them.
+                let first = claims.iter().flatten().next().copied();
+                let agreed = claims.iter().all(|c| c.is_some() && *c == first);
+                match (first, agreed) {
+                    (Some(accepted), true) => {
+                        let winner =
+                            claims.iter().position(|c| c.is_some()).expect("commits > 0");
+                        ResolveMode::Agreed { accepted, winner }
+                    }
+                    _ => {
+                        self.pool.release(keep);
+                        if requeues < max_requeues {
+                            self.queue.push(QueuedSeg {
+                                priority: policy.priority,
+                                job_id,
+                                seg_idx,
+                                spec,
+                                seed: None, // fall back to prefix re-training
+                                requeues: requeues + 1,
+                                revoked,
+                                bytes,
+                                requests,
+                                t0: Some(t0),
+                                leased_seq,
+                            });
+                        } else {
+                            self.record_segment(
+                                job_id,
+                                seg_idx,
+                                SegmentOutcome {
+                                    requeues,
+                                    revoked,
+                                    wall: t0.elapsed(),
+                                    bytes,
+                                    requests,
+                                    leased_seq,
+                                    ..SegmentOutcome::unresolved(seg_idx, spec.steps)
+                                },
+                                None,
+                            );
+                        }
+                        return;
+                    }
+                }
+            }
+        };
+
+        let start = self
+            .jobs
+            .get(&job_id)
+            .map(|j| segment_start(&j.boundaries, seg_idx))
+            .unwrap_or(0);
+        let task = ResolveTask {
+            job_id,
+            seg_idx,
+            start,
+            end: spec.steps,
+            spec,
+            mode,
+            want_state,
+            seeded_from: seed.as_ref().map(|s| s.start),
+            t0,
+            requeues,
+            revoked,
+            bytes,
+            requests,
+            leased_seq,
+            workers: keep,
+        };
+        self.resolving_out += 1;
+        self.task_tx.send(task).expect("resolver pool alive while segments outstanding");
     }
 
     fn handle_resolved(&mut self, resolved: Resolved) {
-        let Resolved { job_id, mut outcome, workers } = resolved;
+        let Resolved { job_id, mut outcome, workers, seed, rejected } = resolved;
         self.resolving_out -= 1;
         let mut keep = Vec::new();
-        for w in workers {
-            if w.faulted() {
+        for (i, w) in workers.into_iter().enumerate() {
+            if rejected.contains(&i) {
+                // The worker served a checkpoint upload contradicting the
+                // certified state root: adversarial (or hopelessly
+                // corrupt) — expel it outright, no parole.
+                outcome.revoked += 1;
+                self.pool.revoke(w);
+            } else if w.faulted() {
                 outcome.revoked += 1;
                 self.discipline(w, false);
             } else {
@@ -1193,14 +1598,23 @@ impl EventLoop {
         self.pool.release(keep);
         if self.jobs.contains_key(&job_id) {
             let seg_idx = outcome.seg;
-            self.record_segment(job_id, seg_idx, outcome);
+            self.record_segment(job_id, seg_idx, outcome, seed);
         }
         // else: the job was cancelled mid-resolve; leases returned, verdict
         // discarded.
     }
 
-    /// Settle one segment and finalize its job once every segment settled.
-    fn record_segment(&mut self, job_id: u64, seg_idx: usize, mut outcome: SegmentOutcome) {
+    /// Settle one segment, advance a state-transfer job's pipeline (queue
+    /// the next segment — seeded when a verified checkpoint came back,
+    /// prefix-fallback otherwise), and finalize the job once every segment
+    /// settled.
+    fn record_segment(
+        &mut self,
+        job_id: u64,
+        seg_idx: usize,
+        mut outcome: SegmentOutcome,
+        seed: Option<SeedPayload>,
+    ) {
         let Some(run) = self.jobs.get_mut(&job_id) else { return };
         outcome.start = segment_start(&run.boundaries, seg_idx);
         if run.done[seg_idx].is_none() {
@@ -1208,7 +1622,33 @@ impl EventLoop {
         }
         run.done[seg_idx] = Some(outcome);
         run.cell.set_running(run.finished, run.boundaries.len());
-        if run.finished < run.boundaries.len() {
+        let queue_next = (run.policy.transfer
+            && run.next_seg == seg_idx + 1
+            && run.next_seg < run.boundaries.len())
+        .then(|| {
+            let next = run.next_seg;
+            run.next_seg += 1;
+            (next, run.boundaries[next], run.spec, run.policy.priority)
+        });
+        let job_done = run.finished >= run.boundaries.len();
+        if let Some((next, end, spec, priority)) = queue_next {
+            self.queue.push(QueuedSeg {
+                priority,
+                job_id,
+                seg_idx: next,
+                spec: spec.prefix(end),
+                // No verified seed (failed fetch, unresolved predecessor,
+                // non-unanimous roots) → the segment re-trains its prefix.
+                seed: seed.map(Arc::new),
+                requeues: 0,
+                revoked: 0,
+                bytes: 0,
+                requests: 0,
+                t0: None,
+                leased_seq: 0,
+            });
+        }
+        if !job_done {
             return;
         }
         let run = self.jobs.remove(&job_id).expect("just seen");

@@ -43,6 +43,62 @@
 //! roll up into one [`coordinator::JobOutcome`] (`segments` holds the
 //! per-boundary verdicts).
 //!
+//! ## Verified checkpoint state-transfer (`policy.transfer`)
+//!
+//! By default segment `i` **re-trains the whole prefix** `[0, b_i]`, so a
+//! sharded job pays `Σ b_i` training steps per worker instead of `steps`.
+//! With `JobRequest::with_state_transfer()` the coordinator moves the
+//! verified boundary checkpoint between segments instead, so segment `i`
+//! trains only `b_i − b_{i−1}` steps and the whole job costs exactly
+//! `k × steps` worker-steps:
+//!
+//! ```text
+//!  segment i−1                    coordinator                    segment i
+//!  ┌─────────┐   verdict          ┌─────────────────────┐
+//!  │ k leases│──(tournament)────▶ │ FETCH  chunked       │
+//!  │  (done) │◀──FetchCheckpoint──│  checkpoint from the │
+//!  │         │───Checkpoint{root}▶│  winning group       │
+//!  └─────────┘                    │ VERIFY Merkle root   │
+//!                                 │  over state leaves,  │
+//!                                 │  unanimous across    │
+//!                                 │  co-winners          │   ┌─────────┐
+//!                                 │ SEED   chunked      ─┼──▶│ k fresh │
+//!                                 │  SeedCheckpoint      │   │ leases  │
+//!                                 │ SCHEDULE train       │   │ train   │
+//!                                 │  b_i − b_{i−1} steps │   │ delta   │
+//!                                 └─────────────────────┘   └─────────┘
+//! ```
+//!
+//! *Verification.* The serialized state
+//! ([`encode_state`](crate::train::checkpoint::encode_state)) is checked
+//! against the Merkle root over its state leaves
+//! ([`State::state_root`](crate::graph::executor::State::state_root)).
+//! The root is certified by **unanimity across the winning group** (every
+//! worker whose final claim equals the accepted hash): under the
+//! protocol's standing assumption — at least one honest worker per lease —
+//! an accepted-honest claim puts every honest worker in that group, so a
+//! unanimous root is the honest root. A bit-flipped upload fails
+//! verification, costs the uploader its lease, and the fetch moves to a
+//! surviving co-winner. Seeded workers re-verify the root before training.
+//!
+//! *Fallback semantics* (every failure degrades to the safe path, never a
+//! wedged job):
+//!
+//! | failure                                   | consequence                         |
+//! |-------------------------------------------|-------------------------------------|
+//! | upload fails Merkle verification          | uploader revoked; next co-winner    |
+//! | every group upload fails                  | next segment re-trains its prefix   |
+//! | winning group splits on the state root    | next segment re-trains its prefix   |
+//! | seeded lease disagrees on the commitment  | segment re-queued **as prefix** (the dispute protocol needs the full trajectory, which seeded trainers don't hold) |
+//! | seeded worker misses its deadline         | lease disciplined, segment re-queued with the same verified seed |
+//!
+//! Segments pipeline under transfer (each needs its predecessor's state),
+//! so the trade is concurrency-across-segments for `Σ b_i → steps` total
+//! work; per-segment accounting
+//! ([`SegmentOutcome`](coordinator::SegmentOutcome)`::steps_trained`,
+//! `seeded_from`, `transfer_bytes`, `uploads_rejected`) makes the saving
+//! observable in every report.
+//!
 //! ## Migration from `run_service`
 //!
 //! `run_service(jobs, &pool, k)` and `run_service_with(jobs, &pool, cfg)`

@@ -49,6 +49,12 @@ pub enum FaultPlan {
     /// the lease is suspended, but a later parole ping finds the worker
     /// healthy and re-admits it.
     Nap { at_request: u64, nap_ms: u64 },
+    /// Train honestly but serve bit-flipped checkpoint uploads
+    /// (`FetchCheckpoint` payloads): models a worker whose stored state is
+    /// corrupt — or who tries to poison the next segment's seed while
+    /// keeping an honest tournament record. Caught by the coordinator's
+    /// Merkle verification of the reassembled state.
+    TamperUpload,
 }
 
 impl FaultPlan {
@@ -56,7 +62,8 @@ impl FaultPlan {
     /// `tamper`, `wrong-op`, `wrong-data`, `skip-opt`, `skip-steps`,
     /// `forged-lineage`, `inconsistent`, `stall` (`stall@N` = stop
     /// responding from protocol request `N` on), `nap` (`nap@N` = sleep
-    /// 1500 ms before answering request `N`, then recover).
+    /// 1500 ms before answering request `N`, then recover),
+    /// `tamper-upload` (honest training, bit-flipped checkpoint uploads).
     pub fn parse(s: &str) -> Option<FaultPlan> {
         let (kind, step) = match s.split_once('@') {
             Some((k, v)) => (k, Some(v.parse::<u64>().ok()?)),
@@ -73,6 +80,7 @@ impl FaultPlan {
             "inconsistent" => FaultPlan::InconsistentCommit { step },
             "stall" => FaultPlan::Stall { at_request: step.unwrap_or(1).max(1) },
             "nap" => FaultPlan::Nap { at_request: step.unwrap_or(1).max(1), nap_ms: 1500 },
+            "tamper-upload" => FaultPlan::TamperUpload,
             _ => return None,
         })
     }
@@ -120,9 +128,12 @@ impl FaultPlan {
             FaultPlan::InconsistentCommit { step } => {
                 Fault::InconsistentCommit { step: Self::step_for(step, spec) }
             }
-            // Stalls and naps live at the request layer (the host delays
-            // or withholds answers), not in the training computation.
-            FaultPlan::Stall { .. } | FaultPlan::Nap { .. } => Fault::None,
+            // Stalls, naps, and upload tampering live at the request layer
+            // (the host delays, withholds, or corrupts answers), not in
+            // the training computation.
+            FaultPlan::Stall { .. } | FaultPlan::Nap { .. } | FaultPlan::TamperUpload => {
+                Fault::None
+            }
         }
     }
 }
@@ -140,8 +151,21 @@ impl fmt::Display for FaultPlan {
             FaultPlan::InconsistentCommit { step } => write!(f, "inconsistent@{step:?}"),
             FaultPlan::Stall { at_request } => write!(f, "stall@{at_request}"),
             FaultPlan::Nap { at_request, nap_ms } => write!(f, "nap@{at_request} ({nap_ms}ms)"),
+            FaultPlan::TamperUpload => write!(f, "tamper-upload"),
         }
     }
+}
+
+/// An in-progress chunked checkpoint upload ([`Request::SeedCheckpoint`]):
+/// the host buffers chunks until the last one arrives, then verifies and
+/// trains.
+struct SeedBuf {
+    spec: JobSpec,
+    start: u64,
+    root: crate::hash::Hash,
+    total_chunks: u64,
+    next_chunk: u64,
+    buf: Vec<u8>,
 }
 
 /// Endpoint served by a worker process/actor: `Train` assigns a job, every
@@ -151,6 +175,8 @@ pub struct WorkerHost {
     plan: FaultPlan,
     backend: Backend,
     active: Option<TrainerNode>,
+    /// Chunked seed upload in flight (cleared on completion or mismatch).
+    seed_buf: Option<SeedBuf>,
     /// Protocol requests seen so far (drives [`FaultPlan::Stall`]).
     requests_seen: u64,
     pub counters: Counters,
@@ -163,6 +189,7 @@ impl WorkerHost {
             plan,
             backend: Backend::Rep,
             active: None,
+            seed_buf: None,
             requests_seen: 0,
             counters: Counters::new(),
         }
@@ -175,6 +202,101 @@ impl WorkerHost {
 
     pub fn plan(&self) -> FaultPlan {
         self.plan
+    }
+
+    /// Accept one chunk of a verified-checkpoint seed. Intermediate chunks
+    /// answer `Pong`; the final chunk reassembles the state, verifies it
+    /// against the declared Merkle root, trains the remaining
+    /// `spec.steps − start` steps, and answers the final commitment
+    /// exactly as a full `Train` would (training is deterministic, so a
+    /// seeded run's commitment equals the prefix-trained one).
+    fn accept_seed_chunk(
+        &mut self,
+        spec: JobSpec,
+        start: u64,
+        root: crate::hash::Hash,
+        total_chunks: u64,
+        chunk: u64,
+        payload: Vec<u8>,
+    ) -> Response {
+        use crate::train::checkpoint::decode_state;
+
+        if chunk == 0 {
+            self.seed_buf = Some(SeedBuf { spec, start, root, total_chunks, next_chunk: 0, buf: Vec::new() });
+        }
+        let Some(sb) = self.seed_buf.as_mut() else {
+            return Response::Refuse(format!("{}: seed chunk {chunk} without a chunk 0", self.name));
+        };
+        if sb.spec != spec
+            || sb.start != start
+            || sb.root != root
+            || sb.total_chunks != total_chunks
+            || sb.next_chunk != chunk
+        {
+            self.seed_buf = None;
+            return Response::Refuse(format!("{}: out-of-order or mismatched seed chunk", self.name));
+        }
+        sb.buf.extend_from_slice(&payload);
+        sb.next_chunk += 1;
+        if sb.next_chunk < sb.total_chunks {
+            return Response::Pong;
+        }
+
+        // Final chunk: verify, then train the delta.
+        let sb = self.seed_buf.take().expect("checked above");
+        let state = match decode_state(&sb.buf) {
+            Ok(s) => s,
+            Err(e) => {
+                return Response::Refuse(format!("{}: undecodable checkpoint seed: {e}", self.name))
+            }
+        };
+        if state.step != sb.start {
+            return Response::Refuse(format!(
+                "{}: seed claims step {} but was sent for boundary {}",
+                self.name, state.step, sb.start
+            ));
+        }
+        if state.state_root() != sb.root {
+            // The untrusted transfer path corrupted (or forged) the state:
+            // refuse rather than train garbage.
+            return Response::Refuse(format!(
+                "{}: checkpoint seed does not match its committed root",
+                self.name
+            ));
+        }
+        if sb.start == 0 || sb.start >= sb.spec.steps {
+            return Response::Refuse(format!(
+                "{}: seed boundary {} outside job of {} steps",
+                self.name, sb.start, sb.spec.steps
+            ));
+        }
+        let session = Session::new(sb.spec);
+        if !state.params.keys().eq(session.genesis.params.keys())
+            || !state.opt.keys().eq(session.genesis.opt.keys())
+        {
+            return Response::Refuse(format!(
+                "{}: seed state tensors do not match the job's program",
+                self.name
+            ));
+        }
+        let fault = match self.plan.resolve(&session) {
+            // A skip-steps cheater whose cutoff predates the seed boundary
+            // degenerates to "skip everything after the seed" — it must
+            // never be asked for state below the boundary it was seeded at.
+            crate::verde::faults::Fault::SkipSteps { after } if after < sb.start => {
+                crate::verde::faults::Fault::SkipSteps { after: sb.start }
+            }
+            f => f,
+        };
+        self.active = None;
+        let mut trainer =
+            TrainerNode::with_seed(&self.name, session, self.backend, fault, state, sb.root);
+        let commit = trainer.train();
+        self.counters.incr("jobs_seeded");
+        self.counters.add("steps_trained", sb.spec.steps - sb.start);
+        self.counters.add("seed_bytes_received", sb.buf.len() as u64);
+        self.active = Some(trainer);
+        Response::Commit(commit)
     }
 }
 
@@ -206,9 +328,13 @@ impl Endpoint for WorkerHost {
             Request::Train { spec } => {
                 // Re-delegation of the active job (a re-queued assignment
                 // after a peer's lease was revoked): determinism makes the
-                // cached commitment exact, so skip the retrain.
+                // cached commitment exact, so skip the retrain. A *seeded*
+                // active job never serves this cache: a full `Train` after
+                // a seeded run is the coordinator falling back to prefix
+                // re-training, which exists precisely so the whole
+                // trajectory (and its dispute queries) is available.
                 if let Some(active) = &mut self.active {
-                    if active.session.spec == spec {
+                    if active.session.spec == spec && active.seed_base() == 0 {
                         self.counters.incr("jobs_cached");
                         return Response::Commit(active.final_commit());
                     }
@@ -225,6 +351,23 @@ impl Endpoint for WorkerHost {
                 self.counters.add("steps_trained", spec.steps);
                 self.active = Some(trainer);
                 Response::Commit(commit)
+            }
+            Request::SeedCheckpoint { spec, start, root, total_chunks, chunk, payload } => {
+                self.accept_seed_chunk(spec, start, root, total_chunks, chunk, payload)
+            }
+            Request::FetchCheckpoint { .. } => {
+                let mut resp = match &mut self.active {
+                    Some(trainer) => trainer.call(req),
+                    None => Response::Refuse(format!("{}: no active job", self.name)),
+                };
+                if matches!(self.plan, FaultPlan::TamperUpload) {
+                    if let Response::Checkpoint { payload, .. } = &mut resp {
+                        if let Some(b) = payload.first_mut() {
+                            *b ^= 0x01;
+                        }
+                    }
+                }
+                resp
             }
             Request::Ping => Response::Pong,
             Request::Shutdown => Response::Bye,
@@ -264,6 +407,146 @@ mod tests {
         );
         assert_eq!(FaultPlan::parse("nonsense"), None);
         assert_eq!(FaultPlan::parse("tamper@x"), None);
+        assert_eq!(FaultPlan::parse("tamper-upload"), Some(FaultPlan::TamperUpload));
+    }
+
+    /// Drive a full fetch → seed handoff between two hosts and check the
+    /// seeded host trains only the delta yet commits identically.
+    #[test]
+    fn fetch_then_seed_roundtrip_trains_only_the_delta() {
+        let full_spec = JobSpec::quick(Preset::Mlp, 8);
+        let prefix = full_spec.prefix(4);
+
+        // Host A trains the first segment and serves its checkpoint.
+        let mut a = WorkerHost::new("a", FaultPlan::Honest);
+        assert!(matches!(a.call(Request::Train { spec: prefix }), Response::Commit(_)));
+        let (root, payload) = match a.call(Request::FetchCheckpoint { step: 4, chunk: 0 }) {
+            Response::Checkpoint { step, root, total_chunks, chunk, payload } => {
+                assert_eq!((step, total_chunks, chunk), (4, 1, 0));
+                (root, payload)
+            }
+            other => panic!("{other:?}"),
+        };
+
+        // Host B is seeded with it and trains steps 5..=8 only.
+        let mut b = WorkerHost::new("b", FaultPlan::Honest);
+        let commit = match b.call(Request::SeedCheckpoint {
+            spec: full_spec,
+            start: 4,
+            root,
+            total_chunks: 1,
+            chunk: 0,
+            payload,
+        }) {
+            Response::Commit(h) => h,
+            other => panic!("{other:?}"),
+        };
+        let honest = TrainerNode::honest("ref", full_spec).train();
+        assert_eq!(commit, honest, "seeded commitment equals the full-training one");
+        assert_eq!(b.counters.get("steps_trained"), 4, "only the delta was trained");
+        assert_eq!(b.counters.get("jobs_seeded"), 1);
+    }
+
+    #[test]
+    fn corrupt_or_out_of_order_seed_chunks_are_refused() {
+        let full_spec = JobSpec::quick(Preset::Mlp, 6);
+        let prefix = full_spec.prefix(3);
+        let mut a = WorkerHost::new("a", FaultPlan::Honest);
+        a.call(Request::Train { spec: prefix });
+        let (root, payload) = match a.call(Request::FetchCheckpoint { step: 3, chunk: 0 }) {
+            Response::Checkpoint { root, payload, .. } => (root, payload),
+            other => panic!("{other:?}"),
+        };
+
+        // Bit-flipped payload fails Merkle verification.
+        let mut b = WorkerHost::new("b", FaultPlan::Honest);
+        let mut bad = payload.clone();
+        bad[0] ^= 0x01;
+        assert!(matches!(
+            b.call(Request::SeedCheckpoint {
+                spec: full_spec,
+                start: 3,
+                root,
+                total_chunks: 1,
+                chunk: 0,
+                payload: bad,
+            }),
+            Response::Refuse(_)
+        ));
+        assert_eq!(b.counters.get("jobs_seeded"), 0);
+
+        // A chunk without its chunk 0 is refused.
+        assert!(matches!(
+            b.call(Request::SeedCheckpoint {
+                spec: full_spec,
+                start: 3,
+                root,
+                total_chunks: 2,
+                chunk: 1,
+                payload: payload.clone(),
+            }),
+            Response::Refuse(_)
+        ));
+
+        // A wrong boundary (state.step mismatch) is refused.
+        assert!(matches!(
+            b.call(Request::SeedCheckpoint {
+                spec: full_spec,
+                start: 4,
+                root,
+                total_chunks: 1,
+                chunk: 0,
+                payload: payload.clone(),
+            }),
+            Response::Refuse(_)
+        ));
+
+        // The clean upload still works afterwards.
+        assert!(matches!(
+            b.call(Request::SeedCheckpoint {
+                spec: full_spec,
+                start: 3,
+                root,
+                total_chunks: 1,
+                chunk: 0,
+                payload,
+            }),
+            Response::Commit(_)
+        ));
+    }
+
+    #[test]
+    fn tamper_upload_plan_flips_served_payload_bits() {
+        let spec = JobSpec::quick(Preset::Mlp, 4);
+        let mut honest = WorkerHost::new("h", FaultPlan::Honest);
+        let mut evil = WorkerHost::new("e", FaultPlan::TamperUpload);
+        // Both train honestly and commit identically…
+        let ch = match honest.call(Request::Train { spec }) {
+            Response::Commit(h) => h,
+            other => panic!("{other:?}"),
+        };
+        let ce = match evil.call(Request::Train { spec }) {
+            Response::Commit(h) => h,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(ch, ce, "upload tamperer keeps an honest tournament record");
+        // …but the tamperer's upload contradicts its committed root.
+        let (hr, hp) = match honest.call(Request::FetchCheckpoint { step: 4, chunk: 0 }) {
+            Response::Checkpoint { root, payload, .. } => (root, payload),
+            other => panic!("{other:?}"),
+        };
+        let (er, ep) = match evil.call(Request::FetchCheckpoint { step: 4, chunk: 0 }) {
+            Response::Checkpoint { root, payload, .. } => (root, payload),
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(hr, er, "the claimed root is the honest one");
+        assert_ne!(hp, ep, "the payload is not");
+        use crate::train::checkpoint::decode_state;
+        let bad = decode_state(&ep);
+        assert!(
+            bad.is_err() || bad.unwrap().state_root() != er,
+            "tampered upload must fail Merkle verification"
+        );
     }
 
     #[test]

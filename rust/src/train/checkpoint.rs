@@ -1,10 +1,27 @@
-//! Multi-level checkpoint schedules and their cost model (paper §2.1).
+//! Multi-level checkpoint schedules and their cost model (paper §2.1),
+//! plus the **canonical checkpoint-state serialization** used by segment
+//! state-transfer.
 //!
 //! With `N` checkpoints per level, trainers store/log `N` evenly-spaced
 //! checkpoints over `[0, n]`; each Phase 1 round narrows the dispute to one
 //! interval and re-executes it with `N` finer checkpoints, until interval
 //! length 1. Re-execution totals a `1/N + 1/N² + …` fraction of training —
 //! the paper's "under 6% at N=20, under 1.1% at N=100".
+//!
+//! [`encode_state`]/[`decode_state`] turn a training [`State`] into one
+//! canonical byte string (`decode(encode(s)) == s` bit-exactly and
+//! `encode(decode(b)) == b` for every accepted `b`), so the Merkle root
+//! over the decoded state's leaves ([`State::state_root`]) is well-defined
+//! for any accepted upload. The bytes cross the wire in
+//! [`CHECKPOINT_CHUNK`](crate::verde::wire::CHECKPOINT_CHUNK)-sized chunks
+//! ([`chunk_count`]/[`chunk_slice`]) carried by the
+//! `FetchCheckpoint`/`Checkpoint`/`SeedCheckpoint` protocol messages.
+
+use std::collections::BTreeMap;
+
+use crate::graph::executor::State;
+use crate::tensor::Tensor;
+use crate::verde::wire::{self, Reader, WireError, CHECKPOINT_CHUNK};
 
 /// The boundaries at which a segment `(start, end]` is checkpointed when
 /// split `n_intervals` ways: strictly increasing step numbers ending at
@@ -62,10 +79,193 @@ pub fn adam_state_bytes(params: u64) -> u64 {
     3 * params * 4
 }
 
+// ---------------------------------------------------------------------------
+// canonical checkpoint-state serialization (segment state-transfer)
+// ---------------------------------------------------------------------------
+
+fn put_tensor_map(out: &mut Vec<u8>, map: &BTreeMap<String, Tensor>) {
+    wire::put_u64(out, map.len() as u64);
+    for (name, t) in map {
+        wire::put_str(out, name);
+        wire::put_tensor(out, t);
+    }
+}
+
+fn read_tensor_map(
+    r: &mut Reader<'_>,
+    context: &'static str,
+) -> Result<BTreeMap<String, Tensor>, WireError> {
+    let n = r.usize(context)?;
+    // Cheapest possible entry: 8-byte name length + 8-byte tensor rank.
+    if n > r.remaining() / 16 {
+        return Err(WireError::Truncated {
+            context,
+            need: n.saturating_mul(16),
+            have: r.remaining(),
+        });
+    }
+    let mut map = BTreeMap::new();
+    let mut prev: Option<String> = None;
+    for _ in 0..n {
+        let name = r.str(context)?;
+        // Canonicity: the encoder walks a BTreeMap, so names arrive in
+        // strictly ascending order; anything else is a non-canonical (or
+        // duplicate-key) encoding and is refused.
+        if prev.as_deref().is_some_and(|p| p >= name.as_str()) {
+            return Err(WireError::Malformed { context });
+        }
+        let t = wire::read_tensor(r)?;
+        prev = Some(name.clone());
+        map.insert(name, t);
+    }
+    Ok(map)
+}
+
+/// Canonical serialization of a checkpoint [`State`]: step, then the
+/// params and optimizer-state maps (name-ascending, each tensor as
+/// shape-prefixed little-endian FP32 bits).
+pub fn encode_state(state: &State) -> Vec<u8> {
+    let mut out = Vec::with_capacity(state_wire_len(state));
+    wire::put_u64(&mut out, state.step);
+    put_tensor_map(&mut out, &state.params);
+    put_tensor_map(&mut out, &state.opt);
+    debug_assert_eq!(out.len(), state_wire_len(state), "state_wire_len drifted");
+    out
+}
+
+/// Exact encoded length of [`encode_state`]'s output.
+pub fn state_wire_len(state: &State) -> usize {
+    let map_len = |m: &BTreeMap<String, Tensor>| {
+        8 + m
+            .iter()
+            .map(|(name, t)| 8 + name.len() + wire::tensor_wire_len(t))
+            .sum::<usize>()
+    };
+    8 + map_len(&state.params) + map_len(&state.opt)
+}
+
+/// Decode a serialized checkpoint state. Total on hostile bytes: rejects
+/// truncation, absurd counts/shapes, non-canonical map order, and
+/// trailing bytes.
+pub fn decode_state(bytes: &[u8]) -> Result<State, WireError> {
+    let mut r = Reader::new(bytes);
+    let step = r.u64("state.step")?;
+    let params = read_tensor_map(&mut r, "state.params")?;
+    let opt = read_tensor_map(&mut r, "state.opt")?;
+    r.finish()?;
+    Ok(State { step, params, opt })
+}
+
+/// Number of wire chunks a serialized state of `len` bytes needs (≥ 1).
+pub fn chunk_count(len: usize) -> u64 {
+    (len.div_ceil(CHECKPOINT_CHUNK)).max(1) as u64
+}
+
+/// The byte slice carried by chunk `chunk` of `bytes`.
+///
+/// # Panics
+/// If `chunk` is out of range for `bytes` (`chunk >= chunk_count(len)`).
+pub fn chunk_slice(bytes: &[u8], chunk: u64) -> &[u8] {
+    let start = (chunk as usize) * CHECKPOINT_CHUNK;
+    assert!(start < bytes.len().max(1), "chunk {chunk} out of range");
+    &bytes[start..bytes.len().min(start + CHECKPOINT_CHUNK)]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::proptest::{forall, Gen};
+
+    fn sample_state(seed: u64) -> State {
+        let mut st = State::default();
+        st.step = seed;
+        st.params.insert("layer.w".into(), Tensor::rand([3, 4], seed, 1.0));
+        st.params.insert("layer.b".into(), Tensor::rand([4], seed ^ 1, 0.5));
+        st.opt.insert("layer.w.m".into(), Tensor::rand([3, 4], seed ^ 2, 0.1));
+        st.opt.insert("layer.w.v".into(), Tensor::rand([3, 4], seed ^ 3, 0.1));
+        st
+    }
+
+    #[test]
+    fn state_roundtrips_bit_exactly_and_size_exactly() {
+        let st = sample_state(7);
+        let bytes = encode_state(&st);
+        assert_eq!(bytes.len(), state_wire_len(&st));
+        let back = decode_state(&bytes).expect("decodes");
+        assert_eq!(back.step, st.step);
+        assert_eq!(back.params.len(), 2);
+        for (k, t) in &st.params {
+            assert!(back.params[k].bit_eq(t), "{k}");
+        }
+        for (k, t) in &st.opt {
+            assert!(back.opt[k].bit_eq(t), "{k}");
+        }
+        // canonical: re-encoding reproduces the bytes, and the state root
+        // survives the trip
+        assert_eq!(encode_state(&back), bytes);
+        assert_eq!(back.state_root(), st.state_root());
+    }
+
+    #[test]
+    fn state_decode_is_total_on_hostile_bytes() {
+        let bytes = encode_state(&sample_state(3));
+        for cut in 0..bytes.len() {
+            assert!(decode_state(&bytes[..cut]).is_err(), "prefix {cut} accepted");
+        }
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(matches!(decode_state(&padded), Err(WireError::Trailing { extra: 1 })));
+        // absurd map count must not allocate
+        let mut evil = Vec::new();
+        wire::put_u64(&mut evil, 0); // step
+        wire::put_u64(&mut evil, u64::MAX); // param count
+        assert!(matches!(decode_state(&evil), Err(WireError::Truncated { .. })));
+        // single-byte corruption either errors or stays canonical
+        for pos in 0..bytes.len() {
+            let mut corrupt = bytes.clone();
+            corrupt[pos] ^= 0x10;
+            if let Ok(st) = decode_state(&corrupt) {
+                assert_eq!(encode_state(&st), corrupt, "non-canonical state accepted");
+            }
+        }
+    }
+
+    #[test]
+    fn state_decode_rejects_unsorted_names() {
+        // Hand-build an encoding with params out of order: same entries a
+        // canonical encoder would sort.
+        let a = Tensor::rand([2], 1, 1.0);
+        let b = Tensor::rand([2], 2, 1.0);
+        let mut evil = Vec::new();
+        wire::put_u64(&mut evil, 1); // step
+        wire::put_u64(&mut evil, 2); // 2 params, wrong order
+        wire::put_str(&mut evil, "zz");
+        wire::put_tensor(&mut evil, &a);
+        wire::put_str(&mut evil, "aa");
+        wire::put_tensor(&mut evil, &b);
+        wire::put_u64(&mut evil, 0); // no opt state
+        assert!(matches!(
+            decode_state(&evil),
+            Err(WireError::Malformed { context: "state.params" })
+        ));
+    }
+
+    #[test]
+    fn chunking_covers_the_bytes_exactly() {
+        assert_eq!(chunk_count(0), 1);
+        assert_eq!(chunk_count(1), 1);
+        assert_eq!(chunk_count(CHECKPOINT_CHUNK), 1);
+        assert_eq!(chunk_count(CHECKPOINT_CHUNK + 1), 2);
+        let bytes: Vec<u8> = (0..(CHECKPOINT_CHUNK + 123)).map(|i| i as u8).collect();
+        let total = chunk_count(bytes.len());
+        assert_eq!(total, 2);
+        let mut back = Vec::new();
+        for c in 0..total {
+            back.extend_from_slice(chunk_slice(&bytes, c));
+        }
+        assert_eq!(back, bytes, "chunks reassemble to the original bytes");
+        assert_eq!(chunk_slice(&bytes, 1).len(), 123);
+    }
 
     #[test]
     fn split_points_even_and_terminal() {

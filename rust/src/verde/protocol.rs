@@ -67,6 +67,14 @@ pub struct JobPolicy {
     pub segments: u64,
     /// Re-queue budget override (`None` inherits the service default).
     pub max_requeues: Option<u32>,
+    /// Verified checkpoint state-transfer between segments: segment `i` is
+    /// seeded with segment `i−1`'s Merkle-verified checkpoint and trains
+    /// only `b_i − b_{i−1}` steps, instead of re-training the whole prefix
+    /// `[0, b_i]`. Segments then run as a pipeline (each needs its
+    /// predecessor's state) rather than concurrently; any transfer failure
+    /// falls back to prefix re-training for that segment. `false` (the
+    /// default) keeps the prefix-re-training behavior unchanged.
+    pub transfer: bool,
 }
 
 impl Default for JobPolicy {
@@ -78,6 +86,7 @@ impl Default for JobPolicy {
             backend: BackendRequirement::Any,
             segments: 1,
             max_requeues: None,
+            transfer: false,
         }
     }
 }
@@ -145,6 +154,28 @@ pub enum Request {
     /// return to the pool mid-flight. Answered with
     /// [`Response::Cancelled`].
     Cancel { job_id: u64 },
+    /// Coordinator → worker (state transfer): upload chunk `chunk` of the
+    /// serialized checkpoint state after training step `step` of the
+    /// active job. Answered with [`Response::Checkpoint`]; the coordinator
+    /// verifies the reassembled state's Merkle root before seeding the
+    /// next segment with it.
+    FetchCheckpoint { step: u64, chunk: u64 },
+    /// Coordinator → worker (state transfer): chunk `chunk` of
+    /// `total_chunks` of a verified checkpoint state at boundary `start`
+    /// of `spec`'s step range. Intermediate chunks are acknowledged with
+    /// [`Response::Pong`]; the final chunk makes the worker reassemble the
+    /// state, verify it against `root` (Merkle root over the state
+    /// leaves), train the remaining `spec.steps − start` steps, and answer
+    /// [`Response::Commit`] exactly as a full `Train` would — or
+    /// [`Response::Refuse`] when the upload fails verification.
+    SeedCheckpoint {
+        spec: JobSpec,
+        start: u64,
+        root: Hash,
+        total_chunks: u64,
+        chunk: u64,
+        payload: Vec<u8>,
+    },
     /// End the conversation (stream/threaded transports).
     Shutdown,
 }
@@ -188,6 +219,17 @@ pub enum Response {
     /// Answer to [`Request::Cancel`]: whether the cancel took effect
     /// before the job finished.
     Cancelled(bool),
+    /// Answer to [`Request::FetchCheckpoint`]: one chunk of the serialized
+    /// checkpoint state after `step`, plus the Merkle root (over the state
+    /// leaves) the full state commits to. Every chunk of one state repeats
+    /// the same `root` and `total_chunks`.
+    Checkpoint {
+        step: u64,
+        root: Hash,
+        total_chunks: u64,
+        chunk: u64,
+        payload: Vec<u8>,
+    },
 }
 
 impl Request {
@@ -249,6 +291,7 @@ mod tests {
                     backend: BackendRequirement::ReproducibleOnly,
                     segments: 4,
                     max_requeues: Some(2),
+                    transfer: true,
                 },
             },
             Request::Submit {
@@ -257,6 +300,15 @@ mod tests {
             },
             Request::Status { job_id: 17 },
             Request::Cancel { job_id: u64::MAX },
+            Request::FetchCheckpoint { step: 9, chunk: 2 },
+            Request::SeedCheckpoint {
+                spec: JobSpec::quick(Preset::Mlp, 10),
+                start: 5,
+                root: Hash::ZERO,
+                total_chunks: 2,
+                chunk: 0,
+                payload: vec![3; 40],
+            },
             Request::Shutdown,
         ];
         for r in reqs {
@@ -287,6 +339,13 @@ mod tests {
             }),
             Response::Cancelled(true),
             Response::Cancelled(false),
+            Response::Checkpoint {
+                step: 5,
+                root: Hash::ZERO,
+                total_chunks: 3,
+                chunk: 2,
+                payload: vec![9; 64],
+            },
         ];
         for r in resps {
             assert_eq!(r.wire_size(), r.encode().len(), "{r:?}");

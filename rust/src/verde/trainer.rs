@@ -15,7 +15,7 @@ use crate::graph::{Graph, InitKind, NodeId, Op, Slot};
 use crate::hash::Hash;
 use crate::net::Endpoint;
 use crate::tensor::Tensor;
-use crate::train::checkpoint::level0_schedule;
+use crate::train::checkpoint::{chunk_count, chunk_slice, encode_state, level0_schedule};
 use crate::train::session::Session;
 use crate::train::JobSpec;
 use crate::util::metrics::Counters;
@@ -41,6 +41,14 @@ pub struct TrainerNode {
     value_cache: Option<(u64, Vec<Vec<Tensor>>)>,
     /// Lazily-built mutated graph for `WrongOperator`.
     wrong_graph: Option<Graph>,
+    /// Boundary this trainer was seeded at (0 = trained from genesis). A
+    /// seeded trainer holds no trajectory below this step and refuses
+    /// dispute queries that would need one.
+    seed_base: u64,
+    /// Cached canonical serialization of one checkpoint state
+    /// (`(step, state root, bytes)`), so chunked uploads of the same
+    /// boundary don't re-encode per chunk.
+    encoded_ckpt: Option<(u64, Hash, Vec<u8>)>,
     pub counters: Counters,
     /// Per-step training losses (logging/examples).
     pub losses: Vec<f32>,
@@ -64,6 +72,8 @@ impl TrainerNode {
             traces: HashMap::new(),
             value_cache: None,
             wrong_graph: None,
+            seed_base: 0,
+            encoded_ckpt: None,
             counters: Counters::new(),
             losses: Vec::new(),
         }
@@ -73,20 +83,61 @@ impl TrainerNode {
         Self::new(name, spec, Backend::Rep, Fault::None)
     }
 
+    /// Build a trainer seeded with a verified checkpoint state: `train()`
+    /// starts from `seed` (its `step` must sit strictly inside the job)
+    /// instead of the genesis state, so the job costs only
+    /// `spec.steps − seed.step` training steps. `seed_root` is the state's
+    /// Merkle root (already verified by the caller); it stands in as the
+    /// checkpoint commitment at the seed boundary.
+    ///
+    /// # Panics
+    /// If `seed.step` is outside `1..session.spec.steps`.
+    pub fn with_seed(
+        name: &str,
+        session: Session,
+        backend: Backend,
+        fault: Fault,
+        seed: State,
+        seed_root: Hash,
+    ) -> TrainerNode {
+        assert!(
+            seed.step >= 1 && seed.step < session.spec.steps,
+            "seed step {} outside job of {} steps",
+            seed.step,
+            session.spec.steps
+        );
+        let mut t = Self::with_session(name, session, backend, fault);
+        t.seed_base = seed.step;
+        t.roots.insert(seed.step, seed_root);
+        t.stored.insert(seed.step, seed);
+        t
+    }
+
+    /// The boundary this trainer was seeded at (0 when trained from
+    /// genesis).
+    pub fn seed_base(&self) -> u64 {
+        self.seed_base
+    }
+
     // -----------------------------------------------------------------
     // training
     // -----------------------------------------------------------------
 
-    /// Run the whole job, logging level-0 checkpoints, and return the final
-    /// commitment the trainer reports to the client.
+    /// Run the job — from genesis, or from the seeded checkpoint for a
+    /// trainer built with [`TrainerNode::with_seed`] — logging level-0
+    /// checkpoints, and return the final commitment the trainer reports to
+    /// the client. A seeded trainer executes exactly
+    /// `spec.steps − seed_base` steps.
     pub fn train(&mut self) -> Hash {
         let spec = self.session.spec;
         let schedule = level0_schedule(spec.steps, spec.checkpoint_n);
-        self.stored.insert(0, self.session.genesis.clone());
-        self.roots.insert(0, self.session.genesis_root());
+        if self.seed_base == 0 {
+            self.stored.insert(0, self.session.genesis.clone());
+            self.roots.insert(0, self.session.genesis_root());
+        }
 
-        let mut state = self.session.genesis.clone();
-        for step in 1..=spec.steps {
+        let mut state = self.stored[&self.seed_base].clone();
+        for step in self.seed_base + 1..=spec.steps {
             let record = schedule.contains(&step);
             let (next, loss) = self.exec_step(&state, record, false);
             self.losses.push(loss);
@@ -355,6 +406,35 @@ impl TrainerNode {
         let proof = prev_trace.commit().prove(slot.node);
         Some(InputProvenance::PrevStep { node, out_idx: slot.out_idx, proof })
     }
+
+    /// Serve one chunk of the canonical serialization of the checkpoint
+    /// state after `step` — the upload half of segment state-transfer. The
+    /// encoding is cached per boundary so a multi-chunk upload encodes
+    /// once.
+    fn checkpoint_chunk(&mut self, step: u64, chunk: u64) -> Response {
+        if step < 1 || step < self.seed_base || step > self.session.spec.steps {
+            return Response::Refuse(format!("{}: no checkpoint at step {step}", self.name));
+        }
+        if self.encoded_ckpt.as_ref().map(|(s, _, _)| *s) != Some(step) {
+            let state = self.state_at(step);
+            let root = state.state_root();
+            let bytes = encode_state(&state);
+            self.encoded_ckpt = Some((step, root, bytes));
+        }
+        let (root, total, payload) = {
+            let (_, root, bytes) = self.encoded_ckpt.as_ref().expect("just cached");
+            let total = chunk_count(bytes.len());
+            if chunk >= total {
+                return Response::Refuse(format!(
+                    "{}: checkpoint at {step} has {total} chunks, no chunk {chunk}",
+                    self.name
+                ));
+            }
+            (*root, total, chunk_slice(bytes, chunk).to_vec())
+        };
+        self.counters.add("checkpoint_bytes_served", payload.len() as u64);
+        Response::Checkpoint { step, root, total_chunks: total, chunk, payload }
+    }
 }
 
 impl Endpoint for TrainerNode {
@@ -366,8 +446,35 @@ impl Endpoint for TrainerNode {
         match req {
             Request::FinalCommit => Response::Commit(self.final_commit()),
             Request::CheckpointHashes { boundaries } => {
+                // A seeded trainer holds no trajectory below its seed
+                // boundary: it cannot (and must not pretend to) derive
+                // those checkpoints.
+                if self.seed_base > 0 && boundaries.iter().any(|&b| b < self.seed_base) {
+                    return Response::Refuse(format!(
+                        "{}: seeded at step {}, no earlier checkpoints",
+                        self.name, self.seed_base
+                    ));
+                }
                 let hashes = boundaries.iter().map(|&b| self.root_at(b)).collect();
                 Response::Hashes(hashes)
+            }
+            Request::NodeHashSeq { step }
+            | Request::OpenNode { step, .. }
+            | Request::InputTensor { step, .. }
+                if self.seed_base > 0 && step <= self.seed_base =>
+            {
+                Response::Refuse(format!(
+                    "{}: seeded at step {}, no trace for step {step}",
+                    self.name, self.seed_base
+                ))
+            }
+            Request::InputProof { step, .. } if self.seed_base > 0 && step <= self.seed_base + 1 => {
+                // Provenance for step seed_base+1 would need the seed
+                // step's trace, which a seeded trainer never executed.
+                Response::Refuse(format!(
+                    "{}: seeded at step {}, no provenance for step {step}",
+                    self.name, self.seed_base
+                ))
             }
             Request::NodeHashSeq { step } => {
                 let mut seq = self.trace_at(step).node_hashes;
@@ -404,11 +511,13 @@ impl Endpoint for TrainerNode {
                 let values = self.values_at(step);
                 Response::TensorPayload(values[slot.node][slot.out_idx].clone())
             }
-            Request::Train { .. } => {
+            Request::Train { .. } | Request::SeedCheckpoint { .. } => {
                 // A TrainerNode is bound to one job at construction; job
-                // delegation is handled by `service::worker::WorkerHost`.
+                // delegation and checkpoint seeding are handled by
+                // `service::worker::WorkerHost`.
                 Response::Refuse("trainer is bound to a single job".into())
             }
+            Request::FetchCheckpoint { step, chunk } => self.checkpoint_chunk(step, chunk),
             Request::Submit { .. } | Request::Status { .. } | Request::Cancel { .. } => {
                 // Client-API messages address a coordinator frontend
                 // (`service::client::DelegationFrontend`), never a trainer.
@@ -535,6 +644,91 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn seeded_trainer_matches_full_training_with_delta_steps_only() {
+        let spec = JobSpec::quick(Preset::Mlp, 8);
+        let mut full = TrainerNode::honest("full", spec);
+        let commit = full.train();
+        let seed = full.state_at(5);
+        let seed_root = seed.state_root();
+
+        let mut seeded = TrainerNode::with_seed(
+            "seeded",
+            Session::new(spec),
+            Backend::Rep,
+            Fault::None,
+            seed,
+            seed_root,
+        );
+        assert_eq!(seeded.seed_base(), 5);
+        let seeded_commit = seeded.train();
+        assert_eq!(seeded_commit, commit, "seeded run reaches the identical commitment");
+        assert_eq!(seeded.counters.get("steps_trained"), 3, "only the delta is trained");
+        assert_eq!(seeded.losses.len(), 3);
+        // later checkpoints are reachable, earlier ones are refused
+        assert_eq!(seeded.root_at(7), full.root_at(7));
+        match seeded.call(Request::CheckpointHashes { boundaries: vec![2, 8] }) {
+            Response::Refuse(_) => {}
+            other => panic!("{other:?}"),
+        }
+        match seeded.call(Request::NodeHashSeq { step: 4 }) {
+            Response::Refuse(_) => {}
+            other => panic!("{other:?}"),
+        }
+        match seeded.call(Request::InputProof { step: 6, node_idx: 0 }) {
+            Response::Refuse(_) => {}
+            other => panic!("{other:?}"),
+        }
+        // boundaries at/after the seed answer normally
+        match seeded.call(Request::CheckpointHashes { boundaries: vec![6, 8] }) {
+            Response::Hashes(h) => {
+                assert_eq!(h, vec![full.root_at(6), full.root_at(8)]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn checkpoint_chunks_reassemble_and_verify() {
+        use crate::train::checkpoint::decode_state;
+        let spec = JobSpec::quick(Preset::Mlp, 6);
+        let mut t = TrainerNode::honest("t", spec);
+        t.train();
+        let mut bytes = Vec::new();
+        let mut chunk = 0u64;
+        let mut root = Hash::ZERO;
+        let mut total = 1u64;
+        loop {
+            match t.call(Request::FetchCheckpoint { step: 4, chunk }) {
+                Response::Checkpoint { step, root: r, total_chunks, chunk: c, payload } => {
+                    assert_eq!(step, 4);
+                    assert_eq!(c, chunk);
+                    bytes.extend_from_slice(&payload);
+                    root = r;
+                    total = total_chunks;
+                }
+                other => panic!("{other:?}"),
+            }
+            chunk += 1;
+            if chunk >= total {
+                break;
+            }
+        }
+        let state = decode_state(&bytes).expect("upload decodes");
+        assert_eq!(state.step, 4);
+        assert_eq!(state.state_root(), root, "upload matches its committed root");
+        assert!(state.params.keys().eq(t.session.genesis.params.keys()));
+        // out-of-range requests are refused, not panics
+        assert!(matches!(
+            t.call(Request::FetchCheckpoint { step: 99, chunk: 0 }),
+            Response::Refuse(_)
+        ));
+        assert!(matches!(
+            t.call(Request::FetchCheckpoint { step: 4, chunk: 999 }),
+            Response::Refuse(_)
+        ));
     }
 
     #[test]

@@ -52,6 +52,18 @@ const MAX_TENSOR_ELEMS: usize = MAX_FRAME / 4;
 /// Maximum tensor rank accepted by the decoder.
 const MAX_RANK: usize = 8;
 
+/// Checkpoint-payload chunk size for state-transfer messages (1 MiB):
+/// serialized checkpoint states larger than this cross the wire as a
+/// sequence of `FetchCheckpoint`/`Checkpoint` (or `SeedCheckpoint`)
+/// exchanges, keeping every frame small enough to interleave with other
+/// multiplexed traffic.
+pub const CHECKPOINT_CHUNK: usize = 1 << 20;
+
+/// Maximum chunk count a checkpoint-transfer message may declare. Bounds
+/// the reassembly buffer a hostile peer can make the receiver allocate
+/// (`MAX_CHECKPOINT_CHUNKS × CHECKPOINT_CHUNK` = 1 GiB).
+pub const MAX_CHECKPOINT_CHUNKS: u64 = 1024;
+
 // Message tags. Requests and responses share one tag space so a stray
 // response can never parse as a request (and vice versa).
 const REQ_FINAL_COMMIT: u8 = 0x01;
@@ -66,6 +78,8 @@ const REQ_PING: u8 = 0x09;
 const REQ_SUBMIT: u8 = 0x0A;
 const REQ_STATUS: u8 = 0x0B;
 const REQ_CANCEL: u8 = 0x0C;
+const REQ_FETCH_CHECKPOINT: u8 = 0x0D;
+const REQ_SEED_CHECKPOINT: u8 = 0x0E;
 
 const RESP_COMMIT: u8 = 0x81;
 const RESP_HASHES: u8 = 0x82;
@@ -79,6 +93,7 @@ const RESP_PONG: u8 = 0x89;
 const RESP_SUBMITTED: u8 = 0x8A;
 const RESP_STATUS: u8 = 0x8B;
 const RESP_CANCELLED: u8 = 0x8C;
+const RESP_CHECKPOINT: u8 = 0x8D;
 
 const PROV_GENESIS: u8 = 0x01;
 const PROV_PREV_STEP: u8 = 0x02;
@@ -135,7 +150,7 @@ impl std::error::Error for WireError {}
 // primitive writers
 // ---------------------------------------------------------------------------
 
-fn put_u64(out: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
@@ -154,7 +169,7 @@ fn put_hashes(out: &mut Vec<u8>, hs: &[Hash]) {
     }
 }
 
-fn put_str(out: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
     put_u64(out, s.len() as u64);
     out.extend_from_slice(s.as_bytes());
 }
@@ -246,7 +261,7 @@ impl<'a> Reader<'a> {
 // composite codecs
 // ---------------------------------------------------------------------------
 
-fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+pub(crate) fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
     put_u64(out, t.rank() as u64);
     for &d in t.shape() {
         put_u64(out, d as u64);
@@ -254,7 +269,7 @@ fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
     out.extend_from_slice(&t.to_le_bytes());
 }
 
-fn read_tensor(r: &mut Reader<'_>) -> Result<Tensor, WireError> {
+pub(crate) fn read_tensor(r: &mut Reader<'_>) -> Result<Tensor, WireError> {
     let rank = r.usize("tensor.rank")?;
     if rank > MAX_RANK {
         return Err(WireError::Malformed { context: "tensor.rank" });
@@ -454,6 +469,7 @@ fn put_policy(out: &mut Vec<u8>, p: &JobPolicy) {
             put_u64(out, u64::from(n));
         }
     }
+    out.push(u8::from(p.transfer));
 }
 
 fn read_policy(r: &mut Reader<'_>) -> Result<JobPolicy, WireError> {
@@ -484,7 +500,8 @@ fn read_policy(r: &mut Reader<'_>) -> Result<JobPolicy, WireError> {
     } else {
         None
     };
-    Ok(JobPolicy { k, deadline, priority, backend, segments, max_requeues })
+    let transfer = read_presence(r, "policy.transfer")?;
+    Ok(JobPolicy { k, deadline, priority, backend, segments, max_requeues, transfer })
 }
 
 fn policy_wire_len(p: &JobPolicy) -> usize {
@@ -493,6 +510,40 @@ fn policy_wire_len(p: &JobPolicy) -> usize {
         + 1
         + 8
         + (1 + if p.max_requeues.is_some() { 8 } else { 0 })
+        + 1
+}
+
+/// Write the shared `(total_chunks, chunk, payload)` tail of a
+/// checkpoint-transfer message.
+fn put_chunk(out: &mut Vec<u8>, total_chunks: u64, chunk: u64, payload: &[u8]) {
+    put_u64(out, total_chunks);
+    put_u64(out, chunk);
+    put_u64(out, payload.len() as u64);
+    out.extend_from_slice(payload);
+}
+
+/// Read and validate a checkpoint-transfer chunk tail: chunk counts are
+/// clamped to [`MAX_CHECKPOINT_CHUNKS`] (bounding hostile reassembly
+/// buffers) and payloads to `1..=CHECKPOINT_CHUNK` bytes.
+fn read_chunk(r: &mut Reader<'_>) -> Result<(u64, u64, Vec<u8>), WireError> {
+    let total_chunks = r.u64("chunk.total")?;
+    if total_chunks == 0 || total_chunks > MAX_CHECKPOINT_CHUNKS {
+        return Err(WireError::Malformed { context: "chunk.total" });
+    }
+    let chunk = r.u64("chunk.index")?;
+    if chunk >= total_chunks {
+        return Err(WireError::Malformed { context: "chunk.index" });
+    }
+    let len = r.usize("chunk.len")?;
+    if len == 0 || len > CHECKPOINT_CHUNK {
+        return Err(WireError::Malformed { context: "chunk.len" });
+    }
+    let payload = r.take(len, "chunk.payload")?.to_vec();
+    Ok((total_chunks, chunk, payload))
+}
+
+fn chunk_wire_len(payload: &[u8]) -> usize {
+    8 + 8 + 8 + payload.len()
 }
 
 fn put_status(out: &mut Vec<u8>, s: &RemoteStatus) {
@@ -610,6 +661,18 @@ impl Request {
                 out.push(REQ_CANCEL);
                 put_u64(&mut out, *job_id);
             }
+            Request::FetchCheckpoint { step, chunk } => {
+                out.push(REQ_FETCH_CHECKPOINT);
+                put_u64(&mut out, *step);
+                put_u64(&mut out, *chunk);
+            }
+            Request::SeedCheckpoint { spec, start, root, total_chunks, chunk, payload } => {
+                out.push(REQ_SEED_CHECKPOINT);
+                put_spec(&mut out, spec);
+                put_u64(&mut out, *start);
+                put_hash(&mut out, root);
+                put_chunk(&mut out, *total_chunks, *chunk, payload);
+            }
         }
         debug_assert_eq!(out.len(), self.wire_size(), "wire_size drifted from encoder");
         out
@@ -658,6 +721,27 @@ impl Request {
             },
             REQ_STATUS => Request::Status { job_id: r.u64("request.job_id")? },
             REQ_CANCEL => Request::Cancel { job_id: r.u64("request.job_id")? },
+            REQ_FETCH_CHECKPOINT => {
+                let step = r.u64("request.step")?;
+                let chunk = r.u64("request.chunk")?;
+                if chunk >= MAX_CHECKPOINT_CHUNKS {
+                    return Err(WireError::Malformed { context: "request.chunk" });
+                }
+                Request::FetchCheckpoint { step, chunk }
+            }
+            REQ_SEED_CHECKPOINT => {
+                let spec = read_spec(&mut r)?;
+                let start = r.u64("seed.start")?;
+                if start == 0 || start >= spec.steps {
+                    // The seed boundary must sit strictly inside the job:
+                    // start == 0 is just a fresh job and start >= steps
+                    // leaves nothing to train.
+                    return Err(WireError::Malformed { context: "seed.start" });
+                }
+                let root = r.hash("seed.root")?;
+                let (total_chunks, chunk, payload) = read_chunk(&mut r)?;
+                Request::SeedCheckpoint { spec, start, root, total_chunks, chunk, payload }
+            }
             tag => return Err(WireError::BadTag { context: "request", tag }),
         };
         r.finish()?;
@@ -677,6 +761,10 @@ pub fn request_wire_len(req: &Request) -> usize {
         Request::Train { spec } => spec_wire_len(spec),
         Request::Submit { spec, policy } => spec_wire_len(spec) + policy_wire_len(policy),
         Request::Status { .. } | Request::Cancel { .. } => 8,
+        Request::FetchCheckpoint { .. } => 16,
+        Request::SeedCheckpoint { spec, payload, .. } => {
+            spec_wire_len(spec) + 8 + 32 + chunk_wire_len(payload)
+        }
     }
 }
 
@@ -727,6 +815,12 @@ impl Response {
                 out.push(RESP_CANCELLED);
                 out.push(u8::from(*ok));
             }
+            Response::Checkpoint { step, root, total_chunks, chunk, payload } => {
+                out.push(RESP_CHECKPOINT);
+                put_u64(&mut out, *step);
+                put_hash(&mut out, root);
+                put_chunk(&mut out, *total_chunks, *chunk, payload);
+            }
         }
         debug_assert_eq!(out.len(), self.wire_size(), "wire_size drifted from encoder");
         out
@@ -748,6 +842,12 @@ impl Response {
             RESP_SUBMITTED => Response::Submitted { job_id: r.u64("response.job_id")? },
             RESP_STATUS => Response::Status(read_status(&mut r)?),
             RESP_CANCELLED => Response::Cancelled(read_presence(&mut r, "response.cancelled")?),
+            RESP_CHECKPOINT => {
+                let step = r.u64("checkpoint.step")?;
+                let root = r.hash("checkpoint.root")?;
+                let (total_chunks, chunk, payload) = read_chunk(&mut r)?;
+                Response::Checkpoint { step, root, total_chunks, chunk, payload }
+            }
             tag => return Err(WireError::BadTag { context: "response", tag }),
         };
         r.finish()?;
@@ -769,6 +869,7 @@ pub fn response_wire_len(resp: &Response) -> usize {
         Response::Submitted { .. } => 8,
         Response::Status(s) => status_wire_len(s),
         Response::Cancelled(_) => 1,
+        Response::Checkpoint { payload, .. } => 8 + 32 + chunk_wire_len(payload),
     }
 }
 
@@ -901,11 +1002,22 @@ mod tests {
                     backend: BackendRequirement::ReproducibleOnly,
                     segments: 8,
                     max_requeues: Some(1),
+                    transfer: true,
                 },
             },
             Request::Status { job_id: 0 },
             Request::Status { job_id: u64::MAX },
             Request::Cancel { job_id: 3 },
+            Request::FetchCheckpoint { step: 12, chunk: 0 },
+            Request::FetchCheckpoint { step: u64::MAX, chunk: MAX_CHECKPOINT_CHUNKS - 1 },
+            Request::SeedCheckpoint {
+                spec: crate::train::JobSpec::quick(crate::model::Preset::Mlp, 16),
+                start: 8,
+                root: Hash::of_bytes(b"seed-root"),
+                total_chunks: 3,
+                chunk: 1,
+                payload: vec![0xAB; 77],
+            },
         ]
     }
 
@@ -948,6 +1060,20 @@ mod tests {
             }),
             Response::Cancelled(true),
             Response::Cancelled(false),
+            Response::Checkpoint {
+                step: 6,
+                root: Hash::of_bytes(b"state-root"),
+                total_chunks: 2,
+                chunk: 0,
+                payload: vec![0x5A; 128],
+            },
+            Response::Checkpoint {
+                step: 1,
+                root: Hash::ZERO,
+                total_chunks: 1,
+                chunk: 0,
+                payload: vec![1],
+            },
         ]
     }
 
@@ -1126,6 +1252,82 @@ mod tests {
             Request::Submit { policy: back, .. } => assert_eq!(back.segments, 1),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn hostile_checkpoint_chunks_rejected() {
+        let good = Response::Checkpoint {
+            step: 4,
+            root: Hash::of_bytes(b"r"),
+            total_chunks: 2,
+            chunk: 1,
+            payload: vec![7; 16],
+        }
+        .encode();
+        // chunk tail sits after tag + step + root
+        let tail = 1 + 8 + 32;
+        // total_chunks == 0
+        let mut evil = good.clone();
+        evil[tail..tail + 8].copy_from_slice(&0u64.to_le_bytes());
+        assert!(matches!(
+            Response::decode(&evil),
+            Err(WireError::Malformed { context: "chunk.total" })
+        ));
+        // total_chunks beyond the clamp
+        let mut evil = good.clone();
+        evil[tail..tail + 8].copy_from_slice(&(MAX_CHECKPOINT_CHUNKS + 1).to_le_bytes());
+        assert!(matches!(
+            Response::decode(&evil),
+            Err(WireError::Malformed { context: "chunk.total" })
+        ));
+        // chunk index >= total_chunks
+        let mut evil = good.clone();
+        evil[tail + 8..tail + 16].copy_from_slice(&2u64.to_le_bytes());
+        assert!(matches!(
+            Response::decode(&evil),
+            Err(WireError::Malformed { context: "chunk.index" })
+        ));
+        // payload length beyond CHECKPOINT_CHUNK must not allocate
+        let mut evil = good.clone();
+        evil[tail + 16..tail + 24].copy_from_slice(&((CHECKPOINT_CHUNK as u64) + 1).to_le_bytes());
+        assert!(matches!(
+            Response::decode(&evil),
+            Err(WireError::Malformed { context: "chunk.len" })
+        ));
+        // truncation anywhere is an error, junk tail is Trailing
+        for cut in 0..good.len() {
+            assert!(Response::decode(&good[..cut]).is_err(), "prefix {cut} accepted");
+        }
+        let mut padded = good.clone();
+        padded.push(0);
+        assert!(matches!(Response::decode(&padded), Err(WireError::Trailing { extra: 1 })));
+
+        // A seed whose boundary is outside the job is refused at decode.
+        let spec = crate::train::JobSpec::quick(crate::model::Preset::Mlp, 8);
+        let seed = Request::SeedCheckpoint {
+            spec,
+            start: 4,
+            root: Hash::ZERO,
+            total_chunks: 1,
+            chunk: 0,
+            payload: vec![1, 2, 3],
+        };
+        let bytes = seed.encode();
+        assert_eq!(bytes.len(), seed.wire_size());
+        // start sits right after tag + spec
+        let pos = 1 + spec_wire_len(&spec);
+        let mut evil = bytes.clone();
+        evil[pos..pos + 8].copy_from_slice(&8u64.to_le_bytes()); // start == steps
+        assert!(matches!(
+            Request::decode(&evil),
+            Err(WireError::Malformed { context: "seed.start" })
+        ));
+        let mut evil = bytes;
+        evil[pos..pos + 8].copy_from_slice(&0u64.to_le_bytes()); // start == 0
+        assert!(matches!(
+            Request::decode(&evil),
+            Err(WireError::Malformed { context: "seed.start" })
+        ));
     }
 
     #[test]

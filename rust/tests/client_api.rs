@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 use verde::graph::kernels::Backend;
 use verde::hash::Hash;
 use verde::model::Preset;
-use verde::net::tcp::{spawn_server, TcpEndpoint};
+use verde::net::tcp::{spawn_server, spawn_server_threaded, TcpEndpoint};
 use verde::net::Endpoint;
 use verde::service::{
     BackendRequirement, Delegation, DelegationFrontend, FaultPlan, JobPolicy, JobRequest,
@@ -271,6 +271,95 @@ fn napping_worker_is_suspended_then_readmitted() {
     let report = delegation.finish();
     assert_eq!(report.revoked, vec!["w1".to_string()], "one suspension on the record");
     assert_eq!(pool.size(), 2);
+}
+
+/// The threaded-accept satellite: ≥ 4 remote TCP clients drive one
+/// coordinator frontend **simultaneously** (each connection served on its
+/// own thread against a clone sharing the handle registry). Every client
+/// submits and polls its own jobs to the honest verdict, and a final
+/// connection proves cross-connection visibility: it can `Status` every
+/// job id the other clients created.
+#[test]
+fn four_concurrent_tcp_clients_submit_simultaneously() {
+    let pool = in_process_pool(&[("w0", FaultPlan::Honest), ("w1", FaultPlan::Honest)]);
+    let delegation = Delegation::start(&pool, ServiceConfig::new(1));
+    let frontend = DelegationFrontend::new("coordinator", delegation.client());
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+    let addr = listener.local_addr().unwrap();
+    const CLIENTS: usize = 4;
+    const JOBS_PER_CLIENT: u64 = 2;
+    // 4 concurrent client connections + 1 final cross-visibility probe.
+    let server = spawn_server_threaded(listener, frontend.clone(), Some(CLIENTS + 1));
+
+    let client_threads: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut ep =
+                    TcpEndpoint::connect(&format!("client-{c}"), addr).expect("connect frontend");
+                let mut submitted: Vec<(u64, Hash)> = Vec::new();
+                for j in 0..JOBS_PER_CLIENT {
+                    let mut spec = JobSpec::quick(Preset::Mlp, 3);
+                    spec.data_seed ^= ((c as u64) << 32) | j;
+                    let want = honest(spec);
+                    match ep.call(Request::Submit { spec, policy: JobPolicy::default() }) {
+                        Response::Submitted { job_id } => submitted.push((job_id, want)),
+                        other => panic!("client {c}: {other:?}"),
+                    }
+                }
+                // Poll every submitted job to completion over this same
+                // connection (other clients are polling concurrently).
+                let t0 = Instant::now();
+                let mut done = vec![false; submitted.len()];
+                while !done.iter().all(|&d| d) {
+                    assert!(
+                        t0.elapsed() < Duration::from_secs(120),
+                        "client {c}: jobs never finished"
+                    );
+                    for (i, &(job_id, want)) in submitted.iter().enumerate() {
+                        if done[i] {
+                            continue;
+                        }
+                        match ep.call(Request::Status { job_id }) {
+                            Response::Status(RemoteStatus::Done { accepted, cancelled, .. }) => {
+                                assert!(!cancelled);
+                                assert_eq!(accepted, Some(want), "client {c} job {job_id}");
+                                done[i] = true;
+                            }
+                            Response::Status(_) => {}
+                            other => panic!("client {c}: {other:?}"),
+                        }
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                let ids: Vec<u64> = submitted.into_iter().map(|(id, _)| id).collect();
+                ids
+            })
+        })
+        .collect();
+    let mut all_ids: Vec<u64> = Vec::new();
+    for t in client_threads {
+        all_ids.extend(t.join().expect("client thread"));
+    }
+    all_ids.sort_unstable();
+    let expect: Vec<u64> = (0..(CLIENTS as u64 * JOBS_PER_CLIENT)).collect();
+    assert_eq!(all_ids, expect, "every submission got a distinct global id");
+
+    // Cross-connection visibility: a fresh client sees all of them Done.
+    let mut probe = TcpEndpoint::connect("probe", addr).expect("connect probe");
+    for id in all_ids {
+        match probe.call(Request::Status { job_id: id }) {
+            Response::Status(RemoteStatus::Done { accepted, .. }) => {
+                assert!(accepted.is_some(), "job {id}");
+            }
+            other => panic!("probe: {other:?}"),
+        }
+    }
+    drop(probe);
+    server.join().expect("threaded frontend server");
+    let report = delegation.finish();
+    assert_eq!(report.outcomes.len(), CLIENTS * JOBS_PER_CLIENT as usize);
+    assert_eq!(pool.idle(), 2, "all leases returned");
 }
 
 /// The wire API end to end: a remote client submits (sharded), polls

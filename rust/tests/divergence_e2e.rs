@@ -1,0 +1,89 @@
+//! The cross-hardware divergence satellite: a worker that *actually
+//! computes* with free-order (non-reproducible) kernels while advertising
+//! a RepOps backend sneaks into a reproducible-only tournament — its
+//! commitment diverges bitwise, the dispute narrows to a compute node, and
+//! the referee's single-operator RepOps recomputation convicts it.
+
+use verde::graph::kernels::Backend;
+use verde::model::Preset;
+use verde::service::{
+    BackendRequirement, Delegation, FaultPlan, JobRequest, PooledWorker, ServiceConfig,
+    WorkerHost, WorkerPool,
+};
+use verde::tensor::profile::HardwareProfile;
+use verde::train::JobSpec;
+use verde::verde::faults::Fault;
+use verde::verde::referee::DecisionCase;
+use verde::verde::run_dispute;
+use verde::verde::trainer::TrainerNode;
+
+/// The dispute-level ground truth: an honest-intent trainer on free-order
+/// hardware diverges from RepOps and is the convicted party, via operator
+/// recomputation (not a refusal/technicality).
+#[test]
+fn free_order_trainer_convicted_by_repops_recomputation() {
+    let spec = JobSpec::quick(Preset::Mlp, 8);
+    let mut honest = TrainerNode::honest("honest", spec);
+    let mut free = TrainerNode::new(
+        "free",
+        spec,
+        Backend::Free(HardwareProfile::T4_16G),
+        Fault::NonRepHardware,
+    );
+    honest.train();
+    free.train();
+    let r = run_dispute(spec, honest, free);
+    assert_eq!(r.verdict.convicted(), Some(1), "{:?}", r.verdict);
+    assert_eq!(
+        r.verdict.case(),
+        Some(DecisionCase::OutputRecompute),
+        "cross-hardware divergence is pinned to a single operator: {:?}",
+        r.verdict
+    );
+    assert!(r.diverging_step.is_some());
+}
+
+/// End to end through the service: the free-order worker lies about its
+/// backend (advertises RepOps), so reproducible-only routing cannot screen
+/// it out — but the tournament convicts it on its first job, the honest
+/// worker's claim is accepted, and later jobs keep resolving.
+#[test]
+fn lying_free_order_worker_is_convicted_in_rep_only_tournament() {
+    // The WorkerHost really computes with free-order kernels; the
+    // PooledWorker wrapper advertises the default (Rep) backend — the lie.
+    let liar = WorkerHost::new("liar", FaultPlan::Honest)
+        .with_backend(Backend::Free(HardwareProfile::A100_40G));
+    let pool = WorkerPool::new(vec![
+        PooledWorker::new("liar", liar),
+        PooledWorker::new("rep0", WorkerHost::new("rep0", FaultPlan::Honest)),
+    ]);
+
+    let spec = JobSpec::quick(Preset::Mlp, 6);
+    let want = TrainerNode::honest("ref", spec).train();
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let outcome = delegation
+        .submit(JobRequest::new(spec).with_backend(BackendRequirement::ReproducibleOnly))
+        .wait();
+
+    assert_eq!(outcome.accepted, Some(want), "honest claim wins: {outcome:?}");
+    assert_eq!(outcome.winner.as_deref(), Some("rep0"));
+    assert_eq!(outcome.disputes, 1, "one pairwise dispute resolves the divergence");
+    assert_eq!(outcome.eliminated, 1, "the free-order liar is convicted");
+
+    // A second job: the liar is eliminated per-tournament, not expelled
+    // from the pool (backend lies are economic failures, not liveness
+    // ones) — it loses again, the verdict stays honest.
+    let mut spec2 = spec;
+    spec2.data_seed ^= 0xF00D;
+    let want2 = TrainerNode::honest("ref2", spec2).train();
+    let o2 = delegation
+        .submit(JobRequest::new(spec2).with_backend(BackendRequirement::ReproducibleOnly))
+        .wait();
+    assert_eq!(o2.accepted, Some(want2));
+    assert_eq!(o2.eliminated, 1);
+
+    let report = delegation.finish();
+    assert_eq!(report.total_eliminated(), 2);
+    assert!(report.revoked.is_empty(), "convictions are not revocations");
+    assert_eq!(pool.idle(), 2);
+}

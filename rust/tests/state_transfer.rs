@@ -1,0 +1,244 @@
+//! Acceptance battery for verified checkpoint state-transfer between
+//! segments: a sharded job trains exactly `b_i − b_{i−1}` steps per
+//! segment (asserted via step accounting in the report AND via worker-side
+//! counters over real TCP), its final verdict equals the unsharded path's,
+//! a bit-flipped checkpoint upload is rejected by Merkle verification and
+//! recovered from via a survivor, and a cheater inside a seeded segment
+//! forces the prefix-re-training fallback without poisoning the verdict.
+
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+use verde::hash::Hash;
+use verde::model::Preset;
+use verde::net::tcp::{spawn_server, TcpEndpoint};
+use verde::net::Endpoint;
+use verde::service::{
+    Delegation, FaultPlan, JobRequest, PooledWorker, ServiceConfig, WorkerHost, WorkerPool,
+};
+use verde::train::checkpoint::split_points;
+use verde::train::JobSpec;
+use verde::verde::protocol::Request;
+use verde::verde::trainer::TrainerNode;
+
+fn in_process_pool(plans: &[(&str, FaultPlan)]) -> WorkerPool {
+    WorkerPool::new(
+        plans
+            .iter()
+            .map(|&(name, plan)| PooledWorker::new(name, WorkerHost::new(name, plan)))
+            .collect(),
+    )
+}
+
+fn honest(spec: JobSpec) -> Hash {
+    TrainerNode::honest("ref", spec).train()
+}
+
+/// The acceptance criterion: with state transfer on, segment `i` executes
+/// exactly `b_i − b_{i−1}` training steps, every boundary verdict still
+/// equals the honest checkpoint commitment, and the rolled-up verdict
+/// equals the unsharded path's.
+#[test]
+fn transfer_trains_delta_steps_and_matches_unsharded_verdict() {
+    let plans = [
+        ("w0", FaultPlan::Honest),
+        ("w1", FaultPlan::Honest),
+        ("w2", FaultPlan::Honest),
+        ("w3", FaultPlan::Honest),
+    ];
+    let spec = JobSpec::quick(Preset::Mlp, 12);
+    let full = honest(spec);
+    let boundaries = split_points(0, 12, 4);
+
+    // Baseline: the same sharded job WITHOUT transfer pays the prefix
+    // re-training bill (k × Σ b_i worker-steps).
+    let pool = in_process_pool(&plans);
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let prefix_outcome = delegation.submit(JobRequest::new(spec).with_segments(4)).wait();
+    assert_eq!(prefix_outcome.accepted, Some(full));
+    let prefix_report = delegation.finish();
+    let prefix_steps = prefix_report.total_steps_trained();
+    assert_eq!(prefix_steps, 2 * boundaries.iter().sum::<u64>(), "prefix mode re-trains prefixes");
+
+    // State transfer: fresh pool, same job.
+    let pool = in_process_pool(&plans);
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let outcome = delegation
+        .submit(JobRequest::new(spec).with_segments(4).with_state_transfer())
+        .wait();
+
+    assert!(!outcome.cancelled);
+    assert_eq!(outcome.accepted, Some(full), "transfer == unsharded verdict: {outcome:?}");
+    assert_eq!(outcome.segments.len(), 4);
+    let ends: Vec<u64> = outcome.segments.iter().map(|s| s.end).collect();
+    assert_eq!(ends, boundaries);
+    for (i, s) in outcome.segments.iter().enumerate() {
+        assert_eq!(s.accepted, Some(honest(spec.prefix(s.end))), "segment {i}");
+        assert_eq!(s.workers.len(), 2, "k = 2 per segment");
+        assert_eq!(s.disputes, 0);
+        assert_eq!(s.requeues, 0);
+        assert_eq!(s.uploads_rejected, 0);
+        // THE acceptance assertion: exactly b_i − b_{i−1} steps trained.
+        assert_eq!(s.steps_trained, s.end - s.start, "segment {i} trains only its delta");
+        if i == 0 {
+            assert_eq!(s.seeded_from, None, "segment 0 starts from genesis");
+        } else {
+            assert_eq!(s.seeded_from, Some(boundaries[i - 1]), "segment {i} was seeded");
+        }
+        if i + 1 < outcome.segments.len() {
+            assert!(s.transfer_bytes > 0, "segment {i} served a checkpoint fetch");
+        }
+    }
+
+    let report = delegation.finish();
+    assert_eq!(report.total_seeded_segments(), 3);
+    assert_eq!(report.total_uploads_rejected(), 0);
+    assert!(report.total_transfer_bytes() > 0);
+    // Fleet-wide: k × steps worker-steps instead of k × Σ b_i.
+    assert_eq!(report.total_steps_trained(), 2 * 12);
+    assert!(
+        report.total_steps_trained() < prefix_steps,
+        "state transfer must beat prefix re-training: {} vs {prefix_steps}",
+        report.total_steps_trained()
+    );
+    let json = report.to_json();
+    assert!(json.contains("\"seeded_segments\":3"), "{json}");
+    assert!(json.contains("\"steps_trained\":24"), "{json}");
+    assert_eq!(pool.idle(), 4, "all leases returned");
+}
+
+/// Step accounting measured on the workers themselves, over real TCP:
+/// each of the two workers trains every segment's delta exactly once, so
+/// its own counter lands at `steps` (not `Σ b_i`), and the seeded
+/// segments arrive via `SeedCheckpoint`.
+#[test]
+fn tcp_workers_train_only_deltas_under_transfer() {
+    let plans = [("w0", FaultPlan::Honest), ("w1", FaultPlan::Honest)];
+    let mut servers = Vec::new();
+    let mut workers = Vec::new();
+    for (name, plan) in plans {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+        let addr = listener.local_addr().unwrap();
+        servers.push(spawn_server(listener, WorkerHost::new(name, plan), Some(1)));
+        workers.push(PooledWorker::new(name, TcpEndpoint::connect(name, addr).unwrap()));
+    }
+    let pool = WorkerPool::new(workers);
+
+    let spec = JobSpec::quick(Preset::Mlp, 8);
+    let full = honest(spec);
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let outcome = delegation
+        .submit(JobRequest::new(spec).with_segments(4).with_state_transfer())
+        .wait();
+    assert_eq!(outcome.accepted, Some(full), "{outcome:?}");
+    assert_eq!(outcome.segments.len(), 4);
+    delegation.finish();
+
+    for mut w in pool.into_workers() {
+        let _ = w.call(Request::Shutdown);
+    }
+    for server in servers {
+        let host = server.join().expect("worker thread");
+        assert_eq!(
+            host.counters.get("steps_trained"),
+            8,
+            "{}: trained k-th share of every delta, not the prefixes",
+            host.name()
+        );
+        assert_eq!(host.counters.get("jobs_seeded"), 3, "{}", host.name());
+    }
+}
+
+/// The tamper satellite: a worker serving a bit-flipped checkpoint upload
+/// is caught by Merkle verification against the unanimous state root, its
+/// lease is revoked, the fetch recovers from a surviving co-winner, and
+/// the final verdict still matches the unsharded path.
+#[test]
+fn tampered_upload_is_rejected_and_fetch_recovers_on_survivor() {
+    let pool = in_process_pool(&[
+        ("w0", FaultPlan::TamperUpload),
+        ("w1", FaultPlan::Honest),
+        ("w2", FaultPlan::Honest),
+    ]);
+    let spec = JobSpec::quick(Preset::Mlp, 8);
+    let full = honest(spec);
+
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let outcome = delegation
+        .submit(JobRequest::new(spec).with_segments(2).with_state_transfer())
+        .wait();
+
+    assert_eq!(outcome.accepted, Some(full), "verdict unharmed: {outcome:?}");
+    assert_eq!(outcome.segments.len(), 2);
+    let s0 = &outcome.segments[0];
+    // w0 trains honestly, so segment 0's tournament is clean — the attack
+    // only surfaces at upload time.
+    assert_eq!(s0.disputes, 0);
+    assert_eq!(s0.uploads_rejected, 1, "the bit-flipped upload was caught");
+    assert!(s0.revoked >= 1, "the tamperer lost its lease");
+    let s1 = &outcome.segments[1];
+    assert_eq!(s1.seeded_from, Some(4), "the survivor's upload seeded segment 1");
+    assert_eq!(s1.steps_trained, 4);
+    assert_eq!(s1.requeues, 0, "no fallback needed — a co-winner had the real state");
+
+    let report = delegation.finish();
+    assert_eq!(report.total_uploads_rejected(), 1);
+    assert!(report.revoked.contains(&"w0".to_string()), "{:?}", report.revoked);
+    assert_eq!(pool.size(), 2, "the tamperer is gone for good");
+    assert_eq!(pool.idle(), 2);
+}
+
+/// A cheater *inside* a seeded segment: seeded leases cannot run the
+/// bisection dispute (no trajectory below the seed), so disagreement falls
+/// the segment back to prefix re-training, where the full dispute protocol
+/// convicts the cheater — and the final verdict still matches the
+/// unsharded path. Optimistic fast path, pessimistic fallback.
+#[test]
+fn seeded_disagreement_falls_back_to_prefix_and_convicts() {
+    let pool = in_process_pool(&[
+        ("w0", FaultPlan::Honest),
+        ("w1", FaultPlan::Tamper { step: Some(11), delta: 0.05 }),
+    ]);
+    let spec = JobSpec::quick(Preset::Mlp, 12);
+    let full = honest(spec);
+
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let t0 = Instant::now();
+    let outcome = delegation
+        .submit(JobRequest::new(spec).with_segments(2).with_state_transfer())
+        .wait();
+    assert!(t0.elapsed() < Duration::from_secs(120), "fallback must not wedge the job");
+
+    assert_eq!(outcome.accepted, Some(full), "{outcome:?}");
+    assert_eq!(outcome.segments.len(), 2);
+    let s1 = &outcome.segments[1];
+    assert_eq!(s1.requeues, 1, "the seeded lease disagreed and fell back once");
+    assert_eq!(s1.seeded_from, None, "the settling attempt re-trained the prefix");
+    assert_eq!(s1.steps_trained, 12, "fallback pays the full prefix");
+    assert!(s1.disputes >= 1, "the fallback tournament ran a real dispute");
+    assert!(outcome.eliminated >= 1, "the cheater was convicted");
+    assert_eq!(outcome.winner.as_deref(), Some("w0"));
+
+    let report = delegation.finish();
+    assert_eq!(pool.idle(), 2, "eliminations are not revocations; leases returned");
+    assert!(report.revoked.is_empty());
+}
+
+/// `segments == 1` with transfer requested behaves exactly like an
+/// unsharded job: nothing to seed, nothing fetched.
+#[test]
+fn single_segment_transfer_degenerates_to_unsharded() {
+    let pool = in_process_pool(&[("w0", FaultPlan::Honest), ("w1", FaultPlan::Honest)]);
+    let spec = JobSpec::quick(Preset::Mlp, 5);
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let outcome = delegation.submit(JobRequest::new(spec).with_state_transfer()).wait();
+    assert_eq!(outcome.accepted, Some(honest(spec)));
+    assert_eq!(outcome.segments.len(), 1);
+    let s = &outcome.segments[0];
+    assert_eq!(s.seeded_from, None);
+    assert_eq!(s.steps_trained, 5);
+    assert_eq!(s.transfer_bytes, 0);
+    let report = delegation.finish();
+    assert_eq!(report.total_seeded_segments(), 0);
+    assert_eq!(report.total_transfer_bytes(), 0);
+}

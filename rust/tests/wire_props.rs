@@ -98,7 +98,27 @@ fn gen_policy(g: &mut Gen) -> JobPolicy {
         },
         segments: g.usize_in(1, 1 << 16) as u64,
         max_requeues: if g.bool() { Some(g.usize_in(0, 1000) as u32) } else { None },
+        transfer: g.bool(),
     }
+}
+
+/// A structurally valid `(total_chunks, chunk, payload)` triple for the
+/// checkpoint-transfer messages (the codec rejects everything else).
+fn gen_chunk(g: &mut Gen) -> (u64, u64, Vec<u8>) {
+    let total = g.usize_in(1, 8) as u64;
+    let chunk = g.usize_in(0, total as usize - 1) as u64;
+    let payload = (0..g.usize_in(1, 300)).map(|_| (g.u64() & 0xff) as u8).collect();
+    (total, chunk, payload)
+}
+
+/// A spec/boundary pair with the seed boundary strictly inside the job.
+fn gen_seed_spec(g: &mut Gen) -> (JobSpec, u64) {
+    let mut spec = gen_spec(g);
+    if spec.steps < 2 {
+        spec.steps = 2;
+    }
+    let start = g.usize_in(1, (spec.steps - 1) as usize) as u64;
+    (spec, start)
 }
 
 fn gen_status(g: &mut Gen) -> RemoteStatus {
@@ -116,7 +136,23 @@ fn gen_status(g: &mut Gen) -> RemoteStatus {
 }
 
 fn gen_request(g: &mut Gen) -> Request {
-    match g.usize_in(0, 11) {
+    match g.usize_in(0, 13) {
+        12 => {
+            let chunk = g.usize_in(0, 1023) as u64;
+            Request::FetchCheckpoint { step: g.u64(), chunk }
+        }
+        13 => {
+            let (spec, start) = gen_seed_spec(g);
+            let (total_chunks, chunk, payload) = gen_chunk(g);
+            Request::SeedCheckpoint {
+                spec,
+                start,
+                root: gen_hash(g),
+                total_chunks,
+                chunk,
+                payload,
+            }
+        }
         0 => Request::FinalCommit,
         1 => Request::CheckpointHashes {
             boundaries: (0..g.usize_in(0, 40)).map(|_| g.u64()).collect(),
@@ -139,7 +175,17 @@ fn gen_request(g: &mut Gen) -> Request {
 }
 
 fn gen_response(g: &mut Gen) -> Response {
-    match g.usize_in(0, 11) {
+    match g.usize_in(0, 12) {
+        12 => {
+            let (total_chunks, chunk, payload) = gen_chunk(g);
+            Response::Checkpoint {
+                step: g.u64(),
+                root: gen_hash(g),
+                total_chunks,
+                chunk,
+                payload,
+            }
+        }
         0 => Response::Commit(gen_hash(g)),
         1 => Response::Hashes(gen_hashes(g, 200)),
         2 => Response::NodeSeq(gen_hashes(g, 200)),
@@ -307,6 +353,67 @@ fn prop_status_responses_roundtrip_field_exact() {
             Response::Status(back) => assert_eq!(back, status),
             other => panic!("{other:?}"),
         }
+    });
+}
+
+#[test]
+fn prop_checkpoint_transfer_messages_roundtrip_field_exact() {
+    forall("fetch/checkpoint/seed messages survive the wire", 100, |g: &mut Gen| {
+        let (spec, start) = gen_seed_spec(g);
+        let (total_chunks, chunk, payload) = gen_chunk(g);
+        let root = gen_hash(g);
+        let seed = Request::SeedCheckpoint {
+            spec,
+            start,
+            root,
+            total_chunks,
+            chunk,
+            payload: payload.clone(),
+        };
+        let bytes = seed.encode();
+        assert_eq!(bytes.len(), seed.wire_size());
+        match Request::decode(&bytes).unwrap() {
+            Request::SeedCheckpoint {
+                spec: bspec,
+                start: bstart,
+                root: broot,
+                total_chunks: btotal,
+                chunk: bchunk,
+                payload: bpayload,
+            } => {
+                assert_eq!(bspec.steps, spec.steps);
+                assert_eq!(bspec.data_seed, spec.data_seed);
+                assert_eq!(bstart, start);
+                assert_eq!(broot, root);
+                assert_eq!(btotal, total_chunks);
+                assert_eq!(bchunk, chunk);
+                assert_eq!(bpayload, payload);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let ck = Response::Checkpoint {
+            step: g.u64(),
+            root,
+            total_chunks,
+            chunk,
+            payload: payload.clone(),
+        };
+        let bytes = ck.encode();
+        assert_eq!(bytes.len(), ck.wire_size());
+        match Response::decode(&bytes).unwrap() {
+            Response::Checkpoint { payload: bpayload, root: broot, .. } => {
+                assert_eq!(bpayload, payload);
+                assert_eq!(broot, root);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // Hostile variants: oversized declared chunk counts, out-of-range
+        // indices, zero-length payloads — errors, never panics or
+        // allocations.
+        let fetch = Request::FetchCheckpoint { step: 1, chunk: 1 << 62 };
+        assert!(Request::decode(&fetch.encode()).is_err(), "absurd fetch chunk accepted");
     });
 }
 
