@@ -9,8 +9,14 @@
 //!    multiplexed coordinator drives 64 workers with ≤ 8 coordinator
 //!    threads at jobs/sec no worse than the blocking path at pool size 4.
 //!
-//! Emits `BENCH_service.json` so the perf trajectory of the coordinator is
-//! machine-readable run over run.
+//! A third part runs one delegation with span tracing enabled and reports
+//! the per-job submit→settle latency distribution (p50/p90/p99) straight
+//! from the coordinator's span timelines.
+//!
+//! Emits `BENCH_service.json` (throughput + latency percentiles) and
+//! `STATS_snapshot.json` (the live stats snapshot of the traced run) so
+//! the perf trajectory of the coordinator is machine-readable run over
+//! run.
 //!
 //! Run: `cargo bench --bench service_throughput`
 
@@ -280,6 +286,81 @@ fn run_transfer_compare(steps: u64, segments: u64) -> Vec<String> {
     out
 }
 
+/// Nearest-rank percentile over an ascending-sorted slice of seconds.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx]
+}
+
+/// Latency-distribution mode: one delegation with span tracing enabled,
+/// per-job submit→settle latency read back from the span timelines, and
+/// the live stats snapshot written to `STATS_snapshot.json` alongside the
+/// bench JSON.
+fn run_latency_distribution(smoke: bool) -> String {
+    let (workers, jobs, steps) = if smoke { (4usize, 8u64, 4u64) } else { (8, 32, 6) };
+    let k = 2;
+    let pool = WorkerPool::new(
+        (0..workers)
+            .map(|i| {
+                let name = format!("w{i}");
+                PooledWorker::new(&name, spawn(WorkerHost::new(&name, plan_for(i, workers / 4))))
+            })
+            .collect(),
+    );
+    let delegation = Delegation::start(&pool, ServiceConfig::new(k));
+    let registry = delegation.registry().clone();
+    registry.spans().enable();
+
+    let handles: Vec<_> = job_batch(jobs, steps)
+        .into_iter()
+        .map(|spec| delegation.submit(JobRequest::new(spec)))
+        .collect();
+    for h in &handles {
+        h.wait();
+    }
+    let report = delegation.finish();
+    assert_eq!(
+        report.outcomes.iter().filter(|o| o.accepted.is_some()).count(),
+        jobs as usize,
+        "all jobs must resolve"
+    );
+
+    let mut lat: Vec<f64> =
+        registry.spans().job_latencies().iter().map(|d| d.as_secs_f64()).collect();
+    assert_eq!(lat.len(), jobs as usize, "every job must trace a submit→settle pair");
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50, p90, p99) =
+        (percentile(&lat, 50.0), percentile(&lat, 90.0), percentile(&lat, 99.0));
+    println!(
+        "  latency_w{workers}_k{k}    {jobs:>3} jobs  p50 {:>8.2}ms  p90 {:>8.2}ms  p99 {:>8.2}ms  ({} span events)",
+        p50 * 1e3,
+        p90 * 1e3,
+        p99 * 1e3,
+        registry.spans().events().len(),
+    );
+
+    match std::fs::write("STATS_snapshot.json", registry.snapshot().to_json()) {
+        Ok(()) => println!("wrote STATS_snapshot.json"),
+        Err(e) => eprintln!("could not write STATS_snapshot.json: {e}"),
+    }
+
+    format!(
+        "{{\"name\":\"latency_w{}_k{}\",\"mode\":\"event\",\"jobs\":{},\"steps\":{},\
+         \"p50_s\":{:.6},\"p90_s\":{:.6},\"p99_s\":{:.6},\"span_events\":{}}}",
+        workers,
+        k,
+        jobs,
+        steps,
+        p50,
+        p90,
+        p99,
+        registry.spans().events().len(),
+    )
+}
+
 fn main() {
     // `--smoke` (the CI mode) runs one in-process scenario and the
     // smallest TCP fleet only, so the bench is exercised on every push
@@ -302,6 +383,9 @@ fn main() {
     println!("SERVICE: checkpoint state-transfer vs prefix re-training (sharded jobs)");
     let (steps, segments) = if smoke { (16, 4) } else { (48, 6) };
     lines.extend(run_transfer_compare(steps, segments));
+
+    println!("SERVICE: per-job latency distribution (span timelines)");
+    lines.push(run_latency_distribution(smoke));
 
     println!("SERVICE: blocking vs multiplexed dispatch over TCP fleets");
     let sizes: &[usize] = if smoke { &[4] } else { &[4, 16, 64] };

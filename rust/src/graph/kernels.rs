@@ -9,7 +9,7 @@
 
 use crate::tensor::baseline;
 use crate::tensor::math;
-use crate::tensor::profile::HardwareProfile;
+use crate::tensor::profile::{HardwareProfile, KernelTimer};
 use crate::tensor::repops;
 use crate::tensor::Tensor;
 
@@ -67,7 +67,8 @@ fn pow_fixed(base: f32, exp: u64) -> f32 {
 /// On shape mismatches (the executor converts these into protocol-visible
 /// execution failures) and on `Init` ops.
 pub fn run_op(op: &Op, inputs: &[&Tensor], backend: Backend, step_t: u64) -> Vec<Tensor> {
-    match op {
+    let timer = KernelTimer::start();
+    let out = match op {
         Op::Init { .. } => panic!("Init nodes are materialized by the executor"),
         Op::Const { value } => vec![value.clone()],
 
@@ -152,6 +153,24 @@ pub fn run_op(op: &Op, inputs: &[&Tensor], backend: Backend, step_t: u64) -> Vec
         Op::SgdUpdate { lr } => {
             vec![repops::zipmap(inputs[0], inputs[1], |w, g| w - *lr * g)]
         }
+    };
+    timer.stop(op_key(op));
+    out
+}
+
+/// Coarse operator-family key for kernel-timing histograms. Static keys
+/// keep the snapshot key set bounded regardless of program shape.
+fn op_key(op: &Op) -> &'static str {
+    match op {
+        Op::MatMul | Op::BatchMatMul => "repops_matmul_us",
+        Op::Softmax | Op::SoftmaxGrad => "repops_softmax_us",
+        Op::LayerNorm { .. }
+        | Op::LayerNormGrad { .. }
+        | Op::RmsNorm { .. }
+        | Op::RmsNormGrad { .. } => "repops_norm_us",
+        Op::CeLoss | Op::CeGrad => "repops_loss_us",
+        Op::AdamUpdate { .. } | Op::SgdUpdate { .. } => "repops_optim_us",
+        _ => "repops_elementwise_us",
     }
 }
 

@@ -21,6 +21,7 @@ pub mod model;
 pub mod train;
 pub mod verde;
 pub mod net;
+pub mod obs;
 pub mod service;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -21,6 +21,9 @@
 //!                jobs over the wire (optionally `--segments`/`--transfer`
 //!                sharded), poll status, optionally `--cancel N` one of
 //!                them mid-flight
+//!   stats        fetch the live stats snapshot from a serving coordinator
+//!                or worker (`--from host:port`); Prometheus text by
+//!                default, `--json` for the JSON rendering
 //!
 //! Examples:
 //!   verde train --model llama-tiny --steps 32 --batch 2 --seq 8
@@ -32,6 +35,7 @@
 //!   verde coordinator --workers 127.0.0.1:7000,127.0.0.1:7001 --jobs 8 --k 2 --segments 4
 //!   verde coordinator --workers 127.0.0.1:7000,127.0.0.1:7001 --serve 127.0.0.1:9000
 //!   verde client --coordinator 127.0.0.1:9000 --jobs 4 --segments 4 --cancel 1
+//!   verde stats --from 127.0.0.1:9000 --json
 
 use std::net::TcpListener;
 
@@ -373,7 +377,8 @@ fn cmd_coordinator(args: &Args) {
             "coordinator serving the client API on {addr} ({} workers, k={k}, up to {conns} concurrent connection(s))",
             pool.size()
         );
-        let frontend = DelegationFrontend::new("coordinator", delegation.client());
+        let frontend = DelegationFrontend::new("coordinator", delegation.client())
+            .with_stats(delegation.registry().clone());
         let server = spawn_server_threaded(listener, frontend.clone(), Some(conns));
         let frontend = server.join().expect("frontend accept thread");
         // Drain every remotely submitted job before reporting.
@@ -501,6 +506,29 @@ fn cmd_client(args: &Args) {
     println!("all {} jobs settled", ids.len());
 }
 
+fn cmd_stats(args: &Args) {
+    let addr = args
+        .get("from")
+        .or_else(|| args.get("coordinator"))
+        .expect("--from host:port is required (a serving coordinator or a worker)");
+    let mut ep = TcpEndpoint::connect("stats", addr)
+        .unwrap_or_else(|e| panic!("cannot connect to {addr}: {e}"));
+    match ep.call(Request::Stats) {
+        Response::Stats(snap) => {
+            if args.flag("json") {
+                println!("{}", snap.to_json());
+            } else {
+                print!("{}", snap.to_prometheus());
+            }
+        }
+        Response::Refuse(why) => {
+            eprintln!("{addr} refused the stats request: {why}");
+            std::process::exit(1);
+        }
+        other => panic!("unexpected stats response: {other:?}"),
+    }
+}
+
 fn main() {
     let args = Args::parse();
     match args.positional.first().map(String::as_str) {
@@ -511,9 +539,10 @@ fn main() {
         Some("worker") => cmd_worker(&args),
         Some("coordinator") => cmd_coordinator(&args),
         Some("client") => cmd_client(&args),
+        Some("stats") => cmd_stats(&args),
         _ => {
             eprintln!(
-                "usage: verde <train|dispute|tournament|info|worker|coordinator|client> [--model M] [--steps N] ..."
+                "usage: verde <train|dispute|tournament|info|worker|coordinator|client|stats> [--model M] [--steps N] ..."
             );
             eprintln!("see rust/src/main.rs header for examples");
             std::process::exit(2);

@@ -35,10 +35,36 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::obs::{Counter, Histogram, LATENCY_US_BOUNDS};
 use crate::verde::protocol::{Request, Response};
 use crate::verde::wire::{frame_bytes, split_frame};
 
 use super::Endpoint;
+
+/// Cached handles over the process-global registry (`net_mux_*` keys).
+/// The driver thread builds one at start; `MuxConn` holds a frames-out
+/// handle for its submit path. These are process-lifetime totals —
+/// parallel delegations share them.
+struct MuxMetrics {
+    bytes_out: Counter,
+    bytes_in: Counter,
+    frames_in: Counter,
+    deadline_expiries: Counter,
+    poll_us: Histogram,
+}
+
+impl MuxMetrics {
+    fn new() -> MuxMetrics {
+        let g = crate::obs::global();
+        MuxMetrics {
+            bytes_out: g.counter("net_mux_bytes_out"),
+            bytes_in: g.counter("net_mux_bytes_in"),
+            frames_in: g.counter("net_mux_frames_in"),
+            deadline_expiries: g.counter("net_mux_deadline_expiries"),
+            poll_us: g.histogram("net_mux_poll_us", &LATENCY_US_BOUNDS),
+        }
+    }
+}
 
 /// Identifies one multiplexed connection for the lifetime of its [`Mux`].
 pub type ConnId = u64;
@@ -190,6 +216,7 @@ impl Mux {
             next_call_tag: 1 << 63,
             reply_tx,
             reply_rx,
+            frames_out: crate::obs::global().counter("net_mux_frames_out"),
             faulted: false,
         })
     }
@@ -223,6 +250,10 @@ pub struct MuxConn {
     next_call_tag: u64,
     reply_tx: Sender<Completion>,
     reply_rx: Receiver<Completion>,
+    /// Cached global-registry handle: frames enqueued by this handle
+    /// (`net_mux_frames_out`). Submit runs on caller threads, so the
+    /// handle lives here rather than in the driver's [`MuxMetrics`].
+    frames_out: Counter,
     /// Latched when any request on this handle went unanswered — the
     /// coordinator reads this after a job to decide on revocation.
     faulted: bool,
@@ -269,6 +300,7 @@ impl MuxConn {
         }
         conn.send_buf.extend_from_slice(&frame_bytes(token, &payload));
         conn.frames_sent += 1;
+        self.frames_out.inc();
         conn.pending.insert(token, Pending { deadline, reply: reply.clone() });
         drop(st);
         self.shared.wake.notify_all();
@@ -369,7 +401,7 @@ fn fail_conn(conn: &mut Conn, why: &str) {
 }
 
 /// Flush queued outgoing bytes; returns true if any byte moved.
-fn pump_writes(conn: &mut Conn) -> bool {
+fn pump_writes(conn: &mut Conn, m: &MuxMetrics) -> bool {
     let mut progress = false;
     while conn.send_pos < conn.send_buf.len() {
         match conn.stream.write(&conn.send_buf[conn.send_pos..]) {
@@ -380,6 +412,7 @@ fn pump_writes(conn: &mut Conn) -> bool {
             Ok(n) => {
                 conn.send_pos += n;
                 conn.raw_sent += n as u64;
+                m.bytes_out.add(n as u64);
                 progress = true;
             }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
@@ -401,7 +434,7 @@ fn pump_writes(conn: &mut Conn) -> bool {
 /// failure)`; a failure (EOF or read error) is NOT applied here — the
 /// caller must deliver already-buffered frames first, so a peer that
 /// answers and immediately closes does not lose its final response.
-fn pump_reads(conn: &mut Conn, scratch: &mut [u8]) -> (bool, Option<String>) {
+fn pump_reads(conn: &mut Conn, scratch: &mut [u8], m: &MuxMetrics) -> (bool, Option<String>) {
     let mut progress = false;
     let mut failure = None;
     loop {
@@ -413,6 +446,7 @@ fn pump_reads(conn: &mut Conn, scratch: &mut [u8]) -> (bool, Option<String>) {
             Ok(n) => {
                 conn.recv_buf.extend_from_slice(&scratch[..n]);
                 conn.raw_received += n as u64;
+                m.bytes_in.add(n as u64);
                 progress = true;
             }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
@@ -428,12 +462,13 @@ fn pump_reads(conn: &mut Conn, scratch: &mut [u8]) -> (bool, Option<String>) {
 
 /// Carve complete frames out of the reassembly buffer and complete their
 /// pending requests. Frames for expired/unknown tags are stale — dropped.
-fn deliver_frames(conn: &mut Conn) {
+fn deliver_frames(conn: &mut Conn, m: &MuxMetrics) {
     loop {
         match split_frame(&conn.recv_buf) {
             Ok(Some((tag, payload, consumed))) => {
                 conn.recv_buf.drain(..consumed);
                 conn.frames_received += 1;
+                m.frames_in.inc();
                 if let Some(p) = conn.pending.remove(&tag) {
                     let resp = Response::decode(&payload).unwrap_or_else(|e| {
                         Response::Refuse(format!("bad frame from {}: {e}", conn.name))
@@ -457,7 +492,7 @@ fn deliver_frames(conn: &mut Conn) {
 /// Refuse every pending request whose deadline has passed. The connection
 /// stays registered — the peer may still be healthy for later work; policy
 /// (revocation) belongs to the coordinator.
-fn expire_deadlines(conn: &mut Conn, now: Instant) {
+fn expire_deadlines(conn: &mut Conn, now: Instant, m: &MuxMetrics) {
     let expired: Vec<u64> = conn
         .pending
         .iter()
@@ -466,6 +501,7 @@ fn expire_deadlines(conn: &mut Conn, now: Instant) {
         .collect();
     for tag in expired {
         if let Some(p) = conn.pending.remove(&tag) {
+            m.deadline_expiries.inc();
             let _ = p.reply.send(refused(
                 tag,
                 CompletionKind::DeadlineExpired,
@@ -480,6 +516,7 @@ fn expire_deadlines(conn: &mut Conn, now: Instant) {
 /// fire deadlines, and sleep only when nothing moved.
 fn drive(shared: &Shared) {
     let mut scratch = vec![0u8; 64 * 1024];
+    let metrics = MuxMetrics::new();
     loop {
         let mut st = shared.state.lock().unwrap();
         if st.shutdown {
@@ -496,13 +533,13 @@ fn drive(shared: &Shared) {
             if conn.dead.is_some() {
                 continue;
             }
-            progress |= pump_writes(conn);
+            progress |= pump_writes(conn, &metrics);
             if conn.dead.is_none() {
-                let (read_progress, failure) = pump_reads(conn, &mut scratch);
+                let (read_progress, failure) = pump_reads(conn, &mut scratch, &metrics);
                 progress |= read_progress;
                 // Complete frames first: an answer that arrived in the same
                 // pass as the EOF must reach its caller, not a refusal.
-                deliver_frames(conn);
+                deliver_frames(conn, &metrics);
                 if let Some(why) = failure {
                     if conn.dead.is_none() {
                         if conn.pending.is_empty() {
@@ -514,7 +551,7 @@ fn drive(shared: &Shared) {
                 }
             }
             if conn.dead.is_none() {
-                expire_deadlines(conn, now);
+                expire_deadlines(conn, now, &metrics);
                 outstanding |= !conn.pending.is_empty() || conn.send_pos < conn.send_buf.len();
                 for p in conn.pending.values() {
                     if let Some(d) = p.deadline {
@@ -522,6 +559,11 @@ fn drive(shared: &Shared) {
                     }
                 }
             }
+        }
+        if progress {
+            // Time only productive passes: idle polls at the readiness
+            // cadence would swamp the histogram with near-zero samples.
+            metrics.poll_us.observe_micros(now.elapsed());
         }
         if !progress {
             if outstanding {

@@ -12,6 +12,7 @@ use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::obs::Counter;
 use crate::util::metrics::Counters;
 use crate::verde::protocol::{Request, Response};
 use crate::verde::wire::{read_frame, write_frame, WireError};
@@ -28,12 +29,31 @@ struct CountingStream {
     inner: TcpStream,
     sent: u64,
     received: u64,
+    /// Cached process-global totals (`net_tcp_bytes_out` /
+    /// `net_tcp_bytes_in`) — registered once per stream, bumped alongside
+    /// the per-stream counters.
+    g_sent: Counter,
+    g_received: Counter,
+}
+
+impl CountingStream {
+    fn new(inner: TcpStream) -> CountingStream {
+        let g = crate::obs::global();
+        CountingStream {
+            inner,
+            sent: 0,
+            received: 0,
+            g_sent: g.counter("net_tcp_bytes_out"),
+            g_received: g.counter("net_tcp_bytes_in"),
+        }
+    }
 }
 
 impl Read for CountingStream {
     fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
         let n = self.inner.read(buf)?;
         self.received += n as u64;
+        self.g_received.add(n as u64);
         Ok(n)
     }
 }
@@ -42,6 +62,7 @@ impl Write for CountingStream {
     fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
         let n = self.inner.write(buf)?;
         self.sent += n as u64;
+        self.g_sent.add(n as u64);
         Ok(n)
     }
 
@@ -71,7 +92,7 @@ impl TcpEndpoint {
         stream.set_nodelay(true).ok();
         Ok(TcpEndpoint {
             name: name.to_string(),
-            stream: CountingStream { inner: stream, sent: 0, received: 0 },
+            stream: CountingStream::new(stream),
             next_tag: 1,
             counters: Counters::new(),
         })
@@ -158,8 +179,9 @@ pub fn serve_connection<E: Endpoint>(
     endpoint: &mut E,
 ) -> Result<ServeStats, WireError> {
     stream.set_nodelay(true).ok();
-    let mut stream = CountingStream { inner: stream, sent: 0, received: 0 };
+    let mut stream = CountingStream::new(stream);
     let mut stats = ServeStats::default();
+    let served = crate::obs::global().counter("net_tcp_requests_served");
     loop {
         let (tag, frame) = match read_frame(&mut stream)? {
             Some(f) => f,
@@ -180,6 +202,7 @@ pub fn serve_connection<E: Endpoint>(
         let payload = resp.encode();
         stats.bytes_out += payload.len() as u64;
         stats.requests += 1;
+        served.inc();
         // Echo the request's correlation tag so multiplexing clients can
         // match this answer to the frame that asked for it.
         write_frame(&mut stream, tag, &payload).map_err(|e| WireError::Io(e.to_string()))?;

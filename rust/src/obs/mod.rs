@@ -1,0 +1,86 @@
+//! Observability: a dependency-free metrics registry, a per-job span
+//! tracer, and renderers for a live stats plane.
+//!
+//! Three pieces, one flow:
+//!
+//! * [`Registry`] — named atomic **counters**, **gauges**, and
+//!   fixed-bucket **histograms**. Handles are registered once and cached;
+//!   recording is lock-free relaxed atomics, cheap enough for the
+//!   coordinator tick, the mux drive loop, and the training step.
+//! * [`SpanLog`] (one per registry) — per-job lifecycle **span events**
+//!   (submit → queue → lease → dispatch → fetch/verify/seed → verdict →
+//!   settle) on a monotonic clock, gated off by default behind one atomic
+//!   load.
+//! * [`Snapshot`] — the canonical point-in-time view. It is what
+//!   `Response::Stats` carries over the wire, what `verde stats` prints,
+//!   and what the JSON/Prometheus renderers consume.
+//!
+//! Two registry tiers exist on purpose:
+//!
+//! * **Per-delegation** — `service::Delegation` owns a private registry
+//!   (`coord_*` keys) whose totals reconcile *exactly* with its
+//!   `ServiceReport`; tests assert equality.
+//! * **Process-global** ([`global`]) — cross-cutting layers with no
+//!   single owner (mux driver, TCP framing, disputes, trainer, RepOps
+//!   kernels) accumulate monotonic totals here. Parallel tests share this
+//!   registry, so its values are monotonic evidence, not exact
+//!   per-run accounting.
+//!
+//! The key catalog is documented in `rust/README.md` and versioned by
+//! [`STATS_VERSION`].
+
+pub mod registry;
+pub mod render;
+pub mod span;
+
+pub use registry::{Counter, Gauge, Histogram, Registry, COUNT_BOUNDS, LATENCY_US_BOUNDS};
+pub use render::{HistogramSnapshot, Snapshot};
+pub use span::{SpanEvent, SpanLog, Stage};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Version of the stats key set carried in every [`Snapshot`]. Bump on
+/// rename or semantic change of an existing key; additions don't bump.
+pub const STATS_VERSION: u64 = 1;
+
+/// The process-global registry for cross-cutting layers. Created on first
+/// use; never reset (its counters are process-lifetime monotonic totals).
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+static KERNEL_TIMING: AtomicBool = AtomicBool::new(false);
+
+/// Opt into per-kernel timing (`repops_*` histograms fed from
+/// `tensor::profile::KernelTimer`). Off by default: kernel dispatch is
+/// the innermost hot loop, and two `Instant::now()` calls per operator
+/// are only worth paying when someone is looking.
+pub fn enable_kernel_timing() {
+    KERNEL_TIMING.store(true, Ordering::Relaxed);
+}
+
+/// Is per-kernel timing on? One relaxed load; kernels check this first.
+pub fn kernel_timing_enabled() -> bool {
+    KERNEL_TIMING.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_registry_is_one_shared_instance() {
+        global().counter("obs_selftest").add(2);
+        assert!(global().counter("obs_selftest").get() >= 2, "other tests may also bump it");
+    }
+
+    #[test]
+    fn kernel_timing_defaults_off_until_enabled() {
+        // Note: other tests in this binary may enable it first; only the
+        // transition to `true` is asserted.
+        enable_kernel_timing();
+        assert!(kernel_timing_enabled());
+    }
+}

@@ -1,0 +1,321 @@
+//! The metrics registry: named atomic counters, gauges, and fixed-bucket
+//! histograms behind one cheaply clonable handle.
+//!
+//! The design splits registration from recording. Registration
+//! ([`Registry::counter`] / [`Registry::gauge`] / [`Registry::histogram`])
+//! takes a short-lived `Mutex` over a name → cell map and hands back a
+//! handle wrapping the `Arc<AtomicU64>` (or histogram core) directly. Hot
+//! paths cache the handle once and then record with plain relaxed atomic
+//! ops — no lock, no allocation, no map lookup per event. That is what
+//! keeps instrumentation inside the coordinator tick, the mux drive loop,
+//! and the training step affordable.
+//!
+//! [`Registry::snapshot`] materializes a point-in-time [`Snapshot`] of
+//! every registered instrument (zero-valued instruments included, so an
+//! idle service renders zeros rather than an empty document — the same
+//! guard `ServiceReport::to_json` gives an empty report).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::render::{HistogramSnapshot, Snapshot};
+use super::span::SpanLog;
+
+/// A monotonically increasing counter. Cloning shares the cell.
+#[derive(Clone)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, delta: u64) {
+        self.cell.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins gauge (queue depths, pool occupancy). Values are
+/// non-negative by construction — every instrumented quantity is a count.
+#[derive(Clone)]
+pub struct Gauge {
+    cell: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    pub fn set(&self, value: u64) {
+        self.cell.store(value, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// Shared storage of one histogram: `bounds.len() + 1` buckets (the last
+/// is the overflow bucket), plus sum and count for mean recovery.
+pub(crate) struct HistogramCore {
+    pub(crate) bounds: Vec<u64>,
+    pub(crate) buckets: Vec<AtomicU64>,
+    pub(crate) sum: AtomicU64,
+    pub(crate) count: AtomicU64,
+}
+
+impl HistogramCore {
+    fn new(bounds: &[u64]) -> HistogramCore {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        HistogramCore {
+            bounds: bounds.to_vec(),
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    fn observe(&self, value: u64) {
+        // Linear scan: instrument bucket counts are small (≤ ~12) and the
+        // scan is branch-predictable, beating a binary search at this size.
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| value <= b)
+            .unwrap_or(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            bounds: self.bounds.clone(),
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A fixed-bucket histogram handle. Cloning shares the core.
+#[derive(Clone)]
+pub struct Histogram {
+    core: Arc<HistogramCore>,
+}
+
+impl Histogram {
+    pub fn observe(&self, value: u64) {
+        self.core.observe(value);
+    }
+
+    /// Record a duration in whole microseconds (the unit every `*_us`
+    /// histogram in the catalog uses).
+    pub fn observe_micros(&self, d: std::time::Duration) {
+        self.observe(d.as_micros().min(u128::from(u64::MAX)) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.core.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.core.sum.load(Ordering::Relaxed)
+    }
+}
+
+/// Default bucket bounds for microsecond-latency histograms: 10 µs … 10 s
+/// in half-decade steps.
+pub const LATENCY_US_BOUNDS: [u64; 12] = [
+    10, 50, 100, 500, 1_000, 5_000, 10_000, 50_000, 100_000, 500_000, 1_000_000, 10_000_000,
+];
+
+/// Default bucket bounds for small-count histograms (events per tick).
+pub const COUNT_BOUNDS: [u64; 8] = [0, 1, 2, 4, 8, 16, 64, 256];
+
+struct Inner {
+    epoch: Instant,
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    histograms: Mutex<BTreeMap<String, Arc<HistogramCore>>>,
+    spans: SpanLog,
+}
+
+/// The registry handle. Cloning is an `Arc` bump; every clone addresses
+/// the same instruments and span log.
+#[derive(Clone)]
+pub struct Registry {
+    inner: Arc<Inner>,
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        let epoch = Instant::now();
+        Registry {
+            inner: Arc::new(Inner {
+                epoch,
+                counters: Mutex::new(BTreeMap::new()),
+                gauges: Mutex::new(BTreeMap::new()),
+                histograms: Mutex::new(BTreeMap::new()),
+                spans: SpanLog::new(epoch),
+            }),
+        }
+    }
+
+    /// The instant all span timestamps are measured from.
+    pub fn epoch(&self) -> Instant {
+        self.inner.epoch
+    }
+
+    /// Register (or look up) a counter. Call once and cache the handle;
+    /// recording through the handle is lock-free.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut map = self.inner.counters.lock().unwrap();
+        let cell = map.entry(name.to_string()).or_default();
+        Counter { cell: Arc::clone(cell) }
+    }
+
+    /// Register (or look up) a gauge.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut map = self.inner.gauges.lock().unwrap();
+        let cell = map.entry(name.to_string()).or_default();
+        Gauge { cell: Arc::clone(cell) }
+    }
+
+    /// Register (or look up) a histogram with the given ascending bucket
+    /// bounds. The first registration fixes the bounds; later callers get
+    /// the existing core regardless of the bounds they pass.
+    pub fn histogram(&self, name: &str, bounds: &[u64]) -> Histogram {
+        let mut map = self.inner.histograms.lock().unwrap();
+        let core = map
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(HistogramCore::new(bounds)));
+        Histogram { core: Arc::clone(core) }
+    }
+
+    /// The per-job lifecycle span log attached to this registry.
+    pub fn spans(&self) -> &SpanLog {
+        &self.inner.spans
+    }
+
+    /// Point-in-time snapshot of every registered instrument, keys sorted.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = self
+            .inner
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let gauges = self
+            .inner
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let histograms = self
+            .inner
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snapshot()))
+            .collect();
+        Snapshot { version: super::STATS_VERSION, counters, gauges, histograms }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_handles_share_one_cell() {
+        let reg = Registry::new();
+        let a = reg.counter("hits");
+        let b = reg.counter("hits");
+        a.inc();
+        b.add(4);
+        assert_eq!(a.get(), 5);
+        assert_eq!(reg.counter("hits").get(), 5);
+        assert_eq!(reg.counter("other").get(), 0, "registration alone reads zero");
+    }
+
+    #[test]
+    fn concurrent_increments_do_not_lose_updates() {
+        let reg = Registry::new();
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let c = reg.counter("races");
+                let h = reg.histogram("lat", &LATENCY_US_BOUNDS);
+                std::thread::spawn(move || {
+                    for i in 0..1000 {
+                        c.inc();
+                        h.observe(i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(reg.counter("races").get(), 8_000);
+        let snap = reg.snapshot();
+        let hist = &snap.histograms[0].1;
+        assert_eq!(hist.count, 8_000);
+        assert_eq!(hist.buckets.iter().sum::<u64>(), 8_000, "every observation lands in a bucket");
+    }
+
+    #[test]
+    fn histogram_bucket_edges_are_inclusive_upper_bounds() {
+        let reg = Registry::new();
+        let h = reg.histogram("edges", &[10, 100]);
+        h.observe(0); // ≤ 10
+        h.observe(10); // ≤ 10 (edge is inclusive, Prometheus `le` semantics)
+        h.observe(11); // ≤ 100
+        h.observe(100); // ≤ 100
+        h.observe(101); // overflow
+        h.observe(u64::MAX); // overflow
+        let snap = reg.snapshot();
+        let hist = &snap.histograms[0].1;
+        assert_eq!(hist.bounds, vec![10, 100]);
+        assert_eq!(hist.buckets, vec![2, 2, 2]);
+        assert_eq!(hist.count, 6);
+        assert_eq!(h.count(), 6);
+    }
+
+    #[test]
+    fn gauge_is_last_write_wins() {
+        let reg = Registry::new();
+        let g = reg.gauge("depth");
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+        assert_eq!(reg.snapshot().gauges, vec![("depth".to_string(), 3)]);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_includes_zero_instruments() {
+        let reg = Registry::new();
+        reg.counter("z_last");
+        reg.counter("a_first").inc();
+        let snap = reg.snapshot();
+        let names: Vec<&str> = snap.counters.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(names, vec!["a_first", "z_last"]);
+        assert_eq!(snap.counters[1].1, 0, "registered-but-untouched renders as zero");
+    }
+}

@@ -1,0 +1,185 @@
+//! Canonical stats snapshot and its two renderings (JSON, Prometheus
+//! text).
+//!
+//! [`Snapshot`] is the single source of truth the whole stats plane moves
+//! around: [`Registry::snapshot`](super::Registry::snapshot) produces it,
+//! `Response::Stats` carries it over the wire, `verde stats` renders it.
+//! Key names are part of the **versioned public surface** — see the
+//! metric catalog in `rust/README.md`; [`STATS_VERSION`](super::STATS_VERSION)
+//! bumps whenever a key is renamed or its meaning changes (adding keys is
+//! backward compatible).
+
+use std::fmt::Write as _;
+
+/// Snapshot of one histogram: `buckets.len() == bounds.len() + 1` (the
+/// final bucket counts observations above the last bound).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub bounds: Vec<u64>,
+    pub buckets: Vec<u64>,
+    pub sum: u64,
+    pub count: u64,
+}
+
+/// Point-in-time view of a registry: sorted `(name, value)` pairs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Snapshot {
+    /// Schema version of the key set ([`super::STATS_VERSION`]).
+    pub version: u64,
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, u64)>,
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
+impl Snapshot {
+    /// The snapshot of a registry nothing has touched: current version,
+    /// no instruments. Renders as zeros/empty sections, never NaN —
+    /// mirroring the empty-`ServiceReport` guards.
+    pub fn empty() -> Snapshot {
+        Snapshot {
+            version: super::STATS_VERSION,
+            counters: Vec::new(),
+            gauges: Vec::new(),
+            histograms: Vec::new(),
+        }
+    }
+
+    /// Value of a counter, `0` when absent (absent and never-incremented
+    /// are indistinguishable by design).
+    pub fn counter(&self, name: &str) -> u64 {
+        lookup(&self.counters, name).unwrap_or(0)
+    }
+
+    /// Value of a gauge, `0` when absent.
+    pub fn gauge(&self, name: &str) -> u64 {
+        lookup(&self.gauges, name).unwrap_or(0)
+    }
+
+    /// A histogram by name.
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms.iter().find(|(k, _)| k == name).map(|(_, h)| h)
+    }
+
+    /// Stable JSON rendering (sorted keys inherited from the registry's
+    /// BTreeMaps):
+    /// `{"stats_version":1,"counters":{..},"gauges":{..},"histograms":{..}}`.
+    pub fn to_json(&self) -> String {
+        let mut s = format!("{{\"stats_version\":{}", self.version);
+        s.push_str(",\"counters\":{");
+        for (i, (k, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "\"{k}\":{v}");
+        }
+        s.push_str("},\"gauges\":{");
+        for (i, (k, v)) in self.gauges.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "\"{k}\":{v}");
+        }
+        s.push_str("},\"histograms\":{");
+        for (i, (k, h)) in self.histograms.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "\"{k}\":{{\"bounds\":{:?},\"buckets\":{:?},\"sum\":{},\"count\":{}}}",
+                h.bounds, h.buckets, h.sum, h.count);
+        }
+        s.push_str("}}");
+        s
+    }
+
+    /// Prometheus text exposition: counters as `TYPE counter`, gauges as
+    /// `TYPE gauge`, histograms as cumulative `_bucket{le=..}` series plus
+    /// `_sum` / `_count`.
+    pub fn to_prometheus(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            let _ = writeln!(s, "# TYPE {k} counter\n{k} {v}");
+        }
+        for (k, v) in &self.gauges {
+            let _ = writeln!(s, "# TYPE {k} gauge\n{k} {v}");
+        }
+        for (k, h) in &self.histograms {
+            let _ = writeln!(s, "# TYPE {k} histogram");
+            let mut cum = 0u64;
+            for (i, b) in h.bounds.iter().enumerate() {
+                cum += h.buckets[i];
+                let _ = writeln!(s, "{k}_bucket{{le=\"{b}\"}} {cum}");
+            }
+            cum += h.buckets.last().copied().unwrap_or(0);
+            let _ = writeln!(s, "{k}_bucket{{le=\"+Inf\"}} {cum}");
+            let _ = writeln!(s, "{k}_sum {}\n{k}_count {}", h.sum, h.count);
+        }
+        s
+    }
+}
+
+fn lookup(pairs: &[(String, u64)], name: &str) -> Option<u64> {
+    pairs.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Registry;
+
+    #[test]
+    fn empty_snapshot_renders_zeros_not_nan() {
+        let s = Snapshot::empty();
+        assert_eq!(s.counter("anything"), 0);
+        assert_eq!(s.gauge("anything"), 0);
+        assert_eq!(
+            s.to_json(),
+            format!(
+                "{{\"stats_version\":{},\"counters\":{{}},\"gauges\":{{}},\"histograms\":{{}}}}",
+                crate::obs::STATS_VERSION
+            )
+        );
+        assert_eq!(s.to_prometheus(), "");
+    }
+
+    #[test]
+    fn json_rendering_is_stable_and_sorted() {
+        let reg = Registry::new();
+        reg.counter("zz").add(3);
+        reg.counter("aa").add(1);
+        reg.gauge("depth").set(2);
+        let json = reg.snapshot().to_json();
+        assert!(json.starts_with(&format!("{{\"stats_version\":{}", crate::obs::STATS_VERSION)));
+        let aa = json.find("\"aa\":1").expect("aa rendered");
+        let zz = json.find("\"zz\":3").expect("zz rendered");
+        assert!(aa < zz, "keys sorted: {json}");
+        assert!(json.contains("\"gauges\":{\"depth\":2}"));
+    }
+
+    #[test]
+    fn prometheus_buckets_are_cumulative_and_end_at_inf() {
+        let reg = Registry::new();
+        let h = reg.histogram("lat_us", &[10, 100]);
+        h.observe(5);
+        h.observe(50);
+        h.observe(5_000);
+        let text = reg.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE lat_us histogram"));
+        assert!(text.contains("lat_us_bucket{le=\"10\"} 1"));
+        assert!(text.contains("lat_us_bucket{le=\"100\"} 2"));
+        assert!(text.contains("lat_us_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("lat_us_sum 5055"));
+        assert!(text.contains("lat_us_count 3"));
+    }
+
+    #[test]
+    fn snapshot_accessors_find_instruments() {
+        let reg = Registry::new();
+        reg.counter("c").add(9);
+        reg.histogram("h", &[1]).observe(2);
+        let s = reg.snapshot();
+        assert_eq!(s.counter("c"), 9);
+        assert_eq!(s.counter("missing"), 0);
+        let h = s.histogram("h").expect("histogram present");
+        assert_eq!(h.buckets, vec![0, 1]);
+    }
+}

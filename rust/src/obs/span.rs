@@ -1,0 +1,184 @@
+//! Per-job lifecycle tracing: structured span events on a monotonic clock.
+//!
+//! A [`SpanLog`] records the coordinator-side timeline of every job —
+//! submit → queue → lease → dispatch → verdict → checkpoint
+//! fetch/verify/seed → settle — as [`SpanEvent`]s stamped with the
+//! duration since the owning registry's epoch plus job/segment/worker
+//! identity. Tracing is **off by default**: [`SpanLog::trace`] is a single
+//! relaxed atomic load when disabled, so instrumented hot paths cost
+//! nothing measurable until a caller opts in with [`SpanLog::enable`]
+//! (tests, the latency bench, `verde coordinator --trace`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One stage of the job lifecycle. Stages are ordered roughly as a
+/// segment experiences them; `Settle` with `seg: None` closes the job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Job accepted by the coordinator (one per job).
+    Submit,
+    /// Segment pushed onto the lease queue (initial placement *and* every
+    /// requeue — queue events per job ≥ segments per job).
+    Queue,
+    /// A worker group leased for a segment (one event per dispatch).
+    Lease,
+    /// Segment handed to one of its leased workers (k events per
+    /// dispatch, each carrying the worker's name).
+    Dispatch,
+    /// Verified checkpoint chunks fetched from a segment winner.
+    Fetch,
+    /// Fetched state Merkle-verified against the accepted commitment.
+    Verify,
+    /// Segment dispatched with a verified predecessor state (transfer
+    /// pipeline), not trained from genesis.
+    Seed,
+    /// Segment verdict reached: a commitment was accepted.
+    Verdict,
+    /// Segment recorded (`seg: Some`) or whole job finished (`seg: None`).
+    Settle,
+}
+
+impl Stage {
+    /// Stable lowercase label used by renderers and the bench.
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Submit => "submit",
+            Stage::Queue => "queue",
+            Stage::Lease => "lease",
+            Stage::Dispatch => "dispatch",
+            Stage::Fetch => "fetch",
+            Stage::Verify => "verify",
+            Stage::Seed => "seed",
+            Stage::Verdict => "verdict",
+            Stage::Settle => "settle",
+        }
+    }
+}
+
+/// One recorded lifecycle event.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    /// Monotonic time since the registry epoch.
+    pub at: Duration,
+    pub job_id: u64,
+    /// Segment index within the job; `None` for job-level events.
+    pub seg: Option<u64>,
+    pub stage: Stage,
+    /// Worker name, where one worker is the subject (lease, fetch).
+    pub worker: Option<String>,
+}
+
+/// An append-only, gated event log. All methods take `&self`; the log is
+/// shared by clone of the owning [`Registry`](super::Registry).
+pub struct SpanLog {
+    enabled: AtomicBool,
+    epoch: Instant,
+    events: Mutex<Vec<SpanEvent>>,
+}
+
+impl SpanLog {
+    pub(crate) fn new(epoch: Instant) -> SpanLog {
+        SpanLog { enabled: AtomicBool::new(false), epoch, events: Mutex::new(Vec::new()) }
+    }
+
+    /// Turn tracing on (idempotent). Events recorded before enabling are
+    /// simply absent — there is no replay.
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Record one event. A no-op (one relaxed load) while disabled.
+    pub fn trace(&self, job_id: u64, seg: Option<u64>, stage: Stage, worker: Option<&str>) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let at = self.epoch.elapsed();
+        let mut events = self.events.lock().unwrap();
+        events.push(SpanEvent { at, job_id, seg, stage, worker: map(worker) });
+    }
+
+    /// Copy of the full event log, in record order.
+    pub fn events(&self) -> Vec<SpanEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Number of recorded events matching `stage`.
+    pub fn count(&self, stage: Stage) -> usize {
+        self.events.lock().unwrap().iter().filter(|e| e.stage == stage).count()
+    }
+
+    /// Per-job submit→settle latency: for every job with both a `Submit`
+    /// and a job-level `Settle` (`seg: None`), the elapsed duration
+    /// between them, in job-settle order. The latency bench feeds its
+    /// percentile table from this.
+    pub fn job_latencies(&self) -> Vec<Duration> {
+        let events = self.events.lock().unwrap();
+        let mut out = Vec::new();
+        for e in events.iter() {
+            if e.stage == Stage::Settle && e.seg.is_none() {
+                let submit = events
+                    .iter()
+                    .find(|s| s.stage == Stage::Submit && s.job_id == e.job_id)
+                    .map(|s| s.at);
+                if let Some(t0) = submit {
+                    out.push(e.at.saturating_sub(t0));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn map(worker: Option<&str>) -> Option<String> {
+    worker.map(str::to_string)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log() -> SpanLog {
+        SpanLog::new(Instant::now())
+    }
+
+    #[test]
+    fn disabled_log_records_nothing() {
+        let l = log();
+        l.trace(1, None, Stage::Submit, None);
+        assert!(!l.enabled());
+        assert!(l.events().is_empty());
+    }
+
+    #[test]
+    fn events_carry_identity_and_monotonic_time() {
+        let l = log();
+        l.enable();
+        l.trace(7, None, Stage::Submit, None);
+        l.trace(7, Some(0), Stage::Queue, None);
+        l.trace(7, Some(0), Stage::Lease, Some("w0"));
+        let ev = l.events();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].job_id, 7);
+        assert_eq!(ev[2].worker.as_deref(), Some("w0"));
+        assert!(ev[0].at <= ev[1].at && ev[1].at <= ev[2].at);
+        assert_eq!(l.count(Stage::Queue), 1);
+    }
+
+    #[test]
+    fn job_latency_pairs_submit_with_job_level_settle() {
+        let l = log();
+        l.enable();
+        l.trace(1, None, Stage::Submit, None);
+        l.trace(1, Some(0), Stage::Settle, None); // segment settle: not a job end
+        assert!(l.job_latencies().is_empty());
+        l.trace(1, None, Stage::Settle, None);
+        l.trace(2, None, Stage::Settle, None); // settle without submit: skipped
+        assert_eq!(l.job_latencies().len(), 1);
+    }
+}

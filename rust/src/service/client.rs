@@ -55,6 +55,7 @@ use std::time::Instant;
 
 use crate::net::mux::Completion;
 use crate::net::Endpoint;
+use crate::obs::{Registry, Snapshot};
 use crate::train::JobSpec;
 use crate::verde::protocol::{
     BackendRequirement, JobPolicy, RemoteStatus, Request, Response,
@@ -315,6 +316,7 @@ pub struct Delegation {
     t_start: Instant,
     event_join: Option<JoinHandle<LoopReport>>,
     resolver_joins: Vec<JoinHandle<()>>,
+    registry: Registry,
 }
 
 impl Delegation {
@@ -338,7 +340,23 @@ impl Delegation {
             t_start: Instant::now(),
             event_join: Some(core.event_join),
             resolver_joins: core.resolver_joins,
+            registry: core.registry,
         }
+    }
+
+    /// The delegation's private stats registry (`coord_*` keys). Its
+    /// counter totals reconcile exactly with the final [`ServiceReport`];
+    /// call `registry().spans().enable()` before submitting to record
+    /// per-job lifecycle span events.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// A live point-in-time stats snapshot (what `Response::Stats`
+    /// carries and `verde stats` renders). Safe to call any time; an
+    /// idle delegation reports zeros, never NaN.
+    pub fn stats(&self) -> Snapshot {
+        self.registry.snapshot()
     }
 
     /// A cheap submission handle (cloneable, shareable across threads).
@@ -428,6 +446,9 @@ pub struct DelegationFrontend {
     name: String,
     client: Client,
     state: Arc<Mutex<FrontendState>>,
+    /// The delegation's registry, when the frontend serves the stats
+    /// plane ([`Request::Stats`]); `None` refuses stats queries.
+    registry: Option<Registry>,
 }
 
 impl DelegationFrontend {
@@ -440,7 +461,15 @@ impl DelegationFrontend {
                 finished: HashMap::new(),
                 finished_order: VecDeque::new(),
             })),
+            registry: None,
         }
+    }
+
+    /// Serve [`Request::Stats`] from this registry (pass a clone of
+    /// [`Delegation::registry`]); without it stats queries are refused.
+    pub fn with_stats(mut self, registry: Registry) -> DelegationFrontend {
+        self.registry = Some(registry);
+        self
     }
 
     /// Handles registered by remote submissions (on any connection sharing
@@ -510,6 +539,10 @@ impl Endpoint for DelegationFrontend {
                 let handle = self.state.lock().unwrap().lookup(job_id).cloned();
                 Response::Cancelled(handle.is_some_and(|h| h.cancel()))
             }
+            Request::Stats => match &self.registry {
+                Some(reg) => Response::Stats(reg.snapshot()),
+                None => Response::Refuse(format!("{}: stats plane not enabled", self.name)),
+            },
             Request::Ping => Response::Pong,
             Request::Shutdown => Response::Bye,
             other => Response::Refuse(format!(

@@ -56,6 +56,7 @@ use std::time::{Duration, Instant};
 use crate::hash::Hash;
 use crate::net::mux::{Completion, CompletionKind};
 use crate::net::{Endpoint, Metered};
+use crate::obs::{Counter, Gauge, Histogram, Registry, Stage, COUNT_BOUNDS, LATENCY_US_BOUNDS};
 use crate::train::checkpoint::{chunk_count, chunk_slice, decode_state, split_points};
 use crate::train::JobSpec;
 use crate::verde::protocol::{JobPolicy, Request, Response};
@@ -549,6 +550,9 @@ pub(crate) struct ResolveTask {
     requests: u64,
     leased_seq: u64,
     workers: Vec<PooledWorker>,
+    /// The delegation's registry: resolvers trace fetch/verify span
+    /// events through it (recording is a relaxed load when disabled).
+    registry: Registry,
 }
 
 pub(crate) struct Resolved {
@@ -663,6 +667,7 @@ fn resolve(task: ResolveTask) -> Resolved {
         mut requests,
         leased_seq,
         mut workers,
+        registry,
     } = task;
     let names: Vec<String> = workers.iter().map(|w| w.name.clone()).collect();
     let mut metered: Vec<Metered<&mut PooledWorker>> =
@@ -679,6 +684,7 @@ fn resolve(task: ResolveTask) -> Resolved {
     let mut rejected = Vec::new();
     let mut transfer_bytes = 0u64;
     if want_state {
+        registry.spans().trace(job_id, Some(seg_idx as u64), Stage::Fetch, None);
         // The winning group: everyone whose (cached) final claim equals
         // the accepted hash, winner first so the fetch tries it first.
         let mut group: Vec<usize> = Vec::new();
@@ -694,6 +700,9 @@ fn resolve(task: ResolveTask) -> Resolved {
         let (s, r) = fetch_verified_state(&mut metered, &group, end);
         let after: u64 = metered.iter().map(|m| m.bytes_sent() + m.bytes_received()).sum();
         transfer_bytes = after - before;
+        if s.is_some() {
+            registry.spans().trace(job_id, Some(seg_idx as u64), Stage::Verify, None);
+        }
         seed = s;
         rejected = r;
     }
@@ -724,6 +733,88 @@ fn resolve(task: ResolveTask) -> Resolved {
     Resolved { job_id, outcome, workers, seed, rejected }
 }
 
+/// Cached handles for the delegation's `coord_*` instruments, registered
+/// once at core start so the event loop records through relaxed atomics
+/// only. The reconciliation counters (disputes, bytes, transfer, …) are
+/// bumped in `record_segment` from the settling [`SegmentOutcome`], which
+/// makes their totals equal the final [`ServiceReport`]'s by
+/// construction — the e2e stats tests assert exact equality.
+pub(crate) struct CoordMetrics {
+    pub(crate) registry: Registry,
+    jobs_submitted: Counter,
+    jobs_resolved: Counter,
+    jobs_cancelled: Counter,
+    segments_settled: Counter,
+    requeues: Counter,
+    revoked: Counter,
+    disciplined: Counter,
+    disputes: Counter,
+    eliminated: Counter,
+    steps_trained: Counter,
+    seeded_segments: Counter,
+    transfer_bytes: Counter,
+    uploads_rejected: Counter,
+    bytes: Counter,
+    requests: Counter,
+    queue_depth: Gauge,
+    active_segments: Gauge,
+    resolving: Gauge,
+    pool_idle: Gauge,
+    pool_suspended: Gauge,
+    pool_size: Gauge,
+    tick_us: Histogram,
+    completions_per_tick: Histogram,
+}
+
+impl CoordMetrics {
+    fn new(registry: Registry) -> CoordMetrics {
+        CoordMetrics {
+            jobs_submitted: registry.counter("coord_jobs_submitted"),
+            jobs_resolved: registry.counter("coord_jobs_resolved"),
+            jobs_cancelled: registry.counter("coord_jobs_cancelled"),
+            segments_settled: registry.counter("coord_segments_settled"),
+            requeues: registry.counter("coord_requeues"),
+            revoked: registry.counter("coord_revoked"),
+            disciplined: registry.counter("coord_leases_disciplined"),
+            disputes: registry.counter("coord_disputes"),
+            eliminated: registry.counter("coord_eliminated"),
+            steps_trained: registry.counter("coord_steps_trained"),
+            seeded_segments: registry.counter("coord_seeded_segments"),
+            transfer_bytes: registry.counter("coord_transfer_bytes"),
+            uploads_rejected: registry.counter("coord_uploads_rejected"),
+            bytes: registry.counter("coord_bytes"),
+            requests: registry.counter("coord_requests"),
+            queue_depth: registry.gauge("coord_queue_depth"),
+            active_segments: registry.gauge("coord_active_segments"),
+            resolving: registry.gauge("coord_resolving"),
+            pool_idle: registry.gauge("coord_pool_idle"),
+            pool_suspended: registry.gauge("coord_pool_suspended"),
+            pool_size: registry.gauge("coord_pool_size"),
+            tick_us: registry.histogram("coord_tick_us", &LATENCY_US_BOUNDS),
+            completions_per_tick: registry.histogram("coord_completions_per_tick", &COUNT_BOUNDS),
+            registry,
+        }
+    }
+
+    /// Fold a settling segment's accounting into the reconciliation
+    /// counters (called exactly once per settled segment).
+    fn observe_settled(&self, outcome: &SegmentOutcome) {
+        self.segments_settled.inc();
+        self.disputes.add(outcome.disputes as u64);
+        self.eliminated.add(outcome.eliminated as u64);
+        self.requeues.add(u64::from(outcome.requeues));
+        self.revoked.add(outcome.revoked as u64);
+        self.steps_trained.add(outcome.steps_trained * outcome.workers.len().max(1) as u64);
+        if outcome.seeded_from.is_some() {
+            self.seeded_segments.inc();
+        }
+        self.transfer_bytes.add(outcome.transfer_bytes);
+        self.uploads_rejected.add(u64::from(outcome.uploads_rejected));
+        self.bytes.add(outcome.bytes);
+        self.requests.add(outcome.requests);
+    }
+}
+
 /// The command channel plus its shutdown latch. Senders and the event
 /// loop's final drain synchronize on the same mutex: a command sent while
 /// the gate is open is guaranteed to be in the channel before the drain
@@ -743,6 +834,9 @@ pub(crate) struct Core {
     pub(crate) comp_tx: Sender<Completion>,
     pub(crate) event_join: std::thread::JoinHandle<LoopReport>,
     pub(crate) resolver_joins: Vec<std::thread::JoinHandle<()>>,
+    /// The delegation's private stats registry (`coord_*` keys); the
+    /// event loop and resolvers record into clones of this handle.
+    pub(crate) registry: Registry,
 }
 
 /// Spawn the full event core: the event loop thread plus its resolver
@@ -753,15 +847,22 @@ pub(crate) fn start_core(pool: &WorkerPool, cfg: ServiceConfig) -> Core {
     let (task_tx, task_rx) = channel::<ResolveTask>();
     let (resolved_tx, resolved_rx) = channel::<Resolved>();
     let gate = Arc::new(Mutex::new(CmdGate { tx: cmd_tx, closed: false }));
+    let registry = Registry::new();
     let resolver_joins =
         spawn_resolvers(cfg.resolvers.max(1), task_rx, resolved_tx, comp_tx.clone());
-    let event_loop =
-        EventLoop::new(pool.clone(), cfg, comp_tx.clone(), task_tx, Arc::clone(&gate));
+    let event_loop = EventLoop::new(
+        pool.clone(),
+        cfg,
+        comp_tx.clone(),
+        task_tx,
+        Arc::clone(&gate),
+        registry.clone(),
+    );
     let event_join = std::thread::Builder::new()
         .name("verde-event-loop".into())
         .spawn(move || event_loop.run(comp_rx, cmd_rx, resolved_rx))
         .expect("spawn event loop");
-    Core { gate, comp_tx, event_join, resolver_joins }
+    Core { gate, comp_tx, event_join, resolver_joins, registry }
 }
 
 /// Spawn the resolver pool: each worker thread pulls [`ResolveTask`]s,
@@ -877,6 +978,7 @@ pub(crate) struct EventLoop {
     actor_threads: usize,
     resolving_out: usize,
     shutting_down: bool,
+    metrics: CoordMetrics,
 }
 
 impl EventLoop {
@@ -886,8 +988,10 @@ impl EventLoop {
         comp_tx: Sender<Completion>,
         task_tx: Sender<ResolveTask>,
         gate: Arc<Mutex<CmdGate>>,
+        registry: Registry,
     ) -> EventLoop {
         EventLoop {
+            metrics: CoordMetrics::new(registry),
             pool,
             cfg,
             comp_tx,
@@ -933,6 +1037,7 @@ impl EventLoop {
     ) -> LoopReport {
         let mut events: Vec<Completion> = Vec::new();
         loop {
+            let t_tick = Instant::now();
             // 1. Client commands (submissions, cancels, shutdown).
             while let Ok(cmd) = cmd_rx.try_recv() {
                 self.handle_cmd(cmd);
@@ -946,7 +1051,10 @@ impl EventLoop {
             }
 
             // 3. Sleep until the next completion, deadline, health tick,
-            //    or parole instant.
+            //    or parole instant. (The blocking wait is excluded from
+            //    the tick-duration histogram: `coord_tick_us` measures
+            //    work, not idleness.)
+            let pre_wait = t_tick.elapsed();
             let now = Instant::now();
             let mut timeout = Duration::from_millis(50);
             if let Some(Reverse((d, _))) = self.deadlines.peek() {
@@ -966,6 +1074,8 @@ impl EventLoop {
             while let Ok(c) = comp_rx.try_recv() {
                 events.push(c);
             }
+            let t_work = Instant::now();
+            self.metrics.completions_per_tick.observe(events.len() as u64);
 
             // 4. Fire expired deadlines for tokens still outstanding.
             fire_expired_deadlines(&mut self.deadlines, &self.tokens, &mut events);
@@ -986,6 +1096,16 @@ impl EventLoop {
 
             // 8. Parole sweep: probe suspended workers whose backoff is up.
             self.parole_sweep();
+
+            self.metrics.tick_us.observe_micros(pre_wait + t_work.elapsed());
+            self.metrics.queue_depth.set(self.queue.len() as u64);
+            self.metrics.active_segments.set(self.active.len() as u64);
+            self.metrics.resolving.set(self.resolving_out as u64);
+            self.pool.observe_gauges(
+                &self.metrics.pool_idle,
+                &self.metrics.pool_suspended,
+                &self.metrics.pool_size,
+            );
         }
         // Close the command gate, then settle stragglers: under the gate's
         // mutex, every command sent while the gate was open is already in
@@ -1016,6 +1136,8 @@ impl EventLoop {
                     cell.finish(JobOutcome::cancelled_stub(job_id));
                     return;
                 }
+                self.metrics.jobs_submitted.inc();
+                self.metrics.registry.spans().trace(job_id, None, Stage::Submit, None);
                 if spec.steps == 0 {
                     // A zero-step job has no checkpoint schedule to shard
                     // or verify: settle it unresolved (not cancelled —
@@ -1024,6 +1146,7 @@ impl EventLoop {
                     let outcome =
                         JobOutcome { cancelled: false, ..JobOutcome::cancelled_stub(job_id) };
                     self.outcomes.push(outcome.clone());
+                    self.metrics.registry.spans().trace(job_id, None, Stage::Settle, None);
                     cell.finish(outcome);
                     return;
                 }
@@ -1034,6 +1157,12 @@ impl EventLoop {
                 // advances in `record_segment`.
                 let queue_now = if policy.transfer { 1 } else { boundaries.len() };
                 for (seg_idx, &end) in boundaries.iter().enumerate().take(queue_now) {
+                    self.metrics.registry.spans().trace(
+                        job_id,
+                        Some(seg_idx as u64),
+                        Stage::Queue,
+                        None,
+                    );
                     self.queue.push(QueuedSeg {
                         priority: policy.priority,
                         job_id,
@@ -1120,6 +1249,8 @@ impl EventLoop {
             requests: segments.iter().map(|s| s.requests).sum(),
             segments,
         };
+        self.metrics.jobs_cancelled.inc();
+        self.metrics.registry.spans().trace(job_id, None, Stage::Settle, None);
         self.outcomes.push(outcome.clone());
         run.cell.finish(outcome);
         true
@@ -1181,6 +1312,14 @@ impl EventLoop {
         self.next_lease_seq += 1;
         // The first lease stamps the scheduling order; re-queues keep it.
         let leased_seq = if seg.leased_seq == 0 { lease_seq } else { seg.leased_seq };
+        let spans = self.metrics.registry.spans();
+        spans.trace(seg.job_id, Some(seg.seg_idx as u64), Stage::Lease, None);
+        if seg.seed.is_some() {
+            spans.trace(seg.job_id, Some(seg.seg_idx as u64), Stage::Seed, None);
+        }
+        for w in &workers {
+            spans.trace(seg.job_id, Some(seg.seg_idx as u64), Stage::Dispatch, Some(&w.name));
+        }
         let deadline = Instant::now() + policy.deadline.unwrap_or(self.cfg.dispatch_deadline);
         let mut aseg = ActiveSeg {
             spec: seg.spec,
@@ -1283,6 +1422,7 @@ impl EventLoop {
     /// re-admission is enabled and the worker has strikes left, expel
     /// permanently otherwise.
     fn discipline(&mut self, mut w: PooledWorker, from_parole: bool) {
+        self.metrics.disciplined.inc();
         w.add_strike();
         match self.cfg.readmit_backoff {
             Some(base) if w.strikes() < self.cfg.max_strikes => {
@@ -1417,6 +1557,12 @@ impl EventLoop {
             // good, only the lease was not).
             self.pool.release(keep);
             if requeues < max_requeues && (self.pool.size() > 0 || self.pool.suspended() > 0) {
+                self.metrics.registry.spans().trace(
+                    job_id,
+                    Some(seg_idx as u64),
+                    Stage::Queue,
+                    None,
+                );
                 self.queue.push(QueuedSeg {
                     priority: policy.priority,
                     job_id,
@@ -1455,6 +1601,12 @@ impl EventLoop {
                 // nobody is disciplined — the segment falls back to prefix
                 // re-training like any other seeded failure.
                 self.pool.release(keep);
+                self.metrics.registry.spans().trace(
+                    job_id,
+                    Some(seg_idx as u64),
+                    Stage::Queue,
+                    None,
+                );
                 self.queue.push(QueuedSeg {
                     priority: policy.priority,
                     job_id,
@@ -1516,6 +1668,12 @@ impl EventLoop {
                     _ => {
                         self.pool.release(keep);
                         if requeues < max_requeues {
+                            self.metrics.registry.spans().trace(
+                                job_id,
+                                Some(seg_idx as u64),
+                                Stage::Queue,
+                                None,
+                            );
                             self.queue.push(QueuedSeg {
                                 priority: policy.priority,
                                 job_id,
@@ -1572,6 +1730,7 @@ impl EventLoop {
             requests,
             leased_seq,
             workers: keep,
+            registry: self.metrics.registry.clone(),
         };
         self.resolving_out += 1;
         self.task_tx.send(task).expect("resolver pool alive while segments outstanding");
@@ -1619,6 +1778,12 @@ impl EventLoop {
         outcome.start = segment_start(&run.boundaries, seg_idx);
         if run.done[seg_idx].is_none() {
             run.finished += 1;
+            self.metrics.observe_settled(&outcome);
+            let spans = self.metrics.registry.spans();
+            if outcome.accepted.is_some() {
+                spans.trace(job_id, Some(seg_idx as u64), Stage::Verdict, outcome.winner.as_deref());
+            }
+            spans.trace(job_id, Some(seg_idx as u64), Stage::Settle, None);
         }
         run.done[seg_idx] = Some(outcome);
         run.cell.set_running(run.finished, run.boundaries.len());
@@ -1632,6 +1797,7 @@ impl EventLoop {
         });
         let job_done = run.finished >= run.boundaries.len();
         if let Some((next, end, spec, priority)) = queue_next {
+            self.metrics.registry.spans().trace(job_id, Some(next as u64), Stage::Queue, None);
             self.queue.push(QueuedSeg {
                 priority,
                 job_id,
@@ -1670,6 +1836,10 @@ impl EventLoop {
             requests: segments.iter().map(|s| s.requests).sum(),
             segments,
         };
+        if outcome.accepted.is_some() {
+            self.metrics.jobs_resolved.inc();
+        }
+        self.metrics.registry.spans().trace(job_id, None, Stage::Settle, None);
         self.outcomes.push(outcome.clone());
         run.cell.finish(outcome);
     }

@@ -99,6 +99,24 @@
 //! `seeded_from`, `transfer_bytes`, `uploads_rejected`) makes the saving
 //! observable in every report.
 //!
+//! ## Observability (the stats plane)
+//!
+//! Every delegation owns a private [`crate::obs::Registry`]
+//! ([`client::Delegation::registry`]): the event loop records `coord_*`
+//! counters, queue/pool gauges, and a tick-duration histogram, and — when
+//! span tracing is enabled via `registry().spans().enable()` — the full
+//! per-job lifecycle timeline (submit → queue → lease → dispatch →
+//! fetch/verify/seed → verdict → settle). Registry totals are folded from
+//! the same settling [`coordinator::SegmentOutcome`]s the report
+//! aggregates, so they reconcile **exactly** with
+//! [`coordinator::ServiceReport`]; `tests/obs_stats.rs` asserts the
+//! equality. Live access: [`client::Delegation::stats`] in-process,
+//! `Request::Stats` over the wire against a
+//! [`client::DelegationFrontend::with_stats`] frontend or any
+//! [`worker::WorkerHost`] (which serves its own `worker_*` registry), and
+//! `verde stats --from host:port` on the command line. The key catalog
+//! lives in `rust/README.md`.
+//!
 //! ## Migration from `run_service`
 //!
 //! `run_service(jobs, &pool, k)` and `run_service_with(jobs, &pool, cfg)`

@@ -410,6 +410,21 @@ impl WorkerPool {
         self.state().revoked.clone()
     }
 
+    /// Export the pool's occupancy into stats gauges under a single lock
+    /// acquisition — the event loop calls this once per tick, so one
+    /// lock round-trip instead of three.
+    pub fn observe_gauges(
+        &self,
+        idle: &crate::obs::Gauge,
+        suspended: &crate::obs::Gauge,
+        size: &crate::obs::Gauge,
+    ) {
+        let st = self.state();
+        idle.set(st.free.len() as u64);
+        suspended.set((st.suspended.len() + st.on_parole) as u64);
+        size.set(st.size as u64);
+    }
+
     /// Could a worker satisfying `req` ever be leased again? Counts free,
     /// leased, suspended, and paroled workers — everything short of
     /// permanent expulsion. Leased workers are not inspectable, so the

@@ -9,8 +9,11 @@
 
 use std::fmt;
 
+use std::time::Instant;
+
 use crate::graph::kernels::Backend;
 use crate::net::Endpoint;
+use crate::obs::{Counter, Histogram, Registry, LATENCY_US_BOUNDS};
 use crate::train::session::Session;
 use crate::train::JobSpec;
 use crate::util::metrics::Counters;
@@ -168,6 +171,39 @@ struct SeedBuf {
     buf: Vec<u8>,
 }
 
+/// Cached `worker_*` instrument handles over the host's private
+/// [`Registry`] — the snapshot a worker answers [`Request::Stats`] with.
+struct WorkerMetrics {
+    registry: Registry,
+    requests: Counter,
+    jobs_trained: Counter,
+    jobs_cached: Counter,
+    jobs_seeded: Counter,
+    steps_trained: Counter,
+    seed_bytes: Counter,
+    chunks_served: Counter,
+    train_us: Histogram,
+    seed_verify_us: Histogram,
+}
+
+impl WorkerMetrics {
+    fn new() -> WorkerMetrics {
+        let registry = Registry::new();
+        WorkerMetrics {
+            requests: registry.counter("worker_requests"),
+            jobs_trained: registry.counter("worker_jobs_trained"),
+            jobs_cached: registry.counter("worker_jobs_cached"),
+            jobs_seeded: registry.counter("worker_jobs_seeded"),
+            steps_trained: registry.counter("worker_steps_trained"),
+            seed_bytes: registry.counter("worker_seed_bytes"),
+            chunks_served: registry.counter("worker_chunks_served"),
+            train_us: registry.histogram("worker_train_us", &LATENCY_US_BOUNDS),
+            seed_verify_us: registry.histogram("worker_seed_verify_us", &LATENCY_US_BOUNDS),
+            registry,
+        }
+    }
+}
+
 /// Endpoint served by a worker process/actor: `Train` assigns a job, every
 /// other request addresses the active job's trainer.
 pub struct WorkerHost {
@@ -180,6 +216,7 @@ pub struct WorkerHost {
     /// Protocol requests seen so far (drives [`FaultPlan::Stall`]).
     requests_seen: u64,
     pub counters: Counters,
+    metrics: WorkerMetrics,
 }
 
 impl WorkerHost {
@@ -192,7 +229,14 @@ impl WorkerHost {
             seed_buf: None,
             requests_seen: 0,
             counters: Counters::new(),
+            metrics: WorkerMetrics::new(),
         }
+    }
+
+    /// The host's private stats registry (`worker_*` keys) — the snapshot
+    /// it answers [`Request::Stats`] with.
+    pub fn registry(&self) -> &Registry {
+        &self.metrics.registry
     }
 
     pub fn with_backend(mut self, backend: Backend) -> WorkerHost {
@@ -244,6 +288,7 @@ impl WorkerHost {
 
         // Final chunk: verify, then train the delta.
         let sb = self.seed_buf.take().expect("checked above");
+        let t_verify = Instant::now();
         let state = match decode_state(&sb.buf) {
             Ok(s) => s,
             Err(e) => {
@@ -264,6 +309,9 @@ impl WorkerHost {
                 self.name
             ));
         }
+        // Decode + Merkle verification of the reassembled state is the
+        // security-critical cost of accepting a seed — timed always.
+        self.metrics.seed_verify_us.observe_micros(t_verify.elapsed());
         if sb.start == 0 || sb.start >= sb.spec.steps {
             return Response::Refuse(format!(
                 "{}: seed boundary {} outside job of {} steps",
@@ -295,6 +343,9 @@ impl WorkerHost {
         self.counters.incr("jobs_seeded");
         self.counters.add("steps_trained", sb.spec.steps - sb.start);
         self.counters.add("seed_bytes_received", sb.buf.len() as u64);
+        self.metrics.jobs_seeded.inc();
+        self.metrics.steps_trained.add(sb.spec.steps - sb.start);
+        self.metrics.seed_bytes.add(sb.buf.len() as u64);
         self.active = Some(trainer);
         Response::Commit(commit)
     }
@@ -307,6 +358,7 @@ impl Endpoint for WorkerHost {
 
     fn call(&mut self, req: Request) -> Response {
         self.requests_seen += 1;
+        self.metrics.requests.inc();
         if let FaultPlan::Stall { at_request } = self.plan {
             if self.requests_seen >= at_request {
                 // Hang mid-protocol, never answering: the caller's only
@@ -336,19 +388,24 @@ impl Endpoint for WorkerHost {
                 if let Some(active) = &mut self.active {
                     if active.session.spec == spec && active.seed_base() == 0 {
                         self.counters.incr("jobs_cached");
+                        self.metrics.jobs_cached.inc();
                         return Response::Commit(active.final_commit());
                     }
                 }
                 // Drop the previous job before training so a failure can
                 // never leave a stale job answering dispute queries.
                 self.active = None;
+                let t_train = Instant::now();
                 let session = Session::new(spec);
                 let fault = self.plan.resolve(&session);
                 let mut trainer =
                     TrainerNode::with_session(&self.name, session, self.backend, fault);
                 let commit = trainer.train();
+                self.metrics.train_us.observe_micros(t_train.elapsed());
                 self.counters.incr("jobs_trained");
                 self.counters.add("steps_trained", spec.steps);
+                self.metrics.jobs_trained.inc();
+                self.metrics.steps_trained.add(spec.steps);
                 self.active = Some(trainer);
                 Response::Commit(commit)
             }
@@ -367,8 +424,12 @@ impl Endpoint for WorkerHost {
                         }
                     }
                 }
+                if matches!(resp, Response::Checkpoint { .. }) {
+                    self.metrics.chunks_served.inc();
+                }
                 resp
             }
+            Request::Stats => Response::Stats(self.metrics.registry.snapshot()),
             Request::Ping => Response::Pong,
             Request::Shutdown => Response::Bye,
             other => match &mut self.active {
@@ -547,6 +608,23 @@ mod tests {
             bad.is_err() || bad.unwrap().state_root() != er,
             "tampered upload must fail Merkle verification"
         );
+    }
+
+    #[test]
+    fn stats_request_answers_the_host_registry_snapshot() {
+        let mut host = WorkerHost::new("w0", FaultPlan::Honest);
+        let spec = JobSpec::quick(Preset::Mlp, 4);
+        assert!(matches!(host.call(Request::Train { spec }), Response::Commit(_)));
+        match host.call(Request::Stats) {
+            Response::Stats(s) => {
+                assert_eq!(s.counter("worker_jobs_trained"), 1);
+                assert_eq!(s.counter("worker_steps_trained"), 4);
+                assert!(s.counter("worker_requests") >= 2, "Train + Stats seen");
+                let h = s.histogram("worker_train_us").expect("train was timed");
+                assert_eq!(h.count, 1);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

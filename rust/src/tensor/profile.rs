@@ -13,6 +13,36 @@
 //! just as a given GPU is (usually) self-consistent — but profiles differ
 //! from each other, which is exactly the cross-hardware setting of §3.1.
 
+use std::time::Instant;
+
+/// Gated wall-clock timer for one operator execution. When
+/// [`crate::obs::enable_kernel_timing`] has been called, the elapsed time
+/// lands in the process-global registry as a `repops_*_us` histogram
+/// (plus a `repops_ops` counter); otherwise starting it is a single
+/// relaxed atomic load and stopping is a no-op, so the training hot loop
+/// pays nothing while the timer is dormant.
+pub struct KernelTimer {
+    start: Option<Instant>,
+}
+
+impl KernelTimer {
+    /// Arm the timer iff kernel timing is enabled.
+    pub fn start() -> KernelTimer {
+        KernelTimer {
+            start: crate::obs::kernel_timing_enabled().then(Instant::now),
+        }
+    }
+
+    /// Record the elapsed time under `key` (e.g. `repops_matmul_us`).
+    pub fn stop(self, key: &'static str) {
+        if let Some(t0) = self.start {
+            let g = crate::obs::global();
+            g.counter("repops_ops").inc();
+            g.histogram(key, &crate::obs::LATENCY_US_BOUNDS).observe_micros(t0.elapsed());
+        }
+    }
+}
+
 /// An execution-environment fingerprint: the knobs of a reduction schedule
 /// that, on real hardware, are fixed by the silicon + library version.
 #[derive(Debug, Clone, Copy, PartialEq)]

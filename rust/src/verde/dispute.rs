@@ -34,6 +34,30 @@ pub fn run_dispute(
     trainer0: impl Endpoint,
     trainer1: impl Endpoint,
 ) -> DisputeReport {
+    let report = run_dispute_inner(spec, trainer0, trainer1);
+    record_dispute(&report);
+    report
+}
+
+/// Fold one finished dispute into the process-global stats plane
+/// (`dispute_*` keys). The report itself stays the authoritative record;
+/// these are monotonic totals for the live stats plane.
+fn record_dispute(r: &DisputeReport) {
+    let g = crate::obs::global();
+    g.counter("dispute_runs").inc();
+    g.counter("dispute_phase1_rounds").add(r.phase1_rounds as u64);
+    g.counter("dispute_recomputed").add(r.referee.get("ops_recomputed"));
+    g.counter("dispute_bytes").add(r.bytes[0] + r.bytes[1]);
+    if r.verdict.convicted().is_some() {
+        g.counter("dispute_convictions").inc();
+    }
+}
+
+fn run_dispute_inner(
+    spec: JobSpec,
+    trainer0: impl Endpoint,
+    trainer1: impl Endpoint,
+) -> DisputeReport {
     let mut referee = Referee::new(spec);
     let mut t0 = Metered::new(trainer0);
     let mut t1 = Metered::new(trainer1);

@@ -176,6 +176,12 @@ pub enum Request {
         chunk: u64,
         payload: Vec<u8>,
     },
+    /// Ask any stats-serving peer (worker host, coordinator frontend) for
+    /// a point-in-time [`Snapshot`](crate::obs::Snapshot) of its metrics
+    /// registry. Answered with [`Response::Stats`]; peers without a
+    /// registry refuse. Read-only and safe to poll — `verde stats` drives
+    /// this.
+    Stats,
     /// End the conversation (stream/threaded transports).
     Shutdown,
 }
@@ -230,6 +236,9 @@ pub enum Response {
         chunk: u64,
         payload: Vec<u8>,
     },
+    /// Answer to [`Request::Stats`]: the peer's live metrics snapshot —
+    /// versioned key set, zeros when nothing has happened yet.
+    Stats(crate::obs::Snapshot),
 }
 
 impl Request {
@@ -301,6 +310,7 @@ mod tests {
             Request::Status { job_id: 17 },
             Request::Cancel { job_id: u64::MAX },
             Request::FetchCheckpoint { step: 9, chunk: 2 },
+            Request::Stats,
             Request::SeedCheckpoint {
                 spec: JobSpec::quick(Preset::Mlp, 10),
                 start: 5,
@@ -346,6 +356,14 @@ mod tests {
                 chunk: 2,
                 payload: vec![9; 64],
             },
+            Response::Stats(crate::obs::Snapshot::empty()),
+            Response::Stats({
+                let reg = crate::obs::Registry::new();
+                reg.counter("coord_jobs_submitted").add(4);
+                reg.gauge("coord_queue_depth").set(1);
+                reg.histogram("coord_tick_us", &[10, 100]).observe(55);
+                reg.snapshot()
+            }),
         ];
         for r in resps {
             assert_eq!(r.wire_size(), r.encode().len(), "{r:?}");

@@ -136,12 +136,19 @@ impl TrainerNode {
             self.roots.insert(0, self.session.genesis_root());
         }
 
+        // Process-wide totals; the per-trainer `counters` stay authoritative
+        // for tests, these feed the live stats plane.
+        let g = crate::obs::global();
+        let g_steps = g.counter("trainer_steps");
+        g.counter("trainer_runs").inc();
+
         let mut state = self.stored[&self.seed_base].clone();
         for step in self.seed_base + 1..=spec.steps {
             let record = schedule.contains(&step);
             let (next, loss) = self.exec_step(&state, record, false);
             self.losses.push(loss);
             self.counters.incr("steps_trained");
+            g_steps.inc();
             if record {
                 self.stored.insert(step, next.clone());
                 self.counters.add("checkpoint_bytes_stored", next.byte_len() as u64);
@@ -522,6 +529,11 @@ impl Endpoint for TrainerNode {
                 // Client-API messages address a coordinator frontend
                 // (`service::client::DelegationFrontend`), never a trainer.
                 Response::Refuse("trainer does not host the client API".into())
+            }
+            Request::Stats => {
+                // Stats are served by hosts that own a registry (worker
+                // host, coordinator frontend); a bare trainer has none.
+                Response::Refuse("trainer serves no stats registry".into())
             }
             Request::Ping => Response::Pong,
             Request::Shutdown => Response::Bye,

@@ -34,6 +34,8 @@ use crate::model::Preset;
 use crate::tensor::Tensor;
 use crate::train::JobSpec;
 
+use crate::obs::{HistogramSnapshot, Snapshot};
+
 use super::protocol::{
     BackendRequirement, InputProvenance, JobPolicy, RemoteStatus, Request, Response,
 };
@@ -80,6 +82,7 @@ const REQ_STATUS: u8 = 0x0B;
 const REQ_CANCEL: u8 = 0x0C;
 const REQ_FETCH_CHECKPOINT: u8 = 0x0D;
 const REQ_SEED_CHECKPOINT: u8 = 0x0E;
+const REQ_STATS: u8 = 0x0F;
 
 const RESP_COMMIT: u8 = 0x81;
 const RESP_HASHES: u8 = 0x82;
@@ -94,6 +97,7 @@ const RESP_SUBMITTED: u8 = 0x8A;
 const RESP_STATUS: u8 = 0x8B;
 const RESP_CANCELLED: u8 = 0x8C;
 const RESP_CHECKPOINT: u8 = 0x8D;
+const RESP_STATS: u8 = 0x8E;
 
 const PROV_GENESIS: u8 = 0x01;
 const PROV_PREV_STEP: u8 = 0x02;
@@ -605,6 +609,121 @@ pub fn status_wire_len(s: &RemoteStatus) -> usize {
     }
 }
 
+/// Maximum histogram bucket-bound count a stats snapshot may declare per
+/// histogram. The in-tree catalogs top out at a dozen buckets; anything
+/// past this is a hostile or corrupt snapshot, not telemetry.
+pub const MAX_HISTOGRAM_BOUNDS: usize = 1 << 16;
+
+fn put_stat_pairs(out: &mut Vec<u8>, pairs: &[(String, u64)]) {
+    put_u64(out, pairs.len() as u64);
+    for (name, value) in pairs {
+        put_str(out, name);
+        put_u64(out, *value);
+    }
+}
+
+/// Read a `(name, value)` section of a stats snapshot. Each entry costs at
+/// least 16 bytes on the wire, which bounds the allocation a hostile count
+/// can force before the buffer runs dry.
+fn read_stat_pairs(
+    r: &mut Reader<'_>,
+    context: &'static str,
+) -> Result<Vec<(String, u64)>, WireError> {
+    let n = r.usize(context)?;
+    if n > r.remaining() / 16 {
+        return Err(WireError::Truncated {
+            context,
+            need: n.saturating_mul(16),
+            have: r.remaining(),
+        });
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = r.str(context)?;
+        let value = r.u64(context)?;
+        out.push((name, value));
+    }
+    Ok(out)
+}
+
+fn put_snapshot(out: &mut Vec<u8>, s: &Snapshot) {
+    put_u64(out, s.version);
+    put_stat_pairs(out, &s.counters);
+    put_stat_pairs(out, &s.gauges);
+    put_u64(out, s.histograms.len() as u64);
+    for (name, h) in &s.histograms {
+        put_str(out, name);
+        put_u64(out, h.bounds.len() as u64);
+        for &b in &h.bounds {
+            put_u64(out, b);
+        }
+        // Exactly bounds+1 buckets go on the wire regardless of the local
+        // vector's length, so every snapshot value has one decodable
+        // encoding (registry-produced snapshots always match already).
+        for i in 0..=h.bounds.len() {
+            put_u64(out, h.buckets.get(i).copied().unwrap_or(0));
+        }
+        put_u64(out, h.sum);
+        put_u64(out, h.count);
+    }
+}
+
+fn read_snapshot(r: &mut Reader<'_>) -> Result<Snapshot, WireError> {
+    let version = r.u64("stats.version")?;
+    let counters = read_stat_pairs(r, "stats.counters")?;
+    let gauges = read_stat_pairs(r, "stats.gauges")?;
+    let n_hist = r.usize("stats.histograms")?;
+    // Every histogram entry costs ≥ 8 (name len) + 8 (bound count) +
+    // 8 (overflow bucket) + 16 (sum, count) = 40 bytes.
+    if n_hist > r.remaining() / 40 {
+        return Err(WireError::Truncated {
+            context: "stats.histograms",
+            need: n_hist.saturating_mul(40),
+            have: r.remaining(),
+        });
+    }
+    let mut histograms = Vec::with_capacity(n_hist);
+    for _ in 0..n_hist {
+        let name = r.str("stats.histogram.name")?;
+        let n_bounds = r.usize("stats.histogram.bounds")?;
+        if n_bounds > MAX_HISTOGRAM_BOUNDS || n_bounds > r.remaining() / 8 {
+            return Err(WireError::Malformed { context: "stats.histogram.bounds" });
+        }
+        let mut bounds = Vec::with_capacity(n_bounds);
+        for _ in 0..n_bounds {
+            bounds.push(r.u64("stats.histogram.bound")?);
+        }
+        if n_bounds + 1 > r.remaining() / 8 {
+            return Err(WireError::Truncated {
+                context: "stats.histogram.buckets",
+                need: (n_bounds + 1).saturating_mul(8),
+                have: r.remaining(),
+            });
+        }
+        let mut buckets = Vec::with_capacity(n_bounds + 1);
+        for _ in 0..=n_bounds {
+            buckets.push(r.u64("stats.histogram.bucket")?);
+        }
+        let sum = r.u64("stats.histogram.sum")?;
+        let count = r.u64("stats.histogram.count")?;
+        histograms.push((name, HistogramSnapshot { bounds, buckets, sum, count }));
+    }
+    Ok(Snapshot { version, counters, gauges, histograms })
+}
+
+/// Exact encoded size of a stats snapshot.
+pub fn snapshot_wire_len(s: &Snapshot) -> usize {
+    let pairs = |ps: &[(String, u64)]| {
+        8 + ps.iter().map(|(k, _)| 8 + k.len() + 8).sum::<usize>()
+    };
+    let hists: usize = s
+        .histograms
+        .iter()
+        .map(|(k, h)| 8 + k.len() + 8 + 8 * h.bounds.len() + 8 * (h.bounds.len() + 1) + 16)
+        .sum();
+    8 + pairs(&s.counters) + pairs(&s.gauges) + 8 + hists
+}
+
 // ---------------------------------------------------------------------------
 // messages
 // ---------------------------------------------------------------------------
@@ -673,6 +792,7 @@ impl Request {
                 put_hash(&mut out, root);
                 put_chunk(&mut out, *total_chunks, *chunk, payload);
             }
+            Request::Stats => out.push(REQ_STATS),
         }
         debug_assert_eq!(out.len(), self.wire_size(), "wire_size drifted from encoder");
         out
@@ -742,6 +862,7 @@ impl Request {
                 let (total_chunks, chunk, payload) = read_chunk(&mut r)?;
                 Request::SeedCheckpoint { spec, start, root, total_chunks, chunk, payload }
             }
+            REQ_STATS => Request::Stats,
             tag => return Err(WireError::BadTag { context: "request", tag }),
         };
         r.finish()?;
@@ -753,7 +874,7 @@ impl Request {
 /// [`Request::wire_size`].
 pub fn request_wire_len(req: &Request) -> usize {
     1 + match req {
-        Request::FinalCommit | Request::Shutdown | Request::Ping => 0,
+        Request::FinalCommit | Request::Shutdown | Request::Ping | Request::Stats => 0,
         Request::CheckpointHashes { boundaries } => 8 + 8 * boundaries.len(),
         Request::NodeHashSeq { .. } => 8,
         Request::OpenNode { .. } | Request::InputProof { .. } => 16,
@@ -821,6 +942,10 @@ impl Response {
                 put_hash(&mut out, root);
                 put_chunk(&mut out, *total_chunks, *chunk, payload);
             }
+            Response::Stats(s) => {
+                out.push(RESP_STATS);
+                put_snapshot(&mut out, s);
+            }
         }
         debug_assert_eq!(out.len(), self.wire_size(), "wire_size drifted from encoder");
         out
@@ -848,6 +973,7 @@ impl Response {
                 let (total_chunks, chunk, payload) = read_chunk(&mut r)?;
                 Response::Checkpoint { step, root, total_chunks, chunk, payload }
             }
+            RESP_STATS => Response::Stats(read_snapshot(&mut r)?),
             tag => return Err(WireError::BadTag { context: "response", tag }),
         };
         r.finish()?;
@@ -870,6 +996,7 @@ pub fn response_wire_len(resp: &Response) -> usize {
         Response::Status(s) => status_wire_len(s),
         Response::Cancelled(_) => 1,
         Response::Checkpoint { payload, .. } => 8 + 32 + chunk_wire_len(payload),
+        Response::Stats(s) => snapshot_wire_len(s),
     }
 }
 
@@ -1018,7 +1145,28 @@ mod tests {
                 chunk: 1,
                 payload: vec![0xAB; 77],
             },
+            Request::Stats,
         ]
+    }
+
+    fn sample_snapshot() -> Snapshot {
+        Snapshot {
+            version: crate::obs::STATS_VERSION,
+            counters: vec![
+                ("coord_jobs_submitted".to_string(), 12),
+                ("net_tcp_bytes_in".to_string(), u64::MAX),
+            ],
+            gauges: vec![("coord_queue_depth".to_string(), 3)],
+            histograms: vec![(
+                "coord_tick_us".to_string(),
+                HistogramSnapshot {
+                    bounds: vec![10, 100, 1_000],
+                    buckets: vec![4, 2, 1, 0],
+                    sum: 777,
+                    count: 7,
+                },
+            )],
+        }
     }
 
     fn sample_responses() -> Vec<Response> {
@@ -1074,6 +1222,8 @@ mod tests {
                 chunk: 0,
                 payload: vec![1],
             },
+            Response::Stats(Snapshot::empty()),
+            Response::Stats(sample_snapshot()),
         ]
     }
 
@@ -1328,6 +1478,51 @@ mod tests {
             Request::decode(&evil),
             Err(WireError::Malformed { context: "seed.start" })
         ));
+    }
+
+    #[test]
+    fn stats_snapshot_roundtrips_and_rejects_hostile_counts() {
+        // Full roundtrip with value equality, not just canonical bytes.
+        let snap = sample_snapshot();
+        let bytes = Response::Stats(snap.clone()).encode();
+        match Response::decode(&bytes).expect("snapshot decodes") {
+            Response::Stats(back) => assert_eq!(back, snap),
+            other => panic!("{other:?}"),
+        }
+
+        // A counter section claiming u64::MAX entries in a short buffer
+        // must fail before allocating.
+        let mut evil = vec![RESP_STATS];
+        put_u64(&mut evil, 1); // version
+        evil.extend_from_slice(&u64::MAX.to_le_bytes()); // counter count
+        assert!(matches!(Response::decode(&evil), Err(WireError::Truncated { .. })));
+
+        // A histogram declaring an absurd bound count is malformed.
+        let mut evil = vec![RESP_STATS];
+        put_u64(&mut evil, 1); // version
+        put_u64(&mut evil, 0); // counters
+        put_u64(&mut evil, 0); // gauges
+        put_u64(&mut evil, 1); // one histogram
+        put_str(&mut evil, "h");
+        put_u64(&mut evil, (MAX_HISTOGRAM_BOUNDS as u64) + 1);
+        evil.resize(evil.len() + (1 << 20), 0); // plenty of real bytes behind it
+        assert!(matches!(
+            Response::decode(&evil),
+            Err(WireError::Malformed { context: "stats.histogram.bounds" })
+        ));
+
+        // Truncation at every prefix is an error, never a panic; a padded
+        // tail breaks canonicity.
+        for cut in 0..bytes.len() {
+            assert!(Response::decode(&bytes[..cut]).is_err(), "prefix {cut} accepted");
+        }
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(matches!(Response::decode(&padded), Err(WireError::Trailing { extra: 1 })));
+
+        // The Stats request is a bare tag.
+        assert_eq!(Request::Stats.encode(), vec![REQ_STATS]);
+        assert_eq!(Request::Stats.wire_size(), 1);
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! End-to-end acceptance for the observability plane: a sharded,
+//! transfer-enabled job over real TCP whose registry counters and span
+//! timeline reconcile **exactly** with the `ServiceReport` /
+//! `SegmentOutcome` totals; a tamper-upload run where the rejection shows
+//! up in both the registry and the report; the live `Request::Stats` wire
+//! path through a serving frontend; and the gated RepOps kernel timers.
+
+use std::net::TcpListener;
+
+use verde::model::Preset;
+use verde::net::tcp::{spawn_server, spawn_server_threaded, TcpEndpoint};
+use verde::net::Endpoint;
+use verde::obs::{Stage, STATS_VERSION};
+use verde::service::{
+    Delegation, DelegationFrontend, FaultPlan, JobRequest, PooledWorker, ServiceConfig,
+    WorkerHost, WorkerPool,
+};
+use verde::train::JobSpec;
+use verde::verde::protocol::{Request, Response};
+use verde::verde::trainer::TrainerNode;
+
+fn in_process_pool(plans: &[(&str, FaultPlan)]) -> WorkerPool {
+    WorkerPool::new(
+        plans
+            .iter()
+            .map(|&(name, plan)| PooledWorker::new(name, WorkerHost::new(name, plan)))
+            .collect(),
+    )
+}
+
+/// THE acceptance run: a sharded, transfer-enabled job over real TCP with
+/// tracing on. Every `coord_*` counter must equal the corresponding
+/// report/outcome total, and the span timeline must carry exactly the
+/// lifecycle events the settled segments imply.
+#[test]
+fn sharded_transfer_stats_reconcile_exactly_with_report_over_tcp() {
+    let k = 2usize;
+    let segments = 4usize;
+    let mut servers = Vec::new();
+    let mut workers = Vec::new();
+    for name in ["w0", "w1"] {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+        let addr = listener.local_addr().unwrap();
+        servers.push(spawn_server(listener, WorkerHost::new(name, FaultPlan::Honest), Some(1)));
+        workers.push(PooledWorker::new(name, TcpEndpoint::connect(name, addr).unwrap()));
+    }
+    let pool = WorkerPool::new(workers);
+
+    let spec = JobSpec::quick(Preset::Mlp, 8);
+    let delegation = Delegation::start(&pool, ServiceConfig::new(k));
+    let registry = delegation.registry().clone();
+    registry.spans().enable();
+
+    let outcome = delegation
+        .submit(JobRequest::new(spec).with_segments(segments as u64).with_state_transfer())
+        .wait();
+    assert!(outcome.accepted.is_some(), "{outcome:?}");
+    assert_eq!(outcome.segments.len(), segments);
+    let report = delegation.finish();
+    let snap = registry.snapshot();
+
+    // --- counter ↔ report reconciliation: exact equality -------------
+    assert_eq!(snap.version, STATS_VERSION);
+    assert_eq!(snap.counter("coord_jobs_submitted"), 1);
+    assert_eq!(snap.counter("coord_jobs_resolved"), 1);
+    assert_eq!(snap.counter("coord_jobs_cancelled"), 0);
+    assert_eq!(snap.counter("coord_segments_settled"), segments as u64);
+    assert_eq!(snap.counter("coord_disputes"), report.total_disputes() as u64);
+    assert_eq!(snap.counter("coord_eliminated"), report.total_eliminated() as u64);
+    assert_eq!(snap.counter("coord_requeues"), report.total_requeued());
+    assert_eq!(snap.counter("coord_steps_trained"), report.total_steps_trained());
+    assert_eq!(snap.counter("coord_seeded_segments"), report.total_seeded_segments() as u64);
+    assert_eq!(snap.counter("coord_transfer_bytes"), report.total_transfer_bytes());
+    assert_eq!(snap.counter("coord_uploads_rejected"), report.total_uploads_rejected());
+    assert_eq!(snap.counter("coord_bytes"), report.total_bytes());
+    let report_requests: u64 = report.outcomes.iter().map(|o| o.requests).sum();
+    assert_eq!(snap.counter("coord_requests"), report_requests);
+    assert!(report.total_transfer_bytes() > 0, "transfer ran");
+    assert_eq!(report.total_seeded_segments(), segments - 1);
+
+    // --- tick instrumentation and end-of-run gauges ------------------
+    let ticks = snap.histogram("coord_tick_us").expect("tick histogram registered");
+    assert!(ticks.count > 0, "the event loop observed its ticks");
+    assert_eq!(ticks.buckets.iter().sum::<u64>(), ticks.count);
+    assert_eq!(snap.gauge("coord_queue_depth"), 0, "drained at shutdown");
+    assert_eq!(snap.gauge("coord_active_segments"), 0);
+    assert_eq!(snap.gauge("coord_pool_size"), 2);
+
+    // --- span timeline ↔ segment outcomes ----------------------------
+    // Honest fleet ⇒ no requeues, so event counts are exact.
+    assert_eq!(report.total_requeued(), 0, "{report:?}");
+    let spans = registry.spans();
+    assert_eq!(spans.count(Stage::Submit), 1);
+    assert_eq!(spans.count(Stage::Queue), segments);
+    assert_eq!(spans.count(Stage::Lease), segments, "one lease per segment dispatch");
+    assert_eq!(spans.count(Stage::Dispatch), k * segments, "k dispatch events per lease");
+    assert_eq!(spans.count(Stage::Seed), segments - 1, "every non-first segment was seeded");
+    assert_eq!(spans.count(Stage::Fetch), segments - 1, "one fetch per successor seed");
+    assert_eq!(spans.count(Stage::Verify), segments - 1, "every fetch Merkle-verified");
+    assert_eq!(spans.count(Stage::Verdict), segments);
+    assert_eq!(
+        spans.count(Stage::Settle),
+        segments + 1,
+        "one settle per segment plus the job-level settle"
+    );
+    assert_eq!(spans.job_latencies().len(), 1);
+
+    // Per-segment: the lifecycle is ordered on the monotonic clock and
+    // the k dispatch events name the final lease's workers.
+    let events = spans.events();
+    for s in &outcome.segments {
+        let seg = Some(s.seg as u64);
+        let lease =
+            events.iter().find(|e| e.seg == seg && e.stage == Stage::Lease).expect("lease");
+        let verdict =
+            events.iter().find(|e| e.seg == seg && e.stage == Stage::Verdict).expect("verdict");
+        let settle =
+            events.iter().find(|e| e.seg == seg && e.stage == Stage::Settle).expect("settle");
+        assert!(lease.at <= verdict.at && verdict.at <= settle.at, "segment {}", s.seg);
+        assert_eq!(verdict.worker, s.winner, "verdict event names the winner");
+        let dispatched: Vec<&str> = events
+            .iter()
+            .filter(|e| e.seg == seg && e.stage == Stage::Dispatch)
+            .filter_map(|e| e.worker.as_deref())
+            .collect();
+        assert_eq!(dispatched.len(), k);
+        for w in &s.workers {
+            assert!(dispatched.contains(&w.as_str()), "{w} missing from dispatch events");
+        }
+    }
+
+    // --- cross-cutting layers left monotonic evidence ----------------
+    let g = verde::obs::global();
+    assert!(g.counter("net_tcp_bytes_out").get() > 0, "TCP byte accounting fed the plane");
+    assert!(g.counter("net_tcp_bytes_in").get() > 0);
+    assert!(g.counter("net_tcp_requests_served").get() > 0);
+    assert!(g.counter("trainer_steps").get() > 0, "worker-side training counted globally");
+
+    for mut w in pool.into_workers() {
+        let _ = w.call(Request::Shutdown);
+    }
+    for server in servers {
+        let _ = server.join();
+    }
+}
+
+/// The tamper satellite: a bit-flipped checkpoint upload is rejected by
+/// Merkle verification, and the rejection is visible in BOTH the segment
+/// outcome / report and the delegation's registry.
+#[test]
+fn tampered_upload_counts_in_both_registry_and_report() {
+    let pool = in_process_pool(&[
+        ("w0", FaultPlan::TamperUpload),
+        ("w1", FaultPlan::Honest),
+        ("w2", FaultPlan::Honest),
+    ]);
+    let spec = JobSpec::quick(Preset::Mlp, 8);
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let registry = delegation.registry().clone();
+    registry.spans().enable();
+
+    let outcome = delegation
+        .submit(JobRequest::new(spec).with_segments(2).with_state_transfer())
+        .wait();
+    assert!(outcome.accepted.is_some(), "{outcome:?}");
+    let report = delegation.finish();
+    let snap = registry.snapshot();
+
+    assert_eq!(report.total_uploads_rejected(), 1, "the bit-flip was caught");
+    assert_eq!(snap.counter("coord_uploads_rejected"), report.total_uploads_rejected());
+    let seg_revoked: u64 =
+        outcome.segments.iter().map(|s| s.revoked as u64).sum();
+    assert!(seg_revoked >= 1, "the tamperer lost its lease");
+    assert_eq!(snap.counter("coord_revoked"), seg_revoked);
+    assert_eq!(snap.counter("coord_seeded_segments"), 1, "the survivor still seeded seg 1");
+    assert_eq!(snap.counter("coord_transfer_bytes"), report.total_transfer_bytes());
+    // Span counts still reconcile with the settled segments.
+    assert_eq!(registry.spans().count(Stage::Settle), outcome.segments.len() + 1);
+    assert_eq!(registry.spans().count(Stage::Verdict), outcome.segments.len());
+}
+
+/// The live stats plane over the wire: a serving frontend built
+/// `with_stats` answers `Request::Stats` with the delegation's snapshot;
+/// one built without it refuses rather than serving an empty lie.
+#[test]
+fn frontend_serves_live_stats_over_tcp() {
+    let pool = in_process_pool(&[("w0", FaultPlan::Honest), ("w1", FaultPlan::Honest)]);
+    let spec = JobSpec::quick(Preset::Mlp, 4);
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let outcome = delegation.submit(JobRequest::new(spec)).wait();
+    assert!(outcome.accepted.is_some());
+
+    // Without the stats plane: an explicit refusal.
+    let mut bare = DelegationFrontend::new("bare", delegation.client());
+    match bare.call(Request::Stats) {
+        Response::Refuse(why) => assert!(why.contains("stats plane"), "{why}"),
+        other => panic!("expected refusal, got {other:?}"),
+    }
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+    let addr = listener.local_addr().unwrap();
+    let frontend = DelegationFrontend::new("coordinator", delegation.client())
+        .with_stats(delegation.registry().clone());
+    let server = spawn_server_threaded(listener, frontend, Some(1));
+
+    let mut ep = TcpEndpoint::connect("coordinator", addr).unwrap();
+    match ep.call(Request::Stats) {
+        Response::Stats(snap) => {
+            assert_eq!(snap.version, STATS_VERSION);
+            assert_eq!(snap.counter("coord_jobs_submitted"), 1);
+            assert_eq!(snap.counter("coord_jobs_resolved"), 1);
+            assert!(snap.histogram("coord_tick_us").is_some());
+            // Both renderers handle a real snapshot.
+            assert!(snap.to_json().contains("\"coord_jobs_resolved\":1"));
+            assert!(snap.to_prometheus().contains("coord_jobs_resolved 1"));
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+    drop(ep);
+    let _ = server.join();
+    delegation.finish();
+}
+
+/// The dormant `tensor/profile.rs` hook: once kernel timing is enabled,
+/// RepOps operator executions land in the global `repops_*` histograms.
+#[test]
+fn kernel_timing_surfaces_repops_histograms() {
+    let g = verde::obs::global();
+    let before = g.counter("repops_ops").get();
+    verde::obs::enable_kernel_timing();
+    let mut t = TrainerNode::honest("kt", JobSpec::quick(Preset::Mlp, 2));
+    t.train();
+    assert!(g.counter("repops_ops").get() > before, "operators were timed");
+    let snap = g.snapshot();
+    let h = snap.histogram("repops_matmul_us").expect("matmul timings recorded");
+    assert!(h.count > 0);
+    assert_eq!(h.buckets.iter().sum::<u64>(), h.count);
+}

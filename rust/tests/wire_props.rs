@@ -11,6 +11,7 @@ use verde::graph::executor::AugmentedCGNode;
 use verde::hash::merkle::MerkleProof;
 use verde::hash::Hash;
 use verde::model::Preset;
+use verde::obs::{HistogramSnapshot, Snapshot};
 use verde::tensor::Tensor;
 use verde::train::JobSpec;
 use verde::util::proptest::{forall, Gen};
@@ -121,6 +122,40 @@ fn gen_seed_spec(g: &mut Gen) -> (JobSpec, u64) {
     (spec, start)
 }
 
+fn gen_stat_name(g: &mut Gen) -> String {
+    let n = g.usize_in(0, 24);
+    (0..n).map(|_| char::from(b'a' + (g.u64() % 26) as u8)).collect()
+}
+
+fn gen_stat_pairs(g: &mut Gen, max: usize) -> Vec<(String, u64)> {
+    let n = g.usize_in(0, max);
+    (0..n).map(|_| (gen_stat_name(g), g.u64())).collect()
+}
+
+/// An arbitrary stats snapshot. Bucket vectors are generated at the
+/// canonical `bounds.len() + 1` length the encoder always emits, so the
+/// bit-exact roundtrip property holds.
+fn gen_snapshot(g: &mut Gen) -> Snapshot {
+    let n_hist = g.usize_in(0, 3);
+    let histograms = (0..n_hist)
+        .map(|_| {
+            let n_bounds = g.usize_in(0, 6);
+            let bounds: Vec<u64> = (0..n_bounds).map(|_| g.u64()).collect();
+            let buckets: Vec<u64> = (0..=n_bounds).map(|_| g.u64()).collect();
+            (
+                gen_stat_name(g),
+                HistogramSnapshot { bounds, buckets, sum: g.u64(), count: g.u64() },
+            )
+        })
+        .collect();
+    Snapshot {
+        version: g.u64(),
+        counters: gen_stat_pairs(g, 5),
+        gauges: gen_stat_pairs(g, 5),
+        histograms,
+    }
+}
+
 fn gen_status(g: &mut Gen) -> RemoteStatus {
     match g.usize_in(0, 3) {
         0 => RemoteStatus::Unknown,
@@ -136,7 +171,8 @@ fn gen_status(g: &mut Gen) -> RemoteStatus {
 }
 
 fn gen_request(g: &mut Gen) -> Request {
-    match g.usize_in(0, 13) {
+    match g.usize_in(0, 14) {
+        14 => Request::Stats,
         12 => {
             let chunk = g.usize_in(0, 1023) as u64;
             Request::FetchCheckpoint { step: g.u64(), chunk }
@@ -175,7 +211,8 @@ fn gen_request(g: &mut Gen) -> Request {
 }
 
 fn gen_response(g: &mut Gen) -> Response {
-    match g.usize_in(0, 12) {
+    match g.usize_in(0, 13) {
+        13 => Response::Stats(gen_snapshot(g)),
         12 => {
             let (total_chunks, chunk, payload) = gen_chunk(g);
             Response::Checkpoint {
