@@ -1,59 +1,177 @@
-//! FIG3 — paper Figure 3: RepOps matrix-multiplication overhead vs size.
+//! FIG3 — paper Figure 3: RepOps matrix-multiplication overhead vs size,
+//! plus the multicore RepOps scoreboard.
 //!
 //! Paper setup: torch::mm/cuDNN baseline vs RepOps CUDA kernels on T4 and
 //! RTX 3090; overhead 30–70% at n ≥ 2^10, up to ~200% at small sizes.
 //! Ours: free-order FMA baseline (per simulated profile) vs RepOps in both
 //! contracts — separate-rounding (the portable §3.2 spec) and FMA (the
-//! XLA/FFMA contract). Overhead % = repops/baseline − 1.
+//! XLA/FFMA contract). Overhead % = repops/baseline − 1, measured at
+//! threads = 1 so the comparison stays like-for-like (the free-order
+//! baseline deliberately stays single-core — it simulates a reduction
+//! schedule, not wall-clock).
+//!
+//! The threads dimension sweeps {1, 2, 4, hw} (deduped, capped at the
+//! machine). Before timing each (n, threads) cell the bench asserts the
+//! result is **bitwise identical** to the threads = 1 reference — the
+//! §3.2 contract the parallel kernels must preserve.
+//!
+//! Emits `BENCH_repops.json` (every cell + per-size speedup records) so
+//! the perf trajectory is machine-readable run over run.
 //!
 //! Run: `cargo bench --bench fig3_matmul`
+//! Flags: `--smoke` (small sizes, short budgets, for quick CI smoke),
+//!        `--assert-speedup` (exit non-zero unless multicore throughput
+//!        ≥ single-core for every n ≥ 512 — the CI perf gate).
 
 use std::time::Duration;
 
 use verde::tensor::profile::HardwareProfile;
 use verde::tensor::{baseline, repops, Tensor};
 use verde::util::bench::{overhead_pct, time_adaptive};
+use verde::util::parallel;
 
 fn main() {
-    let sizes = [32usize, 64, 128, 256, 512, 1024];
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let assert_speedup = std::env::args().any(|a| a == "--assert-speedup");
+    let hw_threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut thread_set: Vec<usize> =
+        [1usize, 2, 4, hw_threads].into_iter().filter(|&t| t <= hw_threads).collect();
+    thread_set.sort_unstable();
+    thread_set.dedup();
+
+    let sizes: &[usize] =
+        if smoke { &[64, 256, 512] } else { &[32, 64, 128, 256, 512, 1024] };
     let profiles = [HardwareProfile::T4_16G, HardwareProfile::RTX3090_24G];
-    println!("FIG3: RepOps matmul overhead vs matrix size (square n x n)");
+
     println!(
-        "{:>6} {:>14} {:>12} {:>12} {:>12} {:>10} {:>10}",
-        "n", "profile", "base GF/s", "rep GF/s", "repfma GF/s", "ovh%", "ovh-fma%"
+        "FIG3: RepOps matmul, {} hw cores, threads {:?}{}",
+        hw_threads,
+        thread_set,
+        if smoke { " [smoke]" } else { "" }
     );
-    for &n in &sizes {
+    println!(
+        "{:>6} {:>8} {:>12} {:>12} {:>10}",
+        "n", "threads", "rep GF/s", "repfma GF/s", "speedup"
+    );
+
+    let mut lines: Vec<String> = Vec::new();
+    let mut gate_failures: Vec<String> = Vec::new();
+
+    for &n in sizes {
         let a = Tensor::rand([n, n], 1, 1.0);
         let b = Tensor::rand([n, n], 2, 1.0);
         let flops = 2.0 * (n as f64).powi(3);
-        let budget = Duration::from_millis(if n >= 512 { 1200 } else { 400 });
-        let rep = time_adaptive("rep", budget, 50, || repops::matmul(&a, &b));
-        let repf = time_adaptive("repfma", budget, 50, || repops::matmul_fma(&a, &b));
-        for hw in &profiles {
-            let base =
-                time_adaptive("base", budget, 50, || baseline::matmul(&a, &b, hw));
-            let o = overhead_pct(&rep, &base);
-            let of = overhead_pct(&repf, &base);
+        let budget = Duration::from_millis(match (smoke, n >= 512) {
+            (true, _) => 200,
+            (false, true) => 1200,
+            (false, false) => 400,
+        });
+
+        // the threads = 1 reference bits every other cell must reproduce
+        parallel::set_threads(1);
+        let ref_rep = repops::matmul(&a, &b);
+        let ref_fma = repops::matmul_fma(&a, &b);
+
+        let mut rep_t1_s = f64::NAN;
+        let mut rep_best_s = f64::NAN;
+        for &t in &thread_set {
+            parallel::set_threads(t);
+            assert!(
+                repops::matmul(&a, &b).bit_eq(&ref_rep),
+                "matmul bits diverge at n={n}, threads={t}"
+            );
+            assert!(
+                repops::matmul_fma(&a, &b).bit_eq(&ref_fma),
+                "matmul_fma bits diverge at n={n}, threads={t}"
+            );
+            let rep = time_adaptive("rep", budget, 50, || repops::matmul(&a, &b));
+            let repf = time_adaptive("repfma", budget, 50, || repops::matmul_fma(&a, &b));
+            if t == 1 {
+                rep_t1_s = rep.median_secs();
+            }
+            rep_best_s = rep.median_secs(); // thread_set ascends; last = max threads
+            let speedup = rep_t1_s / rep.median_secs();
             println!(
-                "{:>6} {:>14} {:>12.2} {:>12.2} {:>12.2} {:>10.1} {:>10.1}",
+                "{:>6} {:>8} {:>12.2} {:>12.2} {:>9.2}x",
                 n,
-                hw.name,
-                flops / base.median_secs() / 1e9,
+                t,
                 flops / rep.median_secs() / 1e9,
                 flops / repf.median_secs() / 1e9,
-                o,
-                of
+                speedup
             );
-            println!(
-                "JSON {{\"bench\":\"fig3\",\"n\":{n},\"profile\":\"{}\",\"base_s\":{:.6},\"rep_s\":{:.6},\"repfma_s\":{:.6},\"overhead_pct\":{:.2},\"overhead_fma_pct\":{:.2}}}",
-                hw.name,
-                base.median_secs(),
+            lines.push(format!(
+                "{{\"bench\":\"repops\",\"kind\":\"rep\",\"n\":{n},\"threads\":{t},\
+                 \"rep_s\":{:.6},\"repfma_s\":{:.6},\"rep_gflops\":{:.2},\"bitwise_ok\":true}}",
                 rep.median_secs(),
                 repf.median_secs(),
+                flops / rep.median_secs() / 1e9,
+            ));
+        }
+
+        let max_t = *thread_set.last().unwrap();
+        let speedup = rep_t1_s / rep_best_s;
+        lines.push(format!(
+            "{{\"bench\":\"repops\",\"kind\":\"speedup\",\"n\":{n},\"threads\":{max_t},\
+             \"hw_threads\":{hw_threads},\"speedup\":{speedup:.3}}}"
+        ));
+        if n >= 512 && speedup < 1.0 {
+            gate_failures
+                .push(format!("n={n}: {max_t}-thread speedup {speedup:.2}x < 1.0x"));
+        }
+        if n >= 1024 && max_t >= 4 && speedup < 2.0 {
+            println!("  note: n={n} speedup {speedup:.2}x below the 2x target on this machine");
+        }
+
+        // overhead vs the free-order baselines, like-for-like at 1 thread
+        parallel::set_threads(1);
+        let rep1 = time_adaptive("rep", budget, 50, || repops::matmul(&a, &b));
+        let repf1 = time_adaptive("repfma", budget, 50, || repops::matmul_fma(&a, &b));
+        for hw in &profiles {
+            let base = time_adaptive("base", budget, 50, || baseline::matmul(&a, &b, hw));
+            let o = overhead_pct(&rep1, &base);
+            let of = overhead_pct(&repf1, &base);
+            println!(
+                "{:>6} {:>8} base[{}] {:.2} GF/s  ovh {:+.1}%  ovh-fma {:+.1}%",
+                n,
+                "serial",
+                hw.name,
+                flops / base.median_secs() / 1e9,
                 o,
                 of
             );
+            lines.push(format!(
+                "{{\"bench\":\"repops\",\"kind\":\"overhead\",\"n\":{n},\"profile\":\"{}\",\
+                 \"base_s\":{:.6},\"rep_s\":{:.6},\"repfma_s\":{:.6},\
+                 \"overhead_pct\":{:.2},\"overhead_fma_pct\":{:.2}}}",
+                hw.name,
+                base.median_secs(),
+                rep1.median_secs(),
+                repf1.median_secs(),
+                o,
+                of
+            ));
         }
     }
+
+    let json = format!("[\n  {}\n]\n", lines.join(",\n  "));
+    for line in &lines {
+        println!("JSON {line}");
+    }
+    match std::fs::write("BENCH_repops.json", &json) {
+        Ok(()) => println!("wrote BENCH_repops.json"),
+        Err(e) => eprintln!("could not write BENCH_repops.json: {e}"),
+    }
+
     println!("\npaper reference: T4 steady-state ≈35%, RTX3090 ≈60–70%, small sizes up to ~200%");
+    if assert_speedup {
+        if gate_failures.is_empty() {
+            println!("speedup gate passed: multicore >= single-core for all n >= 512");
+        } else {
+            eprintln!("speedup gate FAILED:");
+            for f in &gate_failures {
+                eprintln!("  {f}");
+            }
+            std::process::exit(1);
+        }
+    }
 }

@@ -12,6 +12,7 @@ use crate::tensor::math;
 use crate::tensor::profile::{HardwareProfile, KernelTimer};
 use crate::tensor::repops;
 use crate::tensor::Tensor;
+use crate::util::parallel;
 
 use super::{InitKind, Op};
 
@@ -174,21 +175,23 @@ fn op_key(op: &Op) -> &'static str {
     }
 }
 
-/// `[a,b,c,d] -> [a,c,b,d]`.
+/// `[a,b,c,d] -> [a,c,b,d]`. Pure data movement — every output row of `d`
+/// floats is one independent copy, so output-row ranges fan out to the pool.
 fn perm0213(x: &Tensor) -> Tensor {
     assert_eq!(x.rank(), 4, "perm0213 wants rank-4, got {:?}", x.shape());
     let (a, b, c, d) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
     let mut out = vec![0.0f32; x.numel()];
     let src = x.data();
-    for ia in 0..a {
-        for ib in 0..b {
-            for ic in 0..c {
-                let srow = &src[(((ia * b) + ib) * c + ic) * d..][..d];
-                let drow = &mut out[(((ia * c) + ic) * b + ib) * d..][..d];
-                drow.copy_from_slice(srow);
-            }
+    let min_rows = (parallel::EW_GRAIN / d.max(1)).max(1);
+    parallel::for_each_row_chunk(&mut out, d, min_rows, |first, dst| {
+        for (drow, ro) in dst.chunks_exact_mut(d).zip(first..) {
+            // output row ro = ((ia*c + ic)*b + ib)
+            let ib = ro % b;
+            let ic = (ro / b) % c;
+            let ia = ro / (b * c);
+            drow.copy_from_slice(&src[(((ia * b) + ib) * c + ic) * d..][..d]);
         }
-    }
+    });
     Tensor::new([a, c, b, d], out)
 }
 
@@ -206,23 +209,43 @@ fn add_bcast(a: &Tensor, b: &Tensor) -> Tensor {
     );
     let bn = b.numel().max(1);
     let mut out = a.data().to_vec();
-    for (i, o) in out.iter_mut().enumerate() {
-        *o += b.data()[i % bn];
-    }
+    let bd = b.data();
+    // each bn-float row adds the same broadcast operand: rows fan out
+    let min_rows = (parallel::EW_GRAIN / bn).max(1);
+    parallel::for_each_row_chunk(&mut out, bn, min_rows, |_, dst| {
+        for orow in dst.chunks_exact_mut(bn) {
+            for (o, &x) in orow.iter_mut().zip(bd) {
+                *o += x;
+            }
+        }
+    });
     Tensor::new(a.shape().to_vec(), out)
 }
 
 /// Backward of `add_bcast`'s broadcast operand: fold leading dims by
 /// ascending-index summation into the trailing `suffix_rank` shape.
+///
+/// The leading (folded) dimension is order-critical, so the split is over
+/// *output elements*: each one still accumulates its `i % sn == j` terms
+/// in ascending flat order — exactly the serial per-element order (the
+/// serial loop merely interleaves independent elements).
 fn sum_leading(dy: &Tensor, suffix_rank: usize) -> Tensor {
     let r = dy.rank();
     assert!(suffix_rank <= r);
     let suffix: Vec<usize> = dy.shape()[r - suffix_rank..].to_vec();
     let sn: usize = suffix.iter().product::<usize>().max(1);
+    let lead = dy.numel() / sn;
     let mut out = vec![0.0f32; sn];
-    for (i, &v) in dy.data().iter().enumerate() {
-        out[i % sn] += v;
-    }
+    let dyd = dy.data();
+    let min_cols = (parallel::EW_GRAIN / lead.max(1)).max(1);
+    parallel::for_each_row_chunk(&mut out, 1, min_cols, |first, dst| {
+        for l in 0..lead {
+            let row = &dyd[l * sn + first..l * sn + first + dst.len()];
+            for (o, &v) in dst.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+    });
     Tensor::new(suffix, out)
 }
 
@@ -239,17 +262,20 @@ fn rope_bwd(dy: &Tensor, sin: &Tensor, cos: &Tensor) -> Tensor {
 
 fn rope_apply(x: &Tensor, sin: &Tensor, cos: &Tensor, inverse: bool) -> Tensor {
     assert_eq!(x.rank(), 3, "rope wants [n, s, d], got {:?}", x.shape());
-    let (n, s, d) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let (_n, s, d) = (x.shape()[0], x.shape()[1], x.shape()[2]);
     assert_eq!(d % 2, 0, "rope head dim must be even");
     assert_eq!(sin.shape(), [s, d / 2], "rope sin table {:?}", sin.shape());
     assert_eq!(cos.shape(), [s, d / 2]);
     let mut out = vec![0.0f32; x.numel()];
-    for b in 0..n {
-        for t in 0..s {
-            let row = &x.data()[(b * s + t) * d..][..d];
-            let orow = &mut out[(b * s + t) * d..][..d];
-            let srow = &sin.data()[t * (d / 2)..][..d / 2];
-            let crow = &cos.data()[t * (d / 2)..][..d / 2];
+    let (xd, sd, cd) = (x.data(), sin.data(), cos.data());
+    // every (b, t) row rotates independently: rows fan out to the pool
+    let min_rows = (parallel::EW_GRAIN / d.max(1)).max(1);
+    parallel::for_each_row_chunk(&mut out, d, min_rows, |first, dst| {
+        for (orow, rt) in dst.chunks_exact_mut(d).zip(first..) {
+            let t = rt % s;
+            let row = &xd[rt * d..][..d];
+            let srow = &sd[t * (d / 2)..][..d / 2];
+            let crow = &cd[t * (d / 2)..][..d / 2];
             for i in 0..d / 2 {
                 let (x0, x1) = (row[2 * i], row[2 * i + 1]);
                 let (sn, cs) = if inverse { (-srow[i], crow[i]) } else { (srow[i], crow[i]) };
@@ -257,11 +283,14 @@ fn rope_apply(x: &Tensor, sin: &Tensor, cos: &Tensor, inverse: bool) -> Tensor {
                 orow[2 * i + 1] = x0 * sn + x1 * cs;
             }
         }
-    }
+    });
     Tensor::new(x.shape().to_vec(), out)
 }
 
 /// Mean cross-entropy over rows (fixed ascending-row accumulation).
+///
+/// The scalar accumulation over rows is order-critical, so it stays a
+/// single ascending loop (the log-softmax it consumes is parallel).
 fn ce_loss(logits: &Tensor, targets: &Tensor, backend: Backend) -> Tensor {
     assert_eq!(logits.rank(), 2, "ce_loss wants [r, v] logits");
     let (r, v) = (logits.shape()[0], logits.shape()[1]);
@@ -288,14 +317,18 @@ fn ce_grad(logits: &Tensor, targets: &Tensor, dloss: &Tensor, backend: Backend) 
         Backend::Free(hw) => baseline::softmax_lastdim(logits, &hw),
     };
     let scale = dl / r as f32;
-    for row in 0..r {
-        let t = targets.data()[row] as usize;
-        let prow = &mut p.data_mut()[row * v..(row + 1) * v];
-        for x in prow.iter_mut() {
-            *x *= scale;
+    let td = targets.data().to_vec();
+    // rows are independent elementwise updates: fan out to the pool
+    let min_rows = (parallel::EW_GRAIN / v.max(1)).max(1);
+    parallel::for_each_row_chunk(p.data_mut(), v, min_rows, |first, dst| {
+        for (prow, row) in dst.chunks_exact_mut(v).zip(first..) {
+            let t = td[row] as usize;
+            for x in prow.iter_mut() {
+                *x *= scale;
+            }
+            prow[t] -= scale;
         }
-        prow[t] -= scale;
-    }
+    });
     p
 }
 
@@ -323,29 +356,39 @@ fn silu_grad(x: &Tensor, dy: &Tensor, backend: Backend) -> Tensor {
     })
 }
 
-/// `dx = y ⊙ (dy - Σ_j dy_j·y_j)` per row; the dot is order-sensitive.
+/// `dx = y ⊙ (dy - Σ_j dy_j·y_j)` per row; the dot is order-sensitive
+/// *within* a row, so rows fan out to the pool (one scratch `prod` buffer
+/// per chunk) while each row's ascending-j dot stays intact.
 fn softmax_grad(y: &Tensor, dy: &Tensor, backend: Backend) -> Tensor {
     assert_eq!(y.shape(), dy.shape());
     let n = *y.shape().last().unwrap();
-    let rows = y.numel() / n;
     let mut out = vec![0.0f32; y.numel()];
-    let mut prod = vec![0.0f32; n];
-    for r in 0..rows {
-        let yr = &y.data()[r * n..(r + 1) * n];
-        let dyr = &dy.data()[r * n..(r + 1) * n];
-        for j in 0..n {
-            prod[j] = dyr[j] * yr[j];
+    let (yd, dyd) = (y.data(), dy.data());
+    let min_rows = (parallel::EW_GRAIN / n.max(1)).max(1);
+    parallel::for_each_row_chunk(&mut out, n, min_rows, |first, dst| {
+        let mut prod = vec![0.0f32; n];
+        for (orow, r) in dst.chunks_exact_mut(n).zip(first..) {
+            let yr = &yd[r * n..(r + 1) * n];
+            let dyr = &dyd[r * n..(r + 1) * n];
+            for j in 0..n {
+                prod[j] = dyr[j] * yr[j];
+            }
+            let dot = backend.sum(&prod);
+            for j in 0..n {
+                orow[j] = yr[j] * (dyr[j] - dot);
+            }
         }
-        let dot = backend.sum(&prod);
-        let orow = &mut out[r * n..(r + 1) * n];
-        for j in 0..n {
-            orow[j] = yr[j] * (dyr[j] - dot);
-        }
-    }
+    });
     Tensor::new(y.shape().to_vec(), out)
 }
 
 /// LayerNorm backward → `(dx, dgamma, dbeta)`.
+///
+/// Deliberately serial: `dgamma`/`dbeta` accumulate *across rows* in
+/// ascending row order, which makes the row dimension order-critical here
+/// (unlike the forward pass). Splitting rows across threads would need
+/// per-thread partials plus a reduction — a different, non-reproducible
+/// summation tree — so the whole backward stays one fixed-order loop.
 fn layernorm_grad(x: &Tensor, gamma: &Tensor, dy: &Tensor, eps: f32, backend: Backend) -> Vec<Tensor> {
     let n = *x.shape().last().unwrap();
     let rows = x.numel() / n;
@@ -395,6 +438,9 @@ fn layernorm_grad(x: &Tensor, gamma: &Tensor, dy: &Tensor, eps: f32, backend: Ba
 }
 
 /// RMSNorm backward → `(dx, dgamma)`.
+///
+/// Serial for the same reason as [`layernorm_grad`]: `dgamma` sums over
+/// rows in ascending order, making rows order-critical.
 fn rmsnorm_grad(x: &Tensor, gamma: &Tensor, dy: &Tensor, eps: f32, backend: Backend) -> Vec<Tensor> {
     let n = *x.shape().last().unwrap();
     let rows = x.numel() / n;
@@ -454,16 +500,27 @@ fn adam_update(
     let mut nw = vec![0.0f32; w.numel()];
     let mut nm = vec![0.0f32; w.numel()];
     let mut nv = vec![0.0f32; w.numel()];
-    for i in 0..w.numel() {
-        let gi = g.data()[i];
-        let mi = beta1 * m.data()[i] + (1.0 - beta1) * gi;
-        let vi = beta2 * v.data()[i] + (1.0 - beta2) * (gi * gi);
-        let mhat = mi / bc1;
-        let vhat = vi / bc2;
-        nw[i] = w.data()[i] - lr * mhat / (vhat.sqrt() + eps);
-        nm[i] = mi;
-        nv[i] = vi;
-    }
+    let (wd, gd, md, vd) = (w.data(), g.data(), m.data(), v.data());
+    // purely elementwise: index ranges fan out, writing disjoint slices of
+    // all three outputs (SendPtr carries the two extra output bases)
+    let nmp = parallel::SendPtr::new(nm.as_mut_ptr());
+    let nvp = parallel::SendPtr::new(nv.as_mut_ptr());
+    parallel::for_each_row_chunk(&mut nw, 1, parallel::EW_GRAIN, |first, dst| {
+        for (o, i) in dst.iter_mut().zip(first..) {
+            let gi = gd[i];
+            let mi = beta1 * md[i] + (1.0 - beta1) * gi;
+            let vi = beta2 * vd[i] + (1.0 - beta2) * (gi * gi);
+            let mhat = mi / bc1;
+            let vhat = vi / bc2;
+            *o = wd[i] - lr * mhat / (vhat.sqrt() + eps);
+            // SAFETY: index i lies in this chunk's exclusive range; chunks
+            // of the three parallel outputs are disjoint the same way.
+            unsafe {
+                *nmp.get().add(i) = mi;
+                *nvp.get().add(i) = vi;
+            }
+        }
+    });
     vec![
         Tensor::new(w.shape().to_vec(), nw),
         Tensor::new(w.shape().to_vec(), nm),

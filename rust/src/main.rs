@@ -25,6 +25,10 @@
 //!                or worker (`--from host:port`); Prometheus text by
 //!                default, `--json` for the JSON rendering
 //!
+//! Every subcommand accepts `--threads N` (default: `VERDE_THREADS`, else
+//! all cores): the RepOps kernel thread count. Results are bitwise
+//! identical at any setting — only wall-clock changes.
+//!
 //! Examples:
 //!   verde train --model llama-tiny --steps 32 --batch 2 --seq 8
 //!   verde dispute --model mlp --steps 16 --fault tamper --fault-step 9
@@ -531,6 +535,14 @@ fn cmd_stats(args: &Args) {
 
 fn main() {
     let args = Args::parse();
+    // Global RepOps thread knob, honored by every subcommand (kernels are
+    // bitwise identical at any thread count; this only changes wall-clock).
+    // Falls back to VERDE_THREADS, then to the machine's core count.
+    if let Some(t) = args.get("threads") {
+        let t: usize =
+            t.parse().unwrap_or_else(|_| panic!("--threads wants a positive integer, got '{t}'"));
+        verde::util::parallel::set_threads(t);
+    }
     match args.positional.first().map(String::as_str) {
         Some("train") => cmd_train(&args),
         Some("dispute") => cmd_dispute(&args),
@@ -542,7 +554,7 @@ fn main() {
         Some("stats") => cmd_stats(&args),
         _ => {
             eprintln!(
-                "usage: verde <train|dispute|tournament|info|worker|coordinator|client|stats> [--model M] [--steps N] ..."
+                "usage: verde <train|dispute|tournament|info|worker|coordinator|client|stats> [--model M] [--steps N] [--threads T] ..."
             );
             eprintln!("see rust/src/main.rs header for examples");
             std::process::exit(2);

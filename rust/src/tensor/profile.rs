@@ -21,6 +21,13 @@ use std::time::Instant;
 /// (plus a `repops_ops` counter); otherwise starting it is a single
 /// relaxed atomic load and stopping is a no-op, so the training hot loop
 /// pays nothing while the timer is dormant.
+///
+/// The timer brackets the whole operator on the *submitting* thread, so on
+/// the data-parallel path (see `util::parallel`) it measures wall-clock
+/// including fan-out and the completion barrier — not summed per-thread
+/// CPU time. That is deliberate: the histograms then show multicore
+/// speedup directly, and attribution stays on the one op the submitter is
+/// executing (pool workers never start timers of their own).
 pub struct KernelTimer {
     start: Option<Instant>,
 }

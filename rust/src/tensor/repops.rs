@@ -20,9 +20,25 @@
 //! [`HardwareProfile`](super::profile::HardwareProfile), live in
 //! [`super::baseline`]; the two share shape-checking helpers so benches
 //! compare like for like.
+//!
+//! **Data parallelism.** Every kernel here fans its order-*insensitive*
+//! dimensions (M rows, N panels, batch, independent output rows/elements)
+//! out to the persistent pool in [`crate::util::parallel`]; the
+//! order-critical dimension of each reduction stays a single fixed-order
+//! loop inside one chunk body. Results are bitwise identical for every
+//! thread count — partitioning is a pure function of shape, each output
+//! element is produced by exactly one unchanged scalar recipe, and chunks
+//! write disjoint output rows. `tests/par_invariance.rs` pins this across
+//! thread counts {1, 2, 3, 8} up to trainer checkpoint roots. The
+//! free-order [`super::baseline`] deliberately stays single-core: it
+//! simulates a *reduction schedule*, not wall-clock, and keeping it serial
+//! preserves the seeded overhead-benchmark baseline.
+
+use std::cell::RefCell;
 
 use super::math;
 use super::Tensor;
+use crate::util::parallel;
 
 // ---------------------------------------------------------------------------
 // shape helpers (shared with baseline via pub(crate))
@@ -77,40 +93,68 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 /// Register-tile width of the j panel (4 AVX2 vectors).
 const JB: usize = 32;
 
-/// Core of [`matmul`] on raw slices; also used by the batched variant.
-///
-/// Blocked `jb → i → k` schedule with a `JB`-wide register accumulator:
-/// the B panel stays hot in L2 across the whole `i` loop and C traffic
-/// drops to one store per (i, panel). Per output element the accumulation
-/// is STILL one term per k in ascending order — bitwise identical to the
-/// naive i-j-k pseudo-code (checked in the tests); blocking only re-orders
-/// independent elements. `FMA=false` → separately-rounded mul+add (the
-/// portable §3.2 contract); `FMA=true` → single-rounded fused contract
-/// (matches XLA/FFMA, see [`matmul_fma`]).
 /// K block size: B sub-panel (KB × JB × 4 B = 32 KiB) stays L1-resident.
 const KB: usize = 256;
 
-#[inline]
-pub(crate) fn mm_kernel<const FMA: bool>(
+thread_local! {
+    /// Per-thread packed-B scratch for the matmul kernel: allocated once
+    /// per thread (main or pool worker) and reused across every call, so
+    /// the hot path performs no allocation. Only the prefix written for
+    /// the current (panel, K-block) tile is ever read back.
+    static PACK: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+/// Hand the caller this thread's packed-B scratch, growing it on first use.
+fn with_pack<R>(f: impl FnOnce(&mut [f32]) -> R) -> R {
+    PACK.with(|p| {
+        let mut p = p.borrow_mut();
+        if p.len() < KB * JB {
+            p.resize(KB * JB, 0.0);
+        }
+        f(&mut p[..KB * JB])
+    })
+}
+
+/// One thread's rectangle of the matmul: rows `i0..i1` × columns `j0..j1`
+/// of the `[m, n]` output, each element accumulated over the full K range.
+///
+/// Blocked `jb → kb(ascending, required for order) → i` schedule with a
+/// `JB`-wide register accumulator reloaded from C between K blocks.
+/// Reloading a partial sum through memory does not change its bits, and kb
+/// blocks retire in ascending order, so every element still accumulates
+/// term-by-term in ascending k — bitwise equal to the naive i-j-k
+/// pseudo-code (checked in the tests); blocking and the rectangle split
+/// only re-order *independent* elements. `FMA=false` → separately-rounded
+/// mul+add (the portable §3.2 contract); `FMA=true` → single-rounded fused
+/// contract (matches XLA/FFMA, see [`matmul_fma`]).
+///
+/// The B sub-panel is packed contiguously into `pack`: kills the
+/// large-stride cache-set conflicts of walking `b[(kb+kk)*n + jb]` and
+/// gives the inner loop pure unit-stride loads. Packing is a copy — bits
+/// are untouched. `j0` is always a multiple of `JB`, so panel boundaries
+/// are identical to the serial schedule (irrelevant for bits, tidy for
+/// perf comparisons).
+///
+/// # Safety
+/// `c` must point at the full `[m, n]` output buffer, and no other thread
+/// may concurrently touch the `[i0..i1) × [j0..j1)` rectangle. Callers
+/// split the output into disjoint rectangles by construction.
+#[allow(clippy::too_many_arguments)]
+unsafe fn mm_rect<const FMA: bool>(
     a: &[f32],
     b: &[f32],
-    c: &mut [f32],
-    m: usize,
+    c: *mut f32,
     k: usize,
     n: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    pack: &mut [f32],
 ) {
-    // jb → kb(ascending, required for order) → i, with a JB-wide register
-    // accumulator reloaded from C between K blocks. Reloading a partial sum
-    // through memory does not change its bits, and kb blocks retire in
-    // ascending order, so every element still accumulates term-by-term in
-    // ascending k — bitwise equal to the naive pseudo-code.
-    // B sub-panel packed contiguously: kills the large-stride cache-set
-    // conflicts of walking b[(kb+kk)*n + jb] and gives the inner loop pure
-    // unit-stride loads. Packing is a copy — bits are untouched.
-    let mut pack = vec![0.0f32; KB * JB];
-    let mut jb = 0;
-    while jb < n {
-        let w = JB.min(n - jb);
+    let mut jb = j0;
+    while jb < j1 {
+        let w = JB.min(j1 - jb);
         let mut kb = 0;
         while kb < k {
             let kw = KB.min(k - kb);
@@ -118,9 +162,11 @@ pub(crate) fn mm_kernel<const FMA: bool>(
                 pack[kk * w..kk * w + w]
                     .copy_from_slice(&b[(kb + kk) * n + jb..(kb + kk) * n + jb + w]);
             }
-            for i in 0..m {
+            for i in i0..i1 {
                 let arow = &a[i * k + kb..i * k + kb + kw];
-                let crow = &mut c[i * n + jb..i * n + jb + w];
+                // SAFETY: the (i, jb..jb+w) row segment lies inside this
+                // call's exclusive rectangle (see function contract).
+                let crow = unsafe { std::slice::from_raw_parts_mut(c.add(i * n + jb), w) };
                 if w == JB {
                     let mut acc = [0.0f32; JB];
                     acc.copy_from_slice(crow);
@@ -136,7 +182,7 @@ pub(crate) fn mm_kernel<const FMA: bool>(
                     }
                     crow.copy_from_slice(&acc);
                 } else {
-                    // remainder panel (n not a multiple of JB)
+                    // remainder panel (j1 - jb < JB)
                     let mut accbuf = [0.0f32; JB];
                     let acc = &mut accbuf[..w];
                     acc.copy_from_slice(crow);
@@ -156,6 +202,53 @@ pub(crate) fn mm_kernel<const FMA: bool>(
             kb += kw;
         }
         jb += w;
+    }
+}
+
+/// Core of [`matmul`] on raw slices; also used by the batched variant.
+///
+/// Fans the order-insensitive dimensions out to the worker pool: i-row
+/// blocks when there are enough rows to feed every thread, j-panel blocks
+/// otherwise (tall-skinny / vector-matrix shapes). Each chunk runs
+/// [`mm_rect`] on a disjoint output rectangle with this thread's packed-B
+/// scratch; per-element ascending-k accumulation is untouched in both
+/// contracts, so the result is bitwise identical at every thread count.
+#[inline]
+pub(crate) fn mm_kernel<const FMA: bool>(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let t = parallel::threads();
+    let cp = parallel::SendPtr::new(c.as_mut_ptr());
+    let total = m * k * n;
+    let panels = n.div_ceil(JB);
+    if t <= 1 || total < 2 * parallel::MM_GRAIN {
+        with_pack(|pack| unsafe { mm_rect::<FMA>(a, b, cp.get(), k, n, 0, m, 0, n, pack) });
+    } else if m >= t || panels < 2 {
+        // split over i-row blocks; each chunk covers all columns
+        let min_rows = (parallel::MM_GRAIN / (k * n).max(1)).max(1);
+        parallel::for_each_chunk(m, min_rows, |r| {
+            with_pack(|pack| unsafe {
+                mm_rect::<FMA>(a, b, cp.get(), k, n, r.start, r.end, 0, n, pack)
+            });
+        });
+    } else {
+        // few rows: split over j panels; each chunk covers all rows
+        let min_panels = (parallel::MM_GRAIN / (m * k * JB).max(1)).max(1);
+        parallel::for_each_chunk(panels, min_panels, |pr| {
+            let j0 = pr.start * JB;
+            let j1 = (pr.end * JB).min(n);
+            with_pack(|pack| unsafe {
+                mm_rect::<FMA>(a, b, cp.get(), k, n, 0, m, j0, j1, pack)
+            });
+        });
     }
 }
 
@@ -179,20 +272,72 @@ pub fn matmul_fma(a: &Tensor, b: &Tensor) -> Tensor {
 }
 
 /// Reproducible batched matmul `[b,m,k] x [b,k,n] -> [b,m,n]`.
+///
+/// The batch dimension is fully order-insensitive, so batches fan out to
+/// the pool; each batch entry runs the *serial* rectangle kernel inside
+/// its chunk (nesting a parallel region per batch would only add overhead,
+/// and the inline fallback makes it bitwise-equivalent anyway).
 pub fn bmm(a: &Tensor, b: &Tensor) -> Tensor {
     let (bs, m, k, n) = bmm_dims(a, b);
     let mut c = vec![0.0f32; bs * m * n];
-    for ib in 0..bs {
-        matmul_into(
-            &a.data()[ib * m * k..(ib + 1) * m * k],
-            &b.data()[ib * k * n..(ib + 1) * k * n],
-            &mut c[ib * m * n..(ib + 1) * m * n],
-            m,
-            k,
-            n,
-        );
-    }
+    let per_batch = m * k * n;
+    let cp = parallel::SendPtr::new(c.as_mut_ptr());
+    let min_batches = (parallel::MM_GRAIN / per_batch.max(1)).max(1);
+    let (ad, bd) = (a.data(), b.data());
+    parallel::for_each_chunk(bs, min_batches, |r| {
+        for ib in r {
+            with_pack(|pack| unsafe {
+                // SAFETY: batch ib's [m, n] output block is touched by
+                // exactly one chunk; blocks are disjoint.
+                mm_rect::<false>(
+                    &ad[ib * m * k..(ib + 1) * m * k],
+                    &bd[ib * k * n..(ib + 1) * k * n],
+                    cp.get().add(ib * m * n),
+                    k,
+                    n,
+                    0,
+                    m,
+                    0,
+                    n,
+                    pack,
+                )
+            });
+        }
+    });
     Tensor::new([bs, m, n], c)
+}
+
+/// Tile side for the cache-blocked transposes: a 32×32 f32 tile is 4 KiB,
+/// so source rows and destination columns both stay L1-resident while the
+/// tile is copied, instead of every store missing at transformer shapes.
+const TB: usize = 32;
+
+/// Transpose the `[m, n]` block at `src` into the `[n, m]` block at `dst`,
+/// walking TB×TB tiles. Pure data movement — bits are copied, never
+/// computed — so tiling and threading cannot change the result.
+fn transpose_block_into(src: &[f32], dst: &mut [f32], m: usize, n: usize) {
+    let dp = parallel::SendPtr::new(dst.as_mut_ptr());
+    // chunk over row-tiles: each chunk writes dst columns i0.., disjoint
+    let row_tiles = m.div_ceil(TB);
+    let min_tiles = (parallel::EW_GRAIN / (TB * n).max(1)).max(1);
+    parallel::for_each_chunk(row_tiles, min_tiles, |tr| {
+        for ti in tr {
+            let i0 = ti * TB;
+            let i1 = (i0 + TB).min(m);
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + TB).min(n);
+                for i in i0..i1 {
+                    for j in j0..j1 {
+                        // SAFETY: dst element (j, i) with i in this chunk's
+                        // exclusive i-range; chunks write disjoint columns.
+                        unsafe { *dp.get().add(j * m + i) = src[i * n + j] };
+                    }
+                }
+                j0 = j1;
+            }
+        }
+    });
 }
 
 /// 2-D transpose (pure data movement — no FP ops, trivially reproducible).
@@ -200,11 +345,7 @@ pub fn transpose2d(a: &Tensor) -> Tensor {
     assert_eq!(a.rank(), 2);
     let (m, n) = (a.shape()[0], a.shape()[1]);
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        for j in 0..n {
-            out[j * m + i] = a.data()[i * n + j];
-        }
-    }
+    transpose_block_into(a.data(), &mut out, m, n);
     Tensor::new([n, m], out)
 }
 
@@ -213,14 +354,8 @@ pub fn transpose_last2(a: &Tensor) -> Tensor {
     assert_eq!(a.rank(), 3);
     let (bs, m, n) = (a.shape()[0], a.shape()[1], a.shape()[2]);
     let mut out = vec![0.0f32; bs * m * n];
-    for ib in 0..bs {
-        let src = &a.data()[ib * m * n..(ib + 1) * m * n];
-        let dst = &mut out[ib * m * n..(ib + 1) * m * n];
-        for i in 0..m {
-            for j in 0..n {
-                dst[j * m + i] = src[i * n + j];
-            }
-        }
+    for (ib, dst) in out.chunks_exact_mut(m * n).enumerate() {
+        transpose_block_into(&a.data()[ib * m * n..(ib + 1) * m * n], dst, m, n);
     }
     Tensor::new([bs, n, m], out)
 }
@@ -230,14 +365,22 @@ pub fn transpose_last2(a: &Tensor) -> Tensor {
 // ---------------------------------------------------------------------------
 
 /// Elementwise zip of two same-shape tensors (public: backward kernels are
-/// built from it).
-pub fn zipmap(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+/// built from it). Each output element depends only on its own inputs, so
+/// flat index ranges fan out to the pool; `f` runs once per element with
+/// unchanged arguments regardless of thread count.
+pub fn zipmap(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32 + Sync) -> Tensor {
     assert_eq!(a.shape(), b.shape(), "elementwise shape mismatch");
-    let data = a.data().iter().zip(b.data()).map(|(&x, &y)| f(x, y)).collect();
-    Tensor::new(a.shape().to_vec(), data)
+    let mut out = vec![0.0f32; a.numel()];
+    let (ad, bd) = (a.data(), b.data());
+    parallel::for_each_row_chunk(&mut out, 1, parallel::EW_GRAIN, |first, dst| {
+        for (o, i) in dst.iter_mut().zip(first..) {
+            *o = f(ad[i], bd[i]);
+        }
+    });
+    Tensor::new(a.shape().to_vec(), out)
 }
 
-fn zip_same_shape(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+fn zip_same_shape(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32 + Sync) -> Tensor {
     zipmap(a, b, f)
 }
 
@@ -258,36 +401,51 @@ pub fn div(a: &Tensor, b: &Tensor) -> Tensor {
 }
 
 pub fn scale(a: &Tensor, s: f32) -> Tensor {
-    Tensor::new(a.shape().to_vec(), a.data().iter().map(|&x| x * s).collect())
+    map(a, |x| x * s)
 }
 
-pub fn map(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
-    Tensor::new(a.shape().to_vec(), a.data().iter().map(|&x| f(x)).collect())
+pub fn map(a: &Tensor, f: impl Fn(f32) -> f32 + Sync) -> Tensor {
+    let mut out = vec![0.0f32; a.numel()];
+    let ad = a.data();
+    parallel::for_each_row_chunk(&mut out, 1, parallel::EW_GRAIN, |first, dst| {
+        for (o, i) in dst.iter_mut().zip(first..) {
+            *o = f(ad[i]);
+        }
+    });
+    Tensor::new(a.shape().to_vec(), out)
 }
 
 /// `a + row` where `row` broadcasts across all leading dims: `[..., n] + [n]`.
 pub fn add_row(a: &Tensor, row: &Tensor) -> Tensor {
-    let (rows, n) = rows_lastdim(a);
+    let (_rows, n) = rows_lastdim(a);
     assert_eq!(row.shape(), [n], "row broadcast wants [{n}], got {:?}", row.shape());
     let mut out = a.data().to_vec();
-    for r in 0..rows {
-        for j in 0..n {
-            out[r * n + j] += row.data()[j];
+    let rd = row.data();
+    let min_rows = (parallel::EW_GRAIN / n.max(1)).max(1);
+    parallel::for_each_row_chunk(&mut out, n, min_rows, |_, dst| {
+        for orow in dst.chunks_exact_mut(n) {
+            for j in 0..n {
+                orow[j] += rd[j];
+            }
         }
-    }
+    });
     Tensor::new(a.shape().to_vec(), out)
 }
 
 /// `a * row`, broadcasting as in [`add_row`].
 pub fn mul_row(a: &Tensor, row: &Tensor) -> Tensor {
-    let (rows, n) = rows_lastdim(a);
+    let (_rows, n) = rows_lastdim(a);
     assert_eq!(row.shape(), [n]);
     let mut out = a.data().to_vec();
-    for r in 0..rows {
-        for j in 0..n {
-            out[r * n + j] *= row.data()[j];
+    let rd = row.data();
+    let min_rows = (parallel::EW_GRAIN / n.max(1)).max(1);
+    parallel::for_each_row_chunk(&mut out, n, min_rows, |_, dst| {
+        for orow in dst.chunks_exact_mut(n) {
+            for j in 0..n {
+                orow[j] *= rd[j];
+            }
         }
-    }
+    });
     Tensor::new(a.shape().to_vec(), out)
 }
 
@@ -331,9 +489,19 @@ pub fn sum_slice(xs: &[f32]) -> f32 {
 }
 
 /// Sum over the last dim: `[..., n] -> [...]`.
+///
+/// Output rows are independent, so they fan out to the pool; *within* a
+/// row the ascending-j accumulation of [`sum_slice`] is untouched.
 pub fn sum_lastdim(a: &Tensor) -> Tensor {
     let (rows, n) = rows_lastdim(a);
-    let data: Vec<f32> = (0..rows).map(|r| sum_slice(&a.data()[r * n..(r + 1) * n])).collect();
+    let mut data = vec![0.0f32; rows];
+    let ad = a.data();
+    let min_rows = (parallel::EW_GRAIN / n.max(1)).max(1);
+    parallel::for_each_row_chunk(&mut data, 1, min_rows, |first, dst| {
+        for (o, r) in dst.iter_mut().zip(first..) {
+            *o = sum_slice(&ad[r * n..(r + 1) * n]);
+        }
+    });
     let mut shape = a.shape().to_vec();
     shape.pop();
     Tensor::new(shape, data)
@@ -346,62 +514,78 @@ pub fn sum_all(a: &Tensor) -> f32 {
 
 /// Column sums: `[r, n] -> [n]`, accumulating rows in ascending order.
 /// (Used for bias gradients; row-ascending is the fixed order.)
+///
+/// The row dimension is order-critical here, so the split is over
+/// *columns*: every column's accumulation still walks rows 0..r ascending
+/// inside one chunk, and column subsets are independent outputs.
 pub fn sum_axis0(a: &Tensor) -> Tensor {
     let (rows, n) = rows_lastdim(a);
     let mut out = vec![0.0f32; n];
-    for r in 0..rows {
-        let row = &a.data()[r * n..(r + 1) * n];
-        for j in 0..n {
-            out[j] += row[j];
+    let ad = a.data();
+    let min_cols = (parallel::EW_GRAIN / rows.max(1)).max(1);
+    parallel::for_each_row_chunk(&mut out, 1, min_cols, |first, dst| {
+        for r in 0..rows {
+            let row = &ad[r * n + first..r * n + first + dst.len()];
+            for (o, &x) in dst.iter_mut().zip(row) {
+                *o += x;
+            }
         }
-    }
+    });
     Tensor::new([n], out)
 }
 
 /// Max over the last dim (ascending scan; ties keep the earlier value).
 pub fn max_lastdim(a: &Tensor) -> Tensor {
     let (rows, n) = rows_lastdim(a);
-    let data: Vec<f32> = (0..rows)
-        .map(|r| {
-            let row = &a.data()[r * n..(r + 1) * n];
+    let mut data = vec![0.0f32; rows];
+    let ad = a.data();
+    let min_rows = (parallel::EW_GRAIN / n.max(1)).max(1);
+    parallel::for_each_row_chunk(&mut data, 1, min_rows, |first, dst| {
+        for (o, r) in dst.iter_mut().zip(first..) {
+            let row = &ad[r * n..(r + 1) * n];
             let mut m = row[0];
             for &x in &row[1..] {
                 if x > m {
                     m = x;
                 }
             }
-            m
-        })
-        .collect();
+            *o = m;
+        }
+    });
     let mut shape = a.shape().to_vec();
     shape.pop();
     Tensor::new(shape, data)
 }
 
 /// Numerically-stable softmax over the last dim, all reductions fixed-order.
+/// Rows are independent → pool; the per-row max scan and ascending-j sum
+/// are unchanged inside each chunk.
 pub fn softmax_lastdim(a: &Tensor) -> Tensor {
     let (rows, n) = rows_lastdim(a);
     let mut out = vec![0.0f32; rows * n];
-    for r in 0..rows {
-        let row = &a.data()[r * n..(r + 1) * n];
-        let orow = &mut out[r * n..(r + 1) * n];
-        let mut m = row[0];
-        for &x in &row[1..] {
-            if x > m {
-                m = x;
+    let ad = a.data();
+    let min_rows = (parallel::EW_GRAIN / n.max(1)).max(1);
+    parallel::for_each_row_chunk(&mut out, n, min_rows, |first, dst| {
+        for (orow, r) in dst.chunks_exact_mut(n).zip(first..) {
+            let row = &ad[r * n..(r + 1) * n];
+            let mut m = row[0];
+            for &x in &row[1..] {
+                if x > m {
+                    m = x;
+                }
+            }
+            let mut s = 0.0f32;
+            for (o, &x) in orow.iter_mut().zip(row) {
+                let e = math::rep_exp(x - m);
+                *o = e;
+                s += e; // ascending j
+            }
+            let inv = 1.0 / s;
+            for o in orow.iter_mut() {
+                *o *= inv;
             }
         }
-        let mut s = 0.0f32;
-        for (o, &x) in orow.iter_mut().zip(row) {
-            let e = math::rep_exp(x - m);
-            *o = e;
-            s += e; // ascending j
-        }
-        let inv = 1.0 / s;
-        for o in orow.iter_mut() {
-            *o *= inv;
-        }
-    }
+    });
     Tensor::new(a.shape().to_vec(), out)
 }
 
@@ -409,24 +593,27 @@ pub fn softmax_lastdim(a: &Tensor) -> Tensor {
 pub fn log_softmax_lastdim(a: &Tensor) -> Tensor {
     let (rows, n) = rows_lastdim(a);
     let mut out = vec![0.0f32; rows * n];
-    for r in 0..rows {
-        let row = &a.data()[r * n..(r + 1) * n];
-        let orow = &mut out[r * n..(r + 1) * n];
-        let mut m = row[0];
-        for &x in &row[1..] {
-            if x > m {
-                m = x;
+    let ad = a.data();
+    let min_rows = (parallel::EW_GRAIN / n.max(1)).max(1);
+    parallel::for_each_row_chunk(&mut out, n, min_rows, |first, dst| {
+        for (orow, r) in dst.chunks_exact_mut(n).zip(first..) {
+            let row = &ad[r * n..(r + 1) * n];
+            let mut m = row[0];
+            for &x in &row[1..] {
+                if x > m {
+                    m = x;
+                }
+            }
+            let mut s = 0.0f32;
+            for &x in row {
+                s += math::rep_exp(x - m);
+            }
+            let lse = math::rep_ln(s);
+            for (o, &x) in orow.iter_mut().zip(row) {
+                *o = (x - m) - lse;
             }
         }
-        let mut s = 0.0f32;
-        for &x in row {
-            s += math::rep_exp(x - m);
-        }
-        let lse = math::rep_ln(s);
-        for (o, &x) in orow.iter_mut().zip(row) {
-            *o = (x - m) - lse;
-        }
-    }
+    });
     Tensor::new(a.shape().to_vec(), out)
 }
 
@@ -439,21 +626,24 @@ pub fn layernorm(a: &Tensor, gamma: &Tensor, beta: &Tensor, eps: f32) -> Tensor 
     assert_eq!(beta.shape(), [n]);
     let mut out = vec![0.0f32; rows * n];
     let inv_n = 1.0 / n as f32;
-    for r in 0..rows {
-        let row = &a.data()[r * n..(r + 1) * n];
-        let orow = &mut out[r * n..(r + 1) * n];
-        let mean = sum_slice(row) * inv_n;
-        let mut var = 0.0f32;
-        for &x in row {
-            let d = x - mean;
-            var += d * d;
+    let (ad, gd, bd) = (a.data(), gamma.data(), beta.data());
+    let min_rows = (parallel::EW_GRAIN / n.max(1)).max(1);
+    parallel::for_each_row_chunk(&mut out, n, min_rows, |first, dst| {
+        for (orow, r) in dst.chunks_exact_mut(n).zip(first..) {
+            let row = &ad[r * n..(r + 1) * n];
+            let mean = sum_slice(row) * inv_n;
+            let mut var = 0.0f32;
+            for &x in row {
+                let d = x - mean;
+                var += d * d;
+            }
+            var *= inv_n;
+            let inv_std = math::rep_rsqrt(var + eps);
+            for j in 0..n {
+                orow[j] = (row[j] - mean) * inv_std * gd[j] + bd[j];
+            }
         }
-        var *= inv_n;
-        let inv_std = math::rep_rsqrt(var + eps);
-        for j in 0..n {
-            orow[j] = (row[j] - mean) * inv_std * gamma.data()[j] + beta.data()[j];
-        }
-    }
+    });
     Tensor::new(a.shape().to_vec(), out)
 }
 
@@ -463,18 +653,21 @@ pub fn rmsnorm(a: &Tensor, gamma: &Tensor, eps: f32) -> Tensor {
     assert_eq!(gamma.shape(), [n]);
     let mut out = vec![0.0f32; rows * n];
     let inv_n = 1.0 / n as f32;
-    for r in 0..rows {
-        let row = &a.data()[r * n..(r + 1) * n];
-        let orow = &mut out[r * n..(r + 1) * n];
-        let mut ms = 0.0f32;
-        for &x in row {
-            ms += x * x;
+    let (ad, gd) = (a.data(), gamma.data());
+    let min_rows = (parallel::EW_GRAIN / n.max(1)).max(1);
+    parallel::for_each_row_chunk(&mut out, n, min_rows, |first, dst| {
+        for (orow, r) in dst.chunks_exact_mut(n).zip(first..) {
+            let row = &ad[r * n..(r + 1) * n];
+            let mut ms = 0.0f32;
+            for &x in row {
+                ms += x * x;
+            }
+            let inv_rms = math::rep_rsqrt(ms * inv_n + eps);
+            for j in 0..n {
+                orow[j] = row[j] * inv_rms * gd[j];
+            }
         }
-        let inv_rms = math::rep_rsqrt(ms * inv_n + eps);
-        for j in 0..n {
-            orow[j] = row[j] * inv_rms * gamma.data()[j];
-        }
-    }
+    });
     Tensor::new(a.shape().to_vec(), out)
 }
 
@@ -483,19 +676,25 @@ pub fn rmsnorm(a: &Tensor, gamma: &Tensor, eps: f32) -> Tensor {
 // ---------------------------------------------------------------------------
 
 /// Embedding lookup: `table[v,d]` gathered by integer-valued `ids[...]`,
-/// producing `[..., d]`. Pure data movement.
+/// producing `[..., d]`. Pure data movement — each output row is one
+/// independent copy, so id ranges fan out to the pool.
 pub fn embedding(table: &Tensor, ids: &Tensor) -> Tensor {
     assert_eq!(table.rank(), 2);
     let (v, d) = (table.shape()[0], table.shape()[1]);
-    let mut out = Vec::with_capacity(ids.numel() * d);
-    for &idf in ids.data() {
-        let idx = idf as usize;
-        assert!(
-            idf >= 0.0 && idf.fract() == 0.0 && idx < v,
-            "embedding id {idf} out of range for table [{v},{d}]"
-        );
-        out.extend_from_slice(&table.data()[idx * d..(idx + 1) * d]);
-    }
+    let mut out = vec![0.0f32; ids.numel() * d];
+    let (td, idd) = (table.data(), ids.data());
+    let min_rows = (parallel::EW_GRAIN / d.max(1)).max(1);
+    parallel::for_each_row_chunk(&mut out, d, min_rows, |first, dst| {
+        for (orow, pos) in dst.chunks_exact_mut(d).zip(first..) {
+            let idf = idd[pos];
+            let idx = idf as usize;
+            assert!(
+                idf >= 0.0 && idf.fract() == 0.0 && idx < v,
+                "embedding id {idf} out of range for table [{v},{d}]"
+            );
+            orow.copy_from_slice(&td[idx * d..(idx + 1) * d]);
+        }
+    });
     let mut shape = ids.shape().to_vec();
     shape.push(d);
     Tensor::new(shape, out)
@@ -504,6 +703,11 @@ pub fn embedding(table: &Tensor, ids: &Tensor) -> Tensor {
 /// Scatter-add gradient of [`embedding`]: accumulates `grad[..., d]` rows
 /// into a zero `[v, d]` table in ascending occurrence order (the fixed order
 /// that makes duplicate ids reproducible).
+///
+/// Deliberately serial: duplicate ids make the occurrence dimension
+/// order-critical (two threads scatter-adding into the same table row
+/// would race AND reassociate), and id→row is data-dependent so there is
+/// no shape-only partition of the output. Stays a single ascending walk.
 pub fn embedding_grad(v: usize, ids: &Tensor, grad: &Tensor) -> Tensor {
     let d = *grad.shape().last().unwrap();
     assert_eq!(grad.numel(), ids.numel() * d);
@@ -544,6 +748,17 @@ mod tests {
     #[test]
     fn matmul_matches_paper_pseudocode_bitwise() {
         for (m, k, n, seed) in [(3, 5, 4, 1), (17, 33, 9, 2), (64, 128, 32, 3)] {
+            let a = Tensor::rand([m, k], seed, 1.0);
+            let b = Tensor::rand([k, n], seed + 100, 1.0);
+            assert!(matmul(&a, &b).bit_eq(&naive_matmul(&a, &b)), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_remainder_shapes_match_pseudocode_bitwise() {
+        // m, k, n deliberately not multiples of JB/KB: the remainder panel
+        // and the panels-path dispatch must still match the naive bits.
+        for (m, k, n, seed) in [(33, 300, 47, 4), (1, 257, 96, 5), (65, 31, 33, 6)] {
             let a = Tensor::rand([m, k], seed, 1.0);
             let b = Tensor::rand([k, n], seed + 100, 1.0);
             assert!(matmul(&a, &b).bit_eq(&naive_matmul(&a, &b)), "({m},{k},{n})");

@@ -1,11 +1,14 @@
 //! Small self-contained utilities: deterministic PRNGs, a property-testing
-//! harness, a benchmarking harness, CLI parsing, and metrics emission.
+//! harness, a benchmarking harness, CLI parsing, metrics emission, and the
+//! deterministic worker pool behind the RepOps data parallelism.
 //!
-//! These replace crates (proptest, criterion, clap) that are unavailable in
-//! the offline build environment — see DESIGN.md §4 substitution 5.
+//! These replace crates (proptest, criterion, clap, rayon) that are
+//! unavailable in the offline build environment — see DESIGN.md §4
+//! substitution 5.
 
 pub mod bench;
 pub mod cli;
 pub mod metrics;
+pub mod parallel;
 pub mod prng;
 pub mod proptest;

@@ -1,0 +1,529 @@
+//! Deterministic data-parallel execution for the RepOps kernel path.
+//!
+//! RepOps' reproducibility contract (paper §3.2) pins the evaluation order
+//! of the **order-critical** dimension of every reduction — the K loop of a
+//! matmul, the column scan of a row sum — and nothing else. The remaining
+//! dimensions (M rows, N panels, batch, independent output elements) are
+//! order-*insensitive*: each output element is produced by exactly one
+//! fixed-order scalar computation regardless of which thread runs it or
+//! when. This module farms those dimensions out to a persistent worker
+//! pool, so every worker step and every dispute recomputation uses all
+//! cores while producing **bitwise identical** results at any thread count
+//! (`tests/par_invariance.rs` pins this from kernel level up to trainer
+//! checkpoint roots).
+//!
+//! Design rules that keep the bits honest:
+//!
+//! * **Partitioning is a pure function of shape** (`chunk_range`): chunk
+//!   boundaries depend only on the item count and the configured thread
+//!   count — never on timing, queue depth, or work stealing. Which thread
+//!   executes which chunk *is* timing-dependent, but that is invisible:
+//!   chunks write disjoint outputs and share only read-only inputs.
+//! * **Every chunk body is a complete, fixed-order computation** of its
+//!   output elements. The pool never splits an order-critical loop.
+//! * **Single-thread fallback is the identity schedule**: with 1 thread
+//!   (or a busy/nested pool) the chunks run inline on the caller, in
+//!   ascending order, through the same code path.
+//!
+//! The pool is spawn-once (threads persist across jobs; submission is a
+//! mutex + condvar handoff, not a thread spawn) and dependency-free. The
+//! thread count comes from, in priority order: [`set_threads`] (the
+//! `--threads` CLI knob), the `VERDE_THREADS` environment variable, then
+//! `std::thread::available_parallelism()`.
+//!
+//! Observability: regions, tasks, and inline fallbacks are counted in the
+//! process-global registry (`repops_par_regions` / `repops_par_tasks` /
+//! `repops_par_inline`, gauge `repops_par_threads`) — see the metric
+//! catalog in `rust/README.md`.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+// ---------------------------------------------------------------------------
+// thread-count knob
+// ---------------------------------------------------------------------------
+
+/// Desired worker count; 0 = not yet resolved (resolve lazily from
+/// `VERDE_THREADS` / available parallelism on first use).
+static DESIRED: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the global RepOps thread count (the `--threads` CLI knob). Takes
+/// effect at the next parallel region; the persistent pool is re-sized
+/// lazily. `n` is clamped to at least 1.
+pub fn set_threads(n: usize) {
+    DESIRED.store(n.max(1), Ordering::SeqCst);
+}
+
+/// The effective thread count parallel regions will use. Resolves and
+/// caches `VERDE_THREADS` (else `available_parallelism`) on first call
+/// unless [`set_threads`] already pinned a value.
+pub fn threads() -> usize {
+    let d = DESIRED.load(Ordering::SeqCst);
+    if d != 0 {
+        return d;
+    }
+    let n = std::env::var("VERDE_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1));
+    DESIRED.store(n, Ordering::SeqCst);
+    n
+}
+
+/// Deterministic contiguous split of `0..n` into `chunks` ranges: a pure
+/// function of `(n, chunks, c)`. The first `n % chunks` chunks get one
+/// extra item; ranges are disjoint, ascending, and cover `0..n` exactly.
+pub fn chunk_range(n: usize, chunks: usize, c: usize) -> Range<usize> {
+    debug_assert!(c < chunks);
+    let base = n / chunks;
+    let rem = n % chunks;
+    let start = c * base + c.min(rem);
+    let len = base + usize::from(c < rem);
+    start..start + len
+}
+
+// ---------------------------------------------------------------------------
+// the persistent pool
+// ---------------------------------------------------------------------------
+
+/// Lifetime-erased pointer to a job body. Only dereferenced by a thread
+/// that has *won a chunk* (`next.fetch_add() < n_chunks`), which the
+/// submitting thread's completion barrier guarantees happens strictly
+/// before `Pool::run` returns — i.e. while the borrow is live.
+#[derive(Clone, Copy)]
+struct BodyPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared `&`-calls from many threads are
+// fine) and the pointer is only dereferenced while the submitter keeps the
+// closure alive (see `BodyPtr` docs / the safety argument in `Pool::run`).
+unsafe impl Send for BodyPtr {}
+unsafe impl Sync for BodyPtr {}
+
+/// One submitted parallel region: a body and the chunk-claim/completion
+/// counters. `next` hands out chunk indices (claim order is timing-
+/// dependent; outputs are not), `done` counts finished chunk bodies.
+/// A panicking body is caught so the completion barrier still trips
+/// (no deadlocked submitter, no dead worker); the first panic payload is
+/// kept and re-raised on the submitting thread.
+struct Job {
+    body: BodyPtr,
+    n_chunks: usize,
+    next: AtomicUsize,
+    done: AtomicUsize,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+struct SlotState {
+    job: Option<Arc<Job>>,
+    generation: u64,
+}
+
+struct Shared {
+    slot: Mutex<SlotState>,
+    wake: Condvar,
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Claim and run chunks of `job` until none remain; the last finisher
+/// signals the submitter's completion barrier.
+fn run_chunks(shared: &Shared, job: &Job) {
+    loop {
+        let c = job.next.fetch_add(1, Ordering::Relaxed);
+        if c >= job.n_chunks {
+            return;
+        }
+        // SAFETY: `c < n_chunks` means this chunk has not been completed,
+        // so the submitter is still blocked in `Pool::run` and the closure
+        // behind `body` is alive.
+        let body = unsafe { &*job.body.0 };
+        if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(c))) {
+            let mut p = job.panic.lock().unwrap();
+            p.get_or_insert(payload);
+        }
+        if job.done.fetch_add(1, Ordering::AcqRel) + 1 == job.n_chunks {
+            let _g = shared.done_mx.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut g = shared.slot.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if g.generation != seen {
+                    seen = g.generation;
+                    if let Some(j) = g.job.clone() {
+                        break j;
+                    }
+                }
+                g = shared.wake.wait(g).unwrap();
+            }
+        };
+        run_chunks(&shared, &job);
+    }
+}
+
+/// A spawn-once worker pool: `threads - 1` persistent workers plus the
+/// submitting caller. One region runs at a time; concurrent or nested
+/// submissions fall back to inline serial execution (same bits — the
+/// schedule never changes results, only wall-clock).
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    run_mx: Mutex<()>,
+    threads: usize,
+}
+
+impl Pool {
+    /// Spawn a pool of `threads` participants (`threads - 1` OS threads;
+    /// the caller of [`Pool::run`] is the last participant).
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(SlotState { job: None, generation: 0 }),
+            wake: Condvar::new(),
+            done_mx: Mutex::new(()),
+            done_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("verde-par-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn parallel worker")
+            })
+            .collect();
+        Pool { shared, handles, run_mx: Mutex::new(()), threads }
+    }
+
+    /// Number of participants (workers + caller) this pool was sized for.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `body(c)` exactly once for every chunk `c in 0..n_chunks`,
+    /// fanned out across the pool with the caller participating. Blocks
+    /// until every chunk body has returned.
+    ///
+    /// Falls back to inline ascending-order execution when the pool is
+    /// sized 1, the region is trivial, or another region is in flight
+    /// (nested parallelism) — all of which are bitwise-invisible because
+    /// chunk bodies are independent.
+    pub fn run(&self, n_chunks: usize, body: &(dyn Fn(usize) + Sync)) {
+        if n_chunks == 0 {
+            return;
+        }
+        let guard =
+            if n_chunks > 1 && self.threads > 1 { self.run_mx.try_lock().ok() } else { None };
+        let _guard = match guard {
+            Some(g) => g,
+            None => {
+                for c in 0..n_chunks {
+                    body(c);
+                }
+                return;
+            }
+        };
+        // SAFETY: erase the borrow's lifetime so worker threads can hold a
+        // copy. Sound because this function does not return until `done ==
+        // n_chunks`, i.e. until every dereference of the pointer has
+        // completed; late-waking workers that lose the claim race never
+        // dereference it (see `run_chunks`).
+        let body_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(body) };
+        let job = Arc::new(Job {
+            body: BodyPtr(body_static),
+            n_chunks,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut g = self.shared.slot.lock().unwrap();
+            g.generation = g.generation.wrapping_add(1);
+            g.job = Some(Arc::clone(&job));
+            self.shared.wake.notify_all();
+        }
+        run_chunks(&self.shared, &job);
+        {
+            let mut g = self.shared.done_mx.lock().unwrap();
+            while job.done.load(Ordering::Acquire) < n_chunks {
+                g = self.shared.done_cv.wait(g).unwrap();
+            }
+        }
+        // Drop the slot's copy so no lifetime-erased pointer outlives the
+        // region (workers' own clones die as they re-enter the wait loop
+        // without touching the body).
+        self.shared.slot.lock().unwrap().job = None;
+        // Surface a chunk panic on the submitting thread with its original
+        // payload (assert messages survive; `#[should_panic]` tests work).
+        if let Some(p) = job.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        {
+            let _g = self.shared.slot.lock().unwrap();
+            self.shared.wake.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The process-global pool, lazily created and lazily re-sized when the
+/// knob changes. Regions hold an `Arc` for their duration, so a re-size
+/// never tears down a pool mid-region.
+fn pool() -> Arc<Pool> {
+    static POOL: Mutex<Option<Arc<Pool>>> = Mutex::new(None);
+    let want = threads();
+    let mut g = POOL.lock().unwrap();
+    match g.as_ref() {
+        Some(p) if p.threads() == want => Arc::clone(p),
+        _ => {
+            let p = Arc::new(Pool::new(want));
+            *g = Some(Arc::clone(&p));
+            p
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// high-level entry points
+// ---------------------------------------------------------------------------
+
+/// Minimum scalar work per chunk before an elementwise/movement region
+/// fans out; below it the pool overhead dwarfs the arithmetic.
+pub const EW_GRAIN: usize = 16 * 1024;
+
+/// Minimum multiply-add work per chunk for matmul-family fan-out.
+pub const MM_GRAIN: usize = 128 * 1024;
+
+struct ParObs {
+    regions: crate::obs::Counter,
+    tasks: crate::obs::Counter,
+    inline: crate::obs::Counter,
+    threads: crate::obs::Gauge,
+}
+
+fn par_obs() -> &'static ParObs {
+    static OBS: OnceLock<ParObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let g = crate::obs::global();
+        ParObs {
+            regions: g.counter("repops_par_regions"),
+            tasks: g.counter("repops_par_tasks"),
+            inline: g.counter("repops_par_inline"),
+            threads: g.gauge("repops_par_threads"),
+        }
+    })
+}
+
+/// Run `body` over `0..n` split into contiguous chunks of at least
+/// `min_items` items each, at most one chunk per configured thread. Chunk
+/// boundaries are a pure function of `(n, min_items, threads())`.
+///
+/// `body` must be safe to call concurrently on disjoint ranges; together
+/// the calls cover `0..n` exactly once.
+pub fn for_each_chunk(n: usize, min_items: usize, body: impl Fn(Range<usize>) + Sync) {
+    if n == 0 {
+        return;
+    }
+    let chunks = threads().min(n.div_ceil(min_items.max(1)));
+    if chunks <= 1 {
+        par_obs().inline.inc();
+        body(0..n);
+        return;
+    }
+    let obs = par_obs();
+    obs.regions.inc();
+    obs.tasks.add(chunks as u64);
+    obs.threads.set(threads() as u64);
+    pool().run(chunks, &|c| body(chunk_range(n, chunks, c)));
+}
+
+/// A `Send + Sync` raw `*mut f32`, for fanning disjoint writes of one
+/// output buffer across chunk bodies. The caller is responsible for the
+/// disjointness; every use in this crate derives the written region from
+/// the chunk's own (disjoint-by-construction) range.
+#[derive(Clone, Copy)]
+pub struct SendPtr(*mut f32);
+
+// SAFETY: raw pointers carry no aliasing claim; all dereferences in this
+// crate write chunk-disjoint regions (see `SendPtr` docs).
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    pub fn new(p: *mut f32) -> SendPtr {
+        SendPtr(p)
+    }
+
+    pub fn get(self) -> *mut f32 {
+        self.0
+    }
+}
+
+/// Split `out` at multiples of `stride` floats into per-chunk sub-slices
+/// (at least `min_rows` rows each) and run `body(first_row, sub_slice)`
+/// over them in parallel. Sub-slices are disjoint, so each body owns its
+/// rows exclusively; `out.len()` must be a multiple of `stride`.
+pub fn for_each_row_chunk(
+    out: &mut [f32],
+    stride: usize,
+    min_rows: usize,
+    body: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    assert!(stride > 0, "row stride must be positive");
+    assert_eq!(out.len() % stride, 0, "output length must be a multiple of the row stride");
+    let rows = out.len() / stride;
+    let base = SendPtr::new(out.as_mut_ptr());
+    for_each_chunk(rows, min_rows, move |r| {
+        // SAFETY: chunk ranges are disjoint and in-bounds, so the derived
+        // sub-slices never alias each other or escape `out`.
+        let chunk = unsafe {
+            std::slice::from_raw_parts_mut(
+                base.get().add(r.start * stride),
+                (r.end - r.start) * stride,
+            )
+        };
+        body(r.start, chunk);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_exactly_and_are_balanced() {
+        for n in [0usize, 1, 2, 7, 32, 33, 100, 1023] {
+            for chunks in 1..=9usize {
+                if n == 0 {
+                    continue;
+                }
+                let mut seen = vec![false; n];
+                let mut sizes = Vec::new();
+                let mut prev_end = 0;
+                for c in 0..chunks {
+                    let r = chunk_range(n, chunks, c);
+                    assert_eq!(r.start, prev_end, "contiguous ascending ({n},{chunks},{c})");
+                    prev_end = r.end;
+                    sizes.push(r.len());
+                    for i in r {
+                        assert!(!seen[i], "item {i} covered twice");
+                        seen[i] = true;
+                    }
+                }
+                assert_eq!(prev_end, n, "full coverage ({n},{chunks})");
+                assert!(seen.iter().all(|&s| s));
+                let (mn, mx) =
+                    (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "sizes within 1 of each other ({n},{chunks})");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_runs_every_chunk_exactly_once() {
+        let pool = Pool::new(4);
+        let n = 64;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(n, &|c| {
+            hits[c].fetch_add(1, Ordering::SeqCst);
+        });
+        for (c, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {c}");
+        }
+    }
+
+    #[test]
+    fn pool_reuses_threads_across_jobs() {
+        let pool = Pool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(8, &|_c| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 400);
+    }
+
+    #[test]
+    fn nested_regions_fall_back_inline() {
+        let pool = Pool::new(2);
+        let outer = AtomicUsize::new(0);
+        let inner = AtomicUsize::new(0);
+        pool.run(2, &|_| {
+            outer.fetch_add(1, Ordering::SeqCst);
+            // the nested submission must not deadlock; it runs inline
+            pool.run(3, &|_| {
+                inner.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(outer.load(Ordering::SeqCst), 2);
+        assert_eq!(inner.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn chunk_panic_propagates_and_pool_survives() {
+        let pool = Pool::new(4);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, &|c| {
+                if c == 3 {
+                    panic!("chunk boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "submitter sees the chunk panic");
+        // the barrier tripped and no worker died: the pool still works
+        let total = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            total.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = Pool::new(1);
+        let sum = AtomicUsize::new(0);
+        pool.run(5, &|c| {
+            sum.fetch_add(c + 1, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 15);
+    }
+
+    #[test]
+    fn row_chunks_write_disjoint_rows() {
+        let mut out = vec![0.0f32; 12 * 7];
+        for_each_row_chunk(&mut out, 7, 1, |first, chunk| {
+            for (i, row) in chunk.chunks_mut(7).enumerate() {
+                for x in row.iter_mut() {
+                    *x += (first + i) as f32;
+                }
+            }
+        });
+        for (r, row) in out.chunks(7).enumerate() {
+            assert!(row.iter().all(|&x| x == r as f32), "row {r} written once");
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Bitwise invariance of the data-parallel RepOps path (paper §3.2).
+//!
+//! The worker pool in `util::parallel` farms order-*insensitive* kernel
+//! dimensions out to threads; the reproducibility contract demands that
+//! the result bits never depend on the thread count. These tests pin that
+//! from raw kernels (remainder shapes included — m, n, k deliberately not
+//! multiples of the JB/KB blocking) up to trainer checkpoint state roots
+//! and final commitments, across thread counts {1, 2, 3, 8}.
+//!
+//! `set_threads` is process-global, so every test serializes on one lock
+//! (poison-safe: an assert failure in one test must not mask the others).
+
+use std::sync::{Mutex, MutexGuard};
+
+use verde::graph::kernels::{run_op, Backend};
+use verde::graph::Op;
+use verde::model::Preset;
+use verde::tensor::{repops, Tensor};
+use verde::train::session::Session;
+use verde::train::JobSpec;
+use verde::util::parallel;
+use verde::verde::trainer::TrainerNode;
+
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const SWEEP: [usize; 3] = [2, 3, 8];
+
+/// Run `f` at 1 thread for the reference bits, then at every count in
+/// `SWEEP`, asserting every output tensor is bitwise identical.
+fn assert_bit_invariant(label: &str, f: impl Fn() -> Vec<Tensor>) {
+    parallel::set_threads(1);
+    let want = f();
+    for &t in &SWEEP {
+        parallel::set_threads(t);
+        let got = f();
+        assert_eq!(got.len(), want.len(), "{label}: output arity at {t} threads");
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(g.bit_eq(w), "{label}: output {i} bits diverge at {t} threads");
+        }
+    }
+    parallel::set_threads(1);
+}
+
+#[test]
+fn matmul_family_bitwise_invariant_incl_remainder_shapes() {
+    let _g = lock();
+    // (m, k, n) chosen so none is a multiple of JB=32 / KB=256, covering
+    // the rows path, the panels path (m=1), and serial-threshold shapes.
+    for &(m, k, n) in
+        &[(33usize, 300usize, 47usize), (7, 64, 130), (1, 257, 96), (65, 31, 33), (130, 129, 131)]
+    {
+        let a = Tensor::rand([m, k], 42 + m as u64, 1.0);
+        let b = Tensor::rand([k, n], 77 + n as u64, 1.0);
+        assert_bit_invariant(&format!("matmul({m},{k},{n})"), || {
+            vec![repops::matmul(&a, &b)]
+        });
+        assert_bit_invariant(&format!("matmul_fma({m},{k},{n})"), || {
+            vec![repops::matmul_fma(&a, &b)]
+        });
+    }
+    // batch dimension with a remainder vs any thread count in the sweep
+    let a = Tensor::rand([5, 21, 67], 7, 1.0);
+    let b = Tensor::rand([5, 67, 43], 8, 1.0);
+    assert_bit_invariant("bmm(5,21,67,43)", || vec![repops::bmm(&a, &b)]);
+}
+
+#[test]
+fn reductions_and_norms_bitwise_invariant() {
+    let _g = lock();
+    // rows * n big enough to actually fan out (EW grain is 16 Ki items)
+    let x = Tensor::rand([67, 300], 5, 2.0);
+    let gamma = Tensor::rand([300], 6, 1.0);
+    let beta = Tensor::rand([300], 7, 1.0);
+    assert_bit_invariant("sum_lastdim", || vec![repops::sum_lastdim(&x)]);
+    assert_bit_invariant("max_lastdim", || vec![repops::max_lastdim(&x)]);
+    assert_bit_invariant("softmax_lastdim", || vec![repops::softmax_lastdim(&x)]);
+    assert_bit_invariant("log_softmax_lastdim", || vec![repops::log_softmax_lastdim(&x)]);
+    assert_bit_invariant("layernorm", || vec![repops::layernorm(&x, &gamma, &beta, 1e-5)]);
+    assert_bit_invariant("rmsnorm", || vec![repops::rmsnorm(&x, &gamma, 1e-6)]);
+    // column split: ascending-row accumulation per column must survive
+    let tall = Tensor::rand([300, 67], 9, 2.0);
+    assert_bit_invariant("sum_axis0", || vec![repops::sum_axis0(&tall)]);
+}
+
+#[test]
+fn elementwise_and_movement_bitwise_invariant() {
+    let _g = lock();
+    let x = Tensor::rand([67, 300], 11, 1.0);
+    let y = Tensor::rand([67, 300], 12, 1.0);
+    let row = Tensor::rand([300], 13, 1.0);
+    assert_bit_invariant("add", || vec![repops::add(&x, &y)]);
+    assert_bit_invariant("mul", || vec![repops::mul(&x, &y)]);
+    assert_bit_invariant("gelu", || vec![repops::gelu(&x)]);
+    assert_bit_invariant("scale", || vec![repops::scale(&x, 0.3)]);
+    assert_bit_invariant("add_row", || vec![repops::add_row(&x, &row)]);
+    assert_bit_invariant("mul_row", || vec![repops::mul_row(&x, &row)]);
+    assert_bit_invariant("transpose2d", || vec![repops::transpose2d(&x)]);
+    let b3 = Tensor::rand([3, 67, 100], 14, 1.0);
+    assert_bit_invariant("transpose_last2", || vec![repops::transpose_last2(&b3)]);
+    let table = Tensor::rand([50, 96], 15, 1.0);
+    let ids = Tensor::new(
+        [400],
+        (0..400).map(|i| ((i * 7) % 50) as f32).collect::<Vec<f32>>(),
+    );
+    assert_bit_invariant("embedding", || vec![repops::embedding(&table, &ids)]);
+}
+
+#[test]
+fn graph_kernels_bitwise_invariant() {
+    let _g = lock();
+    // Adam update: the optimizer touches every parameter every step, so
+    // its bits feed straight into checkpoint roots.
+    let w = Tensor::rand([123, 170], 21, 1.0);
+    let grad = Tensor::rand([123, 170], 22, 0.1);
+    let m = Tensor::rand([123, 170], 23, 0.01);
+    let v = repops::map(&Tensor::rand([123, 170], 24, 0.1), |z| z * z);
+    let adam = Op::AdamUpdate { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+    assert_bit_invariant("adam_update", || {
+        run_op(&adam, &[&w, &grad, &m, &v], Backend::Rep, 3)
+    });
+    // cross-entropy backward over many rows
+    let logits = Tensor::rand([120, 160], 25, 3.0);
+    let targets =
+        Tensor::new([120], (0..120).map(|i| ((i * 13) % 160) as f32).collect::<Vec<f32>>());
+    let dl = Tensor::scalar(1.0);
+    assert_bit_invariant("ce_grad", || {
+        run_op(&Op::CeGrad, &[&logits, &targets, &dl], Backend::Rep, 1)
+    });
+    // softmax backward (per-row order-sensitive dot inside parallel rows)
+    let sm = repops::softmax_lastdim(&logits);
+    let dy = Tensor::rand([120, 160], 26, 1.0);
+    assert_bit_invariant("softmax_grad", || {
+        run_op(&Op::SoftmaxGrad, &[&sm, &dy], Backend::Rep, 1)
+    });
+}
+
+#[test]
+fn one_training_step_state_root_invariant() {
+    let _g = lock();
+    let spec = JobSpec::quick(Preset::parse("mlp").unwrap(), 4);
+    let session = Session::new(spec);
+    parallel::set_threads(1);
+    let (s1, loss1) = session.advance(&session.genesis, Backend::Rep);
+    let want_root = s1.state_root();
+    for &t in &SWEEP {
+        parallel::set_threads(t);
+        let (st, losst) = session.advance(&session.genesis, Backend::Rep);
+        assert_eq!(loss1.to_bits(), losst.to_bits(), "step loss bits at {t} threads");
+        assert_eq!(want_root, st.state_root(), "state root diverges at {t} threads");
+    }
+    parallel::set_threads(1);
+}
+
+#[test]
+fn full_training_commitment_invariant_across_thread_counts() {
+    let _g = lock();
+    let spec = JobSpec::quick(Preset::parse("mlp").unwrap(), 6);
+    parallel::set_threads(1);
+    let want = TrainerNode::honest("t1", spec).train();
+    // ≥ 3 distinct thread counts total (1, 2, 3): the acceptance bar for
+    // trainer-level checkpoint-root equality.
+    for t in [2usize, 3] {
+        parallel::set_threads(t);
+        let got = TrainerNode::honest(&format!("t{t}"), spec).train();
+        assert_eq!(want, got, "final training commitment diverges at {t} threads");
+    }
+    parallel::set_threads(1);
+}
