@@ -1,52 +1,98 @@
-//! Tournament audit: a client delegates one job to FOUR providers with a
-//! mix of honest and dishonest behaviours (k > 2, paper §2 footnote 1).
-//! The single honest trainer's output must survive the knockout.
+//! The staked spot-check audit tier end to end: one **optimistic** job is
+//! pinned to a single staked provider that happens to cheat mid-job. The
+//! per-segment checkpoint commitments are spot-checked by sampled replay;
+//! the divergent segment escalates into a dispute tournament, the cheater
+//! is convicted and slashed, and the job still settles with the honest
+//! verdict — for (1 + audit_rate)× the work instead of k×.
 //!
 //! Run: `cargo run --release --example audit_tournament`
 
-use verde::graph::kernels::Backend;
 use verde::model::Preset;
-use verde::tensor::profile::HardwareProfile;
-use verde::train::session::Session;
+use verde::service::{
+    Delegation, FaultPlan, JobRequest, PooledWorker, ServiceConfig, WorkerHost, WorkerPool,
+};
 use verde::train::JobSpec;
-use verde::verde::faults::Fault;
-use verde::verde::tournament::run_tournament;
-use verde::verde::trainer::TrainerNode;
 
 fn main() {
-    let spec = JobSpec::quick(Preset::LlamaTiny, 8);
-    let session = Session::new(spec);
-    let upd = *session.program.param_updates.values().map(|s| &s.node).min().unwrap();
-
-    let roster: Vec<(&str, Backend, Fault)> = vec![
-        ("cheat-tamper", Backend::Rep, Fault::TamperOutput { step: 3, node: upd, delta: 0.05 }),
-        ("honest", Backend::Rep, Fault::None),
-        ("cheat-lazy", Backend::Rep, Fault::SkipSteps { after: 4 }),
-        ("sloppy-hw", Backend::Free(HardwareProfile::RTX3090_24G), Fault::NonRepHardware),
+    // 1. A fleet with a cheater FIRST in the free list, so the optimistic
+    //    job pins to it. It tampers with an optimizer update at step 5 —
+    //    invisible on the wire until a replay re-derives the checkpoint.
+    let plans = [
+        ("cheater", FaultPlan::Tamper { step: Some(5), delta: 0.05 }),
+        ("honest-0", FaultPlan::Honest),
+        ("honest-1", FaultPlan::Honest),
+        ("honest-2", FaultPlan::Honest),
     ];
-    let mut trainers: Vec<TrainerNode> = roster
-        .iter()
-        .map(|(name, backend, fault)| {
-            print!("training {name:<14} ({fault:?})... ");
-            let mut t = TrainerNode::new(name, spec, *backend, *fault);
-            let c = t.train();
-            println!("commitment {}", c.short());
-            t
-        })
-        .collect();
+    let pool = WorkerPool::new(
+        plans
+            .iter()
+            .map(|&(name, plan)| PooledWorker::new(name, WorkerHost::new(name, plan)))
+            .collect(),
+    );
 
-    let honest_commit = {
-        let mut h = TrainerNode::honest("ref-honest", spec);
-        h.train()
-    };
+    // 2. Stake every enrolled provider 1000 units; audit sampling is
+    //    deterministic in (audit_seed, job_id, segment).
+    let mut cfg = ServiceConfig::new(2);
+    cfg.audit_seed = 42;
+    cfg.worker_stake = 1000;
+    let delegation = Delegation::start(&pool, cfg);
 
-    let r = run_tournament(spec, &mut trainers);
-    println!("\n--- tournament ---");
-    println!("winner: trainer #{} ({})", r.winner, roster[r.winner].0);
-    println!("disputes run: {}", r.disputes);
-    for (i, v) in &r.eliminated {
-        println!("eliminated {} — {:?}", roster[*i].0, v);
+    // 3. One optimistic job, 4 checkpoint segments, audited at rate 1.0
+    //    (every commitment replayed — demo determinism; production rates
+    //    are 0.05..0.25 for a (1.05..1.25)× expected cost).
+    let spec = JobSpec::quick(Preset::Mlp, 12);
+    let handle = delegation.submit(JobRequest::new(spec).with_segments(4).with_audit(1.0));
+    let outcome = handle.wait();
+
+    println!("--- audit trail (job {}) ---", outcome.job_id);
+    for seg in &outcome.segments {
+        let verdict = if !seg.audit_sampled {
+            "unsampled"
+        } else if seg.audit_passed {
+            "replay matched commitment"
+        } else if seg.audit_escalated {
+            "DIVERGED -> tournament"
+        } else {
+            "pending"
+        };
+        println!(
+            "segment {} (steps {}..={}): {:<26} replay steps {:>2}  slashed {:>4}  winner {}",
+            seg.seg,
+            seg.start + 1,
+            seg.end,
+            verdict,
+            seg.audit_steps,
+            seg.slashed,
+            seg.winner.as_deref().unwrap_or("<none>"),
+        );
     }
-    assert_eq!(r.accepted, honest_commit, "the honest output must be accepted");
-    println!("\nOK: honest output accepted; {} cheaters exposed.", r.eliminated.len());
+
+    // 4. The honest verdict must stand despite the cheating committer.
+    let mut referee = verde::verde::trainer::TrainerNode::honest("ref", spec);
+    let honest = referee.train();
+    assert_eq!(outcome.accepted, Some(honest), "honest verdict must win");
+    assert!(outcome.eliminated >= 1, "the cheater must be eliminated");
+
+    // 5. Stake movements: the cheater's locked stake was confiscated.
+    let report = delegation.finish();
+    println!("--- stake ledger ---");
+    for s in &report.stakes {
+        println!(
+            "{:<10} deposited {:>5}  locked {:>5}  slashed {:>5}  available {:>5}",
+            s.worker,
+            s.deposited,
+            s.locked,
+            s.slashed,
+            s.available(),
+        );
+    }
+    let cheat = report.stakes.iter().find(|s| s.worker == "cheater").expect("enrolled");
+    assert!(cheat.slashed > 0, "conviction must slash the cheater's stake");
+    println!(
+        "\nOK: {} audits sampled, {} passed, {} escalated; {} stake slashed; honest verdict accepted.",
+        report.total_audit_sampled(),
+        report.total_audit_passed(),
+        report.total_audit_escalated(),
+        report.total_slashed(),
+    );
 }

@@ -11,7 +11,10 @@
 //!
 //! A third part runs one delegation with span tracing enabled and reports
 //! the per-job submit→settle latency distribution (p50/p90/p99) straight
-//! from the coordinator's span timelines.
+//! from the coordinator's span timelines. A fourth compares the optimistic
+//! staked audit tier against k-replication on the same sharded job: same
+//! verdict, strictly fewer worker-steps (`(1 + audit_rate)·steps` expected
+//! vs `k·steps`).
 //!
 //! Emits `BENCH_service.json` (throughput + latency percentiles) and
 //! `STATS_snapshot.json` (the live stats snapshot of the traced run) so
@@ -286,6 +289,93 @@ fn run_transfer_compare(steps: u64, segments: u64) -> Vec<String> {
     out
 }
 
+/// Optimistic audit tier vs k-replication: the same sharded job run both
+/// ways against identical fresh honest pools. The acceptance bar: the
+/// optimistic run settles the same verdict for `steps + Σ sampled-segment
+/// lengths` worker-steps — strictly less than the replicated `k × steps`
+/// (the sampler is deterministic in (audit_seed=0, job 0), which samples
+/// a strict subset of segments at rate 0.5).
+fn run_audit_compare(steps: u64, segments: u64) -> Vec<String> {
+    let k = 2;
+    let rate = 0.5f32;
+    let spec = {
+        let mut s = JobSpec::quick(Preset::Mlp, steps);
+        s.data_seed ^= 0xA0D1; // distinct stream from the other comparisons
+        s
+    };
+    let mut out = Vec::new();
+    let mut verdicts = Vec::new();
+    let mut worker_steps = Vec::new();
+    for &optimistic in &[false, true] {
+        let pool = WorkerPool::new(
+            (0..4)
+                .map(|i| {
+                    let name = format!("w{i}");
+                    PooledWorker::new(&name, spawn(WorkerHost::new(&name, FaultPlan::Honest)))
+                })
+                .collect(),
+        );
+        let delegation = Delegation::start(&pool, ServiceConfig::new(k));
+        let mut req = JobRequest::new(spec).with_segments(segments);
+        if optimistic {
+            req = req.with_audit(rate);
+        } else {
+            req = req.with_state_transfer();
+        }
+        let t0 = Instant::now();
+        let outcome = delegation.submit(req).wait();
+        let wall = t0.elapsed();
+        assert!(outcome.accepted.is_some(), "audited job must resolve");
+        verdicts.push(outcome.accepted);
+        let report = delegation.finish();
+        let total_steps = report.total_steps_trained() + report.total_audit_steps();
+        worker_steps.push(total_steps);
+        let mode = if optimistic { "optimistic" } else { "replicated" };
+        println!(
+            "  audit_{:<10} 1 job   {} x{segments} segments of {steps} steps  {:>10.2?}  {:>5} worker-steps  {} audits sampled, {} passed",
+            mode,
+            if optimistic { format!("rate={rate}") } else { format!("k={k}") },
+            wall,
+            total_steps,
+            report.total_audit_sampled(),
+            report.total_audit_passed(),
+        );
+        if optimistic {
+            assert_eq!(
+                report.total_audit_passed(),
+                report.total_audit_sampled(),
+                "honest fleet: every sampled audit must pass"
+            );
+            assert_eq!(report.total_audit_escalated(), 0, "honest fleet never escalates");
+            assert_eq!(report.total_slashed(), 0, "honest fleet is never slashed");
+        }
+        out.push(format!(
+            "{{\"name\":\"audit_{}_s{}x{}\",\"mode\":\"{}\",\"k\":{},\"audit_rate\":{},\
+             \"wall_s\":{:.6},\"worker_steps\":{},\"audit_sampled\":{},\"audit_passed\":{},\
+             \"audit_steps\":{}}}",
+            mode,
+            steps,
+            segments,
+            mode,
+            k,
+            if optimistic { rate } else { 0.0 },
+            wall.as_secs_f64(),
+            total_steps,
+            report.total_audit_sampled(),
+            report.total_audit_passed(),
+            report.total_audit_steps(),
+        ));
+    }
+    assert_eq!(verdicts[0], verdicts[1], "optimistic and replicated verdicts must agree");
+    assert!(
+        worker_steps[1] < worker_steps[0],
+        "optimistic tier ({} worker-steps) must undercut k-replication ({})",
+        worker_steps[1],
+        worker_steps[0],
+    );
+    out
+}
+
 /// Nearest-rank percentile over an ascending-sorted slice of seconds.
 fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
@@ -383,6 +473,9 @@ fn main() {
     println!("SERVICE: checkpoint state-transfer vs prefix re-training (sharded jobs)");
     let (steps, segments) = if smoke { (16, 4) } else { (48, 6) };
     lines.extend(run_transfer_compare(steps, segments));
+
+    println!("SERVICE: optimistic audit tier vs k-replication (sharded jobs)");
+    lines.extend(run_audit_compare(steps, segments));
 
     println!("SERVICE: per-job latency distribution (span timelines)");
     lines.push(run_latency_distribution(smoke));

@@ -13,7 +13,12 @@
 //!                failure policy; `--segments` shards each job at its
 //!                checkpoint boundaries and `--transfer` seeds each
 //!                segment with its predecessor's Merkle-verified
-//!                checkpoint so it trains only the delta; `--serve ADDR`
+//!                checkpoint so it trains only the delta; `--audit-rate R`
+//!                runs jobs on the optimistic staked tier — one worker per
+//!                job, segments spot-checked by sampled replay at rate R,
+//!                divergence escalated to a tournament and convictions
+//!                slashed (`--audit-seed`, `--stake` tune the sampler key
+//!                and the per-worker deposit); `--serve ADDR`
 //!                exposes the Submit/Status/Cancel client API over TCP —
 //!                `--serve-conns N` accepts N concurrent clients — instead
 //!                of submitting `--jobs` itself)
@@ -37,6 +42,7 @@
 //!   verde worker --listen 127.0.0.1:7000
 //!   verde worker --listen 127.0.0.1:7001 --fault tamper@3
 //!   verde coordinator --workers 127.0.0.1:7000,127.0.0.1:7001 --jobs 8 --k 2 --segments 4
+//!   verde coordinator --workers 127.0.0.1:7000,127.0.0.1:7001 --jobs 8 --segments 4 --audit-rate 0.25
 //!   verde coordinator --workers 127.0.0.1:7000,127.0.0.1:7001 --serve 127.0.0.1:9000
 //!   verde client --coordinator 127.0.0.1:9000 --jobs 4 --segments 4 --cancel 1
 //!   verde stats --from 127.0.0.1:9000 --json
@@ -281,6 +287,22 @@ fn print_report(report: &ServiceReport) {
             report.total_steps_trained(),
         );
     }
+    if report.total_audit_sampled() > 0 || report.total_slashed() > 0 {
+        println!(
+            "audits: {} sampled, {} passed, {} escalated, {} replay steps, {} stake slashed",
+            report.total_audit_sampled(),
+            report.total_audit_passed(),
+            report.total_audit_escalated(),
+            report.total_audit_steps(),
+            report.total_slashed(),
+        );
+        for s in &report.stakes {
+            println!(
+                "  stake {:<24} deposited {:>6}  locked {:>6}  slashed {:>6}",
+                s.worker, s.deposited, s.locked, s.slashed
+            );
+        }
+    }
     println!(
         "{} jobs in {:?}  ({:.2} jobs/s, {} total, {} / job, {} coordinator threads)",
         report.outcomes.len(),
@@ -363,8 +385,13 @@ fn cmd_coordinator(args: &Args) {
     cfg.readmit_backoff =
         (readmit_ms > 0).then(|| std::time::Duration::from_millis(readmit_ms));
     cfg.max_strikes = args.get_u64("max-strikes", 3) as u32;
+    cfg.audit_seed = args.get_u64("audit-seed", 0);
+    cfg.worker_stake = args.get_u64("stake", 1000);
     let segments = args.get_u64("segments", 1).max(1);
     let transfer = args.flag("transfer");
+    // Optimistic tier: 0.0 keeps k-replication, anything in (0,1] leases a
+    // single staked worker and spot-checks its commitments at that rate.
+    let audit_rate = args.get_f32("audit-rate", 0.0);
 
     let delegation = Delegation::start(&pool, cfg);
 
@@ -393,10 +420,15 @@ fn cmd_coordinator(args: &Args) {
         }
     } else {
         println!(
-            "delegating {n_jobs} jobs ({} x{} steps, {segments} segment(s){}) to {} workers, k={k} (event-driven core)",
+            "delegating {n_jobs} jobs ({} x{} steps, {segments} segment(s){}{}) to {} workers, k={k} (event-driven core)",
             base.preset.name(),
             base.steps,
             if transfer { ", state transfer" } else { "" },
+            if audit_rate > 0.0 {
+                format!(", optimistic audit_rate={audit_rate}")
+            } else {
+                String::new()
+            },
             pool.size(),
         );
         let handles: Vec<_> = (0..n_jobs)
@@ -406,6 +438,9 @@ fn cmd_coordinator(args: &Args) {
                 let mut req = JobRequest::new(spec).with_segments(segments);
                 if transfer {
                     req = req.with_state_transfer();
+                }
+                if audit_rate > 0.0 {
+                    req = req.with_audit(audit_rate);
                 }
                 delegation.submit(req)
             })
@@ -444,7 +479,9 @@ fn cmd_client(args: &Args) {
 
     let mut ep = TcpEndpoint::connect("coordinator", addr)
         .unwrap_or_else(|e| panic!("cannot connect to coordinator {addr}: {e}"));
-    let policy = JobPolicy { k, segments, priority, transfer, ..JobPolicy::default() };
+    let audit_rate = args.get_f32("audit-rate", 0.0).clamp(0.0, 1.0);
+    let policy =
+        JobPolicy { k, segments, priority, transfer, audit_rate, ..JobPolicy::default() };
     let mut ids: Vec<u64> = Vec::new();
     for i in 0..n_jobs {
         let mut spec = base;

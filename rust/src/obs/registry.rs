@@ -14,6 +14,16 @@
 //! every registered instrument (zero-valued instruments included, so an
 //! idle service renders zeros rather than an empty document — the same
 //! guard `ServiceReport::to_json` gives an empty report).
+//!
+//! Key families registered against a delegation's registry: `coord_*`
+//! (event-loop counters/gauges, including the optimistic-tier
+//! `coord_audit_{sampled,passed,escalated,steps}` and
+//! `coord_stake_{slashed,locked}` instruments — see the
+//! [`service`](crate::service) module docs for the full catalog) and
+//! `worker_*` (per-[`WorkerHost`](crate::service::worker::WorkerHost)
+//! registries). Counters fold from the same settling segment outcomes the
+//! service report aggregates, so snapshot totals reconcile exactly with
+//! [`ServiceReport`](crate::service::coordinator::ServiceReport).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};

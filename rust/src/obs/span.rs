@@ -34,6 +34,9 @@ pub enum Stage {
     /// Segment dispatched with a verified predecessor state (transfer
     /// pipeline), not trained from genesis.
     Seed,
+    /// Optimistic tier: a sampled replay audit leased against the named
+    /// committer (the event's worker is the *accused*, not the auditor).
+    Audit,
     /// Segment verdict reached: a commitment was accepted.
     Verdict,
     /// Segment recorded (`seg: Some`) or whole job finished (`seg: None`).
@@ -51,6 +54,7 @@ impl Stage {
             Stage::Fetch => "fetch",
             Stage::Verify => "verify",
             Stage::Seed => "seed",
+            Stage::Audit => "audit",
             Stage::Verdict => "verdict",
             Stage::Settle => "settle",
         }

@@ -1,0 +1,272 @@
+//! Optimistic audit tier: deterministic spot-check sampling and stake
+//! bookkeeping.
+//!
+//! Full k-replication buys the refereed-delegation guarantee by paying
+//! `k ×` the training cost on every job. The audit tier buys the same
+//! guarantee statistically (SPEX, arxiv 2503.18899; Optimistic Verifiable
+//! Training, arxiv 2403.09603): a job with
+//! [`JobPolicy::audit_rate`](crate::verde::protocol::JobPolicy::audit_rate)
+//! `> 0` leases **one** staked worker that trains every segment and
+//! commits each segment's checkpoint state root
+//! ([`Request::CommitRoot`](crate::verde::protocol::Request::CommitRoot)).
+//! The coordinator samples committed segments with the deterministic
+//! [`AuditSampler`] and replays each sampled segment on an independent
+//! worker seeded from the claimed predecessor checkpoint — one segment of
+//! re-training, no prefix. A matching replay settles the segment; a
+//! divergent replay escalates it into the full dispute tournament, and a
+//! conviction slashes the worker's stake in the [`StakeLedger`].
+//!
+//! Expected honest cost per job: `(1 + audit_rate) × steps` worker-steps
+//! instead of `k × steps` — the `1 + ε` economics the service needs at
+//! fleet scale.
+
+use std::collections::BTreeMap;
+
+/// SplitMix64 finalizer: a bijective avalanche over `u64`. Public so tests
+/// (and the bench) can reproduce the coordinator's sampling decisions.
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Deterministic per-segment audit coin.
+///
+/// Sampling must be unpredictable to the worker (it cannot know which
+/// segments will be audited when it commits) yet reproducible by the
+/// coordinator and its tests — so the coin is a keyed hash of
+/// `(seed, job_id, seg_idx)`, not an ambient RNG. The same seed, job and
+/// segment always land the same decision.
+#[derive(Debug, Clone, Copy)]
+pub struct AuditSampler {
+    seed: u64,
+}
+
+impl AuditSampler {
+    pub fn new(seed: u64) -> AuditSampler {
+        AuditSampler { seed }
+    }
+
+    /// Should segment `seg_idx` of job `job_id` be replay-audited at
+    /// `rate`? `rate <= 0` never samples, `rate >= 1` always samples, and
+    /// in between the keyed hash's top 53 bits form a uniform draw from
+    /// `[0, 1)`.
+    pub fn sample(&self, job_id: u64, seg_idx: u64, rate: f32) -> bool {
+        if rate <= 0.0 {
+            return false;
+        }
+        if rate >= 1.0 {
+            return true;
+        }
+        let x = splitmix64(
+            self.seed
+                ^ splitmix64(job_id)
+                ^ splitmix64(seg_idx.wrapping_mul(0xD6E8_FEB8_6659_FD93)),
+        );
+        let draw = (x >> 11) as f64 / (1u64 << 53) as f64;
+        draw < f64::from(rate)
+    }
+}
+
+/// One worker's stake account.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StakeEntry {
+    /// Worker name (the pool's stable identity).
+    pub worker: String,
+    /// Total ever deposited.
+    pub deposited: u64,
+    /// Portion locked behind an in-flight audit or escalation.
+    pub locked: u64,
+    /// Portion confiscated by convictions.
+    pub slashed: u64,
+}
+
+impl StakeEntry {
+    /// Stake neither locked nor slashed — what a new optimistic lease can
+    /// bind.
+    pub fn available(&self) -> u64 {
+        self.deposited - self.locked - self.slashed
+    }
+}
+
+/// Deposit / lock / slash / release bookkeeping for the optimistic tier.
+///
+/// Workers are enrolled lazily with a uniform deposit at their first
+/// optimistic lease ([`StakeLedger::enroll`]). While a sampled segment's
+/// replay (or its escalation tournament) is in flight the worker's
+/// available stake is locked; a conviction moves the locked portion to
+/// `slashed`, an acquittal releases it. A worker whose stake is fully
+/// slashed is no longer [`eligible`](StakeLedger::eligible) for optimistic
+/// leases — it can still serve replicated work, where honesty is enforced
+/// by replication rather than collateral.
+#[derive(Debug, Clone)]
+pub struct StakeLedger {
+    default_deposit: u64,
+    accounts: BTreeMap<String, StakeEntry>,
+}
+
+impl StakeLedger {
+    pub fn new(default_deposit: u64) -> StakeLedger {
+        StakeLedger { default_deposit, accounts: BTreeMap::new() }
+    }
+
+    /// Register `worker` with the default deposit if unseen; no-op
+    /// otherwise.
+    pub fn enroll(&mut self, worker: &str) {
+        if !self.accounts.contains_key(worker) {
+            self.accounts.insert(
+                worker.to_string(),
+                StakeEntry {
+                    worker: worker.to_string(),
+                    deposited: self.default_deposit,
+                    locked: 0,
+                    slashed: 0,
+                },
+            );
+        }
+    }
+
+    /// Stake `worker` could bind right now (unseen workers report the
+    /// deposit enrollment would grant them).
+    pub fn available(&self, worker: &str) -> u64 {
+        match self.accounts.get(worker) {
+            Some(e) => e.available(),
+            None => self.default_deposit,
+        }
+    }
+
+    /// May `worker` take an optimistic lease? Requires positive available
+    /// stake: a slashed-out worker has nothing left to forfeit, so its
+    /// commitments are worthless.
+    pub fn eligible(&self, worker: &str) -> bool {
+        self.available(worker) > 0
+    }
+
+    /// Lock `worker`'s full available stake behind an in-flight audit.
+    /// Returns the amount locked.
+    pub fn lock(&mut self, worker: &str) -> u64 {
+        self.enroll(worker);
+        let e = self.accounts.get_mut(worker).expect("just enrolled");
+        let amount = e.available();
+        e.locked += amount;
+        amount
+    }
+
+    /// Release `worker`'s locked stake back to available (audit passed,
+    /// or escalation settled without convicting it).
+    pub fn release(&mut self, worker: &str) {
+        if let Some(e) = self.accounts.get_mut(worker) {
+            e.locked = 0;
+        }
+    }
+
+    /// Confiscate `worker`'s locked stake (conviction). Returns the amount
+    /// slashed — zero when nothing was locked.
+    pub fn slash(&mut self, worker: &str) -> u64 {
+        self.enroll(worker);
+        let e = self.accounts.get_mut(worker).expect("just enrolled");
+        let amount = e.locked;
+        e.locked = 0;
+        e.slashed += amount;
+        amount
+    }
+
+    /// Total stake currently locked across all accounts.
+    pub fn total_locked(&self) -> u64 {
+        self.accounts.values().map(|e| e.locked).sum()
+    }
+
+    /// Total stake ever slashed across all accounts.
+    pub fn total_slashed(&self) -> u64 {
+        self.accounts.values().map(|e| e.slashed).sum()
+    }
+
+    /// Point-in-time copy of every account, sorted by worker name.
+    pub fn snapshot(&self) -> Vec<StakeEntry> {
+        self.accounts.values().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_is_deterministic_and_respects_bounds() {
+        let s = AuditSampler::new(0xA0D1_7);
+        for job in 0..8u64 {
+            for seg in 0..8u64 {
+                assert!(!s.sample(job, seg, 0.0), "rate 0 sampled {job}/{seg}");
+                assert!(s.sample(job, seg, 1.0), "rate 1 skipped {job}/{seg}");
+                assert_eq!(
+                    s.sample(job, seg, 0.5),
+                    s.sample(job, seg, 0.5),
+                    "non-deterministic at {job}/{seg}"
+                );
+            }
+        }
+        // A different seed flips at least one decision over a modest grid —
+        // the coin is keyed, not constant.
+        let t = AuditSampler::new(0xBEEF);
+        let flipped = (0..64u64)
+            .flat_map(|j| (0..4u64).map(move |g| (j, g)))
+            .any(|(j, g)| s.sample(j, g, 0.5) != t.sample(j, g, 0.5));
+        assert!(flipped);
+    }
+
+    #[test]
+    fn sampler_frequency_tracks_rate() {
+        let s = AuditSampler::new(7);
+        let n = 10_000u64;
+        for rate in [0.1f32, 0.5, 0.9] {
+            let hits = (0..n).filter(|&j| s.sample(j, 0, rate)).count() as f64;
+            let freq = hits / n as f64;
+            assert!(
+                (freq - f64::from(rate)).abs() < 0.03,
+                "rate {rate}: observed {freq}"
+            );
+        }
+    }
+
+    #[test]
+    fn ledger_lifecycle_deposit_lock_slash_release() {
+        let mut l = StakeLedger::new(1000);
+        assert!(l.eligible("w0"));
+        assert_eq!(l.available("w0"), 1000);
+
+        // Lock binds the full available stake.
+        assert_eq!(l.lock("w0"), 1000);
+        assert_eq!(l.available("w0"), 0);
+        assert_eq!(l.total_locked(), 1000);
+
+        // Release restores it.
+        l.release("w0");
+        assert_eq!(l.available("w0"), 1000);
+        assert_eq!(l.total_locked(), 0);
+
+        // Slash confiscates exactly the locked portion, permanently.
+        assert_eq!(l.lock("w0"), 1000);
+        assert_eq!(l.slash("w0"), 1000);
+        assert_eq!(l.available("w0"), 0);
+        assert_eq!(l.total_slashed(), 1000);
+        assert!(!l.eligible("w0"), "slashed-out worker stays ineligible");
+        // Nothing left to lock or slash.
+        assert_eq!(l.lock("w0"), 0);
+        assert_eq!(l.slash("w0"), 0);
+
+        // Other workers are unaffected.
+        assert!(l.eligible("w1"));
+        let snap = l.snapshot();
+        assert_eq!(snap.len(), 1, "only enrolled workers appear: {snap:?}");
+        assert_eq!(snap[0].worker, "w0");
+        assert_eq!(snap[0].slashed, 1000);
+    }
+
+    #[test]
+    fn slash_without_lock_confiscates_nothing() {
+        let mut l = StakeLedger::new(500);
+        assert_eq!(l.slash("w"), 0);
+        assert_eq!(l.available("w"), 500, "unlocked stake survives a stray slash");
+    }
+}

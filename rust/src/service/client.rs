@@ -127,6 +127,19 @@ impl JobRequest {
         self.policy.max_requeues = Some(max_requeues);
         self
     }
+
+    /// Run this job on the optimistic staked audit tier: **one** staked
+    /// worker trains every segment and commits per-segment checkpoint
+    /// roots; the coordinator replay-audits each committed segment with
+    /// probability `rate` (clamped to `[0, 1]`) on an independent worker.
+    /// A divergent audit escalates the segment into the full dispute
+    /// tournament, slashes the committer's stake on conviction, and
+    /// reverts the rest of the job to k-replication. Expected honest cost
+    /// is `(1 + rate) × steps` worker-steps instead of `k × steps`.
+    pub fn with_audit(mut self, rate: f32) -> JobRequest {
+        self.policy.audit_rate = if rate.is_nan() { 0.0 } else { rate.clamp(0.0, 1.0) };
+        self
+    }
 }
 
 /// A snapshot of a submitted job's progress ([`JobHandle::try_status`]).
@@ -401,6 +414,7 @@ impl Delegation {
             k: self.cfg.k,
             workers: self.start_size,
             revoked: self.pool.revoked(),
+            stakes: lr.stakes,
             threads: 1 + self.cfg.resolvers.max(1) + lr.actor_threads,
         }
     }

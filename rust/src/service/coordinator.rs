@@ -47,7 +47,7 @@
 //! thread-per-dispatch baseline the benches compare against.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 use std::fmt::Write as _;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -57,12 +57,13 @@ use crate::hash::Hash;
 use crate::net::mux::{Completion, CompletionKind};
 use crate::net::{Endpoint, Metered};
 use crate::obs::{Counter, Gauge, Histogram, Registry, Stage, COUNT_BOUNDS, LATENCY_US_BOUNDS};
-use crate::train::checkpoint::{chunk_count, chunk_slice, decode_state, split_points};
+use crate::train::checkpoint::{chunk_count, chunk_slice, split_points, verify_encoded_state};
 use crate::train::JobSpec;
 use crate::verde::protocol::{JobPolicy, Request, Response};
 use crate::verde::tournament::run_tournament;
 use crate::verde::wire::MAX_CHECKPOINT_CHUNKS;
 
+use super::audit::{AuditSampler, StakeEntry, StakeLedger};
 use super::client::{Delegation, JobCell, JobRequest};
 use super::pool::{PooledWorker, WorkerPool};
 
@@ -99,6 +100,16 @@ pub struct ServiceConfig {
     /// Missed deadlines (dispatch, ping, or parole) after which a worker
     /// is permanently expelled instead of suspended again.
     pub max_strikes: u32,
+    /// Seed of the deterministic audit sampler: which committed segments
+    /// of an optimistic job get replay-audited is a keyed hash of
+    /// `(audit_seed, job_id, seg_idx)`, so tests (and post-mortems) can
+    /// reproduce every sampling decision exactly.
+    pub audit_seed: u64,
+    /// Stake deposited for each worker at its first optimistic lease.
+    /// Locked while a sampled audit (or its escalation) is in flight and
+    /// slashed on conviction; a slashed-out worker loses optimistic
+    /// eligibility.
+    pub worker_stake: u64,
 }
 
 impl ServiceConfig {
@@ -113,6 +124,8 @@ impl ServiceConfig {
             ping_deadline: Duration::from_secs(5),
             readmit_backoff: None,
             max_strikes: 3,
+            audit_seed: 0,
+            worker_stake: 1_000,
         }
     }
 }
@@ -165,6 +178,22 @@ pub struct SegmentOutcome {
     /// verification against the agreed state root (each cost the uploader
     /// its lease; the fetch moved on to a survivor).
     pub uploads_rejected: u32,
+    /// Optimistic tier: this segment's commitment was sampled for a replay
+    /// audit.
+    pub audit_sampled: bool,
+    /// The sampled replay reproduced the commitment (segment settled
+    /// without escalation).
+    pub audit_passed: bool,
+    /// The sampled replay diverged (or could not run) and the segment was
+    /// escalated into a k-replicated dispute tournament.
+    pub audit_escalated: bool,
+    /// Extra training steps the audit tier spent on this segment beyond
+    /// the settling lease: the optimistic attempt (when escalated) plus
+    /// every completed replay.
+    pub audit_steps: u64,
+    /// Stake confiscated from the committed worker when the escalation
+    /// tournament certified a different verdict than it committed to.
+    pub slashed: u64,
 }
 
 impl SegmentOutcome {
@@ -192,6 +221,11 @@ impl SegmentOutcome {
             steps_trained: 0,
             transfer_bytes: 0,
             uploads_rejected: 0,
+            audit_sampled: false,
+            audit_passed: false,
+            audit_escalated: false,
+            audit_steps: 0,
+            slashed: 0,
         }
     }
 }
@@ -270,6 +304,9 @@ pub struct ServiceReport {
     /// activate (mux-linked workers need none — that is the scaling
     /// argument). Blocking baseline: lanes × (1 + k) at peak.
     pub threads: usize,
+    /// Final stake ledger: one entry per worker that ever took an
+    /// optimistic lease (empty when no job used the audit tier).
+    pub stakes: Vec<StakeEntry>,
 }
 
 impl ServiceReport {
@@ -346,6 +383,46 @@ impl ServiceReport {
             .sum()
     }
 
+    /// Segment commitments sampled for a replay audit.
+    pub fn total_audit_sampled(&self) -> usize {
+        self.outcomes
+            .iter()
+            .flat_map(|o| &o.segments)
+            .filter(|s| s.audit_sampled)
+            .count()
+    }
+
+    /// Sampled audits whose replay reproduced the commitment.
+    pub fn total_audit_passed(&self) -> usize {
+        self.outcomes
+            .iter()
+            .flat_map(|o| &o.segments)
+            .filter(|s| s.audit_passed)
+            .count()
+    }
+
+    /// Sampled audits that escalated into a dispute tournament.
+    pub fn total_audit_escalated(&self) -> usize {
+        self.outcomes
+            .iter()
+            .flat_map(|o| &o.segments)
+            .filter(|s| s.audit_escalated)
+            .count()
+    }
+
+    /// Extra training steps the audit tier spent (replays plus escalated
+    /// optimistic attempts) on top of [`total_steps_trained`](Self::total_steps_trained).
+    pub fn total_audit_steps(&self) -> u64 {
+        self.outcomes.iter().flat_map(|o| &o.segments).map(|s| s.audit_steps).sum()
+    }
+
+    /// Stake confiscated by convictions across the run. Equals the sum of
+    /// `slashed` over the final [`stakes`](Self::stakes) ledger: every
+    /// slash is attributed to exactly one settling segment.
+    pub fn total_slashed(&self) -> u64 {
+        self.outcomes.iter().flat_map(|o| &o.segments).map(|s| s.slashed).sum()
+    }
+
     /// Mean protocol bytes per job; `0.0` for an empty report.
     pub fn bytes_per_job(&self) -> f64 {
         if self.outcomes.is_empty() {
@@ -374,7 +451,9 @@ impl ServiceReport {
              \"wall_s\":{:.6},\"jobs_per_sec\":{:.3},\"mean_latency_s\":{:.6},\
              \"total_bytes\":{},\"bytes_per_job\":{:.1},\"disputes\":{},\"eliminated\":{},\
              \"requeued\":{},\"revoked\":{},\"threads\":{},\"steps_trained\":{},\
-             \"seeded_segments\":{},\"transfer_bytes\":{},\"uploads_rejected\":{}",
+             \"seeded_segments\":{},\"transfer_bytes\":{},\"uploads_rejected\":{},\
+             \"audit_sampled\":{},\"audit_passed\":{},\"audit_escalated\":{},\
+             \"audit_steps\":{},\"stake_slashed\":{}",
             self.outcomes.len(),
             resolved,
             self.total_cancelled(),
@@ -394,6 +473,11 @@ impl ServiceReport {
             self.total_seeded_segments(),
             self.total_transfer_bytes(),
             self.total_uploads_rejected(),
+            self.total_audit_sampled(),
+            self.total_audit_passed(),
+            self.total_audit_escalated(),
+            self.total_audit_steps(),
+            self.total_slashed(),
         );
         s.push('}');
         s
@@ -423,6 +507,7 @@ pub(crate) enum Cmd {
 pub(crate) struct LoopReport {
     pub(crate) outcomes: Vec<JobOutcome>,
     pub(crate) actor_threads: usize,
+    pub(crate) stakes: Vec<StakeEntry>,
 }
 
 /// A checkpoint fetched from a segment winner and verified against the
@@ -438,8 +523,42 @@ pub(crate) struct SeedPayload {
     bytes: Vec<u8>,
 }
 
+/// What a queued (or active) segment is for.
+enum SegKind {
+    /// Regular training work: k-replicated, or an optimistic job's
+    /// single-staked-worker lease.
+    Work,
+    /// Sampled replay of an optimistic segment's commitment on one worker
+    /// other than `accused`; its training commit is compared against
+    /// `expect` when the dispatch settles.
+    Audit { accused: String, expect: Hash },
+}
+
+/// Audit bookkeeping for one sampled segment of an optimistic job.
+enum AuditState {
+    /// The replay is queued or in flight; the optimistic attempt's outcome
+    /// (and the verified successor seed it fetched) is parked here until
+    /// the replay answers.
+    Pending {
+        outcome: Box<SegmentOutcome>,
+        /// Verified end-state fetched alongside the optimistic attempt —
+        /// released to seed the successor only once the audit passes.
+        seed_next: Option<SeedPayload>,
+        /// The staked worker whose commitment is under audit.
+        accused: String,
+        /// Its committed hash for this boundary.
+        expect: Hash,
+    },
+    /// The replay diverged (or could not run): the segment re-runs as a
+    /// k-replicated prefix tournament. A certified verdict different from
+    /// `expect` convicts `accused` (when the divergence was attributable)
+    /// and slashes its stake at settlement.
+    Escalated { accused: Option<String>, expect: Hash, audit_steps: u64 },
+}
+
 /// A segment waiting for a lease.
 struct QueuedSeg {
+    kind: SegKind,
     priority: i64,
     job_id: u64,
     seg_idx: usize,
@@ -490,6 +609,7 @@ enum SlotState {
 /// A segment whose `Train` (or chunked `SeedCheckpoint`) dispatches are in
 /// flight.
 struct ActiveSeg {
+    kind: SegKind,
     spec: JobSpec,
     seed: Option<Arc<SeedPayload>>,
     t0: Instant,
@@ -502,6 +622,26 @@ struct ActiveSeg {
     tokens: Vec<u64>,
     outstanding: usize,
     leased_seq: u64,
+}
+
+/// A settled audit dispatch, bundled for [`EventLoop::finish_audit`]
+/// (the borrow of the active table is over by then; everything the
+/// verdict logic needs travels by value).
+struct AuditReturn {
+    job_id: u64,
+    seg_idx: usize,
+    accused: String,
+    expect: Hash,
+    spec: JobSpec,
+    seed: Option<Arc<SeedPayload>>,
+    t0: Instant,
+    requeues: u32,
+    revoked: usize,
+    bytes: u64,
+    requests: u64,
+    leased_seq: u64,
+    workers: Vec<PooledWorker>,
+    slots: Vec<SlotState>,
 }
 
 /// What a completion token addresses.
@@ -530,6 +670,13 @@ pub(crate) enum ResolveMode {
     /// (Seeded segments that *disagree* never reach a resolver — they fall
     /// back to prefix re-training, where the dispute protocol applies.)
     Agreed { accepted: Hash, winner: usize },
+    /// Optimistic single-worker segment: accept the lone claim
+    /// provisionally and record it as the worker's commitment. The
+    /// resolver additionally asks the worker for its explicit
+    /// [`Request::CommitRoot`] state-root commitment and binds any fetched
+    /// checkpoint to it; whether the claim gets replay-audited is decided
+    /// by the event loop's sampler when the segment comes back.
+    Commitment { claimed: Hash },
 }
 
 /// Work order for a resolver thread.
@@ -567,6 +714,9 @@ pub(crate) struct Resolved {
     /// Indices into `workers` whose uploads failed Merkle verification —
     /// the event loop revokes their leases.
     rejected: Vec<usize>,
+    /// Optimistic segment: `(worker, committed hash)` — the event loop
+    /// records it and decides whether to sample a replay audit.
+    commitment: Option<(String, Hash)>,
 }
 
 /// Pull chunks `1..total` of the checkpoint at `step` from one worker,
@@ -632,13 +782,10 @@ fn fetch_verified_state(
     }
     for (i, _, total, first) in probes {
         match fetch_remaining_chunks(&mut metered[i], end, root, total, first) {
-            Ok(bytes) => match decode_state(&bytes) {
-                Ok(state) if state.step == end && state.state_root() == root => {
-                    return (Some(SeedPayload { start: end, root, bytes }), rejected);
-                }
-                _ => rejected.push(i),
-            },
-            Err(_) => rejected.push(i),
+            Ok(bytes) if verify_encoded_state(&bytes, end, &root) => {
+                return (Some(SeedPayload { start: end, root, bytes }), rejected);
+            }
+            Ok(_) | Err(_) => rejected.push(i),
         }
     }
     (None, rejected)
@@ -672,12 +819,26 @@ fn resolve(task: ResolveTask) -> Resolved {
     let names: Vec<String> = workers.iter().map(|w| w.name.clone()).collect();
     let mut metered: Vec<Metered<&mut PooledWorker>> =
         workers.iter_mut().map(Metered::new).collect();
+    let mut commitment: Option<(String, Hash)> = None;
+    // `Some(answer)` in commitment mode: the worker's explicit CommitRoot
+    // reply (`None` inside when it refused). Any fetched checkpoint must
+    // verify against exactly this root or the seed is discarded.
+    let mut bound_root: Option<Option<Hash>> = None;
     let (accepted, winner, disputes, eliminated) = match mode {
         ResolveMode::Tournament => {
             let report = run_tournament(spec, &mut metered);
             (report.accepted, report.winner, report.disputes, report.eliminated.len())
         }
         ResolveMode::Agreed { accepted, winner } => (accepted, winner, 0, 0),
+        ResolveMode::Commitment { claimed } => {
+            let root = match metered[0].call(Request::CommitRoot { step: end }) {
+                Response::Commit(r) => Some(r),
+                _ => None,
+            };
+            bound_root = Some(root);
+            commitment = Some((names[0].clone(), claimed));
+            (claimed, 0, 0, 0)
+        }
     };
 
     let mut seed = None;
@@ -705,6 +866,15 @@ fn resolve(task: ResolveTask) -> Resolved {
         }
         seed = s;
         rejected = r;
+        if let (Some(payload), Some(root)) = (&seed, &bound_root) {
+            if *root != Some(payload.root) {
+                // The worker's explicit commitment refuses, or contradicts
+                // the root its served checkpoint verifies against: don't
+                // seed the successor from it. The training claim itself is
+                // still on the record and still replay-auditable.
+                seed = None;
+            }
+        }
     }
 
     bytes += metered.iter().map(|m| m.bytes_sent() + m.bytes_received()).sum::<u64>();
@@ -729,8 +899,13 @@ fn resolve(task: ResolveTask) -> Resolved {
         steps_trained: end - seeded_from.unwrap_or(0),
         transfer_bytes,
         uploads_rejected: rejected.len() as u32,
+        audit_sampled: false,
+        audit_passed: false,
+        audit_escalated: false,
+        audit_steps: 0,
+        slashed: 0,
     };
-    Resolved { job_id, outcome, workers, seed, rejected }
+    Resolved { job_id, outcome, workers, seed, rejected, commitment }
 }
 
 /// Cached handles for the delegation's `coord_*` instruments, registered
@@ -754,8 +929,14 @@ pub(crate) struct CoordMetrics {
     seeded_segments: Counter,
     transfer_bytes: Counter,
     uploads_rejected: Counter,
+    audit_sampled: Counter,
+    audit_passed: Counter,
+    audit_escalated: Counter,
+    audit_steps: Counter,
+    stake_slashed: Counter,
     bytes: Counter,
     requests: Counter,
+    stake_locked: Gauge,
     queue_depth: Gauge,
     active_segments: Gauge,
     resolving: Gauge,
@@ -782,8 +963,14 @@ impl CoordMetrics {
             seeded_segments: registry.counter("coord_seeded_segments"),
             transfer_bytes: registry.counter("coord_transfer_bytes"),
             uploads_rejected: registry.counter("coord_uploads_rejected"),
+            audit_sampled: registry.counter("coord_audit_sampled"),
+            audit_passed: registry.counter("coord_audit_passed"),
+            audit_escalated: registry.counter("coord_audit_escalated"),
+            audit_steps: registry.counter("coord_audit_steps"),
+            stake_slashed: registry.counter("coord_stake_slashed"),
             bytes: registry.counter("coord_bytes"),
             requests: registry.counter("coord_requests"),
+            stake_locked: registry.gauge("coord_stake_locked"),
             queue_depth: registry.gauge("coord_queue_depth"),
             active_segments: registry.gauge("coord_active_segments"),
             resolving: registry.gauge("coord_resolving"),
@@ -810,6 +997,17 @@ impl CoordMetrics {
         }
         self.transfer_bytes.add(outcome.transfer_bytes);
         self.uploads_rejected.add(u64::from(outcome.uploads_rejected));
+        if outcome.audit_sampled {
+            self.audit_sampled.inc();
+        }
+        if outcome.audit_passed {
+            self.audit_passed.inc();
+        }
+        if outcome.audit_escalated {
+            self.audit_escalated.inc();
+        }
+        self.audit_steps.add(outcome.audit_steps);
+        self.stake_slashed.add(outcome.slashed);
         self.bytes.add(outcome.bytes);
         self.requests.add(outcome.requests);
     }
@@ -918,14 +1116,41 @@ struct JobRun {
     /// cancelled flag: `handle_cancel` removes the job from the map
     /// outright, so presence in `jobs` means live.)
     t0: Option<Instant>,
+    /// An audit on this job escalated: the optimistic tier is off for the
+    /// rest of the job and every remaining segment runs k-replicated.
+    escalated: bool,
+    /// Optimistic tier: the staked worker this job is pinned to — the same
+    /// worker trains every segment (and carries its trainer cache across
+    /// boundaries). Cleared when the worker leaves the pool or loses
+    /// eligibility.
+    pinned: Option<String>,
+    /// Seed each optimistic segment was dispatched with, kept until the
+    /// segment settles: a sampled replay must start from the same
+    /// predecessor checkpoint the accused did.
+    seed_used: HashMap<usize, Arc<SeedPayload>>,
+    /// In-flight audit state per sampled segment.
+    audits: HashMap<usize, AuditState>,
 }
 
 impl JobRun {
+    /// Is this job currently running on the optimistic single-worker tier?
+    fn optimistic(&self) -> bool {
+        self.policy.audit_rate > 0.0 && !self.escalated
+    }
+
+    /// Does this job advance one segment at a time (queueing segment `i+1`
+    /// only once `i` settles)? True for state-transfer jobs and for the
+    /// audit tier, whose sampling decision must land before the successor
+    /// is seeded.
+    fn pipelined(&self) -> bool {
+        self.policy.transfer || self.policy.audit_rate > 0.0
+    }
+
     /// Does segment `seg_idx`'s resolution need to fetch the boundary
     /// checkpoint (because the next segment is still waiting to be queued
-    /// and state transfer is on)?
+    /// and the job moves state between segments)?
     fn wants_state(&self, seg_idx: usize) -> bool {
-        self.policy.transfer
+        self.pipelined()
             && self.next_seg == seg_idx + 1
             && self.next_seg < self.boundaries.len()
     }
@@ -979,6 +1204,13 @@ pub(crate) struct EventLoop {
     resolving_out: usize,
     shutting_down: bool,
     metrics: CoordMetrics,
+    /// Deterministic audit coin (seeded by [`ServiceConfig::audit_seed`]).
+    sampler: AuditSampler,
+    /// Stake accounts backing the optimistic tier.
+    ledger: StakeLedger,
+    /// Workers permanently out of the pool (revoked or expelled): a pinned
+    /// optimistic job re-leases immediately instead of waiting for them.
+    gone: HashSet<String>,
 }
 
 impl EventLoop {
@@ -1014,6 +1246,9 @@ impl EventLoop {
             actor_threads: 0,
             resolving_out: 0,
             shutting_down: false,
+            sampler: AuditSampler::new(cfg.audit_seed),
+            ledger: StakeLedger::new(cfg.worker_stake),
+            gone: HashSet::new(),
         }
     }
 
@@ -1098,6 +1333,7 @@ impl EventLoop {
             self.parole_sweep();
 
             self.metrics.tick_us.observe_micros(pre_wait + t_work.elapsed());
+            self.metrics.stake_locked.set(self.ledger.total_locked());
             self.metrics.queue_depth.set(self.queue.len() as u64);
             self.metrics.active_segments.set(self.active.len() as u64);
             self.metrics.resolving.set(self.resolving_out as u64);
@@ -1123,7 +1359,11 @@ impl EventLoop {
                 Cmd::Shutdown => {}
             }
         }
-        LoopReport { outcomes: self.outcomes, actor_threads: self.actor_threads }
+        LoopReport {
+            outcomes: self.outcomes,
+            actor_threads: self.actor_threads,
+            stakes: self.ledger.snapshot(),
+        }
     }
 
     fn handle_cmd(&mut self, cmd: Cmd) {
@@ -1151,11 +1391,16 @@ impl EventLoop {
                     return;
                 }
                 let boundaries = split_points(0, spec.steps, policy.segments.max(1));
-                // With state transfer on, only the first segment queues
-                // now: each later segment needs its predecessor's verified
-                // checkpoint (or a fallback decision), so the pipeline
-                // advances in `record_segment`.
-                let queue_now = if policy.transfer { 1 } else { boundaries.len() };
+                // With state transfer (or the audit tier) on, only the
+                // first segment queues now: each later segment needs its
+                // predecessor's verified checkpoint — and, for optimistic
+                // jobs, its predecessor's sampling decision — so the
+                // pipeline advances in `record_segment`.
+                let queue_now = if policy.transfer || policy.audit_rate > 0.0 {
+                    1
+                } else {
+                    boundaries.len()
+                };
                 for (seg_idx, &end) in boundaries.iter().enumerate().take(queue_now) {
                     self.metrics.registry.spans().trace(
                         job_id,
@@ -1164,6 +1409,7 @@ impl EventLoop {
                         None,
                     );
                     self.queue.push(QueuedSeg {
+                        kind: SegKind::Work,
                         priority: policy.priority,
                         job_id,
                         seg_idx,
@@ -1189,6 +1435,10 @@ impl EventLoop {
                         finished: 0,
                         next_seg: queue_now,
                         t0: None,
+                        escalated: false,
+                        pinned: None,
+                        seed_used: HashMap::new(),
+                        audits: HashMap::new(),
                     },
                 );
             }
@@ -1234,6 +1484,15 @@ impl EventLoop {
         // is gone from the map). Resolving segments finish on their
         // resolver thread; their leases return via `handle_resolved`.
         let run = self.jobs.remove(&job_id).expect("checked");
+        // Stakes locked behind this job's in-flight audits are released:
+        // with the job gone no tournament can ever certify a conviction.
+        for audit in run.audits.values() {
+            match audit {
+                AuditState::Pending { accused, .. } => self.ledger.release(accused),
+                AuditState::Escalated { accused: Some(a), .. } => self.ledger.release(a),
+                AuditState::Escalated { accused: None, .. } => {}
+            }
+        }
         let segments: Vec<SegmentOutcome> = run.done.into_iter().flatten().collect();
         let outcome = JobOutcome {
             job_id,
@@ -1258,7 +1517,11 @@ impl EventLoop {
 
     /// Lease workers for queued segments. Segments whose requirement
     /// cannot be met *right now* are deferred (put back); segments whose
-    /// requirement can never be met again fail immediately.
+    /// requirement can never be met again fail immediately. The audit
+    /// tier routes here too: optimistic work leases its single pinned
+    /// staked worker, replay audits lease one worker other than the
+    /// accused, and escalated segments prefer to include the accused so
+    /// the tournament can convict it.
     fn lease_pass(&mut self) {
         if self.pool.idle() == 0 && self.pool.size() > 0 {
             // Every live worker is leased; they return via completions, so
@@ -1269,12 +1532,20 @@ impl EventLoop {
         }
         let mut deferred: Vec<QueuedSeg> = Vec::new();
         while let Some(seg) = self.queue.pop() {
-            let policy = match self.jobs.get(&seg.job_id) {
-                // Cancelled and finalized: stale entry, drop it.
-                None => continue,
-                Some(j) => j.policy,
-            };
-            let pred = move |w: &PooledWorker| policy.backend.admits(w.backend());
+            let (policy, optimistic, pinned, tournament_accused) =
+                match self.jobs.get(&seg.job_id) {
+                    // Cancelled and finalized: stale entry, drop it.
+                    None => continue,
+                    Some(j) => (
+                        j.policy,
+                        j.optimistic(),
+                        j.pinned.clone(),
+                        match j.audits.get(&seg.seg_idx) {
+                            Some(AuditState::Escalated { accused, .. }) => accused.clone(),
+                            _ => None,
+                        },
+                    ),
+                };
             if !self.pool.any_eligible(policy.backend) {
                 // Nobody now, nobody ever: the segment is unresolvable.
                 self.fail_segment(seg);
@@ -1286,12 +1557,96 @@ impl EventLoop {
                 deferred.push(seg);
                 continue;
             }
-            let k = if policy.k == 0 { self.cfg.k } else { policy.k }.clamp(1, live);
-            let Some(workers) = self.pool.try_acquire_where(k, pred) else {
-                deferred.push(seg);
+            if let SegKind::Audit { accused, .. } = &seg.kind {
+                // A replay audit runs on one worker independent of the
+                // accused committer.
+                let accused = accused.clone();
+                let pred = move |w: &PooledWorker| {
+                    policy.backend.admits(w.backend()) && w.name != accused
+                };
+                match self.pool.try_acquire_where(1, pred) {
+                    Some(ws) => self.dispatch_segment(seg, ws, policy),
+                    None if self.pool.idle() == live && self.pool.suspended() == 0 => {
+                        // Every live worker is idle and none qualifies (the
+                        // accused is the whole pool): an independent
+                        // auditor can never appear. Escalate instead of
+                        // deferring forever.
+                        self.escalate_audit_failure(seg);
+                    }
+                    None => deferred.push(seg),
+                }
                 continue;
+            }
+            if optimistic {
+                // Optimistic tier: one staked worker, pinned to the job so
+                // the same worker trains (and commits) every segment.
+                if let Some(name) = &pinned {
+                    if self.gone.contains(name) || !self.ledger.eligible(name) {
+                        // The pinned worker left the pool or lost its
+                        // stake: re-pin below.
+                        if let Some(run) = self.jobs.get_mut(&seg.job_id) {
+                            run.pinned = None;
+                        }
+                    } else if let Some(w) = self.pool.try_take_named(name) {
+                        self.dispatch_segment(seg, vec![w], policy);
+                        continue;
+                    } else {
+                        // Busy or suspended: the pin holds, wait for it.
+                        deferred.push(seg);
+                        continue;
+                    }
+                }
+                let ledger = &self.ledger;
+                let pred = |w: &PooledWorker| {
+                    policy.backend.admits(w.backend()) && ledger.eligible(&w.name)
+                };
+                match self.pool.try_acquire_where(1, pred) {
+                    Some(ws) => {
+                        let name = ws[0].name.clone();
+                        self.ledger.enroll(&name);
+                        if let Some(run) = self.jobs.get_mut(&seg.job_id) {
+                            run.pinned = Some(name);
+                        }
+                        self.dispatch_segment(seg, ws, policy);
+                    }
+                    None => deferred.push(seg),
+                }
+                continue;
+            }
+            // k-replicated work. An escalated segment leases at least two
+            // workers and prefers to include the accused committer: the
+            // tournament can then bisect against it and certify the
+            // conviction (if the accused is unavailable the tournament
+            // still re-establishes the honest verdict without it).
+            let mut k = if policy.k == 0 { self.cfg.k } else { policy.k };
+            if tournament_accused.is_some() {
+                k = k.max(2);
+            }
+            let k = k.clamp(1, live);
+            let mut ws: Vec<PooledWorker> = Vec::new();
+            if let Some(name) = &tournament_accused {
+                if let Some(w) = self.pool.try_take_named(name) {
+                    if policy.backend.admits(w.backend()) {
+                        ws.push(w);
+                    } else {
+                        self.pool.release(vec![w]);
+                    }
+                }
+            }
+            let taken = ws.first().map(|w| w.name.clone());
+            let pred = move |w: &PooledWorker| {
+                policy.backend.admits(w.backend()) && Some(&w.name) != taken.as_ref()
             };
-            self.dispatch_segment(seg, workers, policy);
+            match self.pool.try_acquire_where(k - ws.len().min(k), pred) {
+                Some(more) => {
+                    ws.extend(more);
+                    self.dispatch_segment(seg, ws, policy);
+                }
+                None => {
+                    self.pool.release(ws);
+                    deferred.push(seg);
+                }
+            }
         }
         for seg in deferred {
             self.queue.push(seg);
@@ -1314,6 +1669,9 @@ impl EventLoop {
         let leased_seq = if seg.leased_seq == 0 { lease_seq } else { seg.leased_seq };
         let spans = self.metrics.registry.spans();
         spans.trace(seg.job_id, Some(seg.seg_idx as u64), Stage::Lease, None);
+        if let SegKind::Audit { accused, .. } = &seg.kind {
+            spans.trace(seg.job_id, Some(seg.seg_idx as u64), Stage::Audit, Some(accused));
+        }
         if seg.seed.is_some() {
             spans.trace(seg.job_id, Some(seg.seg_idx as u64), Stage::Seed, None);
         }
@@ -1322,6 +1680,7 @@ impl EventLoop {
         }
         let deadline = Instant::now() + policy.deadline.unwrap_or(self.cfg.dispatch_deadline);
         let mut aseg = ActiveSeg {
+            kind: seg.kind,
             spec: seg.spec,
             seed: seg.seed.clone(),
             t0,
@@ -1404,8 +1763,14 @@ impl EventLoop {
     }
 
     /// A segment whose backend requirement can never again be satisfied
-    /// (or that exhausted its re-queues) settles unresolved.
+    /// (or that exhausted its re-queues) settles unresolved. A replay
+    /// audit in that position escalates instead: the parked optimistic
+    /// outcome must still settle one way or the other.
     fn fail_segment(&mut self, seg: QueuedSeg) {
+        if matches!(seg.kind, SegKind::Audit { .. }) {
+            self.escalate_audit_failure(seg);
+            return;
+        }
         let outcome = SegmentOutcome {
             requeues: seg.requeues,
             revoked: seg.revoked,
@@ -1435,6 +1800,7 @@ impl EventLoop {
                 }
             }
             _ => {
+                self.gone.insert(w.name.clone());
                 if from_parole {
                     self.pool.expel(w);
                 } else {
@@ -1512,6 +1878,7 @@ impl EventLoop {
     /// the segment unresolved.
     fn finish_dispatch(&mut self, job_id: u64, seg_idx: usize, aseg: ActiveSeg) {
         let ActiveSeg {
+            kind,
             spec,
             seed,
             t0,
@@ -1524,6 +1891,25 @@ impl EventLoop {
             leased_seq,
             ..
         } = aseg;
+        if let SegKind::Audit { accused, expect } = kind {
+            self.finish_audit(AuditReturn {
+                job_id,
+                seg_idx,
+                accused,
+                expect,
+                spec,
+                seed,
+                t0,
+                requeues,
+                revoked,
+                bytes,
+                requests,
+                leased_seq,
+                workers,
+                slots,
+            });
+            return;
+        }
         let mut keep: Vec<PooledWorker> = Vec::new();
         let mut claims: Vec<Option<Hash>> = Vec::new();
         let mut any_failed = false;
@@ -1564,6 +1950,7 @@ impl EventLoop {
                     None,
                 );
                 self.queue.push(QueuedSeg {
+                    kind: SegKind::Work,
                     priority: policy.priority,
                     job_id,
                     seg_idx,
@@ -1608,6 +1995,7 @@ impl EventLoop {
                     None,
                 );
                 self.queue.push(QueuedSeg {
+                    kind: SegKind::Work,
                     priority: policy.priority,
                     job_id,
                     seg_idx,
@@ -1646,6 +2034,52 @@ impl EventLoop {
         }
 
         let want_state = self.jobs.get(&job_id).is_some_and(|j| j.wants_state(seg_idx));
+        let optimistic = self.jobs.get(&job_id).is_some_and(|j| j.optimistic());
+        if optimistic {
+            // Optimistic single-worker lease: the lone claim is accepted
+            // provisionally as the worker's commitment; whether it gets
+            // replay-audited is decided by the sampler when the resolver
+            // hands the segment back. The dispatch seed is remembered so
+            // a sampled replay starts from the same checkpoint the
+            // committer did.
+            let claimed = claims.iter().flatten().next().copied().expect("commits > 0");
+            if let Some(run) = self.jobs.get_mut(&job_id) {
+                match &seed {
+                    Some(s) => {
+                        run.seed_used.insert(seg_idx, Arc::clone(s));
+                    }
+                    None => {
+                        run.seed_used.remove(&seg_idx);
+                    }
+                }
+            }
+            let start = self
+                .jobs
+                .get(&job_id)
+                .map(|j| segment_start(&j.boundaries, seg_idx))
+                .unwrap_or(0);
+            let task = ResolveTask {
+                job_id,
+                seg_idx,
+                start,
+                end: spec.steps,
+                spec,
+                mode: ResolveMode::Commitment { claimed },
+                want_state,
+                seeded_from: seed.as_ref().map(|s| s.start),
+                t0,
+                requeues,
+                revoked,
+                bytes,
+                requests,
+                leased_seq,
+                workers: keep,
+                registry: self.metrics.registry.clone(),
+            };
+            self.resolving_out += 1;
+            self.task_tx.send(task).expect("resolver pool alive while segments outstanding");
+            return;
+        }
         let mode = match &seed {
             None => ResolveMode::Tournament,
             Some(_) => {
@@ -1675,6 +2109,7 @@ impl EventLoop {
                                 None,
                             );
                             self.queue.push(QueuedSeg {
+                                kind: SegKind::Work,
                                 priority: policy.priority,
                                 job_id,
                                 seg_idx,
@@ -1737,7 +2172,7 @@ impl EventLoop {
     }
 
     fn handle_resolved(&mut self, resolved: Resolved) {
-        let Resolved { job_id, mut outcome, workers, seed, rejected } = resolved;
+        let Resolved { job_id, mut outcome, workers, seed, rejected, commitment } = resolved;
         self.resolving_out -= 1;
         let mut keep = Vec::new();
         for (i, w) in workers.into_iter().enumerate() {
@@ -1746,6 +2181,7 @@ impl EventLoop {
                 // certified state root: adversarial (or hopelessly
                 // corrupt) — expel it outright, no parole.
                 outcome.revoked += 1;
+                self.gone.insert(w.name.clone());
                 self.pool.revoke(w);
             } else if w.faulted() {
                 outcome.revoked += 1;
@@ -1757,10 +2193,281 @@ impl EventLoop {
         self.pool.release(keep);
         if self.jobs.contains_key(&job_id) {
             let seg_idx = outcome.seg;
-            self.record_segment(job_id, seg_idx, outcome, seed);
+            match commitment {
+                Some((worker, commit)) => {
+                    self.settle_optimistic(job_id, seg_idx, outcome, seed, worker, commit);
+                }
+                None => self.record_segment(job_id, seg_idx, outcome, seed),
+            }
         }
         // else: the job was cancelled mid-resolve; leases returned, verdict
         // discarded.
+    }
+
+    /// An optimistic segment came back from its resolver carrying the
+    /// worker's commitment: flip the deterministic audit coin. Unsampled
+    /// segments settle immediately; sampled segments lock the worker's
+    /// stake, park the outcome, and queue a single-segment replay on an
+    /// independent worker (seeded exactly as the committer was).
+    fn settle_optimistic(
+        &mut self,
+        job_id: u64,
+        seg_idx: usize,
+        mut outcome: SegmentOutcome,
+        seed: Option<SeedPayload>,
+        worker: String,
+        commit: Hash,
+    ) {
+        let rate = self.jobs.get(&job_id).map(|j| j.policy.audit_rate).unwrap_or(0.0);
+        if !self.sampler.sample(job_id, seg_idx as u64, rate) {
+            self.record_segment(job_id, seg_idx, outcome, seed);
+            return;
+        }
+        outcome.audit_sampled = true;
+        self.ledger.lock(&worker);
+        let Some(run) = self.jobs.get_mut(&job_id) else { return };
+        let replay_seed = run.seed_used.get(&seg_idx).cloned();
+        let spec = run.spec.prefix(run.boundaries[seg_idx]);
+        let priority = run.policy.priority;
+        run.audits.insert(
+            seg_idx,
+            AuditState::Pending {
+                outcome: Box::new(outcome),
+                seed_next: seed,
+                accused: worker.clone(),
+                expect: commit,
+            },
+        );
+        self.metrics.registry.spans().trace(job_id, Some(seg_idx as u64), Stage::Queue, None);
+        self.queue.push(QueuedSeg {
+            kind: SegKind::Audit { accused: worker, expect: commit },
+            priority,
+            job_id,
+            seg_idx,
+            spec,
+            seed: replay_seed,
+            requeues: 0,
+            revoked: 0,
+            bytes: 0,
+            requests: 0,
+            t0: None,
+            leased_seq: 0,
+        });
+    }
+
+    /// An audit replay's dispatch settled: compare the independent commit
+    /// against the recorded commitment. A match settles the parked
+    /// optimistic outcome; a divergence escalates the segment into a full
+    /// tournament with the committer accused; a replay that failed to run
+    /// retries on another worker or, out of retries, escalates unblamed.
+    fn finish_audit(&mut self, ret: AuditReturn) {
+        let AuditReturn {
+            job_id,
+            seg_idx,
+            accused,
+            expect,
+            spec,
+            seed,
+            t0,
+            requeues,
+            mut revoked,
+            bytes,
+            requests,
+            leased_seq,
+            workers,
+            slots,
+        } = ret;
+        let mut verdict: Option<Hash> = None;
+        let mut failed = false;
+        let mut keep: Vec<PooledWorker> = Vec::new();
+        for (w, slot) in workers.into_iter().zip(slots) {
+            match slot {
+                SlotState::Failed => {
+                    failed = true;
+                    revoked += 1;
+                    self.discipline(w, false);
+                }
+                SlotState::Done(resp) => {
+                    // Byte accounting was folded in `handle_completion`.
+                    if let Response::Commit(h) = resp {
+                        verdict = Some(h);
+                    }
+                    keep.push(w);
+                }
+                SlotState::Waiting => unreachable!("outstanding == 0"),
+            }
+        }
+        self.pool.release(keep);
+        if !self.jobs.contains_key(&job_id) {
+            // Cancelled mid-audit: the stake was released by
+            // `handle_cancel` along with the parked outcome.
+            return;
+        }
+        let policy = self.jobs.get(&job_id).map(|j| j.policy).unwrap_or_default();
+        let max_requeues = policy.max_requeues.unwrap_or(self.cfg.max_requeues);
+        // Steps the auditor actually re-trained (the whole prefix when the
+        // committer also trained from scratch).
+        let audit_steps = spec.steps - seed.as_ref().map(|s| s.start).unwrap_or(0);
+        match verdict {
+            Some(h) if h == expect => {
+                // Independent replay reproduced the commitment: settle the
+                // parked outcome and unlock the stake.
+                self.ledger.release(&accused);
+                let Some(run) = self.jobs.get_mut(&job_id) else { return };
+                let Some(AuditState::Pending { outcome, seed_next, .. }) =
+                    run.audits.remove(&seg_idx)
+                else {
+                    return;
+                };
+                let mut outcome = *outcome;
+                outcome.audit_passed = true;
+                outcome.audit_steps += audit_steps;
+                outcome.requeues += requeues;
+                outcome.revoked += revoked;
+                outcome.bytes += bytes;
+                outcome.requests += requests;
+                self.record_segment(job_id, seg_idx, outcome, seed_next);
+            }
+            Some(_) => {
+                // The commitment and an independent replay disagree:
+                // someone is lying. The full tournament — with the
+                // committer re-leased into it — decides; a certified
+                // verdict different from the commitment convicts and
+                // slashes at settlement. The stake stays locked until
+                // then.
+                self.escalate(
+                    job_id,
+                    seg_idx,
+                    Some(accused),
+                    audit_steps,
+                    revoked,
+                    bytes,
+                    requests,
+                    t0,
+                    leased_seq,
+                );
+            }
+            None if failed
+                && requeues < max_requeues
+                && (self.pool.size() > 0 || self.pool.suspended() > 0) =>
+            {
+                // The auditor went silent: retry the replay elsewhere.
+                self.metrics.registry.spans().trace(
+                    job_id,
+                    Some(seg_idx as u64),
+                    Stage::Queue,
+                    None,
+                );
+                self.queue.push(QueuedSeg {
+                    kind: SegKind::Audit { accused, expect },
+                    priority: policy.priority,
+                    job_id,
+                    seg_idx,
+                    spec,
+                    seed,
+                    requeues: requeues + 1,
+                    revoked,
+                    bytes,
+                    requests,
+                    t0: Some(t0),
+                    leased_seq,
+                });
+            }
+            None => {
+                // The replay machinery failed (refusals or exhausted
+                // retries), proving nothing about the committer: escalate
+                // unblamed — replication instead of collateral.
+                self.ledger.release(&accused);
+                self.escalate(
+                    job_id, seg_idx, None, 0, revoked, bytes, requests, t0, leased_seq,
+                );
+            }
+        }
+    }
+
+    /// A replay audit that can never run (no independent worker will ever
+    /// be available) escalates unblamed.
+    fn escalate_audit_failure(&mut self, seg: QueuedSeg) {
+        let QueuedSeg { kind, job_id, seg_idx, revoked, bytes, requests, t0, leased_seq, .. } =
+            seg;
+        let SegKind::Audit { accused, .. } = kind else {
+            unreachable!("only audit segments escalate from the lease pass");
+        };
+        self.ledger.release(&accused);
+        self.escalate(
+            job_id,
+            seg_idx,
+            None,
+            0,
+            revoked,
+            bytes,
+            requests,
+            t0.unwrap_or_else(Instant::now),
+            leased_seq,
+        );
+    }
+
+    /// Turn a sampled segment's parked `Pending` audit state into an
+    /// `Escalated` one and re-queue the segment as a k-replicated prefix
+    /// tournament. `convict` names the committer when a divergent replay
+    /// proved the commitment wrong (the tournament verdict then decides
+    /// the slash); `None` means the audit machinery itself failed and
+    /// nobody is blamed. The whole optimistic tier is switched off for the
+    /// rest of the job: later segments run k-replicated too.
+    #[allow(clippy::too_many_arguments)]
+    fn escalate(
+        &mut self,
+        job_id: u64,
+        seg_idx: usize,
+        convict: Option<String>,
+        audit_steps: u64,
+        revoked: usize,
+        bytes: u64,
+        requests: u64,
+        t0: Instant,
+        leased_seq: u64,
+    ) {
+        let Some(run) = self.jobs.get_mut(&job_id) else { return };
+        run.escalated = true;
+        run.pinned = None;
+        let Some(AuditState::Pending { outcome: pending, expect, .. }) =
+            run.audits.remove(&seg_idx)
+        else {
+            return;
+        };
+        run.audits.insert(
+            seg_idx,
+            AuditState::Escalated {
+                accused: convict,
+                expect,
+                // The optimistic attempt's training is sunk cost now —
+                // the tournament re-trains the prefix from scratch.
+                audit_steps: pending.steps_trained + audit_steps,
+            },
+        );
+        let spec = run.spec.prefix(run.boundaries[seg_idx]);
+        let priority = run.policy.priority;
+        let carried_revoked = pending.revoked + revoked;
+        let carried_bytes = pending.bytes + bytes;
+        let carried_requests = pending.requests + requests;
+        let carried_seq = if pending.leased_seq != 0 { pending.leased_seq } else { leased_seq };
+        self.metrics.registry.spans().trace(job_id, Some(seg_idx as u64), Stage::Queue, None);
+        self.queue.push(QueuedSeg {
+            kind: SegKind::Work,
+            priority,
+            job_id,
+            seg_idx,
+            // Prefix re-training: the seed chain above this boundary is
+            // tainted by the disputed commitment.
+            spec,
+            seed: None,
+            requeues: 0,
+            revoked: carried_revoked,
+            bytes: carried_bytes,
+            requests: carried_requests,
+            t0: Some(t0),
+            leased_seq: carried_seq,
+        });
     }
 
     /// Settle one segment, advance a state-transfer job's pipeline (queue
@@ -1776,18 +2483,42 @@ impl EventLoop {
     ) {
         let Some(run) = self.jobs.get_mut(&job_id) else { return };
         outcome.start = segment_start(&run.boundaries, seg_idx);
+        run.seed_used.remove(&seg_idx);
+        // A segment settling out of an escalated audit folds the audit
+        // trail back in and decides the conviction: the tournament
+        // certifying a verdict different from the recorded commitment
+        // proves the committer lied — slash its locked stake. An
+        // acquittal (same verdict) or an unattributed/unresolved ending
+        // releases it.
+        if let Some(AuditState::Escalated { accused, expect, audit_steps }) =
+            run.audits.remove(&seg_idx)
+        {
+            outcome.audit_sampled = true;
+            outcome.audit_escalated = true;
+            outcome.audit_steps += audit_steps;
+            if let Some(name) = accused {
+                let convicted =
+                    outcome.accepted.is_some() && outcome.accepted != Some(expect);
+                if convicted {
+                    outcome.slashed = self.ledger.slash(&name);
+                } else {
+                    self.ledger.release(&name);
+                }
+            }
+        }
         if run.done[seg_idx].is_none() {
             run.finished += 1;
             self.metrics.observe_settled(&outcome);
             let spans = self.metrics.registry.spans();
             if outcome.accepted.is_some() {
-                spans.trace(job_id, Some(seg_idx as u64), Stage::Verdict, outcome.winner.as_deref());
+                let winner = outcome.winner.as_deref();
+                spans.trace(job_id, Some(seg_idx as u64), Stage::Verdict, winner);
             }
             spans.trace(job_id, Some(seg_idx as u64), Stage::Settle, None);
         }
         run.done[seg_idx] = Some(outcome);
         run.cell.set_running(run.finished, run.boundaries.len());
-        let queue_next = (run.policy.transfer
+        let queue_next = (run.pipelined()
             && run.next_seg == seg_idx + 1
             && run.next_seg < run.boundaries.len())
         .then(|| {
@@ -1799,6 +2530,7 @@ impl EventLoop {
         if let Some((next, end, spec, priority)) = queue_next {
             self.metrics.registry.spans().trace(job_id, Some(next as u64), Stage::Queue, None);
             self.queue.push(QueuedSeg {
+                kind: SegKind::Work,
                 priority,
                 job_id,
                 seg_idx: next,
@@ -2037,6 +2769,7 @@ pub fn run_service_blocking(jobs: Vec<JobSpec>, pool: &WorkerPool, k: usize) -> 
         workers: start_size,
         revoked: pool.revoked(),
         threads: lanes * (1 + k),
+        stakes: Vec::new(),
     }
 }
 
@@ -2231,6 +2964,7 @@ mod tests {
             workers: 4,
             revoked: Vec::new(),
             threads: 5,
+            stakes: Vec::new(),
         };
         assert_eq!(report.jobs_per_sec(), 0.0);
         assert_eq!(report.bytes_per_job(), 0.0);

@@ -99,6 +99,79 @@
 //! `seeded_from`, `transfer_bytes`, `uploads_rejected`) makes the saving
 //! observable in every report.
 //!
+//! ## Staked spot-check audit tier (`policy.audit_rate`)
+//!
+//! Replication pays `k × steps` worker-steps on every job, honest or
+//! not. With `JobRequest::with_audit(rate)` a job instead runs
+//! **optimistically**: the coordinator pins the whole job to **one**
+//! staked worker (enrolled in the [`audit::StakeLedger`] at
+//! `ServiceConfig::worker_stake`), which trains every segment and
+//! commits each boundary checkpoint root
+//! (`Request::CommitRoot`). A seeded deterministic sampler
+//! ([`audit::AuditSampler`], keyed by `ServiceConfig::audit_seed`) then
+//! flips a coin per committed segment at `audit_rate`; sampled segments
+//! are **replayed once** on an independent worker seeded from the same
+//! verified predecessor checkpoint (single-segment replay — no prefix
+//! re-training), and the replayed root is compared against the
+//! commitment.
+//!
+//! *Cost model.* Expected worker-steps per job ≈ `(1 + audit_rate) ×
+//! steps`, versus `k × steps` replicated — at `audit_rate = 0.1` an
+//! honest fleet does ~55% of the `k = 2` work. The audit replay is a
+//! single segment, so even a sampled segment costs `steps + seg_len`,
+//! never `2 × prefix`.
+//!
+//! *Escalation lifecycle* (every arrow is crash-safe; a wedged audit
+//! degrades to replication, never a stuck job):
+//!
+//! ```text
+//!   commit ──sampler──▶ unsampled ───────────────────────▶ settle
+//!     │                                                      ▲
+//!     └─▶ sampled: lock stake, replay on another worker      │
+//!              │                                             │
+//!              ├── replay root == commitment ── release ─────┘
+//!              │
+//!              └── divergence (or replay impossible)
+//!                       │
+//!                       ▼
+//!              ESCALATE: re-queue segment as a k-replicated
+//!              prefix job, accused preferentially re-leased
+//!              (k ≥ 2) so the dispute tournament can bisect it
+//!                       │
+//!                       ├── certified verdict ≠ commitment:
+//!                       │     StakeLedger::slash (confiscate the
+//!                       │     locked stake); job continues
+//!                       │     k-replicated (`escalated`)
+//!                       └── commitment upheld / accused gone:
+//!                             stake released, honest verdict stands
+//! ```
+//!
+//! Safety is inherited, not assumed: a divergent audit never settles on
+//! the auditor's word — it hands the segment to the existing
+//! bisection-tournament machinery, which certifies the honest root under
+//! the same one-honest-worker-per-lease assumption as replicated jobs.
+//! The sampler is deterministic in `(audit_seed, job_id, seg_idx)`, so a
+//! worker cannot learn whether a segment will be audited before
+//! committing to it (the seed is coordinator-private), while operators
+//! can replay sampling decisions exactly.
+//!
+//! Per-segment accounting lands in
+//! [`SegmentOutcome`](coordinator::SegmentOutcome) (`audit_sampled`,
+//! `audit_passed`, `audit_escalated`, `audit_steps`, `slashed`) and
+//! rolls up through [`coordinator::ServiceReport`] (`total_audit_*`,
+//! `total_slashed`, plus the closing [`audit::StakeEntry`] snapshot in
+//! `report.stakes`). The obs registry mirrors the same settling
+//! outcomes:
+//!
+//! | key                     | kind    | meaning                                      |
+//! |-------------------------|---------|----------------------------------------------|
+//! | `coord_audit_sampled`   | counter | segments picked for replay by the sampler    |
+//! | `coord_audit_passed`    | counter | replays whose root matched the commitment    |
+//! | `coord_audit_escalated` | counter | divergent/failed audits sent to a tournament |
+//! | `coord_audit_steps`     | counter | extra worker-steps spent on audit replays    |
+//! | `coord_stake_slashed`   | counter | total stake confiscated by convictions       |
+//! | `coord_stake_locked`    | gauge   | stake currently locked pending audits        |
+//!
 //! ## Observability (the stats plane)
 //!
 //! Every delegation owns a private [`crate::obs::Registry`]
@@ -157,11 +230,13 @@
 //! processes over TCP — blocking ([`crate::net::tcp`]) or multiplexed
 //! ([`crate::net::mux`], thousands of workers per coordinator thread).
 
+pub mod audit;
 pub mod client;
 pub mod coordinator;
 pub mod pool;
 pub mod worker;
 
+pub use audit::{AuditSampler, StakeEntry, StakeLedger};
 pub use client::{Client, Delegation, DelegationFrontend, JobHandle, JobRequest, JobStatus};
 pub use coordinator::{
     run_service, run_service_blocking, run_service_with, JobOutcome, SegmentOutcome,

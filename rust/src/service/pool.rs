@@ -491,6 +491,17 @@ impl WorkerPool {
         Some(taken)
     }
 
+    /// Take the idle worker named `name`, leaving everyone else in place
+    /// (`None` when no idle worker bears that name — it may be leased,
+    /// suspended, or gone). The audit tier uses this to pin an optimistic
+    /// job to its staked worker across segments, and to re-lease an
+    /// accused worker into its own escalation tournament.
+    pub fn try_take_named(&self, name: &str) -> Option<PooledWorker> {
+        let mut st = self.state();
+        let idx = st.free.iter().position(|w| w.name == name)?;
+        st.free.remove(idx)
+    }
+
     /// Take every currently idle worker (health-check sweeps, teardown).
     pub fn drain_idle(&self) -> Vec<PooledWorker> {
         let mut st = self.state();

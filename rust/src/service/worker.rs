@@ -644,6 +644,28 @@ mod tests {
     }
 
     #[test]
+    fn commit_root_binds_the_served_checkpoint() {
+        let spec = JobSpec::quick(Preset::Mlp, 4);
+        let mut host = WorkerHost::new("w0", FaultPlan::Honest);
+        // No active job: nothing to commit to.
+        assert!(matches!(host.call(Request::CommitRoot { step: 4 }), Response::Refuse(_)));
+        assert!(matches!(host.call(Request::Train { spec }), Response::Commit(_)));
+        let root = match host.call(Request::CommitRoot { step: 4 }) {
+            Response::Commit(r) => r,
+            other => panic!("{other:?}"),
+        };
+        // The committed root is exactly the root the checkpoint upload
+        // serves — an audit can bind the commitment to the bytes shipped.
+        match host.call(Request::FetchCheckpoint { step: 4, chunk: 0 }) {
+            Response::Checkpoint { root: served, .. } => assert_eq!(served, root),
+            other => panic!("{other:?}"),
+        }
+        // Hostile or stale steps refuse instead of panicking.
+        assert!(matches!(host.call(Request::CommitRoot { step: 0 }), Response::Refuse(_)));
+        assert!(matches!(host.call(Request::CommitRoot { step: 99 }), Response::Refuse(_)));
+    }
+
+    #[test]
     fn redelegated_identical_job_answers_from_cache() {
         let spec = JobSpec::quick(Preset::Mlp, 4);
         let mut host = WorkerHost::new("w0", FaultPlan::Honest);

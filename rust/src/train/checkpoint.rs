@@ -156,6 +156,18 @@ pub fn decode_state(bytes: &[u8]) -> Result<State, WireError> {
     Ok(State { step, params, opt })
 }
 
+/// Whether `bytes` is a canonical checkpoint-state encoding for exactly
+/// `step` whose Merkle state root is `root` — the acceptance test every
+/// verifier applies to a fetched checkpoint upload before trusting it
+/// (state-transfer seeding, audit replays). Total on hostile bytes: a
+/// malformed encoding is simply `false`, never a panic.
+pub fn verify_encoded_state(bytes: &[u8], step: u64, root: &crate::hash::Hash) -> bool {
+    match decode_state(bytes) {
+        Ok(st) => st.step == step && st.state_root() == *root,
+        Err(_) => false,
+    }
+}
+
 /// Number of wire chunks a serialized state of `len` bytes needs (≥ 1).
 pub fn chunk_count(len: usize) -> u64 {
     (len.div_ceil(CHECKPOINT_CHUNK)).max(1) as u64
@@ -248,6 +260,19 @@ mod tests {
             decode_state(&evil),
             Err(WireError::Malformed { context: "state.params" })
         ));
+    }
+
+    #[test]
+    fn verify_encoded_state_binds_step_and_root() {
+        let st = sample_state(11);
+        let bytes = encode_state(&st);
+        let root = st.state_root();
+        assert!(verify_encoded_state(&bytes, st.step, &root));
+        assert!(!verify_encoded_state(&bytes, st.step + 1, &root), "wrong step accepted");
+        let other = sample_state(12).state_root();
+        assert!(!verify_encoded_state(&bytes, st.step, &other), "wrong root accepted");
+        assert!(!verify_encoded_state(&bytes[..bytes.len() - 1], st.step, &root));
+        assert!(!verify_encoded_state(&[], st.step, &root));
     }
 
     #[test]

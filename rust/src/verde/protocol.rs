@@ -75,6 +75,18 @@ pub struct JobPolicy {
     /// falls back to prefix re-training for that segment. `false` (the
     /// default) keeps the prefix-re-training behavior unchanged.
     pub transfer: bool,
+    /// Optimistic audit tier: `0.0` (the default) runs every segment
+    /// k-replicated; a rate in `(0.0, 1.0]` instead leases **one** staked
+    /// worker per segment, records its per-segment checkpoint-root
+    /// commitment ([`Request::CommitRoot`]), and independently replays a
+    /// deterministic sample of committed segments at this rate. A matching
+    /// replay settles the segment; a divergent replay escalates it into
+    /// the full dispute tournament and a conviction slashes the worker's
+    /// stake. On the wire the rate is a little-endian `f32`; encoders
+    /// clamp it into `[0.0, 1.0]` (`NaN` → `0.0`) and decoders reject
+    /// anything outside that range, so one canonical encoding per value
+    /// is preserved.
+    pub audit_rate: f32,
 }
 
 impl Default for JobPolicy {
@@ -87,6 +99,7 @@ impl Default for JobPolicy {
             segments: 1,
             max_requeues: None,
             transfer: false,
+            audit_rate: 0.0,
         }
     }
 }
@@ -176,6 +189,13 @@ pub enum Request {
         chunk: u64,
         payload: Vec<u8>,
     },
+    /// Coordinator → worker (optimistic audit tier): commit to the Merkle
+    /// root of the checkpoint state after training step `step` of the
+    /// active job. Answered with [`Response::Commit`] carrying the state
+    /// root — the binding commitment a sampled replay audit is checked
+    /// against — or [`Response::Refuse`] when `step` is outside the active
+    /// job's trained range (hostile or stale steps never panic a worker).
+    CommitRoot { step: u64 },
     /// Ask any stats-serving peer (worker host, coordinator frontend) for
     /// a point-in-time [`Snapshot`](crate::obs::Snapshot) of its metrics
     /// registry. Answered with [`Response::Stats`]; peers without a
@@ -301,6 +321,7 @@ mod tests {
                     segments: 4,
                     max_requeues: Some(2),
                     transfer: true,
+                    audit_rate: 0.25,
                 },
             },
             Request::Submit {
@@ -310,6 +331,7 @@ mod tests {
             Request::Status { job_id: 17 },
             Request::Cancel { job_id: u64::MAX },
             Request::FetchCheckpoint { step: 9, chunk: 2 },
+            Request::CommitRoot { step: 12 },
             Request::Stats,
             Request::SeedCheckpoint {
                 spec: JobSpec::quick(Preset::Mlp, 10),

@@ -525,6 +525,19 @@ impl Endpoint for TrainerNode {
                 Response::Refuse("trainer is bound to a single job".into())
             }
             Request::FetchCheckpoint { step, chunk } => self.checkpoint_chunk(step, chunk),
+            Request::CommitRoot { step } => {
+                // Same range guard as checkpoint serving: hostile or stale
+                // steps refuse instead of panicking, and a seeded trainer
+                // holds no state below its seed boundary to commit to.
+                if step < 1 || step < self.seed_base || step > self.session.spec.steps {
+                    Response::Refuse(format!("{}: no checkpoint at step {step}", self.name))
+                } else {
+                    // The committed root is the state root the checkpoint
+                    // upload serves, so an audit can bind the commitment
+                    // to the bytes the worker actually ships.
+                    Response::Commit(self.state_at(step).state_root())
+                }
+            }
             Request::Submit { .. } | Request::Status { .. } | Request::Cancel { .. } => {
                 // Client-API messages address a coordinator frontend
                 // (`service::client::DelegationFrontend`), never a trainer.

@@ -83,6 +83,7 @@ const REQ_CANCEL: u8 = 0x0C;
 const REQ_FETCH_CHECKPOINT: u8 = 0x0D;
 const REQ_SEED_CHECKPOINT: u8 = 0x0E;
 const REQ_STATS: u8 = 0x0F;
+const REQ_COMMIT_ROOT: u8 = 0x10;
 
 const RESP_COMMIT: u8 = 0x81;
 const RESP_HASHES: u8 = 0x82;
@@ -474,6 +475,11 @@ fn put_policy(out: &mut Vec<u8>, p: &JobPolicy) {
         }
     }
     out.push(u8::from(p.transfer));
+    // NaN compares false against everything, so `clamp` would pass it
+    // through — map it to 0.0 (audits off) explicitly, then clamp. The
+    // decoder's range check makes any other bit pattern non-canonical.
+    let rate = if p.audit_rate.is_nan() { 0.0 } else { p.audit_rate.clamp(0.0, 1.0) };
+    put_f32(out, rate);
 }
 
 fn read_policy(r: &mut Reader<'_>) -> Result<JobPolicy, WireError> {
@@ -505,7 +511,12 @@ fn read_policy(r: &mut Reader<'_>) -> Result<JobPolicy, WireError> {
         None
     };
     let transfer = read_presence(r, "policy.transfer")?;
-    Ok(JobPolicy { k, deadline, priority, backend, segments, max_requeues, transfer })
+    let audit_rate = r.f32("policy.audit_rate")?;
+    // Rejects NaN too: NaN fails every range comparison.
+    if !(0.0..=1.0).contains(&audit_rate) {
+        return Err(WireError::Malformed { context: "policy.audit_rate" });
+    }
+    Ok(JobPolicy { k, deadline, priority, backend, segments, max_requeues, transfer, audit_rate })
 }
 
 fn policy_wire_len(p: &JobPolicy) -> usize {
@@ -515,6 +526,7 @@ fn policy_wire_len(p: &JobPolicy) -> usize {
         + 8
         + (1 + if p.max_requeues.is_some() { 8 } else { 0 })
         + 1
+        + 4
 }
 
 /// Write the shared `(total_chunks, chunk, payload)` tail of a
@@ -792,6 +804,10 @@ impl Request {
                 put_hash(&mut out, root);
                 put_chunk(&mut out, *total_chunks, *chunk, payload);
             }
+            Request::CommitRoot { step } => {
+                out.push(REQ_COMMIT_ROOT);
+                put_u64(&mut out, *step);
+            }
             Request::Stats => out.push(REQ_STATS),
         }
         debug_assert_eq!(out.len(), self.wire_size(), "wire_size drifted from encoder");
@@ -862,6 +878,7 @@ impl Request {
                 let (total_chunks, chunk, payload) = read_chunk(&mut r)?;
                 Request::SeedCheckpoint { spec, start, root, total_chunks, chunk, payload }
             }
+            REQ_COMMIT_ROOT => Request::CommitRoot { step: r.u64("request.step")? },
             REQ_STATS => Request::Stats,
             tag => return Err(WireError::BadTag { context: "request", tag }),
         };
@@ -876,7 +893,7 @@ pub fn request_wire_len(req: &Request) -> usize {
     1 + match req {
         Request::FinalCommit | Request::Shutdown | Request::Ping | Request::Stats => 0,
         Request::CheckpointHashes { boundaries } => 8 + 8 * boundaries.len(),
-        Request::NodeHashSeq { .. } => 8,
+        Request::NodeHashSeq { .. } | Request::CommitRoot { .. } => 8,
         Request::OpenNode { .. } | Request::InputProof { .. } => 16,
         Request::InputTensor { .. } => 24,
         Request::Train { spec } => spec_wire_len(spec),
@@ -1130,7 +1147,12 @@ mod tests {
                     segments: 8,
                     max_requeues: Some(1),
                     transfer: true,
+                    audit_rate: 0.125,
                 },
+            },
+            Request::Submit {
+                spec: crate::train::JobSpec::quick(crate::model::Preset::Mlp, 16),
+                policy: JobPolicy { audit_rate: 1.0, segments: 4, ..JobPolicy::default() },
             },
             Request::Status { job_id: 0 },
             Request::Status { job_id: u64::MAX },
@@ -1145,6 +1167,8 @@ mod tests {
                 chunk: 1,
                 payload: vec![0xAB; 77],
             },
+            Request::CommitRoot { step: 0 },
+            Request::CommitRoot { step: u64::MAX },
             Request::Stats,
         ]
     }
@@ -1402,6 +1426,54 @@ mod tests {
             Request::Submit { policy: back, .. } => assert_eq!(back.segments, 1),
             other => panic!("{other:?}"),
         }
+        // Out-of-range and NaN audit rates clamp on encode (NaN → 0.0,
+        // audits off) so the message stays decodable.
+        for (rate, expect) in [(7.5f32, 1.0f32), (-3.0, 0.0), (f32::NAN, 0.0)] {
+            let policy = JobPolicy { audit_rate: rate, ..JobPolicy::default() };
+            let bytes = Request::Submit { spec, policy }.encode();
+            match Request::decode(&bytes).expect("clamped audit_rate decodes") {
+                Request::Submit { policy: back, .. } => {
+                    assert_eq!(back.audit_rate.to_bits(), expect.to_bits(), "rate {rate}");
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_audit_rate_and_commit_root_rejected() {
+        // The audit rate is the last 4 bytes of a Submit policy; anything
+        // outside [0.0, 1.0] — including NaN bit patterns — must be
+        // rejected, never accepted as a second encoding of "no audits".
+        let spec = crate::train::JobSpec::quick(crate::model::Preset::Mlp, 4);
+        let good = Request::Submit { spec, policy: JobPolicy::default() }.encode();
+        let pos = good.len() - 4;
+        assert_eq!(
+            f32::from_le_bytes(good[pos..].try_into().unwrap()).to_bits(),
+            0.0f32.to_bits(),
+            "audit_rate field located"
+        );
+        for evil_rate in [1.5f32, -0.25, f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut evil = good.clone();
+            evil[pos..].copy_from_slice(&evil_rate.to_le_bytes());
+            assert!(
+                matches!(
+                    Request::decode(&evil),
+                    Err(WireError::Malformed { context: "policy.audit_rate" })
+                ),
+                "audit_rate {evil_rate} accepted"
+            );
+        }
+        // CommitRoot: every strict prefix is Truncated, a junk tail is
+        // Trailing — the same total-decoding battery as its siblings.
+        let good = Request::CommitRoot { step: 42 }.encode();
+        assert_eq!(good.len(), Request::CommitRoot { step: 42 }.wire_size());
+        for cut in 0..good.len() {
+            assert!(Request::decode(&good[..cut]).is_err(), "prefix {cut} accepted");
+        }
+        let mut padded = good.clone();
+        padded.push(0);
+        assert!(matches!(Request::decode(&padded), Err(WireError::Trailing { extra: 1 })));
     }
 
     #[test]

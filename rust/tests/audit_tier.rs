@@ -1,0 +1,235 @@
+//! Acceptance battery for the staked spot-check audit tier: an all-honest
+//! optimistic fleet settles a segmented job for strictly fewer worker-steps
+//! than the k=2 replicated equivalent; a cheating optimistic worker is
+//! caught by a sampled replay, convicted by the escalation tournament,
+//! slashed in the stake ledger — and the job still returns the honest
+//! verdict, in-process AND over real TCP; and a replay that can never run
+//! (no independent auditor exists) degrades to replication instead of
+//! wedging the job.
+
+use std::net::TcpListener;
+
+use verde::hash::Hash;
+use verde::model::Preset;
+use verde::net::tcp::{spawn_server, TcpEndpoint};
+use verde::net::Endpoint;
+use verde::service::{
+    AuditSampler, Delegation, FaultPlan, JobRequest, PooledWorker, ServiceConfig, WorkerHost,
+    WorkerPool,
+};
+use verde::train::JobSpec;
+use verde::verde::protocol::Request;
+use verde::verde::trainer::TrainerNode;
+
+fn in_process_pool(plans: &[(&str, FaultPlan)]) -> WorkerPool {
+    WorkerPool::new(
+        plans
+            .iter()
+            .map(|&(name, plan)| PooledWorker::new(name, WorkerHost::new(name, plan)))
+            .collect(),
+    )
+}
+
+fn honest(spec: JobSpec) -> Hash {
+    TrainerNode::honest("ref", spec).train()
+}
+
+/// THE acceptance criterion, honest half: an optimistic job over an
+/// all-honest fleet settles every segment with the exact honest verdict
+/// for `steps + Σ sampled-segment lengths` worker-steps — strictly less
+/// than the `k × steps` a k=2 replicated run of the same job pays.
+#[test]
+fn honest_optimistic_fleet_undercuts_replication() {
+    let plans =
+        [("w0", FaultPlan::Honest), ("w1", FaultPlan::Honest), ("w2", FaultPlan::Honest)];
+    let spec = JobSpec::quick(Preset::Mlp, 12);
+    let full = honest(spec);
+
+    // Replicated baseline: k=2 with state transfer costs exactly k × steps.
+    let pool = in_process_pool(&plans);
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let outcome = delegation
+        .submit(JobRequest::new(spec).with_segments(4).with_state_transfer())
+        .wait();
+    assert_eq!(outcome.accepted, Some(full));
+    let replicated_steps = delegation.finish().total_steps_trained();
+    assert_eq!(replicated_steps, 2 * 12);
+
+    // Optimistic: one pinned staked worker, audit_rate 0.5. The sampler is
+    // deterministic — with the default audit_seed (0) job 0 samples
+    // segments 1 and 3 of 4 at rate 0.5 — so the cost is exact, not
+    // statistical: 12 committer steps + 3 + 3 replayed.
+    let sampler = AuditSampler::new(0);
+    let sampled: Vec<usize> = (0..4).filter(|&g| sampler.sample(0, g as u64, 0.5)).collect();
+    assert_eq!(sampled, vec![1, 3], "sampling schedule drifted");
+
+    let pool = in_process_pool(&plans);
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let outcome = delegation.submit(JobRequest::new(spec).with_segments(4).with_audit(0.5)).wait();
+
+    assert!(!outcome.cancelled);
+    assert_eq!(outcome.accepted, Some(full), "optimistic == replicated verdict: {outcome:?}");
+    assert_eq!(outcome.winner.as_deref(), Some("w0"), "the job was pinned to one worker");
+    assert_eq!(outcome.disputes, 0);
+    assert_eq!(outcome.eliminated, 0);
+    assert_eq!(outcome.segments.len(), 4);
+    for (i, s) in outcome.segments.iter().enumerate() {
+        assert_eq!(s.accepted, Some(honest(spec.prefix(s.end))), "segment {i}");
+        assert_eq!(s.workers, vec!["w0".to_string()], "segment {i}: single-worker lease");
+        assert_eq!(s.steps_trained, s.end - s.start, "segment {i} was pipeline-seeded");
+        assert_eq!(s.audit_sampled, sampled.contains(&i), "segment {i}");
+        assert_eq!(s.audit_passed, sampled.contains(&i), "honest replays match: segment {i}");
+        assert!(!s.audit_escalated, "segment {i}");
+        assert_eq!(s.audit_steps, if sampled.contains(&i) { s.end - s.start } else { 0 });
+        assert_eq!(s.slashed, 0);
+    }
+
+    let report = delegation.finish();
+    assert_eq!(report.total_audit_sampled(), 2);
+    assert_eq!(report.total_audit_passed(), 2);
+    assert_eq!(report.total_audit_escalated(), 0);
+    assert_eq!(report.total_steps_trained(), 12, "the committer trains each delta once");
+    assert_eq!(report.total_audit_steps(), 6, "replays re-train only sampled segments");
+    let optimistic_steps = report.total_steps_trained() + report.total_audit_steps();
+    assert!(
+        optimistic_steps < replicated_steps,
+        "audit tier must undercut replication: {optimistic_steps} vs {replicated_steps}"
+    );
+    // Stake: enrolled, nothing locked or slashed after the run.
+    assert_eq!(report.stakes.len(), 1);
+    assert_eq!(report.stakes[0].worker, "w0");
+    assert_eq!(report.stakes[0].deposited, 1000);
+    assert_eq!(report.stakes[0].locked, 0);
+    assert_eq!(report.stakes[0].slashed, 0);
+    assert_eq!(report.total_slashed(), 0);
+    let json = report.to_json();
+    assert!(json.contains("\"audit_sampled\":2"), "{json}");
+    assert!(json.contains("\"audit_passed\":2"), "{json}");
+    assert!(json.contains("\"stake_slashed\":0"), "{json}");
+    assert_eq!(pool.idle(), 3, "all leases returned");
+}
+
+/// THE acceptance criterion, adversarial half: the pinned optimistic
+/// worker tampers mid-job. Its per-segment commitment binds the cheat, the
+/// sampled replay diverges, the escalation tournament convicts it, its
+/// stake is slashed — and the job settles with the honest verdict.
+#[test]
+fn cheating_committer_is_convicted_and_slashed() {
+    // The cheater sits at the front of the free list, so the optimistic
+    // job pins to it. It tampers at step 5: segment 0 (steps 1..=3) is
+    // honest, segment 1 (4..=6) carries the cheat.
+    let pool = in_process_pool(&[
+        ("w0", FaultPlan::Tamper { step: Some(5), delta: 0.05 }),
+        ("w1", FaultPlan::Honest),
+        ("w2", FaultPlan::Honest),
+    ]);
+    let spec = JobSpec::quick(Preset::Mlp, 12);
+    let full = honest(spec);
+
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let outcome = delegation.submit(JobRequest::new(spec).with_segments(4).with_audit(1.0)).wait();
+
+    assert_eq!(outcome.accepted, Some(full), "honest verdict despite the cheat: {outcome:?}");
+    assert!(outcome.eliminated >= 1, "the tournament eliminated the cheater");
+    assert!(outcome.disputes >= 1, "escalation ran a real dispute");
+
+    // Segment 0: honest commitment, replay matched.
+    let s0 = &outcome.segments[0];
+    assert!(s0.audit_sampled && s0.audit_passed && !s0.audit_escalated, "{s0:?}");
+    assert_eq!(s0.slashed, 0);
+    // Segment 1: divergent replay, escalated, convicted, slashed.
+    let s1 = &outcome.segments[1];
+    assert!(s1.audit_sampled && !s1.audit_passed && s1.audit_escalated, "{s1:?}");
+    assert_eq!(s1.accepted, Some(honest(spec.prefix(6))), "tournament certified honesty");
+    assert_eq!(s1.slashed, 1000, "the full deposit was confiscated");
+    assert!(s1.audit_steps > 0, "the sunk optimistic attempt is on the bill");
+    // Segments 2..: the job fell back to k-replication (no more audits).
+    for s in &outcome.segments[2..] {
+        assert!(!s.audit_sampled, "escalation turns the optimistic tier off: {s:?}");
+        assert_eq!(s.workers.len(), 2, "k-replicated from here on");
+        assert_eq!(s.accepted, Some(honest(spec.prefix(s.end))));
+    }
+
+    let report = delegation.finish();
+    assert_eq!(report.total_audit_sampled(), 2);
+    assert_eq!(report.total_audit_passed(), 1);
+    assert_eq!(report.total_audit_escalated(), 1);
+    assert_eq!(report.total_slashed(), 1000);
+    let w0 = report.stakes.iter().find(|s| s.worker == "w0").expect("enrolled");
+    assert_eq!(w0.slashed, 1000);
+    assert_eq!(w0.locked, 0);
+    assert_eq!(w0.available(), 0, "nothing left to stake");
+    assert_eq!(pool.idle(), 3, "eliminations are not revocations; leases returned");
+}
+
+/// The same conviction path over real TCP worker processes: the cheat, the
+/// divergent replay, the escalation, the slash, and the honest verdict all
+/// survive the wire.
+#[test]
+fn tcp_cheating_committer_is_convicted_and_slashed() {
+    let plans = [
+        ("w0", FaultPlan::Tamper { step: Some(5), delta: 0.05 }),
+        ("w1", FaultPlan::Honest),
+        ("w2", FaultPlan::Honest),
+    ];
+    let mut servers = Vec::new();
+    let mut workers = Vec::new();
+    for (name, plan) in plans {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+        let addr = listener.local_addr().unwrap();
+        servers.push(spawn_server(listener, WorkerHost::new(name, plan), Some(1)));
+        workers.push(PooledWorker::new(name, TcpEndpoint::connect(name, addr).unwrap()));
+    }
+    let pool = WorkerPool::new(workers);
+
+    let spec = JobSpec::quick(Preset::Mlp, 12);
+    let full = honest(spec);
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let outcome = delegation.submit(JobRequest::new(spec).with_segments(4).with_audit(1.0)).wait();
+
+    assert_eq!(outcome.accepted, Some(full), "{outcome:?}");
+    assert!(outcome.eliminated >= 1);
+    let s1 = &outcome.segments[1];
+    assert!(s1.audit_escalated, "{s1:?}");
+    assert_eq!(s1.slashed, 1000);
+
+    let report = delegation.finish();
+    assert_eq!(report.total_slashed(), 1000);
+    assert_eq!(report.total_audit_escalated(), 1);
+
+    for mut w in pool.into_workers() {
+        let _ = w.call(Request::Shutdown);
+    }
+    for server in servers {
+        let _ = server.join();
+    }
+}
+
+/// A sampled replay that can never run — the accused is the entire pool,
+/// so no independent auditor exists — escalates unblamed: the stake is
+/// released, the segment re-runs as (degenerate) replicated work, and the
+/// job settles instead of wedging.
+#[test]
+fn impossible_replay_degrades_to_replication() {
+    let pool = in_process_pool(&[("solo", FaultPlan::Honest)]);
+    let spec = JobSpec::quick(Preset::Mlp, 6);
+
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let outcome = delegation.submit(JobRequest::new(spec).with_audit(1.0)).wait();
+
+    assert_eq!(outcome.accepted, Some(honest(spec)), "{outcome:?}");
+    assert_eq!(outcome.segments.len(), 1);
+    let s = &outcome.segments[0];
+    assert!(s.audit_sampled, "the commitment was sampled");
+    assert!(!s.audit_passed, "no replay ever ran");
+    assert!(s.audit_escalated, "the impossible audit escalated");
+    assert_eq!(s.slashed, 0, "an unblamed escalation never slashes");
+
+    let report = delegation.finish();
+    assert_eq!(report.total_audit_escalated(), 1);
+    assert_eq!(report.total_slashed(), 0);
+    let solo = report.stakes.iter().find(|s| s.worker == "solo").expect("enrolled");
+    assert_eq!(solo.locked, 0, "the stake was released when blame evaporated");
+    assert_eq!(solo.slashed, 0);
+    assert_eq!(pool.idle(), 1);
+}

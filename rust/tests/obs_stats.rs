@@ -179,6 +179,63 @@ fn tampered_upload_counts_in_both_registry_and_report() {
     assert_eq!(registry.spans().count(Stage::Verdict), outcome.segments.len());
 }
 
+/// The audit-tier satellite: an optimistic job whose pinned committer
+/// cheats, so every audit instrument fires — sampled, passed, escalated,
+/// steps, and a slash. Each `coord_audit_*` / `coord_stake_*` instrument
+/// must equal the corresponding `ServiceReport` total exactly, and the
+/// audit spans must name the accused committer.
+#[test]
+fn audit_counters_reconcile_exactly_with_report() {
+    let pool = in_process_pool(&[
+        ("w0", FaultPlan::Tamper { step: Some(5), delta: 0.05 }),
+        ("w1", FaultPlan::Honest),
+        ("w2", FaultPlan::Honest),
+    ]);
+    let spec = JobSpec::quick(Preset::Mlp, 12);
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let registry = delegation.registry().clone();
+    registry.spans().enable();
+
+    let outcome = delegation.submit(JobRequest::new(spec).with_segments(4).with_audit(1.0)).wait();
+    assert!(outcome.accepted.is_some(), "{outcome:?}");
+    let report = delegation.finish();
+    let snap = registry.snapshot();
+
+    // The scenario exercises every instrument: segment 0's replay passes,
+    // segment 1's diverges, escalates, and slashes.
+    assert_eq!(report.total_audit_sampled(), 2, "{report:?}");
+    assert_eq!(report.total_audit_passed(), 1);
+    assert_eq!(report.total_audit_escalated(), 1);
+    assert!(report.total_audit_steps() > 0);
+    assert!(report.total_slashed() > 0);
+
+    // --- counter ↔ report reconciliation: exact equality -------------
+    assert_eq!(snap.counter("coord_audit_sampled"), report.total_audit_sampled() as u64);
+    assert_eq!(snap.counter("coord_audit_passed"), report.total_audit_passed() as u64);
+    assert_eq!(snap.counter("coord_audit_escalated"), report.total_audit_escalated() as u64);
+    assert_eq!(snap.counter("coord_audit_steps"), report.total_audit_steps());
+    assert_eq!(snap.counter("coord_stake_slashed"), report.total_slashed());
+    // The segment-level bill and the ledger agree on every confiscation.
+    let ledger_slashed: u64 = report.stakes.iter().map(|s| s.slashed).sum();
+    assert_eq!(report.total_slashed(), ledger_slashed, "segment bill == ledger bill");
+    assert_eq!(snap.gauge("coord_stake_locked"), 0, "every lock was released or slashed");
+
+    // --- audit spans: one per dispatched replay, naming the accused ---
+    let audits: Vec<_> = registry
+        .spans()
+        .events()
+        .into_iter()
+        .filter(|e| e.stage == Stage::Audit)
+        .collect();
+    assert_eq!(audits.len(), 2, "both sampled segments dispatched a replay");
+    for a in &audits {
+        assert_eq!(a.worker.as_deref(), Some("w0"), "the audit span names the accused");
+    }
+    // The settled timeline still reconciles segment-for-segment.
+    assert_eq!(registry.spans().count(Stage::Settle), outcome.segments.len() + 1);
+    assert_eq!(registry.spans().count(Stage::Verdict), outcome.segments.len());
+}
+
 /// The live stats plane over the wire: a serving frontend built
 /// `with_stats` answers `Request::Stats` with the delegation's snapshot;
 /// one built without it refuses rather than serving an empty lie.

@@ -18,6 +18,7 @@ use verde::util::proptest::{forall, Gen};
 use verde::verde::protocol::{
     BackendRequirement, InputProvenance, JobPolicy, RemoteStatus, Request, Response,
 };
+use verde::verde::wire::WireError;
 
 fn gen_hash(g: &mut Gen) -> Hash {
     Hash::of_bytes(&g.u64().to_le_bytes())
@@ -100,6 +101,10 @@ fn gen_policy(g: &mut Gen) -> JobPolicy {
         segments: g.usize_in(1, 1 << 16) as u64,
         max_requeues: if g.bool() { Some(g.usize_in(0, 1000) as u32) } else { None },
         transfer: g.bool(),
+        // Quantized to hundredths: every generated rate is in the codec's
+        // canonical [0, 1] range, so roundtrips are bit-exact (the encoder
+        // clamp never fires).
+        audit_rate: g.usize_in(0, 100) as f32 / 100.0,
     }
 }
 
@@ -171,7 +176,8 @@ fn gen_status(g: &mut Gen) -> RemoteStatus {
 }
 
 fn gen_request(g: &mut Gen) -> Request {
-    match g.usize_in(0, 14) {
+    match g.usize_in(0, 15) {
+        15 => Request::CommitRoot { step: g.u64() },
         14 => Request::Stats,
         12 => {
             let chunk = g.usize_in(0, 1023) as u64;
@@ -373,6 +379,12 @@ fn prop_submit_policies_roundtrip_field_exact() {
                 assert_eq!(bpol.backend, policy.backend);
                 assert_eq!(bpol.segments, policy.segments);
                 assert_eq!(bpol.max_requeues, policy.max_requeues);
+                assert_eq!(bpol.transfer, policy.transfer);
+                assert_eq!(
+                    bpol.audit_rate.to_bits(),
+                    policy.audit_rate.to_bits(),
+                    "bit-exact audit rate"
+                );
             }
             other => panic!("{other:?}"),
         }
@@ -451,6 +463,42 @@ fn prop_checkpoint_transfer_messages_roundtrip_field_exact() {
         // allocations.
         let fetch = Request::FetchCheckpoint { step: 1, chunk: 1 << 62 };
         assert!(Request::decode(&fetch.encode()).is_err(), "absurd fetch chunk accepted");
+    });
+}
+
+#[test]
+fn prop_commit_root_and_audit_rate_survive_hostile_bytes() {
+    forall("commitment messages are total over hostile bytes", 100, |g: &mut Gen| {
+        // CommitRoot: size-exact, every strict prefix truncated, any junk
+        // tail trailing — never a panic, never a silent reinterpretation.
+        let req = Request::CommitRoot { step: g.u64() };
+        let bytes = req.encode();
+        assert_eq!(bytes.len(), req.wire_size(), "{req:?}");
+        assert_eq!(Request::decode(&bytes).unwrap().encode(), bytes);
+        for cut in 0..bytes.len() {
+            assert!(Request::decode(&bytes[..cut]).is_err(), "prefix {cut} accepted");
+        }
+        let mut padded = bytes.clone();
+        padded.push((g.u64() & 0xff) as u8);
+        assert!(matches!(Request::decode(&padded), Err(WireError::Trailing { extra: 1 })));
+
+        // The audit rate rides as the final 4 bytes of a Submit policy:
+        // out-of-range and non-finite bit patterns must be rejected, not
+        // accepted as a second spelling of "audits off".
+        let submit = Request::Submit { spec: gen_spec(g), policy: gen_policy(g) };
+        let good = submit.encode();
+        let pos = good.len() - 4;
+        for evil_rate in [1.0 + g.f32_in(0.001, 100.0), -g.f32_in(0.001, 100.0), f32::NAN] {
+            let mut evil = good.clone();
+            evil[pos..].copy_from_slice(&evil_rate.to_le_bytes());
+            assert!(
+                matches!(
+                    Request::decode(&evil),
+                    Err(WireError::Malformed { context: "policy.audit_rate" })
+                ),
+                "hostile audit_rate {evil_rate} accepted"
+            );
+        }
     });
 }
 
