@@ -21,7 +21,11 @@
 //!                and the per-worker deposit); `--serve ADDR`
 //!                exposes the Submit/Status/Cancel client API over TCP —
 //!                `--serve-conns N` accepts N concurrent clients — instead
-//!                of submitting `--jobs` itself)
+//!                of submitting `--jobs` itself; `--journal PATH` makes the
+//!                coordinator durable: state transitions are written-ahead
+//!                to PATH and a restart with the same path recovers —
+//!                settled jobs re-serve their logged verdict, in-flight
+//!                jobs re-train only unsettled segments)
 //!   client       drive a serving coordinator remotely: submit `--jobs`
 //!                jobs over the wire (optionally `--segments`/`--transfer`
 //!                sharded), poll status, optionally `--cancel N` one of
@@ -44,6 +48,7 @@
 //!   verde coordinator --workers 127.0.0.1:7000,127.0.0.1:7001 --jobs 8 --k 2 --segments 4
 //!   verde coordinator --workers 127.0.0.1:7000,127.0.0.1:7001 --jobs 8 --segments 4 --audit-rate 0.25
 //!   verde coordinator --workers 127.0.0.1:7000,127.0.0.1:7001 --serve 127.0.0.1:9000
+//!   verde coordinator --workers 127.0.0.1:7000,127.0.0.1:7001 --jobs 8 --journal /var/lib/verde/coord.wal
 //!   verde client --coordinator 127.0.0.1:9000 --jobs 4 --segments 4 --cancel 1
 //!   verde stats --from 127.0.0.1:9000 --json
 
@@ -56,7 +61,7 @@ use verde::net::tcp::{serve_connection, spawn_server_threaded, TcpEndpoint};
 use verde::net::Endpoint as _;
 use verde::service::{
     run_service_blocking, Delegation, DelegationFrontend, FaultPlan, JobPolicy, JobRequest,
-    PooledWorker, RemoteStatus, ServiceConfig, ServiceReport, WorkerHost, WorkerPool,
+    JobStatus, PooledWorker, RemoteStatus, ServiceConfig, ServiceReport, WorkerHost, WorkerPool,
 };
 use verde::tensor::profile::HardwareProfile;
 use verde::train::session::Session;
@@ -393,7 +398,29 @@ fn cmd_coordinator(args: &Args) {
     // single staked worker and spot-checks its commitments at that rate.
     let audit_rate = args.get_f32("audit-rate", 0.0);
 
-    let delegation = Delegation::start(&pool, cfg);
+    // `--journal PATH` makes the coordinator durable: every state
+    // transition is journaled, and restarting with the same path recovers
+    // — settled jobs re-serve their logged outcome, in-flight jobs re-train
+    // only their unsettled segments.
+    let (delegation, recovered) = match args.get("journal") {
+        Some(path) => {
+            let (d, handles) = Delegation::recover(&pool, cfg, path)
+                .unwrap_or_else(|e| panic!("cannot recover journal {path}: {e}"));
+            if !handles.is_empty() {
+                let done = handles
+                    .iter()
+                    .filter(|h| matches!(h.try_status(), JobStatus::Done(_)))
+                    .count();
+                println!(
+                    "recovered {} job(s) from {path} ({done} settled, {} re-queued)",
+                    handles.len(),
+                    handles.len() - done,
+                );
+            }
+            (d, handles)
+        }
+        None => (Delegation::start(&pool, cfg), Vec::new()),
+    };
 
     if let Some(listen) = args.get("serve") {
         // Serve the Submit/Status/Cancel client API over TCP: remote
@@ -410,6 +437,8 @@ fn cmd_coordinator(args: &Args) {
         );
         let frontend = DelegationFrontend::new("coordinator", delegation.client())
             .with_stats(delegation.registry().clone());
+        // Re-attach: pre-crash job ids answer Status/Cancel on this server.
+        frontend.adopt(recovered);
         let server = spawn_server_threaded(listener, frontend.clone(), Some(conns));
         let frontend = server.join().expect("frontend accept thread");
         // Drain every remotely submitted job before reporting.
@@ -445,7 +474,7 @@ fn cmd_coordinator(args: &Args) {
                 delegation.submit(req)
             })
             .collect();
-        for h in &handles {
+        for h in recovered.iter().chain(&handles) {
             h.wait();
         }
     }

@@ -172,6 +172,25 @@ impl StakeLedger {
         amount
     }
 
+    /// Reinstate an account with exact `deposited`/`slashed` amounts and
+    /// nothing locked — the recovery path's primitive. Journal replay folds
+    /// lock/release/slash entries into per-worker totals and then calls
+    /// this once per account; any stake still locked at the crash is
+    /// deliberately *not* restored as locked (the audit it backed died with
+    /// the process and its segment is re-queued), so it returns to
+    /// available rather than leaking.
+    pub fn restore(&mut self, worker: &str, deposited: u64, slashed: u64) {
+        self.accounts.insert(
+            worker.to_string(),
+            StakeEntry {
+                worker: worker.to_string(),
+                deposited,
+                locked: 0,
+                slashed: slashed.min(deposited),
+            },
+        );
+    }
+
     /// Total stake currently locked across all accounts.
     pub fn total_locked(&self) -> u64 {
         self.accounts.values().map(|e| e.locked).sum()

@@ -62,8 +62,9 @@ use crate::verde::protocol::{
 };
 
 use super::coordinator::{
-    wake, Cmd, CmdGate, JobOutcome, LoopReport, ServiceConfig, ServiceReport,
+    wake, Cmd, CmdGate, CoreRestore, JobOutcome, LoopReport, ServiceConfig, ServiceReport,
 };
+use super::journal::{self, Journal, JournalEntry};
 use super::pool::WorkerPool;
 
 /// A job submission: the program spec plus its delegation policy.
@@ -340,12 +341,124 @@ impl Delegation {
     /// clamped to the live pool size at lease time).
     pub fn start(pool: &WorkerPool, cfg: ServiceConfig) -> Delegation {
         assert!(cfg.k >= 1, "a delegation needs k >= 1");
-        let core = super::coordinator::start_core(pool, cfg);
+        Delegation::boot(pool, cfg, None, None, 0)
+    }
+
+    /// [`start`](Delegation::start), journaling every state transition to
+    /// the write-ahead journal at `path` so a crashed coordinator can be
+    /// rebuilt with [`recover`](Delegation::recover). Truncates any
+    /// existing file — use `recover` to resume one.
+    pub fn start_durable(
+        pool: &WorkerPool,
+        cfg: ServiceConfig,
+        path: impl AsRef<std::path::Path>,
+    ) -> std::io::Result<Delegation> {
+        assert!(cfg.k >= 1, "a delegation needs k >= 1");
+        let journal = Journal::create(path.as_ref())?;
+        Ok(Delegation::boot(pool, cfg, Some(journal), None, 0))
+    }
+
+    /// Rebuild a delegation from the write-ahead journal at `path`.
+    ///
+    /// Replays the journal (tolerating a torn final entry — the tail is
+    /// truncated and overwritten), folds it into recovered state, and
+    /// returns the delegation plus one [`JobHandle`] per journaled job:
+    /// settled jobs come back already `Done` with their logged outcome
+    /// (bit-identical to what the crashed coordinator certified), and
+    /// in-flight jobs are re-queued to train **only their unsettled
+    /// segments** — settled verdicts are trusted from the log, so recovery
+    /// cost is proportional to work lost, not work done. Stakes locked
+    /// behind audits that died with the old process are released (and the
+    /// release journaled) rather than leaked; permanently revoked workers
+    /// stay revoked. A missing or empty journal file recovers to a fresh
+    /// delegation with zero handles.
+    ///
+    /// Feed the handles to [`DelegationFrontend::adopt`] to re-serve them
+    /// over the wire: remote clients re-attach by polling `Status` with
+    /// their pre-crash job ids.
+    pub fn recover(
+        pool: &WorkerPool,
+        cfg: ServiceConfig,
+        path: impl AsRef<std::path::Path>,
+    ) -> std::io::Result<(Delegation, Vec<JobHandle>)> {
+        assert!(cfg.k >= 1, "a delegation needs k >= 1");
+        let path = path.as_ref();
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e),
+        };
+        let replay = journal::replay(&bytes).map_err(|e| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("corrupt journal {}: {e}", path.display()),
+            )
+        })?;
+        let rec = journal::recover(replay);
+
+        // Re-open at the last whole entry: the torn tail (if any) is
+        // truncated away so new entries append at a frame boundary.
+        let whole = (bytes.len() - rec.torn_bytes) as u64;
+        let mut journal = Journal::resume(path, whole)?;
+        // Stakes locked behind audits that died with the old process go
+        // back to available; journal the releases so a second crash during
+        // recovery folds to the same ledger.
+        for s in rec.stakes.iter().filter(|s| s.locked_at_crash > 0) {
+            journal.append(&JournalEntry::StakeRelease { worker: s.worker.clone() });
+        }
+        journal.sync();
+
+        let restore = CoreRestore { stakes: rec.stakes, revoked: rec.revoked };
+        let delegation =
+            Delegation::boot(pool, cfg, Some(journal), Some(restore), rec.next_job_id);
+        delegation.registry.counter("coord_journal_replayed_entries").add(rec.entries);
+
+        let mut handles = Vec::with_capacity(rec.finished.len() + rec.jobs.len());
+        // Settled jobs: pre-finished handles serving the logged outcome.
+        for outcome in rec.finished {
+            let job_id = outcome.job_id;
+            let cell = Arc::new(JobCell::new());
+            cell.finish(outcome);
+            handles.push(JobHandle { job_id, cell, core: Arc::clone(&delegation.core) });
+        }
+        // In-flight jobs: re-queue the unsettled remainder. `Recover` (not
+        // `Submit`) so the event loop trusts the settled verdicts and does
+        // not re-journal the submission.
+        for job in rec.jobs {
+            let cell = Arc::new(JobCell::new());
+            let cmd = Cmd::Recover {
+                job_id: job.job_id,
+                spec: job.spec,
+                policy: job.policy,
+                cell: Arc::clone(&cell),
+                settled: job.settled,
+            };
+            if delegation.core.send(cmd).is_err() {
+                cell.finish(JobOutcome::cancelled_stub(job.job_id));
+            }
+            handles.push(JobHandle {
+                job_id: job.job_id,
+                cell,
+                core: Arc::clone(&delegation.core),
+            });
+        }
+        handles.sort_by_key(|h| h.job_id);
+        Ok((delegation, handles))
+    }
+
+    fn boot(
+        pool: &WorkerPool,
+        cfg: ServiceConfig,
+        journal: Option<Journal>,
+        restore: Option<CoreRestore>,
+        next_job_id: u64,
+    ) -> Delegation {
+        let core = super::coordinator::start_core(pool, cfg, journal, restore);
         Delegation {
             core: Arc::new(ClientCore {
                 gate: core.gate,
                 comp_tx: Mutex::new(core.comp_tx),
-                next_job: AtomicU64::new(0),
+                next_job: AtomicU64::new(next_job_id),
             }),
             pool: pool.clone(),
             cfg,
@@ -493,19 +606,44 @@ impl DelegationFrontend {
         let st = self.state.lock().unwrap();
         st.jobs.values().chain(st.finished.values()).cloned().collect()
     }
+
+    /// Register handles recovered by [`Delegation::recover`] so remote
+    /// clients re-attach to their pre-crash job ids via `Status`/`Cancel`.
+    /// Already-terminal handles land directly in the bounded finished set
+    /// (lowest id retired first under the cap); live ones are tracked like
+    /// fresh submissions.
+    pub fn adopt(&self, handles: Vec<JobHandle>) {
+        let mut st = self.state.lock().unwrap();
+        for h in handles {
+            st.jobs.insert(h.id(), h);
+        }
+        st.retire_done();
+    }
+
+    /// `(live, finished)` handle counts — observability for retirement
+    /// behaviour (a frontend that stops receiving submissions must still
+    /// drain `live` as jobs settle).
+    pub fn tracked(&self) -> (usize, usize) {
+        let st = self.state.lock().unwrap();
+        (st.jobs.len(), st.finished.len())
+    }
 }
 
 impl FrontendState {
     /// Migrate every job observed terminal into the bounded finished set,
-    /// evicting the oldest beyond the cap. Runs on each submission, so a
-    /// continuously submitting client never accumulates unbounded state.
+    /// evicting the oldest beyond the cap. Runs on every Submit, Status,
+    /// and Cancel, so even a frontend that stops receiving submissions
+    /// retires terminal outcomes instead of pinning them forever.
     fn retire_done(&mut self) {
-        let done: Vec<u64> = self
+        let mut done: Vec<u64> = self
             .jobs
             .iter()
             .filter(|(_, h)| matches!(h.try_status(), JobStatus::Done(_)))
             .map(|(&id, _)| id)
             .collect();
+        // Deterministic retention order: jobs observed terminal in the same
+        // sweep retire lowest-id first, regardless of map iteration order.
+        done.sort_unstable();
         for id in done {
             let handle = self.jobs.remove(&id).expect("listed");
             self.finished.insert(id, handle);
@@ -540,7 +678,10 @@ impl Endpoint for DelegationFrontend {
                 Response::Submitted { job_id }
             }
             Request::Status { job_id } => {
-                let st = self.state.lock().unwrap();
+                let mut st = self.state.lock().unwrap();
+                st.retire_done();
+                // An id evicted past the retention cap answers `Unknown`
+                // deterministically — the handle is gone, never a hang.
                 Response::Status(match st.lookup(job_id) {
                     None => RemoteStatus::Unknown,
                     Some(h) => h.try_status().remote(),
@@ -549,8 +690,13 @@ impl Endpoint for DelegationFrontend {
             Request::Cancel { job_id } => {
                 // Clone the handle out so the (blocking) cancel round-trip
                 // to the event loop runs without holding the registry lock
-                // against other connections.
-                let handle = self.state.lock().unwrap().lookup(job_id).cloned();
+                // against other connections. An evicted or unknown id
+                // answers `Cancelled(false)`.
+                let handle = {
+                    let mut st = self.state.lock().unwrap();
+                    st.retire_done();
+                    st.lookup(job_id).cloned()
+                };
                 Response::Cancelled(handle.is_some_and(|h| h.cancel()))
             }
             Request::Stats => match &self.registry {

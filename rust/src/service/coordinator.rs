@@ -65,6 +65,7 @@ use crate::verde::wire::MAX_CHECKPOINT_CHUNKS;
 
 use super::audit::{AuditSampler, StakeEntry, StakeLedger};
 use super::client::{Delegation, JobCell, JobRequest};
+use super::journal::{Journal, JournalEntry, RecoveredStake};
 use super::pool::{PooledWorker, WorkerPool};
 
 /// Tuning knobs for the event-driven service core.
@@ -131,7 +132,7 @@ impl ServiceConfig {
 }
 
 /// Verdict and accounting for one checkpoint segment of a job.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SegmentOutcome {
     /// Segment index within its job (0-based).
     pub seg: usize,
@@ -232,7 +233,7 @@ impl SegmentOutcome {
 
 /// Per-job result plus its cost accounting, rolled up over the job's
 /// checkpoint segments.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobOutcome {
     pub job_id: u64,
     /// The commitment the service vouches for: the final segment's
@@ -499,6 +500,17 @@ pub(crate) fn wake() -> Completion {
 /// [`wake`] completion follows each send so the loop reacts promptly).
 pub(crate) enum Cmd {
     Submit { job_id: u64, spec: JobSpec, policy: JobPolicy, cell: Arc<JobCell> },
+    /// A journal-recovered job: like `Submit`, but `settled` segments are
+    /// trusted from the log (pre-filled, never re-trained) and the entry
+    /// is *not* re-journaled — its `Submit` record from the previous
+    /// process generation is already durable.
+    Recover {
+        job_id: u64,
+        spec: JobSpec,
+        policy: JobPolicy,
+        cell: Arc<JobCell>,
+        settled: Vec<SegmentOutcome>,
+    },
     Cancel { job_id: u64, reply: Sender<bool> },
     Shutdown,
 }
@@ -936,6 +948,11 @@ pub(crate) struct CoordMetrics {
     stake_slashed: Counter,
     bytes: Counter,
     requests: Counter,
+    journal_entries: Counter,
+    journal_bytes: Counter,
+    journal_syncs: Counter,
+    journal_replayed_segments: Counter,
+    journal_recovered_jobs: Counter,
     stake_locked: Gauge,
     queue_depth: Gauge,
     active_segments: Gauge,
@@ -970,6 +987,11 @@ impl CoordMetrics {
             stake_slashed: registry.counter("coord_stake_slashed"),
             bytes: registry.counter("coord_bytes"),
             requests: registry.counter("coord_requests"),
+            journal_entries: registry.counter("coord_journal_entries"),
+            journal_bytes: registry.counter("coord_journal_bytes"),
+            journal_syncs: registry.counter("coord_journal_syncs"),
+            journal_replayed_segments: registry.counter("coord_journal_replayed_segments"),
+            journal_recovered_jobs: registry.counter("coord_journal_recovered_jobs"),
             stake_locked: registry.gauge("coord_stake_locked"),
             queue_depth: registry.gauge("coord_queue_depth"),
             active_segments: registry.gauge("coord_active_segments"),
@@ -1013,6 +1035,29 @@ impl CoordMetrics {
     }
 }
 
+/// Append one entry to the write-ahead journal (no-op without one).
+/// A free function over the two fields it needs, so call sites holding a
+/// mutable borrow into another `EventLoop` field (`jobs`, typically) can
+/// still journal.
+fn wal(journal: &mut Option<Journal>, metrics: &CoordMetrics, entry: JournalEntry) {
+    let Some(j) = journal.as_mut() else { return };
+    let before = j.bytes();
+    j.append(&entry);
+    metrics.journal_entries.inc();
+    metrics.journal_bytes.add(j.bytes() - before);
+}
+
+/// Flush and `fdatasync` the journal (no-op without one, or with nothing
+/// buffered). Called at the durability boundaries: submit, segment settle,
+/// job settle/cancel.
+fn wal_sync(journal: &mut Option<Journal>, metrics: &CoordMetrics) {
+    if let Some(j) = journal.as_mut() {
+        if j.sync() {
+            metrics.journal_syncs.inc();
+        }
+    }
+}
+
 /// The command channel plus its shutdown latch. Senders and the event
 /// loop's final drain synchronize on the same mutex: a command sent while
 /// the gate is open is guaranteed to be in the channel before the drain
@@ -1037,9 +1082,24 @@ pub(crate) struct Core {
     pub(crate) registry: Registry,
 }
 
+/// Pre-crash state a recovered event loop reinstates before its first
+/// tick: folded stake accounts (restored against the *current* config's
+/// deposit — recovery assumes the stake knob is stable across restarts)
+/// and the permanently revoked worker set, which stays revoked forever.
+pub(crate) struct CoreRestore {
+    pub(crate) stakes: Vec<RecoveredStake>,
+    pub(crate) revoked: Vec<String>,
+}
+
 /// Spawn the full event core: the event loop thread plus its resolver
-/// pool.
-pub(crate) fn start_core(pool: &WorkerPool, cfg: ServiceConfig) -> Core {
+/// pool. With `journal` set, every coordinator decision is write-ahead
+/// logged through it; `restore` reinstates journal-recovered state.
+pub(crate) fn start_core(
+    pool: &WorkerPool,
+    cfg: ServiceConfig,
+    journal: Option<Journal>,
+    restore: Option<CoreRestore>,
+) -> Core {
     let (comp_tx, comp_rx) = channel::<Completion>();
     let (cmd_tx, cmd_rx) = channel::<Cmd>();
     let (task_tx, task_rx) = channel::<ResolveTask>();
@@ -1055,6 +1115,8 @@ pub(crate) fn start_core(pool: &WorkerPool, cfg: ServiceConfig) -> Core {
         task_tx,
         Arc::clone(&gate),
         registry.clone(),
+        journal,
+        restore,
     );
     let event_join = std::thread::Builder::new()
         .name("verde-event-loop".into())
@@ -1211,6 +1273,8 @@ pub(crate) struct EventLoop {
     /// Workers permanently out of the pool (revoked or expelled): a pinned
     /// optimistic job re-leases immediately instead of waiting for them.
     gone: HashSet<String>,
+    /// Write-ahead journal (`None` = volatile coordinator, the default).
+    journal: Option<Journal>,
 }
 
 impl EventLoop {
@@ -1221,7 +1285,19 @@ impl EventLoop {
         task_tx: Sender<ResolveTask>,
         gate: Arc<Mutex<CmdGate>>,
         registry: Registry,
+        journal: Option<Journal>,
+        restore: Option<CoreRestore>,
     ) -> EventLoop {
+        let mut ledger = StakeLedger::new(cfg.worker_stake);
+        let mut gone = HashSet::new();
+        if let Some(r) = restore {
+            for s in r.stakes {
+                // Anything locked at the crash was already released (and
+                // journaled as released) by the recovery fold.
+                ledger.restore(&s.worker, cfg.worker_stake.max(s.slashed), s.slashed);
+            }
+            gone.extend(r.revoked);
+        }
         EventLoop {
             metrics: CoordMetrics::new(registry),
             pool,
@@ -1247,8 +1323,9 @@ impl EventLoop {
             resolving_out: 0,
             shutting_down: false,
             sampler: AuditSampler::new(cfg.audit_seed),
-            ledger: StakeLedger::new(cfg.worker_stake),
-            gone: HashSet::new(),
+            ledger,
+            gone,
+            journal,
         }
     }
 
@@ -1350,7 +1427,7 @@ impl EventLoop {
         self.gate.lock().unwrap().closed = true;
         while let Ok(cmd) = cmd_rx.try_recv() {
             match cmd {
-                Cmd::Submit { job_id, cell, .. } => {
+                Cmd::Submit { job_id, cell, .. } | Cmd::Recover { job_id, cell, .. } => {
                     cell.finish(JobOutcome::cancelled_stub(job_id));
                 }
                 Cmd::Cancel { reply, .. } => {
@@ -1359,6 +1436,8 @@ impl EventLoop {
                 Cmd::Shutdown => {}
             }
         }
+        // Clean shutdown closes the journal at an entry boundary.
+        wal_sync(&mut self.journal, &self.metrics);
         LoopReport {
             outcomes: self.outcomes,
             actor_threads: self.actor_threads,
@@ -1378,6 +1457,13 @@ impl EventLoop {
                 }
                 self.metrics.jobs_submitted.inc();
                 self.metrics.registry.spans().trace(job_id, None, Stage::Submit, None);
+                // Write-ahead: the submission is durable before any lease
+                // is taken, so a crash can never forget an accepted job.
+                wal(
+                    &mut self.journal,
+                    &self.metrics,
+                    JournalEntry::Submit { job_id, spec, policy },
+                );
                 if spec.steps == 0 {
                     // A zero-step job has no checkpoint schedule to shard
                     // or verify: settle it unresolved (not cancelled —
@@ -1387,9 +1473,16 @@ impl EventLoop {
                         JobOutcome { cancelled: false, ..JobOutcome::cancelled_stub(job_id) };
                     self.outcomes.push(outcome.clone());
                     self.metrics.registry.spans().trace(job_id, None, Stage::Settle, None);
+                    wal(
+                        &mut self.journal,
+                        &self.metrics,
+                        JournalEntry::JobSettled { outcome: outcome.clone() },
+                    );
+                    wal_sync(&mut self.journal, &self.metrics);
                     cell.finish(outcome);
                     return;
                 }
+                wal_sync(&mut self.journal, &self.metrics);
                 let boundaries = split_points(0, spec.steps, policy.segments.max(1));
                 // With state transfer (or the audit tier) on, only the
                 // first segment queues now: each later segment needs its
@@ -1442,6 +1535,104 @@ impl EventLoop {
                     },
                 );
             }
+            Cmd::Recover { job_id, spec, policy, cell, settled } => {
+                if self.shutting_down {
+                    cell.finish(JobOutcome::cancelled_stub(job_id));
+                    return;
+                }
+                self.metrics.journal_recovered_jobs.inc();
+                self.metrics.registry.spans().trace(job_id, None, Stage::Submit, None);
+                if spec.steps == 0 {
+                    // Degenerate recovered job (its JobSettled entry must
+                    // have been lost to the torn tail): settle as a fresh
+                    // zero-step submission would.
+                    let outcome =
+                        JobOutcome { cancelled: false, ..JobOutcome::cancelled_stub(job_id) };
+                    self.outcomes.push(outcome.clone());
+                    wal(
+                        &mut self.journal,
+                        &self.metrics,
+                        JournalEntry::JobSettled { outcome: outcome.clone() },
+                    );
+                    wal_sync(&mut self.journal, &self.metrics);
+                    cell.finish(outcome);
+                    return;
+                }
+                let boundaries = split_points(0, spec.steps, policy.segments.max(1));
+                let n = boundaries.len();
+                // Settled verdicts are trusted from the log: pre-fill them
+                // so only the remainder re-trains. They are counted by the
+                // replay counter, NOT `observe_settled` — the live
+                // registry's training totals then cover only work this
+                // process actually performs (which is what the recovery
+                // tests assert against).
+                let mut done: Vec<Option<SegmentOutcome>> = (0..n).map(|_| None).collect();
+                let mut finished = 0usize;
+                for o in settled {
+                    if o.seg < n && done[o.seg].is_none() {
+                        finished += 1;
+                        self.metrics.journal_replayed_segments.inc();
+                        done[o.seg] = Some(o);
+                    }
+                }
+                // Pipelined jobs (transfer or audit tier) advance one
+                // segment at a time and their verified seeds died with the
+                // old process, so the first unsettled segment re-queues as
+                // a prefix re-train; independent segments all queue now.
+                let pipelined = policy.transfer || policy.audit_rate > 0.0;
+                let first_unsettled =
+                    done.iter().position(|d| d.is_none()).unwrap_or(n);
+                let queue_upto = if pipelined { (first_unsettled + 1).min(n) } else { n };
+                for (seg_idx, &end) in boundaries.iter().enumerate().take(queue_upto) {
+                    if done[seg_idx].is_some() {
+                        continue;
+                    }
+                    self.metrics.registry.spans().trace(
+                        job_id,
+                        Some(seg_idx as u64),
+                        Stage::Queue,
+                        None,
+                    );
+                    self.queue.push(QueuedSeg {
+                        kind: SegKind::Work,
+                        priority: policy.priority,
+                        job_id,
+                        seg_idx,
+                        spec: spec.prefix(end),
+                        seed: None,
+                        requeues: 0,
+                        revoked: 0,
+                        bytes: 0,
+                        requests: 0,
+                        t0: None,
+                        leased_seq: 0,
+                    });
+                }
+                cell.set_running(finished, n);
+                self.jobs.insert(
+                    job_id,
+                    JobRun {
+                        spec,
+                        policy,
+                        cell,
+                        boundaries,
+                        done,
+                        finished,
+                        next_seg: queue_upto,
+                        t0: None,
+                        escalated: false,
+                        pinned: None,
+                        seed_used: HashMap::new(),
+                        audits: HashMap::new(),
+                    },
+                );
+                if finished >= n {
+                    // Every segment already settled before the crash; only
+                    // the JobSettled record was lost. Re-finalize from the
+                    // trusted verdicts.
+                    self.finalize_job(job_id);
+                }
+            }
             Cmd::Cancel { job_id, reply } => {
                 let ok = self.handle_cancel(job_id);
                 let _ = reply.send(ok);
@@ -1487,11 +1678,17 @@ impl EventLoop {
         // Stakes locked behind this job's in-flight audits are released:
         // with the job gone no tournament can ever certify a conviction.
         for audit in run.audits.values() {
-            match audit {
-                AuditState::Pending { accused, .. } => self.ledger.release(accused),
-                AuditState::Escalated { accused: Some(a), .. } => self.ledger.release(a),
-                AuditState::Escalated { accused: None, .. } => {}
-            }
+            let accused = match audit {
+                AuditState::Pending { accused, .. } => accused,
+                AuditState::Escalated { accused: Some(a), .. } => a,
+                AuditState::Escalated { accused: None, .. } => continue,
+            };
+            self.ledger.release(accused);
+            wal(
+                &mut self.journal,
+                &self.metrics,
+                JournalEntry::StakeRelease { worker: accused.clone() },
+            );
         }
         let segments: Vec<SegmentOutcome> = run.done.into_iter().flatten().collect();
         let outcome = JobOutcome {
@@ -1510,6 +1707,12 @@ impl EventLoop {
         };
         self.metrics.jobs_cancelled.inc();
         self.metrics.registry.spans().trace(job_id, None, Stage::Settle, None);
+        wal(
+            &mut self.journal,
+            &self.metrics,
+            JournalEntry::JobSettled { outcome: outcome.clone() },
+        );
+        wal_sync(&mut self.journal, &self.metrics);
         self.outcomes.push(outcome.clone());
         run.cell.finish(outcome);
         true
@@ -1678,6 +1881,18 @@ impl EventLoop {
         for w in &workers {
             spans.trace(seg.job_id, Some(seg.seg_idx as u64), Stage::Dispatch, Some(&w.name));
         }
+        // Lease grants ride the journal buffer (no fsync of their own):
+        // losing one costs re-leasing work the crash loses anyway.
+        wal(
+            &mut self.journal,
+            &self.metrics,
+            JournalEntry::Lease {
+                job_id: seg.job_id,
+                seg_idx: seg.seg_idx as u64,
+                lease_seq,
+                workers: workers.iter().map(|w| w.name.clone()).collect(),
+            },
+        );
         let deadline = Instant::now() + policy.deadline.unwrap_or(self.cfg.dispatch_deadline);
         let mut aseg = ActiveSeg {
             kind: seg.kind,
@@ -1801,6 +2016,11 @@ impl EventLoop {
             }
             _ => {
                 self.gone.insert(w.name.clone());
+                wal(
+                    &mut self.journal,
+                    &self.metrics,
+                    JournalEntry::Revoke { worker: w.name.clone() },
+                );
                 if from_parole {
                     self.pool.expel(w);
                 } else {
@@ -2182,6 +2402,11 @@ impl EventLoop {
                 // corrupt) — expel it outright, no parole.
                 outcome.revoked += 1;
                 self.gone.insert(w.name.clone());
+                wal(
+                    &mut self.journal,
+                    &self.metrics,
+                    JournalEntry::Revoke { worker: w.name.clone() },
+                );
                 self.pool.revoke(w);
             } else if w.faulted() {
                 outcome.revoked += 1;
@@ -2224,7 +2449,22 @@ impl EventLoop {
             return;
         }
         outcome.audit_sampled = true;
-        self.ledger.lock(&worker);
+        let locked = self.ledger.lock(&worker);
+        wal(
+            &mut self.journal,
+            &self.metrics,
+            JournalEntry::StakeLock { worker: worker.clone(), amount: locked },
+        );
+        wal(
+            &mut self.journal,
+            &self.metrics,
+            JournalEntry::AuditCommit {
+                job_id,
+                seg_idx: seg_idx as u64,
+                worker: worker.clone(),
+                root: commit,
+            },
+        );
         let Some(run) = self.jobs.get_mut(&job_id) else { return };
         let replay_seed = run.seed_used.get(&seg_idx).cloned();
         let spec = run.spec.prefix(run.boundaries[seg_idx]);
@@ -2313,6 +2553,16 @@ impl EventLoop {
                 // Independent replay reproduced the commitment: settle the
                 // parked outcome and unlock the stake.
                 self.ledger.release(&accused);
+                wal(
+                    &mut self.journal,
+                    &self.metrics,
+                    JournalEntry::StakeRelease { worker: accused.clone() },
+                );
+                wal(
+                    &mut self.journal,
+                    &self.metrics,
+                    JournalEntry::AuditOutcome { job_id, seg_idx: seg_idx as u64, passed: true },
+                );
                 let Some(run) = self.jobs.get_mut(&job_id) else { return };
                 let Some(AuditState::Pending { outcome, seed_next, .. }) =
                     run.audits.remove(&seg_idx)
@@ -2335,6 +2585,11 @@ impl EventLoop {
                 // verdict different from the commitment convicts and
                 // slashes at settlement. The stake stays locked until
                 // then.
+                wal(
+                    &mut self.journal,
+                    &self.metrics,
+                    JournalEntry::AuditOutcome { job_id, seg_idx: seg_idx as u64, passed: false },
+                );
                 self.escalate(
                     job_id,
                     seg_idx,
@@ -2378,6 +2633,16 @@ impl EventLoop {
                 // retries), proving nothing about the committer: escalate
                 // unblamed — replication instead of collateral.
                 self.ledger.release(&accused);
+                wal(
+                    &mut self.journal,
+                    &self.metrics,
+                    JournalEntry::StakeRelease { worker: accused },
+                );
+                wal(
+                    &mut self.journal,
+                    &self.metrics,
+                    JournalEntry::AuditOutcome { job_id, seg_idx: seg_idx as u64, passed: false },
+                );
                 self.escalate(
                     job_id, seg_idx, None, 0, revoked, bytes, requests, t0, leased_seq,
                 );
@@ -2394,6 +2659,11 @@ impl EventLoop {
             unreachable!("only audit segments escalate from the lease pass");
         };
         self.ledger.release(&accused);
+        wal(
+            &mut self.journal,
+            &self.metrics,
+            JournalEntry::StakeRelease { worker: accused },
+        );
         self.escalate(
             job_id,
             seg_idx,
@@ -2501,8 +2771,18 @@ impl EventLoop {
                     outcome.accepted.is_some() && outcome.accepted != Some(expect);
                 if convicted {
                     outcome.slashed = self.ledger.slash(&name);
+                    wal(
+                        &mut self.journal,
+                        &self.metrics,
+                        JournalEntry::StakeSlash { worker: name, amount: outcome.slashed },
+                    );
                 } else {
                     self.ledger.release(&name);
+                    wal(
+                        &mut self.journal,
+                        &self.metrics,
+                        JournalEntry::StakeRelease { worker: name },
+                    );
                 }
             }
         }
@@ -2515,6 +2795,15 @@ impl EventLoop {
                 spans.trace(job_id, Some(seg_idx as u64), Stage::Verdict, winner);
             }
             spans.trace(job_id, Some(seg_idx as u64), Stage::Settle, None);
+            // A settled verdict (and its certified root) is a durability
+            // boundary: journal and fsync before anything downstream acts
+            // on it, so recovery can always trust it from the log.
+            wal(
+                &mut self.journal,
+                &self.metrics,
+                JournalEntry::SegmentSettled { job_id, outcome: outcome.clone() },
+            );
+            wal_sync(&mut self.journal, &self.metrics);
         }
         run.done[seg_idx] = Some(outcome);
         run.cell.set_running(run.finished, run.boundaries.len());
@@ -2549,7 +2838,14 @@ impl EventLoop {
         if !job_done {
             return;
         }
-        let run = self.jobs.remove(&job_id).expect("just seen");
+        self.finalize_job(job_id);
+    }
+
+    /// Every segment settled: roll the job up, journal the settlement,
+    /// and release the handle. (Also the re-finalization path for a
+    /// recovered job whose segments had all settled before the crash.)
+    fn finalize_job(&mut self, job_id: u64) {
+        let run = self.jobs.remove(&job_id).expect("finalize of a live job");
         let segments: Vec<SegmentOutcome> =
             run.done.into_iter().map(|s| s.expect("all settled")).collect();
         let all_resolved = segments.iter().all(|s| s.accepted.is_some());
@@ -2572,6 +2868,12 @@ impl EventLoop {
             self.metrics.jobs_resolved.inc();
         }
         self.metrics.registry.spans().trace(job_id, None, Stage::Settle, None);
+        wal(
+            &mut self.journal,
+            &self.metrics,
+            JournalEntry::JobSettled { outcome: outcome.clone() },
+        );
+        wal_sync(&mut self.journal, &self.metrics);
         self.outcomes.push(outcome.clone());
         run.cell.finish(outcome);
     }

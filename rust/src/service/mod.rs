@@ -172,6 +172,54 @@
 //! | `coord_stake_slashed`   | counter | total stake confiscated by convictions       |
 //! | `coord_stake_locked`    | gauge   | stake currently locked pending audits        |
 //!
+//! ## Durability: the write-ahead journal (`--journal PATH`)
+//!
+//! The coordinator is the protocol's referee; [`journal`] makes its memory
+//! survive the process. A delegation started with
+//! [`client::Delegation::start_durable`] appends one
+//! [`journal::JournalEntry`] per state transition — job submission (full
+//! spec + policy), lease grants, worker revocations, per-segment settled
+//! verdicts (the certified roots), audit commitments and outcomes, stake
+//! lock/release/slash, and final job settlement — to an append-only file,
+//! each entry framed by the canonical wire codec (`u32`-LE length prefix +
+//! canonical payload; `wire_size() == encode().len()`; total decoding on
+//! hostile bytes).
+//!
+//! *Fsync policy.* Write-ahead, group-committed: entries buffer in process
+//! and the file is fsync'd at **settlement boundaries** — job submission
+//! acknowledged, segment settled, job settled, job cancelled. Cheap
+//! high-frequency records (leases, audit commits, stake locks) ride the
+//! next boundary sync: losing them in a crash is safe because recovery
+//! re-queues the affected segment anyway. What is never lost is an
+//! acknowledged verdict.
+//!
+//! *Recovery lifecycle.* [`client::Delegation::recover`] replays the file
+//! (tolerating a torn final entry — the partial frame is truncated away),
+//! folds it keyed by job/segment/worker (last write wins, so recovery is
+//! idempotent across repeated crashes), and rebuilds the delegation:
+//! settled jobs come back as already-`Done` handles serving the logged,
+//! bit-identical outcome; in-flight jobs re-queue **only their unsettled
+//! segments** (settled verdicts and certified roots are trusted from the
+//! log — recovery cost is proportional to work lost, not work done);
+//! stakes locked behind audits that died with the process are released
+//! (and the release journaled); permanently revoked workers stay revoked;
+//! the job-id counter resumes past every journaled id.
+//!
+//! *Handle re-attach.* Remote clients hold job ids, not sockets: feed the
+//! recovered handles to [`client::DelegationFrontend::adopt`] and a
+//! pre-crash `Status { job_id }` answers with the job's live (or settled)
+//! state on the recovered coordinator. Ids evicted past the frontend's
+//! retention cap answer `Unknown`, never hang.
+//!
+//! | key                                | kind    | meaning                                   |
+//! |------------------------------------|---------|-------------------------------------------|
+//! | `coord_journal_entries`            | counter | entries appended this process             |
+//! | `coord_journal_bytes`              | counter | bytes appended this process               |
+//! | `coord_journal_syncs`              | counter | fsync batches (settlement boundaries)     |
+//! | `coord_journal_replayed_entries`   | counter | whole entries replayed at recovery        |
+//! | `coord_journal_replayed_segments`  | counter | settled segments trusted from the log     |
+//! | `coord_journal_recovered_jobs`     | counter | in-flight jobs re-queued at recovery      |
+//!
 //! ## Observability (the stats plane)
 //!
 //! Every delegation owns a private [`crate::obs::Registry`]
@@ -224,6 +272,9 @@
 //! * [`client`] — [`client::Delegation`], [`client::Client`],
 //!   [`client::JobHandle`], and the wire-facing
 //!   [`client::DelegationFrontend`].
+//! * [`journal`] — the append-only write-ahead journal and the recovery
+//!   fold ([`journal::replay`] / [`journal::recover`]) behind
+//!   [`client::Delegation::recover`].
 //!
 //! Workers can live anywhere an [`Endpoint`](crate::net::Endpoint) can:
 //! in-process, on threads ([`crate::net::threaded`]), or in separate
@@ -233,10 +284,12 @@
 pub mod audit;
 pub mod client;
 pub mod coordinator;
+pub mod journal;
 pub mod pool;
 pub mod worker;
 
 pub use audit::{AuditSampler, StakeEntry, StakeLedger};
+pub use journal::{Journal, JournalEntry, Recovery, Replay};
 pub use client::{Client, Delegation, DelegationFrontend, JobHandle, JobRequest, JobStatus};
 pub use coordinator::{
     run_service, run_service_blocking, run_service_with, JobOutcome, SegmentOutcome,

@@ -163,7 +163,7 @@ fn put_f32(out: &mut Vec<u8>, v: f32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_hash(out: &mut Vec<u8>, h: &Hash) {
+pub(crate) fn put_hash(out: &mut Vec<u8>, h: &Hash) {
     out.extend_from_slice(&h.0);
 }
 
@@ -400,7 +400,7 @@ fn optimizer_wire_len(o: &Optimizer) -> usize {
     }
 }
 
-fn put_spec(out: &mut Vec<u8>, s: &JobSpec) {
+pub(crate) fn put_spec(out: &mut Vec<u8>, s: &JobSpec) {
     put_str(out, s.preset.name());
     put_u64(out, s.batch as u64);
     put_u64(out, s.seq as u64);
@@ -411,7 +411,7 @@ fn put_spec(out: &mut Vec<u8>, s: &JobSpec) {
     put_u64(out, s.checkpoint_n);
 }
 
-fn read_spec(r: &mut Reader<'_>) -> Result<JobSpec, WireError> {
+pub(crate) fn read_spec(r: &mut Reader<'_>) -> Result<JobSpec, WireError> {
     let name = r.str("spec.preset")?;
     let preset = Preset::parse(&name).ok_or(WireError::Malformed { context: "spec.preset" })?;
     let batch = r.usize("spec.batch")?;
@@ -432,13 +432,13 @@ fn read_spec(r: &mut Reader<'_>) -> Result<JobSpec, WireError> {
     Ok(JobSpec { preset, batch, seq, steps, optimizer, weight_seed, data_seed, checkpoint_n })
 }
 
-fn spec_wire_len(s: &JobSpec) -> usize {
+pub(crate) fn spec_wire_len(s: &JobSpec) -> usize {
     (8 + s.preset.name().len()) + 8 * 3 + optimizer_wire_len(&s.optimizer) + 8 * 3
 }
 
 /// Presence byte for optional fields: constrained to `{0, 1}` so every
 /// optional keeps a single canonical encoding.
-fn read_presence(r: &mut Reader<'_>, context: &'static str) -> Result<bool, WireError> {
+pub(crate) fn read_presence(r: &mut Reader<'_>, context: &'static str) -> Result<bool, WireError> {
     match r.u8(context)? {
         0 => Ok(false),
         1 => Ok(true),
@@ -452,7 +452,7 @@ fn read_presence(r: &mut Reader<'_>, context: &'static str) -> Result<bool, Wire
 /// the decoder rejects anything beyond it from untrusted peers.
 pub const POLICY_FIELD_MAX: u64 = 1 << 20;
 
-fn put_policy(out: &mut Vec<u8>, p: &JobPolicy) {
+pub(crate) fn put_policy(out: &mut Vec<u8>, p: &JobPolicy) {
     put_u64(out, (p.k as u64).min(POLICY_FIELD_MAX));
     match p.deadline {
         None => out.push(0),
@@ -482,7 +482,7 @@ fn put_policy(out: &mut Vec<u8>, p: &JobPolicy) {
     put_f32(out, rate);
 }
 
-fn read_policy(r: &mut Reader<'_>) -> Result<JobPolicy, WireError> {
+pub(crate) fn read_policy(r: &mut Reader<'_>) -> Result<JobPolicy, WireError> {
     let k = r.usize("policy.k")?;
     if k as u64 > POLICY_FIELD_MAX {
         return Err(WireError::Malformed { context: "policy.k" });
@@ -519,7 +519,7 @@ fn read_policy(r: &mut Reader<'_>) -> Result<JobPolicy, WireError> {
     Ok(JobPolicy { k, deadline, priority, backend, segments, max_requeues, transfer, audit_rate })
 }
 
-fn policy_wire_len(p: &JobPolicy) -> usize {
+pub(crate) fn policy_wire_len(p: &JobPolicy) -> usize {
     8 + (1 + if p.deadline.is_some() { 8 } else { 0 })
         + 8
         + 1

@@ -362,6 +362,102 @@ fn four_concurrent_tcp_clients_submit_simultaneously() {
     assert_eq!(pool.idle(), 2, "all leases returned");
 }
 
+/// Regression (frontend retirement dormancy): terminal jobs must migrate
+/// into the bounded finished set on `Status`/`Cancel` traffic too — a
+/// frontend that never sees another Submit must not pin every terminal
+/// `JobOutcome` in its live map forever.
+#[test]
+fn frontend_retires_terminal_jobs_without_a_trailing_submit() {
+    let pool = in_process_pool(&[("w0", FaultPlan::Honest), ("w1", FaultPlan::Honest)]);
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let mut frontend = DelegationFrontend::new("coordinator", delegation.client());
+
+    let mk = |seed: u64| {
+        let mut spec = JobSpec::quick(Preset::Mlp, 3);
+        spec.data_seed ^= seed;
+        spec
+    };
+    for seed in [1u64, 2] {
+        match frontend.call(Request::Submit { spec: mk(seed), policy: JobPolicy::default() }) {
+            Response::Submitted { .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+    // Drain to terminal with NO further frontend traffic.
+    for h in frontend.handles() {
+        h.wait();
+    }
+
+    // One Status call — not a Submit — must retire both terminal jobs into
+    // the finished set.
+    match frontend.call(Request::Status { job_id: 0 }) {
+        Response::Status(RemoteStatus::Done { accepted, .. }) => assert!(accepted.is_some()),
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(frontend.tracked(), (0, 2), "terminal jobs still pinned in the live map");
+
+    // The Cancel path retires too, and a terminal job cancels false.
+    match frontend.call(Request::Cancel { job_id: 1 }) {
+        Response::Cancelled(landed) => assert!(!landed, "job 1 was already terminal"),
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(frontend.tracked(), (0, 2));
+    delegation.finish();
+}
+
+/// Regression (evicted-handle consistency): ids FIFO-evicted past the
+/// 1024-handle retention cap answer `Status → Unknown` and
+/// `Cancel → false` deterministically — never a hang, never a panic.
+#[test]
+fn evicted_ids_answer_unknown_and_cancel_false_past_retention_cap() {
+    const CAP: usize = 1024; // MAX_FINISHED_RETAINED
+    const OVERFLOW: usize = 6;
+    let pool = in_process_pool(&[("w0", FaultPlan::Honest)]);
+    let delegation = Delegation::start(&pool, ServiceConfig::new(1));
+    let mut frontend = DelegationFrontend::new("coordinator", delegation.client());
+
+    // Zero-step jobs settle without touching a worker, so overflowing the
+    // retained set is cheap.
+    let spec = JobSpec::quick(Preset::Mlp, 0);
+    for i in 0..(CAP + OVERFLOW) as u64 {
+        match frontend.call(Request::Submit { spec, policy: JobPolicy::default() }) {
+            Response::Submitted { job_id } => assert_eq!(job_id, i),
+            other => panic!("{other:?}"),
+        }
+    }
+    for h in frontend.handles() {
+        h.wait();
+    }
+
+    // One sweep retires everything terminal; the oldest OVERFLOW ids fall
+    // off the FIFO (retirement is lowest-id-first, so eviction is exact).
+    match frontend.call(Request::Status { job_id: (CAP + OVERFLOW) as u64 - 1 }) {
+        Response::Status(RemoteStatus::Done { .. }) => {}
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(frontend.tracked(), (0, CAP), "retention cap not enforced");
+
+    for id in 0..OVERFLOW as u64 {
+        assert!(
+            matches!(
+                frontend.call(Request::Status { job_id: id }),
+                Response::Status(RemoteStatus::Unknown)
+            ),
+            "evicted id {id} did not answer Unknown"
+        );
+        assert!(
+            matches!(frontend.call(Request::Cancel { job_id: id }), Response::Cancelled(false)),
+            "evicted id {id} did not cancel false"
+        );
+    }
+    // Survivors still answer Done.
+    assert!(matches!(
+        frontend.call(Request::Status { job_id: OVERFLOW as u64 }),
+        Response::Status(RemoteStatus::Done { .. })
+    ));
+    delegation.finish();
+}
+
 /// The wire API end to end: a remote client submits (sharded), polls
 /// status to completion, probes an unknown id, and cancels a long job —
 /// all over a real TCP socket against a `DelegationFrontend`.

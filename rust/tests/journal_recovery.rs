@@ -1,0 +1,328 @@
+//! Kill-and-recover acceptance for the write-ahead job journal.
+//!
+//! The crash model: a SIGKILL at any instant leaves the journal file as a
+//! prefix of what an uninterrupted run would have written (plus possibly a
+//! torn final frame) — the WAL discipline (journal before acting, fsync at
+//! settle boundaries) guarantees exactly that. So each test *constructs*
+//! the post-crash file — a frame-prefix of a real run's journal, with
+//! garbage appended as the torn tail — and drives `Delegation::recover`
+//! over it with a fresh pool, asserting:
+//!
+//! - the recovered final verdict is **bit-identical** to the uninterrupted
+//!   run's;
+//! - only unsettled segments are re-trained (worker-step accounting via
+//!   `coord_steps_trained`, which excludes replayed segments);
+//! - the `StakeLedger` balances — stake locked behind an audit that died
+//!   with the process is released, never leaked;
+//! - settled jobs re-serve their logged outcome without touching a worker.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use verde::model::Preset;
+use verde::service::journal::{self, JournalEntry};
+use verde::service::{
+    Delegation, FaultPlan, JobPolicy, JobRequest, JobStatus, PooledWorker, ServiceConfig,
+    WorkerHost, WorkerPool,
+};
+use verde::train::checkpoint::split_points;
+use verde::train::JobSpec;
+use verde::verde::trainer::TrainerNode;
+
+fn in_process_pool(plans: &[(&str, FaultPlan)]) -> WorkerPool {
+    WorkerPool::new(
+        plans
+            .iter()
+            .map(|&(name, plan)| PooledWorker::new(name, WorkerHost::new(name, plan)))
+            .collect(),
+    )
+}
+
+fn honest_pair() -> WorkerPool {
+    in_process_pool(&[("w0", FaultPlan::Honest), ("w1", FaultPlan::Honest)])
+}
+
+fn wal_path(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("verde-recovery-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    dir.join(format!("{tag}.wal"))
+}
+
+/// Re-frame `entries` exactly the way the journal file does.
+fn frame_all(entries: &[JournalEntry]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for e in entries {
+        let payload = e.encode();
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+    }
+    out
+}
+
+/// The tentpole acceptance test: kill the coordinator after two of four
+/// segments settled, recover, and get the uninterrupted run's verdict
+/// bit-identically while re-training only the two unsettled segments.
+#[test]
+fn recovery_mid_job_is_bit_identical_and_retrains_only_unsettled_segments() {
+    let spec = JobSpec::quick(Preset::Mlp, 12);
+    let k = 2usize;
+    let segments = 4u64;
+
+    // Uninterrupted reference run, journaled.
+    let ref_path = wal_path("reference");
+    let pool = honest_pair();
+    let delegation =
+        Delegation::start_durable(&pool, ServiceConfig::new(k), &ref_path).expect("durable start");
+    let reference = delegation.submit(JobRequest::new(spec).with_segments(segments)).wait();
+    delegation.finish();
+    assert!(reference.accepted.is_some(), "{reference:?}");
+    assert_eq!(reference.segments.len(), 4);
+
+    // Construct the post-SIGKILL file: every frame up to and including the
+    // second settled segment, then garbage as the torn tail of a frame the
+    // crash interrupted.
+    let full = journal::replay(&std::fs::read(&ref_path).expect("journal bytes"))
+        .expect("reference journal replays");
+    let mut settled_seen = 0usize;
+    let cut = full
+        .entries
+        .iter()
+        .position(|e| {
+            if matches!(e, JournalEntry::SegmentSettled { .. }) {
+                settled_seen += 1;
+            }
+            settled_seen == 2
+        })
+        .expect("reference run settled at least 2 segments");
+    let mut crashed = frame_all(&full.entries[..=cut]);
+    crashed.extend_from_slice(&[0x2a, 0x00, 0x00]); // torn: 3 bytes of a length prefix
+    let crash_path = wal_path("crashed");
+    std::fs::write(&crash_path, &crashed).expect("write crash journal");
+
+    // Recover on a fresh pool (the old connections died with the process).
+    let pool = honest_pair();
+    let (recovered, handles) =
+        Delegation::recover(&pool, ServiceConfig::new(k), &crash_path).expect("recover");
+    assert_eq!(handles.len(), 1, "one in-flight job to resume");
+    assert_eq!(handles[0].id(), reference.job_id);
+
+    let outcome = handles[0].wait();
+    // Bit-identical final verdict, and every settled-from-log segment is
+    // byte-for-byte the reference one (same certified root, same verdict,
+    // even the same wall-clock accounting — it came off the journal).
+    assert_eq!(outcome.accepted, reference.accepted, "recovered verdict diverged");
+    assert_eq!(outcome.segments.len(), 4);
+    assert_eq!(outcome.segments[0], reference.segments[0], "settled segment not trusted");
+    assert_eq!(outcome.segments[1], reference.segments[1], "settled segment not trusted");
+    for (seg, want) in outcome.segments.iter().zip(&reference.segments) {
+        assert_eq!(seg.accepted, want.accepted, "segment {} root diverged", seg.seg);
+    }
+    assert!(!outcome.cancelled);
+
+    // Worker-step accounting: only the two unsettled segments re-trained.
+    // Without state transfer segment i re-trains its prefix [0, b_i], and
+    // `coord_steps_trained` counts steps × leased workers for segments
+    // settled *live* (replayed segments land in the replay counter).
+    let bounds = split_points(0, spec.steps, segments);
+    let expect_steps = (k as u64) * (bounds[2] + bounds[3]);
+    let stats = recovered.stats();
+    assert_eq!(
+        stats.counter("coord_steps_trained"),
+        expect_steps,
+        "recovery re-trained settled work"
+    );
+    assert_eq!(stats.counter("coord_journal_replayed_segments"), 2);
+    assert_eq!(stats.counter("coord_journal_recovered_jobs"), 1);
+    assert!(stats.counter("coord_journal_entries") > 0, "recovered run journals new entries");
+
+    // A second recovery from the (now further-grown) journal sees the job
+    // settled: the fold is idempotent across crash generations.
+    let report = recovered.finish();
+    assert!(report.stakes.iter().all(|s| s.locked == 0), "locked stake leaked: {:?}", report.stakes);
+    let pool = honest_pair();
+    let (again, handles) =
+        Delegation::recover(&pool, ServiceConfig::new(k), &crash_path).expect("second recover");
+    assert_eq!(handles.len(), 1);
+    let replayed = handles[0].wait();
+    assert_eq!(replayed.accepted, reference.accepted);
+    assert!(
+        matches!(handles[0].try_status(), JobStatus::Done(_)),
+        "settled job must re-serve without training"
+    );
+    assert_eq!(again.stats().counter("coord_steps_trained"), 0, "nothing left to train");
+    again.finish();
+}
+
+/// A cleanly settled journal recovers to an already-`Done` handle with the
+/// logged outcome byte-for-byte, and the id counter resumes past it.
+#[test]
+fn settled_job_reserves_logged_outcome_and_id_counter_resumes() {
+    let path = wal_path("settled");
+    let spec = JobSpec::quick(Preset::Mlp, 6);
+    let want = TrainerNode::honest("ref", spec).train();
+
+    let pool = honest_pair();
+    let delegation =
+        Delegation::start_durable(&pool, ServiceConfig::new(2), &path).expect("durable start");
+    let original = delegation.submit(JobRequest::new(spec).with_segments(2)).wait();
+    assert_eq!(original.accepted, Some(want));
+    delegation.finish();
+
+    let pool = honest_pair();
+    let (recovered, handles) =
+        Delegation::recover(&pool, ServiceConfig::new(2), &path).expect("recover");
+    assert_eq!(handles.len(), 1);
+    // Already terminal — served from the log, no worker ever touched.
+    assert!(matches!(handles[0].try_status(), JobStatus::Done(_)));
+    let outcome = handles[0].wait();
+    assert_eq!(outcome, original, "logged outcome must re-serve byte-for-byte");
+    assert_eq!(recovered.stats().counter("coord_steps_trained"), 0);
+
+    // The id counter resumes past every journaled id: a fresh submission
+    // can never collide with a recovered handle.
+    let mut spec2 = spec;
+    spec2.data_seed ^= 0xD00D;
+    let fresh = recovered.submit(JobRequest::new(spec2));
+    assert_eq!(fresh.id(), original.job_id + 1, "job-id collision after recovery");
+    assert!(fresh.wait().accepted.is_some());
+    recovered.finish();
+}
+
+/// Stake locked behind an audit in flight at the crash is released on
+/// recovery — journaled as a release, visible as a balanced ledger — and
+/// the interrupted job still reaches the honest verdict.
+#[test]
+fn stake_locked_at_crash_is_released_not_leaked() {
+    let spec = JobSpec::quick(Preset::Mlp, 4);
+    let want = TrainerNode::honest("ref", spec).train();
+
+    // Synthesize the crash journal directly: a submitted job plus a stake
+    // lock with no matching release/slash — the audit died mid-flight.
+    let entries = vec![
+        JournalEntry::Submit { job_id: 5, spec, policy: JobPolicy::default() },
+        JournalEntry::StakeLock { worker: "auditee".to_string(), amount: 700 },
+    ];
+    let mut bytes = frame_all(&entries);
+    bytes.push(0x13); // torn single byte
+    let path = wal_path("stake");
+    std::fs::write(&path, &bytes).expect("write crash journal");
+
+    let pool = honest_pair();
+    let (recovered, handles) =
+        Delegation::recover(&pool, ServiceConfig::new(2), &path).expect("recover");
+    assert_eq!(handles.len(), 1);
+    assert_eq!(handles[0].id(), 5);
+    let outcome = handles[0].wait();
+    assert_eq!(outcome.accepted, Some(want), "recovered job reaches the honest verdict");
+
+    // The release was journaled at recovery (before any new work), and the
+    // torn tail was truncated away — the file replays cleanly end to end.
+    let replay = journal::replay(&std::fs::read(&path).expect("journal bytes"))
+        .expect("post-recovery journal replays");
+    assert_eq!(replay.torn_bytes, 0, "torn tail survived recovery");
+    assert!(
+        replay.entries.iter().any(
+            |e| matches!(e, JournalEntry::StakeRelease { worker } if worker == "auditee")
+        ),
+        "stake release not journaled"
+    );
+
+    let report = recovered.finish();
+    let auditee = report.stakes.iter().find(|s| s.worker == "auditee").expect("account restored");
+    assert_eq!(auditee.locked, 0, "locked stake leaked through recovery");
+    assert_eq!(auditee.slashed, 0);
+    assert!(auditee.deposited > 0);
+    assert!(report.stakes.iter().all(|s| s.locked == 0));
+}
+
+/// A missing journal file recovers to an empty, working delegation (the
+/// `--journal PATH` cold-start path), and a journal whose *interior* is
+/// corrupt — not merely torn — refuses to recover rather than silently
+/// dropping history.
+#[test]
+fn missing_file_cold_starts_and_interior_corruption_refuses() {
+    let path = wal_path("coldstart");
+    std::fs::remove_file(&path).ok();
+    let pool = honest_pair();
+    let (delegation, handles) =
+        Delegation::recover(&pool, ServiceConfig::new(2), &path).expect("cold start");
+    assert!(handles.is_empty());
+    let spec = JobSpec::quick(Preset::Mlp, 3);
+    let handle = delegation.submit(JobRequest::new(spec));
+    assert_eq!(handle.id(), 0, "cold start begins at id 0");
+    assert!(handle.wait().accepted.is_some());
+    delegation.finish();
+
+    // The journal now has real history; flip a byte inside the FIRST frame
+    // (a complete entry, so this is corruption, not a torn tail).
+    let mut bytes = std::fs::read(&path).expect("journal bytes");
+    assert!(bytes.len() > 8);
+    bytes[4] ^= 0xFF; // first payload byte: the entry tag
+    std::fs::write(&path, &bytes).expect("rewrite");
+    let pool = honest_pair();
+    let err = Delegation::recover(&pool, ServiceConfig::new(2), &path)
+        .err()
+        .expect("corrupt interior must refuse recovery");
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+}
+
+/// Crash-point sweep: recovery from *every* whole-entry prefix of a real
+/// journal reaches the reference verdict — there is no instant at which a
+/// SIGKILL strands the job or forks the verdict.
+#[test]
+fn every_crash_point_recovers_to_the_reference_verdict() {
+    let spec = JobSpec::quick(Preset::Mlp, 8);
+    let path = wal_path("sweep-ref");
+    let pool = honest_pair();
+    let delegation =
+        Delegation::start_durable(&pool, ServiceConfig::new(2), &path).expect("durable start");
+    let reference = delegation.submit(JobRequest::new(spec).with_segments(2)).wait();
+    delegation.finish();
+    let accepted = reference.accepted.expect("reference verdict");
+
+    let full = journal::replay(&std::fs::read(&path).expect("journal bytes")).expect("replay");
+    // Prefixes that contain the Submit (before it there is no job to
+    // recover — cold start, covered elsewhere).
+    for cut in 1..=full.entries.len() {
+        let crash_path = wal_path(&format!("sweep-{cut}"));
+        std::fs::write(&crash_path, frame_all(&full.entries[..cut])).expect("write prefix");
+        let pool = honest_pair();
+        let (recovered, handles) = Delegation::recover(&pool, ServiceConfig::new(2), &crash_path)
+            .unwrap_or_else(|e| panic!("prefix {cut}: {e}"));
+        assert_eq!(handles.len(), 1, "prefix {cut}");
+        let outcome = handles[0].wait();
+        assert_eq!(outcome.accepted, Some(accepted), "prefix {cut} forked the verdict");
+        assert!(!outcome.cancelled, "prefix {cut}");
+        let report = recovered.finish();
+        assert!(report.stakes.iter().all(|s| s.locked == 0), "prefix {cut} leaked stake");
+        std::fs::remove_file(&crash_path).ok();
+    }
+}
+
+/// Waiting on a handle `recover` returned for a job the journal shows
+/// settled returns instantly — even against a pool whose only worker
+/// tampers with every job — proof the outcome is served from the log, not
+/// from work.
+#[test]
+fn settled_outcome_serves_from_log_without_touching_workers() {
+    let path = wal_path("no-workers");
+    let spec = JobSpec::quick(Preset::Mlp, 4);
+    let pool = honest_pair();
+    let delegation =
+        Delegation::start_durable(&pool, ServiceConfig::new(2), &path).expect("durable start");
+    let original = delegation.submit(JobRequest::new(spec)).wait();
+    assert!(original.accepted.is_some());
+    delegation.finish();
+
+    // A pool that could only ever produce a *wrong* answer: if recovery
+    // re-trained the settled job, the verdict would change or hang.
+    let tamperers = in_process_pool(&[("evil", FaultPlan::Tamper { step: Some(0), delta: 1.0 })]);
+    let (recovered, handles) =
+        Delegation::recover(&tamperers, ServiceConfig::new(1), &path).expect("recover");
+    assert_eq!(handles.len(), 1);
+    let t0 = std::time::Instant::now();
+    assert_eq!(handles[0].wait(), original);
+    assert!(t0.elapsed() < Duration::from_secs(5), "served from log, not re-trained");
+    assert_eq!(recovered.stats().counter("coord_steps_trained"), 0, "a worker was dispatched");
+    recovered.finish();
+}

@@ -12,6 +12,8 @@ use verde::hash::merkle::MerkleProof;
 use verde::hash::Hash;
 use verde::model::Preset;
 use verde::obs::{HistogramSnapshot, Snapshot};
+use verde::service::journal::{self, JournalEntry, MAX_JOURNAL_ENTRY};
+use verde::service::{JobOutcome, SegmentOutcome};
 use verde::tensor::Tensor;
 use verde::train::JobSpec;
 use verde::util::proptest::{forall, Gen};
@@ -257,6 +259,178 @@ fn gen_response(g: &mut Gen) -> Response {
         10 => Response::Cancelled(g.bool()),
         _ => Response::Bye,
     }
+}
+
+fn gen_worker_name(g: &mut Gen) -> String {
+    let n = g.usize_in(0, 16);
+    (0..n).map(|_| char::from(b'a' + (g.u64() % 26) as u8)).collect()
+}
+
+fn gen_worker_names(g: &mut Gen, max: usize) -> Vec<String> {
+    let n = g.usize_in(0, max);
+    (0..n).map(|_| gen_worker_name(g)).collect()
+}
+
+fn gen_segment_outcome(g: &mut Gen) -> SegmentOutcome {
+    SegmentOutcome {
+        seg: g.usize_in(0, 1 << 20),
+        start: g.u64(),
+        end: g.u64(),
+        accepted: if g.bool() { Some(gen_hash(g)) } else { None },
+        winner: if g.bool() { Some(gen_worker_name(g)) } else { None },
+        workers: gen_worker_names(g, 6),
+        disputes: g.usize_in(0, 1 << 20),
+        eliminated: g.usize_in(0, 1 << 20),
+        requeues: g.usize_in(0, u32::MAX as usize) as u32,
+        revoked: g.usize_in(0, 1 << 20),
+        // The codec carries wall time as u64 nanoseconds, so a duration
+        // generated from u64 nanos roundtrips bit-exactly.
+        wall: Duration::from_nanos(g.u64()),
+        bytes: g.u64(),
+        requests: g.u64(),
+        leased_seq: g.u64(),
+        seeded_from: if g.bool() { Some(g.u64()) } else { None },
+        steps_trained: g.u64(),
+        transfer_bytes: g.u64(),
+        uploads_rejected: g.usize_in(0, u32::MAX as usize) as u32,
+        audit_sampled: g.bool(),
+        audit_passed: g.bool(),
+        audit_escalated: g.bool(),
+        audit_steps: g.u64(),
+        slashed: g.u64(),
+    }
+}
+
+fn gen_job_outcome(g: &mut Gen) -> JobOutcome {
+    let n_segs = g.usize_in(0, 4);
+    JobOutcome {
+        job_id: g.u64(),
+        accepted: if g.bool() { Some(gen_hash(g)) } else { None },
+        winner: if g.bool() { Some(gen_worker_name(g)) } else { None },
+        cancelled: g.bool(),
+        disputes: g.usize_in(0, 1 << 20),
+        eliminated: g.usize_in(0, 1 << 20),
+        requeues: g.usize_in(0, u32::MAX as usize) as u32,
+        revoked: g.usize_in(0, 1 << 20),
+        wall: Duration::from_nanos(g.u64()),
+        bytes: g.u64(),
+        requests: g.u64(),
+        segments: (0..n_segs).map(|_| gen_segment_outcome(g)).collect(),
+    }
+}
+
+fn gen_journal_entry(g: &mut Gen) -> JournalEntry {
+    match g.usize_in(0, 9) {
+        0 => JournalEntry::Submit { job_id: g.u64(), spec: gen_spec(g), policy: gen_policy(g) },
+        1 => JournalEntry::Lease {
+            job_id: g.u64(),
+            seg_idx: g.u64(),
+            lease_seq: g.u64(),
+            workers: gen_worker_names(g, 8),
+        },
+        2 => JournalEntry::Revoke { worker: gen_worker_name(g) },
+        3 => JournalEntry::SegmentSettled { job_id: g.u64(), outcome: gen_segment_outcome(g) },
+        4 => JournalEntry::AuditCommit {
+            job_id: g.u64(),
+            seg_idx: g.u64(),
+            worker: gen_worker_name(g),
+            root: gen_hash(g),
+        },
+        5 => JournalEntry::AuditOutcome { job_id: g.u64(), seg_idx: g.u64(), passed: g.bool() },
+        6 => JournalEntry::StakeLock { worker: gen_worker_name(g), amount: g.u64() },
+        7 => JournalEntry::StakeRelease { worker: gen_worker_name(g) },
+        8 => JournalEntry::StakeSlash { worker: gen_worker_name(g), amount: g.u64() },
+        _ => JournalEntry::JobSettled { outcome: gen_job_outcome(g) },
+    }
+}
+
+/// Frame an entry the way the journal file does: `u32` LE payload length
+/// followed by the canonical payload.
+fn frame(entry: &JournalEntry, out: &mut Vec<u8>) {
+    let payload = entry.encode();
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+}
+
+#[test]
+fn prop_journal_entries_roundtrip_bit_exactly_and_size_exactly() {
+    forall("journal entry encode→decode→encode is identity", 200, |g: &mut Gen| {
+        let e = gen_journal_entry(g);
+        let bytes = e.encode();
+        assert_eq!(bytes.len(), e.wire_size(), "{e:?}");
+        let back = JournalEntry::decode(&bytes).unwrap_or_else(|err| panic!("{e:?}: {err}"));
+        assert_eq!(back, e);
+        assert_eq!(back.encode(), bytes, "{e:?}: re-encode is canonical");
+    });
+}
+
+#[test]
+fn prop_journal_entry_truncations_and_corruption_are_total() {
+    forall("journal entries are total over hostile bytes", 120, |g: &mut Gen| {
+        let bytes = gen_journal_entry(g).encode();
+        // Every strict prefix is rejected (all fields demanded by fixed
+        // layout or a length prefix).
+        let mut cuts = vec![0usize];
+        for _ in 0..16.min(bytes.len().saturating_sub(1)) {
+            cuts.push(g.usize_in(0, bytes.len() - 1));
+        }
+        for cut in cuts {
+            assert!(
+                JournalEntry::decode(&bytes[..cut]).is_err(),
+                "prefix {cut}/{} accepted",
+                bytes.len()
+            );
+        }
+        // Trailing junk is rejected: the length prefix frames exactly one
+        // entry.
+        let mut padded = bytes.clone();
+        padded.push((g.u64() & 0xff) as u8);
+        assert!(JournalEntry::decode(&padded).is_err(), "trailing byte accepted");
+        // Single-bit corruption: an error or a value whose canonical
+        // encoding is exactly the corrupted bytes — never a panic, never a
+        // non-canonical acceptance.
+        let mut corrupt = bytes.clone();
+        let pos = g.usize_in(0, corrupt.len() - 1);
+        corrupt[pos] ^= 1u8 << g.usize_in(0, 7);
+        if let Ok(e) = JournalEntry::decode(&corrupt) {
+            assert_eq!(e.encode(), corrupt, "non-canonical journal entry accepted");
+        }
+    });
+}
+
+#[test]
+fn prop_journal_replay_tolerates_torn_tail_never_corruption() {
+    forall("replay: torn tail tolerated, corruption rejected", 60, |g: &mut Gen| {
+        let n = g.usize_in(1, 6);
+        let entries: Vec<JournalEntry> = (0..n).map(|_| gen_journal_entry(g)).collect();
+        let mut buf = Vec::new();
+        for e in &entries {
+            frame(e, &mut buf);
+        }
+
+        // Clean replay recovers every entry in order.
+        let clean = journal::replay(&buf).expect("clean journal replays");
+        assert_eq!(clean.entries, entries);
+        assert_eq!(clean.torn_bytes, 0);
+
+        // A crash mid-append truncates inside the final frame: replay keeps
+        // every earlier entry and reports the torn remainder.
+        let last_frame = 4 + entries.last().unwrap().wire_size();
+        let cut = g.usize_in(buf.len() - last_frame + 1, buf.len() - 1);
+        let torn = journal::replay(&buf[..cut]).expect("torn tail tolerated");
+        assert_eq!(torn.entries, entries[..n - 1], "cut {cut}");
+        assert_eq!(torn.torn_bytes, cut - (buf.len() - last_frame), "cut {cut}");
+
+        // An absurd length prefix must be corruption (bounded allocation),
+        // never treated as a frame to satisfy.
+        let mut absurd = buf.clone();
+        let huge = (MAX_JOURNAL_ENTRY as u32) + 1 + (g.u64() % 1024) as u32;
+        absurd[0..4].copy_from_slice(&huge.to_le_bytes());
+        assert!(
+            matches!(journal::replay(&absurd), Err(WireError::FrameTooLarge { .. })),
+            "absurd frame length accepted"
+        );
+    });
 }
 
 #[test]
