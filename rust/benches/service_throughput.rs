@@ -16,6 +16,13 @@
 //! verdict, strictly fewer worker-steps (`(1 + audit_rate)·steps` expected
 //! vs `k·steps`).
 //!
+//! Two more rows land in the JSON: a **fleet-size sweep** over {64, 256,
+//! 1024} open mux connections on one event loop (mean per-tick poll cost
+//! from `net_mux_poll_us`, plus the coordinator's peak buffered stream
+//! bytes — asserted to stay inside the chunk window), and a
+//! **journal-on vs journal-off** pass measuring the write-ahead journal's
+//! fsync overhead on the same job batch.
+//!
 //! Emits `BENCH_service.json` (throughput + latency percentiles) and
 //! `STATS_snapshot.json` (the live stats snapshot of the traced run) so
 //! the perf trajectory of the coordinator is machine-readable run over
@@ -32,6 +39,7 @@ use verde::net::mux::Mux;
 use verde::net::tcp::{spawn_server, TcpEndpoint};
 use verde::net::Endpoint as _;
 use verde::net::threaded::spawn;
+use verde::obs::LATENCY_US_BOUNDS;
 use verde::service::{
     run_service, run_service_blocking, Delegation, FaultPlan, JobRequest, PooledWorker,
     ServiceConfig, ServiceReport, WorkerHost, WorkerPool,
@@ -39,6 +47,7 @@ use verde::service::{
 use verde::train::JobSpec;
 use verde::util::metrics::human_bytes;
 use verde::verde::protocol::Request;
+use verde::verde::wire::CHECKPOINT_CHUNK;
 
 struct Scenario {
     name: &'static str,
@@ -220,6 +229,170 @@ fn run_tcp_dispatch(size: usize, mux_mode: bool) -> (String, f64, usize) {
         let _ = s.join();
     }
     (json, jps, threads)
+}
+
+/// Fleet-size sweep point: `size` open mux connections on ONE event loop
+/// and one mux driver, with a small sharded-transfer job batch active at
+/// a time (the realistic shape: a large registered fleet, a few leases
+/// hot). Records the mean per-tick poll cost from the `net_mux_poll_us`
+/// histogram delta — with the epoll backend this tracks *ready*
+/// connections, not open ones — and the coordinator's peak buffered
+/// stream bytes, which must stay inside the chunk window no matter the
+/// fleet or checkpoint size.
+fn run_fleet_sweep(size: usize) -> String {
+    let k = 4;
+    let n_jobs = 4u64;
+    let steps = 8u64;
+    let segments = 4u64;
+    let cfg = ServiceConfig::new(k);
+    let (servers, addrs) = tcp_fleet(size);
+    let mux = Mux::new();
+    let pool = WorkerPool::new(
+        addrs
+            .iter()
+            .enumerate()
+            .map(|(i, addr)| {
+                let name = format!("w{i}");
+                PooledWorker::mux(&name, mux.connect(&name, addr).expect("connect"))
+            })
+            .collect(),
+    );
+
+    let poll = verde::obs::global().histogram("net_mux_poll_us", &LATENCY_US_BOUNDS);
+    let (ticks0, us0) = (poll.count(), poll.sum());
+
+    let delegation = Delegation::start(&pool, cfg);
+    let registry = delegation.registry().clone();
+    let t0 = Instant::now();
+    let handles: Vec<_> = job_batch(n_jobs, steps)
+        .into_iter()
+        .map(|spec| {
+            delegation.submit(JobRequest::new(spec).with_segments(segments).with_state_transfer())
+        })
+        .collect();
+    let resolved = handles.iter().filter(|h| h.wait().accepted.is_some()).count();
+    let wall = t0.elapsed();
+    assert_eq!(resolved, n_jobs as usize, "all jobs must resolve");
+    let report = delegation.finish();
+
+    let ticks = poll.count() - ticks0;
+    let mean_poll_us = (poll.sum() - us0) as f64 / ticks.max(1) as f64;
+    let snap = registry.snapshot();
+    let peak = snap.gauge("coord_stream_peak_bytes");
+    let window_bytes = (cfg.stream_window as u64 + 1) * CHECKPOINT_CHUNK as u64;
+    assert!(
+        peak <= window_bytes,
+        "peak buffered stream bytes ({peak}) must stay inside the chunk window ({window_bytes})"
+    );
+    let backend = verde::obs::global().gauge("net_readiness_backend").get();
+    println!(
+        "  fleet_w{:<5}       {:>3} jobs  k={k} over {:>4} mux conns  {:>10.2?}  {:>8.1} us/poll-tick  peak stream {:>10}",
+        size,
+        n_jobs,
+        size,
+        wall,
+        mean_poll_us,
+        human_bytes(peak),
+    );
+
+    let json = format!(
+        "{{\"name\":\"fleet_w{}\",\"mode\":\"mux\",\"conns\":{},\"jobs\":{},\"k\":{},\
+         \"wall_s\":{:.6},\"poll_ticks\":{},\"mean_poll_us\":{:.2},\"peak_stream_bytes\":{},\
+         \"readiness_backend\":{},\"transfer_bytes\":{},\"seeded_segments\":{}}}",
+        size,
+        size,
+        n_jobs,
+        k,
+        wall.as_secs_f64(),
+        ticks,
+        mean_poll_us,
+        peak,
+        backend,
+        report.total_transfer_bytes(),
+        report.total_seeded_segments(),
+    );
+
+    for mut w in pool.into_workers() {
+        let _ = w.call(Request::Shutdown);
+    }
+    drop(mux);
+    for s in servers {
+        let _ = s.join();
+    }
+    json
+}
+
+/// Journal-on vs journal-off: the same job batch against identical fresh
+/// in-process pools, once ephemeral and once with the write-ahead journal
+/// (every state transition appended, settlement boundaries fsynced). The
+/// wall delta plus the journal's own entry/sync counters make the
+/// durability tax a tracked number instead of folklore.
+fn run_journal_compare(smoke: bool) -> Vec<String> {
+    let (jobs, steps) = if smoke { (8u64, 4u64) } else { (32, 6) };
+    let k = 2;
+    let path = "BENCH_journal.wal";
+    let mut out = Vec::new();
+    for &durable in &[false, true] {
+        let pool = WorkerPool::new(
+            (0..4)
+                .map(|i| {
+                    let name = format!("w{i}");
+                    PooledWorker::new(&name, spawn(WorkerHost::new(&name, FaultPlan::Honest)))
+                })
+                .collect(),
+        );
+        let delegation = if durable {
+            Delegation::start_durable(&pool, ServiceConfig::new(k), path)
+                .expect("create bench journal")
+        } else {
+            Delegation::start(&pool, ServiceConfig::new(k))
+        };
+        let registry = delegation.registry().clone();
+        let t0 = Instant::now();
+        let handles: Vec<_> = job_batch(jobs, steps)
+            .into_iter()
+            .map(|spec| delegation.submit(JobRequest::new(spec)))
+            .collect();
+        let resolved = handles.iter().filter(|h| h.wait().accepted.is_some()).count();
+        let wall = t0.elapsed();
+        assert_eq!(resolved, jobs as usize, "all jobs must resolve");
+        let report = delegation.finish();
+        let snap = registry.snapshot();
+        let (entries, syncs, jbytes) = (
+            snap.counter("coord_journal_entries"),
+            snap.counter("coord_journal_syncs"),
+            snap.counter("coord_journal_bytes"),
+        );
+        let mode = if durable { "durable" } else { "ephemeral" };
+        println!(
+            "  journal_{:<9}  {:>3} jobs  k={k}  {:>10.2?}  {:>7.2} jobs/s  {:>4} entries  {:>4} fsyncs  {:>10} journaled",
+            mode,
+            jobs,
+            wall,
+            report.jobs_per_sec(),
+            entries,
+            syncs,
+            human_bytes(jbytes),
+        );
+        out.push(format!(
+            "{{\"name\":\"journal_{}\",\"mode\":\"{}\",\"jobs\":{},\"k\":{},\"wall_s\":{:.6},\
+             \"jobs_per_sec\":{:.3},\"journal_entries\":{},\"journal_syncs\":{},\
+             \"journal_bytes\":{}}}",
+            mode,
+            mode,
+            jobs,
+            k,
+            wall.as_secs_f64(),
+            report.jobs_per_sec(),
+            entries,
+            syncs,
+            jbytes,
+        ));
+        if durable {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+    out
 }
 
 /// Sharded-with-transfer vs prefix-retrain: the same sharded job run both
@@ -479,6 +652,15 @@ fn main() {
 
     println!("SERVICE: per-job latency distribution (span timelines)");
     lines.push(run_latency_distribution(smoke));
+
+    println!("SERVICE: write-ahead journal fsync overhead (durable vs ephemeral)");
+    lines.extend(run_journal_compare(smoke));
+
+    println!("SERVICE: fleet-size sweep (open mux connections on one event loop)");
+    let fleet_sizes: &[usize] = if smoke { &[64] } else { &[64, 256, 1024] };
+    for &size in fleet_sizes {
+        lines.push(run_fleet_sweep(size));
+    }
 
     println!("SERVICE: blocking vs multiplexed dispatch over TCP fleets");
     let sizes: &[usize] = if smoke { &[4] } else { &[4, 16, 64] };

@@ -12,6 +12,7 @@
 //! tournaments and disputes run over it unchanged.
 
 pub mod mux;
+pub mod readiness;
 pub mod tcp;
 pub mod threaded;
 

@@ -7,19 +7,30 @@
 //! runs on:
 //!
 //! * every connection is `set_nonblocking(true)`; a single driver thread
-//!   polls readiness in-tree (no epoll dependency — the loop attempts
-//!   writes/reads and backs off on `WouldBlock`);
+//!   waits on a [readiness backend](crate::net::readiness) — kernel
+//!   `epoll` where available (poll cost proportional to *ready*
+//!   connections, the 1000-fleet spine), or the portable in-tree scan
+//!   loop as the runtime-selected fallback;
 //! * request frames carry a caller-chosen **correlation tag**
 //!   ([`crate::verde::wire`]); the peer echoes it, and the driver routes
 //!   each answer to the completion sink registered under that tag, so any
 //!   number of requests can be outstanding per connection;
-//! * every submission may carry a **deadline**. When it passes without an
-//!   answer the driver synthesizes a [`Response::Refuse`] completion with
+//! * every submission may carry a **deadline**, tracked in one global
+//!   min-heap (lazy deletion against the pending maps) so firing expiries
+//!   costs O(log n) per due entry rather than a scan of every in-flight
+//!   request. When a deadline passes unanswered the driver synthesizes a
+//!   [`Response::Refuse`] completion with
 //!   [`CompletionKind::DeadlineExpired`] — the connection itself stays up,
 //!   and a late answer to an expired tag is discarded as stale;
 //! * a transport failure (reset, EOF with requests outstanding, bad frame)
 //!   fails **all** pending requests with [`CompletionKind::Transport`] and
-//!   marks the connection dead.
+//!   marks the connection dead;
+//! * each connection's write buffer is **bounded**
+//!   ([`Mux::set_write_cap`], default 32 MiB). A submit that would
+//!   overflow it completes immediately with
+//!   [`CompletionKind::Overloaded`] instead of growing coordinator
+//!   memory without limit behind a slow worker — backpressure the
+//!   coordinator surfaces in `ServiceReport::overloads`.
 //!
 //! [`MuxConn`] is the per-connection handle: non-blocking [`MuxConn::submit`]
 //! for the coordinator's completion-queue state machines, plus a blocking
@@ -27,7 +38,8 @@
 //! deadline) so `run_dispute`/`run_tournament` work over multiplexed
 //! connections unchanged.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 use std::io::{self, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -39,18 +51,21 @@ use crate::obs::{Counter, Histogram, LATENCY_US_BOUNDS};
 use crate::verde::protocol::{Request, Response};
 use crate::verde::wire::{frame_bytes, split_frame};
 
+use super::readiness::{BackendKind, Event, Readiness, WAKE_TOKEN};
 use super::Endpoint;
 
 /// Cached handles over the process-global registry (`net_mux_*` keys).
-/// The driver thread builds one at start; `MuxConn` holds a frames-out
-/// handle for its submit path. These are process-lifetime totals —
-/// parallel delegations share them.
+/// The driver thread builds one at start; `MuxConn` holds frames-out and
+/// overload handles for its submit path. These are process-lifetime
+/// totals — parallel delegations share them.
 struct MuxMetrics {
     bytes_out: Counter,
     bytes_in: Counter,
     frames_in: Counter,
     deadline_expiries: Counter,
     poll_us: Histogram,
+    /// Time spent blocked in `epoll_wait` (epoll backend only).
+    epoll_wait_us: Histogram,
 }
 
 impl MuxMetrics {
@@ -62,6 +77,7 @@ impl MuxMetrics {
             frames_in: g.counter("net_mux_frames_in"),
             deadline_expiries: g.counter("net_mux_deadline_expiries"),
             poll_us: g.histogram("net_mux_poll_us", &LATENCY_US_BOUNDS),
+            epoll_wait_us: g.histogram("net_mux_epoll_wait_us", &LATENCY_US_BOUNDS),
         }
     }
 }
@@ -69,13 +85,18 @@ impl MuxMetrics {
 /// Identifies one multiplexed connection for the lifetime of its [`Mux`].
 pub type ConnId = u64;
 
-/// Poll cadence when no socket made progress — the latency floor of the
-/// in-tree readiness loop.
+/// Poll cadence of the scan backend when no socket made progress — the
+/// latency floor of the in-tree readiness loop.
 const IDLE_POLL: Duration = Duration::from_millis(1);
 
 /// Extra slack a blocking [`MuxConn::call`] waits beyond its deadline for
 /// the driver to deliver the synthesized refusal (covers a torn-down mux).
 const CALL_GRACE: Duration = Duration::from_millis(500);
+
+/// Default per-connection write-buffer bound. Large enough for a full
+/// streaming-seed window plus control traffic; a submit that would push a
+/// connection past it completes as [`CompletionKind::Overloaded`].
+const DEFAULT_WRITE_CAP: usize = 32 << 20;
 
 /// How a completion was produced.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -88,11 +109,16 @@ pub enum CompletionKind {
     /// The connection died (reset, EOF mid-conversation, hostile frame);
     /// `resp` is a synthesized `Refuse` and later submits fail instantly.
     Transport,
+    /// The connection's bounded write buffer was full: the request was
+    /// never enqueued. The connection is healthy but the peer is not
+    /// draining — backpressure, not failure.
+    Overloaded,
 }
 
 impl CompletionKind {
-    /// True when the worker failed to answer (deadline or dead transport) —
-    /// the lease-revocation trigger.
+    /// True when the worker failed to take/answer the request (deadline,
+    /// dead transport, or a write buffer it is not draining) — the
+    /// lease-revocation trigger.
     pub fn unresponsive(self) -> bool {
         !matches!(self, CompletionKind::Answered)
     }
@@ -108,7 +134,6 @@ pub struct Completion {
 }
 
 struct Pending {
-    deadline: Option<Instant>,
     reply: Sender<Completion>,
 }
 
@@ -125,10 +150,32 @@ struct Conn {
     recv_buf: Vec<u8>,
     /// In-flight requests keyed by correlation tag.
     pending: HashMap<u64, Pending>,
+    /// Whether `EPOLLOUT` is currently armed (epoll backend only).
+    write_armed: bool,
+    /// Whether the fd is in the epoll interest set (epoll backend only).
+    registered: bool,
     raw_sent: u64,
     raw_received: u64,
     frames_sent: u64,
     frames_received: u64,
+}
+
+impl Conn {
+    /// Bytes queued but not yet accepted by the socket.
+    fn unflushed(&self) -> usize {
+        self.send_buf.len() - self.send_pos
+    }
+}
+
+#[cfg(unix)]
+fn conn_fd(stream: &TcpStream) -> i32 {
+    use std::os::unix::io::AsRawFd;
+    stream.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn conn_fd(_stream: &TcpStream) -> i32 {
+    -1 // the readiness backend is never constructed off-unix
 }
 
 /// Raw traffic counters for one connection (frame headers included in the
@@ -145,12 +192,34 @@ pub struct ConnStats {
 struct State {
     conns: HashMap<ConnId, Conn>,
     next_conn: ConnId,
+    /// Global deadline min-heap: `(deadline, conn, tag)`, lazily deleted —
+    /// an entry whose tag is no longer pending is skipped when it pops.
+    deadlines: BinaryHeap<Reverse<(Instant, ConnId, u64)>>,
+    /// Connections with freshly queued outbound bytes (epoll backend:
+    /// the driver pumps exactly these plus the kernel-ready set).
+    dirty: Vec<ConnId>,
+    /// Per-connection write-buffer bound in bytes.
+    write_cap: usize,
     shutdown: bool,
 }
 
 struct Shared {
     state: Mutex<State>,
     wake: Condvar,
+    /// `Some` when the epoll backend drives this mux.
+    readiness: Option<Readiness>,
+    backend: BackendKind,
+}
+
+impl Shared {
+    /// Wake the driver whichever backend it runs: condvar for the scan
+    /// loop, self-pipe for a driver blocked in `epoll_wait`.
+    fn poke(&self) {
+        self.wake.notify_all();
+        if let Some(r) = &self.readiness {
+            r.wake();
+        }
+    }
 }
 
 /// The multiplexer: owns the driver thread and all registered connections.
@@ -160,15 +229,36 @@ pub struct Mux {
 }
 
 impl Mux {
-    /// Start a multiplexer with its driver thread.
+    /// Start a multiplexer on the auto-detected readiness backend
+    /// (`VERDE_NET_BACKEND` env override, else epoll where available,
+    /// else the scan loop).
     pub fn new() -> Mux {
+        Mux::with_backend(BackendKind::detect())
+    }
+
+    /// Start a multiplexer on an explicit readiness backend (tests and
+    /// benches pin this for backend-equivalence runs). Requesting
+    /// [`BackendKind::Epoll`] where the kernel lacks it falls back to the
+    /// scan loop.
+    pub fn with_backend(kind: BackendKind) -> Mux {
+        let readiness = match kind {
+            BackendKind::Epoll => Readiness::new().ok(),
+            BackendKind::Scan => None,
+        };
+        let backend = if readiness.is_some() { BackendKind::Epoll } else { BackendKind::Scan };
+        crate::obs::global().gauge("net_readiness_backend").set(backend.gauge_value());
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 conns: HashMap::new(),
                 next_conn: 1,
+                deadlines: BinaryHeap::new(),
+                dirty: Vec::new(),
+                write_cap: DEFAULT_WRITE_CAP,
                 shutdown: false,
             }),
             wake: Condvar::new(),
+            readiness,
+            backend,
         });
         let driver_shared = Arc::clone(&shared);
         let driver = std::thread::Builder::new()
@@ -176,6 +266,19 @@ impl Mux {
             .spawn(move || drive(&driver_shared))
             .expect("spawn mux driver");
         Mux { shared, driver: Some(driver) }
+    }
+
+    /// The readiness backend actually driving this mux.
+    pub fn backend(&self) -> BackendKind {
+        self.shared.backend
+    }
+
+    /// Bound every connection's write buffer to `bytes` (default 32 MiB).
+    /// A submit that would overflow the bound completes immediately as
+    /// [`CompletionKind::Overloaded`]; a single frame is always accepted
+    /// into an empty buffer so progress is never wedged by a small cap.
+    pub fn set_write_cap(&self, bytes: usize) {
+        self.shared.state.lock().unwrap().write_cap = bytes.max(1);
     }
 
     /// Connect to a listening worker and register the socket with the
@@ -187,6 +290,16 @@ impl Mux {
         let mut st = self.shared.state.lock().unwrap();
         let id = st.next_conn;
         st.next_conn += 1;
+        let mut registered = false;
+        if let Some(r) = &self.shared.readiness {
+            registered = r.register(conn_fd(&stream), id).is_ok();
+            if !registered {
+                // Registration failure (fd exhaustion in the interest set)
+                // degrades this connection to unusable rather than killing
+                // the mux; the first submit will fail it.
+                return Err(io::Error::other("epoll registration failed"));
+            }
+        }
         st.conns.insert(
             id,
             Conn {
@@ -197,14 +310,17 @@ impl Mux {
                 send_pos: 0,
                 recv_buf: Vec::new(),
                 pending: HashMap::new(),
+                write_armed: false,
+                registered,
                 raw_sent: 0,
                 raw_received: 0,
                 frames_sent: 0,
                 frames_received: 0,
             },
         );
+        crate::obs::global().gauge("net_mux_conns").set(st.conns.len() as u64);
         drop(st);
-        self.shared.wake.notify_all();
+        self.shared.poke();
         let (reply_tx, reply_rx) = channel();
         Ok(MuxConn {
             shared: Arc::clone(&self.shared),
@@ -217,6 +333,7 @@ impl Mux {
             reply_tx,
             reply_rx,
             frames_out: crate::obs::global().counter("net_mux_frames_out"),
+            overloads: crate::obs::global().counter("net_mux_overloads"),
             faulted: false,
         })
     }
@@ -231,7 +348,7 @@ impl Default for Mux {
 impl Drop for Mux {
     fn drop(&mut self) {
         self.shared.state.lock().unwrap().shutdown = true;
-        self.shared.wake.notify_all();
+        self.shared.poke();
         if let Some(j) = self.driver.take() {
             let _ = j.join();
         }
@@ -254,6 +371,9 @@ pub struct MuxConn {
     /// (`net_mux_frames_out`). Submit runs on caller threads, so the
     /// handle lives here rather than in the driver's [`MuxMetrics`].
     frames_out: Counter,
+    /// Cached global-registry handle: submits refused by the
+    /// write-buffer bound (`net_mux_overloads`).
+    overloads: Counter,
     /// Latched when any request on this handle went unanswered — the
     /// coordinator reads this after a job to decide on revocation.
     faulted: bool,
@@ -286,6 +406,7 @@ impl MuxConn {
             let _ = reply.send(refused(token, dead, &self.name, "multiplexer shut down"));
             return;
         }
+        let write_cap = st.write_cap;
         let Some(conn) = st.conns.get_mut(&self.id) else {
             let _ = reply.send(refused(token, dead, &self.name, "connection unregistered"));
             return;
@@ -298,12 +419,32 @@ impl MuxConn {
             let _ = reply.send(refused(token, dead, &self.name, "duplicate correlation tag"));
             return;
         }
-        conn.send_buf.extend_from_slice(&frame_bytes(token, &payload));
+        let frame = frame_bytes(token, &payload);
+        // Bounded write buffer: a peer not draining its socket may not
+        // grow coordinator memory without limit. An empty buffer accepts
+        // any single frame so a small cap can never wedge progress.
+        if conn.unflushed() > 0 && conn.unflushed() + frame.len() > write_cap {
+            self.overloads.inc();
+            let _ = reply.send(refused(
+                token,
+                CompletionKind::Overloaded,
+                &self.name,
+                "connection write buffer full",
+            ));
+            return;
+        }
+        conn.send_buf.extend_from_slice(&frame);
         conn.frames_sent += 1;
         self.frames_out.inc();
-        conn.pending.insert(token, Pending { deadline, reply: reply.clone() });
+        conn.pending.insert(token, Pending { reply: reply.clone() });
+        if let Some(d) = deadline {
+            st.deadlines.push(Reverse((d, self.id, token)));
+        }
+        if self.shared.readiness.is_some() {
+            st.dirty.push(self.id);
+        }
         drop(st);
-        self.shared.wake.notify_all();
+        self.shared.poke();
     }
 
     /// Traffic counters for this connection.
@@ -341,10 +482,16 @@ impl Drop for MuxConn {
     fn drop(&mut self) {
         let mut st = self.shared.state.lock().unwrap();
         if let Some(mut conn) = st.conns.remove(&self.id) {
+            if conn.registered {
+                if let Some(r) = &self.shared.readiness {
+                    r.deregister(conn_fd(&conn.stream));
+                }
+            }
             fail_conn(&mut conn, "connection handle dropped");
         }
+        crate::obs::global().gauge("net_mux_conns").set(st.conns.len() as u64);
         drop(st);
-        self.shared.wake.notify_all();
+        self.shared.poke();
     }
 }
 
@@ -489,17 +636,47 @@ fn deliver_frames(conn: &mut Conn, m: &MuxMetrics) {
     }
 }
 
-/// Refuse every pending request whose deadline has passed. The connection
-/// stays registered — the peer may still be healthy for later work; policy
-/// (revocation) belongs to the coordinator.
-fn expire_deadlines(conn: &mut Conn, now: Instant, m: &MuxMetrics) {
-    let expired: Vec<u64> = conn
-        .pending
-        .iter()
-        .filter(|(_, p)| p.deadline.is_some_and(|d| d <= now))
-        .map(|(&t, _)| t)
-        .collect();
-    for tag in expired {
+/// Pump one connection end to end: flush writes, drain reads, deliver
+/// complete frames, and apply a read failure only after delivery. Returns
+/// true if any byte moved.
+fn pump_conn(conn: &mut Conn, scratch: &mut [u8], m: &MuxMetrics) -> bool {
+    if conn.dead.is_some() {
+        return false;
+    }
+    let mut progress = pump_writes(conn, m);
+    if conn.dead.is_none() {
+        let (read_progress, failure) = pump_reads(conn, scratch, m);
+        progress |= read_progress;
+        // Complete frames first: an answer that arrived in the same
+        // pass as the EOF must reach its caller, not a refusal.
+        deliver_frames(conn, m);
+        if let Some(why) = failure {
+            if conn.dead.is_none() {
+                if conn.pending.is_empty() {
+                    conn.dead = Some(why);
+                } else {
+                    fail_conn(conn, &why);
+                }
+            }
+        }
+    }
+    progress
+}
+
+/// Pop every due entry off the global deadline heap and refuse the
+/// requests still pending under them. Entries whose tag already completed
+/// (or whose connection died/closed) are stale — skipped. Connections stay
+/// registered; policy (revocation) belongs to the coordinator.
+fn fire_deadlines(st: &mut State, now: Instant, m: &MuxMetrics) {
+    while let Some(Reverse((d, _, _))) = st.deadlines.peek() {
+        if *d > now {
+            break;
+        }
+        let Reverse((_, conn_id, tag)) = st.deadlines.pop().expect("peeked");
+        let Some(conn) = st.conns.get_mut(&conn_id) else { continue };
+        if conn.dead.is_some() {
+            continue;
+        }
         if let Some(p) = conn.pending.remove(&tag) {
             m.deadline_expiries.inc();
             let _ = p.reply.send(refused(
@@ -512,9 +689,80 @@ fn expire_deadlines(conn: &mut Conn, now: Instant, m: &MuxMetrics) {
     }
 }
 
-/// The readiness loop: pump every live connection, deliver completions,
-/// fire deadlines, and sleep only when nothing moved.
+/// Next due instant on the heap (may be stale — waking early is harmless).
+fn next_deadline(st: &State) -> Option<Instant> {
+    st.deadlines.peek().map(|Reverse((d, _, _))| *d)
+}
+
 fn drive(shared: &Shared) {
+    match &shared.readiness {
+        Some(r) => drive_epoll(shared, r),
+        None => drive_scan(shared),
+    }
+}
+
+/// The epoll driver: pump exactly the connections the kernel reports
+/// ready plus those with freshly queued submits, then block in
+/// `epoll_wait` until the next readiness event, wakeup, or deadline.
+/// Poll cost per pass is O(ready + dirty), not O(conns) — the property
+/// that lets one loop drive a 1024-connection fleet.
+fn drive_epoll(shared: &Shared, readiness: &Readiness) {
+    let mut scratch = vec![0u8; 64 * 1024];
+    let metrics = MuxMetrics::new();
+    let mut events: Vec<Event> = Vec::new();
+    let mut ready: Vec<ConnId> = Vec::new();
+    loop {
+        let mut st = shared.state.lock().unwrap();
+        if st.shutdown {
+            for conn in st.conns.values_mut() {
+                fail_conn(conn, "multiplexer shut down");
+            }
+            return;
+        }
+        let now = Instant::now();
+        let mut work = std::mem::take(&mut st.dirty);
+        work.extend(ready.drain(..));
+        work.sort_unstable();
+        work.dedup();
+        let mut progress = false;
+        for id in work {
+            let Some(conn) = st.conns.get_mut(&id) else { continue };
+            progress |= pump_conn(conn, &mut scratch, &metrics);
+            // Arm EPOLLOUT only while bytes survive a write attempt, so an
+            // idle-but-writable socket does not wake the loop forever.
+            let want = conn.dead.is_none() && conn.unflushed() > 0;
+            if conn.registered && want != conn.write_armed {
+                let fd = conn_fd(&conn.stream);
+                if readiness.set_write_interest(fd, id, want).is_ok() {
+                    conn.write_armed = want;
+                }
+            }
+            if conn.dead.is_some() && conn.registered {
+                readiness.deregister(conn_fd(&conn.stream));
+                conn.registered = false;
+            }
+        }
+        fire_deadlines(&mut st, now, &metrics);
+        if progress {
+            metrics.poll_us.observe_micros(now.elapsed());
+        }
+        let timeout = next_deadline(&st)
+            .map(|d| d.saturating_duration_since(now).max(Duration::from_millis(1)));
+        // Release the lock before blocking: submitters must never queue
+        // behind a driver that is merely waiting for readiness.
+        drop(st);
+        let t_wait = Instant::now();
+        readiness.wait(&mut events, timeout);
+        metrics.epoll_wait_us.observe_micros(t_wait.elapsed());
+        ready.extend(events.iter().filter(|e| e.token != WAKE_TOKEN).map(|e| e.token));
+    }
+}
+
+/// The portable scan driver: pump every live connection each pass,
+/// condvar-sleep when nothing moved. O(conns) per tick — the fallback
+/// spine, and the reference the epoll backend is equivalence-tested
+/// against.
+fn drive_scan(shared: &Shared) {
     let mut scratch = vec![0u8; 64 * 1024];
     let metrics = MuxMetrics::new();
     loop {
@@ -528,38 +776,13 @@ fn drive(shared: &Shared) {
         let now = Instant::now();
         let mut progress = false;
         let mut outstanding = false;
-        let mut next_deadline: Option<Instant> = None;
         for conn in st.conns.values_mut() {
-            if conn.dead.is_some() {
-                continue;
-            }
-            progress |= pump_writes(conn, &metrics);
+            progress |= pump_conn(conn, &mut scratch, &metrics);
             if conn.dead.is_none() {
-                let (read_progress, failure) = pump_reads(conn, &mut scratch, &metrics);
-                progress |= read_progress;
-                // Complete frames first: an answer that arrived in the same
-                // pass as the EOF must reach its caller, not a refusal.
-                deliver_frames(conn, &metrics);
-                if let Some(why) = failure {
-                    if conn.dead.is_none() {
-                        if conn.pending.is_empty() {
-                            conn.dead = Some(why);
-                        } else {
-                            fail_conn(conn, &why);
-                        }
-                    }
-                }
-            }
-            if conn.dead.is_none() {
-                expire_deadlines(conn, now, &metrics);
-                outstanding |= !conn.pending.is_empty() || conn.send_pos < conn.send_buf.len();
-                for p in conn.pending.values() {
-                    if let Some(d) = p.deadline {
-                        next_deadline = Some(next_deadline.map_or(d, |nd: Instant| nd.min(d)));
-                    }
-                }
+                outstanding |= !conn.pending.is_empty() || conn.unflushed() > 0;
             }
         }
+        fire_deadlines(&mut st, now, &metrics);
         if progress {
             // Time only productive passes: idle polls at the readiness
             // cadence would swamp the histogram with near-zero samples.
@@ -569,7 +792,7 @@ fn drive(shared: &Shared) {
             if outstanding {
                 // Answers or deadlines are due: poll at the readiness cadence.
                 let mut timeout = IDLE_POLL;
-                if let Some(d) = next_deadline {
+                if let Some(d) = next_deadline(&st) {
                     timeout = timeout
                         .min(d.saturating_duration_since(now))
                         .max(Duration::from_micros(100));
@@ -599,6 +822,16 @@ mod tests {
     use crate::net::tcp::spawn_server;
     use std::net::TcpListener;
 
+    /// Both readiness backends, so every scenario is equivalence-checked
+    /// (epoll is skipped only where the kernel lacks it).
+    fn backends() -> Vec<BackendKind> {
+        if Readiness::available() {
+            vec![BackendKind::Scan, BackendKind::Epoll]
+        } else {
+            vec![BackendKind::Scan]
+        }
+    }
+
     /// Answers every request with a fixed commit (Shutdown with Bye).
     struct Fixed(Hash);
 
@@ -621,170 +854,233 @@ mod tests {
 
     #[test]
     fn many_requests_in_flight_complete_by_tag() {
-        let listener = ephemeral();
-        let addr = listener.local_addr().unwrap();
-        let h = Hash::of_bytes(b"muxed");
-        let server = spawn_server(listener, Fixed(h), Some(1));
+        for kind in backends() {
+            let listener = ephemeral();
+            let addr = listener.local_addr().unwrap();
+            let h = Hash::of_bytes(b"muxed");
+            let server = spawn_server(listener, Fixed(h), Some(1));
 
-        let mux = Mux::new();
-        let conn = mux.connect("fixed", addr).unwrap();
-        let (tx, rx) = channel();
-        // Submit a burst before reading any completion: all in flight at
-        // once on one connection, matched back by tag.
-        for token in 0..8u64 {
-            conn.submit(token, &Request::FinalCommit, None, &tx);
-        }
-        let mut seen = Vec::new();
-        for _ in 0..8 {
-            let c = rx.recv_timeout(Duration::from_secs(10)).expect("completion");
-            assert_eq!(c.kind, CompletionKind::Answered);
-            match c.resp {
-                Response::Commit(got) => assert_eq!(got, h),
-                other => panic!("{other:?}"),
+            let mux = Mux::with_backend(kind);
+            assert_eq!(mux.backend(), kind);
+            let conn = mux.connect("fixed", addr).unwrap();
+            let (tx, rx) = channel();
+            // Submit a burst before reading any completion: all in flight at
+            // once on one connection, matched back by tag.
+            for token in 0..8u64 {
+                conn.submit(token, &Request::FinalCommit, None, &tx);
             }
-            seen.push(c.token);
+            let mut seen = Vec::new();
+            for _ in 0..8 {
+                let c = rx.recv_timeout(Duration::from_secs(10)).expect("completion");
+                assert_eq!(c.kind, CompletionKind::Answered);
+                match c.resp {
+                    Response::Commit(got) => assert_eq!(got, h),
+                    other => panic!("{other:?}"),
+                }
+                seen.push(c.token);
+            }
+            seen.sort();
+            assert_eq!(seen, (0..8).collect::<Vec<u64>>());
+
+            // Raw traffic identity: payloads + 12-byte header per frame.
+            let stats = conn.stats();
+            assert_eq!(stats.frames_sent, 8);
+            assert_eq!(stats.frames_received, 8);
+            let req_payload = 8 * Request::FinalCommit.wire_size() as u64;
+            let resp_payload = 8 * Response::Commit(h).wire_size() as u64;
+            assert!(accounting_identity(&stats, req_payload, resp_payload));
+
+            // Clean shutdown via the blocking adapter.
+            let mut conn = conn;
+            assert!(matches!(conn.call(Request::Shutdown), Response::Bye));
+            server.join().expect("server thread");
         }
-        seen.sort();
-        assert_eq!(seen, (0..8).collect::<Vec<u64>>());
-
-        // Raw traffic identity: payloads + 12-byte header per frame.
-        let stats = conn.stats();
-        assert_eq!(stats.frames_sent, 8);
-        assert_eq!(stats.frames_received, 8);
-        let req_payload = 8 * Request::FinalCommit.wire_size() as u64;
-        let resp_payload = 8 * Response::Commit(h).wire_size() as u64;
-        assert!(accounting_identity(&stats, req_payload, resp_payload));
-
-        // Clean shutdown via the blocking adapter.
-        let mut conn = conn;
-        assert!(matches!(conn.call(Request::Shutdown), Response::Bye));
-        server.join().expect("server thread");
     }
 
     #[test]
     fn deadline_expires_to_refuse_without_blocking_any_thread() {
-        // A listener that accepts and then never answers.
-        let listener = ephemeral();
-        let addr = listener.local_addr().unwrap();
-        let hold = std::thread::spawn(move || {
-            let (stream, _) = listener.accept().expect("accept");
-            // Hold the socket open past the deadline under test.
-            std::thread::sleep(Duration::from_secs(2));
-            drop(stream);
-        });
+        for kind in backends() {
+            // A listener that accepts and then never answers.
+            let listener = ephemeral();
+            let addr = listener.local_addr().unwrap();
+            let hold = std::thread::spawn(move || {
+                let (stream, _) = listener.accept().expect("accept");
+                // Hold the socket open past the deadline under test.
+                std::thread::sleep(Duration::from_secs(2));
+                drop(stream);
+            });
 
-        let mux = Mux::new();
-        let conn = mux.connect("silent", addr).unwrap();
-        let (tx, rx) = channel();
-        let t0 = Instant::now();
-        conn.submit(
-            1,
-            &Request::FinalCommit,
-            Some(Instant::now() + Duration::from_millis(100)),
-            &tx,
-        );
-        let c = rx.recv_timeout(Duration::from_secs(5)).expect("deadline completion");
-        assert_eq!(c.kind, CompletionKind::DeadlineExpired);
-        assert!(matches!(c.resp, Response::Refuse(_)));
-        assert!(c.kind.unresponsive());
-        assert!(
-            t0.elapsed() < Duration::from_secs(3),
-            "deadline must fire promptly, took {:?}",
-            t0.elapsed()
-        );
-        drop(conn);
-        drop(mux); // must not hang on the silent peer
-        let _ = hold.join();
+            let mux = Mux::with_backend(kind);
+            let conn = mux.connect("silent", addr).unwrap();
+            let (tx, rx) = channel();
+            let t0 = Instant::now();
+            conn.submit(
+                1,
+                &Request::FinalCommit,
+                Some(Instant::now() + Duration::from_millis(100)),
+                &tx,
+            );
+            let c = rx.recv_timeout(Duration::from_secs(5)).expect("deadline completion");
+            assert_eq!(c.kind, CompletionKind::DeadlineExpired);
+            assert!(matches!(c.resp, Response::Refuse(_)));
+            assert!(c.kind.unresponsive());
+            assert!(
+                t0.elapsed() < Duration::from_secs(3),
+                "deadline must fire promptly, took {:?}",
+                t0.elapsed()
+            );
+            drop(conn);
+            drop(mux); // must not hang on the silent peer
+            let _ = hold.join();
+        }
     }
 
     #[test]
     fn transport_death_fails_all_pending_and_later_submits() {
-        // Peer accepts, reads nothing, and closes immediately.
-        let listener = ephemeral();
-        let addr = listener.local_addr().unwrap();
-        let closer = std::thread::spawn(move || {
-            let (stream, _) = listener.accept().expect("accept");
-            drop(stream);
-        });
+        for kind in backends() {
+            // Peer accepts, reads nothing, and closes immediately.
+            let listener = ephemeral();
+            let addr = listener.local_addr().unwrap();
+            let closer = std::thread::spawn(move || {
+                let (stream, _) = listener.accept().expect("accept");
+                drop(stream);
+            });
 
-        let mux = Mux::new();
-        let conn = mux.connect("flaky", addr).unwrap();
-        closer.join().unwrap();
-        let (tx, rx) = channel();
-        conn.submit(1, &Request::FinalCommit, None, &tx);
-        conn.submit(2, &Request::FinalCommit, None, &tx);
-        let mut kinds = Vec::new();
-        for _ in 0..2 {
-            let c = rx.recv_timeout(Duration::from_secs(10)).expect("failure completion");
-            assert!(matches!(c.resp, Response::Refuse(_)));
-            kinds.push(c.kind);
+            let mux = Mux::with_backend(kind);
+            let conn = mux.connect("flaky", addr).unwrap();
+            closer.join().unwrap();
+            let (tx, rx) = channel();
+            conn.submit(1, &Request::FinalCommit, None, &tx);
+            conn.submit(2, &Request::FinalCommit, None, &tx);
+            let mut kinds = Vec::new();
+            for _ in 0..2 {
+                let c = rx.recv_timeout(Duration::from_secs(10)).expect("failure completion");
+                assert!(matches!(c.resp, Response::Refuse(_)));
+                kinds.push(c.kind);
+            }
+            assert!(kinds.iter().all(|k| k.unresponsive()));
+            // The connection is now dead: new submits refuse instantly.
+            conn.submit(3, &Request::FinalCommit, None, &tx);
+            let c = rx.recv_timeout(Duration::from_secs(2)).expect("instant refuse");
+            assert_eq!(c.kind, CompletionKind::Transport);
         }
-        assert!(kinds.iter().all(|k| k.unresponsive()));
-        // The connection is now dead: new submits refuse instantly.
-        conn.submit(3, &Request::FinalCommit, None, &tx);
-        let c = rx.recv_timeout(Duration::from_secs(2)).expect("instant refuse");
-        assert_eq!(c.kind, CompletionKind::Transport);
     }
 
     #[test]
     fn blocking_endpoint_adapter_latches_fault_on_deadline() {
-        let listener = ephemeral();
-        let addr = listener.local_addr().unwrap();
-        let hold = std::thread::spawn(move || {
-            let (stream, _) = listener.accept().expect("accept");
-            std::thread::sleep(Duration::from_secs(2));
-            drop(stream);
-        });
+        for kind in backends() {
+            let listener = ephemeral();
+            let addr = listener.local_addr().unwrap();
+            let hold = std::thread::spawn(move || {
+                let (stream, _) = listener.accept().expect("accept");
+                std::thread::sleep(Duration::from_secs(2));
+                drop(stream);
+            });
 
-        let mux = Mux::new();
-        let mut conn = mux
-            .connect("silent", addr)
-            .unwrap()
-            .with_call_deadline(Duration::from_millis(100));
-        assert!(!conn.faulted());
-        let resp = conn.call(Request::FinalCommit);
-        assert!(matches!(resp, Response::Refuse(_)));
-        assert!(conn.faulted(), "unanswered call latches the fault flag");
-        conn.reset_fault();
-        assert!(!conn.faulted());
-        drop(conn);
-        drop(mux);
-        let _ = hold.join();
+            let mux = Mux::with_backend(kind);
+            let mut conn = mux
+                .connect("silent", addr)
+                .unwrap()
+                .with_call_deadline(Duration::from_millis(100));
+            assert!(!conn.faulted());
+            let resp = conn.call(Request::FinalCommit);
+            assert!(matches!(resp, Response::Refuse(_)));
+            assert!(conn.faulted(), "unanswered call latches the fault flag");
+            conn.reset_fault();
+            assert!(!conn.faulted());
+            drop(conn);
+            drop(mux);
+            let _ = hold.join();
+        }
     }
 
     #[test]
     fn two_connections_multiplex_through_one_driver() {
-        let la = ephemeral();
-        let lb = ephemeral();
-        let (aa, ab) = (la.local_addr().unwrap(), lb.local_addr().unwrap());
-        let ha = Hash::of_bytes(b"a");
-        let hb = Hash::of_bytes(b"b");
-        let sa = spawn_server(la, Fixed(ha), Some(1));
-        let sb = spawn_server(lb, Fixed(hb), Some(1));
+        for kind in backends() {
+            let la = ephemeral();
+            let lb = ephemeral();
+            let (aa, ab) = (la.local_addr().unwrap(), lb.local_addr().unwrap());
+            let ha = Hash::of_bytes(b"a");
+            let hb = Hash::of_bytes(b"b");
+            let sa = spawn_server(la, Fixed(ha), Some(1));
+            let sb = spawn_server(lb, Fixed(hb), Some(1));
 
-        let mux = Mux::new();
-        let ca = mux.connect("a", aa).unwrap();
-        let cb = mux.connect("b", ab).unwrap();
-        let (tx, rx) = channel();
-        for token in 0..4u64 {
-            ca.submit(token, &Request::FinalCommit, None, &tx);
-            cb.submit(token, &Request::FinalCommit, None, &tx);
-        }
-        let mut got_a = 0;
-        let mut got_b = 0;
-        for _ in 0..8 {
-            let c = rx.recv_timeout(Duration::from_secs(10)).expect("completion");
-            match c.resp {
-                Response::Commit(h) if h == ha => got_a += 1,
-                Response::Commit(h) if h == hb => got_b += 1,
-                other => panic!("{other:?}"),
+            let mux = Mux::with_backend(kind);
+            let ca = mux.connect("a", aa).unwrap();
+            let cb = mux.connect("b", ab).unwrap();
+            let (tx, rx) = channel();
+            for token in 0..4u64 {
+                ca.submit(token, &Request::FinalCommit, None, &tx);
+                cb.submit(token, &Request::FinalCommit, None, &tx);
             }
+            let mut got_a = 0;
+            let mut got_b = 0;
+            for _ in 0..8 {
+                let c = rx.recv_timeout(Duration::from_secs(10)).expect("completion");
+                match c.resp {
+                    Response::Commit(h) if h == ha => got_a += 1,
+                    Response::Commit(h) if h == hb => got_b += 1,
+                    other => panic!("{other:?}"),
+                }
+            }
+            assert_eq!((got_a, got_b), (4, 4));
+            let (mut ca, mut cb) = (ca, cb);
+            assert!(matches!(ca.call(Request::Shutdown), Response::Bye));
+            assert!(matches!(cb.call(Request::Shutdown), Response::Bye));
+            sa.join().unwrap();
+            sb.join().unwrap();
         }
-        assert_eq!((got_a, got_b), (4, 4));
-        let (mut ca, mut cb) = (ca, cb);
-        assert!(matches!(ca.call(Request::Shutdown), Response::Bye));
-        assert!(matches!(cb.call(Request::Shutdown), Response::Bye));
-        sa.join().unwrap();
-        sb.join().unwrap();
+    }
+
+    #[test]
+    fn write_cap_overflow_completes_as_overloaded_not_transport() {
+        for kind in backends() {
+            // Peer accepts and never reads: the kernel buffer fills, then
+            // the mux write buffer fills, then submits must bounce as
+            // Overloaded while the connection itself stays alive.
+            let listener = ephemeral();
+            let addr = listener.local_addr().unwrap();
+            let (done_tx, done_rx) = channel::<()>();
+            let hold = std::thread::spawn(move || {
+                let (stream, _) = listener.accept().expect("accept");
+                let _ = done_rx.recv_timeout(Duration::from_secs(30));
+                drop(stream);
+            });
+
+            let mux = Mux::with_backend(kind);
+            mux.set_write_cap(256 * 1024);
+            let conn = mux.connect("slow", addr).unwrap();
+            let (tx, rx) = channel();
+            // ~8 MiB of checkpoint-chunk frames: far beyond cap + any
+            // kernel socket buffer, so overflow must occur.
+            let spec = crate::train::JobSpec::quick(crate::model::Preset::Mlp, 4);
+            let req = Request::SeedCheckpoint {
+                spec,
+                start: 2,
+                root: Hash::of_bytes(b"cap"),
+                total_chunks: 64,
+                chunk: 0,
+                payload: vec![7u8; 128 * 1024],
+            };
+            for token in 0..64u64 {
+                conn.submit(token, &req, None, &tx);
+            }
+            let mut overloaded = 0;
+            let mut transport = 0;
+            while let Ok(c) = rx.recv_timeout(Duration::from_millis(500)) {
+                match c.kind {
+                    CompletionKind::Overloaded => overloaded += 1,
+                    CompletionKind::Transport => transport += 1,
+                    k => panic!("unexpected completion kind {k:?}"),
+                }
+            }
+            assert!(overloaded > 0, "cap overflow must surface as Overloaded");
+            assert_eq!(transport, 0, "backpressure must not kill the connection");
+            assert!(CompletionKind::Overloaded.unresponsive());
+            let _ = done_tx.send(());
+            drop(conn);
+            drop(mux);
+            let _ = hold.join();
+        }
     }
 }

@@ -182,6 +182,16 @@ pub fn serve_connection<E: Endpoint>(
     let mut stream = CountingStream::new(stream);
     let mut stats = ServeStats::default();
     let served = crate::obs::global().counter("net_tcp_requests_served");
+    // Live-connection gauge, balanced on every exit path (error or EOF).
+    struct ConnGuard(crate::obs::Gauge);
+    impl Drop for ConnGuard {
+        fn drop(&mut self) {
+            self.0.sub(1);
+        }
+    }
+    let conns = crate::obs::global().gauge("net_tcp_conns");
+    conns.add(1);
+    let _guard = ConnGuard(conns);
     loop {
         let (tag, frame) = match read_frame(&mut stream)? {
             Some(f) => f,

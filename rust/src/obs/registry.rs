@@ -68,6 +68,22 @@ impl Gauge {
     pub fn get(&self) -> u64 {
         self.cell.load(Ordering::Relaxed)
     }
+
+    /// Relaxed increment, for gauges tracking live occupancy from many
+    /// threads (e.g. `net_tcp_conns`).
+    pub fn add(&self, delta: u64) {
+        self.cell.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement: an unbalanced `sub` clamps at zero instead
+    /// of wrapping.
+    pub fn sub(&self, delta: u64) {
+        let _ = self
+            .cell
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(delta))
+            });
+    }
 }
 
 /// Shared storage of one histogram: `bounds.len() + 1` buckets (the last

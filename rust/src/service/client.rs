@@ -529,6 +529,9 @@ impl Delegation {
             revoked: self.pool.revoked(),
             stakes: lr.stakes,
             threads: 1 + self.cfg.resolvers.max(1) + lr.actor_threads,
+            overloads: lr.overloads,
+            ckpt_cache_hits: lr.ckpt_cache_hits,
+            ckpt_cache_misses: lr.ckpt_cache_misses,
         }
     }
 }

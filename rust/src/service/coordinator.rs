@@ -67,6 +67,7 @@ use super::audit::{AuditSampler, StakeEntry, StakeLedger};
 use super::client::{Delegation, JobCell, JobRequest};
 use super::journal::{Journal, JournalEntry, RecoveredStake};
 use super::pool::{PooledWorker, WorkerPool};
+use super::transfer::{CheckpointCache, ChunkManifest, ChunkStream, Pop, SeedPayload};
 
 /// Tuning knobs for the event-driven service core.
 #[derive(Debug, Clone, Copy)]
@@ -111,6 +112,21 @@ pub struct ServiceConfig {
     /// slashed on conviction; a slashed-out worker loses optimistic
     /// eligibility.
     pub worker_stake: u64,
+    /// Upper bound on the encoded size of any state the coordinator will
+    /// relay between segments. A winning group whose certified manifest
+    /// advertises more than this is treated as refusing state transfer:
+    /// the successor falls back to an unseeded prefix run and the refusal
+    /// is visible in the segment outcome (no silent truncation).
+    pub max_checkpoint_bytes: u64,
+    /// Byte budget of the content-addressed checkpoint cache keyed by
+    /// certified state root. Repeat seeds for the same `(root, boundary)`
+    /// are served from memory instead of re-fetched; `0` disables caching.
+    pub ckpt_cache_bytes: u64,
+    /// Streaming seed window: how many verified chunks may sit between
+    /// the fetch producer and the slowest consumer worker before the
+    /// pipeline applies backpressure. Peak coordinator memory for a
+    /// relay is `~window × 1 MiB` instead of the whole checkpoint.
+    pub stream_window: usize,
 }
 
 impl ServiceConfig {
@@ -127,6 +143,9 @@ impl ServiceConfig {
             max_strikes: 3,
             audit_seed: 0,
             worker_stake: 1_000,
+            max_checkpoint_bytes: 1 << 30,
+            ckpt_cache_bytes: 64 << 20,
+            stream_window: 4,
         }
     }
 }
@@ -308,6 +327,15 @@ pub struct ServiceReport {
     /// Final stake ledger: one entry per worker that ever took an
     /// optimistic lease (empty when no job used the audit tier).
     pub stakes: Vec<StakeEntry>,
+    /// Dispatches the mux refused because a connection's bounded write
+    /// buffer was full (slow-consumer stalls surfaced instead of letting
+    /// one laggard worker grow coordinator memory without bound).
+    pub overloads: u64,
+    /// Seeds served from the content-addressed checkpoint cache instead
+    /// of re-fetched from a winning group.
+    pub ckpt_cache_hits: u64,
+    /// Seed lookups that missed the checkpoint cache and paid a fetch.
+    pub ckpt_cache_misses: u64,
 }
 
 impl ServiceReport {
@@ -454,7 +482,8 @@ impl ServiceReport {
              \"requeued\":{},\"revoked\":{},\"threads\":{},\"steps_trained\":{},\
              \"seeded_segments\":{},\"transfer_bytes\":{},\"uploads_rejected\":{},\
              \"audit_sampled\":{},\"audit_passed\":{},\"audit_escalated\":{},\
-             \"audit_steps\":{},\"stake_slashed\":{}",
+             \"audit_steps\":{},\"stake_slashed\":{},\"overloads\":{},\
+             \"ckpt_cache_hits\":{},\"ckpt_cache_misses\":{}",
             self.outcomes.len(),
             resolved,
             self.total_cancelled(),
@@ -479,6 +508,9 @@ impl ServiceReport {
             self.total_audit_escalated(),
             self.total_audit_steps(),
             self.total_slashed(),
+            self.overloads,
+            self.ckpt_cache_hits,
+            self.ckpt_cache_misses,
         );
         s.push('}');
         s
@@ -520,19 +552,91 @@ pub(crate) struct LoopReport {
     pub(crate) outcomes: Vec<JobOutcome>,
     pub(crate) actor_threads: usize,
     pub(crate) stakes: Vec<StakeEntry>,
+    pub(crate) overloads: u64,
+    pub(crate) ckpt_cache_hits: u64,
+    pub(crate) ckpt_cache_misses: u64,
 }
 
-/// A checkpoint fetched from a segment winner and verified against the
-/// unanimous state root — ready to seed the next segment's workers
-/// (shared via `Arc` so re-queues and multi-worker dispatches don't copy
-/// the state).
-pub(crate) struct SeedPayload {
-    /// Boundary the state sits at (the previous segment's end).
-    start: u64,
-    /// Merkle root over the state's leaves, verified before queueing.
-    root: Hash,
-    /// Canonical serialization ([`crate::train::checkpoint::encode_state`]).
-    bytes: Vec<u8>,
+/// Where a segment's seed state comes from.
+///
+/// `Buffered` is the legacy shape (whole verified checkpoint in memory,
+/// shared by `Arc`); `Stream` is the pipelined shape — the successor's
+/// dispatch consumes verified chunks from a [`ChunkStream`] as the
+/// resolver-side producer fetches them, so the coordinator never holds
+/// more than the in-flight window of a large state.
+#[derive(Clone)]
+enum SeedSource {
+    /// Prefix re-training: no state relayed.
+    None,
+    /// Whole checkpoint already in memory (cache hit, audit park, or a
+    /// commitment-bound optimistic fetch).
+    Buffered(Arc<SeedPayload>),
+    /// Chunks arrive from the producer while this segment leases and
+    /// dispatches; backpressure starts once the dispatch attaches.
+    Stream(Arc<ChunkStream>),
+}
+
+impl SeedSource {
+    fn is_none(&self) -> bool {
+        matches!(self, SeedSource::None)
+    }
+
+    /// Boundary the seed starts the lease at (`None` = prefix run).
+    fn seeded_from(&self) -> Option<u64> {
+        match self {
+            SeedSource::None => None,
+            SeedSource::Buffered(p) => Some(p.start),
+            SeedSource::Stream(s) => Some(s.manifest().step),
+        }
+    }
+
+    /// Collapse to the buffered payload, aborting (and discarding) a
+    /// stream — used on paths that can only make use of an in-memory
+    /// seed (audit parking, fallback re-queues).
+    fn into_buffered(self) -> Option<Arc<SeedPayload>> {
+        match self {
+            SeedSource::None => None,
+            SeedSource::Buffered(p) => Some(p),
+            SeedSource::Stream(s) => {
+                s.abort();
+                None
+            }
+        }
+    }
+
+    /// Tell a producer to stop without consuming the source.
+    fn abort_if_stream(&self) {
+        if let SeedSource::Stream(s) = self {
+            s.abort();
+        }
+    }
+
+    /// Seed for a re-queued lease: a buffered seed is still good (only
+    /// the lease failed); a stream is single-shot — abort it and fall
+    /// back to prefix re-training.
+    fn for_requeue(self) -> SeedSource {
+        match self {
+            SeedSource::Stream(s) => {
+                s.abort();
+                SeedSource::None
+            }
+            other => other,
+        }
+    }
+}
+
+/// Per-segment state of a streaming seed dispatch: the event loop pumps
+/// verified chunks out of `stream` to every live slot, keeping at most
+/// `window` chunks ahead of the slowest slot's acknowledgements.
+struct StreamPump {
+    stream: Arc<ChunkStream>,
+    /// Next chunk index to dispatch (same to every slot).
+    next_chunk: u64,
+    /// Per-slot count of acknowledged chunks.
+    acked: Vec<u64>,
+    /// Dispatch deadline shared by every chunk token of this lease.
+    deadline: Instant,
+    window: u64,
 }
 
 /// What a queued (or active) segment is for.
@@ -555,7 +659,7 @@ enum AuditState {
         outcome: Box<SegmentOutcome>,
         /// Verified end-state fetched alongside the optimistic attempt —
         /// released to seed the successor only once the audit passes.
-        seed_next: Option<SeedPayload>,
+        seed_next: Option<Arc<SeedPayload>>,
         /// The staked worker whose commitment is under audit.
         accused: String,
         /// Its committed hash for this boundary.
@@ -576,10 +680,11 @@ struct QueuedSeg {
     seg_idx: usize,
     /// Prefix spec: `steps` is this segment's end boundary.
     spec: JobSpec,
-    /// Verified checkpoint to seed the lease with (`None` = prefix
-    /// re-training). Kept across re-queues caused by worker failure;
-    /// dropped when a seeded lease *disagreed* (fallback to prefix).
-    seed: Option<Arc<SeedPayload>>,
+    /// Seed state for the lease (`None` = prefix re-training). A buffered
+    /// seed is kept across re-queues caused by worker failure; a stream
+    /// is single-shot (its producer aborts on failure) and a seeded lease
+    /// that *disagreed* falls back to prefix.
+    seed: SeedSource,
     requeues: u32,
     revoked: usize,
     bytes: u64,
@@ -623,7 +728,7 @@ enum SlotState {
 struct ActiveSeg {
     kind: SegKind,
     spec: JobSpec,
-    seed: Option<Arc<SeedPayload>>,
+    seed: SeedSource,
     t0: Instant,
     requeues: u32,
     revoked: usize,
@@ -634,6 +739,8 @@ struct ActiveSeg {
     tokens: Vec<u64>,
     outstanding: usize,
     leased_seq: u64,
+    /// Present while a streaming seed is still being pumped to the slots.
+    pump: Option<StreamPump>,
 }
 
 /// A settled audit dispatch, bundled for [`EventLoop::finish_audit`]
@@ -645,7 +752,7 @@ struct AuditReturn {
     accused: String,
     expect: Hash,
     spec: JobSpec,
-    seed: Option<Arc<SeedPayload>>,
+    seed: SeedSource,
     t0: Instant,
     requeues: u32,
     revoked: usize,
@@ -659,10 +766,11 @@ struct AuditReturn {
 /// What a completion token addresses.
 enum Target {
     Seg { job_id: u64, seg_idx: usize, slot: usize },
-    /// Intermediate seed-chunk acknowledgement: accounted, never decides
+    /// Intermediate seed-chunk acknowledgement: accounted (and, for a
+    /// streaming seed, advances the slot's pump window), never decides
     /// the slot (the final chunk's token does; a stalled worker misses
     /// that token's deadline).
-    Ack { job_id: u64, seg_idx: usize },
+    Ack { job_id: u64, seg_idx: usize, slot: usize },
     /// Health-check ping of an idle (live) worker.
     Probe,
     /// Parole ping of a suspended worker serving its backoff.
@@ -712,23 +820,77 @@ pub(crate) struct ResolveTask {
     /// The delegation's registry: resolvers trace fetch/verify span
     /// events through it (recording is a relaxed load when disabled).
     registry: Registry,
+    /// Content-addressed checkpoint cache shared with the event loop.
+    cache: Arc<CheckpointCache>,
+    /// [`ServiceConfig::stream_window`] for any stream this task opens.
+    stream_window: usize,
+    /// [`ServiceConfig::max_checkpoint_bytes`] decode/relay clamp.
+    max_checkpoint_bytes: u64,
 }
 
 pub(crate) struct Resolved {
     job_id: u64,
     outcome: SegmentOutcome,
     workers: Vec<PooledWorker>,
-    /// Verified checkpoint for the next segment (`None` when no fetch was
-    /// wanted, or every upload failed verification, or the winners
-    /// disagreed on the state root — the next segment then falls back to
-    /// prefix re-training).
-    seed: Option<SeedPayload>,
+    /// Seed for the next segment: a [`SeedSource::Stream`] when a
+    /// certified manifest opened a pipelined fetch (the stream-source
+    /// workers stay with the producer and return via [`StreamDone`]),
+    /// `Buffered` on a cache hit or commitment-bound fetch, `None` when
+    /// no fetch was wanted or certification failed (the next segment
+    /// then falls back to prefix re-training).
+    seed: SeedSource,
     /// Indices into `workers` whose uploads failed Merkle verification —
     /// the event loop revokes their leases.
     rejected: Vec<usize>,
     /// Optimistic segment: `(worker, committed hash)` — the event loop
     /// records it and decides whether to sample a replay audit.
     commitment: Option<(String, Hash)>,
+}
+
+/// Producer half of a streaming state transfer, run on the resolver
+/// thread after [`Resolved`] is sent: fetch chunks from the retained
+/// winning-group sources, verify each against the certified manifest,
+/// and push them into the stream the successor's dispatch consumes.
+struct Production {
+    job_id: u64,
+    seg_idx: usize,
+    /// Boundary being fetched (`manifest.step`, for cache insertion).
+    end: u64,
+    /// Settle instant of the producing segment — the parked outcome's
+    /// wall clock keeps running until the transfer completes.
+    t0: Instant,
+    stream: Arc<ChunkStream>,
+    /// Winning-group members that answered the manifest probe; they stay
+    /// leased to the producer and travel back in [`StreamDone`].
+    workers: Vec<PooledWorker>,
+    cache: Arc<CheckpointCache>,
+    /// Assemble the full state on the side for cache insertion (only
+    /// when it fits the cache budget).
+    assemble: bool,
+}
+
+/// Producer completion: releases the retained source workers and the
+/// parked [`SegmentOutcome`] of the segment that streamed its state.
+pub(crate) struct StreamDone {
+    job_id: u64,
+    seg_idx: usize,
+    workers: Vec<PooledWorker>,
+    /// Indices into `workers` whose chunks failed verification against
+    /// the certified manifest — revoked like rejected uploads.
+    rejected: Vec<usize>,
+    bytes: u64,
+    requests: u64,
+    transfer_bytes: u64,
+    /// High-water mark of bytes buffered in the stream window.
+    peak: u64,
+    /// Producing segment's total wall (settle + transfer overlap).
+    wall: Duration,
+}
+
+/// Resolver → event loop messages (one channel carries both).
+pub(crate) enum ResolverMsg {
+    Resolved(Resolved),
+    StreamDone(StreamDone),
 }
 
 /// Pull chunks `1..total` of the checkpoint at `step` from one worker,
@@ -804,12 +966,17 @@ fn fetch_verified_state(
 }
 
 /// Run the tournament (or accept a seeded segment's agreed verdict) for
-/// one segment on a resolver thread, then optionally fetch + verify its
-/// end checkpoint for the next segment. The workers' blocking [`Endpoint`]
-/// adapters carry the dispute and transfer traffic; unanswered requests
-/// surface as `Refuse` (convicting the silent worker) and latch the
-/// worker's fault flag for discipline by the event loop.
-fn resolve(task: ResolveTask) -> Resolved {
+/// one segment on a resolver thread, then optionally arrange its end
+/// state for the next segment: a cache hit seeds buffered, a certified
+/// manifest opens a [`ChunkStream`] whose producer ([`run_producer`],
+/// returned as the second element) fetches and verifies chunk-by-chunk,
+/// and only the optimistic commitment path still buffers the whole
+/// checkpoint (it must bind to the worker's explicit `CommitRoot`). The
+/// workers' blocking [`Endpoint`] adapters carry the dispute and
+/// transfer traffic; unanswered requests surface as `Refuse` (convicting
+/// the silent worker) and latch the worker's fault flag for discipline
+/// by the event loop.
+fn resolve(task: ResolveTask) -> (Resolved, Option<Production>) {
     let ResolveTask {
         job_id,
         seg_idx,
@@ -827,6 +994,9 @@ fn resolve(task: ResolveTask) -> Resolved {
         leased_seq,
         mut workers,
         registry,
+        cache,
+        stream_window,
+        max_checkpoint_bytes,
     } = task;
     let names: Vec<String> = workers.iter().map(|w| w.name.clone()).collect();
     let mut metered: Vec<Metered<&mut PooledWorker>> =
@@ -853,9 +1023,10 @@ fn resolve(task: ResolveTask) -> Resolved {
         }
     };
 
-    let mut seed = None;
+    let mut seed = SeedSource::None;
     let mut rejected = Vec::new();
     let mut transfer_bytes = 0u64;
+    let mut opened: Option<(Arc<ChunkStream>, Vec<usize>, bool)> = None;
     if want_state {
         registry.spans().trace(job_id, Some(seg_idx as u64), Stage::Fetch, None);
         // The winning group: everyone whose (cached) final claim equals
@@ -870,28 +1041,117 @@ fn resolve(task: ResolveTask) -> Resolved {
         }
         let before: u64 =
             metered.iter().map(|m| m.bytes_sent() + m.bytes_received()).sum();
-        let (s, r) = fetch_verified_state(&mut metered, &group, end);
-        let after: u64 = metered.iter().map(|m| m.bytes_sent() + m.bytes_received()).sum();
-        transfer_bytes = after - before;
-        if s.is_some() {
-            registry.spans().trace(job_id, Some(seg_idx as u64), Stage::Verify, None);
-        }
-        seed = s;
-        rejected = r;
-        if let (Some(payload), Some(root)) = (&seed, &bound_root) {
-            if *root != Some(payload.root) {
-                // The worker's explicit commitment refuses, or contradicts
-                // the root its served checkpoint verifies against: don't
-                // seed the successor from it. The training claim itself is
-                // still on the record and still replay-auditable.
-                seed = None;
+        if bound_root.is_some() {
+            // Optimistic commitment mode: the fetched state must bind to
+            // the worker's explicit `CommitRoot` answer before anything
+            // downstream sees it, so this path still buffers the whole
+            // checkpoint. The cache short-circuits a repeat fetch of an
+            // already-certified root.
+            let mut fetched: Option<Arc<SeedPayload>> = None;
+            if let Some(Some(r)) = &bound_root {
+                fetched = cache.get(r, end);
+            }
+            if fetched.is_none() {
+                let (s, r) = fetch_verified_state(&mut metered, &group, end);
+                rejected = r;
+                if let Some(p) = s {
+                    let p = Arc::new(p);
+                    cache.insert(Arc::clone(&p));
+                    fetched = Some(p);
+                }
+            }
+            if let (Some(p), Some(r)) = (&fetched, &bound_root) {
+                if *r != Some(p.root) {
+                    // The worker's explicit commitment refuses, or
+                    // contradicts the root its served checkpoint verifies
+                    // against: don't seed the successor from it. The
+                    // training claim itself is still on the record and
+                    // still replay-auditable.
+                    fetched = None;
+                }
+            }
+            if let Some(p) = fetched {
+                registry.spans().trace(job_id, Some(seg_idx as u64), Stage::Verify, None);
+                seed = SeedSource::Buffered(p);
+            }
+        } else {
+            // Streaming path: certify a chunk manifest by unanimity over
+            // the winning group, then either hit the cache (no transfer
+            // at all) or open a stream — the responding sources stay with
+            // the producer and the successor consumes verified chunks as
+            // they arrive. A manifest advertising more than the relay
+            // clamp is treated as a refusal, which the report surfaces as
+            // an unseeded (prefix) successor.
+            let mut manifests: Vec<(usize, Hash, u64, Vec<Hash>)> = Vec::new();
+            for &i in &group {
+                if let Response::Manifest { step, root, total_len, chunks } =
+                    metered[i].call(Request::FetchManifest { step: end })
+                {
+                    if step == end
+                        && total_len <= max_checkpoint_bytes
+                        && chunks.len() as u64 == chunk_count(total_len as usize)
+                        && chunks.len() as u64 <= MAX_CHECKPOINT_CHUNKS
+                    {
+                        manifests.push((i, root, total_len, chunks));
+                    }
+                }
+            }
+            if let Some((_, root, total_len, chunks)) = manifests.first().cloned() {
+                let unanimous = manifests
+                    .iter()
+                    .all(|(_, r, t, c)| *r == root && *t == total_len && *c == chunks);
+                if unanimous {
+                    if let Some(hit) = cache.get(&root, end) {
+                        registry.spans().trace(job_id, Some(seg_idx as u64), Stage::Verify, None);
+                        seed = SeedSource::Buffered(hit);
+                    } else {
+                        // The certified manifest IS the verification
+                        // contract: every chunk is checked against it as
+                        // it arrives, so the Verify span lands here (one
+                        // per certified fetch, exactly like the buffered
+                        // path).
+                        registry.spans().trace(job_id, Some(seg_idx as u64), Stage::Verify, None);
+                        let sources: Vec<usize> = manifests.iter().map(|m| m.0).collect();
+                        let assemble = total_len <= cache.budget();
+                        let stream = Arc::new(ChunkStream::new(
+                            ChunkManifest { step: end, root, total_len, chunks },
+                            stream_window,
+                        ));
+                        seed = SeedSource::Stream(Arc::clone(&stream));
+                        opened = Some((stream, sources, assemble));
+                    }
+                }
             }
         }
+        let after: u64 = metered.iter().map(|m| m.bytes_sent() + m.bytes_received()).sum();
+        transfer_bytes = after - before;
     }
 
     bytes += metered.iter().map(|m| m.bytes_sent() + m.bytes_received()).sum::<u64>();
     requests += metered.iter().map(|m| m.counters.get("requests")).sum::<u64>();
     drop(metered);
+    // Split the lease: manifest-answering sources stay with the producer
+    // (they return via `StreamDone`); everyone else goes home with the
+    // verdict.
+    let production = match opened {
+        Some((stream, sources, assemble)) => {
+            let mut slots: Vec<Option<PooledWorker>> = workers.into_iter().map(Some).collect();
+            let retained: Vec<PooledWorker> =
+                sources.iter().filter_map(|&i| slots[i].take()).collect();
+            workers = slots.into_iter().flatten().collect();
+            Some(Production {
+                job_id,
+                seg_idx,
+                end,
+                t0,
+                stream,
+                workers: retained,
+                cache,
+                assemble,
+            })
+        }
+        None => None,
+    };
     let outcome = SegmentOutcome {
         seg: seg_idx,
         start,
@@ -917,7 +1177,94 @@ fn resolve(task: ResolveTask) -> Resolved {
         audit_steps: 0,
         slashed: 0,
     };
-    Resolved { job_id, outcome, workers, seed, rejected, commitment }
+    (Resolved { job_id, outcome, workers, seed, rejected, commitment }, production)
+}
+
+/// Stream the certified checkpoint at `p.end` chunk-by-chunk from the
+/// retained sources into the consumer stream, verifying every chunk
+/// against the certified manifest before forwarding it. Runs on the
+/// resolver thread that settled the producing segment, *after* its
+/// [`Resolved`] was sent — so the successor's lease acquisition overlaps
+/// the fetch. A source serving a wrong chunk is marked rejected (its
+/// lease is revoked at [`StreamDone`]) and the fetch rotates to the next
+/// group member; only when every source has failed does the stream fail
+/// (the consumer lease then falls back to prefix re-training).
+fn run_producer(p: Production, comp_tx: &Sender<Completion>) -> StreamDone {
+    let Production { job_id, seg_idx, end, t0, stream, mut workers, cache, assemble } = p;
+    let manifest = stream.manifest().clone();
+    let total = stream.total_chunks();
+    let mut metered: Vec<Metered<&mut PooledWorker>> =
+        workers.iter_mut().map(Metered::new).collect();
+    let mut bad: Vec<bool> = vec![false; metered.len()];
+    let mut buf: Vec<u8> = Vec::new();
+    let mut delivered = true;
+    let mut src = 0usize;
+    let mut idx = 0u64;
+    'fetch: while idx < total {
+        // Invariant: at least one source is still good (all-bad breaks out
+        // below before the next iteration).
+        while bad[src] {
+            src = (src + 1) % bad.len();
+        }
+        match metered[src].call(Request::FetchCheckpoint { step: end, chunk: idx }) {
+            Response::Checkpoint { step, root, total_chunks, chunk, payload }
+                if step == end
+                    && root == manifest.root
+                    && total_chunks == total
+                    && chunk == idx
+                    && Hash::of_bytes(&payload) == manifest.chunks[idx as usize] =>
+            {
+                if assemble {
+                    buf.extend_from_slice(&payload);
+                }
+                if !stream.push(payload) {
+                    // Consumer side aborted (cancellation or lease failure).
+                    delivered = false;
+                    break 'fetch;
+                }
+                let _ = comp_tx.send(wake());
+                idx += 1;
+            }
+            _ => {
+                bad[src] = true;
+                if bad.iter().all(|&b| b) {
+                    stream.fail();
+                    let _ = comp_tx.send(wake());
+                    delivered = false;
+                    break 'fetch;
+                }
+            }
+        }
+    }
+    if delivered {
+        stream.close();
+        let _ = comp_tx.send(wake());
+        // The full state was assembled on the side purely for the cache:
+        // a later segment (or job) at the same certified root seeds from
+        // memory instead of re-fetching.
+        if assemble
+            && buf.len() as u64 == manifest.total_len
+            && verify_encoded_state(&buf, end, &manifest.root)
+        {
+            cache.insert(Arc::new(SeedPayload { start: end, root: manifest.root, bytes: buf }));
+        }
+    }
+    let bytes: u64 = metered.iter().map(|m| m.bytes_sent() + m.bytes_received()).sum();
+    let requests: u64 = metered.iter().map(|m| m.counters.get("requests")).sum();
+    drop(metered);
+    let rejected: Vec<usize> =
+        bad.iter().enumerate().filter_map(|(i, &b)| b.then_some(i)).collect();
+    StreamDone {
+        job_id,
+        seg_idx,
+        workers,
+        rejected,
+        bytes,
+        requests,
+        transfer_bytes: bytes,
+        peak: stream.peak_buffered(),
+        wall: t0.elapsed(),
+    }
 }
 
 /// Cached handles for the delegation's `coord_*` instruments, registered
@@ -953,6 +1300,8 @@ pub(crate) struct CoordMetrics {
     journal_syncs: Counter,
     journal_replayed_segments: Counter,
     journal_recovered_jobs: Counter,
+    overloads: Counter,
+    stream_peak_bytes: Gauge,
     stake_locked: Gauge,
     queue_depth: Gauge,
     active_segments: Gauge,
@@ -992,6 +1341,8 @@ impl CoordMetrics {
             journal_syncs: registry.counter("coord_journal_syncs"),
             journal_replayed_segments: registry.counter("coord_journal_replayed_segments"),
             journal_recovered_jobs: registry.counter("coord_journal_recovered_jobs"),
+            overloads: registry.counter("coord_overloads"),
+            stream_peak_bytes: registry.gauge("coord_stream_peak_bytes"),
             stake_locked: registry.gauge("coord_stake_locked"),
             queue_depth: registry.gauge("coord_queue_depth"),
             active_segments: registry.gauge("coord_active_segments"),
@@ -1103,7 +1454,7 @@ pub(crate) fn start_core(
     let (comp_tx, comp_rx) = channel::<Completion>();
     let (cmd_tx, cmd_rx) = channel::<Cmd>();
     let (task_tx, task_rx) = channel::<ResolveTask>();
-    let (resolved_tx, resolved_rx) = channel::<Resolved>();
+    let (resolved_tx, resolved_rx) = channel::<ResolverMsg>();
     let gate = Arc::new(Mutex::new(CmdGate { tx: cmd_tx, closed: false }));
     let registry = Registry::new();
     let resolver_joins =
@@ -1130,7 +1481,7 @@ pub(crate) fn start_core(
 fn spawn_resolvers(
     n: usize,
     task_rx: Receiver<ResolveTask>,
-    resolved_tx: Sender<Resolved>,
+    resolved_tx: Sender<ResolverMsg>,
     comp_tx: Sender<Completion>,
 ) -> Vec<std::thread::JoinHandle<()>> {
     let task_rx = Arc::new(Mutex::new(task_rx));
@@ -1144,13 +1495,21 @@ fn spawn_resolvers(
                 .spawn(move || loop {
                     let task = task_rx.lock().unwrap().recv();
                     let Ok(task) = task else { break };
-                    let resolved = resolve(task);
-                    if resolved_tx.send(resolved).is_err() {
+                    let (resolved, production) = resolve(task);
+                    if resolved_tx.send(ResolverMsg::Resolved(resolved)).is_err() {
                         break;
                     }
                     // Nudge the event loop: resolved segments ride a side
-                    // channel.
+                    // channel. The successor can lease (and attach to the
+                    // stream) while the producer below is still fetching.
                     let _ = comp_tx.send(wake());
+                    if let Some(p) = production {
+                        let done = run_producer(p, &comp_tx);
+                        if resolved_tx.send(ResolverMsg::StreamDone(done)).is_err() {
+                            break;
+                        }
+                        let _ = comp_tx.send(wake());
+                    }
                 })
                 .expect("spawn resolver")
         })
@@ -1188,7 +1547,8 @@ struct JobRun {
     pinned: Option<String>,
     /// Seed each optimistic segment was dispatched with, kept until the
     /// segment settles: a sampled replay must start from the same
-    /// predecessor checkpoint the accused did.
+    /// predecessor checkpoint the accused did. (Optimistic seeds are
+    /// always buffered — the commitment fetch binds the whole payload.)
     seed_used: HashMap<usize, Arc<SeedPayload>>,
     /// In-flight audit state per sampled segment.
     audits: HashMap<usize, AuditState>,
@@ -1275,6 +1635,20 @@ pub(crate) struct EventLoop {
     gone: HashSet<String>,
     /// Write-ahead journal (`None` = volatile coordinator, the default).
     journal: Option<Journal>,
+    /// Content-addressed checkpoint cache (keyed by certified state
+    /// root), shared with the resolvers.
+    cache: Arc<CheckpointCache>,
+    /// Outcomes of segments whose state is still streaming to their
+    /// successor: held here until the producer's [`StreamDone`] merges
+    /// the transfer accounting and the segment records.
+    parked: HashMap<(u64, usize), SegmentOutcome>,
+    /// Producers whose [`StreamDone`] has not arrived yet (the loop must
+    /// not exit while source workers are still out with a producer).
+    streams_out: usize,
+    /// Dispatches the mux refused on a full per-connection write buffer.
+    overloads: u64,
+    /// High-water mark over every stream's buffered window, in bytes.
+    stream_peak: u64,
 }
 
 impl EventLoop {
@@ -1298,6 +1672,7 @@ impl EventLoop {
             }
             gone.extend(r.revoked);
         }
+        let cache = Arc::new(CheckpointCache::new(&registry, cfg.ckpt_cache_bytes));
         EventLoop {
             metrics: CoordMetrics::new(registry),
             pool,
@@ -1326,6 +1701,11 @@ impl EventLoop {
             ledger,
             gone,
             journal,
+            cache,
+            parked: HashMap::new(),
+            streams_out: 0,
+            overloads: 0,
+            stream_peak: 0,
         }
     }
 
@@ -1336,6 +1716,7 @@ impl EventLoop {
             && self.queue.is_empty()
             && self.active.is_empty()
             && self.resolving_out == 0
+            && self.streams_out == 0
             && self.probing.is_empty()
             && self.paroling.is_empty()
             && self.draining.is_empty()
@@ -1345,7 +1726,7 @@ impl EventLoop {
         mut self,
         comp_rx: Receiver<Completion>,
         cmd_rx: Receiver<Cmd>,
-        resolved_rx: Receiver<Resolved>,
+        resolved_rx: Receiver<ResolverMsg>,
     ) -> LoopReport {
         let mut events: Vec<Completion> = Vec::new();
         loop {
@@ -1397,11 +1778,19 @@ impl EventLoop {
                 self.handle_completion(c);
             }
 
-            // 6. Collect resolved tournaments; discipline workers that went
-            //    silent mid-dispute, release the rest.
-            while let Ok(resolved) = resolved_rx.try_recv() {
-                self.handle_resolved(resolved);
+            // 6. Collect resolved tournaments and finished stream
+            //    producers; discipline workers that went silent
+            //    mid-dispute, release the rest.
+            while let Ok(msg) = resolved_rx.try_recv() {
+                match msg {
+                    ResolverMsg::Resolved(resolved) => self.handle_resolved(resolved),
+                    ResolverMsg::StreamDone(done) => self.handle_stream_done(done),
+                }
             }
+
+            // 6b. Pump streaming seeds: forward any newly produced chunks
+            //     to the consumer slots within each stream's window.
+            self.pump_all();
 
             // 7. Health-check sweep: ping every idle worker.
             self.health_sweep();
@@ -1442,6 +1831,9 @@ impl EventLoop {
             outcomes: self.outcomes,
             actor_threads: self.actor_threads,
             stakes: self.ledger.snapshot(),
+            overloads: self.overloads,
+            ckpt_cache_hits: self.cache.hits(),
+            ckpt_cache_misses: self.cache.misses(),
         }
     }
 
@@ -1507,7 +1899,7 @@ impl EventLoop {
                         job_id,
                         seg_idx,
                         spec: spec.prefix(end),
-                        seed: None,
+                        seed: SeedSource::None,
                         requeues: 0,
                         revoked: 0,
                         bytes: 0,
@@ -1599,7 +1991,7 @@ impl EventLoop {
                         job_id,
                         seg_idx,
                         spec: spec.prefix(end),
-                        seed: None,
+                        seed: SeedSource::None,
                         requeues: 0,
                         revoked: 0,
                         bytes: 0,
@@ -1658,14 +2050,25 @@ impl EventLoop {
         let keys: Vec<(u64, usize)> =
             self.active.keys().filter(|(j, _)| *j == job_id).copied().collect();
         for key in keys {
-            let aseg = self.active.remove(&key).expect("listed");
+            let mut aseg = self.active.remove(&key).expect("listed");
+            // A streaming seed stops its producer: the abort unblocks a
+            // push stuck on a full window and the producer returns its
+            // sources via `StreamDone` (whose parked outcome is purged
+            // below).
+            if let Some(pump) = aseg.pump.take() {
+                pump.stream.abort();
+            }
+            aseg.seed.abort_if_stream();
             let ActiveSeg { workers, slots, tokens, .. } = aseg;
             for ((w, slot), token) in workers.into_iter().zip(slots).zip(tokens) {
                 match slot {
-                    SlotState::Waiting => {
+                    // A stream-fed slot that never got its final chunk has
+                    // no armed token (the 0 sentinel): nothing to drain.
+                    SlotState::Waiting if token != 0 => {
                         self.tokens.insert(token, Target::Drain);
                         self.draining.insert(token, w);
                     }
+                    SlotState::Waiting => self.pool.release(vec![w]),
                     SlotState::Done(_) => self.pool.release(vec![w]),
                     SlotState::Failed => self.discipline(w, false),
                 }
@@ -1674,6 +2077,9 @@ impl EventLoop {
         // Queued segments are dropped lazily by the lease pass (their job
         // is gone from the map). Resolving segments finish on their
         // resolver thread; their leases return via `handle_resolved`.
+        // Outcomes parked on an in-flight stream producer are discarded —
+        // the producer's `StreamDone` still returns its workers.
+        self.parked.retain(|(j, _), _| *j != job_id);
         let run = self.jobs.remove(&job_id).expect("checked");
         // Stakes locked behind this job's in-flight audits are released:
         // with the job gone no tournament can ever certify a conviction.
@@ -1737,8 +2143,12 @@ impl EventLoop {
         while let Some(seg) = self.queue.pop() {
             let (policy, optimistic, pinned, tournament_accused) =
                 match self.jobs.get(&seg.job_id) {
-                    // Cancelled and finalized: stale entry, drop it.
-                    None => continue,
+                    // Cancelled and finalized: stale entry, drop it (and
+                    // stop any producer still feeding its seed stream).
+                    None => {
+                        seg.seed.abort_if_stream();
+                        continue;
+                    }
                     Some(j) => (
                         j.policy,
                         j.optimistic(),
@@ -1875,7 +2285,7 @@ impl EventLoop {
         if let SegKind::Audit { accused, .. } = &seg.kind {
             spans.trace(seg.job_id, Some(seg.seg_idx as u64), Stage::Audit, Some(accused));
         }
-        if seg.seed.is_some() {
+        if !seg.seed.is_none() {
             spans.trace(seg.job_id, Some(seg.seg_idx as u64), Stage::Seed, None);
         }
         for w in &workers {
@@ -1908,6 +2318,7 @@ impl EventLoop {
             tokens: Vec::new(),
             outstanding: 0,
             leased_seq,
+            pump: None,
         };
         for (slot, w) in workers.iter_mut().enumerate() {
             self.actor_threads += usize::from(w.activate());
@@ -1919,7 +2330,7 @@ impl EventLoop {
             // others are pipelined acks).
             let final_token;
             match &seg.seed {
-                None => {
+                SeedSource::None => {
                     let token = self.next_token;
                     self.next_token += 1;
                     let req = Request::Train { spec: seg.spec };
@@ -1929,7 +2340,7 @@ impl EventLoop {
                     w.dispatch(token, req, Some(deadline), &self.comp_tx);
                     final_token = token;
                 }
-                Some(seed) => {
+                SeedSource::Buffered(seed) => {
                     let total = chunk_count(seed.bytes.len());
                     let mut last = 0;
                     for chunk in 0..total {
@@ -1938,7 +2349,7 @@ impl EventLoop {
                         if chunk + 1 < total {
                             self.tokens.insert(
                                 token,
-                                Target::Ack { job_id: seg.job_id, seg_idx: seg.seg_idx },
+                                Target::Ack { job_id: seg.job_id, seg_idx: seg.seg_idx, slot },
                             );
                         }
                         let req = Request::SeedCheckpoint {
@@ -1957,16 +2368,38 @@ impl EventLoop {
                     }
                     final_token = last;
                 }
+                SeedSource::Stream(_) => {
+                    // Chunks are pumped as the producer delivers them; the
+                    // slot's deciding token is assigned when its final
+                    // chunk dispatches (`0` is the not-yet sentinel — real
+                    // tokens start at 1).
+                    final_token = 0;
+                }
             }
-            self.tokens.insert(
-                final_token,
-                Target::Seg { job_id: seg.job_id, seg_idx: seg.seg_idx, slot },
-            );
+            if final_token != 0 {
+                self.tokens.insert(
+                    final_token,
+                    Target::Seg { job_id: seg.job_id, seg_idx: seg.seg_idx, slot },
+                );
+            }
             aseg.slots.push(SlotState::Waiting);
             aseg.tokens.push(final_token);
             aseg.outstanding += 1;
         }
         aseg.workers = workers;
+        if let SeedSource::Stream(stream) = &seg.seed {
+            // From here on the consumer is live: the producer's window
+            // cap applies (bounded coordinator memory), and any verified
+            // chunks it already spilled are pumped out right below.
+            stream.attach();
+            aseg.pump = Some(StreamPump {
+                stream: Arc::clone(stream),
+                next_chunk: 0,
+                acked: vec![0; aseg.slots.len()],
+                deadline,
+                window: self.cfg.stream_window.max(1) as u64,
+            });
+        }
         self.active.insert((seg.job_id, seg.seg_idx), aseg);
         // Anchor the job's wall clock and mark it running.
         if let Some(run) = self.jobs.get_mut(&seg.job_id) {
@@ -1974,6 +2407,166 @@ impl EventLoop {
                 run.t0 = Some(t0);
             }
             run.cell.set_running(run.finished, run.boundaries.len());
+        }
+        self.pump_segment(seg.job_id, seg.seg_idx);
+    }
+
+    /// Pump every active streaming dispatch (cheap no-op for segments
+    /// without a pump).
+    fn pump_all(&mut self) {
+        let keys: Vec<(u64, usize)> = self
+            .active
+            .iter()
+            .filter(|(_, a)| a.pump.is_some())
+            .map(|(k, _)| *k)
+            .collect();
+        for (job_id, seg_idx) in keys {
+            self.pump_segment(job_id, seg_idx);
+        }
+    }
+
+    /// Forward verified chunks from a streaming seed to the segment's
+    /// waiting slots, staying within `window` chunks of the slowest
+    /// slot's acknowledgements. The final chunk's dispatch arms each
+    /// slot's deciding token (exactly like the buffered path); a failed
+    /// stream aborts the whole dispatch.
+    fn pump_segment(&mut self, job_id: u64, seg_idx: usize) {
+        let key = (job_id, seg_idx);
+        let mut stream_failed = false;
+        {
+            // Disjoint field borrows: the pump, slots, workers and token
+            // plumbing all live on `self` and are advanced together.
+            let EventLoop { active, tokens, deadlines, next_token, comp_tx, .. } = self;
+            let Some(aseg) = active.get_mut(&key) else { return };
+            let Some(pump) = aseg.pump.as_mut() else { return };
+            let stream = Arc::clone(&pump.stream);
+            let total = stream.total_chunks();
+            let deadline = pump.deadline;
+            let window = pump.window;
+            let (start, root) = (stream.manifest().step, stream.manifest().root);
+            while pump.next_chunk < total {
+                // Backpressure: never run more than `window` chunks ahead
+                // of the slowest still-waiting slot.
+                let min_acked = aseg
+                    .slots
+                    .iter()
+                    .zip(pump.acked.iter())
+                    .filter(|(s, _)| matches!(s, SlotState::Waiting))
+                    .map(|(_, a)| *a)
+                    .min()
+                    .unwrap_or(pump.next_chunk);
+                if pump.next_chunk.saturating_sub(min_acked) >= window {
+                    break;
+                }
+                match stream.try_pop() {
+                    Pop::Pending => break,
+                    Pop::Failed => {
+                        stream_failed = true;
+                        break;
+                    }
+                    Pop::Chunk(payload) => {
+                        let idx = pump.next_chunk;
+                        pump.next_chunk += 1;
+                        let is_final = idx + 1 == total;
+                        for (slot, w) in aseg.workers.iter_mut().enumerate() {
+                            if !matches!(aseg.slots[slot], SlotState::Waiting) {
+                                continue;
+                            }
+                            let token = *next_token;
+                            *next_token += 1;
+                            let req = Request::SeedCheckpoint {
+                                spec: aseg.spec,
+                                start,
+                                root,
+                                total_chunks: total,
+                                chunk: idx,
+                                payload: payload.clone(),
+                            };
+                            aseg.bytes += req.wire_size() as u64;
+                            aseg.requests += 1;
+                            deadlines.push(Reverse((deadline, token)));
+                            if is_final {
+                                tokens.insert(token, Target::Seg { job_id, seg_idx, slot });
+                                aseg.tokens[slot] = token;
+                            } else {
+                                tokens.insert(token, Target::Ack { job_id, seg_idx, slot });
+                            }
+                            w.dispatch(token, req, Some(deadline), comp_tx);
+                        }
+                    }
+                }
+            }
+            if !stream_failed && pump.next_chunk >= total {
+                // Fully dispatched: the pump's work is done. Remaining
+                // acks become plain accounting and each slot is decided
+                // by its final token, exactly like a buffered seed.
+                aseg.pump = None;
+            }
+        }
+        if stream_failed {
+            self.abort_stream_dispatch(job_id, seg_idx);
+        }
+    }
+
+    /// A streaming dispatch died mid-seed (the producer failed, or every
+    /// slot failed a chunk ack): tear the active segment down, discipline
+    /// failed slots, release the rest, and re-queue as an unseeded prefix
+    /// run (or settle unresolved when out of re-queues). Chunk tokens
+    /// still armed for removed slots self-clean at their deadline — their
+    /// completions find no active segment and are dropped.
+    fn abort_stream_dispatch(&mut self, job_id: u64, seg_idx: usize) {
+        let Some(mut aseg) = self.active.remove(&(job_id, seg_idx)) else { return };
+        if let Some(pump) = aseg.pump.take() {
+            pump.stream.abort();
+        }
+        aseg.seed.abort_if_stream();
+        let ActiveSeg {
+            spec, t0, requeues, mut revoked, bytes, requests, workers, slots, leased_seq, ..
+        } = aseg;
+        let mut keep: Vec<PooledWorker> = Vec::new();
+        for (w, slot) in workers.into_iter().zip(slots) {
+            match slot {
+                SlotState::Failed => {
+                    revoked += 1;
+                    self.discipline(w, false);
+                }
+                _ => keep.push(w),
+            }
+        }
+        self.pool.release(keep);
+        let policy = self.jobs.get(&job_id).map(|j| j.policy).unwrap_or_default();
+        let max_requeues = policy.max_requeues.unwrap_or(self.cfg.max_requeues);
+        if requeues < max_requeues && (self.pool.size() > 0 || self.pool.suspended() > 0) {
+            self.metrics.registry.spans().trace(job_id, Some(seg_idx as u64), Stage::Queue, None);
+            self.queue.push(QueuedSeg {
+                kind: SegKind::Work,
+                priority: policy.priority,
+                job_id,
+                seg_idx,
+                spec,
+                seed: SeedSource::None,
+                requeues: requeues + 1,
+                revoked,
+                bytes,
+                requests,
+                t0: Some(t0),
+                leased_seq,
+            });
+        } else {
+            self.record_segment(
+                job_id,
+                seg_idx,
+                SegmentOutcome {
+                    requeues,
+                    revoked,
+                    wall: t0.elapsed(),
+                    bytes,
+                    requests,
+                    leased_seq,
+                    ..SegmentOutcome::unresolved(seg_idx, spec.steps)
+                },
+                None,
+            );
         }
     }
 
@@ -1986,6 +2579,7 @@ impl EventLoop {
             self.escalate_audit_failure(seg);
             return;
         }
+        seg.seed.abort_if_stream();
         let outcome = SegmentOutcome {
             requeues: seg.requeues,
             revoked: seg.revoked,
@@ -2034,17 +2628,58 @@ impl EventLoop {
         if c.token == WAKE_TOKEN {
             return;
         }
+        if matches!(c.kind, CompletionKind::Overloaded) {
+            // The mux refused the dispatch on a full per-connection write
+            // buffer: surfaced in the report so slow-consumer stalls are
+            // visible, then handled like any other unresponsive slot.
+            self.overloads += 1;
+        }
         let Some(target) = self.tokens.remove(&c.token) else {
             return; // stale: deadline already handled, cancelled, or late duplicate
         };
         match target {
-            Target::Ack { job_id, seg_idx } => {
-                // Intermediate seed-chunk acknowledgement: pure byte
-                // accounting. A worker that never acks also never answers
-                // the slot's deciding token, whose deadline disciplines it.
+            Target::Ack { job_id, seg_idx, slot } => {
+                // Intermediate seed-chunk acknowledgement: byte accounting
+                // and, for a streaming seed, window advancement. A worker
+                // that never acks also never answers the slot's deciding
+                // token, whose deadline disciplines it — but a *failed*
+                // ack on a streamed slot would leave that slot with no
+                // armed token at all, so it fails here and the dispatch
+                // aborts once every slot is decided.
                 if !c.kind.unresponsive() {
+                    let mut pump_now = false;
                     if let Some(aseg) = self.active.get_mut(&(job_id, seg_idx)) {
                         aseg.bytes += c.resp.wire_size() as u64;
+                        if let Some(pump) = aseg.pump.as_mut() {
+                            if let Some(a) = pump.acked.get_mut(slot) {
+                                *a += 1;
+                            }
+                            pump_now = true;
+                        }
+                    }
+                    if pump_now {
+                        self.pump_segment(job_id, seg_idx);
+                    }
+                } else {
+                    // While the pump is live no final token has been
+                    // issued, so no slot can be `Done` yet: a failed ack
+                    // decides its slot here, and once every slot has
+                    // failed the whole streamed dispatch aborts. (With
+                    // the pump finished — or on a buffered seed — failed
+                    // acks stay advisory: the final token's deadline
+                    // decides the slot, exactly as before.)
+                    let mut all_failed = false;
+                    if let Some(aseg) = self.active.get_mut(&(job_id, seg_idx)) {
+                        if aseg.pump.is_some()
+                            && matches!(aseg.slots.get(slot), Some(SlotState::Waiting))
+                        {
+                            aseg.slots[slot] = SlotState::Failed;
+                            aseg.outstanding -= 1;
+                            all_failed = aseg.outstanding == 0;
+                        }
+                    }
+                    if all_failed {
+                        self.abort_stream_dispatch(job_id, seg_idx);
                     }
                 }
             }
@@ -2076,6 +2711,12 @@ impl EventLoop {
             }
             Target::Seg { job_id, seg_idx, slot } => {
                 let Some(aseg) = self.active.get_mut(&(job_id, seg_idx)) else { return };
+                if !matches!(aseg.slots.get(slot), Some(SlotState::Waiting)) {
+                    // The slot was already decided (a streamed slot can
+                    // fail via a chunk ack while its final token is still
+                    // armed): never decide — or decrement — twice.
+                    return;
+                }
                 aseg.slots[slot] = if c.kind.unresponsive() {
                     // Synthesized refusal: nothing crossed the wire.
                     SlotState::Failed
@@ -2159,8 +2800,9 @@ impl EventLoop {
         if any_failed {
             // A silent worker compromised this assignment: release the
             // survivors and re-delegate the segment to a fresh lease (a
-            // seeded segment keeps its verified seed — the state is still
-            // good, only the lease was not).
+            // buffered seed keeps its verified state — only the lease was
+            // bad; a streamed seed is single-shot, so the re-queue falls
+            // back to prefix re-training).
             self.pool.release(keep);
             if requeues < max_requeues && (self.pool.size() > 0 || self.pool.suspended() > 0) {
                 self.metrics.registry.spans().trace(
@@ -2175,7 +2817,7 @@ impl EventLoop {
                     job_id,
                     seg_idx,
                     spec,
-                    seed,
+                    seed: seed.for_requeue(),
                     requeues: requeues + 1,
                     revoked,
                     bytes,
@@ -2202,7 +2844,8 @@ impl EventLoop {
             return;
         }
         if commits == 0 {
-            if seed.is_some() && requeues < max_requeues {
+            seed.abort_if_stream();
+            if !seed.is_none() && requeues < max_requeues {
                 // Every worker refused the seed wholesale. Blame is
                 // unattributable (the seed itself could be at fault), so
                 // nobody is disciplined — the segment falls back to prefix
@@ -2220,7 +2863,7 @@ impl EventLoop {
                     job_id,
                     seg_idx,
                     spec,
-                    seed: None,
+                    seed: SeedSource::None,
                     requeues: requeues + 1,
                     revoked,
                     bytes,
@@ -2263,8 +2906,13 @@ impl EventLoop {
             // a sampled replay starts from the same checkpoint the
             // committer did.
             let claimed = claims.iter().flatten().next().copied().expect("commits > 0");
+            let seeded_from = seed.seeded_from();
+            // Optimistic seeds are always buffered (the commitment fetch
+            // binds the whole payload), and a sampled replay must start
+            // from the exact checkpoint the committer did.
+            let seed_buf = seed.into_buffered();
             if let Some(run) = self.jobs.get_mut(&job_id) {
-                match &seed {
+                match &seed_buf {
                     Some(s) => {
                         run.seed_used.insert(seg_idx, Arc::clone(s));
                     }
@@ -2286,7 +2934,7 @@ impl EventLoop {
                 spec,
                 mode: ResolveMode::Commitment { claimed },
                 want_state,
-                seeded_from: seed.as_ref().map(|s| s.start),
+                seeded_from,
                 t0,
                 requeues,
                 revoked,
@@ -2295,14 +2943,17 @@ impl EventLoop {
                 leased_seq,
                 workers: keep,
                 registry: self.metrics.registry.clone(),
+                cache: Arc::clone(&self.cache),
+                stream_window: self.cfg.stream_window,
+                max_checkpoint_bytes: self.cfg.max_checkpoint_bytes,
             };
             self.resolving_out += 1;
             self.task_tx.send(task).expect("resolver pool alive while segments outstanding");
             return;
         }
         let mode = match &seed {
-            None => ResolveMode::Tournament,
-            Some(_) => {
+            SeedSource::None => ResolveMode::Tournament,
+            _ => {
                 // Seeded lease: the optimistic fast path. All claims
                 // agreeing certifies the boundary (the seed itself was
                 // verified, and determinism makes every honest seeded run
@@ -2320,6 +2971,7 @@ impl EventLoop {
                         ResolveMode::Agreed { accepted, winner }
                     }
                     _ => {
+                        seed.abort_if_stream();
                         self.pool.release(keep);
                         if requeues < max_requeues {
                             self.metrics.registry.spans().trace(
@@ -2334,7 +2986,7 @@ impl EventLoop {
                                 job_id,
                                 seg_idx,
                                 spec,
-                                seed: None, // fall back to prefix re-training
+                                seed: SeedSource::None, // fall back to prefix re-training
                                 requeues: requeues + 1,
                                 revoked,
                                 bytes,
@@ -2377,7 +3029,7 @@ impl EventLoop {
             spec,
             mode,
             want_state,
-            seeded_from: seed.as_ref().map(|s| s.start),
+            seeded_from: seed.seeded_from(),
             t0,
             requeues,
             revoked,
@@ -2386,6 +3038,9 @@ impl EventLoop {
             leased_seq,
             workers: keep,
             registry: self.metrics.registry.clone(),
+            cache: Arc::clone(&self.cache),
+            stream_window: self.cfg.stream_window,
+            max_checkpoint_bytes: self.cfg.max_checkpoint_bytes,
         };
         self.resolving_out += 1;
         self.task_tx.send(task).expect("resolver pool alive while segments outstanding");
@@ -2416,8 +3071,59 @@ impl EventLoop {
             }
         }
         self.pool.release(keep);
+        let seg_idx = outcome.seg;
+        if let SeedSource::Stream(stream) = seed {
+            // The producer is (or will shortly be) fetching on the
+            // resolver thread; its StreamDone must be awaited even if the
+            // job is already gone.
+            self.streams_out += 1;
+            if !self.jobs.contains_key(&job_id) {
+                stream.abort();
+                return;
+            }
+            // Park this segment's outcome until the producer reports its
+            // transfer accounting, and queue the successor NOW with the
+            // stream as its seed — its lease acquisition (and the first
+            // chunk dispatches) overlap the rest of the fetch.
+            let run = self.jobs.get_mut(&job_id).expect("checked");
+            if run.next_seg == seg_idx + 1 && run.next_seg < run.boundaries.len() {
+                let next = run.next_seg;
+                run.next_seg += 1;
+                let end = run.boundaries[next];
+                let spec = run.spec.prefix(end);
+                let priority = run.policy.priority;
+                self.parked.insert((job_id, seg_idx), outcome);
+                self.metrics.registry.spans().trace(
+                    job_id,
+                    Some(next as u64),
+                    Stage::Queue,
+                    None,
+                );
+                self.queue.push(QueuedSeg {
+                    kind: SegKind::Work,
+                    priority,
+                    job_id,
+                    seg_idx: next,
+                    spec,
+                    seed: SeedSource::Stream(stream),
+                    requeues: 0,
+                    revoked: 0,
+                    bytes: 0,
+                    requests: 0,
+                    t0: None,
+                    leased_seq: 0,
+                });
+            } else {
+                // No successor can consume it (it was queued by another
+                // path in the meantime): discard the stream, park the
+                // outcome for the producer's accounting all the same.
+                stream.abort();
+                self.parked.insert((job_id, seg_idx), outcome);
+            }
+            return;
+        }
         if self.jobs.contains_key(&job_id) {
-            let seg_idx = outcome.seg;
+            let seed = seed.into_buffered();
             match commitment {
                 Some((worker, commit)) => {
                     self.settle_optimistic(job_id, seg_idx, outcome, seed, worker, commit);
@@ -2427,6 +3133,65 @@ impl EventLoop {
         }
         // else: the job was cancelled mid-resolve; leases returned, verdict
         // discarded.
+    }
+
+    /// A stream producer finished (or aborted): its source workers come
+    /// home, and the producing segment's parked outcome — merged with the
+    /// transfer accounting — finally records. Ordering is safe either
+    /// way: `done[]` is indexed by segment, so the successor settling
+    /// first cannot clash with this record.
+    fn handle_stream_done(&mut self, done: StreamDone) {
+        let StreamDone {
+            job_id,
+            seg_idx,
+            workers,
+            rejected,
+            bytes,
+            requests,
+            transfer_bytes,
+            peak,
+            wall,
+        } = done;
+        self.streams_out -= 1;
+        self.stream_peak = self.stream_peak.max(peak);
+        self.metrics.stream_peak_bytes.set(self.stream_peak);
+        let mut extra_revoked = 0usize;
+        let mut keep = Vec::new();
+        for (i, w) in workers.into_iter().enumerate() {
+            if rejected.contains(&i) {
+                // The source served chunks contradicting the certified
+                // manifest: adversarial (or hopelessly corrupt) — expel
+                // it outright, no parole.
+                extra_revoked += 1;
+                self.gone.insert(w.name.clone());
+                wal(
+                    &mut self.journal,
+                    &self.metrics,
+                    JournalEntry::Revoke { worker: w.name.clone() },
+                );
+                self.pool.revoke(w);
+            } else if w.faulted() {
+                extra_revoked += 1;
+                self.discipline(w, false);
+            } else {
+                keep.push(w);
+            }
+        }
+        self.pool.release(keep);
+        let Some(mut outcome) = self.parked.remove(&(job_id, seg_idx)) else {
+            // Cancelled (the cancel purged the parking spot): the workers
+            // above still came home; nothing to record.
+            return;
+        };
+        outcome.revoked += extra_revoked;
+        outcome.uploads_rejected += rejected.len() as u32;
+        outcome.bytes += bytes;
+        outcome.requests += requests;
+        outcome.transfer_bytes += transfer_bytes;
+        outcome.wall = wall;
+        if self.jobs.contains_key(&job_id) {
+            self.record_segment(job_id, seg_idx, outcome, None);
+        }
     }
 
     /// An optimistic segment came back from its resolver carrying the
@@ -2439,7 +3204,7 @@ impl EventLoop {
         job_id: u64,
         seg_idx: usize,
         mut outcome: SegmentOutcome,
-        seed: Option<SeedPayload>,
+        seed: Option<Arc<SeedPayload>>,
         worker: String,
         commit: Hash,
     ) {
@@ -2485,7 +3250,10 @@ impl EventLoop {
             job_id,
             seg_idx,
             spec,
-            seed: replay_seed,
+            seed: match replay_seed {
+                Some(s) => SeedSource::Buffered(s),
+                None => SeedSource::None,
+            },
             requeues: 0,
             revoked: 0,
             bytes: 0,
@@ -2547,7 +3315,7 @@ impl EventLoop {
         let max_requeues = policy.max_requeues.unwrap_or(self.cfg.max_requeues);
         // Steps the auditor actually re-trained (the whole prefix when the
         // committer also trained from scratch).
-        let audit_steps = spec.steps - seed.as_ref().map(|s| s.start).unwrap_or(0);
+        let audit_steps = spec.steps - seed.seeded_from().unwrap_or(0);
         match verdict {
             Some(h) if h == expect => {
                 // Independent replay reproduced the commitment: settle the
@@ -2730,7 +3498,7 @@ impl EventLoop {
             // Prefix re-training: the seed chain above this boundary is
             // tainted by the disputed commitment.
             spec,
-            seed: None,
+            seed: SeedSource::None,
             requeues: 0,
             revoked: carried_revoked,
             bytes: carried_bytes,
@@ -2749,7 +3517,7 @@ impl EventLoop {
         job_id: u64,
         seg_idx: usize,
         mut outcome: SegmentOutcome,
-        seed: Option<SeedPayload>,
+        seed: Option<Arc<SeedPayload>>,
     ) {
         let Some(run) = self.jobs.get_mut(&job_id) else { return };
         outcome.start = segment_start(&run.boundaries, seg_idx);
@@ -2826,7 +3594,10 @@ impl EventLoop {
                 spec: spec.prefix(end),
                 // No verified seed (failed fetch, unresolved predecessor,
                 // non-unanimous roots) → the segment re-trains its prefix.
-                seed: seed.map(Arc::new),
+                seed: match seed {
+                    Some(s) => SeedSource::Buffered(s),
+                    None => SeedSource::None,
+                },
                 requeues: 0,
                 revoked: 0,
                 bytes: 0,
@@ -3072,6 +3843,9 @@ pub fn run_service_blocking(jobs: Vec<JobSpec>, pool: &WorkerPool, k: usize) -> 
         revoked: pool.revoked(),
         threads: lanes * (1 + k),
         stakes: Vec::new(),
+        overloads: 0,
+        ckpt_cache_hits: 0,
+        ckpt_cache_misses: 0,
     }
 }
 
@@ -3267,6 +4041,9 @@ mod tests {
             revoked: Vec::new(),
             threads: 5,
             stakes: Vec::new(),
+            overloads: 0,
+            ckpt_cache_hits: 0,
+            ckpt_cache_misses: 0,
         };
         assert_eq!(report.jobs_per_sec(), 0.0);
         assert_eq!(report.bytes_per_job(), 0.0);

@@ -99,6 +99,32 @@
 //! `seeded_from`, `transfer_bytes`, `uploads_rejected`) makes the saving
 //! observable in every report.
 //!
+//! *Streaming pipeline.* Replicated (non-commitment) transfers never
+//! materialize the whole checkpoint at the coordinator. The resolver
+//! first certifies a **chunk manifest** — `(root, total_len, per-chunk
+//! hashes)`, unanimous across the winning group, clamped by
+//! `ServiceConfig::max_checkpoint_bytes` — and then fetches 1 MiB chunks
+//! one at a time, verifying each against the manifest and handing it
+//! through a bounded chunk stream (`transfer::ChunkStream`) to the
+//! successor's already-leased workers (`ServiceConfig::stream_window`
+//! chunks in flight, gated on per-slot acks). Successor lease acquisition
+//! overlaps the fetch, and resident bytes stay `O(window × chunk)`
+//! instead of `O(checkpoint)`. A content-addressed checkpoint cache
+//! (budget `ServiceConfig::ckpt_cache_bytes`, keyed by certified state
+//! root + boundary) short-circuits repeat fetches of a root that was
+//! already certified — a cache hit seeds the successor with **zero**
+//! transfer traffic. Chunks failing verification reject their source
+//! (revoked, fetch rotates to a co-winner); a stream that dies mid-seed
+//! falls back to prefix re-training like any other transfer failure.
+//!
+//! | key                       | kind    | meaning                                      |
+//! |---------------------------|---------|----------------------------------------------|
+//! | `coord_ckpt_cache_hits`   | counter | seeds served from the checkpoint cache       |
+//! | `coord_ckpt_cache_misses` | counter | certified roots not found in the cache       |
+//! | `coord_ckpt_cache_bytes`  | gauge   | bytes currently held by the cache            |
+//! | `coord_stream_peak_bytes` | gauge   | high-water mark of in-flight stream buffers  |
+//! | `coord_overloads`         | counter | dispatches refused by a full mux write buffer |
+//!
 //! ## Staked spot-check audit tier (`policy.audit_rate`)
 //!
 //! Replication pays `k × steps` worker-steps on every job, honest or
@@ -286,6 +312,7 @@ pub mod client;
 pub mod coordinator;
 pub mod journal;
 pub mod pool;
+pub(crate) mod transfer;
 pub mod worker;
 
 pub use audit::{AuditSampler, StakeEntry, StakeLedger};

@@ -1,0 +1,450 @@
+//! Streaming state-transfer plumbing: the bounded chunk pipe between a
+//! resolver-side checkpoint *producer* and the event loop's seed
+//! *consumer*, plus the content-addressed checkpoint cache.
+//!
+//! The legacy transfer path buffered the whole serialized [`State`] at the
+//! coordinator (`fetch → verify → hold → re-dispatch`), so coordinator
+//! memory scaled with checkpoint size even though both ends of the
+//! transfer only ever need one chunk at a time. The streaming pipeline
+//! keeps at most a small window of chunks in flight:
+//!
+//! ```text
+//!   winner workers ──FetchCheckpoint──▶ producer (resolver thread)
+//!        verify chunk i against the certified manifest
+//!   producer ──ChunkStream (bounded window)──▶ event loop pump
+//!   pump ──SeedCheckpoint chunk i──▶ next segment's k workers
+//! ```
+//!
+//! The manifest (per-chunk hashes, certified by unanimity over the winning
+//! group) is what makes per-chunk verification sound: a tampered chunk is
+//! rejected the moment it arrives and the producer re-fetches it from a
+//! co-winner, so bad bytes never reach the stream, let alone a worker.
+//!
+//! [`State`]: crate::train::State
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::hash::Hash;
+use crate::obs::{Counter, Gauge, Registry};
+
+/// A whole checkpoint fetched and verified against its certified state
+/// root — ready to seed a segment's workers (shared via `Arc` so re-queues
+/// and multi-worker dispatches don't copy the state). Produced by the
+/// buffered (optimistic-tier) fetch path and by cache hits; the streaming
+/// path only materializes one when assembling a cache entry on the side.
+pub(crate) struct SeedPayload {
+    /// Boundary the state sits at (the previous segment's end).
+    pub(crate) start: u64,
+    /// Merkle root over the state's leaves, verified before queueing.
+    pub(crate) root: Hash,
+    /// Canonical serialization ([`crate::train::checkpoint::encode_state`]).
+    pub(crate) bytes: Vec<u8>,
+}
+
+/// The certified shape of one checkpoint: what a `Response::Manifest`
+/// carries, agreed unanimously by the winning group before any chunk
+/// moves. Every arriving chunk payload is checked against `chunks[i]`.
+#[derive(Clone)]
+pub(crate) struct ChunkManifest {
+    /// Boundary step the checkpoint certifies.
+    pub(crate) step: u64,
+    /// Merkle state root the assembled bytes must verify against.
+    pub(crate) root: Hash,
+    /// Exact encoded length; chunk count must equal `chunks.len()`.
+    pub(crate) total_len: u64,
+    /// Per-chunk content hashes, in chunk order.
+    pub(crate) chunks: Vec<Hash>,
+}
+
+/// What [`ChunkStream::try_pop`] found.
+pub(crate) enum Pop {
+    /// The next chunk's verified payload, in order.
+    Chunk(Vec<u8>),
+    /// Nothing buffered yet; the producer is still fetching.
+    Pending,
+    /// The producer gave up (every source served bad bytes or refused):
+    /// the consumer unwinds and falls back to prefix re-training.
+    Failed,
+}
+
+struct StreamState {
+    window: VecDeque<Vec<u8>>,
+    buffered: u64,
+    peak: u64,
+    /// A consumer dispatch is pumping: the window cap is enforced by
+    /// blocking the producer. Until then pushes spill unbounded-by-cap
+    /// (bounded by the manifest's `total_len`, which the coordinator
+    /// already capped at `ServiceConfig::max_checkpoint_bytes`) so a
+    /// producer can never deadlock against a lease it is itself holding
+    /// the workers for.
+    attached: bool,
+    closed: bool,
+    failed: bool,
+    aborted: bool,
+}
+
+/// A bounded, ordered, single-producer single-consumer chunk pipe.
+///
+/// The producer (a resolver thread) `push`es verified chunks in order and
+/// blocks once `cap` chunks are buffered *and* a consumer is attached; the
+/// consumer (the event loop's pump) `try_pop`s without ever blocking.
+/// `abort` from either side unblocks the producer immediately — every
+/// discard path in the coordinator must call it, or the producer would
+/// wedge its resolver thread forever.
+pub(crate) struct ChunkStream {
+    manifest: ChunkManifest,
+    cap: usize,
+    state: Mutex<StreamState>,
+    cv: Condvar,
+}
+
+impl ChunkStream {
+    pub(crate) fn new(manifest: ChunkManifest, cap_chunks: usize) -> ChunkStream {
+        ChunkStream {
+            manifest,
+            cap: cap_chunks.max(1),
+            state: Mutex::new(StreamState {
+                window: VecDeque::new(),
+                buffered: 0,
+                peak: 0,
+                attached: false,
+                closed: false,
+                failed: false,
+                aborted: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub(crate) fn manifest(&self) -> &ChunkManifest {
+        &self.manifest
+    }
+
+    pub(crate) fn total_chunks(&self) -> u64 {
+        self.manifest.chunks.len() as u64
+    }
+
+    /// A consumer dispatch is live: enforce the window cap from now on.
+    pub(crate) fn attach(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.attached = true;
+        self.cv.notify_all();
+    }
+
+    /// Producer: append the next chunk in order. Blocks while the window
+    /// is full and a consumer is attached. Returns `false` when the
+    /// consumer aborted — the producer stops fetching.
+    pub(crate) fn push(&self, payload: Vec<u8>) -> bool {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.aborted {
+                return false;
+            }
+            if st.attached && st.window.len() >= self.cap {
+                st = self.cv.wait(st).unwrap();
+                continue;
+            }
+            break;
+        }
+        st.buffered += payload.len() as u64;
+        st.peak = st.peak.max(st.buffered);
+        st.window.push_back(payload);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Consumer: take the next chunk if one is buffered. Never blocks.
+    pub(crate) fn try_pop(&self) -> Pop {
+        let mut st = self.state.lock().unwrap();
+        if let Some(payload) = st.window.pop_front() {
+            st.buffered -= payload.len() as u64;
+            self.cv.notify_all();
+            return Pop::Chunk(payload);
+        }
+        if st.failed || st.aborted {
+            Pop::Failed
+        } else {
+            Pop::Pending
+        }
+    }
+
+    /// Producer: every chunk was pushed.
+    pub(crate) fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Producer: no source could serve some chunk honestly — the consumer
+    /// sees [`Pop::Failed`] once the window drains.
+    pub(crate) fn fail(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.failed = true;
+        self.cv.notify_all();
+    }
+
+    /// Consumer (or any discard path): stop the producer. Idempotent.
+    pub(crate) fn abort(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.aborted = true;
+        self.cv.notify_all();
+    }
+
+    /// High-water mark of bytes buffered in the window.
+    pub(crate) fn peak_buffered(&self) -> u64 {
+        self.state.lock().unwrap().peak
+    }
+}
+
+struct CacheInner {
+    /// LRU order: front is coldest. Linear scans are fine — the cache
+    /// holds a handful of whole checkpoints, not thousands of keys.
+    entries: Vec<(Hash, Arc<SeedPayload>)>,
+    bytes: u64,
+}
+
+/// Content-addressed checkpoint cache, keyed by certified state root.
+///
+/// A resolver that certifies a root it has seen before seeds the successor
+/// from the cache and skips the transfer entirely — re-submitted jobs and
+/// repeated prefixes pay the network cost once. Evicts least-recently-used
+/// whole entries to stay under a byte budget. Instruments
+/// `coord_ckpt_cache_{hits,misses,bytes}` on the delegation's registry;
+/// the hit/miss totals are also mirrored into the final `ServiceReport`.
+pub(crate) struct CheckpointCache {
+    budget: u64,
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    c_hits: Counter,
+    c_misses: Counter,
+    g_bytes: Gauge,
+}
+
+impl CheckpointCache {
+    pub(crate) fn new(registry: &Registry, budget_bytes: u64) -> CheckpointCache {
+        CheckpointCache {
+            budget: budget_bytes,
+            inner: Mutex::new(CacheInner { entries: Vec::new(), bytes: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            c_hits: registry.counter("coord_ckpt_cache_hits"),
+            c_misses: registry.counter("coord_ckpt_cache_misses"),
+            g_bytes: registry.gauge("coord_ckpt_cache_bytes"),
+        }
+    }
+
+    /// Byte budget this cache was built with (an insert larger than the
+    /// whole budget is never attempted, so producers can skip assembling
+    /// a state that could not be cached anyway).
+    pub(crate) fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Look up the checkpoint with state root `root` at boundary `start`.
+    /// A root match at a different boundary is a miss (roots bind state
+    /// content, and content at the wrong step must not seed anything).
+    pub(crate) fn get(&self, root: &Hash, start: u64) -> Option<Arc<SeedPayload>> {
+        let mut inner = self.inner.lock().unwrap();
+        let pos = inner
+            .entries
+            .iter()
+            .position(|(r, p)| r == root && p.start == start);
+        match pos {
+            Some(i) => {
+                // Touch: move to the hot end.
+                let entry = inner.entries.remove(i);
+                let payload = Arc::clone(&entry.1);
+                inner.entries.push(entry);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.c_hits.inc();
+                Some(payload)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.c_misses.inc();
+                None
+            }
+        }
+    }
+
+    /// Insert a verified checkpoint, evicting cold entries to fit. An
+    /// entry bigger than the whole budget (or already present) is a no-op.
+    pub(crate) fn insert(&self, payload: Arc<SeedPayload>) {
+        let size = payload.bytes.len() as u64;
+        if size > self.budget {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.entries.iter().any(|(r, p)| *r == payload.root && p.start == payload.start)
+        {
+            return;
+        }
+        while inner.bytes + size > self.budget && !inner.entries.is_empty() {
+            let (_, cold) = inner.entries.remove(0);
+            inner.bytes -= cold.bytes.len() as u64;
+        }
+        inner.bytes += size;
+        let key = payload.root;
+        inner.entries.push((key, payload));
+        self.g_bytes.set(inner.bytes);
+    }
+
+    pub(crate) fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn manifest(n_chunks: usize) -> ChunkManifest {
+        ChunkManifest {
+            step: 8,
+            root: Hash::of_bytes(b"root"),
+            total_len: (n_chunks * 4) as u64,
+            chunks: (0..n_chunks)
+                .map(|i| Hash::of_bytes(&(i as u64).to_le_bytes()))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn attached_stream_bounds_the_window_and_tracks_peak() {
+        // Producer thread pushes 16 four-byte chunks through a 3-chunk
+        // window; the consumer drains slowly. The peak buffered bytes must
+        // never exceed the window cap — the bounded-memory property of
+        // the streaming pipeline.
+        let stream = Arc::new(ChunkStream::new(manifest(16), 3));
+        stream.attach();
+        let producer = {
+            let stream = Arc::clone(&stream);
+            std::thread::spawn(move || {
+                for i in 0..16u32 {
+                    assert!(stream.push(i.to_le_bytes().to_vec()));
+                }
+                stream.close();
+            })
+        };
+        let mut got = Vec::new();
+        while got.len() < 16 {
+            match stream.try_pop() {
+                Pop::Chunk(c) => got.push(c),
+                Pop::Pending => std::thread::sleep(Duration::from_millis(1)),
+                Pop::Failed => panic!("stream failed"),
+            }
+        }
+        producer.join().unwrap();
+        for (i, c) in got.iter().enumerate() {
+            assert_eq!(c, &(i as u32).to_le_bytes().to_vec(), "in-order delivery");
+        }
+        assert!(
+            stream.peak_buffered() <= 3 * 4,
+            "peak {} exceeds the 3-chunk window",
+            stream.peak_buffered()
+        );
+    }
+
+    #[test]
+    fn unattached_pushes_spill_instead_of_blocking() {
+        // Until a consumer attaches, the producer must never block: a
+        // blocked producer holds leased workers, and with a tight pool the
+        // consumer lease it is waiting for could need exactly those
+        // workers. 8 chunks through a 2-chunk window, no consumer.
+        let stream = ChunkStream::new(manifest(8), 2);
+        for i in 0..8u32 {
+            assert!(stream.push(i.to_le_bytes().to_vec()), "unattached push must not block");
+        }
+        stream.close();
+        let mut n = 0;
+        while let Pop::Chunk(_) = stream.try_pop() {
+            n += 1;
+        }
+        assert_eq!(n, 8);
+    }
+
+    #[test]
+    fn abort_unblocks_a_producer_stuck_on_a_full_window() {
+        let stream = Arc::new(ChunkStream::new(manifest(8), 1));
+        stream.attach();
+        assert!(stream.push(vec![0; 4]));
+        let producer = {
+            let stream = Arc::clone(&stream);
+            std::thread::spawn(move || stream.push(vec![1; 4]))
+        };
+        // Give the producer a moment to block on the full window, then
+        // abort from the consumer side.
+        std::thread::sleep(Duration::from_millis(20));
+        stream.abort();
+        assert!(!producer.join().unwrap(), "aborted push reports the abort");
+        assert!(matches!(stream.try_pop(), Pop::Chunk(_)), "already-pushed chunk survives");
+        assert!(matches!(stream.try_pop(), Pop::Failed), "then the abort surfaces");
+    }
+
+    #[test]
+    fn failed_stream_surfaces_after_the_window_drains() {
+        let stream = ChunkStream::new(manifest(4), 4);
+        assert!(stream.push(vec![7; 4]));
+        stream.fail();
+        assert!(matches!(stream.try_pop(), Pop::Chunk(_)), "buffered chunk still delivered");
+        assert!(matches!(stream.try_pop(), Pop::Failed));
+    }
+
+    #[test]
+    fn empty_open_stream_is_pending() {
+        let stream = ChunkStream::new(manifest(4), 4);
+        assert!(matches!(stream.try_pop(), Pop::Pending));
+    }
+
+    fn payload(tag: u8, start: u64, len: usize) -> Arc<SeedPayload> {
+        let bytes = vec![tag; len];
+        Arc::new(SeedPayload { start, root: Hash::of_bytes(&[tag]), bytes })
+    }
+
+    #[test]
+    fn cache_hits_misses_and_boundary_binding() {
+        let registry = Registry::new();
+        let cache = CheckpointCache::new(&registry, 1024);
+        let p = payload(1, 8, 100);
+        assert!(cache.get(&p.root, 8).is_none(), "cold cache misses");
+        cache.insert(Arc::clone(&p));
+        let hit = cache.get(&p.root, 8).expect("hit after insert");
+        assert_eq!(hit.bytes, p.bytes);
+        // Same root asked for at a different boundary must miss: content
+        // at the wrong step never seeds a lease.
+        assert!(cache.get(&p.root, 16).is_none());
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(registry.counter("coord_ckpt_cache_hits").get(), 1);
+        assert_eq!(registry.counter("coord_ckpt_cache_misses").get(), 2);
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used_to_fit_budget() {
+        let registry = Registry::new();
+        let cache = CheckpointCache::new(&registry, 250);
+        let a = payload(1, 8, 100);
+        let b = payload(2, 8, 100);
+        let c = payload(3, 8, 100);
+        cache.insert(Arc::clone(&a));
+        cache.insert(Arc::clone(&b));
+        // Touch `a` so `b` is the cold entry when `c` forces an eviction.
+        assert!(cache.get(&a.root, 8).is_some());
+        cache.insert(Arc::clone(&c));
+        assert!(cache.get(&b.root, 8).is_none(), "cold entry evicted");
+        assert!(cache.get(&a.root, 8).is_some(), "touched entry survives");
+        assert!(cache.get(&c.root, 8).is_some());
+        assert_eq!(registry.gauge("coord_ckpt_cache_bytes").get(), 200);
+        // An entry bigger than the whole budget is refused outright.
+        cache.insert(payload(4, 8, 1000));
+        assert!(cache.get(&Hash::of_bytes(&[4]), 8).is_none());
+    }
+}

@@ -20,6 +20,7 @@ use crate::util::metrics::Counters;
 use crate::verde::faults::{first_mutable_node, first_update_node, Fault};
 use crate::verde::protocol::{Request, Response};
 use crate::verde::trainer::TrainerNode;
+use crate::verde::wire;
 
 /// A job-independent fault recipe; concrete node/step targets are resolved
 /// against each delegated job's spec.
@@ -213,11 +214,20 @@ pub struct WorkerHost {
     active: Option<TrainerNode>,
     /// Chunked seed upload in flight (cleared on completion or mismatch).
     seed_buf: Option<SeedBuf>,
+    /// Most bytes a seed upload may declare before it is refused
+    /// ([`WorkerHost::with_max_seed_bytes`]). This — not the wire codec's
+    /// anti-DoS chunk ceiling — is the operational size limit; an
+    /// oversize transfer gets a reported `Refuse`, never a wire tear.
+    max_seed_bytes: usize,
     /// Protocol requests seen so far (drives [`FaultPlan::Stall`]).
     requests_seen: u64,
     pub counters: Counters,
     metrics: WorkerMetrics,
 }
+
+/// Default seed-upload budget: the 1 GiB the wire codec's old hard clamp
+/// allowed, now a per-host policy knob instead of a decode error.
+pub const DEFAULT_MAX_SEED_BYTES: usize = 1 << 30;
 
 impl WorkerHost {
     pub fn new(name: &str, plan: FaultPlan) -> WorkerHost {
@@ -227,10 +237,18 @@ impl WorkerHost {
             backend: Backend::Rep,
             active: None,
             seed_buf: None,
+            max_seed_bytes: DEFAULT_MAX_SEED_BYTES,
             requests_seen: 0,
             counters: Counters::new(),
             metrics: WorkerMetrics::new(),
         }
+    }
+
+    /// Bound the reassembly buffer a seed upload may grow; a transfer
+    /// declaring more is refused on its first chunk.
+    pub fn with_max_seed_bytes(mut self, bytes: usize) -> WorkerHost {
+        self.max_seed_bytes = bytes;
+        self
     }
 
     /// The host's private stats registry (`worker_*` keys) — the snapshot
@@ -266,6 +284,17 @@ impl WorkerHost {
         use crate::train::checkpoint::decode_state;
 
         if chunk == 0 {
+            // Policy-level size limit, checked against the declared shape
+            // before any buffering: a worker never grows a reassembly
+            // buffer past its configured budget, and the refusal is a
+            // normal reported answer rather than a wire error.
+            let declared = total_chunks.saturating_mul(wire::CHECKPOINT_CHUNK as u64);
+            if declared > self.max_seed_bytes as u64 {
+                return Response::Refuse(format!(
+                    "{}: seed of {total_chunks} chunks exceeds the {} byte budget",
+                    self.name, self.max_seed_bytes
+                ));
+            }
             self.seed_buf = Some(SeedBuf { spec, start, root, total_chunks, next_chunk: 0, buf: Vec::new() });
         }
         let Some(sb) = self.seed_buf.as_mut() else {
@@ -428,6 +457,16 @@ impl Endpoint for WorkerHost {
                     self.metrics.chunks_served.inc();
                 }
                 resp
+            }
+            Request::FetchManifest { .. } => {
+                // Manifests are always computed honestly, even under
+                // `TamperUpload`: that fault corrupts chunk *payloads*, and
+                // the honest manifest is exactly the binding the
+                // coordinator's per-chunk verification catches it against.
+                match &mut self.active {
+                    Some(trainer) => trainer.call(req),
+                    None => Response::Refuse(format!("{}: no active job", self.name)),
+                }
             }
             Request::Stats => Response::Stats(self.metrics.registry.snapshot()),
             Request::Ping => Response::Pong,
@@ -608,6 +647,86 @@ mod tests {
             bad.is_err() || bad.unwrap().state_root() != er,
             "tampered upload must fail Merkle verification"
         );
+    }
+
+    #[test]
+    fn oversize_seed_declaration_is_refused_within_budget_policy() {
+        let full_spec = JobSpec::quick(Preset::Mlp, 6);
+        let prefix = full_spec.prefix(3);
+        let mut a = WorkerHost::new("a", FaultPlan::Honest);
+        a.call(Request::Train { spec: prefix });
+        let (root, payload) = match a.call(Request::FetchCheckpoint { step: 3, chunk: 0 }) {
+            Response::Checkpoint { root, payload, .. } => (root, payload),
+            other => panic!("{other:?}"),
+        };
+
+        // A host with a 2-chunk budget refuses a transfer declaring 3
+        // chunks on its very first chunk — reported, not a wire tear, and
+        // nothing was buffered.
+        let mut b = WorkerHost::new("b", FaultPlan::Honest)
+            .with_max_seed_bytes(2 * wire::CHECKPOINT_CHUNK);
+        match b.call(Request::SeedCheckpoint {
+            spec: full_spec,
+            start: 3,
+            root,
+            total_chunks: 3,
+            chunk: 0,
+            payload: payload.clone(),
+        }) {
+            Response::Refuse(why) => assert!(why.contains("budget"), "{why}"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(b.counters.get("jobs_seeded"), 0);
+
+        // A transfer within budget on the same host still succeeds.
+        assert!(matches!(
+            b.call(Request::SeedCheckpoint {
+                spec: full_spec,
+                start: 3,
+                root,
+                total_chunks: 1,
+                chunk: 0,
+                payload,
+            }),
+            Response::Commit(_)
+        ));
+    }
+
+    #[test]
+    fn manifest_is_honest_even_under_tamper_upload() {
+        let spec = JobSpec::quick(Preset::Mlp, 4);
+        let mut evil = WorkerHost::new("e", FaultPlan::TamperUpload);
+        assert!(matches!(evil.call(Request::Train { spec }), Response::Commit(_)));
+        // No active job: manifests refuse like every other job query.
+        let mut idle = WorkerHost::new("i", FaultPlan::TamperUpload);
+        assert!(matches!(idle.call(Request::FetchManifest { step: 4 }), Response::Refuse(_)));
+
+        let (m_root, chunks, total_len) = match evil.call(Request::FetchManifest { step: 4 }) {
+            Response::Manifest { step, root, total_len, chunks } => {
+                assert_eq!(step, 4);
+                (root, chunks, total_len)
+            }
+            other => panic!("{other:?}"),
+        };
+        // The manifest is the honest shape of the state…
+        let mut honest = WorkerHost::new("h", FaultPlan::Honest);
+        honest.call(Request::Train { spec });
+        match honest.call(Request::FetchManifest { step: 4 }) {
+            Response::Manifest { root, total_len: tl, chunks: hc, .. } => {
+                assert_eq!(root, m_root);
+                assert_eq!(tl, total_len);
+                assert_eq!(hc, chunks);
+            }
+            other => panic!("{other:?}"),
+        }
+        // …so the tamperer's corrupted chunk payload contradicts its own
+        // manifest entry — exactly what streaming verification checks.
+        match evil.call(Request::FetchCheckpoint { step: 4, chunk: 0 }) {
+            Response::Checkpoint { payload, .. } => {
+                assert_ne!(crate::hash::Hash::of_bytes(&payload), chunks[0]);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

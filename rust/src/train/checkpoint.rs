@@ -183,6 +183,23 @@ pub fn chunk_slice(bytes: &[u8], chunk: u64) -> &[u8] {
     &bytes[start..bytes.len().min(start + CHECKPOINT_CHUNK)]
 }
 
+/// The hash of every wire chunk of `bytes`, in chunk order — the body of a
+/// `Response::Manifest`. A streaming receiver checks each arriving chunk
+/// payload against its entry (`Hash::of_bytes(payload) == chunks[i]`)
+/// instead of buffering the whole state, and [`manifest_root`] over this
+/// list is the content address the checkpoint cache keys on.
+pub fn chunk_hashes(bytes: &[u8]) -> Vec<crate::hash::Hash> {
+    (0..chunk_count(bytes.len()))
+        .map(|c| crate::hash::Hash::of_bytes(chunk_slice(bytes, c)))
+        .collect()
+}
+
+/// Merkle root over a manifest's chunk-hash list: one digest binding the
+/// exact chunk sequence, used when comparing manifests across replicas.
+pub fn manifest_root(chunks: &[crate::hash::Hash]) -> crate::hash::Hash {
+    crate::hash::merkle::merkle_root(chunks)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +307,28 @@ mod tests {
         }
         assert_eq!(back, bytes, "chunks reassemble to the original bytes");
         assert_eq!(chunk_slice(&bytes, 1).len(), 123);
+    }
+
+    #[test]
+    fn chunk_hashes_match_slices_and_bind_content() {
+        let bytes: Vec<u8> = (0..(2 * CHECKPOINT_CHUNK + 17)).map(|i| (i * 7) as u8).collect();
+        let hashes = chunk_hashes(&bytes);
+        assert_eq!(hashes.len() as u64, chunk_count(bytes.len()));
+        for (c, h) in hashes.iter().enumerate() {
+            assert_eq!(*h, crate::hash::Hash::of_bytes(chunk_slice(&bytes, c as u64)), "{c}");
+        }
+        // Any single-byte change lands in exactly one chunk hash and moves
+        // the manifest root.
+        let root = manifest_root(&hashes);
+        let mut tampered = bytes.clone();
+        tampered[CHECKPOINT_CHUNK + 5] ^= 0x40;
+        let tampered_hashes = chunk_hashes(&tampered);
+        assert_eq!(hashes[0], tampered_hashes[0]);
+        assert_ne!(hashes[1], tampered_hashes[1]);
+        assert_eq!(hashes[2], tampered_hashes[2]);
+        assert_ne!(root, manifest_root(&tampered_hashes));
+        // Degenerate input still describes one (empty-payload) chunk.
+        assert_eq!(chunk_hashes(&[]).len(), 1);
     }
 
     #[test]

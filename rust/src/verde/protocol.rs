@@ -173,6 +173,13 @@ pub enum Request {
     /// verifies the reassembled state's Merkle root before seeding the
     /// next segment with it.
     FetchCheckpoint { step: u64, chunk: u64 },
+    /// Coordinator → worker (streaming state transfer): describe the
+    /// serialized checkpoint state after training step `step` of the
+    /// active job without shipping any payload. Answered with
+    /// [`Response::Manifest`] carrying the per-chunk hashes, which lets
+    /// the coordinator verify each subsequently fetched chunk the moment
+    /// it arrives instead of buffering the whole state first.
+    FetchManifest { step: u64 },
     /// Coordinator → worker (state transfer): chunk `chunk` of
     /// `total_chunks` of a verified checkpoint state at boundary `start`
     /// of `spec`'s step range. Intermediate chunks are acknowledged with
@@ -256,6 +263,20 @@ pub enum Response {
         chunk: u64,
         payload: Vec<u8>,
     },
+    /// Answer to [`Request::FetchManifest`]: the shape of the serialized
+    /// checkpoint state after `step` — its Merkle state root, total
+    /// encoded length, and the hash of every `CHECKPOINT_CHUNK`-sized
+    /// chunk in order. `chunks` is non-empty and consistent with
+    /// `total_len` by construction; decoders enforce both. The
+    /// coordinator certifies a manifest by unanimity across the winning
+    /// group, then streams chunks and verifies each against its manifest
+    /// hash on arrival.
+    Manifest {
+        step: u64,
+        root: Hash,
+        total_len: u64,
+        chunks: Vec<Hash>,
+    },
     /// Answer to [`Request::Stats`]: the peer's live metrics snapshot —
     /// versioned key set, zeros when nothing has happened yet.
     Stats(crate::obs::Snapshot),
@@ -331,6 +352,7 @@ mod tests {
             Request::Status { job_id: 17 },
             Request::Cancel { job_id: u64::MAX },
             Request::FetchCheckpoint { step: 9, chunk: 2 },
+            Request::FetchManifest { step: 9 },
             Request::CommitRoot { step: 12 },
             Request::Stats,
             Request::SeedCheckpoint {
@@ -377,6 +399,12 @@ mod tests {
                 total_chunks: 3,
                 chunk: 2,
                 payload: vec![9; 64],
+            },
+            Response::Manifest {
+                step: 5,
+                root: Hash::ZERO,
+                total_len: 64,
+                chunks: vec![Hash::ZERO],
             },
             Response::Stats(crate::obs::Snapshot::empty()),
             Response::Stats({

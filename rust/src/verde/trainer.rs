@@ -15,7 +15,9 @@ use crate::graph::{Graph, InitKind, NodeId, Op, Slot};
 use crate::hash::Hash;
 use crate::net::Endpoint;
 use crate::tensor::Tensor;
-use crate::train::checkpoint::{chunk_count, chunk_slice, encode_state, level0_schedule};
+use crate::train::checkpoint::{
+    chunk_count, chunk_hashes, chunk_slice, encode_state, level0_schedule,
+};
 use crate::train::session::Session;
 use crate::train::JobSpec;
 use crate::util::metrics::Counters;
@@ -442,6 +444,30 @@ impl TrainerNode {
         self.counters.add("checkpoint_bytes_served", payload.len() as u64);
         Response::Checkpoint { step, root, total_chunks: total, chunk, payload }
     }
+
+    /// Serve the shape of the checkpoint after `step` for streaming
+    /// state-transfer: state root, encoded length, and the hash of every
+    /// chunk in order. Shares the per-boundary encoding cache with chunk
+    /// serving, so a manifest followed by its chunk fetches encodes the
+    /// state exactly once.
+    fn checkpoint_manifest(&mut self, step: u64) -> Response {
+        if step < 1 || step < self.seed_base || step > self.session.spec.steps {
+            return Response::Refuse(format!("{}: no checkpoint at step {step}", self.name));
+        }
+        if self.encoded_ckpt.as_ref().map(|(s, _, _)| *s) != Some(step) {
+            let state = self.state_at(step);
+            let root = state.state_root();
+            let bytes = encode_state(&state);
+            self.encoded_ckpt = Some((step, root, bytes));
+        }
+        let (_, root, bytes) = self.encoded_ckpt.as_ref().expect("just cached");
+        Response::Manifest {
+            step,
+            root: *root,
+            total_len: bytes.len() as u64,
+            chunks: chunk_hashes(bytes),
+        }
+    }
 }
 
 impl Endpoint for TrainerNode {
@@ -525,6 +551,7 @@ impl Endpoint for TrainerNode {
                 Response::Refuse("trainer is bound to a single job".into())
             }
             Request::FetchCheckpoint { step, chunk } => self.checkpoint_chunk(step, chunk),
+            Request::FetchManifest { step } => self.checkpoint_manifest(step),
             Request::CommitRoot { step } => {
                 // Same range guard as checkpoint serving: hostile or stale
                 // steps refuse instead of panicking, and a seeded trainer

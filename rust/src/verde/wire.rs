@@ -61,10 +61,14 @@ const MAX_RANK: usize = 8;
 /// multiplexed traffic.
 pub const CHECKPOINT_CHUNK: usize = 1 << 20;
 
-/// Maximum chunk count a checkpoint-transfer message may declare. Bounds
-/// the reassembly buffer a hostile peer can make the receiver allocate
-/// (`MAX_CHECKPOINT_CHUNKS × CHECKPOINT_CHUNK` = 1 GiB).
-pub const MAX_CHECKPOINT_CHUNKS: u64 = 1024;
+/// Maximum chunk count a checkpoint-transfer message may declare. This is
+/// an anti-DoS ceiling on what the codec will even parse
+/// (`MAX_CHECKPOINT_CHUNKS × CHECKPOINT_CHUNK` = 64 GiB), **not** the
+/// operational size limit: receivers enforce their own configured byte
+/// budgets (`ServiceConfig::max_checkpoint_bytes` coordinator-side, the
+/// worker host's seed budget worker-side) and answer oversize transfers
+/// with a reported `Refuse` instead of a wire tear.
+pub const MAX_CHECKPOINT_CHUNKS: u64 = 1 << 16;
 
 // Message tags. Requests and responses share one tag space so a stray
 // response can never parse as a request (and vice versa).
@@ -84,6 +88,7 @@ const REQ_FETCH_CHECKPOINT: u8 = 0x0D;
 const REQ_SEED_CHECKPOINT: u8 = 0x0E;
 const REQ_STATS: u8 = 0x0F;
 const REQ_COMMIT_ROOT: u8 = 0x10;
+const REQ_FETCH_MANIFEST: u8 = 0x11;
 
 const RESP_COMMIT: u8 = 0x81;
 const RESP_HASHES: u8 = 0x82;
@@ -99,6 +104,7 @@ const RESP_STATUS: u8 = 0x8B;
 const RESP_CANCELLED: u8 = 0x8C;
 const RESP_CHECKPOINT: u8 = 0x8D;
 const RESP_STATS: u8 = 0x8E;
+const RESP_MANIFEST: u8 = 0x8F;
 
 const PROV_GENESIS: u8 = 0x01;
 const PROV_PREV_STEP: u8 = 0x02;
@@ -808,6 +814,10 @@ impl Request {
                 out.push(REQ_COMMIT_ROOT);
                 put_u64(&mut out, *step);
             }
+            Request::FetchManifest { step } => {
+                out.push(REQ_FETCH_MANIFEST);
+                put_u64(&mut out, *step);
+            }
             Request::Stats => out.push(REQ_STATS),
         }
         debug_assert_eq!(out.len(), self.wire_size(), "wire_size drifted from encoder");
@@ -879,6 +889,7 @@ impl Request {
                 Request::SeedCheckpoint { spec, start, root, total_chunks, chunk, payload }
             }
             REQ_COMMIT_ROOT => Request::CommitRoot { step: r.u64("request.step")? },
+            REQ_FETCH_MANIFEST => Request::FetchManifest { step: r.u64("request.step")? },
             REQ_STATS => Request::Stats,
             tag => return Err(WireError::BadTag { context: "request", tag }),
         };
@@ -893,7 +904,9 @@ pub fn request_wire_len(req: &Request) -> usize {
     1 + match req {
         Request::FinalCommit | Request::Shutdown | Request::Ping | Request::Stats => 0,
         Request::CheckpointHashes { boundaries } => 8 + 8 * boundaries.len(),
-        Request::NodeHashSeq { .. } | Request::CommitRoot { .. } => 8,
+        Request::NodeHashSeq { .. } | Request::CommitRoot { .. } | Request::FetchManifest { .. } => {
+            8
+        }
         Request::OpenNode { .. } | Request::InputProof { .. } => 16,
         Request::InputTensor { .. } => 24,
         Request::Train { spec } => spec_wire_len(spec),
@@ -959,6 +972,13 @@ impl Response {
                 put_hash(&mut out, root);
                 put_chunk(&mut out, *total_chunks, *chunk, payload);
             }
+            Response::Manifest { step, root, total_len, chunks } => {
+                out.push(RESP_MANIFEST);
+                put_u64(&mut out, *step);
+                put_hash(&mut out, root);
+                put_u64(&mut out, *total_len);
+                put_hashes(&mut out, chunks);
+            }
             Response::Stats(s) => {
                 out.push(RESP_STATS);
                 put_snapshot(&mut out, s);
@@ -990,6 +1010,23 @@ impl Response {
                 let (total_chunks, chunk, payload) = read_chunk(&mut r)?;
                 Response::Checkpoint { step, root, total_chunks, chunk, payload }
             }
+            RESP_MANIFEST => {
+                let step = r.u64("manifest.step")?;
+                let root = r.hash("manifest.root")?;
+                let total_len = r.u64("manifest.total_len")?;
+                let chunks = r.hashes("manifest.chunks")?;
+                if chunks.is_empty() || chunks.len() as u64 > MAX_CHECKPOINT_CHUNKS {
+                    return Err(WireError::Malformed { context: "manifest.chunks" });
+                }
+                // The chunk list must describe exactly `total_len` bytes of
+                // `CHECKPOINT_CHUNK`-sized chunks (short final chunk allowed).
+                if total_len == 0
+                    || total_len.div_ceil(CHECKPOINT_CHUNK as u64) != chunks.len() as u64
+                {
+                    return Err(WireError::Malformed { context: "manifest.total_len" });
+                }
+                Response::Manifest { step, root, total_len, chunks }
+            }
             RESP_STATS => Response::Stats(read_snapshot(&mut r)?),
             tag => return Err(WireError::BadTag { context: "response", tag }),
         };
@@ -1013,6 +1050,7 @@ pub fn response_wire_len(resp: &Response) -> usize {
         Response::Status(s) => status_wire_len(s),
         Response::Cancelled(_) => 1,
         Response::Checkpoint { payload, .. } => 8 + 32 + chunk_wire_len(payload),
+        Response::Manifest { chunks, .. } => 8 + 32 + 8 + 8 + 32 * chunks.len(),
         Response::Stats(s) => snapshot_wire_len(s),
     }
 }
@@ -1169,6 +1207,8 @@ mod tests {
             },
             Request::CommitRoot { step: 0 },
             Request::CommitRoot { step: u64::MAX },
+            Request::FetchManifest { step: 0 },
+            Request::FetchManifest { step: u64::MAX },
             Request::Stats,
         ]
     }
@@ -1245,6 +1285,18 @@ mod tests {
                 total_chunks: 1,
                 chunk: 0,
                 payload: vec![1],
+            },
+            Response::Manifest {
+                step: 6,
+                root: Hash::of_bytes(b"state-root"),
+                total_len: CHECKPOINT_CHUNK as u64 + 128,
+                chunks: vec![Hash::of_bytes(b"c0"), Hash::of_bytes(b"c1")],
+            },
+            Response::Manifest {
+                step: 1,
+                root: Hash::ZERO,
+                total_len: 1,
+                chunks: vec![Hash::of_bytes(b"only")],
             },
             Response::Stats(Snapshot::empty()),
             Response::Stats(sample_snapshot()),
@@ -1550,6 +1602,63 @@ mod tests {
             Request::decode(&evil),
             Err(WireError::Malformed { context: "seed.start" })
         ));
+    }
+
+    #[test]
+    fn hostile_manifests_rejected() {
+        let good = Response::Manifest {
+            step: 4,
+            root: Hash::of_bytes(b"r"),
+            total_len: CHECKPOINT_CHUNK as u64 + 1,
+            chunks: vec![Hash::of_bytes(b"c0"), Hash::of_bytes(b"c1")],
+        }
+        .encode();
+        // layout: tag + step + root + total_len + count + hashes
+        let len_pos = 1 + 8 + 32;
+        let count_pos = len_pos + 8;
+        // total_len == 0
+        let mut evil = good.clone();
+        evil[len_pos..len_pos + 8].copy_from_slice(&0u64.to_le_bytes());
+        assert!(matches!(
+            Response::decode(&evil),
+            Err(WireError::Malformed { context: "manifest.total_len" })
+        ));
+        // total_len inconsistent with the chunk count (fits in one chunk
+        // but two are listed)
+        let mut evil = good.clone();
+        evil[len_pos..len_pos + 8].copy_from_slice(&8u64.to_le_bytes());
+        assert!(matches!(
+            Response::decode(&evil),
+            Err(WireError::Malformed { context: "manifest.total_len" })
+        ));
+        // an empty chunk list never describes a checkpoint
+        let mut evil = good[..count_pos].to_vec();
+        put_u64(&mut evil, 0);
+        assert!(matches!(
+            Response::decode(&evil),
+            Err(WireError::Malformed { context: "manifest.chunks" })
+        ));
+        // a hostile count cannot force allocation past the buffer
+        let mut evil = good[..count_pos].to_vec();
+        put_u64(&mut evil, u64::MAX);
+        assert!(matches!(Response::decode(&evil), Err(WireError::Truncated { .. })));
+        // truncation anywhere is an error, junk tail is Trailing
+        for cut in 0..good.len() {
+            assert!(Response::decode(&good[..cut]).is_err(), "prefix {cut} accepted");
+        }
+        let mut padded = good.clone();
+        padded.push(0);
+        assert!(matches!(Response::decode(&padded), Err(WireError::Trailing { extra: 1 })));
+
+        // FetchManifest: the same total-decoding battery as its siblings.
+        let good = Request::FetchManifest { step: 42 }.encode();
+        assert_eq!(good.len(), Request::FetchManifest { step: 42 }.wire_size());
+        for cut in 0..good.len() {
+            assert!(Request::decode(&good[..cut]).is_err(), "prefix {cut} accepted");
+        }
+        let mut padded = good.clone();
+        padded.push(0);
+        assert!(matches!(Request::decode(&padded), Err(WireError::Trailing { extra: 1 })));
     }
 
     #[test]

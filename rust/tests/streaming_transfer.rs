@@ -1,0 +1,166 @@
+//! Acceptance battery for the streaming state-transfer pipeline: repeat
+//! jobs seed from the content-addressed checkpoint cache with zero
+//! re-fetch, an oversize certified manifest is refused (reported, not
+//! truncated) and the successor falls back to prefix re-training, and the
+//! epoll and scan readiness backends certify bit-identical verdicts and
+//! state roots for the same streamed job.
+
+use std::net::TcpListener;
+
+use verde::hash::Hash;
+use verde::model::Preset;
+use verde::net::mux::Mux;
+use verde::net::readiness::{BackendKind, Readiness};
+use verde::net::tcp::spawn_server;
+use verde::net::Endpoint;
+use verde::service::{
+    Delegation, FaultPlan, JobRequest, PooledWorker, ServiceConfig, WorkerHost, WorkerPool,
+};
+use verde::train::JobSpec;
+use verde::verde::protocol::Request;
+use verde::verde::trainer::TrainerNode;
+
+fn in_process_pool(plans: &[(&str, FaultPlan)]) -> WorkerPool {
+    WorkerPool::new(
+        plans
+            .iter()
+            .map(|&(name, plan)| PooledWorker::new(name, WorkerHost::new(name, plan)))
+            .collect(),
+    )
+}
+
+fn honest(spec: JobSpec) -> Hash {
+    TrainerNode::honest("ref", spec).train()
+}
+
+/// A re-submitted job's seeds come straight from the checkpoint cache:
+/// the certified roots are content-addressed, so the second job pays zero
+/// chunk fetches, and both the report and the registry see exactly the
+/// same hit/miss totals.
+#[test]
+fn repeat_job_seeds_from_checkpoint_cache() {
+    let pool = in_process_pool(&[("w0", FaultPlan::Honest), ("w1", FaultPlan::Honest)]);
+    let spec = JobSpec::quick(Preset::Mlp, 9);
+    let full = honest(spec);
+
+    let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+    let registry = delegation.registry().clone();
+    let first = delegation
+        .submit(JobRequest::new(spec).with_segments(3).with_state_transfer())
+        .wait();
+    let second = delegation
+        .submit(JobRequest::new(spec).with_segments(3).with_state_transfer())
+        .wait();
+
+    assert_eq!(first.accepted, Some(full), "{first:?}");
+    assert_eq!(second.accepted, Some(full), "cache-seeded verdict is bit-identical");
+    for (a, b) in first.segments.iter().zip(&second.segments) {
+        assert_eq!(a.accepted, b.accepted, "segment roots identical across runs");
+        assert_eq!(a.seeded_from, b.seeded_from);
+        assert_eq!(a.steps_trained, b.steps_trained, "cache seeding keeps delta training");
+    }
+
+    let report = delegation.finish();
+    // Job 1 streams both transfers (two cache misses, two inserts); job 2
+    // hits both certified roots and never opens a stream.
+    assert_eq!(report.ckpt_cache_misses, 2, "{report:?}");
+    assert_eq!(report.ckpt_cache_hits, 2, "{report:?}");
+    let snap = registry.snapshot();
+    assert_eq!(snap.counter("coord_ckpt_cache_hits"), report.ckpt_cache_hits);
+    assert_eq!(snap.counter("coord_ckpt_cache_misses"), report.ckpt_cache_misses);
+    assert!(snap.gauge("coord_ckpt_cache_bytes") > 0, "certified states are resident");
+    assert!(snap.gauge("coord_stream_peak_bytes") > 0, "job 1 streamed its seeds");
+    assert_eq!(snap.counter("coord_overloads"), report.overloads);
+    let json = report.to_json();
+    assert!(json.contains("\"ckpt_cache_hits\":2"), "{json}");
+    assert!(json.contains("\"ckpt_cache_misses\":2"), "{json}");
+    assert!(json.contains("\"overloads\":"), "{json}");
+    assert_eq!(pool.idle(), 2, "all leases (including stream sources) returned");
+}
+
+/// A winning group whose certified manifest advertises more than
+/// `max_checkpoint_bytes` is treated as refusing state transfer: the
+/// successor re-trains its prefix (`seeded_from == None`, full prefix
+/// steps), the refusal is visible in the report, and the verdict is
+/// unharmed — no truncation, no wedge.
+#[test]
+fn oversize_manifest_is_refused_and_successor_retrains_prefix() {
+    let pool = in_process_pool(&[("w0", FaultPlan::Honest), ("w1", FaultPlan::Honest)]);
+    let spec = JobSpec::quick(Preset::Mlp, 8);
+    let full = honest(spec);
+
+    let mut cfg = ServiceConfig::new(2);
+    cfg.max_checkpoint_bytes = 8; // no real checkpoint encodes this small
+    let delegation = Delegation::start(&pool, cfg);
+    let outcome = delegation
+        .submit(JobRequest::new(spec).with_segments(2).with_state_transfer())
+        .wait();
+
+    assert_eq!(outcome.accepted, Some(full), "{outcome:?}");
+    assert_eq!(outcome.segments.len(), 2);
+    let s1 = &outcome.segments[1];
+    assert_eq!(s1.seeded_from, None, "the refused manifest left the successor unseeded");
+    assert_eq!(s1.steps_trained, 8, "fallback pays the full prefix");
+    assert_eq!(s1.requeues, 0, "refusal is not a failure — no re-queue burned");
+
+    let report = delegation.finish();
+    assert_eq!(report.total_seeded_segments(), 0);
+    assert_eq!(report.ckpt_cache_hits, 0);
+    assert_eq!(pool.idle(), 2);
+}
+
+/// Both readiness backends (the scan loop everywhere, epoll where the
+/// kernel has it) drive the same streamed, mux-linked delegation to
+/// bit-identical verdicts and per-boundary state roots — the
+/// backend-equivalence acceptance for the event core.
+#[test]
+fn stream_verdicts_bit_identical_across_readiness_backends() {
+    let spec = JobSpec::quick(Preset::Mlp, 8);
+    let full = honest(spec);
+    let backends = if Readiness::available() {
+        vec![BackendKind::Scan, BackendKind::Epoll]
+    } else {
+        vec![BackendKind::Scan]
+    };
+
+    let mut runs: Vec<(BackendKind, Option<Hash>, Vec<Option<Hash>>)> = Vec::new();
+    for kind in backends {
+        let mux = Mux::with_backend(kind);
+        let mut servers = Vec::new();
+        let mut workers = Vec::new();
+        for name in ["w0", "w1", "w2"] {
+            let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+            let addr = listener.local_addr().unwrap();
+            servers.push(spawn_server(
+                listener,
+                WorkerHost::new(name, FaultPlan::Honest),
+                Some(1),
+            ));
+            let conn = mux.connect(name, addr).expect("connect worker");
+            workers.push(PooledWorker::mux(name, conn));
+        }
+        let pool = WorkerPool::new(workers);
+        let delegation = Delegation::start(&pool, ServiceConfig::new(2));
+        let outcome = delegation
+            .submit(JobRequest::new(spec).with_segments(4).with_state_transfer())
+            .wait();
+        let roots = outcome.segments.iter().map(|s| s.accepted).collect();
+        let report = delegation.finish();
+        assert!(report.total_seeded_segments() >= 1, "transfer ran under {kind:?}");
+        for mut w in pool.into_workers() {
+            let _ = w.call(Request::Shutdown);
+        }
+        for server in servers {
+            let _ = server.join();
+        }
+        drop(mux);
+        runs.push((kind, outcome.accepted, roots));
+    }
+
+    let (_, accepted0, roots0) = &runs[0];
+    assert_eq!(*accepted0, Some(full));
+    for (kind, accepted, roots) in &runs[1..] {
+        assert_eq!(accepted, accepted0, "verdict differs under {kind:?}");
+        assert_eq!(roots, roots0, "boundary roots differ under {kind:?}");
+    }
+}

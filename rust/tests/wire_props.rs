@@ -20,7 +20,7 @@ use verde::util::proptest::{forall, Gen};
 use verde::verde::protocol::{
     BackendRequirement, InputProvenance, JobPolicy, RemoteStatus, Request, Response,
 };
-use verde::verde::wire::WireError;
+use verde::verde::wire::{CHECKPOINT_CHUNK, WireError};
 
 fn gen_hash(g: &mut Gen) -> Hash {
     Hash::of_bytes(&g.u64().to_le_bytes())
@@ -178,7 +178,8 @@ fn gen_status(g: &mut Gen) -> RemoteStatus {
 }
 
 fn gen_request(g: &mut Gen) -> Request {
-    match g.usize_in(0, 15) {
+    match g.usize_in(0, 16) {
+        16 => Request::FetchManifest { step: g.u64() },
         15 => Request::CommitRoot { step: g.u64() },
         14 => Request::Stats,
         12 => {
@@ -219,7 +220,19 @@ fn gen_request(g: &mut Gen) -> Request {
 }
 
 fn gen_response(g: &mut Gen) -> Response {
-    match g.usize_in(0, 13) {
+    match g.usize_in(0, 14) {
+        14 => {
+            // The codec insists the chunk count match the declared byte
+            // length, so generate the pair together.
+            let n = g.usize_in(1, 8);
+            let total_len = ((n - 1) * CHECKPOINT_CHUNK + g.usize_in(1, CHECKPOINT_CHUNK)) as u64;
+            Response::Manifest {
+                step: g.u64(),
+                root: gen_hash(g),
+                total_len,
+                chunks: (0..n).map(|_| gen_hash(g)).collect(),
+            }
+        }
         13 => Response::Stats(gen_snapshot(g)),
         12 => {
             let (total_chunks, chunk, payload) = gen_chunk(g);
